@@ -1,0 +1,50 @@
+//! Ablation tour (paper §3.2 / Table 2 on one prompt): walk the three
+//! FastEagle ablations and print how τ and speedup degrade as each
+//! component is removed — the constrained tree, the cascade, and the
+//! feature-alignment loss.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use fasteagle::draft::make_drafter;
+use fasteagle::model::TargetModel;
+use fasteagle::runtime::{ArtifactStore, Runtime};
+use fasteagle::spec::{Engine, GenConfig};
+
+fn main() -> anyhow::Result<()> {
+    let root = std::env::var("FE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = Arc::new(Runtime::cpu()?);
+    let store = Rc::new(ArtifactStore::open(rt, format!("{root}/base").into())?);
+    let prompt =
+        "USER: tell me about healthy food and the quiet garden.\nASSISTANT:";
+
+    let variants: [(&str, &str, bool); 4] = [
+        ("Full (cascade + tree + feat loss)", "fasteagle", true),
+        ("w/o Constrained Tree (chain)", "fasteagle", false),
+        ("w/o Cascaded Structure (parallel)", "fasteagle_par", true),
+        ("w/o Feature Loss (CE only)", "fasteagle_nofeat", true),
+    ];
+
+    // vanilla reference for speedups
+    let target = TargetModel::open(Rc::clone(&store))?;
+    let mut vanilla = Engine::new(target, make_drafter(Rc::clone(&store), "vanilla")?);
+    let cfg = GenConfig { max_new_tokens: 48, ..Default::default() };
+    vanilla.generate(prompt, &cfg)?;
+    let v = vanilla.generate(prompt, &cfg)?;
+    println!("vanilla reference: {:.1} tok/s\n", v.metrics.tokens_per_sec());
+
+    for (label, wset, use_tree) in variants {
+        let target = TargetModel::open(Rc::clone(&store))?;
+        let mut eng = Engine::new(target, make_drafter(Rc::clone(&store), wset)?);
+        let cfg = GenConfig { max_new_tokens: 48, use_tree, ..Default::default() };
+        eng.generate(prompt, &cfg)?; // warm
+        let r = eng.generate(prompt, &cfg)?;
+        println!(
+            "{label:<36} tau={:.2}  speedup={:.2}x  lossless={}",
+            r.metrics.tau(),
+            r.metrics.tokens_per_sec() / v.metrics.tokens_per_sec(),
+            r.tokens == v.tokens,
+        );
+    }
+    Ok(())
+}

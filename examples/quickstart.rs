@@ -1,0 +1,56 @@
+//! Quickstart: load the AOT artifacts, generate with the FastEagle
+//! drafter, and compare against vanilla autoregressive decoding on the
+//! same prompt — the 30-second tour of the whole stack.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use fasteagle::draft::make_drafter;
+use fasteagle::model::TargetModel;
+use fasteagle::runtime::{ArtifactStore, Runtime};
+use fasteagle::spec::{Engine, GenConfig};
+
+fn main() -> anyhow::Result<()> {
+    let root = std::env::var("FE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = Arc::new(Runtime::cpu()?);
+    let store = Rc::new(ArtifactStore::open(rt, format!("{root}/base").into())?);
+
+    let prompt = "Q: Ana has 12 apples and buys 7 more apples. how many apples does Ana have?\nA:";
+    let cfg = GenConfig { max_new_tokens: 48, ..Default::default() };
+
+    // vanilla baseline
+    let target = TargetModel::open(Rc::clone(&store))?;
+    let mut vanilla = Engine::new(target, make_drafter(Rc::clone(&store), "vanilla")?);
+    vanilla.generate(prompt, &cfg)?; // warm the executables
+    let v = vanilla.generate(prompt, &cfg)?;
+
+    // FastEagle: entire draft in a single drafter pass per cycle
+    let target = TargetModel::open(Rc::clone(&store))?;
+    let mut fe = Engine::new(target, make_drafter(Rc::clone(&store), "fasteagle")?);
+    fe.generate(prompt, &cfg)?; // warm
+    let f = fe.generate(prompt, &cfg)?;
+
+    println!("prompt:    {prompt:?}");
+    println!("output:    {:?}", f.text);
+    println!();
+    println!(
+        "vanilla:   {:>6.1} tok/s  ({} target forwards)",
+        v.metrics.tokens_per_sec(),
+        v.metrics.cycles
+    );
+    println!(
+        "fasteagle: {:>6.1} tok/s  ({} verification cycles, tau={:.2})",
+        f.metrics.tokens_per_sec(),
+        f.metrics.cycles,
+        f.metrics.tau()
+    );
+    println!(
+        "speedup:   {:.2}x   lossless: {}",
+        f.metrics.tokens_per_sec() / v.metrics.tokens_per_sec(),
+        if f.tokens == v.tokens { "yes (greedy outputs identical)" } else { "NO" }
+    );
+    println!("\nphase breakdown (fasteagle):\n{}", f.metrics.timer.report());
+    Ok(())
+}

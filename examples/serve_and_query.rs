@@ -1,0 +1,116 @@
+//! End-to-end serving driver (the EXPERIMENTS.md validation run): start
+//! the TCP JSON-lines server with the FastEagle engine, drive it with
+//! concurrent clients replaying a Poisson arrival trace, and report
+//! latency/throughput — proving all three layers compose on a real
+//! (small) serving workload.
+//!
+//!   cargo run --release --example serve_and_query -- [n_requests] [rate]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fasteagle::coordinator::{Server, ServerConfig};
+use fasteagle::draft::make_drafter;
+use fasteagle::model::TargetModel;
+use fasteagle::runtime::{ArtifactStore, Runtime};
+use fasteagle::spec::Engine;
+use fasteagle::util::json::Json;
+use fasteagle::util::stats::summarize;
+use fasteagle::workload;
+
+const ADDR: &str = "127.0.0.1:7411";
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let n_requests: usize = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let rate: f64 = argv.get(2).and_then(|s| s.parse().ok()).unwrap_or(2.0);
+    let root = std::env::var("FE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+
+    // --- server thread (owns the engine) ---------------------------------
+    let root2 = root.clone();
+    let server_thread = std::thread::spawn(move || -> anyhow::Result<()> {
+        let rt = Arc::new(Runtime::cpu()?);
+        let store = Rc::new(ArtifactStore::open(rt, format!("{root2}/base").into())?);
+        let target = TargetModel::open(Rc::clone(&store))?;
+        let drafter = make_drafter(Rc::clone(&store), "fasteagle")?;
+        let engine = Engine::new(target, drafter);
+        let server = Server::new(ServerConfig {
+            addr: ADDR.into(),
+            queue_capacity: 64,
+        });
+        let m = server.serve(engine)?;
+        eprintln!("[server] {}", m.report());
+        Ok(())
+    });
+
+    // wait for the listener
+    let mut up = false;
+    for _ in 0..600 {
+        if TcpStream::connect(ADDR).is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(up, "server did not come up");
+
+    // --- trace replay through concurrent clients -------------------------
+    let prompts = workload::load_prompts(std::path::Path::new(&root), "dialog")?;
+    let trace = workload::poisson_trace(&prompts, n_requests, rate, 48, 42);
+    println!(
+        "replaying {} requests (poisson {:.1} req/s) against {}",
+        trace.len(),
+        rate,
+        ADDR
+    );
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for item in trace {
+        let h = std::thread::spawn(move || -> anyhow::Result<(f64, usize)> {
+            let since = t0.elapsed();
+            if item.at > since {
+                std::thread::sleep(item.at - since);
+            }
+            let sent = Instant::now();
+            let stream = TcpStream::connect(ADDR)?;
+            let mut r = BufReader::new(stream.try_clone()?);
+            let mut w = stream;
+            let req = Json::obj(vec![
+                ("prompt", Json::str(&item.prompt)),
+                ("max_new", Json::num(item.max_new as f64)),
+            ]);
+            writeln!(w, "{}", req.to_string())?;
+            let mut line = String::new();
+            r.read_line(&mut line)?;
+            let v = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let toks = v.get("new_tokens").and_then(Json::as_usize).unwrap_or(0);
+            Ok((sent.elapsed().as_secs_f64() * 1e3, toks))
+        });
+        handles.push(h);
+    }
+    let mut latencies = Vec::new();
+    let mut tokens = 0usize;
+    for h in handles {
+        let (ms, toks) = h.join().unwrap()?;
+        latencies.push(ms);
+        tokens += toks;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = summarize(&latencies);
+    println!("\n=== serve_and_query results ===");
+    println!("requests: {}   total tokens: {tokens}   wall: {wall:.1}s", latencies.len());
+    println!("throughput: {:.1} tok/s   {:.2} req/s", tokens as f64 / wall, latencies.len() as f64 / wall);
+    println!("latency ms: p50={:.0} p90={:.0} p99={:.0} max={:.0}", s.p50, s.p90, s.p99, s.max);
+
+    // shutdown
+    let stream = TcpStream::connect(ADDR)?;
+    let mut w = stream.try_clone()?;
+    writeln!(w, "{}", Json::obj(vec![("cmd", Json::str("shutdown"))]).to_string())?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    server_thread.join().unwrap()?;
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Bursty-trace replay through the continuous batcher: demonstrates
+//! admission control under a KV block budget (requests queue when the
+//! pool is exhausted) and compares FastEagle vs vanilla throughput on
+//! the same burst.
+//!
+//!   cargo run --release --example trace_replay
+
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fasteagle::coordinator::{BatchConfig, BatchEngine, BatchMethod, Request};
+use fasteagle::runtime::{ArtifactStore, Runtime};
+use fasteagle::workload;
+
+fn main() -> anyhow::Result<()> {
+    let root = std::env::var("FE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    // prefer the "mid" target (it has batched executables); fall back to base@b1
+    let (target, batch) = if std::path::Path::new(&format!("{root}/mid/spec.json")).exists()
+    {
+        ("mid", 4)
+    } else {
+        ("base", 1)
+    };
+    let rt = Arc::new(Runtime::cpu()?);
+    let store = Rc::new(ArtifactStore::open(rt, format!("{root}/{target}").into())?);
+    let prompts = workload::load_prompts(std::path::Path::new(&root), "inst")?;
+    let trace = workload::bursty_trace(&prompts, 2, batch * 2, Duration::from_millis(200), 32, 7);
+    println!("trace: {} requests in 2 bursts, target={target}, batch={batch}", trace.len());
+
+    for method in [BatchMethod::Vanilla, BatchMethod::FastEagle] {
+        let mut cfg = BatchConfig::new(batch, method);
+        cfg.chain_len = 2;
+        // a deliberately tight block budget: half the burst fits at once
+        let probe = fasteagle::model::BlockPool::new(1, cfg.block_slots);
+        let spec = fasteagle::model::ModelSpec::parse(&store.spec_json()?)?;
+        let per_req = probe.blocks_for(
+            spec.max_seq,
+            spec.n_layers + method.drafter_kv_layers(&spec),
+        );
+        cfg.pool_blocks = Some(per_req * batch.max(2));
+        let mut eng = BatchEngine::new(Rc::clone(&store), cfg)?;
+        let reqs: Vec<Request> = trace
+            .iter()
+            .enumerate()
+            .map(|(i, it)| {
+                let mut r = Request::new(i as u64, it.prompt.clone());
+                r.cfg.max_new_tokens = it.max_new;
+                r
+            })
+            .collect();
+        // warm executables out of the measurement
+        {
+            let mut w = Request::new(999, trace[0].prompt.clone());
+            w.cfg.max_new_tokens = 4;
+            let _ = eng.run(vec![w])?;
+        }
+        let t0 = std::time::Instant::now();
+        let (resps, m) = eng.run(reqs)?;
+        let toks: usize = resps.iter().map(|r| r.new_tokens).sum();
+        println!(
+            "  {:>9}: {} done, {:.1} tok/s, tau={:.2}, pool_blocks={:?}",
+            method.name(),
+            resps.len(),
+            toks as f64 / t0.elapsed().as_secs_f64(),
+            m.mean_tau(),
+            per_req * batch.max(2),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,411 @@
+"""AOT export (the only python entry point): train everything, lower every
+inference executable to HLO *text*, and write the artifact tree the Rust
+coordinator consumes.
+
+HLO text — not ``XlaComputation.serialize()`` — is the interchange format:
+jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Artifact tree:
+
+    artifacts/
+      manifest.json            global: targets, tasks, tree params
+      train_log.json           loss curves (EXPERIMENTS.md provenance)
+      prompts/<task>.json      held-out eval prompts (JSON string array)
+      <target>/
+        spec.json              dims + executable inventory
+        hlo/<exec>.hlo.txt     lowered executables
+        hlo/<exec>.io.json     flattened input/output manifests
+        weights/<set>.few      FEW1 weight sets (target, fasteagle, ...)
+
+Run: ``cd python && python -m compile.aot --out ../artifacts``
+(FE_FAST=1 for a smoke-scale build).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import train as train_mod
+from .configs import (BATCH_SIZES, BOS, DRAFT_DEPTH, DRAFTER_SETS, EOS,
+                      MEDUSA_HEADS, PAD, PREFILL_CHUNK, SPS_CHAIN, TARGETS,
+                      TASK_STANDS_FOR, TASKS, TREE_NODES, TREE_TOP_K, VERIFY_MS,
+                      VOCAB, DrafterConfig, TargetConfig, sps_config,
+                      train_config)
+from .drafters import eg_apply, eg_kv_shape, fe_apply, fe_kv_shape, medusa_apply
+from .model import kv_shape, target_apply
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+# ----------------------------------------------------------------------------
+# lowering helpers
+# ----------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_name(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        else:  # GetAttrKey etc.
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def flatten_named(tree) -> List[Tuple[str, jnp.ndarray]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_path_name(p), v) for p, v in leaves]
+
+
+def _spec_of(x) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def lower_exec(
+    hlo_dir: str,
+    name: str,
+    fn: Callable,
+    weights_example,
+    args: List[Tuple[str, Tuple[int, ...], object, str]],  # (name, shape, dtype, kind)
+    log: Callable[[str], None],
+) -> Dict:
+    """Lower ``fn(weights, *args) -> dict`` and write hlo + io manifest."""
+    t0 = time.time()
+    w_spec = jax.tree_util.tree_map(_spec_of, weights_example)
+    arg_specs = [jax.ShapeDtypeStruct(shape, dtype) for (_, shape, dtype, _) in args]
+    lowered = jax.jit(fn).lower(w_spec, *arg_specs)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(hlo_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+
+    inputs = []
+    for wname, leaf in flatten_named(w_spec):
+        inputs.append({
+            "name": wname, "kind": "weight",
+            "shape": list(leaf.shape), "dtype": str(leaf.dtype),
+        })
+    for aname, shape, dtype, kind in args:
+        inputs.append({
+            "name": aname, "kind": kind,
+            "shape": list(shape), "dtype": np.dtype(dtype).name,
+        })
+    # jax.jit prunes unused args (DCE) from the lowered module's
+    # signature — the manifest must list only the surviving parameters,
+    # in order, or the PJRT call will mismatch arity.
+    kept = lowered._lowering.compile_args.get("kept_var_idx")
+    if kept is not None:
+        inputs = [io for i, io in enumerate(inputs) if i in kept]
+
+    out_example = jax.eval_shape(fn, w_spec, *arg_specs)
+    outputs = [
+        {"name": oname, "shape": list(leaf.shape), "dtype": str(leaf.dtype)}
+        for oname, leaf in flatten_named(out_example)
+    ]
+    io = {"name": name, "inputs": inputs, "outputs": outputs}
+    with open(os.path.join(hlo_dir, f"{name}.io.json"), "w") as f:
+        json.dump(io, f)
+    log(f"  lowered {name} ({len(text)//1024} KiB, {time.time()-t0:.1f}s)")
+    return io
+
+
+# ----------------------------------------------------------------------------
+# executable builders (closures over a TargetConfig)
+# ----------------------------------------------------------------------------
+
+def tgt_exec(cfg: TargetConfig, m: int, b: int, with_feats: bool = True):
+    s = cfg.max_seq
+
+    def fn(w, tokens, positions, mask, cache_len, kv):
+        logits, feats, kv2 = target_apply(
+            w, tokens, positions, mask, cache_len, kv, cfg=cfg, use_pallas=True)
+        out = {"kv": kv2, "logits": logits}
+        if with_feats:
+            out["feats"] = feats
+        return out
+
+    args = [
+        ("tokens", (b, m), np.int32, "arg"),
+        ("positions", (b, m), np.int32, "arg"),
+        ("mask", (b, m, s), np.float32, "arg"),
+        ("cache_len", (b,), np.int32, "arg"),
+        ("kv", kv_shape(cfg, b), np.float32, "state"),
+    ]
+    return fn, args
+
+
+def fe_exec(cfg: TargetConfig, t: int, b: int, parallel: bool):
+    c = cfg.max_seq
+
+    def fn(w, feats, next_tokens, anchor_pos, mask, ctx_len, dkv):
+        logits, _, dkv2 = fe_apply(
+            w, feats, next_tokens, anchor_pos, mask, ctx_len, dkv,
+            cfg=cfg, parallel=parallel, use_pallas=True)
+        return {"dkv": dkv2, "logits": logits}
+
+    args = [
+        ("feats", (b, t, 3 * cfg.d_model), np.float32, "arg"),
+        ("next_tokens", (b, t), np.int32, "arg"),
+        ("anchor_pos", (b, t), np.int32, "arg"),
+        ("mask", (b, t, c), np.float32, "arg"),
+        ("ctx_len", (b,), np.int32, "arg"),
+        ("dkv", fe_kv_shape(cfg, b), np.float32, "state"),
+    ]
+    return fn, args
+
+
+def eg_exec(cfg: TargetConfig, t: int, b: int, first: bool, multi_level: bool):
+    c = cfg.max_seq
+    fin = (3 * cfg.d_model if multi_level else cfg.d_model) if first else cfg.d_model
+
+    def fn(w, feat_in, tokens, anchor_pos, mask, ctx_len, ekv):
+        logits, h, ekv2 = eg_apply(
+            w, feat_in, tokens, anchor_pos, mask, ctx_len, ekv,
+            cfg=cfg, first=first, use_pallas=True)
+        return {"ekv": ekv2, "h": h, "logits": logits}
+
+    args = [
+        ("feat_in", (b, t, fin), np.float32, "arg"),
+        ("tokens", (b, t), np.int32, "arg"),
+        ("anchor_pos", (b, t), np.int32, "arg"),
+        ("mask", (b, t, c), np.float32, "arg"),
+        ("ctx_len", (b,), np.int32, "arg"),
+        ("ekv", eg_kv_shape(cfg, b), np.float32, "state"),
+    ]
+    return fn, args
+
+
+def medusa_exec(cfg: TargetConfig, b: int = 1):
+    def fn(w, feats):
+        return {"logits": medusa_apply(w, feats)}
+
+    args = [("feats", (b, 1, 3 * cfg.d_model), np.float32, "arg")]
+    return fn, args
+
+
+# ----------------------------------------------------------------------------
+# per-target plan
+# ----------------------------------------------------------------------------
+
+def exec_plan(cfg: TargetConfig) -> List[Tuple[str, Tuple]]:
+    """(name, (builder, kwargs)) pairs to lower for this target."""
+    scfg = sps_config(cfg)
+    plan: List[Tuple[str, Tuple]] = []
+    ms = sorted(set(VERIFY_MS) | {PREFILL_CHUNK})
+    for m in ms:
+        plan.append((f"tgt_m{m}", (tgt_exec, dict(cfg=cfg, m=m, b=1))))
+    # drafters present on every target
+    for t in (1, 8, 32):
+        plan.append((f"fe_t{t}", (fe_exec, dict(cfg=cfg, t=t, b=1, parallel=False))))
+        plan.append((f"eg3_first_t{t}",
+                     (eg_exec, dict(cfg=cfg, t=t, b=1, first=True, multi_level=True))))
+    plan.append(("eg_next_t1",
+                 (eg_exec, dict(cfg=cfg, t=1, b=1, first=False, multi_level=True))))
+    if cfg.name == "base":
+        # full baseline + ablation matrix
+        for t in (1, 8, 32):
+            plan.append((f"fe_par_t{t}",
+                         (fe_exec, dict(cfg=cfg, t=t, b=1, parallel=True))))
+            plan.append((f"eg2_first_t{t}",
+                         (eg_exec, dict(cfg=cfg, t=t, b=1, first=True, multi_level=False))))
+        plan.append(("medusa", (medusa_exec, dict(cfg=cfg))))
+        for m in (1, 8, 32):
+            plan.append((f"sps_m{m}",
+                         (tgt_exec, dict(cfg=scfg, m=m, b=1, with_feats=False))))
+    if cfg.name == "mid":
+        # continuous-batching study (Table 3): chain length 2, no tree.
+        # m=1 -> batched vanilla; m=3 -> root + chain-2 rows.
+        for b in BATCH_SIZES:
+            for m in (1, 3):
+                plan.append((f"tgt_m{m}_b{b}", (tgt_exec, dict(cfg=cfg, m=m, b=b))))
+            for t in (1, 8):
+                plan.append((f"fe_t{t}_b{b}",
+                             (fe_exec, dict(cfg=cfg, t=t, b=b, parallel=False))))
+                plan.append((f"eg3_first_t{t}_b{b}",
+                             (eg_exec, dict(cfg=cfg, t=t, b=b, first=True, multi_level=True))))
+            plan.append((f"eg_next_t1_b{b}",
+                         (eg_exec, dict(cfg=cfg, t=1, b=b, first=False, multi_level=True))))
+    return plan
+
+
+def weights_example_for(name: str, trained: Dict[str, Dict]):
+    """Pick the parameter pytree whose structure matches executable ``name``."""
+    if name.startswith("tgt_"):
+        return trained["target"]
+    if name.startswith("sps_"):
+        return trained["sps"]
+    if name.startswith("fe_par"):
+        return trained["fasteagle_par"]
+    if name.startswith("fe_"):
+        return trained["fasteagle"]
+    if name.startswith("eg2_"):
+        return trained["eagle2"]
+    if name.startswith("eg"):
+        return trained["eagle3"]
+    if name.startswith("medusa"):
+        return trained["medusa"]
+    raise KeyError(name)
+
+
+# ----------------------------------------------------------------------------
+# main
+# ----------------------------------------------------------------------------
+
+def build_target(cfg: TargetConfig, out_dir: str, tc, log) -> Dict:
+    from .fmt import write_weights
+
+    tdir = os.path.join(out_dir, cfg.name)
+    hlo_dir = os.path.join(tdir, "hlo")
+    wdir = os.path.join(tdir, "weights")
+    os.makedirs(hlo_dir, exist_ok=True)
+    os.makedirs(wdir, exist_ok=True)
+
+    log(f"[{cfg.name}] training target ({cfg.stands_for} stand-in)")
+    texts = data_mod.corpus(tc.n_train_seqs, cfg.mixture, tc.seed)
+    tokens = train_mod.tokenize_corpus(texts, tc.seq_len)
+    losses: Dict[str, List[float]] = {}
+    target_params, losses["target"] = train_mod.train_target(cfg, tc, tokens, log)
+    t_logits, t_feats = train_mod.harvest(cfg, target_params, tokens)
+
+    trained: Dict[str, Dict] = {"target": target_params}
+    for dc in DRAFTER_SETS[cfg.name]:
+        if dc.arch in ("fasteagle", "fasteagle_par"):
+            p, l = train_mod.train_fasteagle(cfg, dc, tc, target_params, tokens,
+                                             t_logits, t_feats, log)
+        elif dc.arch == "eagle":
+            p, l = train_mod.train_eagle(cfg, dc, tc, target_params, tokens,
+                                         t_logits, t_feats, log)
+        elif dc.arch == "medusa":
+            p, l = train_mod.train_medusa(cfg, tc, target_params, tokens,
+                                          t_logits, t_feats, log)
+        elif dc.arch == "sps":
+            p, l = train_mod.train_sps(sps_config(cfg), tc, tokens, log)
+        else:
+            raise ValueError(dc.arch)
+        trained[dc.name] = p
+        losses[dc.name] = l
+    # structural aliases for executables shared between weight sets
+    trained.setdefault("fasteagle_par", trained.get("fasteagle"))
+    trained.setdefault("eagle2", trained.get("eagle3"))
+    trained.setdefault("eagle3", trained.get("eagle3"))
+    trained.setdefault("medusa", trained.get("medusa"))
+    trained.setdefault("sps", trained.get("sps"))
+
+    for set_name, params in trained.items():
+        if params is None:
+            continue
+        write_weights(os.path.join(wdir, f"{set_name}.few"),
+                      [(n, np.asarray(v)) for n, v in flatten_named(params)])
+
+    execs = {}
+    for name, (builder, kwargs) in exec_plan(cfg):
+        wex = weights_example_for(name, trained)
+        if wex is None:
+            continue
+        fn, args = builder(**kwargs)
+        io = lower_exec(hlo_dir, name, fn, wex, args, log)
+        execs[name] = {
+            "m": kwargs.get("m"), "t": kwargs.get("t"), "b": kwargs.get("b", 1),
+            "n_inputs": len(io["inputs"]), "n_outputs": len(io["outputs"]),
+        }
+
+    scfg = sps_config(cfg)
+    spec = {
+        "name": cfg.name,
+        "stands_for": cfg.stands_for,
+        "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
+        "head_dim": cfg.head_dim, "ffn": cfg.ffn,
+        "taps": list(cfg.taps), "max_seq": cfg.max_seq, "vocab": cfg.vocab,
+        "feat_dim": cfg.feat_dim,
+        "bos": BOS, "eos": EOS, "pad": PAD,
+        "prefill_chunk": PREFILL_CHUNK,
+        "draft_depth": DRAFT_DEPTH, "tree_top_k": TREE_TOP_K,
+        "tree_nodes": TREE_NODES, "medusa_heads": MEDUSA_HEADS,
+        "sps_chain": SPS_CHAIN,
+        "sps": {"d_model": scfg.d_model, "n_layers": scfg.n_layers,
+                "n_kv_heads": scfg.n_kv_heads, "head_dim": scfg.head_dim},
+        "drafter_sets": [dc.name for dc in DRAFTER_SETS[cfg.name]],
+        "executables": execs,
+        "batch_sizes": list(BATCH_SIZES) if cfg.name == "mid" else [1],
+    }
+    with open(os.path.join(tdir, "spec.json"), "w") as f:
+        json.dump(spec, f, indent=1)
+    return losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    # "large" (the 70B stand-in) is opt-in: it doubles build time on a
+    # 1-core box (see EXPERIMENTS.md §Deviations #4)
+    ap.add_argument("--targets", default="base,mid,baser")
+    args = ap.parse_args()
+    tc = train_config()
+    out_dir = args.out
+    os.makedirs(os.path.join(out_dir, "prompts"), exist_ok=True)
+
+    def log(msg: str) -> None:
+        print(msg, flush=True)
+
+    t0 = time.time()
+    n_prompts = 16 if os.environ.get("FE_FAST", "0") == "1" else 64
+    for task in TASKS:
+        with open(os.path.join(out_dir, "prompts", f"{task}.json"), "w") as f:
+            json.dump(data_mod.eval_prompts(task, n_prompts), f)
+
+    all_losses = {}
+    target_names = [t for t in args.targets.split(",") if t]
+    for tname in target_names:
+        all_losses[tname] = build_target(TARGETS[tname], out_dir, tc, log)
+
+    # merge with any prior invocation (targets can be built in batches)
+    log_path = os.path.join(out_dir, "train_log.json")
+    if os.path.exists(log_path):
+        with open(log_path) as f:
+            prior = json.load(f)
+        prior.update(all_losses)
+        all_losses = prior
+    man_path = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(man_path):
+        with open(man_path) as f:
+            prior_m = json.load(f)
+        target_names = sorted(set(prior_m.get("targets", [])) | set(target_names))
+    with open(log_path, "w") as f:
+        json.dump(all_losses, f)
+    manifest = {
+        "targets": target_names,
+        "tasks": list(TASKS),
+        "task_stands_for": TASK_STANDS_FOR,
+        "vocab": VOCAB,
+        "fast_build": os.environ.get("FE_FAST", "0") == "1",
+        "tree": {"depth": DRAFT_DEPTH, "top_k": TREE_TOP_K, "nodes": TREE_NODES},
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"artifacts complete in {time.time()-t0:.0f}s -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

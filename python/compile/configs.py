@@ -1,0 +1,212 @@
+"""Model / drafting / training configuration for the FastEagle reproduction.
+
+Everything here is the single source of truth shared by the JAX model code
+(L2), the Pallas kernels (L1), the trainer, and — via ``spec.json`` emitted
+by ``aot.py`` — the Rust coordinator (L3).
+
+The targets are tiny byte-level LLaMA-style models standing in for the
+paper's Vicuna-13B / LLaMA-3.1-8B / LLaMA-3.3-70B / DeepSeek-R1-Distill
+(see DESIGN.md §Substitutions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Tuple
+
+# ----------------------------------------------------------------------------
+# Vocabulary: byte-level + specials, padded to a multiple of 16 for tiling.
+# ----------------------------------------------------------------------------
+BOS = 256
+EOS = 257
+PAD = 258
+VOCAB = 272  # 256 bytes + 3 specials + 13 reserved, = 17 * 16
+
+# Draft-tree configuration (paper §2.2, scaled: the paper uses depth 7 /
+# top-k 10 on A100; we use depth 6 / top-k 3 on the tiny CPU testbed).
+DRAFT_DEPTH = 6  # N cascade layers == draft depth
+TREE_TOP_K = 3
+# Verification rows per cycle = 1 root (the pending token, always
+# committed — it was sampled from the true target distribution) + k
+# candidates per level under Backbone Expansion. O(N·k), linear in both.
+TREE_NODES = 1 + DRAFT_DEPTH * TREE_TOP_K  # == 19 rows incl. root
+
+# Verify-executable row counts emitted per target (M = rows per call,
+# always including the root row):
+#   1  -> vanilla decoding (root only)
+#   3  -> Table-3 chains (root + max chain length 2, paper's setup)
+#   7  -> chain ablation "w/o Constrained Tree" (root + depth-6 chain);
+#         also fits the SpS chain (root + 5)
+#   13 -> Medusa tree (root + 4 heads * k)
+#   19 -> full constrained tree
+VERIFY_MS = (1, 3, 7, 13, TREE_NODES)
+
+# Batched decode variants for the continuous-batching study (Table 3).
+BATCH_SIZES = (2, 4, 8, 16)
+
+PREFILL_CHUNK = 32  # target prompt ingestion chunk
+DRAFTER_PREFILL_CHUNKS = (32, 8)  # prompt ingestion / per-cycle accepted chunk
+
+MAX_SEQ = 256
+MEDUSA_HEADS = 4
+SPS_CHAIN = 5
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetConfig:
+    """A tiny LLaMA-style target model (pre-norm, GQA, learned abs. pos)."""
+
+    name: str
+    stands_for: str  # which paper model this is a stand-in for
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    ffn: int
+    taps: Tuple[int, int, int]  # low/mid/high feature-tap layer indices
+    max_seq: int = MAX_SEQ
+    vocab: int = VOCAB
+    # training-mixture weights over the 5 synthetic tasks
+    mixture: Tuple[float, ...] = (1.0, 1.0, 1.0, 1.0, 1.0)
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def feat_dim(self) -> int:
+        return 3 * self.d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class DrafterConfig:
+    """Configuration of one drafter weight-set trained against a target."""
+
+    name: str  # fasteagle | fasteagle_nofeat | fasteagle_par | eagle3 | eagle2 | medusa | sps
+    arch: str  # fasteagle | fasteagle_par | eagle | medusa | sps
+    # training ablation switches (paper §2.3 / Table 2)
+    feature_loss: bool = True  # beta > 0
+    multi_level: bool = True  # EAGLE-3-style 3-tap input (False -> EAGLE-2-like)
+    rollout: bool = True  # training-time-test style rollout steps (False -> teacher forcing)
+
+
+# The four paper targets -> three distinct architectures + one re-mixture.
+TARGETS: Dict[str, TargetConfig] = {
+    "base": TargetConfig(
+        name="base", stands_for="Vicuna-13B", d_model=192, n_layers=6,
+        n_heads=6, n_kv_heads=2, head_dim=32, ffn=576, taps=(1, 3, 5),
+    ),
+    "mid": TargetConfig(
+        # n_heads must be divisible by n_kv_heads (GQA grouping) -> MQA here
+        name="mid", stands_for="LLaMA-Instruct-3.1-8B", d_model=224, n_layers=7,
+        n_heads=7, n_kv_heads=1, head_dim=32, ffn=672, taps=(1, 3, 6),
+    ),
+    "large": TargetConfig(
+        name="large", stands_for="LLaMA-Instruct-3.3-70B", d_model=256, n_layers=8,
+        n_heads=8, n_kv_heads=2, head_dim=32, ffn=768, taps=(2, 4, 7),
+    ),
+    "baser": TargetConfig(
+        name="baser", stands_for="DeepSeek-R1-Distill-LLaMA-8B", d_model=192,
+        n_layers=6, n_heads=6, n_kv_heads=2, head_dim=32, ffn=576, taps=(1, 3, 5),
+        mixture=(0.5, 0.5, 3.0, 0.5, 0.5),  # math-heavy, like OpenThoughts-math
+    ),
+}
+
+# Drafter weight-sets per target. The full matrix is only trained for "base"
+# (the paper's ablations + Fig.3 + SpS/Medusa rows all use one target);
+# the other targets get the two headline methods.
+DRAFTERS_FULL: List[DrafterConfig] = [
+    DrafterConfig("fasteagle", "fasteagle"),
+    DrafterConfig("fasteagle_nofeat", "fasteagle", feature_loss=False),
+    DrafterConfig("fasteagle_par", "fasteagle_par"),
+    DrafterConfig("eagle3", "eagle"),
+    DrafterConfig("eagle2", "eagle", multi_level=False, rollout=False),
+    DrafterConfig("medusa", "medusa"),
+    DrafterConfig("sps", "sps"),
+]
+DRAFTERS_HEADLINE: List[DrafterConfig] = [
+    DrafterConfig("fasteagle", "fasteagle"),
+    DrafterConfig("eagle3", "eagle"),
+]
+
+DRAFTER_SETS: Dict[str, List[DrafterConfig]] = {
+    "base": DRAFTERS_FULL,
+    "mid": DRAFTERS_HEADLINE,
+    "large": DRAFTERS_HEADLINE,
+    "baser": DRAFTERS_HEADLINE,
+}
+
+# SpS draft LM (a separate tiny model, paper's "standard speculative
+# sampling" baseline): 2 layers, narrower.
+SPS_LAYERS = 2
+
+
+def sps_config(tc: TargetConfig) -> TargetConfig:
+    return TargetConfig(
+        name=tc.name + "_sps", stands_for="SpS draft LM", d_model=96,
+        n_layers=SPS_LAYERS, n_heads=3, n_kv_heads=1, head_dim=32, ffn=288,
+        taps=(0, 0, SPS_LAYERS - 1), max_seq=tc.max_seq,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Training hyper-parameters.
+
+    Optimizer follows the paper §3 Implementation: AdamW,
+    (beta1, beta2) = (0.9, 0.95), gradient clip 0.5. The paper's lr of 5e-5
+    is tuned for epochs over ~500K ShareGPT/UltraChat samples; our
+    from-scratch tiny models need a larger lr to converge within the
+    CPU-minute budget — recorded as a deviation in EXPERIMENTS.md.
+    """
+
+    seq_len: int = 96
+    batch: int = 16
+    target_steps: int = 700
+    drafter_steps: int = 500
+    target_lr: float = 3e-3
+    drafter_lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.95
+    weight_decay: float = 0.01
+    grad_clip: float = 0.5
+    # paper §2.3 uses w_i = 0.9^{N-i}, alpha = 0.1, beta = 1.0 with
+    # Smooth-L1 *summed* over unit-scale LLaMA features. Our tiny
+    # from-scratch targets have much larger feature magnitudes, so we use
+    # mean-scaled Smooth-L1 with a recalibrated balance (see
+    # EXPERIMENTS.md §Deviations); w_i is unchanged.
+    layer_decay: float = 0.9
+    alpha: float = 1.0
+    beta: float = 0.05
+    n_train_seqs: int = 512
+    seed: int = 0
+
+
+def train_config() -> TrainConfig:
+    """FE_FAST=1 shrinks everything to smoke scale (CI / pytest);
+    FE_TARGET_STEPS / FE_DRAFTER_STEPS override step counts for tuning."""
+    if os.environ.get("FE_FAST", "0") == "1":
+        tc = TrainConfig(
+            seq_len=64, batch=8, target_steps=30, drafter_steps=20,
+            n_train_seqs=64,
+        )
+    else:
+        tc = TrainConfig()
+    ts = int(os.environ.get("FE_TARGET_STEPS", tc.target_steps))
+    ds = int(os.environ.get("FE_DRAFTER_STEPS", tc.drafter_steps))
+    if (ts, ds) != (tc.target_steps, tc.drafter_steps):
+        tc = dataclasses.replace(tc, target_steps=ts, drafter_steps=ds)
+    return tc
+
+
+TASKS = ("dialog", "code", "math", "inst", "news")
+# Which paper benchmark each synthetic task stands in for.
+TASK_STANDS_FOR = {
+    "dialog": "MT-Bench",
+    "code": "HumanEval",
+    "math": "GSM8K",
+    "inst": "Alpaca",
+    "news": "CNN/DM",
+}

@@ -1,0 +1,197 @@
+"""Synthetic 5-task byte-level corpus ("SynthTasks suite").
+
+Stands in for the paper's training data (ShareGPT / UltraChat /
+OpenThoughts-math) and evaluation suites (MT-Bench, HumanEval, GSM8K,
+Alpaca, CNN/DM) — see DESIGN.md §Substitutions. The generators are
+template grammars with per-task vocabulary-pool sizes chosen so that the
+*predictability ordering* matches the paper's acceptance-rate ordering:
+``code`` is the most templated (highest acceptance / speedup) and ``news``
+the most diverse (lowest), with dialog/math/inst in between.
+
+Everything is seeded and deterministic; prompts exported for the Rust
+side come from the same grammars (held-out seeds).
+"""
+
+from __future__ import annotations
+
+import random
+from typing import List, Tuple
+
+from .configs import TASKS
+
+# ----------------------------------------------------------------------------
+# word pools
+# ----------------------------------------------------------------------------
+
+_NOUNS = [
+    "cache", "server", "garden", "river", "engine", "market", "ticket",
+    "window", "signal", "packet", "bridge", "forest", "teacher", "student",
+    "laptop", "recipe", "battery", "journey", "library", "harbor",
+]
+_ADJ = [
+    "fast", "green", "quiet", "bright", "heavy", "simple", "robust",
+    "gentle", "narrow", "steady", "golden", "hidden",
+]
+_VERBS = [
+    "build", "update", "carry", "measure", "review", "restart", "deliver",
+    "explain", "improve", "collect", "balance", "observe",
+]
+_TOPICS = [
+    "the weather", "a good book", "machine learning", "a travel plan",
+    "healthy food", "music practice", "home repair", "city transport",
+]
+_FUNCS = ["add", "scale", "merge", "clip", "norm", "pack", "split", "rank"]
+_ITEMS = ["apples", "pencils", "tickets", "coins", "books", "stickers"]
+_NAMES = ["Ana", "Ben", "Cara", "Dan", "Eve", "Finn", "Gia", "Hugo"]
+_NEWS_SUBJ = [
+    "the city council", "a research team", "the local museum",
+    "the transit agency", "a startup", "the weather service",
+    "the harbor authority", "a volunteer group", "the school board",
+    "an engineering firm", "the national library", "a farming cooperative",
+]
+_NEWS_ACT = [
+    "announced a new plan", "released its annual report",
+    "opened a public exhibit", "completed a major upgrade",
+    "launched a pilot program", "published updated guidance",
+    "approved additional funding", "restored an old landmark",
+    "expanded its services", "presented early results",
+]
+_NEWS_TAIL = [
+    "officials said on Monday", "according to a statement",
+    "residents welcomed the change", "details remain limited",
+    "the effort took several months", "more updates are expected soon",
+    "critics asked for more data", "the budget was not disclosed",
+]
+
+
+def _w(rng: random.Random, pool: List[str]) -> str:
+    return pool[rng.randrange(len(pool))]
+
+
+# ----------------------------------------------------------------------------
+# per-task generators: each returns (prompt, response) strings
+# ----------------------------------------------------------------------------
+
+def gen_dialog(rng: random.Random) -> Tuple[str, str]:
+    """MT-Bench stand-in: two-turn assistant dialogue, template answers."""
+    topic = _w(rng, _TOPICS)
+    adj = _w(rng, _ADJ)
+    noun = _w(rng, _NOUNS)
+    prompt = f"USER: tell me about {topic} and the {adj} {noun}.\nASSISTANT:"
+    resp = (
+        f" sure. {topic} is a common subject. the {adj} {noun} matters"
+        f" because the {noun} is {adj} and useful. in short, {topic} and"
+        f" the {adj} {noun} go well together.\n"
+    )
+    return prompt, resp
+
+
+def gen_code(rng: random.Random) -> Tuple[str, str]:
+    """HumanEval stand-in: tiny python-like function bodies, very templated."""
+    f = _w(rng, _FUNCS)
+    a, b = "x", "y"
+    k = rng.randrange(2, 9)
+    prompt = f"# task: implement {f}\ndef {f}({a}, {b}):\n"
+    body = (
+        f"    total = {a} + {b}\n"
+        f"    for i in range({k}):\n"
+        f"        total = total + i\n"
+        f"    return total\n"
+    )
+    return prompt, body
+
+
+def gen_math(rng: random.Random) -> Tuple[str, str]:
+    """GSM8K stand-in: one-step word arithmetic with a worked answer."""
+    name = _w(rng, _NAMES)
+    item = _w(rng, _ITEMS)
+    n1 = rng.randrange(2, 60)
+    n2 = rng.randrange(2, 60)
+    s = n1 + n2
+    prompt = (
+        f"Q: {name} has {n1} {item} and buys {n2} more {item}."
+        f" how many {item} does {name} have?\nA:"
+    )
+    resp = f" {name} has {n1} + {n2} = {s} {item}. the answer is {s}.\n"
+    return prompt, resp
+
+
+def gen_inst(rng: random.Random) -> Tuple[str, str]:
+    """Alpaca stand-in: instruction -> response templates."""
+    verb = _w(rng, _VERBS)
+    noun = _w(rng, _NOUNS)
+    adj = _w(rng, _ADJ)
+    prompt = f"### Instruction: {verb} the {adj} {noun}.\n### Response:"
+    resp = (
+        f" to {verb} the {adj} {noun}, first inspect the {noun}, then"
+        f" {verb} it carefully until the {noun} is {adj}. done.\n"
+    )
+    return prompt, resp
+
+
+def gen_news(rng: random.Random) -> Tuple[str, str]:
+    """CNN/DM stand-in: multi-sentence article + TL;DR (most diverse)."""
+    sents = []
+    for _ in range(rng.randrange(2, 4)):
+        sents.append(
+            f"{_w(rng, _NEWS_SUBJ)} {_w(rng, _NEWS_ACT)}, {_w(rng, _NEWS_TAIL)}."
+        )
+    subj = _w(rng, _NEWS_SUBJ)
+    act = _w(rng, _NEWS_ACT)
+    prompt = " ".join(sents) + f" {subj} {act}. TL;DR:"
+    resp = f" {subj} {act}, {_w(rng, _NEWS_TAIL)}.\n"
+    return prompt, resp
+
+
+_GENS = {
+    "dialog": gen_dialog,
+    "code": gen_code,
+    "math": gen_math,
+    "inst": gen_inst,
+    "news": gen_news,
+}
+
+
+def gen_example(task: str, rng: random.Random) -> Tuple[str, str]:
+    return _GENS[task](rng)
+
+
+def corpus(
+    n_seqs: int,
+    mixture: Tuple[float, ...],
+    seed: int,
+) -> List[str]:
+    """Training corpus: prompt+response concatenations, task-mixed."""
+    rng = random.Random(seed)
+    total = sum(mixture)
+    out: List[str] = []
+    for _ in range(n_seqs):
+        r = rng.random() * total
+        acc = 0.0
+        task = TASKS[-1]
+        for t, w in zip(TASKS, mixture):
+            acc += w
+            if r <= acc:
+                task = t
+                break
+        p, a = gen_example(task, rng)
+        out.append(p + a)
+    return out
+
+
+def eval_prompts(task: str, n: int, seed: int = 10_000) -> List[str]:
+    """Held-out prompts (prompt part only) for the Rust-side evaluation."""
+    rng = random.Random(seed + hash(task) % 1000)
+    return [gen_example(task, rng)[0] for _ in range(n)]
+
+
+# ----------------------------------------------------------------------------
+# byte-level tokenization (mirrored by rust/src/model/tokenizer.rs)
+# ----------------------------------------------------------------------------
+
+def encode(text: str) -> List[int]:
+    return list(text.encode("utf-8", errors="replace"))
+
+
+def decode(tokens: List[int]) -> str:
+    return bytes(t for t in tokens if 0 <= t < 256).decode("utf-8", errors="replace")

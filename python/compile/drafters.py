@@ -1,0 +1,205 @@
+"""Drafter architectures (L2): the FastEagle cascade (paper §2.1) and the
+baselines it is compared against (EAGLE-3-like, EAGLE-2-like, Medusa, SpS).
+
+Conventions shared with the Rust coordinator (L3):
+
+* A drafter "anchor" is a verified token position t whose target features
+  feed the drafter. Per generation cycle the coordinator (a) appends one
+  permanent context entry per newly-accepted token — built from *real*
+  verified features, EAGLE-3's design philosophy — and (b) runs the draft
+  itself with temporary entries that are rolled back after verification.
+* ``fe_apply`` is the paper's cascaded drafter: one forward through N
+  structurally-cascaded decoder layers emits all N distributions
+  (eqs. 1–2). ``parallel=True`` is the "w/o Cascaded Structure" ablation
+  (independent heads, h_i = L_i(x0)).
+* All drafter logits go through the frozen target LM head (the ``emb``
+  tensor is a frozen copy of the target's tied embedding, excluded from
+  the optimizer in train.py), as in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import DRAFT_DEPTH, MEDUSA_HEADS, TargetConfig
+from .layers import block_apply, init_block, rmsnorm
+
+
+def _gelu(h):
+    return 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h**3)))
+
+
+# ----------------------------------------------------------------------------
+# FastEagle cascade
+# ----------------------------------------------------------------------------
+
+def init_fasteagle(key, cfg: TargetConfig, target_emb: jnp.ndarray,
+                   n_cascade: int = DRAFT_DEPTH) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, n_cascade + 3)
+    return {
+        "emb": target_emb,  # frozen (token embedding + LM head)
+        "pos": jax.random.normal(ks[0], (cfg.max_seq, d), jnp.float32) * 0.02,
+        "fc3_w": jax.random.normal(ks[1], (3 * d, d), jnp.float32) * 0.02,
+        "fc3_b": jnp.zeros((d,), jnp.float32),
+        "fcin_w": jax.random.normal(ks[2], (2 * d, d), jnp.float32) * 0.02,
+        "fcin_b": jnp.zeros((d,), jnp.float32),
+        "blocks": {
+            str(i): init_block(ks[3 + i], d, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, cfg.ffn, n_cascade)
+            for i in range(n_cascade)
+        },
+        "ln_h": {str(i): jnp.ones((d,), jnp.float32) for i in range(n_cascade)},
+    }
+
+
+def fe_kv_shape(cfg: TargetConfig, batch: int, c: int | None = None,
+                n_cascade: int = DRAFT_DEPTH) -> Tuple[int, ...]:
+    c = c or cfg.max_seq
+    return (n_cascade, 2, batch, c, cfg.n_kv_heads, cfg.head_dim)
+
+
+def fe_apply(
+    params: Dict,
+    feats: jnp.ndarray,  # [B, T, 3d] target tap features of the anchors
+    next_tokens: jnp.ndarray,  # [B, T] i32 — e_{t+1} per anchor (eq. 1)
+    anchor_pos: jnp.ndarray,  # [B, T] i32 token positions of the anchors
+    mask: jnp.ndarray,  # [B, T, C] additive over the drafter context
+    ctx_len: jnp.ndarray,  # [B] i32 — per-request slot for the T new entries
+    dkv: jnp.ndarray,  # [N, 2, B, C, KH, hd]
+    *,
+    cfg: TargetConfig,
+    n_cascade: int = DRAFT_DEPTH,
+    parallel: bool = False,
+    use_pallas: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-pass cascade. Returns (logits [B,T,N,V], hidden [B,T,N,d], dkv').
+
+    Layer i's logits row is the draft distribution q_{t+i} (paper eq. 2):
+    shallow layers handle short-range, deep layers long-range positions.
+    """
+    g = feats @ params["fc3_w"] + params["fc3_b"]
+    e = params["emb"][next_tokens]
+    x0 = jnp.concatenate([g, e], axis=-1) @ params["fcin_w"] + params["fcin_b"]
+    x0 = x0 + params["pos"][anchor_pos]
+    x = x0
+    hidden = []
+    new_kv = []
+    for i in range(n_cascade):
+        inp = x0 if parallel else x
+        x, kc, vc = block_apply(
+            params["blocks"][str(i)], inp, dkv[i, 0], dkv[i, 1], mask, ctx_len,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, use_pallas=use_pallas,
+        )
+        new_kv.append(jnp.stack([kc, vc]))
+        hidden.append(x)
+    hs = jnp.stack(hidden, axis=2)  # [B, T, N, d]
+    normed = jnp.stack(
+        [rmsnorm(hs[:, :, i], params["ln_h"][str(i)]) for i in range(n_cascade)],
+        axis=2,
+    )
+    logits = normed @ params["emb"].T  # frozen LM head
+    return logits, hs, jnp.stack(new_kv)
+
+
+# ----------------------------------------------------------------------------
+# EAGLE (autoregressive single-layer drafter; -3-like and -2-like variants)
+# ----------------------------------------------------------------------------
+
+def init_eagle(key, cfg: TargetConfig, target_emb: jnp.ndarray,
+               multi_level: bool = True) -> Dict:
+    d = cfg.d_model
+    fin = 3 * d if multi_level else d
+    ks = jax.random.split(key, 5)
+    return {
+        "emb": target_emb,  # frozen
+        "pos": jax.random.normal(ks[0], (cfg.max_seq, d), jnp.float32) * 0.02,
+        "fc3_w": jax.random.normal(ks[1], (fin, d), jnp.float32) * 0.02,
+        "fc3_b": jnp.zeros((d,), jnp.float32),
+        "fch_w": jax.random.normal(ks[2], (d, d), jnp.float32) * 0.02,
+        "fch_b": jnp.zeros((d,), jnp.float32),
+        "fcin_w": jax.random.normal(ks[3], (2 * d, d), jnp.float32) * 0.02,
+        "fcin_b": jnp.zeros((d,), jnp.float32),
+        "block": init_block(ks[4], d, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim, cfg.ffn, 1),
+        "ln_h": jnp.ones((d,), jnp.float32),
+    }
+
+
+def eg_kv_shape(cfg: TargetConfig, batch: int, c: int | None = None) -> Tuple[int, ...]:
+    c = c or cfg.max_seq
+    return (2, batch, c, cfg.n_kv_heads, cfg.head_dim)
+
+
+def eg_apply(
+    params: Dict,
+    feat_in: jnp.ndarray,  # [B, T, 3d|d] (first) or [B, T, d] (own hidden)
+    tokens: jnp.ndarray,  # [B, T] i32
+    anchor_pos: jnp.ndarray,  # [B, T] i32
+    mask: jnp.ndarray,  # [B, T, C]
+    ctx_len: jnp.ndarray,  # [B] i32
+    ekv: jnp.ndarray,  # [2, B, C, KH, hd]
+    *,
+    cfg: TargetConfig,
+    first: bool,
+    use_pallas: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One EAGLE step. Drafting a depth-N chain takes N sequential calls —
+    exactly the latency bottleneck FastEagle removes. Returns
+    (logits [B,T,V], h [B,T,d], ekv')."""
+    if first:
+        g = feat_in @ params["fc3_w"] + params["fc3_b"]
+    else:
+        g = feat_in @ params["fch_w"] + params["fch_b"]
+    e = params["emb"][tokens]
+    x = jnp.concatenate([g, e], axis=-1) @ params["fcin_w"] + params["fcin_b"]
+    x = x + params["pos"][anchor_pos]
+    x, kc, vc = block_apply(
+        params["block"], x, ekv[0], ekv[1], mask, ctx_len,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, use_pallas=use_pallas,
+    )
+    logits = rmsnorm(x, params["ln_h"]) @ params["emb"].T
+    return logits, x, jnp.stack([kc, vc])
+
+
+# ----------------------------------------------------------------------------
+# Medusa (stateless parallel heads off the anchor feature)
+# ----------------------------------------------------------------------------
+
+def init_medusa(key, cfg: TargetConfig, target_emb: jnp.ndarray,
+                n_heads: int = MEDUSA_HEADS) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, n_heads + 1)
+    return {
+        "emb": target_emb,  # frozen
+        "fc3_w": jax.random.normal(ks[0], (3 * d, d), jnp.float32) * 0.02,
+        "fc3_b": jnp.zeros((d,), jnp.float32),
+        "heads": {
+            str(i): {
+                "wa": jax.random.normal(ks[1 + i], (d, d), jnp.float32) * 0.02,
+                "ba": jnp.zeros((d,), jnp.float32),
+            }
+            for i in range(n_heads)
+        },
+        "ln_h": jnp.ones((d,), jnp.float32),
+    }
+
+
+def medusa_apply(
+    params: Dict,
+    feats: jnp.ndarray,  # [B, T, 3d]
+    *,
+    n_heads: int = MEDUSA_HEADS,
+) -> jnp.ndarray:  # [B, T, K, V]
+    z = _gelu(feats @ params["fc3_w"] + params["fc3_b"])
+    outs = []
+    for i in range(n_heads):
+        h = params["heads"][str(i)]
+        r = z + _gelu(z @ h["wa"] + h["ba"])
+        outs.append(rmsnorm(r, params["ln_h"]) @ params["emb"].T)
+    return jnp.stack(outs, axis=2)

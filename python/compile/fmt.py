@@ -1,0 +1,63 @@
+"""FEW1 — the flat weights interchange format between python (L2, writer)
+and the Rust runtime (L3, reader: ``rust/src/runtime/weights.rs``).
+
+Layout (little-endian):
+
+    magic   b"FEW1"
+    u32     tensor count
+    repeat:
+      u16   name length, then name bytes (utf-8; '/'-joined pytree path)
+      u8    dtype (0 = f32, 1 = i32)
+      u8    ndim
+      u32×ndim dims
+      raw   data (dtype-sized, C order)
+
+Tensor names match the "weight"-kind input names in each executable's
+``*.io.json`` manifest, so the runtime can bind a weight set to any
+executable by name lookup.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import List, Tuple
+
+import numpy as np
+
+MAGIC = b"FEW1"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_weights(path: str, named: List[Tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(named)))
+        for name, arr in named:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in DTYPES:
+                arr = arr.astype(np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_weights(path: str) -> List[Tuple[str, np.ndarray]]:
+    """Reader (used by the python round-trip tests)."""
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nl,) = struct.unpack("<H", f.read(2))
+            name = f.read(nl).decode("utf-8")
+            dt, nd = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd)) if nd else ()
+            dtype = np.float32 if dt == 0 else np.int32
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(n * 4), dtype=dtype).reshape(dims)
+            out.append((name, data))
+    return out

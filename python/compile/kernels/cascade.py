@@ -1,0 +1,100 @@
+"""Pallas fused-MLP kernel (L1) — the cascade layer's feed-forward half.
+
+The FastEagle cascade (paper §2.1) replaces N autoregressive drafter
+steps with N structurally-cascaded decoder layers executed in one forward
+pass. Each cascade layer is (anchor attention) + (position-wise MLP); the
+attention half reuses the tree-attention kernel (`tree_attn.py`) with an
+anchor-causal mask, and this module provides the fused MLP half:
+
+    y = x + GELU(rms(x) @ W1 + b1) @ W2 + b2
+
+fused into a single kernel so the residual stream never leaves VMEM
+between the two matmuls. On a real TPU the whole 6-layer cascade's
+weights (~2.6 MB f32 at d=192) fit in VMEM, making the entire draft a
+single MXU-resident pass — the TPU analogue of the paper's "single
+forward pass" (DESIGN.md §Hardware-Adaptation).
+
+Grid: (B, T-tiles). ffn is looped in ff-tile chunks with a VMEM
+accumulator so the kernel scales to ffn ≫ VMEM. interpret=True for the
+CPU PJRT plugin (see tree_attn.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gelu(h):
+    return 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h**3)))
+
+
+def _fused_mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *, ff_tiles: int):
+    """One (batch, row-tile) program.
+
+    x_ref  [Tt, d]      — row tile of the residual stream (VMEM-resident)
+    w1_ref [d, ffn], b1_ref [ffn], w2_ref [ffn, d], b2_ref [d]
+    o_ref  [Tt, d]      — mlp(x) (residual added by caller)
+
+    The ffn dimension is processed in ``ff_tiles`` chunks: h-tile = GELU(x
+    @ W1-tile) is immediately contracted with the matching W2-tile into a
+    [Tt, d] accumulator, so peak live VMEM is O(Tt*d + d*ff_tile) instead
+    of O(Tt*ffn).
+    """
+    x = x_ref[...]
+    tt, d = x.shape
+    ffn = w1_ref.shape[1]
+    tile = ffn // ff_tiles
+    acc = jnp.zeros((tt, d), dtype=jnp.float32)
+    for i in range(ff_tiles):
+        w1 = w1_ref[:, i * tile:(i + 1) * tile]
+        b1 = b1_ref[i * tile:(i + 1) * tile]
+        w2 = w2_ref[i * tile:(i + 1) * tile, :]
+        h = jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1[None, :]
+        h = _gelu(h)
+        acc = acc + jnp.dot(h, w2, preferred_element_type=jnp.float32)
+    o_ref[...] = acc + b2_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "ff_tiles", "row_tile"))
+def fused_mlp(
+    x: jnp.ndarray,  # [B, T, d]
+    w1: jnp.ndarray,  # [d, ffn]
+    b1: jnp.ndarray,  # [ffn]
+    w2: jnp.ndarray,  # [ffn, d]
+    b2: jnp.ndarray,  # [d]
+    interpret: bool = True,
+    ff_tiles: int = 2,
+    row_tile: int = 0,  # 0 -> whole T in one tile
+) -> jnp.ndarray:  # [B, T, d]
+    b, t, d = x.shape
+    ffn = w1.shape[1]
+    assert ffn % ff_tiles == 0, (ffn, ff_tiles)
+    tt = t if row_tile == 0 else row_tile
+    assert t % tt == 0, (t, tt)
+    grid = (b, t // tt)
+    return pl.pallas_call(
+        functools.partial(_fused_mlp_kernel, ff_tiles=ff_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, tt, d), lambda bi, ti: (bi, ti, 0)),
+            pl.BlockSpec((d, ffn), lambda bi, ti: (0, 0)),
+            pl.BlockSpec((ffn,), lambda bi, ti: (0,)),
+            pl.BlockSpec((ffn, d), lambda bi, ti: (0, 0)),
+            pl.BlockSpec((d,), lambda bi, ti: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, tt, d), lambda bi, ti: (bi, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, d), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+def vmem_bytes(tt: int, d: int, ffn: int, ff_tiles: int) -> int:
+    """Estimated VMEM footprint of one program instance (f32)."""
+    tile = ffn // ff_tiles
+    live = tt * d * 2 + d * ffn + ffn + ffn * d + d  # x, acc, weights
+    scratch = tt * tile  # h tile
+    return 4 * (live + scratch)

@@ -1,0 +1,54 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+These are the ground truth the Pallas kernels in ``tree_attn.py`` and
+``cascade.py`` are tested against (pytest + hypothesis sweeps in
+``python/tests/test_kernels.py``). They are also used directly by the L2
+model code when ``use_pallas=False`` so kernel-vs-model equivalence can be
+asserted end-to-end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_gqa_attention_ref(
+    q: jnp.ndarray,  # [B, T, H, hd]
+    k: jnp.ndarray,  # [B, S, KH, hd]
+    v: jnp.ndarray,  # [B, S, KH, hd]
+    mask: jnp.ndarray,  # [B, T, S] additive (0 / -inf)
+) -> jnp.ndarray:  # [B, T, H, hd]
+    """Tree/causal attention with grouped-query KV, additive mask.
+
+    This single primitive covers every attention in the system: target
+    prefill (causal-within-chunk + prefix mask), tree verification
+    (ancestor mask, paper §2.4), and the drafter cascade's anchor
+    attention (paper §2.1) — the mask encodes the structure.
+    """
+    b, t, h, hd = q.shape
+    kh = k.shape[2]
+    group = h // kh
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, dtype=q.dtype))
+    # expand kv heads to full heads
+    k_full = jnp.repeat(k, group, axis=2)  # [B, S, H, hd]
+    v_full = jnp.repeat(v, group, axis=2)
+    # [B, H, T, S]
+    scores = jnp.einsum("bthd,bshd->bhts", q, k_full) * scale
+    scores = scores + mask[:, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v_full)
+    return out
+
+
+def fused_mlp_ref(
+    x: jnp.ndarray,  # [B, T, d]
+    w1: jnp.ndarray,  # [d, ffn]
+    b1: jnp.ndarray,  # [ffn]
+    w2: jnp.ndarray,  # [ffn, d]
+    b2: jnp.ndarray,  # [d]
+) -> jnp.ndarray:  # [B, T, d] (the MLP output, residual added by caller)
+    """Position-wise feed-forward with GELU, the cascade layer's second half."""
+    h = x @ w1 + b1
+    h = 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h**3)))
+    return h @ w2 + b2

@@ -1,0 +1,92 @@
+"""Pallas tree-attention kernel (L1) — parallel draft-tree verification.
+
+The paper (§2.4) verifies all nodes of the constrained draft tree in a
+single target forward using *tree attention*: each of the M draft rows
+attends to the committed prefix plus its tree ancestors, encoded as an
+additive mask. This kernel is the TPU-shaped implementation of that
+primitive, and is also reused for chunked prefill (causal mask) and for
+the cascade drafter's anchor attention — the mask carries the structure.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): instead of a CUDA
+warp-per-row pattern, the grid is (batch, head); each program keeps its
+query rows [T, hd] VMEM-resident while the K/V context for its KV head
+streams through. GQA is expressed in the BlockSpec index maps (query head
+h reads KV head h // group) rather than by materializing repeated KV, so
+no HBM traffic is spent expanding grouped KV. Dims are padded to 8/16
+multiples for MXU tiles. ``interpret=True`` everywhere: the CPU PJRT
+plugin cannot run Mosaic custom-calls; real-TPU numbers are estimated in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _tree_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale: float):
+    """One (batch, head) program: out = softmax(q k^T * scale + mask) v.
+
+    Block shapes (leading blocked dims squeezed by BlockSpec):
+      q_ref    [T, hd]   — this head's query rows (VMEM-resident)
+      k_ref    [S, hd]   — the matching *KV head* (GQA via index_map)
+      v_ref    [S, hd]
+      mask_ref [T, S]    — additive tree/causal/prefix mask
+      o_ref    [T, hd]
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    mask = mask_ref[...]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = scores + mask
+    # numerically-stable softmax in-register
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    probs = e / denom
+    o_ref[...] = jnp.dot(probs, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tree_attention(
+    q: jnp.ndarray,  # [B, T, H, hd]
+    k: jnp.ndarray,  # [B, S, KH, hd]
+    v: jnp.ndarray,  # [B, S, KH, hd]
+    mask: jnp.ndarray,  # [B, T, S] additive
+    interpret: bool = True,
+) -> jnp.ndarray:  # [B, T, H, hd]
+    b, t, h, hd = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    group = h // kh
+    scale = 1.0 / float(hd) ** 0.5
+
+    grid = (b, h)
+    return pl.pallas_call(
+        functools.partial(_tree_attn_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            # q[b, :, h, :] — None entries are squeezed from the kernel ref
+            pl.BlockSpec((None, t, None, hd), lambda bi, hi: (bi, 0, hi, 0)),
+            # k[b, :, h // group, :] — GQA head sharing via index_map
+            pl.BlockSpec((None, s, None, hd), lambda bi, hi: (bi, 0, hi // group, 0)),
+            pl.BlockSpec((None, s, None, hd), lambda bi, hi: (bi, 0, hi // group, 0)),
+            # mask[b, :, :] shared across heads
+            pl.BlockSpec((None, t, s), lambda bi, hi: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, t, None, hd), lambda bi, hi: (bi, 0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, h, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v, mask)
+
+
+def vmem_bytes(t: int, s: int, hd: int) -> int:
+    """Estimated VMEM footprint of one program instance (f32)."""
+    per = t * hd + 2 * s * hd + t * s + t * hd  # q, k+v, mask, out
+    scratch = 2 * t * s + 2 * t  # scores+probs, max+denom
+    return 4 * (per + scratch)

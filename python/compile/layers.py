@@ -1,0 +1,127 @@
+"""Transformer building blocks (L2), shared by the target model, the
+FastEagle cascade, the EAGLE baseline drafters, and the SpS draft LM.
+
+All functions are pure: parameters are plain nested dicts of jnp arrays
+(deterministically flattened by ``aot.py`` into the executable manifests),
+state (KV caches) is threaded explicitly. Attention and the feed-forward
+run through the Pallas kernels (L1) by default; ``use_pallas=False``
+switches to the pure-jnp oracles so tests can assert kernel/model
+equivalence end-to-end.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels.cascade import fused_mlp
+from .kernels.tree_attn import tree_attention
+
+EPS = 1e-5
+NEG = -1e9
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return x * w * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS)
+
+
+# ----------------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------------
+
+def init_block(key, d: int, n_heads: int, n_kv_heads: int, head_dim: int,
+               ffn: int, n_layers_for_scale: int) -> Dict:
+    ks = jax.random.split(key, 6)
+    sd = 0.02
+    out_sd = sd / (2.0 * n_layers_for_scale) ** 0.5
+    return {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "wq": jax.random.normal(ks[0], (d, n_heads * head_dim), jnp.float32) * sd,
+        "wk": jax.random.normal(ks[1], (d, n_kv_heads * head_dim), jnp.float32) * sd,
+        "wv": jax.random.normal(ks[2], (d, n_kv_heads * head_dim), jnp.float32) * sd,
+        "wo": jax.random.normal(ks[3], (n_heads * head_dim, d), jnp.float32) * out_sd,
+        "w1": jax.random.normal(ks[4], (d, ffn), jnp.float32) * sd,
+        "b1": jnp.zeros((ffn,), jnp.float32),
+        "w2": jax.random.normal(ks[5], (ffn, d), jnp.float32) * out_sd,
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+# ----------------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------------
+
+def scatter_rows(
+    cache: jnp.ndarray,  # [B, S, KH, hd]
+    new: jnp.ndarray,  # [B, T, KH, hd]
+    starts: jnp.ndarray,  # [B] i32 — per-request first slot
+) -> jnp.ndarray:
+    """Write T new rows into each request's cache at its own offset.
+
+    Batched requests in a continuous-batching group have *different*
+    prefix lengths, so the KV write offset is per-request. Expressed as a
+    clipped gather + select (O(S) per call) rather than a scatter so it
+    lowers to plain HLO the CPU PJRT plugin runs well.
+    """
+    b, s = cache.shape[0], cache.shape[1]
+    t = new.shape[1]
+    rel = jnp.arange(s, dtype=jnp.int32)[None, :] - starts[:, None]  # [B, S]
+    inside = (rel >= 0) & (rel < t)
+    idx = jnp.clip(rel, 0, t - 1)[:, :, None, None]
+    idx = jnp.broadcast_to(idx, (b, s) + new.shape[2:])
+    gathered = jnp.take_along_axis(new, idx, axis=1)
+    return jnp.where(inside[:, :, None, None], gathered, cache)
+
+
+def block_apply(
+    p: Dict,
+    x: jnp.ndarray,  # [B, T, d]
+    k_cache: jnp.ndarray,  # [B, S, KH, hd]
+    v_cache: jnp.ndarray,  # [B, S, KH, hd]
+    mask: jnp.ndarray,  # [B, T, S] additive
+    cache_len: jnp.ndarray,  # [B] i32: per-request slot for the T new rows
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    use_pallas: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pre-norm decoder block. The T new K/V rows are written into the
+    caches at slots [cache_len[b], cache_len[b]+T); the mask decides
+    visibility (prefix, causal-within-chunk, or tree ancestors — caller's
+    contract).
+    """
+    b, t, d = x.shape
+    h = rmsnorm(x, p["ln1"])
+    q = (h @ p["wq"]).reshape(b, t, n_heads, head_dim)
+    k_new = (h @ p["wk"]).reshape(b, t, n_kv_heads, head_dim)
+    v_new = (h @ p["wv"]).reshape(b, t, n_kv_heads, head_dim)
+    k_cache = scatter_rows(k_cache, k_new, cache_len)
+    v_cache = scatter_rows(v_cache, v_new, cache_len)
+    if use_pallas:
+        attn = tree_attention(q, k_cache, v_cache, mask)
+    else:
+        attn = kref.masked_gqa_attention_ref(q, k_cache, v_cache, mask)
+    x = x + attn.reshape(b, t, n_heads * head_dim) @ p["wo"]
+    h2 = rmsnorm(x, p["ln2"])
+    if use_pallas:
+        x = x + fused_mlp(h2, p["w1"], p["b1"], p["w2"], p["b2"])
+    else:
+        x = x + kref.fused_mlp_ref(h2, p["w1"], p["b1"], p["w2"], p["b2"])
+    return x, k_cache, v_cache
+
+
+# ----------------------------------------------------------------------------
+# mask helpers (training-side; the rust coordinator builds inference masks)
+# ----------------------------------------------------------------------------
+
+def causal_mask(b: int, t: int, s: int) -> jnp.ndarray:
+    """[B, T, S] additive mask: row i sees slots 0..i (assumes cache_len=0)."""
+    rows = jnp.arange(t)[:, None]
+    cols = jnp.arange(s)[None, :]
+    m = jnp.where(cols <= rows, 0.0, NEG).astype(jnp.float32)
+    return jnp.broadcast_to(m[None], (b, t, s))

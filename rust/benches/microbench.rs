@@ -1,0 +1,9 @@
+//! `cargo bench` entry for the microbench harness (hand-rolled; criterion is
+//! unavailable offline). FE_BENCH_QUICK=1 shrinks the sweep.
+fn main() {
+    let quick = std::env::var("FE_BENCH_QUICK").as_deref() == Ok("1");
+    if let Err(e) = fasteagle::bench::run_named("microbench", quick) {
+        eprintln!("microbench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

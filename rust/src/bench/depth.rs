@@ -1,0 +1,64 @@
+//! Extension ablation (beyond the paper's tables): τ and speedup as a
+//! function of draft depth 1..N for FastEagle and EAGLE-3. The cascade
+//! emits all N levels in one pass regardless of the depth used, so
+//! FastEagle's drafting cost is *flat* in depth while EAGLE-3's grows by
+//! one sequential call per level — this sweep makes the paper's
+//! latency-structure argument directly visible on one axis.
+
+use anyhow::Result;
+
+use crate::spec::GenConfig;
+use crate::util::json::Json;
+
+use super::harness::{render_table, run_method, write_report, BenchEnv};
+
+const TARGET: &str = "base";
+
+pub fn run(env: &BenchEnv) -> Result<()> {
+    let (n_prompts, max_new) = env.scale();
+    let prompts = env.prompts("dialog", n_prompts)?;
+    let base = run_method(
+        env,
+        TARGET,
+        "vanilla",
+        &prompts,
+        &GenConfig { max_new_tokens: max_new, ..Default::default() },
+    )?
+    .tok_per_sec;
+
+    let depths = [1usize, 2, 3, 4, 6];
+    let headers: Vec<String> = std::iter::once("method".to_string())
+        .chain(depths.iter().map(|d| format!("depth {d}")))
+        .collect();
+    let mut rows = Vec::new();
+    let mut report = Vec::new();
+    for method in ["fasteagle", "eagle3"] {
+        let mut row = vec![method.to_string()];
+        let mut series = Vec::new();
+        for &d in &depths {
+            let cfg = GenConfig {
+                max_new_tokens: max_new,
+                max_depth: Some(d),
+                ..Default::default()
+            };
+            let agg = run_method(env, TARGET, method, &prompts, &cfg)?;
+            let spd = agg.tok_per_sec / base.max(1e-9);
+            row.push(format!("{spd:.2}x/{:.2}", agg.tau));
+            series.push(Json::obj(vec![
+                ("depth", Json::num(d as f64)),
+                ("speedup", Json::num(spd)),
+                ("tau", Json::num(agg.tau)),
+            ]));
+        }
+        rows.push(row);
+        report.push(Json::obj(vec![
+            ("method", Json::str(method)),
+            ("series", Json::Arr(series)),
+        ]));
+    }
+    println!("\n=== Depth sweep (speedup/τ vs draft depth, {TARGET}, dialog, T=0) ===");
+    println!("{}", render_table(&headers, &rows));
+    let path = write_report("depth", &Json::Arr(report))?;
+    println!("report -> {path:?}");
+    Ok(())
+}

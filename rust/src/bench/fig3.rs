@@ -1,0 +1,60 @@
+//! Fig. 3 — per-depth acceptance rate on the dialog task (MT-Bench
+//! stand-in) at T=0 for FastEagle vs EAGLE-3-like vs EAGLE-2-like.
+//! Expected shape (paper): FastEagle high with a mild decline, EAGLE-3
+//! most stable, EAGLE-2 degrades substantially with depth.
+
+use anyhow::Result;
+
+use crate::spec::GenConfig;
+use crate::util::json::Json;
+
+use super::harness::{render_table, run_method, write_report, BenchEnv};
+
+const TARGET: &str = "base";
+const METHODS: [&str; 3] = ["fasteagle", "eagle3", "eagle2"];
+
+pub fn run(env: &BenchEnv) -> Result<()> {
+    let (n_prompts, max_new) = env.scale();
+    let n_prompts = (n_prompts * 2).max(4); // acceptance curves need samples
+    let prompts = env.prompts("dialog", n_prompts)?;
+    let cfg = GenConfig { max_new_tokens: max_new, ..Default::default() };
+    let mut depth_max = 0;
+    let mut results = Vec::new();
+    for m in METHODS {
+        let agg = run_method(env, TARGET, m, &prompts, &cfg)?;
+        depth_max = depth_max.max(agg.metrics.depth_attempts.len());
+        results.push(agg);
+    }
+    let headers: Vec<String> = std::iter::once("method".to_string())
+        .chain((1..=depth_max).map(|d| format!("depth {d}")))
+        .collect();
+    let mut rows = Vec::new();
+    let mut report = Vec::new();
+    for agg in &results {
+        let mut row = vec![agg.method.clone()];
+        let mut series = Vec::new();
+        for d in 1..=depth_max {
+            match agg.metrics.accept_rate(d) {
+                Some(r) => {
+                    row.push(format!("{r:.2}"));
+                    series.push(Json::num(r));
+                }
+                None => {
+                    row.push("-".into());
+                    series.push(Json::Null);
+                }
+            }
+        }
+        rows.push(row);
+        report.push(Json::obj(vec![
+            ("method", Json::str(&agg.method)),
+            ("accept_rate_by_depth", Json::Arr(series)),
+            ("tau", Json::num(agg.tau)),
+        ]));
+    }
+    println!("\n=== Fig. 3 (acceptance rate by draft depth, dialog, T=0) ===");
+    println!("{}", render_table(&headers, &rows));
+    let path = write_report("fig3", &Json::Arr(report))?;
+    println!("report -> {path:?}");
+    Ok(())
+}

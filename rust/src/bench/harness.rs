@@ -1,0 +1,186 @@
+//! Shared benchmark harness: run one (target, drafter, task, temp)
+//! configuration over a prompt set, aggregate metrics, compute speedups
+//! against the vanilla baseline, and render paper-style tables.
+//!
+//! criterion is unavailable offline (DESIGN.md §Substitutions), so the
+//! `cargo bench` targets are thin `harness = false` binaries over this
+//! module; results are also written as JSON under `bench_out/`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::draft::make_drafter;
+use crate::model::TargetModel;
+use crate::runtime::{ArtifactStore, Runtime};
+use crate::spec::{Engine, GenConfig, GenMetrics};
+use crate::util::json::Json;
+
+pub struct BenchEnv {
+    pub runtime: Arc<Runtime>,
+    pub artifacts: PathBuf,
+    pub quick: bool,
+    stores: std::cell::RefCell<BTreeMap<String, Rc<ArtifactStore>>>,
+}
+
+impl BenchEnv {
+    /// `None` when artifacts are missing (benches skip gracefully).
+    pub fn open(quick: bool) -> Result<Option<BenchEnv>> {
+        let artifacts = artifacts_root();
+        if !artifacts.join("manifest.json").exists() {
+            return Ok(None);
+        }
+        Ok(Some(BenchEnv {
+            runtime: Arc::new(Runtime::cpu()?),
+            artifacts,
+            quick,
+            stores: Default::default(),
+        }))
+    }
+
+    pub fn store(&self, target: &str) -> Result<Rc<ArtifactStore>> {
+        if let Some(s) = self.stores.borrow().get(target) {
+            return Ok(Rc::clone(s));
+        }
+        let s = Rc::new(ArtifactStore::open(
+            Arc::clone(&self.runtime),
+            self.artifacts.join(target),
+        )?);
+        self.stores.borrow_mut().insert(target.to_string(), Rc::clone(&s));
+        Ok(s)
+    }
+
+    pub fn targets(&self) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(self.artifacts.join("manifest.json"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(v.get("targets")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|t| t.as_str().map(String::from)).collect())
+            .unwrap_or_default())
+    }
+
+    pub fn prompts(&self, task: &str, n: usize) -> Result<Vec<String>> {
+        let all = crate::workload::load_prompts(&self.artifacts, task)?;
+        Ok(all.into_iter().take(n).collect())
+    }
+
+    /// prompts per config / tokens per generation for this run size
+    pub fn scale(&self) -> (usize, usize) {
+        if self.quick {
+            (2, 32)
+        } else {
+            (6, 64)
+        }
+    }
+}
+
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("FE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[derive(Debug, Clone)]
+pub struct MethodAgg {
+    pub method: String,
+    pub tok_per_sec: f64,
+    pub tau: f64,
+    pub metrics: GenMetrics,
+}
+
+/// Run one method over a prompt set on the single-request engine.
+/// The first prompt is run twice: the extra pass warms the lazy
+/// executable compilation out of the measurement.
+pub fn run_method(
+    env: &BenchEnv,
+    target: &str,
+    drafter: &str,
+    prompts: &[String],
+    cfg: &GenConfig,
+) -> Result<MethodAgg> {
+    let store = env.store(target)?;
+    let tm = TargetModel::open(Rc::clone(&store))?;
+    let dr = make_drafter(Rc::clone(&store), drafter)?;
+    let mut engine = Engine::new(tm, dr);
+    // Warmup must touch every executable the measured runs will use
+    // (chunked observes hit fe_t1/fe_t8/fe_t32 depending on per-cycle
+    // acceptance), or a lazy ~2s PJRT compile lands inside the
+    // measurement. Two full-length warm generations cover the space.
+    let mut warm_cfg = cfg.clone();
+    warm_cfg.max_new_tokens = cfg.max_new_tokens.min(32);
+    engine.generate(&prompts[0], &warm_cfg).context("warmup")?;
+    warm_cfg.seed ^= 0x5eed;
+    engine
+        .generate(prompts.last().unwrap(), &warm_cfg)
+        .context("warmup2")?;
+    let mut agg = GenMetrics::default();
+    for (i, p) in prompts.iter().enumerate() {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed.wrapping_add(i as u64);
+        let r = engine.generate(p, &c)?;
+        agg.merge(&r.metrics);
+    }
+    Ok(MethodAgg {
+        method: drafter.to_string(),
+        tok_per_sec: agg.tokens_per_sec(),
+        tau: agg.tau(),
+        metrics: agg,
+    })
+}
+
+/// Write a JSON report under bench_out/.
+pub fn write_report(name: &str, value: &Json) -> Result<PathBuf> {
+    let dir = Path::new("bench_out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, value.to_string())?;
+    Ok(path)
+}
+
+/// Render an aligned text table.
+pub fn render_table(headers: &[String], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let mut out = String::new();
+    out.push_str(&line(headers));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["a".into(), "col".into()],
+            &[vec!["1".into(), "2.00x".into()], vec!["22".into(), "3".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[2].ends_with("2.00x"));
+    }
+}

@@ -1,0 +1,154 @@
+//! Microbenchmarks: per-executable latency for the building blocks of a
+//! cycle (verify at each M, drafter calls). These are the numbers the
+//! §Perf analysis in EXPERIMENTS.md is built from: FastEagle's win is
+//! 1 drafter call/cycle vs EAGLE's N, and this shows the per-call cost.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::draft::{make_drafter, ObserveArgs};
+use crate::model::{MaskRow, TargetModel};
+use crate::spec::Sampler;
+use crate::util::json::Json;
+use crate::util::stats::summarize;
+
+use super::harness::{render_table, write_report, BenchEnv};
+
+const TARGET: &str = "base";
+
+fn time_loop(mut f: impl FnMut() -> Result<()>, iters: usize) -> Result<Vec<f64>> {
+    // warmup (compiles)
+    f()?;
+    f()?;
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f()?;
+        out.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(out)
+}
+
+pub fn run(env: &BenchEnv) -> Result<()> {
+    let iters = if env.quick { 10 } else { 40 };
+    let store = env.store(TARGET)?;
+    let tm = TargetModel::open(Rc::clone(&store))?;
+    let spec = tm.spec.clone();
+    let mut rows = Vec::new();
+    let mut report = Vec::new();
+
+    // target verify at each lowered M
+    for &m in &spec.verify_ms {
+        let mut kv = tm.new_kv()?;
+        // small prefix
+        let prompt: Vec<i32> = (0..32).map(|i| (65 + (i % 26)) as i32).collect();
+        tm.prefill(&mut kv, &prompt)?;
+        let base_len = kv.len(0);
+        let tokens: Vec<i32> = (0..m).map(|i| (97 + (i % 26)) as i32).collect();
+        let positions: Vec<i32> = (0..m).map(|i| (base_len + i) as i32).collect();
+        let rows_m: Vec<MaskRow> = (0..m)
+            .map(|i| MaskRow {
+                prefix_upto: base_len,
+                extra: (0..=i).map(|j| base_len + j).collect(),
+            })
+            .collect();
+        let samples = time_loop(
+            || {
+                let mut kv2 = kv.clone();
+                tm.step(&mut kv2, &tokens, &positions, &rows_m)?;
+                Ok(())
+            },
+            iters,
+        )?;
+        let s = summarize(&samples);
+        rows.push(vec![
+            format!("tgt_m{m}"),
+            format!("{:.2}", s.mean),
+            format!("{:.2}", s.p50),
+            format!("{:.2}", s.p99),
+        ]);
+        report.push(Json::obj(vec![
+            ("exec", Json::str(&format!("tgt_m{m}"))),
+            ("mean_ms", Json::num(s.mean)),
+            ("p50_ms", Json::num(s.p50)),
+        ]));
+    }
+
+    // drafter cycle cost: observe(1 anchor) + draft
+    for dn in ["fasteagle", "eagle3", "medusa", "sps"] {
+        if !env
+            .artifacts
+            .join(TARGET)
+            .join("weights")
+            .join(format!("{dn}.few"))
+            .exists()
+        {
+            continue;
+        }
+        let mut dr = make_drafter(Rc::clone(&store), dn)?;
+        dr.reset()?;
+        let fd = spec.feat_dim;
+        let feats = vec![0.1f32; fd * 4];
+        let anchors = vec![65i32, 66, 67, 68];
+        let nexts = vec![66i32, 67, 68, 69];
+        dr.observe(ObserveArgs {
+            feats: &feats,
+            anchor_tokens: &anchors,
+            next_tokens: &nexts,
+            first_pos: 0,
+        })?;
+        let mut pos = 4usize;
+        let mut sampler = Sampler::new(0.0, 1);
+        let samples = time_loop(
+            || {
+                // one cycle's drafter work: observe(2 anchors) + draft
+                let f2 = vec![0.1f32; fd * 2];
+                dr.observe(ObserveArgs {
+                    feats: &f2,
+                    anchor_tokens: &[70, 71],
+                    next_tokens: &[71, 72],
+                    first_pos: pos,
+                })?;
+                pos += 2;
+                if pos > spec.max_seq - 16 {
+                    dr.reset()?;
+                    pos = 0;
+                    dr.observe(ObserveArgs {
+                        feats: &feats,
+                        anchor_tokens: &anchors,
+                        next_tokens: &nexts,
+                        first_pos: 0,
+                    })?;
+                    pos = 4;
+                }
+                let out = dr.draft(72, pos - 1, 0.0)?;
+                let _ = &out;
+                let _ = sampler.coin();
+                Ok(())
+            },
+            iters,
+        )?;
+        let s = summarize(&samples);
+        rows.push(vec![
+            format!("draft[{dn}]"),
+            format!("{:.2}", s.mean),
+            format!("{:.2}", s.p50),
+            format!("{:.2}", s.p99),
+        ]);
+        report.push(Json::obj(vec![
+            ("exec", Json::str(&format!("draft[{dn}]"))),
+            ("mean_ms", Json::num(s.mean)),
+            ("p50_ms", Json::num(s.p50)),
+        ]));
+    }
+
+    println!("\n=== Microbench (per-call latency, ms) ===");
+    let headers: Vec<String> =
+        ["op", "mean", "p50", "p99"].iter().map(|s| s.to_string()).collect();
+    println!("{}", render_table(&headers, &rows));
+    let path = write_report("microbench", &Json::Arr(report))?;
+    println!("report -> {path:?}");
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Benchmark harnesses regenerating every table and figure in the
+//! paper's evaluation section (see DESIGN.md §Experiment-index):
+//! `table1` (main speedup/τ matrix), `table2` (ablations), `table3`
+//! (batched throughput in the continuous batcher), `fig3` (per-depth
+//! acceptance), plus `microbench` (per-executable latency).
+//!
+//! Invoked both by `fasteagle bench <name>` and by the `cargo bench`
+//! targets in `rust/benches/`.
+
+pub mod depth;
+pub mod fig3;
+pub mod harness;
+pub mod microbench;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+pub use harness::BenchEnv;
+
+use anyhow::Result;
+
+pub fn run_named(name: &str, quick: bool) -> Result<()> {
+    let Some(env) = BenchEnv::open(quick)? else {
+        println!("bench {name}: artifacts/ missing — run `make artifacts` first; skipping");
+        return Ok(());
+    };
+    match name {
+        "table1" => table1::run(&env),
+        "table2" => table2::run(&env),
+        "table3" => table3::run(&env),
+        "fig3" => fig3::run(&env),
+        "microbench" => microbench::run(&env),
+        "depth" => depth::run(&env),
+        "all" => {
+            table1::run(&env)?;
+            table2::run(&env)?;
+            table3::run(&env)?;
+            fig3::run(&env)?;
+            depth::run(&env)?;
+            microbench::run(&env)
+        }
+        other => anyhow::bail!("unknown bench {other:?}"),
+    }
+}

@@ -1,0 +1,114 @@
+//! Table 1 — speedup ratio + average acceptance length τ for every
+//! (target, method, task, temperature) cell, mirroring the paper's main
+//! result. Methods SpS and Medusa only appear for the Vicuna-13B
+//! stand-in ("base"), exactly as in the paper; speedups are normalized
+//! against vanilla autoregressive decoding measured on the same testbed,
+//! task and temperature.
+
+use anyhow::Result;
+
+use crate::spec::GenConfig;
+use crate::util::json::Json;
+use crate::workload::{paper_name, TASKS};
+
+use super::harness::{render_table, run_method, write_report, BenchEnv};
+
+fn methods_for(target: &str) -> Vec<&'static str> {
+    if target == "base" {
+        vec!["sps", "medusa", "eagle3", "fasteagle"]
+    } else {
+        vec!["eagle3", "fasteagle"]
+    }
+}
+
+pub fn run(env: &BenchEnv) -> Result<()> {
+    let (n_prompts, max_new) = env.scale();
+    let temps = [0.0f32, 1.0f32];
+    let targets = env.targets()?;
+    let mut report = Vec::new();
+
+    for &temp in &temps {
+        println!("\n=== Table 1 (Temperature={temp}) ===");
+        let headers: Vec<String> = std::iter::once("model/method".to_string())
+            .chain(TASKS.iter().flat_map(|(t, _)| {
+                [format!("{}⟂spd", paper_name(t)), "τ".to_string()]
+            }))
+            .chain(["mean spd".to_string(), "mean τ".to_string()])
+            .collect();
+        let headers: Vec<String> =
+            headers.into_iter().map(|h| h.replace('⟂', " ")).collect();
+        let mut rows = Vec::new();
+        for target in &targets {
+            // vanilla baseline per task
+            let mut base_tps = Vec::new();
+            for (task, _) in TASKS.iter() {
+                let prompts = env.prompts(task, n_prompts)?;
+                let cfg = GenConfig {
+                    temperature: temp,
+                    max_new_tokens: max_new,
+                    ..Default::default()
+                };
+                let agg = run_method(env, target, "vanilla", &prompts, &cfg)?;
+                base_tps.push(agg.tok_per_sec);
+            }
+            // methods that exist for this target (weight sets on disk)
+            for method in methods_for(target) {
+                if !env
+                    .artifacts
+                    .join(target)
+                    .join("weights")
+                    .join(format!("{method}.few"))
+                    .exists()
+                {
+                    continue;
+                }
+                // Methods that relax acceptance (Medusa) are greedy-only
+                // in the paper; SpS appears in both temp sections.
+                if temp > 0.0 && method == "medusa" {
+                    continue;
+                }
+                let mut row = vec![format!("{target}/{method}")];
+                let mut spd_sum = 0.0;
+                let mut tau_sum = 0.0;
+                let mut cells = Vec::new();
+                for (i, (task, _)) in TASKS.iter().enumerate() {
+                    let prompts = env.prompts(task, n_prompts)?;
+                    let cfg = GenConfig {
+                        temperature: temp,
+                        max_new_tokens: max_new,
+                        ..Default::default()
+                    };
+                    let agg = run_method(env, target, method, &prompts, &cfg)?;
+                    let spd = agg.tok_per_sec / base_tps[i].max(1e-9);
+                    spd_sum += spd;
+                    tau_sum += agg.tau;
+                    row.push(format!("{spd:.2}x"));
+                    row.push(format!("{:.2}", agg.tau));
+                    cells.push(Json::obj(vec![
+                        ("task", Json::str(task)),
+                        ("speedup", Json::num(spd)),
+                        ("tau", Json::num(agg.tau)),
+                        ("tok_per_sec", Json::num(agg.tok_per_sec)),
+                        ("baseline_tok_per_sec", Json::num(base_tps[i])),
+                    ]));
+                }
+                let n = TASKS.len() as f64;
+                row.push(format!("{:.2}x", spd_sum / n));
+                row.push(format!("{:.2}", tau_sum / n));
+                rows.push(row);
+                report.push(Json::obj(vec![
+                    ("target", Json::str(target)),
+                    ("method", Json::str(method)),
+                    ("temperature", Json::num(temp as f64)),
+                    ("mean_speedup", Json::num(spd_sum / n)),
+                    ("mean_tau", Json::num(tau_sum / n)),
+                    ("cells", Json::Arr(cells)),
+                ]));
+            }
+        }
+        println!("{}", render_table(&headers, &rows));
+    }
+    let path = write_report("table1", &Json::Arr(report))?;
+    println!("report -> {path:?}");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Table 2 — component ablations on the "base" target at T=0:
+//!   Full            = fasteagle weights, constrained tree
+//!   w/o Constrained Tree = fasteagle weights, chain (k=1)
+//!   w/o Cascaded Structure = fasteagle_par weights (parallel heads)
+//!   w/o Feature Loss = fasteagle_nofeat weights (CE-only training)
+//! Tasks: dialog (MT-Bench stand-in) and math (GSM8K stand-in), as in
+//! the paper.
+
+use anyhow::Result;
+
+use crate::spec::GenConfig;
+use crate::util::json::Json;
+use crate::workload::paper_name;
+
+use super::harness::{render_table, run_method, write_report, BenchEnv};
+
+const TARGET: &str = "base";
+const TASKS2: [&str; 2] = ["dialog", "math"];
+
+pub fn run(env: &BenchEnv) -> Result<()> {
+    let (n_prompts, max_new) = env.scale();
+    let variants: [(&str, &str, bool); 4] = [
+        ("Our Method (Full)", "fasteagle", true),
+        ("w/o Constrained Tree", "fasteagle", false),
+        ("w/o Cascaded Structure", "fasteagle_par", true),
+        ("w/o Feature Loss", "fasteagle_nofeat", true),
+    ];
+    let mut base_tps = Vec::new();
+    for task in TASKS2 {
+        let prompts = env.prompts(task, n_prompts)?;
+        let cfg = GenConfig { max_new_tokens: max_new, ..Default::default() };
+        base_tps.push(run_method(env, TARGET, "vanilla", &prompts, &cfg)?.tok_per_sec);
+    }
+    let headers: Vec<String> = std::iter::once("Method".to_string())
+        .chain(TASKS2.iter().flat_map(|t| {
+            [format!("{} spd", paper_name(t)), "τ".to_string()]
+        }))
+        .collect();
+    let mut rows = Vec::new();
+    let mut report = Vec::new();
+    for (label, wset, use_tree) in variants {
+        let mut row = vec![label.to_string()];
+        let mut cells = Vec::new();
+        for (i, task) in TASKS2.iter().enumerate() {
+            let prompts = env.prompts(task, n_prompts)?;
+            let cfg = GenConfig {
+                max_new_tokens: max_new,
+                use_tree,
+                ..Default::default()
+            };
+            let agg = run_method(env, TARGET, wset, &prompts, &cfg)?;
+            let spd = agg.tok_per_sec / base_tps[i].max(1e-9);
+            row.push(format!("{spd:.2}x"));
+            row.push(format!("{:.2}", agg.tau));
+            cells.push(Json::obj(vec![
+                ("task", Json::str(task)),
+                ("speedup", Json::num(spd)),
+                ("tau", Json::num(agg.tau)),
+            ]));
+        }
+        rows.push(row);
+        report.push(Json::obj(vec![
+            ("variant", Json::str(label)),
+            ("cells", Json::Arr(cells)),
+        ]));
+    }
+    println!("\n=== Table 2 (ablations, {TARGET}, T=0) ===");
+    println!("{}", render_table(&headers, &rows));
+    let path = write_report("table2", &Json::Arr(report))?;
+    println!("report -> {path:?}");
+    Ok(())
+}

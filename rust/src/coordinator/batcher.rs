@@ -1,0 +1,675 @@
+//! Continuous-batching engine over the batched (`*_b{B}`) executables —
+//! the vLLM-style serving path behind the paper's Table 3 study
+//! (throughput vs batch size, chain length 2, tree disabled).
+//!
+//! Design mirrors vLLM's loop at miniature scale:
+//! * **Admission lane**: new requests prefill on the B=1 executables,
+//!   then their KV/drafter state is copied into a free slot of the
+//!   batched state tensors.
+//! * **Decode loop**: one batched draft (method-specific) + one batched
+//!   verification per iteration; per-slot lossless acceptance and KV
+//!   compaction on the host.
+//! * **Paged admission control**: every request leases KV blocks for the
+//!   target's L layers plus its drafter's KV layers (FastEagle N=6 vs
+//!   EAGLE 1 vs vanilla 0). When the pool can't cover a request it waits
+//!   in the queue — this is the memory-pressure mechanism that caps
+//!   FastEagle's batched throughput in Table 3.
+
+use std::collections::VecDeque;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::draft::{Drafter, EagleDrafter, FastEagleDrafter, ObserveArgs};
+use crate::model::{BlockPool, KvCache, Lease, MaskRow, ModelSpec, TargetModel, Tokenizer, NEG};
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::ArtifactStore;
+use crate::spec::{verify_tree, DraftTree, Sampler};
+
+use super::metrics::ServingMetrics;
+use super::request::{Request, Response};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMethod {
+    Vanilla,
+    FastEagle,
+    Eagle3,
+}
+
+impl BatchMethod {
+    pub fn drafter_kv_layers(self, spec: &ModelSpec) -> usize {
+        match self {
+            BatchMethod::Vanilla => 0,
+            BatchMethod::FastEagle => spec.draft_depth,
+            BatchMethod::Eagle3 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BatchMethod::Vanilla => "vanilla",
+            BatchMethod::FastEagle => "fasteagle",
+            BatchMethod::Eagle3 => "eagle3",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    pub batch: usize,
+    pub method: BatchMethod,
+    /// draft chain length per cycle (Table 3: 2)
+    pub chain_len: usize,
+    pub temperature: f32,
+    /// KV block pool (admission control); `None` = unbounded
+    pub pool_blocks: Option<usize>,
+    pub block_slots: usize,
+}
+
+impl BatchConfig {
+    pub fn new(batch: usize, method: BatchMethod) -> BatchConfig {
+        BatchConfig {
+            batch,
+            method,
+            chain_len: 2,
+            temperature: 0.0,
+            pool_blocks: None,
+            block_slots: 16,
+        }
+    }
+}
+
+struct Slot {
+    req: Request,
+    sampler: Sampler,
+    pending: i32,
+    out: Vec<i32>,
+    cycles: usize,
+    tau_sum: usize,
+    lease: Lease,
+    // FastEagle per-slot draft state: [N, V] logits from the cascade
+    fe_logits: Vec<f32>,
+    // EAGLE per-slot draft state
+    eg_h: Vec<f32>,
+    eg_q1: Vec<f32>,
+}
+
+pub struct BatchEngine {
+    store: Rc<ArtifactStore>,
+    pub spec: ModelSpec,
+    cfg: BatchConfig,
+    tokenizer: Tokenizer,
+    kv: KvCache,
+    dkv: Option<KvCache>, // FE: [N,2,B,C,..]; EAGLE: [2,B,C,..]
+    slots: Vec<Option<Slot>>,
+    pool: BlockPool,
+}
+
+/// Batched additive mask [B, T, S] from per-slot row descriptors.
+fn build_mask_b(bsz: usize, t: usize, s: usize, rows: &[Vec<MaskRow>]) -> HostTensor {
+    let mut data = vec![NEG; bsz * t * s];
+    for (b, slot_rows) in rows.iter().enumerate() {
+        for i in 0..t {
+            let base = (b * t + i) * s;
+            match slot_rows.get(i) {
+                Some(r) => {
+                    let upto = r.prefix_upto.min(s);
+                    for v in &mut data[base..base + upto] {
+                        *v = 0.0;
+                    }
+                    for &e in &r.extra {
+                        if e < s {
+                            data[base + e] = 0.0;
+                        }
+                    }
+                }
+                None => data[base] = 0.0, // pad row
+            }
+        }
+    }
+    HostTensor::f32(vec![bsz, t, s], data)
+}
+
+impl BatchEngine {
+    pub fn new(store: Rc<ArtifactStore>, cfg: BatchConfig) -> Result<BatchEngine> {
+        let spec = ModelSpec::parse(&store.spec_json()?)?;
+        if cfg.batch > 1 && !spec.batch_sizes.contains(&cfg.batch) {
+            bail!(
+                "target {:?} has no batch-{} executables (lowered: {:?})",
+                spec.name, cfg.batch, spec.batch_sizes
+            );
+        }
+        let b = cfg.batch;
+        let kv = KvCache::zeros(vec![
+            spec.n_layers, 2, b, spec.max_seq, spec.n_kv_heads, spec.head_dim,
+        ])?;
+        let dkv = match cfg.method {
+            BatchMethod::Vanilla => None,
+            BatchMethod::FastEagle => Some(KvCache::zeros(vec![
+                spec.draft_depth, 2, b, spec.max_seq, spec.n_kv_heads, spec.head_dim,
+            ])?),
+            BatchMethod::Eagle3 => Some(KvCache::zeros(vec![
+                2, b, spec.max_seq, spec.n_kv_heads, spec.head_dim,
+            ])?),
+        };
+        let tokenizer = Tokenizer::new(spec.bos, spec.eos, spec.pad);
+        let pool_blocks = cfg.pool_blocks.unwrap_or(usize::MAX / 4);
+        let pool = BlockPool::new(pool_blocks, cfg.block_slots);
+        let slots = (0..b).map(|_| None).collect();
+        Ok(BatchEngine { store, spec, cfg, tokenizer, kv, dkv, slots, pool })
+    }
+
+    fn exec_suffix(&self) -> String {
+        if self.cfg.batch == 1 {
+            String::new()
+        } else {
+            format!("_b{}", self.cfg.batch)
+        }
+    }
+
+    /// Request cost in pool blocks (target + drafter KV layers).
+    fn request_blocks(&self) -> usize {
+        let drafter_layers = self.cfg.method.drafter_kv_layers(&self.spec);
+        self.pool
+            .blocks_for(self.spec.max_seq, self.spec.n_layers + drafter_layers)
+    }
+
+    /// Prefill one request on the B=1 lane and move its state into slot
+    /// `slot_idx`.
+    fn admit(&mut self, slot_idx: usize, req: Request, lease: Lease) -> Result<()> {
+        let target = TargetModel::open(Rc::clone(&self.store))?;
+        let mut kv1 = target.new_kv()?;
+        let mut ptoks = self.tokenizer.encode_prompt(&req.prompt);
+        let budget = self
+            .spec
+            .max_seq
+            .saturating_sub(req.cfg.max_new_tokens + self.cfg.chain_len + 3);
+        if ptoks.len() > budget {
+            ptoks = ptoks[ptoks.len() - budget..].to_vec();
+        }
+        let pre = target.prefill(&mut kv1, &ptoks)?;
+        let mut sampler = Sampler::new(self.cfg.temperature, req.cfg.seed ^ req.id);
+        let d0 = sampler.dist_from_logits(&pre.last_logits);
+        let pending = sampler.sample(&d0);
+        let mut next: Vec<i32> = ptoks[1..].to_vec();
+        next.push(pending);
+
+        let mut slot = Slot {
+            req,
+            sampler,
+            pending,
+            out: Vec::new(),
+            cycles: 0,
+            tau_sum: 0,
+            lease,
+            fe_logits: Vec::new(),
+            eg_h: Vec::new(),
+            eg_q1: Vec::new(),
+        };
+        self.kv.copy_request_from(slot_idx, &kv1)?;
+        match self.cfg.method {
+            BatchMethod::Vanilla => {}
+            BatchMethod::FastEagle => {
+                let mut d =
+                    FastEagleDrafter::new(Rc::clone(&self.store), "fasteagle", "fe")?;
+                d.observe(ObserveArgs {
+                    feats: &pre.feats,
+                    anchor_tokens: &ptoks,
+                    next_tokens: &next,
+                    first_pos: 0,
+                })?;
+                let (dkv1, logits) = d.state();
+                self.dkv.as_mut().unwrap().copy_request_from(slot_idx, dkv1)?;
+                slot.fe_logits = logits.to_vec();
+            }
+            BatchMethod::Eagle3 => {
+                let mut d = EagleDrafter::new(Rc::clone(&self.store), "eagle3", true)?;
+                d.observe(ObserveArgs {
+                    feats: &pre.feats,
+                    anchor_tokens: &ptoks,
+                    next_tokens: &next,
+                    first_pos: 0,
+                })?;
+                let (ekv1, h, q1) = d.state();
+                self.dkv.as_mut().unwrap().copy_request_from(slot_idx, ekv1)?;
+                slot.eg_h = h.to_vec();
+                slot.eg_q1 = q1.to_vec();
+            }
+        }
+        self.slots[slot_idx] = Some(slot);
+        Ok(())
+    }
+
+    /// Draft a depth-`chain_len` backbone chain per active slot.
+    /// Returns per-slot (tokens, dists).
+    fn draft_chains(&mut self) -> Result<Vec<Option<(Vec<i32>, Vec<Vec<f32>>)>>> {
+        let bsz = self.cfg.batch;
+        let (v, d, c) = (self.spec.vocab, self.spec.d_model, self.spec.max_seq);
+        let depth = self.cfg.chain_len;
+        let temp = self.cfg.temperature;
+        let mut out: Vec<Option<(Vec<i32>, Vec<Vec<f32>>)>> = (0..bsz).map(|_| None).collect();
+        match self.cfg.method {
+            BatchMethod::Vanilla => {}
+            BatchMethod::FastEagle => {
+                // the cascade already produced all N levels during observe
+                for (b, s) in self.slots.iter_mut().enumerate() {
+                    let Some(slot) = s else { continue };
+                    let mut toks = Vec::with_capacity(depth);
+                    let mut dists = Vec::with_capacity(depth);
+                    for lvl in 0..depth.min(self.spec.draft_depth) {
+                        let mut q = slot.fe_logits[lvl * v..(lvl + 1) * v].to_vec();
+                        crate::util::rng::softmax_temp(&mut q, temp);
+                        // chain links are q-samples at T>0 (losslessness)
+                        toks.push(slot.sampler.sample(&q));
+                        dists.push(q);
+                    }
+                    out[b] = Some((toks, dists));
+                }
+            }
+            BatchMethod::Eagle3 => {
+                // level 1 from observe; levels 2.. via batched eg_next
+                let mut hs: Vec<Vec<f32>> = Vec::with_capacity(bsz);
+                for (b, s) in self.slots.iter_mut().enumerate() {
+                    if let Some(slot) = s {
+                        let mut q = slot.eg_q1.clone();
+                        crate::util::rng::softmax_temp(&mut q, temp);
+                        let tok = slot.sampler.sample(&q);
+                        out[b] = Some((vec![tok], vec![q]));
+                        hs.push(slot.eg_h.clone());
+                    } else {
+                        hs.push(vec![0.0; d]);
+                    }
+                }
+                let exec = self
+                    .store
+                    .bind(&format!("eg_next_t1{}", self.exec_suffix()), "eagle3")?;
+                let mut ekv_tmp = self.dkv.as_ref().unwrap().clone();
+                for step in 1..depth {
+                    let mut feat = vec![0.0f32; bsz * d];
+                    let mut toks = vec![self.spec.pad; bsz];
+                    let mut pos = vec![0i32; bsz];
+                    let mut ctx = vec![0i32; bsz];
+                    let mut rows: Vec<Vec<MaskRow>> = vec![vec![]; bsz];
+                    for b in 0..bsz {
+                        if let Some((t, _)) = &out[b] {
+                            feat[b * d..(b + 1) * d].copy_from_slice(&hs[b]);
+                            toks[b] = t[step - 1];
+                            let base = ekv_tmp.len(b);
+                            pos[b] = ((base + step) as i32).min(c as i32 - 1);
+                            ctx[b] = (base + step - 1) as i32;
+                            rows[b] =
+                                vec![MaskRow { prefix_upto: base + step, extra: vec![] }];
+                        }
+                    }
+                    let mask = build_mask_b(bsz, 1, c, &rows);
+                    let feat_t = HostTensor::f32(vec![bsz, 1, d], feat);
+                    let tok_t = HostTensor::i32(vec![bsz, 1], toks);
+                    let pos_t = HostTensor::i32(vec![bsz, 1], pos);
+                    let ctx_t = HostTensor::i32(vec![bsz], ctx);
+                    let outs = exec.call(
+                        &self.store.runtime,
+                        &[
+                            ("feat_in", &feat_t),
+                            ("tokens", &tok_t),
+                            ("anchor_pos", &pos_t),
+                            ("mask", &mask),
+                            ("ctx_len", &ctx_t),
+                            ("ekv", ekv_tmp.tensor()),
+                        ],
+                    )?;
+                    let l = outs[exec.out_idx("logits")?].as_f32()?.to_vec();
+                    let hvec = outs[exec.out_idx("h")?].as_f32()?.to_vec();
+                    let ki = exec.out_idx("ekv")?;
+                    let mut outs = outs;
+                    ekv_tmp.update_from(outs.swap_remove(ki))?;
+                    for b in 0..bsz {
+                        if let Some((t, dd)) = &mut out[b] {
+                            let mut q = l[b * v..(b + 1) * v].to_vec();
+                            crate::util::rng::softmax_temp(&mut q, temp);
+                            let tok = self.slots[b].as_mut().unwrap().sampler.sample(&q);
+                            t.push(tok);
+                            dd.push(q);
+                            hs[b].copy_from_slice(&hvec[b * d..(b + 1) * d]);
+                        }
+                    }
+                }
+                // ekv_tmp dropped: temp entries rolled back
+            }
+        }
+        Ok(out)
+    }
+
+    /// One batched decode iteration over all active slots. Returns
+    /// finished responses.
+    fn decode_iteration(&mut self) -> Result<Vec<Response>> {
+        let bsz = self.cfg.batch;
+        let (v, fd, s) = (self.spec.vocab, self.spec.feat_dim, self.spec.max_seq);
+        let m = match self.cfg.method {
+            BatchMethod::Vanilla => 1,
+            _ => 1 + self.cfg.chain_len,
+        };
+        let chains = self.draft_chains()?;
+        // assemble per-slot trees
+        let mut trees: Vec<Option<DraftTree>> = (0..bsz).map(|_| None).collect();
+        for b in 0..bsz {
+            let Some(slot) = &self.slots[b] else { continue };
+            let tree = match (&chains[b], self.cfg.method) {
+                (_, BatchMethod::Vanilla) => DraftTree::root_only(slot.pending),
+                (Some((toks, dists)), _) => {
+                    DraftTree::chain(slot.pending, toks, dists.clone())
+                }
+                (None, _) => DraftTree::root_only(slot.pending),
+            };
+            trees[b] = Some(tree);
+        }
+        // batched verify
+        let mut tokens = vec![self.spec.pad; bsz * m];
+        let mut pos = vec![0i32; bsz * m];
+        let mut ctx = vec![0i32; bsz];
+        let mut rows: Vec<Vec<MaskRow>> = vec![vec![]; bsz];
+        for b in 0..bsz {
+            let Some(tree) = &trees[b] else { continue };
+            let base = self.kv.len(b);
+            ctx[b] = base as i32;
+            for (i, node) in tree.nodes.iter().enumerate() {
+                tokens[b * m + i] = node.token;
+                pos[b * m + i] = ((base + node.depth) as i32).min(s as i32 - 1);
+            }
+            rows[b] = (0..tree.len())
+                .map(|i| MaskRow {
+                    prefix_upto: base,
+                    extra: tree.ancestors(i).iter().map(|&a| base + a).collect(),
+                })
+                .collect();
+        }
+        let mask = build_mask_b(bsz, m, s, &rows);
+        let exec = self
+            .store
+            .bind(&format!("tgt_m{m}{}", self.exec_suffix()), "target")?;
+        let tok_t = HostTensor::i32(vec![bsz, m], tokens);
+        let pos_t = HostTensor::i32(vec![bsz, m], pos);
+        let ctx_t = HostTensor::i32(vec![bsz], ctx);
+        let outs = exec.call(
+            &self.store.runtime,
+            &[
+                ("tokens", &tok_t),
+                ("positions", &pos_t),
+                ("mask", &mask),
+                ("cache_len", &ctx_t),
+                ("kv", self.kv.tensor()),
+            ],
+        )?;
+        let logits = outs[exec.out_idx("logits")?].as_f32()?.to_vec();
+        let feats = outs[exec.out_idx("feats")?].as_f32()?.to_vec();
+        let ki = exec.out_idx("kv")?;
+        let mut outs = outs;
+        self.kv.update_from(outs.swap_remove(ki))?;
+
+        // per-slot acceptance + commit
+        let mut observe_feats: Vec<Vec<f32>> = vec![vec![]; bsz];
+        let mut observe_anchor: Vec<Vec<i32>> = vec![vec![]; bsz];
+        let mut observe_next: Vec<Vec<i32>> = vec![vec![]; bsz];
+        let mut observe_first: Vec<usize> = vec![0; bsz];
+        let mut finished = Vec::new();
+        for b in 0..bsz {
+            let Some(tree) = &trees[b] else { continue };
+            let base = self.kv.len(b);
+            let slot = self.slots[b].as_mut().unwrap();
+            let target_dists: Vec<Vec<f32>> = (0..tree.len())
+                .map(|i| {
+                    slot.sampler
+                        .dist_from_logits(&logits[(b * m + i) * v..(b * m + i + 1) * v])
+                })
+                .collect();
+            let acc = verify_tree(tree, &target_dists, &mut slot.sampler);
+            self.kv.compact(b, base, &acc.accepted_slots)?;
+            slot.cycles += 1;
+            slot.tau_sum += acc.accepted_slots.len();
+            let acc_tokens: Vec<i32> = acc
+                .accepted_slots
+                .iter()
+                .map(|&sl| tree.nodes[sl].token)
+                .collect();
+            let mut f = Vec::with_capacity(acc.accepted_slots.len() * fd);
+            for &sl in &acc.accepted_slots {
+                f.extend_from_slice(&feats[(b * m + sl) * fd..(b * m + sl + 1) * fd]);
+            }
+            let mut next: Vec<i32> = acc_tokens[1..].to_vec();
+            next.push(acc.bonus);
+            observe_feats[b] = f;
+            observe_anchor[b] = acc_tokens.clone();
+            observe_next[b] = next;
+            observe_first[b] = base;
+            slot.pending = acc.bonus;
+            slot.out.extend_from_slice(&acc_tokens);
+        }
+
+        // batched drafter observe over the newly committed anchors
+        self.batched_observe(&observe_feats, &observe_next, &observe_first)?;
+
+        // retire finished slots
+        for b in 0..bsz {
+            let done = match &self.slots[b] {
+                Some(slot) => {
+                    slot.out.len() >= slot.req.cfg.max_new_tokens
+                        || self.kv.len(b) + m + 2 > s
+                }
+                None => false,
+            };
+            if done {
+                let mut slot = self.slots[b].take().unwrap();
+                self.pool.release(&mut slot.lease);
+                self.kv.set_len(b, 0);
+                if let Some(dkv) = self.dkv.as_mut() {
+                    dkv.set_len(b, 0);
+                }
+                slot.out.truncate(slot.req.cfg.max_new_tokens);
+                finished.push(Response {
+                    id: slot.req.id,
+                    text: self.tokenizer.decode(&slot.out),
+                    new_tokens: slot.out.len(),
+                    tau: if slot.cycles > 0 {
+                        slot.tau_sum as f64 / slot.cycles as f64
+                    } else {
+                        0.0
+                    },
+                    cycles: slot.cycles,
+                    latency_ms: slot.req.arrival.elapsed().as_secs_f64() * 1e3,
+                    gen_ms: 0.0,
+                    error: None,
+                });
+            }
+        }
+        Ok(finished)
+    }
+
+    /// Batched `observe` (FE cascade / EAGLE first-step) over each slot's
+    /// newly committed anchors, updating per-slot draft state.
+    fn batched_observe(
+        &mut self,
+        feats: &[Vec<f32>],
+        next: &[Vec<i32>],
+        first_pos: &[usize],
+    ) -> Result<()> {
+        if matches!(self.cfg.method, BatchMethod::Vanilla) {
+            return Ok(());
+        }
+        let bsz = self.cfg.batch;
+        let fd = self.spec.feat_dim;
+        let (v, d, c) = (self.spec.vocab, self.spec.d_model, self.spec.max_seq);
+        let n_max = next.iter().map(|x| x.len()).max().unwrap_or(0);
+        if n_max == 0 {
+            return Ok(());
+        }
+        let t = if n_max > 8 { 32 } else if n_max > 1 { 8 } else { 1 };
+        let suffix = self.exec_suffix();
+        let dkv = self.dkv.as_mut().unwrap();
+        let mut feat_in = vec![0.0f32; bsz * t * fd];
+        let mut toks = vec![self.spec.pad; bsz * t];
+        let mut pos = vec![0i32; bsz * t];
+        let mut ctx = vec![0i32; bsz];
+        let mut rows: Vec<Vec<MaskRow>> = vec![vec![]; bsz];
+        for b in 0..bsz {
+            if self.slots[b].is_none() || next[b].is_empty() {
+                continue;
+            }
+            let n = next[b].len();
+            let base = dkv.len(b);
+            ctx[b] = base as i32;
+            feat_in[b * t * fd..(b * t + n) * fd].copy_from_slice(&feats[b]);
+            toks[b * t..b * t + n].copy_from_slice(&next[b]);
+            for i in 0..n {
+                pos[b * t + i] = ((first_pos[b] + i) as i32).min(c as i32 - 1);
+            }
+            rows[b] = (0..n)
+                .map(|i| MaskRow { prefix_upto: base + i + 1, extra: vec![] })
+                .collect();
+        }
+        let mask = build_mask_b(bsz, t, c, &rows);
+        let feat_t = HostTensor::f32(vec![bsz, t, fd], feat_in);
+        let tok_t = HostTensor::i32(vec![bsz, t], toks);
+        let pos_t = HostTensor::i32(vec![bsz, t], pos);
+        let ctx_t = HostTensor::i32(vec![bsz], ctx);
+        match self.cfg.method {
+            BatchMethod::FastEagle => {
+                let exec = self.store.bind(&format!("fe_t{t}{suffix}"), "fasteagle")?;
+                let outs = exec.call(
+                    &self.store.runtime,
+                    &[
+                        ("feats", &feat_t),
+                        ("next_tokens", &tok_t),
+                        ("anchor_pos", &pos_t),
+                        ("mask", &mask),
+                        ("ctx_len", &ctx_t),
+                        ("dkv", dkv.tensor()),
+                    ],
+                )?;
+                let n_lvl = self.spec.draft_depth;
+                let l = outs[exec.out_idx("logits")?].as_f32()?.to_vec();
+                let ki = exec.out_idx("dkv")?;
+                let mut outs = outs;
+                dkv.update_from(outs.swap_remove(ki))?;
+                for b in 0..bsz {
+                    if self.slots[b].is_none() || next[b].is_empty() {
+                        continue;
+                    }
+                    let n = next[b].len();
+                    let row = b * t + (n - 1);
+                    let slot = self.slots[b].as_mut().unwrap();
+                    slot.fe_logits = l[row * n_lvl * v..(row + 1) * n_lvl * v].to_vec();
+                    let base = dkv.len(b);
+                    dkv.set_len(b, base + n);
+                }
+            }
+            BatchMethod::Eagle3 => {
+                let exec =
+                    self.store.bind(&format!("eg3_first_t{t}{suffix}"), "eagle3")?;
+                let outs = exec.call(
+                    &self.store.runtime,
+                    &[
+                        ("feat_in", &feat_t),
+                        ("tokens", &tok_t),
+                        ("anchor_pos", &pos_t),
+                        ("mask", &mask),
+                        ("ctx_len", &ctx_t),
+                        ("ekv", dkv.tensor()),
+                    ],
+                )?;
+                let l = outs[exec.out_idx("logits")?].as_f32()?.to_vec();
+                let h = outs[exec.out_idx("h")?].as_f32()?.to_vec();
+                let ki = exec.out_idx("ekv")?;
+                let mut outs = outs;
+                dkv.update_from(outs.swap_remove(ki))?;
+                for b in 0..bsz {
+                    if self.slots[b].is_none() || next[b].is_empty() {
+                        continue;
+                    }
+                    let n = next[b].len();
+                    let row = b * t + (n - 1);
+                    let slot = self.slots[b].as_mut().unwrap();
+                    slot.eg_q1 = l[row * v..(row + 1) * v].to_vec();
+                    slot.eg_h = h[row * d..(row + 1) * d].to_vec();
+                    let base = dkv.len(b);
+                    dkv.set_len(b, base + n);
+                }
+            }
+            BatchMethod::Vanilla => unreachable!(),
+        }
+        Ok(())
+    }
+
+    /// Run a closed workload to completion; returns responses + metrics.
+    pub fn run(&mut self, requests: Vec<Request>) -> Result<(Vec<Response>, ServingMetrics)> {
+        let mut queue: VecDeque<Request> = requests.into();
+        let mut responses = Vec::new();
+        let mut metrics = ServingMetrics::default();
+        let t0 = Instant::now();
+        loop {
+            // admission
+            for b in 0..self.cfg.batch {
+                if self.slots[b].is_some() || queue.is_empty() {
+                    continue;
+                }
+                let cost = self.request_blocks();
+                if !self.pool.can_alloc(cost) {
+                    metrics.requests_rejected += 1; // deferred, really
+                    break;
+                }
+                let mut lease = Lease::default();
+                self.pool.alloc(cost, &mut lease).context("lease")?;
+                let req = queue.pop_front().unwrap();
+                self.admit(b, req, lease)?;
+            }
+            if self.slots.iter().all(|s| s.is_none()) {
+                if queue.is_empty() {
+                    break;
+                }
+                bail!("no slot admissible but queue non-empty (pool too small?)");
+            }
+            for r in self.decode_iteration()? {
+                metrics.record_done(
+                    r.new_tokens,
+                    r.cycles,
+                    r.tau,
+                    std::time::Duration::from_secs_f64(r.latency_ms / 1e3),
+                    std::time::Duration::ZERO,
+                );
+                responses.push(r);
+            }
+        }
+        let _ = t0;
+        Ok((responses, metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batched_mask_rows_and_padding() {
+        let rows = vec![
+            vec![MaskRow { prefix_upto: 2, extra: vec![3] }],
+            vec![], // inactive slot: all pad rows
+        ];
+        let m = build_mask_b(2, 2, 4, &rows);
+        let d = m.as_f32().unwrap();
+        // slot 0 row 0: slots 0,1,3 visible
+        assert_eq!(&d[0..4], &[0.0, 0.0, NEG, 0.0]);
+        // slot 0 row 1 is padding: slot 0 only
+        assert_eq!(&d[4..8], &[0.0, NEG, NEG, NEG]);
+        // slot 1 rows: padding
+        assert_eq!(&d[8..12], &[0.0, NEG, NEG, NEG]);
+        assert_eq!(&d[12..16], &[0.0, NEG, NEG, NEG]);
+    }
+
+    #[test]
+    fn method_kv_accounting() {
+        let spec = crate::model::ModelSpec::parse(
+            crate::model::spec::tests_sample::SAMPLE).unwrap();
+        assert_eq!(BatchMethod::Vanilla.drafter_kv_layers(&spec), 0);
+        assert_eq!(BatchMethod::Eagle3.drafter_kv_layers(&spec), 1);
+        assert_eq!(BatchMethod::FastEagle.drafter_kv_layers(&spec), spec.draft_depth);
+    }
+}

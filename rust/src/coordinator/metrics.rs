@@ -1,0 +1,101 @@
+//! Serving-level metrics: request latency histograms, token throughput,
+//! τ aggregation — the numbers the Table-3 harness and the API server's
+//! /stats endpoint report.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Histogram;
+
+#[derive(Debug, Clone)]
+pub struct ServingMetrics {
+    pub started: Instant,
+    pub requests_done: u64,
+    pub requests_rejected: u64,
+    pub tokens_out: u64,
+    pub cycles: u64,
+    pub tau_sum: f64,
+    pub latency: Histogram,
+    pub queue_wait: Histogram,
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        ServingMetrics {
+            started: Instant::now(),
+            requests_done: 0,
+            requests_rejected: 0,
+            tokens_out: 0,
+            cycles: 0,
+            tau_sum: 0.0,
+            latency: Histogram::new(),
+            queue_wait: Histogram::new(),
+        }
+    }
+}
+
+impl ServingMetrics {
+    pub fn record_done(
+        &mut self,
+        new_tokens: usize,
+        cycles: usize,
+        tau: f64,
+        latency: Duration,
+        queue_wait: Duration,
+    ) {
+        self.requests_done += 1;
+        self.tokens_out += new_tokens as u64;
+        self.cycles += cycles as u64;
+        self.tau_sum += tau * cycles as f64;
+        self.latency.record_us(latency.as_secs_f64() * 1e6);
+        self.queue_wait.record_us(queue_wait.as_secs_f64() * 1e6);
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        let el = self.started.elapsed().as_secs_f64();
+        if el <= 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / el
+        }
+    }
+
+    pub fn mean_tau(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.tau_sum / self.cycles as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "done={} rejected={} tokens={} tok/s={:.1} tau={:.2} p50={:.0}ms p99={:.0}ms wait_p50={:.0}ms",
+            self.requests_done,
+            self.requests_rejected,
+            self.tokens_out,
+            self.tokens_per_sec(),
+            self.mean_tau(),
+            self.latency.percentile_us(0.5) / 1e3,
+            self.latency.percentile_us(0.99) / 1e3,
+            self.queue_wait.percentile_us(0.5) / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let mut m = ServingMetrics::default();
+        m.record_done(10, 4, 2.5, Duration::from_millis(100), Duration::from_millis(5));
+        m.record_done(20, 5, 4.0, Duration::from_millis(200), Duration::from_millis(1));
+        assert_eq!(m.requests_done, 2);
+        assert_eq!(m.tokens_out, 30);
+        let tau = m.mean_tau();
+        assert!((tau - (2.5 * 4.0 + 4.0 * 5.0) / 9.0).abs() < 1e-9, "{tau}");
+        assert!(m.latency.percentile_us(0.5) > 0.0);
+        assert!(!m.report().is_empty());
+    }
+}

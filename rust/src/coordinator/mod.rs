@@ -1,0 +1,14 @@
+//! Serving coordinator (L3): admission queue, continuous batcher over
+//! the batched executables, TCP JSON API server, serving metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod server;
+
+pub use batcher::{BatchConfig, BatchEngine, BatchMethod};
+pub use metrics::ServingMetrics;
+pub use queue::AdmissionQueue;
+pub use request::{Request, Response};
+pub use server::{Server, ServerConfig};

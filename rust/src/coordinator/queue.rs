@@ -1,0 +1,197 @@
+//! Bounded admission queue between the I/O threads (TCP connections,
+//! workload drivers) and the single engine thread. Back-pressure by
+//! blocking or rejecting at capacity.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+pub struct AdmissionQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    peak_depth: usize,
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(capacity: usize) -> AdmissionQueue<T> {
+        AdmissionQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                closed: false,
+                peak_depth: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Non-blocking enqueue; Err(item) when full or closed (HTTP-429
+    /// analogue — the caller decides whether to retry or shed).
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.items.len() >= self.capacity {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        let d = g.items.len();
+        g.peak_depth = g.peak_depth.max(d);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking enqueue with back-pressure.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        while !g.closed && g.items.len() >= self.capacity {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        let d = g.items.len();
+        g.peak_depth = g.peak_depth.max(d);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking dequeue; None once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Dequeue with timeout; None on timeout or closed+drained.
+    pub fn pop_timeout(&self, d: Duration) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if g.closed {
+                return None;
+            }
+            let (ng, res) = self.not_empty.wait_timeout(g, d).unwrap();
+            g = ng;
+            if res.timed_out() {
+                return g.items.pop_front();
+            }
+        }
+    }
+
+    /// Drain up to `n` items without blocking (continuous-batching
+    /// admission).
+    pub fn drain_up_to(&self, n: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let take = n.min(g.items.len());
+        let out: Vec<T> = g.items.drain(..take).collect();
+        drop(g);
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn peak_depth(&self) -> usize {
+        self.inner.lock().unwrap().peak_depth
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = AdmissionQueue::new(10);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn try_push_rejects_at_capacity() {
+        let q = AdmissionQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert!(q.try_push(3).is_err());
+        assert_eq!(q.peak_depth(), 2);
+    }
+
+    #[test]
+    fn close_unblocks_pop() {
+        let q = Arc::new(AdmissionQueue::<i32>::new(2));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn cross_thread_producer_consumer() {
+        let q = Arc::new(AdmissionQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let prod = std::thread::spawn(move || {
+            for i in 0..100 {
+                q2.push(i).unwrap();
+            }
+            q2.close();
+        });
+        let mut got = Vec::new();
+        while let Some(x) = q.pop() {
+            got.push(x);
+        }
+        prod.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drain_up_to_takes_prefix() {
+        let q = AdmissionQueue::new(10);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        let got = q.drain_up_to(3);
+        assert_eq!(got, vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+    }
+}

@@ -1,0 +1,110 @@
+//! Request/response types for the serving coordinator.
+
+use std::time::Instant;
+
+use crate::spec::GenConfig;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub cfg: GenConfig,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: impl Into<String>) -> Request {
+        Request {
+            id,
+            prompt: prompt.into(),
+            cfg: GenConfig::default(),
+            arrival: Instant::now(),
+        }
+    }
+
+    /// Parse an API request line: {"prompt": "...", "max_new": 64,
+    /// "temperature": 0.0, "seed": 1}.
+    pub fn from_json(id: u64, v: &Json) -> Option<Request> {
+        let prompt = v.get("prompt")?.as_str()?.to_string();
+        let mut cfg = GenConfig::default();
+        if let Some(m) = v.get("max_new").and_then(Json::as_usize) {
+            cfg.max_new_tokens = m;
+        }
+        if let Some(t) = v.get("temperature").and_then(Json::as_f64) {
+            cfg.temperature = t as f32;
+        }
+        if let Some(s) = v.get("seed").and_then(Json::as_i64) {
+            cfg.seed = s as u64;
+        }
+        if let Some(e) = v.get("stop_on_eos").and_then(Json::as_bool) {
+            cfg.stop_on_eos = e;
+        }
+        Some(Request { id, prompt, cfg, arrival: Instant::now() })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub new_tokens: usize,
+    pub tau: f64,
+    pub cycles: usize,
+    /// time from arrival to completion
+    pub latency_ms: f64,
+    /// generation wall time only
+    pub gen_ms: f64,
+    pub error: Option<String>,
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("id", Json::num(self.id as f64)),
+            ("text", Json::str(&self.text)),
+            ("new_tokens", Json::num(self.new_tokens as f64)),
+            ("tau", Json::num(self.tau)),
+            ("cycles", Json::num(self.cycles as f64)),
+            ("latency_ms", Json::num(self.latency_ms)),
+            ("gen_ms", Json::num(self.gen_ms)),
+        ];
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::str(e)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_from_json() {
+        let v = Json::parse(r#"{"prompt":"hi","max_new":10,"temperature":1.0}"#).unwrap();
+        let r = Request::from_json(3, &v).unwrap();
+        assert_eq!(r.prompt, "hi");
+        assert_eq!(r.cfg.max_new_tokens, 10);
+        assert!((r.cfg.temperature - 1.0).abs() < 1e-6);
+        assert!(Request::from_json(0, &Json::parse("{}").unwrap()).is_none());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = Response {
+            id: 1,
+            text: "ok".into(),
+            new_tokens: 2,
+            tau: 3.5,
+            cycles: 4,
+            latency_ms: 10.0,
+            gen_ms: 8.0,
+            error: None,
+        };
+        let j = r.to_json().to_string();
+        let v = Json::parse(&j).unwrap();
+        assert_eq!(v.get("text").unwrap().as_str(), Some("ok"));
+        assert_eq!(v.get("tau").unwrap().as_f64(), Some(3.5));
+    }
+}

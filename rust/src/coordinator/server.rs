@@ -1,0 +1,243 @@
+//! TCP JSON-lines API server: thread-per-connection I/O feeding a single
+//! engine thread through the admission queue (the PJRT state is
+//! deliberately single-threaded; on this 1-core testbed the engine is
+//! the bottleneck anyway, exactly like a GPU worker in vLLM's
+//! single-scheduler design).
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"prompt": "...", "max_new": 64, "temperature": 0.0, "seed": 1}
+//!   <- {"id": .., "text": "...", "tau": .., "new_tokens": .., ...}
+//!   -> {"cmd": "stats"}   <- serving metrics
+//!   -> {"cmd": "shutdown"}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::spec::Engine;
+use crate::util::json::Json;
+
+use super::metrics::ServingMetrics;
+use super::queue::AdmissionQueue;
+use super::request::{Request, Response};
+
+type ReplyTx = std::sync::mpsc::Sender<Response>;
+
+pub struct ServerConfig {
+    pub addr: String,
+    pub queue_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:7399".into(), queue_capacity: 64 }
+    }
+}
+
+pub struct Server {
+    cfg: ServerConfig,
+    queue: Arc<AdmissionQueue<(Request, ReplyTx)>>,
+    metrics: Arc<Mutex<ServingMetrics>>,
+    shutdown: Arc<AtomicBool>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    pub fn new(cfg: ServerConfig) -> Server {
+        Server {
+            queue: Arc::new(AdmissionQueue::new(cfg.queue_capacity)),
+            metrics: Arc::new(Mutex::new(ServingMetrics::default())),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            next_id: AtomicU64::new(1),
+            cfg,
+        }
+    }
+
+    /// Serve until a shutdown command arrives. `engine` runs on the
+    /// calling thread; accept/connection threads are spawned internally.
+    pub fn serve(&self, mut engine: Engine) -> Result<ServingMetrics> {
+        let listener =
+            TcpListener::bind(&self.cfg.addr).with_context(|| self.cfg.addr.clone())?;
+        listener.set_nonblocking(true)?;
+        crate::log_info!(
+            "serving {} (drafter={}) on {}",
+            engine.target.spec.name,
+            engine.drafter.name(),
+            self.cfg.addr
+        );
+        // accept loop on a helper thread
+        let q = Arc::clone(&self.queue);
+        let sd = Arc::clone(&self.shutdown);
+        let metrics = Arc::clone(&self.metrics);
+        let next = Arc::new(AtomicU64::new(1));
+        let accept_handle = std::thread::spawn(move || {
+            let mut conns = Vec::new();
+            while !sd.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let q = Arc::clone(&q);
+                        let sd = Arc::clone(&sd);
+                        let metrics = Arc::clone(&metrics);
+                        let next = Arc::clone(&next);
+                        conns.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, q, sd, metrics, next);
+                        }));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        });
+
+        // engine loop (this thread)
+        while !self.shutdown.load(Ordering::Relaxed) {
+            let Some((req, tx)) =
+                self.queue.pop_timeout(std::time::Duration::from_millis(50))
+            else {
+                continue;
+            };
+            let wait = req.arrival.elapsed();
+            let t0 = Instant::now();
+            let resp = match engine.generate(&req.prompt, &req.cfg) {
+                Ok(r) => Response {
+                    id: req.id,
+                    text: r.text,
+                    new_tokens: r.metrics.new_tokens,
+                    tau: r.metrics.tau(),
+                    cycles: r.metrics.cycles,
+                    latency_ms: req.arrival.elapsed().as_secs_f64() * 1e3,
+                    gen_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    error: None,
+                },
+                Err(e) => Response {
+                    id: req.id,
+                    text: String::new(),
+                    new_tokens: 0,
+                    tau: 0.0,
+                    cycles: 0,
+                    latency_ms: req.arrival.elapsed().as_secs_f64() * 1e3,
+                    gen_ms: 0.0,
+                    error: Some(format!("{e:#}")),
+                },
+            };
+            {
+                let mut m = self.metrics.lock().unwrap();
+                m.record_done(
+                    resp.new_tokens,
+                    resp.cycles,
+                    resp.tau,
+                    std::time::Duration::from_secs_f64(resp.latency_ms / 1e3),
+                    wait,
+                );
+            }
+            let _ = tx.send(resp);
+        }
+        self.queue.close();
+        let _ = accept_handle.join();
+        let m = self.metrics.lock().unwrap().clone();
+        Ok(m)
+    }
+
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    pub fn next_request_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    queue: Arc<AdmissionQueue<(Request, ReplyTx)>>,
+    shutdown: Arc<AtomicBool>,
+    metrics: Arc<Mutex<ServingMetrics>>,
+    next_id: Arc<AtomicU64>,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let v = match Json::parse(trimmed) {
+            Ok(v) => v,
+            Err(e) => {
+                writeln!(writer, "{}", Json::obj(vec![("error", Json::str(&format!("{e}")))]).to_string())?;
+                continue;
+            }
+        };
+        match v.get("cmd").and_then(Json::as_str) {
+            Some("shutdown") => {
+                shutdown.store(true, Ordering::Relaxed);
+                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]).to_string())?;
+                return Ok(());
+            }
+            Some("stats") => {
+                let m = metrics.lock().unwrap();
+                let j = Json::obj(vec![
+                    ("requests_done", Json::num(m.requests_done as f64)),
+                    ("tokens_out", Json::num(m.tokens_out as f64)),
+                    ("tok_per_sec", Json::num(m.tokens_per_sec())),
+                    ("mean_tau", Json::num(m.mean_tau())),
+                    ("p50_ms", Json::num(m.latency.percentile_us(0.5) / 1e3)),
+                    ("p99_ms", Json::num(m.latency.percentile_us(0.99) / 1e3)),
+                ]);
+                writeln!(writer, "{}", j.to_string())?;
+                continue;
+            }
+            _ => {}
+        }
+        let id = next_id.fetch_add(1, Ordering::Relaxed);
+        match Request::from_json(id, &v) {
+            Some(req) => {
+                let (tx, rx) = std::sync::mpsc::channel();
+                if queue.try_push((req, tx)).is_err() {
+                    let mut m = metrics.lock().unwrap();
+                    m.requests_rejected += 1;
+                    drop(m);
+                    writeln!(
+                        writer,
+                        "{}",
+                        Json::obj(vec![("error", Json::str("queue full"))]).to_string()
+                    )?;
+                    continue;
+                }
+                match rx.recv() {
+                    Ok(resp) => writeln!(writer, "{}", resp.to_json().to_string())?,
+                    Err(_) => {
+                        writeln!(
+                            writer,
+                            "{}",
+                            Json::obj(vec![("error", Json::str("server shutting down"))])
+                                .to_string()
+                        )?;
+                        return Ok(());
+                    }
+                }
+            }
+            None => {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![("error", Json::str("missing prompt"))]).to_string()
+                )?;
+            }
+        }
+    }
+}

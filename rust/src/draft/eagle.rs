@@ -1,0 +1,212 @@
+//! EAGLE baseline drafters: a single decoder layer that drafts
+//! *autoregressively* — a depth-N draft costs 1 `observe` byproduct
+//! (level 1) plus N−1 sequential `eg_next` executable calls. This is the
+//! per-cycle latency chain FastEagle removes.
+//!
+//! Two variants share the `eg_next` graph:
+//! * `eagle3` — multi-level (l,m,h) feature input, rollout-trained
+//!   (EAGLE-3-like; the paper's strongest baseline).
+//! * `eagle2` — top-feature-only input, teacher-forced training
+//!   (EAGLE-2-like; degrades at depth, Fig. 3).
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::model::{build_mask, KvCache, MaskRow, ModelSpec};
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::ArtifactStore;
+use crate::util::rng::{argmax, softmax_temp};
+
+use super::fasteagle::chunk_plan;
+use super::{DraftOutput, Drafter, ObserveArgs};
+
+pub struct EagleDrafter {
+    store: Rc<ArtifactStore>,
+    spec: ModelSpec,
+    wset: String,
+    first_prefix: &'static str,
+    multi_level: bool,
+    ekv: KvCache,
+    /// hidden state of the newest anchor (the drafter's f̂ for the
+    /// pending token)
+    h_last: Vec<f32>,
+    /// level-1 draft logits (byproduct of observe)
+    q1_logits: Vec<f32>,
+    has_pending: bool,
+}
+
+impl EagleDrafter {
+    pub fn new(store: Rc<ArtifactStore>, wset: &str, multi_level: bool) -> Result<EagleDrafter> {
+        let spec = ModelSpec::parse(&store.spec_json()?)?;
+        let ekv = KvCache::zeros(vec![2, 1, spec.max_seq, spec.n_kv_heads, spec.head_dim])?;
+        Ok(EagleDrafter {
+            store,
+            spec,
+            wset: wset.to_string(),
+            first_prefix: if multi_level { "eg3_first" } else { "eg2_first" },
+            multi_level,
+            ekv,
+            h_last: Vec::new(),
+            q1_logits: Vec::new(),
+            has_pending: false,
+        })
+    }
+
+    fn feat_in_dim(&self) -> usize {
+        if self.multi_level {
+            self.spec.feat_dim
+        } else {
+            self.spec.d_model
+        }
+    }
+
+    /// Slice the engine-provided multi-level features down to this
+    /// variant's input (eagle2 only sees the top tap).
+    fn slice_feats(&self, feats: &[f32], n: usize) -> Vec<f32> {
+        let fd = self.spec.feat_dim;
+        if self.multi_level {
+            feats[..n * fd].to_vec()
+        } else {
+            let d = self.spec.d_model;
+            let mut out = Vec::with_capacity(n * d);
+            for i in 0..n {
+                out.extend_from_slice(&feats[i * fd + 2 * d..(i + 1) * fd]);
+            }
+            out
+        }
+    }
+}
+
+impl EagleDrafter {
+    /// Batch-engine admission support: expose the per-request state so
+    /// it can be copied into a batched state tensor slot.
+    pub fn state(&self) -> (&KvCache, &[f32], &[f32]) {
+        (&self.ekv, &self.h_last, &self.q1_logits)
+    }
+}
+
+impl Drafter for EagleDrafter {
+    fn name(&self) -> &str {
+        &self.wset
+    }
+
+    fn depth(&self) -> usize {
+        self.spec.draft_depth
+    }
+
+    fn kv_layers(&self) -> usize {
+        1
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.ekv = KvCache::zeros(self.ekv.tensor().shape.clone())?;
+        self.has_pending = false;
+        Ok(())
+    }
+
+    fn observe(&mut self, a: ObserveArgs<'_>) -> Result<()> {
+        let fin = self.feat_in_dim();
+        let (v, d, c) = (self.spec.vocab, self.spec.d_model, self.spec.max_seq);
+        let n = a.anchor_tokens.len();
+        let sliced = self.slice_feats(a.feats, n);
+        let mut done = 0usize;
+        for t in chunk_plan(n) {
+            let real = (n - done).min(t);
+            let ctx = self.ekv.len(0);
+            let mut feats = vec![0.0f32; t * fin];
+            feats[..real * fin].copy_from_slice(&sliced[done * fin..(done + real) * fin]);
+            let mut toks = vec![self.spec.pad; t];
+            toks[..real].copy_from_slice(&a.next_tokens[done..done + real]);
+            let mut pos = vec![0i32; t];
+            for i in 0..t {
+                let p = (a.first_pos + done + i.min(real.saturating_sub(1))) as i32;
+                pos[i] = p.min(self.spec.max_seq as i32 - 1);
+            }
+            let rows: Vec<MaskRow> = (0..real)
+                .map(|i| MaskRow { prefix_upto: ctx + i + 1, extra: vec![] })
+                .collect();
+            let mask = build_mask(t, c, &rows);
+            let feats_t = HostTensor::f32(vec![1, t, fin], feats);
+            let toks_t = HostTensor::i32(vec![1, t], toks);
+            let pos_t = HostTensor::i32(vec![1, t], pos);
+            let ctx_t = HostTensor::i32(vec![1], vec![ctx as i32]);
+            let exec = self
+                .store
+                .bind(&format!("{}_t{}", self.first_prefix, t), &self.wset)?;
+            let outs = exec.call(
+                &self.store.runtime,
+                &[
+                    ("feat_in", &feats_t),
+                    ("tokens", &toks_t),
+                    ("anchor_pos", &pos_t),
+                    ("mask", &mask),
+                    ("ctx_len", &ctx_t),
+                    ("ekv", self.ekv.tensor()),
+                ],
+            )?;
+            let li = exec.out_idx("logits")?;
+            let hi = exec.out_idx("h")?;
+            let ki = exec.out_idx("ekv")?;
+            let row = real - 1;
+            self.q1_logits = outs[li].as_f32()?[row * v..(row + 1) * v].to_vec();
+            self.h_last = outs[hi].as_f32()?[row * d..(row + 1) * d].to_vec();
+            self.has_pending = true;
+            let mut outs = outs;
+            self.ekv.update_from(outs.swap_remove(ki))?;
+            self.ekv.set_len(0, ctx + real);
+            done += real;
+        }
+        Ok(())
+    }
+
+    fn draft(&mut self, _pending: i32, anchor_pos: usize, temperature: f32) -> Result<DraftOutput> {
+        if !self.has_pending {
+            return Err(anyhow::anyhow!("draft before observe")).context("eagle");
+        }
+        let (v, d, c) = (self.spec.vocab, self.spec.d_model, self.spec.max_seq);
+        let n_levels = self.spec.draft_depth;
+        let mut dists = Vec::with_capacity(n_levels);
+        let mut q1 = self.q1_logits.clone();
+        softmax_temp(&mut q1, temperature);
+        dists.push(q1);
+        // N-1 sequential autoregressive steps over temporary entries at
+        // slots ctx, ctx+1, ... (rolled back by simply not advancing len)
+        let mut h = self.h_last.clone();
+        let exec = self.store.bind("eg_next_t1", &self.wset)?;
+        let ctx = self.ekv.len(0);
+        let mut ekv_tmp = self.ekv.clone();
+        for s in 1..n_levels {
+            let backbone_tok = argmax(&dists[s - 1]) as i32;
+            let pos = ((anchor_pos + s) as i32).min(self.spec.max_seq as i32 - 1);
+            let rows = [MaskRow { prefix_upto: ctx + s, extra: vec![] }];
+            let mask = build_mask(1, c, &rows);
+            let h_t = HostTensor::f32(vec![1, 1, d], h.clone());
+            let tok_t = HostTensor::i32(vec![1, 1], vec![backbone_tok]);
+            let pos_t = HostTensor::i32(vec![1, 1], vec![pos]);
+            let ctx_t = HostTensor::i32(vec![1], vec![(ctx + s - 1) as i32]);
+            let outs = exec.call(
+                &self.store.runtime,
+                &[
+                    ("feat_in", &h_t),
+                    ("tokens", &tok_t),
+                    ("anchor_pos", &pos_t),
+                    ("mask", &mask),
+                    ("ctx_len", &ctx_t),
+                    ("ekv", ekv_tmp.tensor()),
+                ],
+            )?;
+            let li = exec.out_idx("logits")?;
+            let hi = exec.out_idx("h")?;
+            let ki = exec.out_idx("ekv")?;
+            let mut q = outs[li].as_f32()?[..v].to_vec();
+            softmax_temp(&mut q, temperature);
+            dists.push(q);
+            h = outs[hi].as_f32()?[..d].to_vec();
+            let mut outs = outs;
+            ekv_tmp.update_from(outs.swap_remove(ki))?;
+        }
+        // ekv_tmp (with temp rows) is dropped: rollback by construction.
+        Ok(DraftOutput::Levels(dists))
+    }
+}

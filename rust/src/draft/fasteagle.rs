@@ -1,0 +1,197 @@
+//! FastEagle: the paper's cascaded non-autoregressive drafter.
+//!
+//! The N-layer cascade runs over the anchor entries during `observe` —
+//! layer i's hidden state at the newest anchor already *is* the draft
+//! distribution q_{t+i} (paper eqs. 1–2). `draft` therefore costs zero
+//! additional forward passes: the entire depth-N draft came out of one
+//! executable call, versus EAGLE's N sequential calls. That single-pass
+//! structure is the paper's headline contribution.
+//!
+//! The same struct also serves the two §3.2 training ablations (they
+//! share executables, only weights differ) and the "w/o Cascaded
+//! Structure" ablation via the `fe_par_*` parallel-head executables.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::model::{build_mask, KvCache, MaskRow, ModelSpec};
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::ArtifactStore;
+use crate::util::rng::softmax_temp;
+
+use super::{DraftOutput, Drafter, ObserveArgs};
+
+pub struct FastEagleDrafter {
+    store: Rc<ArtifactStore>,
+    spec: ModelSpec,
+    wset: String,
+    exec_prefix: &'static str,
+    dkv: KvCache,
+    /// [N, V] logits of the newest anchor's cascade layers
+    pending_logits: Vec<f32>,
+    has_pending: bool,
+}
+
+/// Greedy chunk sizes matching the lowered `*_t{32,8,1}` executables.
+pub(crate) fn chunk_plan(mut n: usize) -> Vec<usize> {
+    let mut plan = Vec::new();
+    while n > 0 {
+        // Prefer the largest executable that stays mostly full: a 32-row
+        // call only pays off above 8 real rows.
+        let t = if n > 8 { 32 } else if n > 1 { 8 } else { 1 };
+        plan.push(t);
+        n = n.saturating_sub(t);
+    }
+    plan
+}
+
+impl FastEagleDrafter {
+    pub fn new(
+        store: Rc<ArtifactStore>,
+        wset: &str,
+        exec_prefix: &'static str,
+    ) -> Result<FastEagleDrafter> {
+        let spec = ModelSpec::parse(&store.spec_json()?)?;
+        let dkv = KvCache::zeros(vec![
+            spec.draft_depth,
+            2,
+            1,
+            spec.max_seq,
+            spec.n_kv_heads,
+            spec.head_dim,
+        ])?;
+        Ok(FastEagleDrafter {
+            store,
+            spec,
+            wset: wset.to_string(),
+            exec_prefix,
+            dkv,
+            pending_logits: Vec::new(),
+            has_pending: false,
+        })
+    }
+}
+
+impl FastEagleDrafter {
+    /// Batch-engine admission support: expose the per-request state so
+    /// it can be copied into a batched state tensor slot.
+    pub fn state(&self) -> (&KvCache, &[f32]) {
+        (&self.dkv, &self.pending_logits)
+    }
+}
+
+impl Drafter for FastEagleDrafter {
+    fn name(&self) -> &str {
+        &self.wset
+    }
+
+    fn depth(&self) -> usize {
+        self.spec.draft_depth
+    }
+
+    fn kv_layers(&self) -> usize {
+        self.spec.draft_depth
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.dkv = KvCache::zeros(self.dkv.tensor().shape.clone())?;
+        self.has_pending = false;
+        Ok(())
+    }
+
+    fn observe(&mut self, a: ObserveArgs<'_>) -> Result<()> {
+        let fd = self.spec.feat_dim;
+        let (n_levels, v) = (self.spec.draft_depth, self.spec.vocab);
+        let c = self.spec.max_seq;
+        let n = a.anchor_tokens.len();
+        debug_assert_eq!(a.feats.len(), n * fd);
+        debug_assert_eq!(a.next_tokens.len(), n);
+        let mut done = 0usize;
+        for t in chunk_plan(n) {
+            let real = (n - done).min(t);
+            let ctx = self.dkv.len(0);
+            let mut feats = vec![0.0f32; t * fd];
+            feats[..real * fd].copy_from_slice(&a.feats[done * fd..(done + real) * fd]);
+            let mut toks = vec![self.spec.pad; t];
+            toks[..real].copy_from_slice(&a.next_tokens[done..done + real]);
+            let mut pos = vec![0i32; t];
+            for i in 0..t {
+                let p = (a.first_pos + done + i.min(real.saturating_sub(1))) as i32;
+                pos[i] = p.min(self.spec.max_seq as i32 - 1);
+            }
+            let rows: Vec<MaskRow> = (0..real)
+                .map(|i| MaskRow { prefix_upto: ctx + i + 1, extra: vec![] })
+                .collect();
+            let mask = build_mask(t, c, &rows);
+            let feats_t = HostTensor::f32(vec![1, t, fd], feats);
+            let toks_t = HostTensor::i32(vec![1, t], toks);
+            let pos_t = HostTensor::i32(vec![1, t], pos);
+            let ctx_t = HostTensor::i32(vec![1], vec![ctx as i32]);
+            let exec = self
+                .store
+                .bind(&format!("{}_t{}", self.exec_prefix, t), &self.wset)?;
+            let outs = exec.call(
+                &self.store.runtime,
+                &[
+                    ("feats", &feats_t),
+                    ("next_tokens", &toks_t),
+                    ("anchor_pos", &pos_t),
+                    ("mask", &mask),
+                    ("ctx_len", &ctx_t),
+                    ("dkv", self.dkv.tensor()),
+                ],
+            )?;
+            let li = exec.out_idx("logits")?;
+            let ki = exec.out_idx("dkv")?;
+            // logits [1, t, N, V]: keep the newest real anchor's N rows —
+            // they are this cycle's entire draft.
+            let l = outs[li].as_f32()?;
+            let row = real - 1;
+            self.pending_logits =
+                l[row * n_levels * v..(row + 1) * n_levels * v].to_vec();
+            self.has_pending = true;
+            let mut outs = outs;
+            self.dkv.update_from(outs.swap_remove(ki))?;
+            self.dkv.set_len(0, ctx + real);
+            done += real;
+        }
+        Ok(())
+    }
+
+    fn draft(&mut self, _pending: i32, _anchor_pos: usize, temperature: f32) -> Result<DraftOutput> {
+        if !self.has_pending {
+            return Err(anyhow::anyhow!("draft before observe")).context("fasteagle");
+        }
+        let v = self.spec.vocab;
+        let dists = (0..self.spec.draft_depth)
+            .map(|i| {
+                let mut d = self.pending_logits[i * v..(i + 1) * v].to_vec();
+                softmax_temp(&mut d, temperature);
+                d
+            })
+            .collect();
+        Ok(DraftOutput::Levels(dists))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::chunk_plan;
+
+    #[test]
+    fn chunking_covers_exactly() {
+        for n in 1..=70 {
+            let plan = chunk_plan(n);
+            let mut covered = 0usize;
+            for t in &plan {
+                assert!(matches!(t, 1 | 8 | 32));
+                covered += (n - covered).min(*t);
+            }
+            assert_eq!(covered, n, "n={n} plan={plan:?}");
+        }
+        assert_eq!(chunk_plan(7), vec![8]);
+        assert_eq!(chunk_plan(1), vec![1]);
+        assert_eq!(chunk_plan(40), vec![32, 8]);
+    }
+}

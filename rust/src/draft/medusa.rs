@@ -1,0 +1,76 @@
+//! Medusa baseline: K independent MLP heads predicting positions
+//! t+2..t+1+K from the anchor's multi-level feature. Stateless (no
+//! drafter KV), single executable call per cycle, but no hierarchical
+//! refinement — the paper's Table 1/2 show why the cascade wins.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::model::ModelSpec;
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::ArtifactStore;
+use crate::util::rng::softmax_temp;
+
+use super::{DraftOutput, Drafter, ObserveArgs};
+
+pub struct MedusaDrafter {
+    store: Rc<ArtifactStore>,
+    spec: ModelSpec,
+    anchor_feat: Vec<f32>,
+    has_pending: bool,
+}
+
+impl MedusaDrafter {
+    pub fn new(store: Rc<ArtifactStore>) -> Result<MedusaDrafter> {
+        let spec = ModelSpec::parse(&store.spec_json()?)?;
+        Ok(MedusaDrafter { store, spec, anchor_feat: Vec::new(), has_pending: false })
+    }
+}
+
+impl Drafter for MedusaDrafter {
+    fn name(&self) -> &str {
+        "medusa"
+    }
+
+    fn depth(&self) -> usize {
+        self.spec.medusa_heads
+    }
+
+    fn kv_layers(&self) -> usize {
+        0
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.has_pending = false;
+        Ok(())
+    }
+
+    fn observe(&mut self, a: ObserveArgs<'_>) -> Result<()> {
+        let fd = self.spec.feat_dim;
+        let n = a.anchor_tokens.len();
+        self.anchor_feat = a.feats[(n - 1) * fd..n * fd].to_vec();
+        self.has_pending = true;
+        Ok(())
+    }
+
+    fn draft(&mut self, _pending: i32, _anchor_pos: usize, temperature: f32) -> Result<DraftOutput> {
+        if !self.has_pending {
+            return Err(anyhow::anyhow!("draft before observe")).context("medusa");
+        }
+        let (v, k) = (self.spec.vocab, self.spec.medusa_heads);
+        let feats_t =
+            HostTensor::f32(vec![1, 1, self.spec.feat_dim], self.anchor_feat.clone());
+        let exec = self.store.bind("medusa", "medusa")?;
+        let outs = exec.call(&self.store.runtime, &[("feats", &feats_t)])?;
+        let l = outs[exec.out_idx("logits")?].as_f32()?;
+        let dists = (0..k)
+            .map(|i| {
+                let mut d = l[i * v..(i + 1) * v].to_vec();
+                softmax_temp(&mut d, temperature);
+                d
+            })
+            .collect();
+        Ok(DraftOutput::Levels(dists))
+    }
+}

@@ -1,0 +1,89 @@
+//! Drafter implementations behind a common trait.
+//!
+//! Shared engine↔drafter contract (see also `python/compile/drafters.py`):
+//!
+//! * After every verification the engine calls `observe` with the
+//!   newly-committed tokens: for each new anchor position j it passes the
+//!   target's verified feature f_j and the next token (token_{j+1}, with
+//!   the pending/bonus token closing the last pair). Drafters with KV
+//!   state append **permanent** context entries built from these real
+//!   features — EAGLE-3's design philosophy, and what makes FastEagle's
+//!   anchors training-consistent.
+//! * `draft` produces the per-level draft distributions for the next
+//!   cycle. FastEagle emits all N in a single pass (the cascade already
+//!   ran over the anchors during `observe` — zero extra forward passes);
+//!   EAGLE needs N−1 further sequential `eg_next` calls; SpS runs its own
+//!   LM autoregressively; Medusa is a stateless head bank; Vanilla
+//!   drafts nothing.
+
+pub mod eagle;
+pub mod fasteagle;
+pub mod medusa;
+pub mod sps;
+pub mod vanilla;
+
+use anyhow::Result;
+
+pub use eagle::EagleDrafter;
+pub use fasteagle::FastEagleDrafter;
+pub use medusa::MedusaDrafter;
+pub use sps::SpsDrafter;
+pub use vanilla::VanillaDrafter;
+
+/// What a drafter proposes for one cycle.
+#[derive(Debug, Clone)]
+pub enum DraftOutput {
+    /// Per-level distributions (already temperature-adjusted) for
+    /// Backbone Expansion.
+    Levels(Vec<Vec<f32>>),
+    /// A pre-sampled chain (token per level) plus the distribution each
+    /// token was drawn from (needed for lossless acceptance).
+    Chain(Vec<i32>, Vec<Vec<f32>>),
+    /// No draft (vanilla decoding).
+    None,
+}
+
+/// One new-anchor batch for `observe`.
+pub struct ObserveArgs<'a> {
+    /// [n, feat_dim] verified target features of the anchors
+    pub feats: &'a [f32],
+    /// the anchor tokens themselves (committed), length n
+    pub anchor_tokens: &'a [i32],
+    /// token_{j+1} per anchor (last = the pending token), length n
+    pub next_tokens: &'a [i32],
+    /// token position of the first anchor
+    pub first_pos: usize,
+}
+
+pub trait Drafter {
+    fn name(&self) -> &str;
+    /// draft-tree depth this drafter supports
+    fn depth(&self) -> usize;
+    /// KV layers held per request (paged-pool accounting; Table 3)
+    fn kv_layers(&self) -> usize;
+    fn reset(&mut self) -> Result<()>;
+    fn observe(&mut self, args: ObserveArgs<'_>) -> Result<()>;
+    /// `temperature` shapes the emitted distributions; `anchor_pos` is
+    /// the position of the pending token's predecessor.
+    fn draft(&mut self, pending: i32, anchor_pos: usize, temperature: f32) -> Result<DraftOutput>;
+}
+
+/// Construct any drafter by its weight-set name.
+pub fn make_drafter(
+    store: std::rc::Rc<crate::runtime::ArtifactStore>,
+    name: &str,
+) -> Result<Box<dyn Drafter>> {
+    Ok(match name {
+        "fasteagle" => Box::new(FastEagleDrafter::new(store, "fasteagle", "fe")?),
+        "fasteagle_nofeat" => {
+            Box::new(FastEagleDrafter::new(store, "fasteagle_nofeat", "fe")?)
+        }
+        "fasteagle_par" => Box::new(FastEagleDrafter::new(store, "fasteagle_par", "fe_par")?),
+        "eagle3" => Box::new(EagleDrafter::new(store, "eagle3", true)?),
+        "eagle2" => Box::new(EagleDrafter::new(store, "eagle2", false)?),
+        "medusa" => Box::new(MedusaDrafter::new(store)?),
+        "sps" => Box::new(SpsDrafter::new(store)?),
+        "vanilla" => Box::new(VanillaDrafter::new()),
+        other => anyhow::bail!("unknown drafter {other:?}"),
+    })
+}

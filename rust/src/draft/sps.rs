@@ -1,0 +1,103 @@
+//! Standard speculative sampling (SpS) baseline: an independent tiny
+//! draft LM proposing a chain autoregressively (Leviathan et al. /
+//! Chen et al.). No target features are used; the LM consumes the
+//! committed tokens themselves.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::model::{KvCache, MaskRow, TargetModel};
+use crate::runtime::ArtifactStore;
+use crate::util::rng::{argmax, softmax_temp, Pcg64};
+
+use super::{DraftOutput, Drafter, ObserveArgs};
+
+pub struct SpsDrafter {
+    lm: TargetModel,
+    skv: KvCache,
+    chain: usize,
+    has_ctx: bool,
+    rng: Pcg64,
+}
+
+impl SpsDrafter {
+    pub fn new(store: Rc<ArtifactStore>) -> Result<SpsDrafter> {
+        let lm = TargetModel::open_sps(store)?;
+        let skv = lm.new_kv()?;
+        let chain = lm.spec.sps_chain;
+        Ok(SpsDrafter { lm, skv, chain, has_ctx: false, rng: Pcg64::new(0x595, 0) })
+    }
+}
+
+impl Drafter for SpsDrafter {
+    fn name(&self) -> &str {
+        "sps"
+    }
+
+    fn depth(&self) -> usize {
+        self.chain
+    }
+
+    fn kv_layers(&self) -> usize {
+        self.lm.spec.sps.n_layers
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.skv = self.lm.new_kv()?;
+        self.has_ctx = false;
+        Ok(())
+    }
+
+    fn observe(&mut self, a: ObserveArgs<'_>) -> Result<()> {
+        // Feed the committed anchor tokens through the draft LM.
+        let mut done = 0usize;
+        let n = a.anchor_tokens.len();
+        while done < n {
+            let base = self.skv.len(0);
+            let take = (n - done).min(32);
+            let toks = &a.anchor_tokens[done..done + take];
+            let positions: Vec<i32> =
+                (0..take).map(|i| (a.first_pos + done + i) as i32).collect();
+            let rows: Vec<MaskRow> = (0..take)
+                .map(|i| MaskRow { prefix_upto: base + i + 1, extra: vec![] })
+                .collect();
+            let _ = self.lm.step(&mut self.skv, toks, &positions, &rows)?;
+            self.skv.set_len(0, base + take);
+            done += take;
+        }
+        self.has_ctx = true;
+        Ok(())
+    }
+
+    fn draft(&mut self, pending: i32, anchor_pos: usize, temperature: f32) -> Result<DraftOutput> {
+        if !self.has_ctx {
+            return Err(anyhow::anyhow!("draft before observe")).context("sps");
+        }
+        let base = self.skv.len(0);
+        let mut tokens = Vec::with_capacity(self.chain);
+        let mut dists = Vec::with_capacity(self.chain);
+        let mut cur = pending;
+        // temp slots base, base+1, ... — rolled back by restoring len
+        for s in 0..self.chain {
+            let pos = ((anchor_pos + 1 + s) as i32).min(self.lm.spec.max_seq as i32 - 1);
+            let rows = [MaskRow { prefix_upto: base + s + 1, extra: vec![] }];
+            self.skv.set_len(0, base + s);
+            let out = self.lm.step(&mut self.skv, &[cur], &[pos], &rows)?;
+            let mut q = out.logits;
+            softmax_temp(&mut q, temperature);
+            // the classic SpS chain samples each link from q (greedy in
+            // the T=0 limit) — required for exact losslessness
+            let tok = if temperature <= 0.0 {
+                argmax(&q) as i32
+            } else {
+                self.rng.categorical(&q) as i32
+            };
+            tokens.push(tok);
+            dists.push(q);
+            cur = tok;
+        }
+        self.skv.set_len(0, base); // rollback temps
+        Ok(DraftOutput::Chain(tokens, dists))
+    }
+}

@@ -1,0 +1,41 @@
+//! No drafter: plain autoregressive decoding (the speedup baseline all
+//! methods are normalized against).
+
+use anyhow::Result;
+
+use super::{DraftOutput, Drafter, ObserveArgs};
+
+#[derive(Default)]
+pub struct VanillaDrafter;
+
+impl VanillaDrafter {
+    pub fn new() -> VanillaDrafter {
+        VanillaDrafter
+    }
+}
+
+impl Drafter for VanillaDrafter {
+    fn name(&self) -> &str {
+        "vanilla"
+    }
+
+    fn depth(&self) -> usize {
+        0
+    }
+
+    fn kv_layers(&self) -> usize {
+        0
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn observe(&mut self, _a: ObserveArgs<'_>) -> Result<()> {
+        Ok(())
+    }
+
+    fn draft(&mut self, _pending: i32, _anchor_pos: usize, _t: f32) -> Result<DraftOutput> {
+        Ok(DraftOutput::None)
+    }
+}

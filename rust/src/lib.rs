@@ -1,0 +1,25 @@
+//! # FastEagle — cascaded drafting for lossless speculative-decoding serving
+//!
+//! Reproduction of *FastEagle: Cascaded Drafting for Accelerating
+//! Speculative Decoding* (Huang et al., 2025) as a three-layer
+//! Rust + JAX + Pallas serving stack:
+//!
+//! * **L1** — Pallas kernels (tree attention, fused cascade MLP), authored
+//!   in `python/compile/kernels/`, lowered AOT in interpret mode.
+//! * **L2** — JAX target model + drafter graphs (`python/compile/`),
+//!   lowered once to HLO text under `artifacts/`.
+//! * **L3** — this crate: the serving coordinator (request router,
+//!   continuous batcher, paged KV, constrained draft trees, lossless
+//!   speculative verification) executing the artifacts via PJRT.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod coordinator;
+pub mod draft;
+pub mod model;
+pub mod runtime;
+pub mod spec;
+pub mod util;
+pub mod workload;

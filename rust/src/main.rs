@@ -1,0 +1,217 @@
+//! `fasteagle` — CLI for the FastEagle speculative-decoding serving
+//! stack.
+//!
+//! Commands:
+//!   generate   one-shot generation with any drafter
+//!   serve      TCP JSON-lines API server (single-engine worker)
+//!   batch      closed-workload run through the continuous batcher
+//!   bench      regenerate paper tables/figures (table1|table2|table3|fig3|microbench|all)
+//!   selfcheck  losslessness + stack sanity across all drafters
+//!
+//! Common flags: --artifacts DIR (default ./artifacts; env FE_ARTIFACTS),
+//! --target NAME (default base), --drafter NAME (default fasteagle),
+//! --temp F, --max-new N, --seed N, --quick.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use fasteagle::coordinator::{BatchConfig, BatchEngine, BatchMethod, Request, Server, ServerConfig};
+use fasteagle::draft::make_drafter;
+use fasteagle::model::TargetModel;
+use fasteagle::runtime::{ArtifactStore, Runtime};
+use fasteagle::spec::{Engine, GenConfig};
+use fasteagle::util::cli::Args;
+
+const USAGE: &str = "\
+fasteagle <command> [flags]
+
+commands:
+  generate   --prompt TEXT [--drafter D] [--target T] [--temp F] [--max-new N]
+  serve      [--addr HOST:PORT] [--drafter D] [--target T]
+  batch      [--batch B] [--method vanilla|eagle3|fasteagle] [--requests N]
+  bench      table1|table2|table3|fig3|microbench|all [--quick]
+  selfcheck  [--target T]
+
+flags: --artifacts DIR  --seed N  --quick";
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get("artifacts")
+        .map(String::from)
+        .or_else(|| std::env::var("FE_ARTIFACTS").ok())
+        .unwrap_or_else(|| "artifacts".to_string())
+}
+
+fn open_store(args: &Args, rt: &Arc<Runtime>) -> Result<Rc<ArtifactStore>> {
+    let root = artifacts_dir(args);
+    let target = args.str_or("target", "base");
+    Ok(Rc::new(ArtifactStore::open(
+        Arc::clone(rt),
+        format!("{root}/{target}").into(),
+    )?))
+}
+
+fn gen_config(args: &Args) -> GenConfig {
+    GenConfig {
+        temperature: args.f64_or("temp", 0.0) as f32,
+        max_new_tokens: args.usize_or("max-new", 64),
+        seed: args.usize_or("seed", 0) as u64,
+        use_tree: !args.bool_flag("no-tree"),
+        max_depth: args.get("max-depth").and_then(|v| v.parse().ok()),
+        stop_on_eos: args.bool_flag("stop-on-eos"),
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let rt = Arc::new(Runtime::cpu()?);
+    let store = open_store(args, &rt)?;
+    let target = TargetModel::open(Rc::clone(&store))?;
+    let drafter = make_drafter(Rc::clone(&store), &args.str_or("drafter", "fasteagle"))?;
+    let mut engine = Engine::new(target, drafter);
+    let prompt = args
+        .get("prompt")
+        .context("--prompt required")?
+        .to_string();
+    let cfg = gen_config(args);
+    let r = engine.generate(&prompt, &cfg)?;
+    println!("{}", r.text);
+    eprintln!(
+        "--- {} tokens in {:.0}ms ({:.1} tok/s), tau={:.2}, cycles={}",
+        r.metrics.new_tokens,
+        r.metrics.wall.as_secs_f64() * 1e3,
+        r.metrics.tokens_per_sec(),
+        r.metrics.tau(),
+        r.metrics.cycles,
+    );
+    eprintln!("{}", r.metrics.timer.report());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let rt = Arc::new(Runtime::cpu()?);
+    let store = open_store(args, &rt)?;
+    let target = TargetModel::open(Rc::clone(&store))?;
+    let drafter = make_drafter(Rc::clone(&store), &args.str_or("drafter", "fasteagle"))?;
+    let engine = Engine::new(target, drafter);
+    let server = Server::new(ServerConfig {
+        addr: args.str_or("addr", "127.0.0.1:7399"),
+        queue_capacity: args.usize_or("queue", 64),
+    });
+    let metrics = server.serve(engine)?;
+    println!("server done: {}", metrics.report());
+    Ok(())
+}
+
+fn cmd_batch(args: &Args) -> Result<()> {
+    let rt = Arc::new(Runtime::cpu()?);
+    let store = open_store(args, &rt)?;
+    let method = match args.str_or("method", "fasteagle").as_str() {
+        "vanilla" => BatchMethod::Vanilla,
+        "eagle3" => BatchMethod::Eagle3,
+        "fasteagle" => BatchMethod::FastEagle,
+        other => bail!("unknown batch method {other:?}"),
+    };
+    let mut cfg = BatchConfig::new(args.usize_or("batch", 1), method);
+    cfg.chain_len = args.usize_or("chain", 2);
+    cfg.temperature = args.f64_or("temp", 0.0) as f32;
+    let mut engine = BatchEngine::new(Rc::clone(&store), cfg)?;
+    let root = artifacts_dir(args);
+    let prompts =
+        fasteagle::workload::load_prompts(std::path::Path::new(&root), "dialog")?;
+    let n = args.usize_or("requests", 8);
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| {
+            let mut r = Request::new(i as u64, prompts[i % prompts.len()].clone());
+            r.cfg.max_new_tokens = args.usize_or("max-new", 48);
+            r
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let (resps, m) = engine.run(reqs)?;
+    let toks: usize = resps.iter().map(|r| r.new_tokens).sum();
+    println!(
+        "{} requests, {} tokens in {:.1}s -> {:.1} tok/s (tau={:.2})",
+        resps.len(),
+        toks,
+        t0.elapsed().as_secs_f64(),
+        toks as f64 / t0.elapsed().as_secs_f64(),
+        m.mean_tau(),
+    );
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let rt = Arc::new(Runtime::cpu()?);
+    let root = artifacts_dir(args);
+    let target_name = args.str_or("target", "base");
+    let dir: std::path::PathBuf = format!("{root}/{target_name}").into();
+    let prompt = "USER: tell me about machine learning and the fast cache.\nASSISTANT:";
+    let cfg = GenConfig { max_new_tokens: 32, ..Default::default() };
+
+    let store = Rc::new(ArtifactStore::open(Arc::clone(&rt), dir.clone())?);
+    let target = TargetModel::open(Rc::clone(&store))?;
+    let spec = target.spec.clone();
+    let mut vanilla_engine =
+        Engine::new(target, make_drafter(Rc::clone(&store), "vanilla")?);
+    let reference = vanilla_engine.generate(prompt, &cfg)?;
+    println!("vanilla: {:?}", reference.text);
+    let mut ok = true;
+    let mut drafters = vec!["fasteagle".to_string(), "eagle3".to_string()];
+    for extra in ["eagle2", "medusa", "sps", "fasteagle_par", "fasteagle_nofeat"] {
+        if dir.join("weights").join(format!("{extra}.few")).exists() {
+            drafters.push(extra.to_string());
+        }
+    }
+    for dn in &drafters {
+        let target = TargetModel::open(Rc::clone(&store))?;
+        let mut engine = Engine::new(target, make_drafter(Rc::clone(&store), dn)?);
+        let r = engine.generate(prompt, &cfg)?;
+        let lossless = r.tokens == reference.tokens;
+        ok &= lossless;
+        println!(
+            "{dn:>18}: tau={:.2} tok/s={:>6.1} lossless={}",
+            r.metrics.tau(),
+            r.metrics.tokens_per_sec(),
+            if lossless { "YES" } else { "NO <-- MISMATCH" },
+        );
+    }
+    println!(
+        "selfcheck {} on target {} ({}, d={})",
+        if ok { "PASSED" } else { "FAILED" },
+        spec.name,
+        spec.stands_for,
+        spec.d_model,
+    );
+    if !ok {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    match cmd {
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "batch" => cmd_batch(&args),
+        "bench" => {
+            let which = args
+                .positional
+                .get(1)
+                .map(String::as_str)
+                .unwrap_or("all");
+            std::env::set_var("FE_ARTIFACTS", artifacts_dir(&args));
+            fasteagle::bench::run_named(which, args.bool_flag("quick"))
+        }
+        "selfcheck" => cmd_selfcheck(&args),
+        other => {
+            println!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

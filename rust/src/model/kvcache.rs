@@ -1,0 +1,223 @@
+//! Host-side KV cache state, the `kind: state` tensors threaded through
+//! the PJRT executables ([L, 2, B, S, KH, hd] for the target,
+//! [N, 2, B, C, KH, hd] for the FastEagle cascade, [2, B, C, KH, hd] for
+//! EAGLE). The Rust coordinator owns acceptance-driven **compaction**
+//! (move the accepted tree nodes' rows into the canonical prefix) and
+//! **rollback** (discard temporary draft entries) — the executables only
+//! ever append rows at `cache_len`.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::tensor::HostTensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvLayout {
+    /// product of dims before the batch axis (e.g. L*2)
+    pub planes: usize,
+    pub batch: usize,
+    /// slot count (max_seq / context size)
+    pub s: usize,
+    /// f32 elements per slot row (KH * hd)
+    pub row: usize,
+}
+
+impl KvLayout {
+    /// Interpret a state-tensor shape of the canonical form
+    /// [..planes.., B, S, KH, hd].
+    pub fn from_shape(shape: &[usize]) -> Result<KvLayout> {
+        if shape.len() < 4 {
+            bail!("kv shape too short: {shape:?}");
+        }
+        let n = shape.len();
+        let batch = shape[n - 4];
+        let s = shape[n - 3];
+        let row = shape[n - 2] * shape[n - 1];
+        let planes: usize = shape[..n - 4].iter().product();
+        Ok(KvLayout { planes, batch, s, row })
+    }
+
+    #[inline]
+    pub fn offset(&self, plane: usize, b: usize, slot: usize) -> usize {
+        ((plane * self.batch + b) * self.s + slot) * self.row
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    tensor: HostTensor,
+    pub layout: KvLayout,
+    len: Vec<usize>,
+}
+
+impl KvCache {
+    pub fn zeros(shape: Vec<usize>) -> Result<KvCache> {
+        let layout = KvLayout::from_shape(&shape)?;
+        Ok(KvCache {
+            tensor: HostTensor::f32(shape.clone(), vec![0.0; shape.iter().product()]),
+            layout,
+            len: vec![0; layout.batch],
+        })
+    }
+
+    pub fn tensor(&self) -> &HostTensor {
+        &self.tensor
+    }
+
+    /// Replace contents with an executable's updated state output.
+    pub fn update_from(&mut self, t: HostTensor) -> Result<()> {
+        if t.shape != self.tensor.shape {
+            bail!("kv update shape {:?} != {:?}", t.shape, self.tensor.shape);
+        }
+        self.tensor = t;
+        Ok(())
+    }
+
+    pub fn len(&self, b: usize) -> usize {
+        self.len[b]
+    }
+
+    pub fn set_len(&mut self, b: usize, l: usize) {
+        assert!(l <= self.layout.s, "kv overflow: {l} > {}", self.layout.s);
+        self.len[b] = l;
+    }
+
+    /// Discard entries beyond `l` (they stay as garbage; masks hide them).
+    pub fn rollback(&mut self, b: usize, l: usize) {
+        assert!(l <= self.len[b]);
+        self.len[b] = l;
+    }
+
+    /// Keep only `kept` (ascending, relative to `base`) of the rows that
+    /// were appended at `base`, packing them to `base..base+kept.len()`,
+    /// and set the request length to `base + kept.len()`.
+    ///
+    /// This is the acceptance step: after tree verification the accepted
+    /// path's rows (scattered across the M tree slots) become the
+    /// canonical KV prefix.
+    pub fn compact(&mut self, b: usize, base: usize, kept: &[usize]) -> Result<()> {
+        for w in kept.windows(2) {
+            if w[0] >= w[1] {
+                bail!("kept slots must be ascending: {kept:?}");
+            }
+        }
+        let lay = self.layout;
+        if let Some(&last) = kept.last() {
+            if base + last >= lay.s {
+                bail!("compact out of range: base {base} + slot {last} >= {}", lay.s);
+            }
+        }
+        let data = self.tensor.as_f32_mut()?;
+        for plane in 0..lay.planes {
+            for (i, &slot) in kept.iter().enumerate() {
+                if slot == i {
+                    continue; // already in place (kept ascending => src >= dst)
+                }
+                let src = lay.offset(plane, b, base + slot);
+                let dst = lay.offset(plane, b, base + i);
+                data.copy_within(src..src + lay.row, dst);
+            }
+        }
+        self.len[b] = base + kept.len();
+        Ok(())
+    }
+
+    /// Copy one request's rows from a single-request cache (`src`,
+    /// batch=1) into batch slot `dst_b` of this cache. Used by the
+    /// continuous batcher's admission lane: prefill runs on B=1
+    /// executables, then the state moves into the batched tensors.
+    pub fn copy_request_from(&mut self, dst_b: usize, src: &KvCache) -> Result<()> {
+        let (dl, sl) = (self.layout, src.layout);
+        if sl.batch != 1 || dl.planes != sl.planes || dl.row != sl.row || dl.s != sl.s {
+            bail!("incompatible kv layouts: {dl:?} vs {sl:?}");
+        }
+        let n = src.len(0);
+        let src_data = src.tensor.as_f32()?;
+        let dst_data = self.tensor.as_f32_mut()?;
+        for plane in 0..dl.planes {
+            let so = sl.offset(plane, 0, 0);
+            let doff = dl.offset(plane, dst_b, 0);
+            dst_data[doff..doff + n * dl.row]
+                .copy_from_slice(&src_data[so..so + n * sl.row]);
+        }
+        self.len[dst_b] = n;
+        Ok(())
+    }
+
+    /// Raw mutable data access (tests and synthetic-state setup).
+    pub fn tensor_mut_for_tests(&mut self) -> &mut [f32] {
+        self.tensor.as_f32_mut().unwrap()
+    }
+
+    /// Debug/test accessor: one row (plane, batch, slot).
+    pub fn row(&self, plane: usize, b: usize, slot: usize) -> &[f32] {
+        let off = self.layout.offset(plane, b, slot);
+        &self.tensor.as_f32().unwrap()[off..off + self.layout.row]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled_cache() -> KvCache {
+        // [2 planes(=L*2 collapsed), B=2, S=4, KH=1, hd=2] -> row=2
+        let shape = vec![2, 2, 4, 1, 2];
+        let mut kv = KvCache::zeros(shape).unwrap();
+        {
+            let data = kv.tensor.as_f32_mut().unwrap();
+            for (i, v) in data.iter_mut().enumerate() {
+                *v = i as f32;
+            }
+        }
+        kv
+    }
+
+    #[test]
+    fn layout_from_shape() {
+        let l = KvLayout::from_shape(&[6, 2, 1, 256, 2, 32]).unwrap();
+        assert_eq!(l.planes, 12);
+        assert_eq!(l.batch, 1);
+        assert_eq!(l.s, 256);
+        assert_eq!(l.row, 64);
+        assert!(KvLayout::from_shape(&[1, 2]).is_err());
+    }
+
+    #[test]
+    fn compact_moves_rows() {
+        let mut kv = filled_cache();
+        let orig_p0_b1_s3 = kv.row(0, 1, 3).to_vec();
+        let orig_p1_b1_s1 = kv.row(1, 1, 1).to_vec();
+        // at base=1, keep appended slots {0, 2} (absolute slots 1 and 3)
+        kv.compact(1, 1, &[0, 2]).unwrap();
+        assert_eq!(kv.len(1), 3);
+        // slot base+1 (abs 2) now holds what was at abs slot 3
+        assert_eq!(kv.row(0, 1, 2), orig_p0_b1_s3.as_slice());
+        // slot base+0 unchanged
+        assert_eq!(kv.row(1, 1, 1), orig_p1_b1_s1.as_slice());
+        // other batch untouched
+        let fresh = filled_cache();
+        assert_eq!(kv.row(0, 0, 3), fresh.row(0, 0, 3));
+    }
+
+    #[test]
+    fn compact_rejects_unsorted() {
+        let mut kv = filled_cache();
+        assert!(kv.compact(0, 0, &[2, 1]).is_err());
+        assert!(kv.compact(0, 2, &[0, 5]).is_err()); // out of range
+    }
+
+    #[test]
+    fn rollback_shrinks() {
+        let mut kv = filled_cache();
+        kv.set_len(0, 4);
+        kv.rollback(0, 2);
+        assert_eq!(kv.len(0), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overflow_panics() {
+        let mut kv = filled_cache();
+        kv.set_len(0, 5);
+    }
+}

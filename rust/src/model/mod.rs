@@ -1,0 +1,14 @@
+//! Model layer: spec, tokenizer, KV state, paged accounting, and the
+//! single-request target interface over the AOT executables.
+
+pub mod kvcache;
+pub mod paged;
+pub mod spec;
+pub mod target;
+pub mod tokenizer;
+
+pub use kvcache::{KvCache, KvLayout};
+pub use paged::{BlockPool, Lease};
+pub use spec::ModelSpec;
+pub use target::{build_mask, MaskRow, PrefillOut, TargetModel, VerifyOut, NEG};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,178 @@
+//! Model spec: the dimensions/contract exported by `aot.py` as
+//! `artifacts/<target>/spec.json`. Single source of truth shared with
+//! the python side (`python/compile/configs.py`).
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct SpsDims {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub stands_for: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub taps: Vec<usize>,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub feat_dim: usize,
+    pub bos: i32,
+    pub eos: i32,
+    pub pad: i32,
+    pub prefill_chunk: usize,
+    pub draft_depth: usize,
+    pub tree_top_k: usize,
+    pub tree_nodes: usize,
+    pub medusa_heads: usize,
+    pub sps_chain: usize,
+    pub sps: SpsDims,
+    pub drafter_sets: Vec<String>,
+    pub batch_sizes: Vec<usize>,
+    pub verify_ms: Vec<usize>,
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("spec.json missing {key:?}"))
+}
+
+impl ModelSpec {
+    pub fn parse(text: &str) -> Result<ModelSpec> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let sps = v.get("sps").context("spec.json missing sps")?;
+        // executable inventory -> which verify-M variants exist
+        let mut verify_ms: Vec<usize> = Vec::new();
+        if let Some(execs) = v.get("executables").and_then(Json::as_obj) {
+            for name in execs.keys() {
+                if let Some(rest) = name.strip_prefix("tgt_m") {
+                    if !rest.contains("_b") {
+                        if let Ok(m) = rest.parse::<usize>() {
+                            verify_ms.push(m);
+                        }
+                    }
+                }
+            }
+        }
+        verify_ms.sort_unstable();
+        verify_ms.dedup();
+        Ok(ModelSpec {
+            name: v.get("name").and_then(Json::as_str).context("name")?.to_string(),
+            stands_for: v
+                .get("stands_for")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            d_model: req_usize(&v, "d_model")?,
+            n_layers: req_usize(&v, "n_layers")?,
+            n_heads: req_usize(&v, "n_heads")?,
+            n_kv_heads: req_usize(&v, "n_kv_heads")?,
+            head_dim: req_usize(&v, "head_dim")?,
+            ffn: req_usize(&v, "ffn")?,
+            taps: v
+                .get("taps")
+                .and_then(Json::as_arr)
+                .context("taps")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            max_seq: req_usize(&v, "max_seq")?,
+            vocab: req_usize(&v, "vocab")?,
+            feat_dim: req_usize(&v, "feat_dim")?,
+            bos: v.get("bos").and_then(Json::as_i64).context("bos")? as i32,
+            eos: v.get("eos").and_then(Json::as_i64).context("eos")? as i32,
+            pad: v.get("pad").and_then(Json::as_i64).context("pad")? as i32,
+            prefill_chunk: req_usize(&v, "prefill_chunk")?,
+            draft_depth: req_usize(&v, "draft_depth")?,
+            tree_top_k: req_usize(&v, "tree_top_k")?,
+            tree_nodes: req_usize(&v, "tree_nodes")?,
+            medusa_heads: req_usize(&v, "medusa_heads")?,
+            sps_chain: req_usize(&v, "sps_chain")?,
+            sps: SpsDims {
+                d_model: req_usize(sps, "d_model")?,
+                n_layers: req_usize(sps, "n_layers")?,
+                n_kv_heads: req_usize(sps, "n_kv_heads")?,
+                head_dim: req_usize(sps, "head_dim")?,
+            },
+            drafter_sets: v
+                .get("drafter_sets")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+            batch_sizes: v
+                .get("batch_sizes")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_else(|| vec![1]),
+            verify_ms,
+        })
+    }
+
+    /// KV dim per row (KH * hd).
+    pub fn kv_row(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// f32 elements of the target KV cache for one request.
+    pub fn target_kv_elems(&self) -> usize {
+        self.n_layers * 2 * self.max_seq * self.kv_row()
+    }
+
+    /// f32 elements of a drafter's KV state for one request
+    /// (`layers` = cascade depth for FastEagle, 1 for EAGLE, sps layers).
+    pub fn drafter_kv_elems(&self, layers: usize) -> usize {
+        layers * 2 * self.max_seq * self.kv_row()
+    }
+
+    /// Smallest lowered verify variant with at least `m` rows.
+    pub fn verify_m_for(&self, m: usize) -> Option<usize> {
+        self.verify_ms.iter().copied().find(|&v| v >= m)
+    }
+}
+
+/// Shared sample spec for unit tests across modules.
+#[cfg(test)]
+pub mod tests_sample {
+    pub const SAMPLE: &str = r#"{
+      "name": "base", "stands_for": "Vicuna-13B",
+      "d_model": 192, "n_layers": 6, "n_heads": 6, "n_kv_heads": 2,
+      "head_dim": 32, "ffn": 576, "taps": [1,3,5], "max_seq": 256,
+      "vocab": 272, "feat_dim": 576, "bos": 256, "eos": 257, "pad": 258,
+      "prefill_chunk": 32, "draft_depth": 6, "tree_top_k": 3,
+      "tree_nodes": 18, "medusa_heads": 4, "sps_chain": 5,
+      "sps": {"d_model": 96, "n_layers": 2, "n_kv_heads": 1, "head_dim": 32},
+      "drafter_sets": ["fasteagle", "eagle3"],
+      "executables": {"tgt_m1": {}, "tgt_m18": {}, "tgt_m2_b4": {}},
+      "batch_sizes": [1]
+    }"#;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_sample::SAMPLE;
+    use super::*;
+
+    #[test]
+    fn parses() {
+        let s = ModelSpec::parse(SAMPLE).unwrap();
+        assert_eq!(s.name, "base");
+        assert_eq!(s.kv_row(), 64);
+        assert_eq!(s.target_kv_elems(), 6 * 2 * 256 * 64);
+        assert_eq!(s.verify_ms, vec![1, 18]);
+        assert_eq!(s.verify_m_for(5), Some(18));
+        assert_eq!(s.verify_m_for(1), Some(1));
+        assert_eq!(s.verify_m_for(99), None);
+    }
+}

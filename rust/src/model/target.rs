@@ -1,0 +1,278 @@
+//! Target-model interface: chunked prefill + tree/chain verification over
+//! the AOT executables (`tgt_m{M}`), with explicit mask construction.
+//!
+//! Masks are additive [1, T, S] tensors built here from `MaskRow`
+//! descriptors: each row sees `[0, prefix_upto)` plus an explicit set of
+//! extra absolute slots (its tree ancestors in the temp region). Padded
+//! rows (the lowered executables have fixed T) see only slot 0 so their
+//! softmax stays finite; their outputs and KV writes are dead and are
+//! rolled back / overwritten by construction.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::registry::ArtifactStore;
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::BoundExec;
+
+use super::kvcache::KvCache;
+use super::spec::ModelSpec;
+
+pub const NEG: f32 = -1e9;
+
+/// Visibility of one verify/prefill row.
+#[derive(Debug, Clone, Default)]
+pub struct MaskRow {
+    /// row sees absolute slots [0, prefix_upto)
+    pub prefix_upto: usize,
+    /// plus these absolute slots (tree ancestors / self)
+    pub extra: Vec<usize>,
+}
+
+/// Build the additive [1, t, s] mask tensor from row descriptors.
+/// Rows beyond `rows.len()` are padding and see only slot 0.
+pub fn build_mask(t: usize, s: usize, rows: &[MaskRow]) -> HostTensor {
+    let mut data = vec![NEG; t * s];
+    for (i, row) in rows.iter().enumerate() {
+        let base = i * s;
+        let upto = row.prefix_upto.min(s);
+        for v in &mut data[base..base + upto] {
+            *v = 0.0;
+        }
+        for &e in &row.extra {
+            if e < s {
+                data[base + e] = 0.0;
+            }
+        }
+    }
+    for i in rows.len()..t {
+        data[i * s] = 0.0; // padding rows: slot 0 keeps softmax finite
+    }
+    HostTensor::f32(vec![1, t, s], data)
+}
+
+pub struct PrefillOut {
+    /// [prompt_len, feat_dim] multi-level features of every prompt token
+    pub feats: Vec<f32>,
+    /// [vocab] logits at the last prompt token
+    pub last_logits: Vec<f32>,
+}
+
+pub struct VerifyOut {
+    /// [n, vocab] logits of the n real (non-pad) rows
+    pub logits: Vec<f32>,
+    /// [n, feat_dim] features of the n real rows (empty if the model
+    /// variant exports none, e.g. the SpS draft LM)
+    pub feats: Vec<f32>,
+}
+
+/// Single-request (B=1) interface over a target-style model — used both
+/// for the real target (`tgt_*`, with feature taps) and the SpS draft LM
+/// (`sps_*`, logits only).
+pub struct TargetModel {
+    pub spec: ModelSpec,
+    store: Rc<ArtifactStore>,
+    exec_prefix: &'static str,
+    wset: &'static str,
+    with_feats: bool,
+    kv_layers: usize,
+    d_model: usize,
+}
+
+impl TargetModel {
+    pub fn open(store: Rc<ArtifactStore>) -> Result<TargetModel> {
+        let spec = ModelSpec::parse(&store.spec_json()?)?;
+        let (n_layers, d_model) = (spec.n_layers, spec.d_model);
+        Ok(TargetModel {
+            spec,
+            store,
+            exec_prefix: "tgt",
+            wset: "target",
+            with_feats: true,
+            kv_layers: n_layers,
+            d_model,
+        })
+    }
+
+    /// The SpS baseline's separate draft LM, sharing the artifact dir.
+    pub fn open_sps(store: Rc<ArtifactStore>) -> Result<TargetModel> {
+        let spec = ModelSpec::parse(&store.spec_json()?)?;
+        let (n_layers, d_model) = (spec.sps.n_layers, spec.sps.d_model);
+        Ok(TargetModel {
+            spec,
+            store,
+            exec_prefix: "sps",
+            wset: "sps",
+            with_feats: false,
+            kv_layers: n_layers,
+            d_model,
+        })
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        if self.with_feats {
+            self.spec.feat_dim
+        } else {
+            0
+        }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.spec.vocab
+    }
+
+    /// Hidden width of this model variant (the SpS LM differs from the
+    /// target).
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    fn kv_heads(&self) -> (usize, usize) {
+        if self.with_feats {
+            (self.spec.n_kv_heads, self.spec.head_dim)
+        } else {
+            (self.spec.sps.n_kv_heads, self.spec.sps.head_dim)
+        }
+    }
+
+    pub fn new_kv(&self) -> Result<KvCache> {
+        let (kh, hd) = self.kv_heads();
+        KvCache::zeros(vec![self.kv_layers, 2, 1, self.spec.max_seq, kh, hd])
+    }
+
+    /// Verify-M variants this model exports (e.g. [1, 2, 5, 6, 18, 32]).
+    fn m_for(&self, n: usize) -> Result<usize> {
+        if self.exec_prefix == "sps" {
+            // sps exports m1/m8/m32
+            for m in [1usize, 8, 32] {
+                if m >= n {
+                    return Ok(m);
+                }
+            }
+            bail!("no sps executable fits {n} rows");
+        }
+        self.spec
+            .verify_m_for(n)
+            .with_context(|| format!("no {} executable fits {n} rows", self.exec_prefix))
+    }
+
+    fn exec(&self, m: usize) -> Result<Rc<BoundExec>> {
+        self.store
+            .bind(&format!("{}_m{}", self.exec_prefix, m), self.wset)
+    }
+
+    /// Run one fixed-shape call: `tokens`/`positions`/`rows` may be
+    /// shorter than the executable's M — they are padded here. The new KV
+    /// rows land at `kv.len(0)`; the caller decides what to keep
+    /// (set_len / compact / rollback).
+    pub fn step(
+        &self,
+        kv: &mut KvCache,
+        tokens: &[i32],
+        positions: &[i32],
+        rows: &[MaskRow],
+    ) -> Result<VerifyOut> {
+        let n = tokens.len();
+        assert_eq!(positions.len(), n);
+        assert_eq!(rows.len(), n);
+        let m = self.m_for(n)?;
+        let s = self.spec.max_seq;
+        let cache_len = kv.len(0);
+        if cache_len + m > s {
+            bail!("kv overflow: cache_len {cache_len} + m {m} > {s}");
+        }
+        let mut toks = vec![self.spec.pad; m];
+        toks[..n].copy_from_slice(tokens);
+        let mut pos = vec![0i32; m];
+        for (i, &p) in positions.iter().enumerate() {
+            pos[i] = p.min(s as i32 - 1);
+        }
+        let mask = build_mask(m, s, rows);
+        let tokens_t = HostTensor::i32(vec![1, m], toks);
+        let pos_t = HostTensor::i32(vec![1, m], pos);
+        let cl_t = HostTensor::i32(vec![1], vec![cache_len as i32]);
+
+        let exec = self.exec(m)?;
+        let outs = exec.call(
+            &self.store.runtime,
+            &[
+                ("tokens", &tokens_t),
+                ("positions", &pos_t),
+                ("mask", &mask),
+                ("cache_len", &cl_t),
+                ("kv", kv.tensor()),
+            ],
+        )?;
+        let li = exec.out_idx("logits")?;
+        let ki = exec.out_idx("kv")?;
+        let v = self.spec.vocab;
+        let logits = outs[li].as_f32()?[..n * v].to_vec();
+        let feats = if self.with_feats {
+            let fi = exec.out_idx("feats")?;
+            outs[fi].as_f32()?[..n * self.spec.feat_dim].to_vec()
+        } else {
+            Vec::new()
+        };
+        // take the kv output (clone-free: move out of the Vec)
+        let mut outs = outs;
+        kv.update_from(outs.swap_remove(ki))?;
+        Ok(VerifyOut { logits, feats })
+    }
+
+    /// Chunked prompt ingestion. Returns features for every prompt token
+    /// (the drafters' anchor inputs) and the last token's logits.
+    pub fn prefill(&self, kv: &mut KvCache, tokens: &[i32]) -> Result<PrefillOut> {
+        let chunk = self.spec.prefill_chunk;
+        let fd = self.feat_dim();
+        let v = self.spec.vocab;
+        let mut feats = Vec::with_capacity(tokens.len() * fd);
+        let mut last_logits = vec![0.0f32; v];
+        let mut base = 0usize;
+        while base < tokens.len() {
+            let n = (tokens.len() - base).min(chunk);
+            let toks = &tokens[base..base + n];
+            let positions: Vec<i32> = (base..base + n).map(|p| p as i32).collect();
+            let rows: Vec<MaskRow> = (0..n)
+                .map(|i| MaskRow { prefix_upto: base + i + 1, extra: vec![] })
+                .collect();
+            let out = self.step(kv, toks, &positions, &rows)?;
+            let new_len = base + n;
+            kv.set_len(0, new_len);
+            if fd > 0 {
+                feats.extend_from_slice(&out.feats);
+            }
+            if new_len == tokens.len() {
+                last_logits.copy_from_slice(&out.logits[(n - 1) * v..n * v]);
+            }
+            base = new_len;
+        }
+        Ok(PrefillOut { feats, last_logits })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_rows() {
+        let m = build_mask(3, 5, &[
+            MaskRow { prefix_upto: 2, extra: vec![4] },
+            MaskRow { prefix_upto: 0, extra: vec![2] },
+        ]);
+        let d = m.as_f32().unwrap();
+        // row 0: slots 0,1,4 visible
+        assert_eq!(&d[0..5], &[0.0, 0.0, NEG, NEG, 0.0]);
+        // row 1: slot 2 only
+        assert_eq!(&d[5..10], &[NEG, NEG, 0.0, NEG, NEG]);
+        // row 2 is padding: slot 0 only
+        assert_eq!(&d[10..15], &[0.0, NEG, NEG, NEG, NEG]);
+    }
+
+    #[test]
+    fn mask_clips_out_of_range() {
+        let m = build_mask(1, 3, &[MaskRow { prefix_upto: 99, extra: vec![7] }]);
+        assert_eq!(m.as_f32().unwrap(), &[0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,79 @@
+//! Byte-level tokenizer, mirroring `python/compile/data.py`:
+//! ids 0..255 are raw bytes, then BOS/EOS/PAD specials.
+
+#[derive(Debug, Clone, Copy)]
+pub struct Tokenizer {
+    pub bos: i32,
+    pub eos: i32,
+    pub pad: i32,
+}
+
+impl Tokenizer {
+    pub fn new(bos: i32, eos: i32, pad: i32) -> Tokenizer {
+        Tokenizer { bos, eos, pad }
+    }
+
+    /// Encode text (no specials added).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    /// Encode with a leading BOS (the prompt form the models saw in
+    /// training).
+    pub fn encode_prompt(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(self.bos);
+        out.extend(text.bytes().map(|b| b as i32));
+        out
+    }
+
+    /// Decode, dropping special/out-of-range ids and invalid utf-8.
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_special(&self, t: i32) -> bool {
+        t == self.bos || t == self.eos || t == self.pad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new(256, 257, 258)
+    }
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = tok();
+        let ids = t.encode("hello, world");
+        assert_eq!(t.decode(&ids), "hello, world");
+    }
+
+    #[test]
+    fn prompt_has_bos() {
+        let t = tok();
+        let ids = t.encode_prompt("ab");
+        assert_eq!(ids, vec![256, 97, 98]);
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        let t = tok();
+        assert_eq!(t.decode(&[256, 104, 105, 257, 258]), "hi");
+    }
+
+    #[test]
+    fn utf8_multibyte_roundtrip() {
+        let t = tok();
+        let s = "café→☂";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+}

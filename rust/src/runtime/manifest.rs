@@ -1,0 +1,154 @@
+//! Executable IO manifests (`<exec>.io.json`, written by
+//! `python/compile/aot.py`): the flattened parameter order of each
+//! lowered HLO module, with a kind tag per input.
+//!
+//! kind = "weight"  → bound from the active `WeightSet` by name
+//! kind = "state"   → per-request state threaded by the caller (KV caches)
+//! kind = "arg"     → per-call argument (tokens, masks, positions, ...)
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::Dtype;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Weight,
+    State,
+    Arg,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub kind: Kind,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecManifest {
+    pub name: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+fn parse_iospec(v: &Json, with_kind: bool) -> Result<IoSpec> {
+    let name = v
+        .get("name")
+        .and_then(Json::as_str)
+        .context("io entry missing name")?
+        .to_string();
+    let kind = if with_kind {
+        match v.get("kind").and_then(Json::as_str) {
+            Some("weight") => Kind::Weight,
+            Some("state") => Kind::State,
+            Some("arg") => Kind::Arg,
+            other => bail!("input {name:?}: bad kind {other:?}"),
+        }
+    } else {
+        Kind::Arg
+    };
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .context("io entry missing shape")?
+        .iter()
+        .map(|d| d.as_usize().context("bad dim"))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = Dtype::from_str(
+        v.get("dtype").and_then(Json::as_str).context("io entry missing dtype")?,
+    )?;
+    Ok(IoSpec { name, kind, shape, dtype })
+}
+
+impl ExecManifest {
+    pub fn parse(text: &str) -> Result<ExecManifest> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .context("manifest missing name")?
+            .to_string();
+        let inputs = v
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .context("manifest missing inputs")?
+            .iter()
+            .map(|e| parse_iospec(e, true))
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = v
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .context("manifest missing outputs")?
+            .iter()
+            .map(|e| parse_iospec(e, false))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ExecManifest { name, inputs, outputs })
+    }
+
+    pub fn load(path: &Path) -> Result<ExecManifest> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("parse {path:?}"))
+    }
+
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|i| i.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|o| o.name == name)
+    }
+
+    /// Names of non-weight inputs, in parameter order.
+    pub fn runtime_inputs(&self) -> impl Iterator<Item = &IoSpec> {
+        self.inputs.iter().filter(|i| i.kind != Kind::Weight)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "tgt_m1",
+      "inputs": [
+        {"name": "emb", "kind": "weight", "shape": [272, 192], "dtype": "float32"},
+        {"name": "tokens", "kind": "arg", "shape": [1, 1], "dtype": "int32"},
+        {"name": "kv", "kind": "state", "shape": [6, 2, 1, 256, 2, 32], "dtype": "float32"}
+      ],
+      "outputs": [
+        {"name": "logits", "shape": [1, 1, 272], "dtype": "float32"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ExecManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "tgt_m1");
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.inputs[0].kind, Kind::Weight);
+        assert_eq!(m.inputs[2].kind, Kind::State);
+        assert_eq!(m.inputs[2].numel(), 6 * 2 * 256 * 2 * 32);
+        assert_eq!(m.outputs[0].shape, vec![1, 1, 272]);
+        assert_eq!(m.input_index("tokens"), Some(1));
+        assert_eq!(m.output_index("logits"), Some(0));
+        assert_eq!(m.runtime_inputs().count(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let bad = SAMPLE.replace("\"arg\"", "\"bogus\"");
+        assert!(ExecManifest::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Runtime layer: everything that touches the PJRT boundary.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX graphs (with the L1 Pallas
+//! kernels inlined in interpret mode) to HLO text; this module loads,
+//! compiles and executes them. Python never runs at serving time.
+
+pub mod client;
+pub mod manifest;
+pub mod registry;
+pub mod tensor;
+pub mod weights;
+
+pub use client::{BoundExec, Executable, Runtime};
+pub use manifest::{ExecManifest, IoSpec, Kind};
+pub use registry::ArtifactStore;
+pub use tensor::{Dtype, HostTensor, TensorData};
+pub use weights::WeightSet;

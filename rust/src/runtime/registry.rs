@@ -1,0 +1,86 @@
+//! Artifact store: lazy-compiled executables, cached weight sets and
+//! weight-bound executables for one target directory
+//! (`artifacts/<target>/`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::{BoundExec, Executable, Runtime};
+use super::weights::WeightSet;
+
+pub struct ArtifactStore {
+    pub runtime: Arc<Runtime>,
+    pub dir: PathBuf,
+    execs: RefCell<HashMap<String, Rc<Executable>>>,
+    weights: RefCell<HashMap<String, Rc<WeightSet>>>,
+    bound: RefCell<HashMap<String, Rc<BoundExec>>>,
+}
+
+impl ArtifactStore {
+    pub fn open(runtime: Arc<Runtime>, dir: PathBuf) -> Result<ArtifactStore> {
+        if !dir.join("spec.json").exists() {
+            bail!(
+                "{dir:?} has no spec.json — run `make artifacts` first (python -m compile.aot)"
+            );
+        }
+        Ok(ArtifactStore {
+            runtime,
+            dir,
+            execs: RefCell::new(HashMap::new()),
+            weights: RefCell::new(HashMap::new()),
+            bound: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn spec_json(&self) -> Result<String> {
+        std::fs::read_to_string(self.dir.join("spec.json")).context("read spec.json")
+    }
+
+    pub fn has_exec(&self, name: &str) -> bool {
+        self.dir.join("hlo").join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Lazily compile (and cache) an executable by name.
+    pub fn exec(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.execs.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let e = Rc::new(self.runtime.load_executable(&self.dir.join("hlo"), name)?);
+        self.execs.borrow_mut().insert(name.to_string(), Rc::clone(&e));
+        Ok(e)
+    }
+
+    /// Lazily load (and cache) a weight set by name (`target`,
+    /// `fasteagle`, `eagle3`, ...).
+    pub fn weights(&self, set: &str) -> Result<Rc<WeightSet>> {
+        if let Some(w) = self.weights.borrow().get(set) {
+            return Ok(Rc::clone(w));
+        }
+        let path = self.dir.join("weights").join(format!("{set}.few"));
+        let w = Rc::new(WeightSet::load(&path)?);
+        self.weights.borrow_mut().insert(set.to_string(), Rc::clone(&w));
+        Ok(w)
+    }
+
+    /// Executable bound to a weight set (weights uploaded once).
+    pub fn bind(&self, exec_name: &str, wset: &str) -> Result<Rc<BoundExec>> {
+        let key = format!("{exec_name}@{wset}");
+        if let Some(b) = self.bound.borrow().get(&key) {
+            return Ok(Rc::clone(b));
+        }
+        let e = self.exec(exec_name)?;
+        let w = self.weights(wset)?;
+        let b = Rc::new(e.bind(&self.runtime, &w)?);
+        self.bound.borrow_mut().insert(key, Rc::clone(&b));
+        Ok(b)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.execs.borrow().len()
+    }
+}

@@ -1,0 +1,168 @@
+//! Host tensor type: the CPU-side value that crosses the PJRT boundary.
+//!
+//! Only the two dtypes the artifact contract uses (f32 data / i32 tokens
+//! & indices); conversion to/from `xla::Literal` is a single untyped
+//! memcpy in each direction.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn from_str(s: &str) -> Result<Dtype> {
+        match s {
+            "float32" | "f32" => Ok(Dtype::F32),
+            "int32" | "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    fn element_type(self) -> xla::ElementType {
+        match self {
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::I32 => xla::ElementType::S32,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(numel(&shape), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(numel(&shape), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros(dtype: Dtype, shape: Vec<usize>) -> HostTensor {
+        let n = numel(&shape);
+        match dtype {
+            Dtype::F32 => HostTensor::f32(shape, vec![0.0; n]),
+            Dtype::I32 => HostTensor::i32(shape, vec![0; n]),
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::i32(vec![], vec![v])
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    fn raw_bytes(&self) -> &[u8] {
+        match &self.data {
+            TensorData::F32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+            TensorData::I32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype().element_type(),
+            &self.shape,
+            self.raw_bytes(),
+        )
+        .context("literal from host tensor")
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::f32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(HostTensor::i32(dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let t = HostTensor::zeros(Dtype::F32, vec![2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.as_f32().unwrap().len(), 6);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_scalar() {
+        let t = HostTensor::scalar_i32(-7);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[-7]);
+        assert!(back.shape.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_shape_panics() {
+        HostTensor::f32(vec![2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,175 @@
+//! FEW1 weight-file reader (writer: `python/compile/fmt.py`).
+//!
+//! A weight set is a name → tensor map; the executable wrapper binds the
+//! "weight"-kind inputs of an `*.io.json` manifest against it by name,
+//! converting each tensor to an `xla::Literal` once and caching it for
+//! the life of the process (weights are immutable at serving time).
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::{Dtype, HostTensor};
+
+#[derive(Debug)]
+pub struct WeightSet {
+    pub name: String,
+    tensors: HashMap<String, HostTensor>,
+}
+
+const MAGIC: &[u8; 4] = b"FEW1";
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+impl WeightSet {
+    pub fn load(path: &Path) -> Result<WeightSet> {
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: bad magic {magic:?}");
+        }
+        let count = read_u32(&mut f)? as usize;
+        let mut tensors = HashMap::with_capacity(count);
+        for _ in 0..count {
+            let nlen = read_u16(&mut f)? as usize;
+            let mut nb = vec![0u8; nlen];
+            f.read_exact(&mut nb)?;
+            let tname = String::from_utf8(nb).context("tensor name utf-8")?;
+            let dt = read_u8(&mut f)?;
+            let ndim = read_u8(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut raw = vec![0u8; n * 4];
+            f.read_exact(&mut raw)?;
+            let t = match dt {
+                0 => {
+                    let mut v = vec![0f32; n];
+                    for (i, ch) in raw.chunks_exact(4).enumerate() {
+                        v[i] = f32::from_le_bytes(ch.try_into().unwrap());
+                    }
+                    HostTensor::f32(shape, v)
+                }
+                1 => {
+                    let mut v = vec![0i32; n];
+                    for (i, ch) in raw.chunks_exact(4).enumerate() {
+                        v[i] = i32::from_le_bytes(ch.try_into().unwrap());
+                    }
+                    HostTensor::i32(shape, v)
+                }
+                other => bail!("{path:?}: unknown dtype tag {other}"),
+            };
+            tensors.insert(tname, t);
+        }
+        Ok(WeightSet { name, tensors })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&HostTensor> {
+        self.tensors.get(name)
+    }
+
+    /// Validate shape/dtype of a tensor against a manifest entry.
+    pub fn check(&self, name: &str, shape: &[usize], dtype: Dtype) -> Result<()> {
+        let t = self
+            .tensor(name)
+            .with_context(|| format!("weight {name:?} missing from set {:?}", self.name))?;
+        if t.shape != shape || t.dtype() != dtype {
+            bail!(
+                "weight {name:?}: set has {:?}/{:?}, manifest wants {shape:?}/{dtype:?}",
+                t.shape,
+                t.dtype()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_few(path: &Path, tensors: &[(&str, u8, Vec<u32>, Vec<u8>)]) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(tensors.len() as u32).to_le_bytes()).unwrap();
+        for (name, dt, dims, data) in tensors {
+            f.write_all(&(name.len() as u16).to_le_bytes()).unwrap();
+            f.write_all(name.as_bytes()).unwrap();
+            f.write_all(&[*dt, dims.len() as u8]).unwrap();
+            for d in dims {
+                f.write_all(&d.to_le_bytes()).unwrap();
+            }
+            f.write_all(data).unwrap();
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("few_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("set.few");
+        let f32data: Vec<u8> = [1.0f32, -2.5]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let i32data: Vec<u8> = [7i32].iter().flat_map(|v| v.to_le_bytes()).collect();
+        write_few(
+            &p,
+            &[
+                ("a/b", 0, vec![2], f32data),
+                ("c", 1, vec![1], i32data),
+            ],
+        );
+        let ws = WeightSet::load(&p).unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws.tensor("a/b").unwrap().as_f32().unwrap(), &[1.0, -2.5]);
+        assert_eq!(ws.tensor("c").unwrap().as_i32().unwrap(), &[7]);
+        assert!(ws.check("a/b", &[2], Dtype::F32).is_ok());
+        assert!(ws.check("a/b", &[3], Dtype::F32).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("few_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.few");
+        std::fs::write(&p, b"NOPE\x00\x00\x00\x00").unwrap();
+        assert!(WeightSet::load(&p).is_err());
+    }
+}

@@ -1,0 +1,271 @@
+//! Lossless verification over the draft tree (paper §2.4 "Parallel
+//! Verification").
+//!
+//! Greedy (T=0): walk the backbone/side candidates, accepting the child
+//! whose token equals the target argmax at the current node — output is
+//! token-identical to vanilla greedy decoding (asserted by the
+//! `losslessness` integration test).
+//!
+//! Stochastic (T>0): multi-round speculative sampling (Leviathan et al.,
+//! extended to sibling candidates as in SpecInfer/EAGLE): each candidate
+//! x is accepted with prob min(1, p(x)/q(x)); on rejection the target
+//! residual p ← norm(relu(p − q)) and the draft q zeroes the rejected
+//! token, so the committed token is always an exact sample from the
+//! target distribution.
+
+use super::sampler::Sampler;
+use super::tree::DraftTree;
+
+#[derive(Debug, Clone)]
+pub struct AcceptResult {
+    /// accepted path slots (ascending), always starting with the root 0
+    pub accepted_slots: Vec<usize>,
+    /// bonus token sampled from the target distribution at the last
+    /// accepted node (becomes the next cycle's pending/root token)
+    pub bonus: i32,
+    /// (depth, accepted?) for every level the walk attempted — feeds the
+    /// Fig. 3 per-depth acceptance-rate curves
+    pub depth_events: Vec<(usize, bool)>,
+}
+
+/// `target_dists[slot]` = temperature-adjusted target distribution at
+/// tree slot `slot` (i.e. the distribution of the token *after* that
+/// node's token).
+pub fn verify_tree(
+    tree: &DraftTree,
+    target_dists: &[Vec<f32>],
+    sampler: &mut Sampler,
+) -> AcceptResult {
+    assert_eq!(target_dists.len(), tree.len());
+    let mut accepted = vec![0usize];
+    let mut events = Vec::new();
+    let mut cur = 0usize;
+    loop {
+        let children = tree.children(cur);
+        if children.is_empty() {
+            let bonus = sampler.sample(&target_dists[cur]);
+            return AcceptResult { accepted_slots: accepted, bonus, depth_events: events };
+        }
+        let depth = tree.nodes[children[0]].depth;
+        if sampler.greedy() {
+            let p = &target_dists[cur];
+            let best = crate::util::rng::argmax(p) as i32;
+            if let Some(&c) = children.iter().find(|&&c| tree.nodes[c].token == best) {
+                events.push((depth, true));
+                accepted.push(c);
+                cur = c;
+            } else {
+                events.push((depth, false));
+                return AcceptResult {
+                    accepted_slots: accepted,
+                    bonus: best,
+                    depth_events: events,
+                };
+            }
+        } else {
+            let mut p = target_dists[cur].clone();
+            let level = tree.nodes[children[0]].level;
+            let mut q = tree.dists[level].clone();
+            let mut hit = None;
+            for &c in &children {
+                let tok = tree.nodes[c].token as usize;
+                let (px, qx) = (p[tok], q[tok]);
+                let a = if qx <= 0.0 {
+                    if px > 0.0 {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                } else {
+                    (px / qx).min(1.0)
+                };
+                if sampler.coin() < a {
+                    hit = Some(c);
+                    break;
+                }
+                // reject: residualize p, remove tok from q
+                residualize(&mut p, &q, tok);
+                q[tok] = 0.0;
+                normalize(&mut q);
+            }
+            match hit {
+                Some(c) => {
+                    events.push((depth, true));
+                    accepted.push(c);
+                    cur = c;
+                }
+                None => {
+                    events.push((depth, false));
+                    let bonus = sampler.sample(&p);
+                    return AcceptResult {
+                        accepted_slots: accepted,
+                        bonus,
+                        depth_events: events,
+                    };
+                }
+            }
+        }
+    }
+}
+
+/// p ← norm(relu(p − q)), with fallbacks that keep p a valid
+/// distribution and never resurrect the rejected token.
+fn residualize(p: &mut [f32], q: &[f32], rejected: usize) {
+    for (pi, qi) in p.iter_mut().zip(q.iter()) {
+        *pi = (*pi - *qi).max(0.0);
+    }
+    p[rejected] = 0.0;
+    if !normalize(p) {
+        // degenerate residual (p == q): fall back to p minus the
+        // rejected token
+        for (i, pi) in p.iter_mut().enumerate() {
+            *pi = if i == rejected { 0.0 } else { q[i] };
+        }
+        if !normalize(p) {
+            // everything concentrated on the rejected token: uniform
+            let u = 1.0 / (p.len() - 1) as f32;
+            for (i, pi) in p.iter_mut().enumerate() {
+                *pi = if i == rejected { 0.0 } else { u };
+            }
+        }
+    }
+}
+
+fn normalize(d: &mut [f32]) -> bool {
+    let s: f32 = d.iter().sum();
+    if s <= 0.0 {
+        return false;
+    }
+    let inv = 1.0 / s;
+    for v in d.iter_mut() {
+        *v *= inv;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_hot(v: usize, hot: usize) -> Vec<f32> {
+        let mut d = vec![0.0; v];
+        d[hot] = 1.0;
+        d
+    }
+
+    fn mix(v: usize, pairs: &[(usize, f32)]) -> Vec<f32> {
+        let mut d = vec![0.0; v];
+        for &(i, p) in pairs {
+            d[i] = p;
+        }
+        d
+    }
+
+    #[test]
+    fn greedy_accepts_matching_backbone() {
+        let v = 8;
+        // drafter predicts 1 then 2; target agrees
+        let dists = vec![mix(v, &[(1, 0.9), (3, 0.1)]), mix(v, &[(2, 0.9), (4, 0.1)])];
+        let tree = DraftTree::backbone_expansion(0, dists, 2);
+        let mut s = Sampler::new(0.0, 7);
+        // target: after root -> 1; after node(1) -> 2; after node(2) -> 5
+        let tds: Vec<Vec<f32>> = (0..tree.len())
+            .map(|slot| match tree.nodes[slot].token {
+                0 => one_hot(v, 1),
+                1 => one_hot(v, 2),
+                2 => one_hot(v, 5),
+                _ => one_hot(v, 7),
+            })
+            .collect();
+        let r = verify_tree(&tree, &tds, &mut s);
+        assert_eq!(r.accepted_slots.len(), 3); // root + both levels
+        assert_eq!(r.bonus, 5);
+        assert_eq!(r.depth_events, vec![(1, true), (2, true)]);
+    }
+
+    #[test]
+    fn greedy_takes_side_branch() {
+        let v = 8;
+        let dists = vec![mix(v, &[(1, 0.6), (3, 0.4)])];
+        let tree = DraftTree::backbone_expansion(0, dists, 2);
+        let mut s = Sampler::new(0.0, 7);
+        // target wants 3 (the side candidate), then 6
+        let tds: Vec<Vec<f32>> = (0..tree.len())
+            .map(|slot| match tree.nodes[slot].token {
+                0 => one_hot(v, 3),
+                3 => one_hot(v, 6),
+                _ => one_hot(v, 7),
+            })
+            .collect();
+        let r = verify_tree(&tree, &tds, &mut s);
+        assert_eq!(r.accepted_slots.len(), 2);
+        assert_eq!(tree.nodes[r.accepted_slots[1]].token, 3);
+        assert_eq!(r.bonus, 6);
+    }
+
+    #[test]
+    fn greedy_rejects_all() {
+        let v = 8;
+        let dists = vec![mix(v, &[(1, 0.6), (3, 0.4)])];
+        let tree = DraftTree::backbone_expansion(0, dists, 2);
+        let mut s = Sampler::new(0.0, 7);
+        let tds: Vec<Vec<f32>> = (0..tree.len()).map(|_| one_hot(v, 5)).collect();
+        let r = verify_tree(&tree, &tds, &mut s);
+        assert_eq!(r.accepted_slots, vec![0]);
+        assert_eq!(r.bonus, 5);
+        assert_eq!(r.depth_events, vec![(1, false)]);
+    }
+
+    /// Core losslessness property: with q == p the committed-token
+    /// distribution must equal p exactly; here we check the acceptance
+    /// never changes the marginal of the first committed token.
+    #[test]
+    fn stochastic_first_token_marginal_is_lossless() {
+        let v = 4;
+        let q = mix(v, &[(0, 0.45), (1, 0.35), (2, 0.15), (3, 0.05)]);
+        let p = mix(v, &[(0, 0.2), (1, 0.3), (2, 0.4), (3, 0.1)]);
+        let n = 200_000;
+        let mut counts = vec![0usize; v];
+        let mut s = Sampler::new(1.0, 42);
+        for _ in 0..n {
+            // candidates must be re-sampled per draw (without
+            // replacement) for the multi-round rule to be lossless
+            let tree = DraftTree::backbone_expansion_sampled(
+                9, vec![q.clone()], 2, s.rng_mut());
+            let tds: Vec<Vec<f32>> = vec![p.clone(); tree.len()];
+            let r = verify_tree(&tree, &tds, &mut s);
+            // first token after root: either an accepted level-1 node or
+            // the residual bonus
+            let tok = if r.accepted_slots.len() > 1 {
+                tree.nodes[r.accepted_slots[1]].token
+            } else {
+                r.bonus
+            };
+            counts[tok as usize] += 1;
+        }
+        for i in 0..v {
+            let freq = counts[i] as f64 / n as f64;
+            assert!(
+                (freq - p[i] as f64).abs() < 0.01,
+                "token {i}: freq {freq} vs p {}",
+                p[i]
+            );
+        }
+    }
+
+    #[test]
+    fn stochastic_q_equals_p_accepts_everything_eventually() {
+        // When q == p and k == V (all tokens are candidates), some child
+        // must always be accepted (total acceptance mass = 1).
+        let v = 4;
+        let p = mix(v, &[(0, 0.25), (1, 0.25), (2, 0.25), (3, 0.25)]);
+        let mut s = Sampler::new(1.0, 9);
+        for _ in 0..2000 {
+            let tree = DraftTree::backbone_expansion_sampled(
+                0, vec![p.clone()], v, s.rng_mut());
+            let tds: Vec<Vec<f32>> = vec![p.clone(); tree.len()];
+            let r = verify_tree(&tree, &tds, &mut s);
+            assert_eq!(r.accepted_slots.len(), 2, "must accept one of k=V candidates");
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Generation metrics: τ (average acceptance length per verification,
+//! the paper's second headline metric), per-depth acceptance rates
+//! (Fig. 3), and the phase latency breakdown.
+
+use std::time::Duration;
+
+use crate::util::timer::PhaseTimer;
+
+#[derive(Debug, Clone, Default)]
+pub struct GenMetrics {
+    /// verification cycles run
+    pub cycles: usize,
+    /// tokens committed beyond the prompt
+    pub new_tokens: usize,
+    /// Σ accepted-per-cycle (acceptance length includes the root/pending
+    /// token, as in the paper: τ = tokens per target forward)
+    pub tau_sum: usize,
+    /// index d-1 = tree depth d attempts / accepts
+    pub depth_attempts: Vec<u64>,
+    pub depth_accepts: Vec<u64>,
+    pub timer: PhaseTimer,
+    pub wall: Duration,
+    pub prompt_tokens: usize,
+}
+
+impl GenMetrics {
+    pub fn record_cycle(&mut self, accepted: usize, depth_events: &[(usize, bool)]) {
+        self.cycles += 1;
+        self.tau_sum += accepted;
+        for &(depth, ok) in depth_events {
+            if self.depth_attempts.len() < depth {
+                self.depth_attempts.resize(depth, 0);
+                self.depth_accepts.resize(depth, 0);
+            }
+            self.depth_attempts[depth - 1] += 1;
+            if ok {
+                self.depth_accepts[depth - 1] += 1;
+            }
+        }
+    }
+
+    /// Average acceptance length τ.
+    pub fn tau(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.tau_sum as f64 / self.cycles as f64
+        }
+    }
+
+    /// Acceptance rate at tree depth d (1-based), as plotted in Fig. 3.
+    pub fn accept_rate(&self, depth: usize) -> Option<f64> {
+        let a = *self.depth_attempts.get(depth - 1)?;
+        if a == 0 {
+            return None;
+        }
+        Some(*self.depth_accepts.get(depth - 1)? as f64 / a as f64)
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.new_tokens as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    pub fn merge(&mut self, other: &GenMetrics) {
+        self.cycles += other.cycles;
+        self.new_tokens += other.new_tokens;
+        self.tau_sum += other.tau_sum;
+        if self.depth_attempts.len() < other.depth_attempts.len() {
+            self.depth_attempts.resize(other.depth_attempts.len(), 0);
+            self.depth_accepts.resize(other.depth_accepts.len(), 0);
+        }
+        for (i, (&a, &c)) in other
+            .depth_attempts
+            .iter()
+            .zip(&other.depth_accepts)
+            .enumerate()
+        {
+            self.depth_attempts[i] += a;
+            self.depth_accepts[i] += c;
+        }
+        self.timer.merge(&other.timer);
+        self.wall += other.wall;
+        self.prompt_tokens += other.prompt_tokens;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_and_depth_rates() {
+        let mut m = GenMetrics::default();
+        m.record_cycle(3, &[(1, true), (2, true), (3, false)]);
+        m.record_cycle(1, &[(1, false)]);
+        assert!((m.tau() - 2.0).abs() < 1e-12);
+        assert_eq!(m.accept_rate(1), Some(0.5));
+        assert_eq!(m.accept_rate(2), Some(1.0));
+        assert_eq!(m.accept_rate(3), Some(0.0));
+        assert_eq!(m.accept_rate(4), None);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = GenMetrics::default();
+        a.record_cycle(2, &[(1, true)]);
+        let mut b = GenMetrics::default();
+        b.record_cycle(4, &[(1, true), (2, false)]);
+        b.new_tokens = 4;
+        a.merge(&b);
+        assert_eq!(a.cycles, 2);
+        assert_eq!(a.tau_sum, 6);
+        assert_eq!(a.depth_attempts[0], 2);
+        assert_eq!(a.new_tokens, 4);
+    }
+}

@@ -1,0 +1,14 @@
+//! Speculative-decoding core: constrained draft trees (§2.2), lossless
+//! verification (§2.4), sampling, per-request engine and metrics.
+
+pub mod accept;
+pub mod engine;
+pub mod metrics;
+pub mod sampler;
+pub mod tree;
+
+pub use accept::{verify_tree, AcceptResult};
+pub use engine::{Engine, GenConfig, GenResult};
+pub use metrics::GenMetrics;
+pub use sampler::Sampler;
+pub use tree::{DraftTree, TreeNode};

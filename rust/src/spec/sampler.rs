@@ -1,0 +1,126 @@
+//! Token sampling from target/draft distributions: temperature softmax,
+//! greedy argmax, top-p filtering, and seeded categorical draws.
+
+use crate::util::rng::{argmax, softmax_temp, Pcg64};
+
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    pub temperature: f32,
+    pub top_p: f32,
+    rng: Pcg64,
+}
+
+impl Sampler {
+    pub fn new(temperature: f32, seed: u64) -> Sampler {
+        Sampler { temperature, top_p: 1.0, rng: Pcg64::new(seed, 0xfa57_ea91e) }
+    }
+
+    pub fn greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    /// logits -> normalized distribution at this sampler's temperature
+    /// (one-hot argmax in the greedy limit).
+    pub fn dist_from_logits(&self, logits: &[f32]) -> Vec<f32> {
+        let mut d = logits.to_vec();
+        softmax_temp(&mut d, self.temperature);
+        if self.top_p < 1.0 && self.temperature > 0.0 {
+            apply_top_p(&mut d, self.top_p);
+        }
+        d
+    }
+
+    /// Draw a token from a normalized distribution.
+    pub fn sample(&mut self, dist: &[f32]) -> i32 {
+        if self.greedy() {
+            argmax(dist) as i32
+        } else {
+            self.rng.categorical(dist) as i32
+        }
+    }
+
+    /// Uniform draw in [0,1) (speculative accept/reject coin).
+    pub fn coin(&mut self) -> f32 {
+        self.rng.next_f64() as f32
+    }
+
+    /// Direct access to the underlying stream (tree-candidate sampling).
+    pub fn rng_mut(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Nucleus filtering in place: keep the smallest prefix of
+/// probability-sorted tokens with cumulative mass >= p, renormalize.
+pub fn apply_top_p(dist: &mut [f32], p: f32) {
+    let mut idx: Vec<usize> = (0..dist.len()).collect();
+    idx.sort_by(|&a, &b| dist[b].partial_cmp(&dist[a]).unwrap());
+    let mut acc = 0.0f32;
+    let mut cut = dist.len();
+    for (rank, &i) in idx.iter().enumerate() {
+        acc += dist[i];
+        if acc >= p {
+            cut = rank + 1;
+            break;
+        }
+    }
+    let keep: std::collections::HashSet<usize> = idx[..cut].iter().copied().collect();
+    let mut sum = 0.0f32;
+    for (i, v) in dist.iter_mut().enumerate() {
+        if !keep.contains(&i) {
+            *v = 0.0;
+        } else {
+            sum += *v;
+        }
+    }
+    if sum > 0.0 {
+        for v in dist.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut s = Sampler::new(0.0, 1);
+        let d = s.dist_from_logits(&[0.1, 2.0, 1.0]);
+        assert_eq!(d, vec![0.0, 1.0, 0.0]);
+        assert_eq!(s.sample(&d), 1);
+    }
+
+    #[test]
+    fn stochastic_matches_frequencies() {
+        let mut s = Sampler::new(1.0, 2);
+        let d = s.dist_from_logits(&[0.0, (4.0f32).ln(), 0.0]);
+        // probs = [1/6, 4/6, 1/6]
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[s.sample(&d) as usize] += 1;
+        }
+        assert!((counts[1] as f64 / 30_000.0 - 4.0 / 6.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn top_p_filters_tail() {
+        let mut d = vec![0.5f32, 0.3, 0.15, 0.05];
+        apply_top_p(&mut d, 0.8);
+        assert_eq!(d[3], 0.0);
+        assert_eq!(d[2], 0.0);
+        let sum: f32 = d.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!((d[0] - 0.625).abs() < 1e-6);
+    }
+
+    #[test]
+    fn temperature_sharpens() {
+        let s_hot = Sampler::new(2.0, 3);
+        let s_cold = Sampler::new(0.5, 3);
+        let hot = s_hot.dist_from_logits(&[1.0, 2.0]);
+        let cold = s_cold.dist_from_logits(&[1.0, 2.0]);
+        assert!(cold[1] > hot[1]);
+    }
+}

@@ -1,0 +1,357 @@
+//! Constrained draft tree — the paper's §2.2 "Backbone Expansion".
+//!
+//! Naive expansion of N draft distributions is k^N paths; Backbone
+//! Expansion keeps verification linear: sample the top-k candidates of
+//! q_{t+1} (most probable = backbone, rest = side branches), then for
+//! each level i = 2..N attach the top-k of q_{t+i} as children of the
+//! *previous backbone node* only. Exactly one backbone path of length N,
+//! ≤ k−1 side branches per level, O(N·k) nodes. k = 1 degenerates to a
+//! chain ("w/o Constrained Tree" ablation).
+//!
+//! Slot 0 is the **root**: the pending token (sampled from the true
+//! target distribution last cycle, hence always committed). Tree slots
+//! map 1:1 to rows of the verification call and to the temporary KV
+//! rows appended at `cache_len` — ancestor sets double as tree-attention
+//! mask rows (§2.4).
+
+use crate::util::rng::{top_k_indices, Pcg64};
+
+/// Draw up to k distinct indices from a probability vector, each drawn
+/// from the remaining renormalized mass (sampling without replacement).
+pub fn sample_without_replacement(q: &[f32], k: usize, rng: &mut Pcg64) -> Vec<usize> {
+    let mut rem = q.to_vec();
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k.min(q.len()) {
+        let sum: f32 = rem.iter().sum();
+        if sum <= 0.0 {
+            break;
+        }
+        let r = rng.next_f64() as f32 * sum;
+        let mut acc = 0.0f32;
+        let mut pick = rem.iter().rposition(|&p| p > 0.0).unwrap_or(0);
+        for (i, &p) in rem.iter().enumerate() {
+            acc += p;
+            if r < acc && p > 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        out.push(pick);
+        rem[pick] = 0.0;
+    }
+    out
+}
+
+#[derive(Debug, Clone)]
+pub struct TreeNode {
+    pub token: i32,
+    /// parent slot index; the root's parent is itself (slot 0)
+    pub parent: usize,
+    /// distance from the root (root = 0)
+    pub depth: usize,
+    /// index into `dists` of the distribution this node was drawn from
+    /// (usize::MAX for the root)
+    pub level: usize,
+    /// whether this node lies on the backbone path
+    pub backbone: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct DraftTree {
+    pub nodes: Vec<TreeNode>,
+    /// per-level draft distributions (temperature-adjusted, normalized);
+    /// needed by lossless stochastic verification
+    pub dists: Vec<Vec<f32>>,
+}
+
+impl DraftTree {
+    /// Root-only tree (vanilla decoding).
+    pub fn root_only(pending: i32) -> DraftTree {
+        DraftTree {
+            nodes: vec![TreeNode {
+                token: pending,
+                parent: 0,
+                depth: 0,
+                level: usize::MAX,
+                backbone: true,
+            }],
+            dists: vec![],
+        }
+    }
+
+    /// Backbone Expansion from per-level draft distributions, candidates
+    /// chosen by top-k (greedy decoding: acceptance compares against the
+    /// target argmax, so the k most probable candidates are optimal).
+    pub fn backbone_expansion(pending: i32, dists: Vec<Vec<f32>>, k: usize) -> DraftTree {
+        Self::backbone_expansion_impl(pending, dists, k, None)
+    }
+
+    /// Backbone Expansion with candidates *sampled without replacement*
+    /// from each level's q. Required for stochastic (T>0) decoding: the
+    /// multi-round speculative-sampling acceptance rule is only lossless
+    /// when sibling candidates are q-samples (EAGLE-2's theorem); with
+    /// deterministic top-k the committed marginal is biased toward the
+    /// drafter's favourites (caught by the
+    /// `stochastic_first_token_marginal_is_lossless` test).
+    pub fn backbone_expansion_sampled(
+        pending: i32,
+        dists: Vec<Vec<f32>>,
+        k: usize,
+        rng: &mut crate::util::rng::Pcg64,
+    ) -> DraftTree {
+        Self::backbone_expansion_impl(pending, dists, k, Some(rng))
+    }
+
+    fn backbone_expansion_impl(
+        pending: i32,
+        dists: Vec<Vec<f32>>,
+        k: usize,
+        mut rng: Option<&mut crate::util::rng::Pcg64>,
+    ) -> DraftTree {
+        let mut tree = DraftTree::root_only(pending);
+        let mut backbone = 0usize; // slot of the current backbone tail
+        for (level, q) in dists.iter().enumerate() {
+            let cand = match rng.as_deref_mut() {
+                None => top_k_indices(q, k),
+                Some(rng) => sample_without_replacement(q, k, rng),
+            };
+            if cand.is_empty() {
+                break;
+            }
+            let mut next_backbone = None;
+            for (rank, &tok) in cand.iter().enumerate() {
+                let slot = tree.nodes.len();
+                tree.nodes.push(TreeNode {
+                    token: tok as i32,
+                    parent: backbone,
+                    depth: level + 1,
+                    level,
+                    backbone: rank == 0,
+                });
+                if rank == 0 {
+                    next_backbone = Some(slot);
+                }
+            }
+            backbone = next_backbone.unwrap();
+        }
+        tree.dists = dists;
+        tree
+    }
+
+    /// Chain from pre-sampled tokens (SpS drafting, Table-3 chains);
+    /// `dists` must hold one distribution per chain token for stochastic
+    /// acceptance.
+    pub fn chain(pending: i32, tokens: &[i32], dists: Vec<Vec<f32>>) -> DraftTree {
+        assert_eq!(tokens.len(), dists.len());
+        let mut tree = DraftTree::root_only(pending);
+        for (level, &tok) in tokens.iter().enumerate() {
+            let parent = tree.nodes.len() - 1;
+            tree.nodes.push(TreeNode {
+                token: tok,
+                parent,
+                depth: level + 1,
+                level,
+                backbone: true,
+            });
+        }
+        tree.dists = dists;
+        tree
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn tokens(&self) -> Vec<i32> {
+        self.nodes.iter().map(|n| n.token).collect()
+    }
+
+    pub fn depths(&self) -> Vec<usize> {
+        self.nodes.iter().map(|n| n.depth).collect()
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.nodes.iter().map(|n| n.depth).max().unwrap_or(0)
+    }
+
+    /// Ancestor slot set of `slot`, **including itself**, ascending.
+    /// This is the tree-attention visibility row within the temp region.
+    pub fn ancestors(&self, slot: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.nodes[slot].depth + 1);
+        let mut cur = slot;
+        loop {
+            out.push(cur);
+            let p = self.nodes[cur].parent;
+            if p == cur {
+                break;
+            }
+            cur = p;
+        }
+        out.reverse();
+        out
+    }
+
+    /// Children of `slot` in candidate order (construction order ==
+    /// descending draft probability).
+    pub fn children(&self, slot: usize) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&i| i != slot && self.nodes[i].parent == slot)
+            .collect()
+    }
+
+    /// Structural invariants (used by the property tests).
+    pub fn check_invariants(&self, k: usize) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("empty tree".into());
+        }
+        if self.nodes[0].depth != 0 || self.nodes[0].parent != 0 {
+            return Err("bad root".into());
+        }
+        let mut backbone_per_depth = std::collections::BTreeMap::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            if i > 0 {
+                if n.parent >= i {
+                    return Err(format!("node {i} parent {} not earlier", n.parent));
+                }
+                if self.nodes[n.parent].depth + 1 != n.depth {
+                    return Err(format!("node {i} depth mismatch"));
+                }
+                if !self.nodes[n.parent].backbone {
+                    return Err(format!("node {i} hangs off a side branch"));
+                }
+            }
+            if n.backbone {
+                *backbone_per_depth.entry(n.depth).or_insert(0usize) += 1;
+            }
+            if self.children(i).len() > k {
+                return Err(format!("node {i} has more than k children"));
+            }
+        }
+        for (d, c) in backbone_per_depth {
+            if c != 1 {
+                return Err(format!("depth {d} has {c} backbone nodes"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn dist(v: usize, hot: usize) -> Vec<f32> {
+        let mut d = vec![0.5 / (v as f32 - 1.0); v];
+        d[hot] = 0.5;
+        d
+    }
+
+    #[test]
+    fn node_count_formula() {
+        let dists: Vec<_> = (0..6).map(|i| dist(16, i)).collect();
+        let t = DraftTree::backbone_expansion(9, dists, 3);
+        assert_eq!(t.len(), 1 + 6 * 3); // root + N*k
+        t.check_invariants(3).unwrap();
+        assert_eq!(t.max_depth(), 6);
+    }
+
+    #[test]
+    fn k1_degenerates_to_chain() {
+        let dists: Vec<_> = (0..4).map(|i| dist(8, i)).collect();
+        let t = DraftTree::backbone_expansion(1, dists, 1);
+        assert_eq!(t.len(), 5);
+        for (i, n) in t.nodes.iter().enumerate().skip(1) {
+            assert_eq!(n.parent, i - 1);
+            assert!(n.backbone);
+        }
+        t.check_invariants(1).unwrap();
+    }
+
+    #[test]
+    fn backbone_is_most_probable() {
+        let mut q1 = vec![0.0f32; 8];
+        q1[3] = 0.9;
+        q1[5] = 0.1;
+        let t = DraftTree::backbone_expansion(0, vec![q1], 2);
+        assert_eq!(t.nodes[1].token, 3);
+        assert!(t.nodes[1].backbone);
+        assert_eq!(t.nodes[2].token, 5);
+        assert!(!t.nodes[2].backbone);
+    }
+
+    #[test]
+    fn ancestors_follow_backbone() {
+        let dists: Vec<_> = (0..3).map(|i| dist(8, i)).collect();
+        let t = DraftTree::backbone_expansion(7, dists, 2);
+        // slots: 0 root, 1-2 level1, 3-4 level2 (children of 1), 5-6 level3
+        let anc = t.ancestors(6);
+        assert_eq!(anc, vec![0, 1, 3, 6]);
+        assert_eq!(t.ancestors(0), vec![0]);
+    }
+
+    #[test]
+    fn sampled_candidates_are_distinct_and_q_weighted() {
+        let mut rng = Pcg64::new(5, 0);
+        let q = vec![0.7f32, 0.2, 0.05, 0.05];
+        let mut first_counts = [0usize; 4];
+        for _ in 0..20_000 {
+            let c = sample_without_replacement(&q, 2, &mut rng);
+            assert_eq!(c.len(), 2);
+            assert_ne!(c[0], c[1]);
+            first_counts[c[0]] += 1;
+        }
+        // the first draw follows q
+        assert!((first_counts[0] as f64 / 20_000.0 - 0.7).abs() < 0.02);
+    }
+
+    #[test]
+    fn sampled_tree_keeps_invariants() {
+        let mut rng = Pcg64::new(6, 0);
+        for _ in 0..100 {
+            let dists: Vec<Vec<f32>> = (0..4)
+                .map(|_| {
+                    let mut d: Vec<f32> = (0..16).map(|_| rng.next_f64() as f32 + 0.01).collect();
+                    let s: f32 = d.iter().sum();
+                    d.iter_mut().for_each(|x| *x /= s);
+                    d
+                })
+                .collect();
+            let t = DraftTree::backbone_expansion_sampled(1, dists, 3, &mut rng);
+            t.check_invariants(3).unwrap();
+            assert_eq!(t.len(), 13);
+        }
+    }
+
+    #[test]
+    fn property_random_dists_keep_invariants() {
+        let mut rng = Pcg64::new(99, 0);
+        for _ in 0..200 {
+            let v = 8 + rng.below(64);
+            let n = 1 + rng.below(6);
+            let k = 1 + rng.below(4);
+            let dists: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut d: Vec<f32> =
+                        (0..v).map(|_| rng.next_f64() as f32).collect();
+                    let s: f32 = d.iter().sum();
+                    d.iter_mut().for_each(|x| *x /= s);
+                    d
+                })
+                .collect();
+            let t = DraftTree::backbone_expansion(0, dists, k);
+            t.check_invariants(k).unwrap();
+            assert_eq!(t.len(), 1 + n * k.min(v));
+            // every slot's ancestors are strictly ascending
+            for s in 0..t.len() {
+                let a = t.ancestors(s);
+                assert!(a.windows(2).all(|w| w[0] < w[1]));
+                assert_eq!(*a.last().unwrap(), s);
+            }
+        }
+    }
+}

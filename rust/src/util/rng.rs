@@ -1,0 +1,227 @@
+//! Deterministic RNG + sampling substrate (no `rand` crate offline).
+//!
+//! PCG64 (O'Neill) for the stream, plus the sampling primitives the
+//! speculative-decoding engine needs: uniform, categorical, top-k /
+//! top-p filtering, and Gumbel-free multinomial draws from normalized
+//! probability vectors. Deterministic across runs for reproducible
+//! experiments (EXPERIMENTS.md records the seeds).
+
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+        };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.step();
+        rng
+    }
+
+    fn step(&mut self) {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+    }
+
+    /// XSL-RR output function.
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // multiply-shift; bias negligible for our n << 2^64
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Exponential(1) variate (for Poisson arrival processes).
+    pub fn exp(&mut self) -> f64 {
+        let u = self.next_f64().max(1e-300);
+        -u.ln()
+    }
+
+    /// Draw an index from a normalized probability vector.
+    /// Falls back to argmax if the vector doesn't sum to ~1.
+    pub fn categorical(&mut self, probs: &[f32]) -> usize {
+        let r = self.next_f64() as f32;
+        let mut acc = 0.0f32;
+        for (i, &p) in probs.iter().enumerate() {
+            acc += p;
+            if r < acc {
+                return i;
+            }
+        }
+        // numerical tail: return the last index with non-zero mass
+        probs
+            .iter()
+            .rposition(|&p| p > 0.0)
+            .unwrap_or(probs.len() - 1)
+    }
+}
+
+/// Indices of the k largest values (descending by value). O(V·k) — V is
+/// tiny (272) so this beats heap overhead on the hot path.
+pub fn top_k_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(xs.len());
+    let mut idx: Vec<usize> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut best = usize::MAX;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &v) in xs.iter().enumerate() {
+            if idx.contains(&i) {
+                continue;
+            }
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        if best == usize::MAX {
+            break;
+        }
+        idx.push(best);
+    }
+    idx
+}
+
+/// In-place softmax with temperature; temperature == 0 produces a
+/// one-hot at the argmax (greedy limit).
+pub fn softmax_temp(logits: &mut [f32], temperature: f32) {
+    if logits.is_empty() {
+        return;
+    }
+    if temperature <= 0.0 {
+        let arg = argmax(logits);
+        for v in logits.iter_mut() {
+            *v = 0.0;
+        }
+        logits[arg] = 1.0;
+        return;
+    }
+    let inv = 1.0 / temperature;
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in logits.iter_mut() {
+        *v = ((*v - m) * inv).exp();
+        sum += *v;
+    }
+    let inv_sum = 1.0 / sum;
+    for v in logits.iter_mut() {
+        *v *= inv_sum;
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(42, 2);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Pcg64::new(7, 0);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Pcg64::new(3, 0);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn categorical_matches_distribution() {
+        let mut r = Pcg64::new(11, 0);
+        let probs = [0.1f32, 0.2, 0.7];
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.categorical(&probs)] += 1;
+        }
+        assert!((counts[2] as f64 / 30_000.0 - 0.7).abs() < 0.02, "{counts:?}");
+        assert!((counts[0] as f64 / 30_000.0 - 0.1).abs() < 0.02, "{counts:?}");
+    }
+
+    #[test]
+    fn top_k_sorted_desc() {
+        let xs = [0.1f32, 5.0, -2.0, 3.0, 3.5];
+        assert_eq!(top_k_indices(&xs, 3), vec![1, 4, 3]);
+        assert_eq!(top_k_indices(&xs, 99).len(), 5);
+    }
+
+    #[test]
+    fn softmax_temp_greedy_limit() {
+        let mut l = vec![1.0f32, 3.0, 2.0];
+        softmax_temp(&mut l, 0.0);
+        assert_eq!(l, vec![0.0, 1.0, 0.0]);
+        let mut l2 = vec![1.0f32, 3.0, 2.0];
+        softmax_temp(&mut l2, 1.0);
+        let s: f32 = l2.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(l2[1] > l2[2] && l2[2] > l2[0]);
+    }
+
+    #[test]
+    fn exp_mean_is_one() {
+        let mut r = Pcg64::new(5, 0);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.exp()).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.05, "{mean}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Phase-timing substrate: accumulates wall-clock per named phase so the
+//! engine can report the draft/verify/accept/update latency breakdown
+//! (EXPERIMENTS.md §Perf uses these numbers directly).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    acc: BTreeMap<&'static str, (Duration, u64)>,
+}
+
+pub struct Running<'a> {
+    timer: &'a mut PhaseTimer,
+    phase: &'static str,
+    start: Instant,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self, phase: &'static str) -> Running<'_> {
+        Running { start: Instant::now(), phase, timer: self }
+    }
+
+    pub fn record(&mut self, phase: &'static str, d: Duration) {
+        let e = self.acc.entry(phase).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    pub fn total(&self, phase: &str) -> Duration {
+        self.acc.get(phase).map(|e| e.0).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.acc.get(phase).map(|e| e.1).unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, (d, c)) in &other.acc {
+            let e = self.acc.entry(k).or_insert((Duration::ZERO, 0));
+            e.0 += *d;
+            e.1 += *c;
+        }
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, Duration, u64)> + '_ {
+        self.acc.iter().map(|(k, (d, c))| (*k, *d, *c))
+    }
+
+    pub fn report(&self) -> String {
+        let mut lines = Vec::new();
+        let total: Duration = self.acc.values().map(|e| e.0).sum();
+        for (k, (d, c)) in &self.acc {
+            let pct = if total.as_nanos() > 0 {
+                100.0 * d.as_secs_f64() / total.as_secs_f64()
+            } else {
+                0.0
+            };
+            lines.push(format!(
+                "  {k:<16} {:>9.1}ms  {c:>7} calls  {pct:>5.1}%",
+                d.as_secs_f64() * 1e3
+            ));
+        }
+        lines.join("\n")
+    }
+}
+
+impl Drop for Running<'_> {
+    fn drop(&mut self) {
+        let d = self.start.elapsed();
+        self.timer.record(self.phase, d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut t = PhaseTimer::new();
+        t.record("draft", Duration::from_millis(5));
+        t.record("draft", Duration::from_millis(7));
+        t.record("verify", Duration::from_millis(1));
+        assert_eq!(t.count("draft"), 2);
+        assert_eq!(t.total("draft"), Duration::from_millis(12));
+        assert_eq!(t.count("missing"), 0);
+    }
+
+    #[test]
+    fn raii_guard_records() {
+        let mut t = PhaseTimer::new();
+        {
+            let _g = t.start("x");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(t.count("x"), 1);
+        assert!(t.total("x") >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimer::new();
+        let mut b = PhaseTimer::new();
+        a.record("p", Duration::from_millis(1));
+        b.record("p", Duration::from_millis(2));
+        a.merge(&b);
+        assert_eq!(a.total("p"), Duration::from_millis(3));
+        assert_eq!(a.count("p"), 2);
+    }
+}

@@ -1,0 +1,132 @@
+//! Workload generation: held-out task prompts exported by the python
+//! side (`artifacts/prompts/<task>.json`), arrival processes, and trace
+//! replay for the serving benchmarks.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// The five synthetic tasks and the paper benchmark each stands in for.
+pub const TASKS: [(&str, &str); 5] = [
+    ("dialog", "MT-Bench"),
+    ("code", "HumanEval"),
+    ("math", "GSM8K"),
+    ("inst", "Alpaca"),
+    ("news", "CNN/DM"),
+];
+
+pub fn paper_name(task: &str) -> &'static str {
+    TASKS
+        .iter()
+        .find(|(t, _)| *t == task)
+        .map(|(_, p)| *p)
+        .unwrap_or("?")
+}
+
+/// Load the held-out prompts for one task.
+pub fn load_prompts(artifacts_root: &Path, task: &str) -> Result<Vec<String>> {
+    let path = artifacts_root.join("prompts").join(format!("{task}.json"));
+    let text = std::fs::read_to_string(&path).with_context(|| format!("{path:?}"))?;
+    let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let arr = v.as_arr().context("prompt file is not an array")?;
+    let out: Vec<String> = arr
+        .iter()
+        .filter_map(|p| p.as_str().map(String::from))
+        .collect();
+    if out.is_empty() {
+        bail!("{path:?}: no prompts");
+    }
+    Ok(out)
+}
+
+/// One request in an open-loop trace.
+#[derive(Debug, Clone)]
+pub struct TraceItem {
+    /// offset from trace start
+    pub at: Duration,
+    pub prompt: String,
+    pub max_new: usize,
+}
+
+/// Poisson arrivals at `rate_per_sec` over `n` requests, prompts drawn
+/// uniformly from the pool.
+pub fn poisson_trace(
+    prompts: &[String],
+    n: usize,
+    rate_per_sec: f64,
+    max_new: usize,
+    seed: u64,
+) -> Vec<TraceItem> {
+    let mut rng = Pcg64::new(seed, 7);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            t += rng.exp() / rate_per_sec.max(1e-9);
+            TraceItem {
+                at: Duration::from_secs_f64(t),
+                prompt: prompts[rng.below(prompts.len())].clone(),
+                max_new,
+            }
+        })
+        .collect()
+}
+
+/// Bursty trace: `bursts` groups of `burst_size` back-to-back requests
+/// separated by `gap`.
+pub fn bursty_trace(
+    prompts: &[String],
+    bursts: usize,
+    burst_size: usize,
+    gap: Duration,
+    max_new: usize,
+    seed: u64,
+) -> Vec<TraceItem> {
+    let mut rng = Pcg64::new(seed, 8);
+    let mut out = Vec::with_capacity(bursts * burst_size);
+    for b in 0..bursts {
+        let at = gap * b as u32;
+        for _ in 0..burst_size {
+            out.push(TraceItem {
+                at,
+                prompt: prompts[rng.below(prompts.len())].clone(),
+                max_new,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_interarrivals_have_right_mean() {
+        let prompts = vec!["a".to_string(), "b".to_string()];
+        let tr = poisson_trace(&prompts, 2000, 10.0, 32, 1);
+        assert_eq!(tr.len(), 2000);
+        let total = tr.last().unwrap().at.as_secs_f64();
+        let rate = 2000.0 / total;
+        assert!((rate - 10.0).abs() < 1.0, "rate {rate}");
+        assert!(tr.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn bursty_shape() {
+        let prompts = vec!["p".to_string()];
+        let tr = bursty_trace(&prompts, 3, 4, Duration::from_secs(1), 16, 2);
+        assert_eq!(tr.len(), 12);
+        assert_eq!(tr[0].at, tr[3].at);
+        assert!(tr[4].at > tr[3].at);
+    }
+
+    #[test]
+    fn paper_names() {
+        assert_eq!(paper_name("code"), "HumanEval");
+        assert_eq!(paper_name("nope"), "?");
+    }
+}

@@ -1,0 +1,210 @@
+//! Hand-rolled property tests (the offline registry has no proptest —
+//! DESIGN.md §Substitutions) over the coordinator-side invariants that
+//! don't need artifacts: tree construction, lossless acceptance, KV
+//! compaction, the paged pool, and the JSON substrate. Seeded PCG sweeps,
+//! hundreds of cases each.
+
+use fasteagle::model::{BlockPool, KvCache, Lease};
+use fasteagle::spec::{verify_tree, DraftTree, Sampler};
+use fasteagle::util::json::Json;
+use fasteagle::util::rng::Pcg64;
+
+fn random_dist(rng: &mut Pcg64, v: usize) -> Vec<f32> {
+    let mut d: Vec<f32> = (0..v).map(|_| (rng.next_f64() as f32).powi(2) + 1e-4).collect();
+    let s: f32 = d.iter().sum();
+    d.iter_mut().for_each(|x| *x /= s);
+    d
+}
+
+/// Acceptance over random trees/targets: the accepted slots always form
+/// a root-anchored, strictly ascending path; the bonus is a valid token;
+/// depth events match the path length.
+#[test]
+fn acceptance_path_invariants_random_sweep() {
+    let mut rng = Pcg64::new(2024, 0);
+    for case in 0..400 {
+        let v = 8 + rng.below(48);
+        let depth = 1 + rng.below(6);
+        let k = 1 + rng.below(3);
+        let dists: Vec<Vec<f32>> = (0..depth).map(|_| random_dist(&mut rng, v)).collect();
+        let tree = DraftTree::backbone_expansion(rng.below(v) as i32, dists, k);
+        let target: Vec<Vec<f32>> =
+            (0..tree.len()).map(|_| random_dist(&mut rng, v)).collect();
+        let greedy = case % 2 == 0;
+        let mut sampler = Sampler::new(if greedy { 0.0 } else { 1.0 }, case as u64);
+        let target = if greedy {
+            target
+                .into_iter()
+                .map(|d| {
+                    let mut one = vec![0.0; d.len()];
+                    one[crate_argmax(&d)] = 1.0;
+                    one
+                })
+                .collect()
+        } else {
+            target
+        };
+        let r = verify_tree(&tree, &target, &mut sampler);
+        assert_eq!(r.accepted_slots[0], 0);
+        assert!(r.accepted_slots.windows(2).all(|w| w[0] < w[1]));
+        // the path is parent-linked
+        for w in r.accepted_slots.windows(2) {
+            assert_eq!(tree.nodes[w[1]].parent, w[0]);
+        }
+        assert!((r.bonus as usize) < v);
+        assert_eq!(r.depth_events.len(), {
+            // one event per attempted level = accepted levels (+1 if
+            // stopped before exhausting the tree's depth along the path)
+            let accepted_levels = r.accepted_slots.len() - 1;
+            let last = *r.accepted_slots.last().unwrap();
+            if tree.children(last).is_empty() {
+                accepted_levels
+            } else {
+                accepted_levels + 1
+            }
+        });
+    }
+}
+
+fn crate_argmax(xs: &[f32]) -> usize {
+    fasteagle::util::rng::argmax(xs)
+}
+
+/// Greedy acceptance is deterministic and equals the target argmax chain
+/// restricted to the tree.
+#[test]
+fn greedy_acceptance_is_deterministic() {
+    let mut rng = Pcg64::new(7, 0);
+    for _ in 0..100 {
+        let v = 16;
+        let dists: Vec<Vec<f32>> = (0..4).map(|_| random_dist(&mut rng, v)).collect();
+        let tree = DraftTree::backbone_expansion(3, dists, 2);
+        let target: Vec<Vec<f32>> =
+            (0..tree.len()).map(|_| random_dist(&mut rng, v)).collect();
+        let mut s1 = Sampler::new(0.0, 1);
+        let mut s2 = Sampler::new(0.0, 999); // different seed, same result
+        let r1 = verify_tree(&tree, &target, &mut s1);
+        let r2 = verify_tree(&tree, &target, &mut s2);
+        assert_eq!(r1.accepted_slots, r2.accepted_slots);
+        assert_eq!(r1.bonus, r2.bonus);
+    }
+}
+
+/// KV compaction: random accept patterns preserve the kept rows exactly
+/// and leave other batch lanes untouched.
+#[test]
+fn kv_compaction_random_sweep() {
+    let mut rng = Pcg64::new(11, 0);
+    for _ in 0..200 {
+        let planes = 1 + rng.below(4);
+        let batch = 1 + rng.below(3);
+        let s = 8 + rng.below(24);
+        let row = 1 + rng.below(8);
+        let shape = vec![planes, batch, s, 1, row];
+        let mut kv = KvCache::zeros(shape).unwrap();
+        let total: usize = planes * batch * s * row;
+        {
+            let data = kv.tensor_mut_for_tests();
+            for i in 0..total {
+                data[i] = i as f32;
+            }
+        }
+        let b = rng.below(batch);
+        let base = rng.below(s / 2);
+        let appended = s - base;
+        let mut kept: Vec<usize> = (0..appended).filter(|_| rng.below(2) == 1).collect();
+        if kept.is_empty() {
+            kept.push(0);
+        }
+        // snapshot expected rows
+        let expected: Vec<Vec<f32>> = kept
+            .iter()
+            .flat_map(|&slot| {
+                (0..planes).map(move |p| (p, slot))
+            })
+            .map(|(p, slot)| kv.row(p, b, base + slot).to_vec())
+            .collect();
+        let before_other: Vec<f32> = (0..batch)
+            .filter(|&ob| ob != b)
+            .flat_map(|ob| kv.row(0, ob, 0).to_vec())
+            .collect();
+        kv.compact(b, base, &kept).unwrap();
+        assert_eq!(kv.len(b), base + kept.len());
+        let mut idx = 0;
+        for (i, _) in kept.iter().enumerate() {
+            for p in 0..planes {
+                assert_eq!(kv.row(p, b, base + i), expected[idx].as_slice());
+                idx += 1;
+            }
+        }
+        let after_other: Vec<f32> = (0..batch)
+            .filter(|&ob| ob != b)
+            .flat_map(|ob| kv.row(0, ob, 0).to_vec())
+            .collect();
+        assert_eq!(before_other, after_other);
+    }
+}
+
+/// Paged pool: random alloc/release interleavings never double-lease or
+/// leak blocks.
+#[test]
+fn block_pool_no_leaks_random_sweep() {
+    let mut rng = Pcg64::new(13, 0);
+    for _ in 0..100 {
+        let total = 8 + rng.below(64);
+        let mut pool = BlockPool::new(total, 16);
+        let mut leases: Vec<Lease> = Vec::new();
+        for _ in 0..50 {
+            if rng.below(2) == 0 {
+                let want = 1 + rng.below(8);
+                let mut lease = Lease::default();
+                if pool.can_alloc(want) {
+                    pool.alloc(want, &mut lease).unwrap();
+                    leases.push(lease);
+                }
+            } else if !leases.is_empty() {
+                let i = rng.below(leases.len());
+                let mut l = leases.swap_remove(i);
+                pool.release(&mut l);
+            }
+            let leased: usize = leases.iter().map(|l| l.blocks.len()).sum();
+            assert_eq!(pool.available() + leased, total);
+            let mut all: Vec<u32> =
+                leases.iter().flat_map(|l| l.blocks.iter().copied()).collect();
+            all.sort_unstable();
+            let n = all.len();
+            all.dedup();
+            assert_eq!(all.len(), n, "double-leased block");
+        }
+    }
+}
+
+/// JSON roundtrip on randomly generated documents.
+#[test]
+fn json_roundtrip_random_sweep() {
+    fn gen(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.next_f64() * 2000.0 - 1000.0).round() / 8.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str((0..n).map(|_| "aé\"\\\nz😀"
+                    .chars().nth(rng.below(7)).unwrap()).collect())
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Pcg64::new(17, 0);
+    for _ in 0..300 {
+        let doc = gen(&mut rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(back, doc, "{text}");
+    }
+}

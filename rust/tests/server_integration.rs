@@ -1,0 +1,105 @@
+//! TCP API server round-trip: spin the server up on a test port, issue
+//! requests from client threads, check responses and stats, shut down.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fasteagle::coordinator::{Server, ServerConfig};
+use fasteagle::draft::make_drafter;
+use fasteagle::model::TargetModel;
+use fasteagle::runtime::{ArtifactStore, Runtime};
+use fasteagle::spec::Engine;
+use fasteagle::util::json::Json;
+
+fn artifacts_base() -> Option<PathBuf> {
+    let candidates = [
+        std::env::var("FE_ARTIFACTS").unwrap_or_default(),
+        "artifacts".to_string(),
+        "/tmp/art_test".to_string(),
+    ];
+    candidates
+        .iter()
+        .filter(|c| !c.is_empty())
+        .map(PathBuf::from)
+        .find(|p| p.join("base").join("spec.json").exists())
+        .map(|p| p.join("base"))
+}
+
+const ADDR: &str = "127.0.0.1:7433";
+
+fn query(line: &str) -> Json {
+    let stream = TcpStream::connect(ADDR).expect("connect");
+    let mut w = stream.try_clone().unwrap();
+    writeln!(w, "{line}").unwrap();
+    let mut r = BufReader::new(stream);
+    let mut out = String::new();
+    r.read_line(&mut out).unwrap();
+    Json::parse(out.trim()).expect("json response")
+}
+
+#[test]
+fn server_roundtrip_and_shutdown() {
+    let Some(dir) = artifacts_base() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let server_thread = std::thread::spawn(move || {
+        let rt = Arc::new(Runtime::cpu().unwrap());
+        let store = Rc::new(ArtifactStore::open(rt, dir).unwrap());
+        let target = TargetModel::open(Rc::clone(&store)).unwrap();
+        let drafter = make_drafter(Rc::clone(&store), "fasteagle").unwrap();
+        let engine = Engine::new(target, drafter);
+        let server = Server::new(ServerConfig { addr: ADDR.into(), queue_capacity: 8 });
+        server.serve(engine).unwrap()
+    });
+    // wait for listener
+    let mut up = false;
+    for _ in 0..600 {
+        if TcpStream::connect(ADDR).is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(up, "server did not start");
+
+    // malformed request -> error object, connection stays usable
+    let v = query("not json at all");
+    assert!(v.get("error").is_some());
+
+    // missing prompt -> error
+    let v = query(r#"{"max_new": 4}"#);
+    assert!(v.get("error").is_some());
+
+    // two real generations from separate client threads
+    let handles: Vec<_> = (0..2)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let req = format!(
+                    r#"{{"prompt":"USER: tell me about city transport and the steady bridge. ({i})\nASSISTANT:","max_new":16}}"#
+                );
+                query(&req)
+            })
+        })
+        .collect();
+    for h in handles {
+        let v = h.join().unwrap();
+        assert!(v.get("error").is_none(), "{v:?}");
+        assert_eq!(v.get("new_tokens").and_then(Json::as_usize), Some(16));
+        assert!(v.get("tau").and_then(Json::as_f64).unwrap() >= 1.0);
+    }
+
+    // stats
+    let v = query(r#"{"cmd":"stats"}"#);
+    assert_eq!(v.get("requests_done").and_then(Json::as_usize), Some(2));
+
+    // shutdown
+    let v = query(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    let metrics = server_thread.join().unwrap();
+    assert_eq!(metrics.requests_done, 2);
+}
