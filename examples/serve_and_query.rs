@@ -1,8 +1,10 @@
 //! End-to-end serving driver (the EXPERIMENTS.md validation run): start
-//! the TCP JSON-lines server with the FastEagle engine, drive it with
+//! the TCP JSON-lines server over the continuous batcher, drive it with
 //! concurrent clients replaying a Poisson arrival trace, and report
 //! latency/throughput — proving all three layers compose on a real
-//! (small) serving workload.
+//! (small) serving workload. When the "mid" target (which has batched
+//! executables) is built, the server decodes several requests
+//! concurrently and replies out of admission order.
 //!
 //!   cargo run --release --example serve_and_query -- [n_requests] [rate]
 
@@ -12,11 +14,8 @@ use std::rc::Rc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use fasteagle::coordinator::{Server, ServerConfig};
-use fasteagle::draft::make_drafter;
-use fasteagle::model::TargetModel;
+use fasteagle::coordinator::{BatchConfig, BatchEngine, BatchMethod, Server, ServerConfig};
 use fasteagle::runtime::{ArtifactStore, Runtime};
-use fasteagle::spec::Engine;
 use fasteagle::util::json::Json;
 use fasteagle::util::stats::summarize;
 use fasteagle::workload;
@@ -32,11 +31,17 @@ fn main() -> anyhow::Result<()> {
     // --- server thread (owns the engine) ---------------------------------
     let root2 = root.clone();
     let server_thread = std::thread::spawn(move || -> anyhow::Result<()> {
+        // prefer the "mid" target when its spec lowers batched
+        // executables, so the server actually serves batch > 1
+        let (dir, batch) =
+            workload::batched_serving_target(std::path::Path::new(&root2))
+                .ok_or_else(|| anyhow::anyhow!("no serving target under {root2}"))?;
         let rt = Arc::new(Runtime::cpu()?);
-        let store = Rc::new(ArtifactStore::open(rt, format!("{root2}/base").into())?);
-        let target = TargetModel::open(Rc::clone(&store))?;
-        let drafter = make_drafter(Rc::clone(&store), "fasteagle")?;
-        let engine = Engine::new(target, drafter);
+        let store = Rc::new(ArtifactStore::open(rt, dir)?);
+        let engine = BatchEngine::new(
+            Rc::clone(&store),
+            BatchConfig::new(batch, BatchMethod::FastEagle),
+        )?;
         let server = Server::new(ServerConfig {
             addr: ADDR.into(),
             queue_capacity: 64,

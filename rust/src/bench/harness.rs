@@ -13,6 +13,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::{BatchEngine, Request, Response, ServingMetrics};
 use crate::draft::make_drafter;
 use crate::model::TargetModel;
 use crate::runtime::{ArtifactStore, Runtime};
@@ -129,6 +130,26 @@ pub fn run_method(
         tau: agg.tau(),
         metrics: agg,
     })
+}
+
+/// Run a closed workload through the continuous batcher's serving loop
+/// (`BatchEngine::run` is a thin wrapper over `step()`): one full warm
+/// pass so every executable — including the chunk-size drafter variants
+/// — compiles outside the measurement, then the measured pass. Returns
+/// (tok/s, responses, serving metrics).
+pub fn run_batch_closed(
+    eng: &mut BatchEngine,
+    make_reqs: impl Fn() -> Vec<Request>,
+) -> Result<(f64, Vec<Response>, ServingMetrics)> {
+    let _ = eng.run(make_reqs())?;
+    let t0 = std::time::Instant::now();
+    let (resps, metrics) = eng.run(make_reqs())?;
+    let total_tokens: usize = resps.iter().map(|r| r.new_tokens).sum();
+    Ok((
+        total_tokens as f64 / t0.elapsed().as_secs_f64(),
+        resps,
+        metrics,
+    ))
 }
 
 /// Write a JSON report under bench_out/.

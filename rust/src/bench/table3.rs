@@ -14,7 +14,7 @@ use anyhow::Result;
 use crate::coordinator::{BatchConfig, BatchEngine, BatchMethod, Request};
 use crate::util::json::Json;
 
-use super::harness::{render_table, write_report, BenchEnv};
+use super::harness::{render_table, run_batch_closed, write_report, BenchEnv};
 
 const TARGET: &str = "mid";
 
@@ -38,8 +38,10 @@ pub fn run(env: &BenchEnv) -> Result<()> {
     let budget = bmax * probe.blocks_for(spec.max_seq, spec.n_layers + 1);
 
     let methods = [BatchMethod::Vanilla, BatchMethod::Eagle3, BatchMethod::FastEagle];
-    // throughput[method][batch]
+    // throughput[method][batch], plus the scheduler-side pressure gauges
     let mut tps = vec![vec![0.0f64; batches.len()]; methods.len()];
+    let mut deferred = vec![vec![0u64; batches.len()]; methods.len()];
+    let mut occupancy = vec![vec![0.0f64; batches.len()]; methods.len()];
     for (mi, &method) in methods.iter().enumerate() {
         for (bi, &b) in batches.iter().enumerate() {
             let mut cfg = BatchConfig::new(b, method);
@@ -58,14 +60,10 @@ pub fn run(env: &BenchEnv) -> Result<()> {
                     })
                     .collect()
             };
-            // full warm pass: identical workload, so every executable
-            // (incl. the chunk-size drafter variants) compiles outside
-            // the measurement
-            let _ = eng.run(make_reqs())?;
-            let t0 = std::time::Instant::now();
-            let (resps, _m) = eng.run(make_reqs())?;
-            let total_tokens: usize = resps.iter().map(|r| r.new_tokens).sum();
-            tps[mi][bi] = total_tokens as f64 / t0.elapsed().as_secs_f64();
+            let (tput, _resps, m) = run_batch_closed(&mut eng, make_reqs)?;
+            tps[mi][bi] = tput;
+            deferred[mi][bi] = m.requests_deferred;
+            occupancy[mi][bi] = m.mean_occupancy();
         }
     }
 
@@ -92,6 +90,14 @@ pub fn run(env: &BenchEnv) -> Result<()> {
             ("method", Json::str(method.name())),
             ("batches", Json::Arr(batches.iter().map(|&b| Json::num(b as f64)).collect())),
             ("values", Json::Arr(series)),
+            (
+                "deferred",
+                Json::Arr(deferred[mi].iter().map(|&x| Json::num(x as f64)).collect()),
+            ),
+            (
+                "mean_occupancy",
+                Json::Arr(occupancy[mi].iter().map(|&x| Json::num(x)).collect()),
+            ),
         ]));
     }
     println!("\n=== Table 3 (batched throughput vs vanilla, {TARGET}, chain=2, no tree) ===");

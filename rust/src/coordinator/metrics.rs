@@ -1,6 +1,15 @@
 //! Serving-level metrics: request latency histograms, token throughput,
-//! τ aggregation — the numbers the Table-3 harness and the API server's
-//! /stats endpoint report.
+//! τ aggregation, admission-control counters and scheduler gauges — the
+//! numbers the Table-3 harness and the API server's /stats endpoint
+//! report.
+//!
+//! Admission outcomes are split three ways:
+//! * `requests_done` — completed generations;
+//! * `requests_rejected` — true sheds (bounded admission queue full, or
+//!   the server closing), the HTTP-429 analogue;
+//! * `requests_deferred` — requests that had a free slot but had to wait
+//!   on the KV block pool; each distinct request is counted **once** no
+//!   matter how many scheduler passes it waits through.
 
 use std::time::{Duration, Instant};
 
@@ -10,12 +19,28 @@ use crate::util::stats::Histogram;
 pub struct ServingMetrics {
     pub started: Instant,
     pub requests_done: u64,
+    /// true sheds: queue full / server closed
     pub requests_rejected: u64,
+    /// distinct requests deferred on KV-pool pressure
+    pub requests_deferred: u64,
+    /// requests answered with an error (admission failure, engine
+    /// error, or a stall abort) — so done + failed covers every
+    /// admitted-or-aborted request
+    pub requests_failed: u64,
     pub tokens_out: u64,
     pub cycles: u64,
     pub tau_sum: f64,
+    /// arrival -> completion
     pub latency: Histogram,
+    /// arrival -> slot admission
     pub queue_wait: Histogram,
+    /// arrival -> end of first decode cycle (time-to-first-cycle, the
+    /// serving-side TTFT analogue)
+    pub ttfc: Histogram,
+    /// slot-occupancy gauge: active slots sampled once per scheduler step
+    pub occupancy_sum: u64,
+    pub occupancy_samples: u64,
+    pub occupancy_peak: usize,
 }
 
 impl Default for ServingMetrics {
@@ -24,30 +49,72 @@ impl Default for ServingMetrics {
             started: Instant::now(),
             requests_done: 0,
             requests_rejected: 0,
+            requests_deferred: 0,
+            requests_failed: 0,
             tokens_out: 0,
             cycles: 0,
             tau_sum: 0.0,
             latency: Histogram::new(),
             queue_wait: Histogram::new(),
+            ttfc: Histogram::new(),
+            occupancy_sum: 0,
+            occupancy_samples: 0,
+            occupancy_peak: 0,
         }
     }
 }
 
 impl ServingMetrics {
+    /// A request moved from the pending queue into an engine slot.
+    pub fn record_admitted(&mut self, queue_wait: Duration) {
+        self.queue_wait.record_us(queue_wait.as_secs_f64() * 1e6);
+    }
+
+    /// A request finished its first decode cycle (`since_arrival` spans
+    /// queue wait + prefill + one batched iteration).
+    pub fn record_first_cycle(&mut self, since_arrival: Duration) {
+        self.ttfc.record_us(since_arrival.as_secs_f64() * 1e6);
+    }
+
+    /// Sample the number of occupied slots at one scheduler step.
+    pub fn record_occupancy(&mut self, active: usize) {
+        self.occupancy_sum += active as u64;
+        self.occupancy_samples += 1;
+        self.occupancy_peak = self.occupancy_peak.max(active);
+    }
+
     pub fn record_done(
         &mut self,
         new_tokens: usize,
         cycles: usize,
         tau: f64,
         latency: Duration,
-        queue_wait: Duration,
     ) {
         self.requests_done += 1;
         self.tokens_out += new_tokens as u64;
         self.cycles += cycles as u64;
         self.tau_sum += tau * cycles as f64;
         self.latency.record_us(latency.as_secs_f64() * 1e6);
-        self.queue_wait.record_us(queue_wait.as_secs_f64() * 1e6);
+    }
+
+    /// Fold another metrics block into this one (counters add,
+    /// histograms merge, `started` keeps self's epoch). Lets the engine
+    /// record into a lock-free local delta that is merged into a shared
+    /// `Mutex<ServingMetrics>` in one short critical section.
+    pub fn merge(&mut self, other: &ServingMetrics) {
+        self.requests_done += other.requests_done;
+        self.requests_rejected += other.requests_rejected;
+        self.requests_deferred += other.requests_deferred;
+        self.requests_failed += other.requests_failed;
+        self.tokens_out += other.tokens_out;
+        self.cycles += other.cycles;
+        self.tau_sum += other.tau_sum;
+        self.latency.merge(&other.latency);
+        self.queue_wait.merge(&other.queue_wait);
+        self.ttfc.merge(&other.ttfc);
+        self.occupancy_sum += other.occupancy_sum;
+        self.occupancy_samples += other.occupancy_samples;
+        self.occupancy_peak = self.occupancy_peak.max(other.occupancy_peak);
     }
 
     pub fn tokens_per_sec(&self) -> f64 {
@@ -67,17 +134,32 @@ impl ServingMetrics {
         }
     }
 
+    /// Mean occupied slots per scheduler step.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.occupancy_samples == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.occupancy_samples as f64
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "done={} rejected={} tokens={} tok/s={:.1} tau={:.2} p50={:.0}ms p99={:.0}ms wait_p50={:.0}ms",
+            "done={} rejected={} deferred={} failed={} tokens={} tok/s={:.1} tau={:.2} \
+             p50={:.0}ms p99={:.0}ms wait_p50={:.0}ms ttfc_p50={:.0}ms occ={:.2}/{}",
             self.requests_done,
             self.requests_rejected,
+            self.requests_deferred,
+            self.requests_failed,
             self.tokens_out,
             self.tokens_per_sec(),
             self.mean_tau(),
             self.latency.percentile_us(0.5) / 1e3,
             self.latency.percentile_us(0.99) / 1e3,
             self.queue_wait.percentile_us(0.5) / 1e3,
+            self.ttfc.percentile_us(0.5) / 1e3,
+            self.mean_occupancy(),
+            self.occupancy_peak,
         )
     }
 }
@@ -89,13 +171,66 @@ mod tests {
     #[test]
     fn aggregates() {
         let mut m = ServingMetrics::default();
-        m.record_done(10, 4, 2.5, Duration::from_millis(100), Duration::from_millis(5));
-        m.record_done(20, 5, 4.0, Duration::from_millis(200), Duration::from_millis(1));
+        m.record_admitted(Duration::from_millis(5));
+        m.record_done(10, 4, 2.5, Duration::from_millis(100));
+        m.record_admitted(Duration::from_millis(1));
+        m.record_done(20, 5, 4.0, Duration::from_millis(200));
         assert_eq!(m.requests_done, 2);
         assert_eq!(m.tokens_out, 30);
         let tau = m.mean_tau();
         assert!((tau - (2.5 * 4.0 + 4.0 * 5.0) / 9.0).abs() < 1e-9, "{tau}");
         assert!(m.latency.percentile_us(0.5) > 0.0);
+        assert!(m.queue_wait.count() == 2);
         assert!(!m.report().is_empty());
+    }
+
+    #[test]
+    fn occupancy_gauge() {
+        let mut m = ServingMetrics::default();
+        m.record_occupancy(1);
+        m.record_occupancy(3);
+        m.record_occupancy(2);
+        assert!((m.mean_occupancy() - 2.0).abs() < 1e-9);
+        assert_eq!(m.occupancy_peak, 3);
+    }
+
+    #[test]
+    fn ttfc_recorded() {
+        let mut m = ServingMetrics::default();
+        m.record_first_cycle(Duration::from_millis(40));
+        assert_eq!(m.ttfc.count(), 1);
+        assert!(m.ttfc.percentile_us(0.5) > 30_000.0);
+    }
+
+    #[test]
+    fn merge_folds_deltas() {
+        let mut shared = ServingMetrics::default();
+        shared.requests_rejected = 1;
+        let mut delta = ServingMetrics::default();
+        delta.record_admitted(Duration::from_millis(2));
+        delta.record_first_cycle(Duration::from_millis(9));
+        delta.record_occupancy(3);
+        delta.record_done(5, 2, 2.0, Duration::from_millis(20));
+        delta.requests_deferred = 1;
+        shared.merge(&delta);
+        assert_eq!(shared.requests_done, 1);
+        assert_eq!(shared.requests_rejected, 1);
+        assert_eq!(shared.requests_deferred, 1);
+        assert_eq!(shared.tokens_out, 5);
+        assert_eq!(shared.queue_wait.count(), 1);
+        assert_eq!(shared.ttfc.count(), 1);
+        assert_eq!(shared.occupancy_peak, 3);
+        assert!((shared.mean_tau() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deferred_and_rejected_are_distinct_counters() {
+        let mut m = ServingMetrics::default();
+        m.requests_deferred += 1;
+        m.requests_rejected += 2;
+        assert_eq!(m.requests_deferred, 1);
+        assert_eq!(m.requests_rejected, 2);
+        let r = m.report();
+        assert!(r.contains("rejected=2") && r.contains("deferred=1"), "{r}");
     }
 }

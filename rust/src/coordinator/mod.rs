@@ -9,6 +9,6 @@ pub mod server;
 
 pub use batcher::{BatchConfig, BatchEngine, BatchMethod};
 pub use metrics::ServingMetrics;
-pub use queue::AdmissionQueue;
+pub use queue::{AdmissionQueue, PushError};
 pub use request::{Request, Response};
 pub use server::{Server, ServerConfig};

@@ -6,6 +6,28 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
+/// Why a non-blocking enqueue was refused. `Full` is the HTTP-429
+/// analogue (shed and tell the client to retry); `Closed` means the
+/// server is shutting down — callers must branch on the two (the TCP
+/// server replies "queue full" vs "server shutting down").
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    Full(T),
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    pub fn into_inner(self) -> T {
+        match self {
+            PushError::Full(x) | PushError::Closed(x) => x,
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        matches!(self, PushError::Closed(_))
+    }
+}
+
 pub struct AdmissionQueue<T> {
     inner: Mutex<Inner<T>>,
     not_empty: Condvar,
@@ -33,12 +55,15 @@ impl<T> AdmissionQueue<T> {
         }
     }
 
-    /// Non-blocking enqueue; Err(item) when full or closed (HTTP-429
-    /// analogue — the caller decides whether to retry or shed).
-    pub fn try_push(&self, item: T) -> Result<(), T> {
+    /// Non-blocking enqueue; the error variant tells the caller whether
+    /// to shed (`Full`) or wind the connection down (`Closed`).
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
         let mut g = self.inner.lock().unwrap();
-        if g.closed || g.items.len() >= self.capacity {
-            return Err(item);
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
         }
         g.items.push_back(item);
         let d = g.items.len();
@@ -152,8 +177,22 @@ mod tests {
         let q = AdmissionQueue::new(2);
         q.try_push(1).unwrap();
         q.try_push(2).unwrap();
-        assert!(q.try_push(3).is_err());
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)));
         assert_eq!(q.peak_depth(), 2);
+    }
+
+    #[test]
+    fn try_push_distinguishes_closed_from_full() {
+        let q = AdmissionQueue::new(1);
+        q.close();
+        let err = q.try_push(9).unwrap_err();
+        assert!(err.is_closed());
+        assert_eq!(err.into_inner(), 9);
+        // a full-but-open queue sheds instead
+        let q = AdmissionQueue::new(1);
+        q.try_push(1).unwrap();
+        let err = q.try_push(2).unwrap_err();
+        assert!(!err.is_closed());
     }
 
     #[test]

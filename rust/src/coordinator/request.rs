@@ -25,6 +25,11 @@ impl Request {
 
     /// Parse an API request line: {"prompt": "...", "max_new": 64,
     /// "temperature": 0.0, "seed": 1}.
+    ///
+    /// An explicit `seed` pins the sampling stream (same seed + prompt
+    /// reproduces exactly); omitting it derives a per-request seed from
+    /// the id so concurrent stochastic requests sample diversely
+    /// instead of all sharing the default-0 stream.
     pub fn from_json(id: u64, v: &Json) -> Option<Request> {
         let prompt = v.get("prompt")?.as_str()?.to_string();
         let mut cfg = GenConfig::default();
@@ -34,8 +39,9 @@ impl Request {
         if let Some(t) = v.get("temperature").and_then(Json::as_f64) {
             cfg.temperature = t as f32;
         }
-        if let Some(s) = v.get("seed").and_then(Json::as_i64) {
-            cfg.seed = s as u64;
+        match v.get("seed").and_then(Json::as_i64) {
+            Some(s) => cfg.seed = s as u64,
+            None => cfg.seed = id.wrapping_mul(0x9e37_79b9_7f4a_7c15),
         }
         if let Some(e) = v.get("stop_on_eos").and_then(Json::as_bool) {
             cfg.stop_on_eos = e;
@@ -59,6 +65,20 @@ pub struct Response {
 }
 
 impl Response {
+    /// A failure reply carrying no generated text.
+    pub fn error(id: u64, msg: impl Into<String>) -> Response {
+        Response {
+            id,
+            text: String::new(),
+            new_tokens: 0,
+            tau: 0.0,
+            cycles: 0,
+            latency_ms: 0.0,
+            gen_ms: 0.0,
+            error: Some(msg.into()),
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("id", Json::num(self.id as f64)),
@@ -88,6 +108,19 @@ mod tests {
         assert_eq!(r.cfg.max_new_tokens, 10);
         assert!((r.cfg.temperature - 1.0).abs() < 1e-6);
         assert!(Request::from_json(0, &Json::parse("{}").unwrap()).is_none());
+    }
+
+    #[test]
+    fn omitted_seed_differs_per_request_but_explicit_seed_pins() {
+        let v = Json::parse(r#"{"prompt":"p"}"#).unwrap();
+        let a = Request::from_json(1, &v).unwrap();
+        let b = Request::from_json(2, &v).unwrap();
+        assert_ne!(a.cfg.seed, b.cfg.seed, "default seeds must diverge per request");
+        let v = Json::parse(r#"{"prompt":"p","seed":7}"#).unwrap();
+        let a = Request::from_json(1, &v).unwrap();
+        let b = Request::from_json(2, &v).unwrap();
+        assert_eq!(a.cfg.seed, 7);
+        assert_eq!(b.cfg.seed, 7, "explicit seed pins the stream across ids");
     }
 
     #[test]

@@ -1,8 +1,17 @@
-//! TCP JSON-lines API server: thread-per-connection I/O feeding a single
-//! engine thread through the admission queue (the PJRT state is
-//! deliberately single-threaded; on this 1-core testbed the engine is
+//! TCP JSON-lines API server: thread-per-connection I/O feeding the
+//! continuous-batching engine on a single engine thread (the PJRT state
+//! is deliberately single-threaded; on this 1-core testbed the engine is
 //! the bottleneck anyway, exactly like a GPU worker in vLLM's
 //! single-scheduler design).
+//!
+//! The engine thread drains the bounded [`AdmissionQueue`] into
+//! [`BatchEngine::step`], so up to `batch` requests decode concurrently
+//! and each connection is answered the moment its slot completes —
+//! requests finish out of admission order when their lengths differ.
+//! Back-pressure is two-staged: the engine keeps at most `batch`
+//! requests internally; everything beyond that waits in the bounded
+//! queue, and past its capacity `try_push` sheds with a "queue full"
+//! reply (HTTP-429 analogue) distinct from the shutdown path.
 //!
 //! Protocol (one JSON object per line):
 //!   -> {"prompt": "...", "max_new": 64, "temperature": 0.0, "seed": 1}
@@ -10,19 +19,20 @@
 //!   -> {"cmd": "stats"}   <- serving metrics
 //!   -> {"cmd": "shutdown"}
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::spec::Engine;
 use crate::util::json::Json;
 
+use super::batcher::BatchEngine;
 use super::metrics::ServingMetrics;
-use super::queue::AdmissionQueue;
+use super::queue::{AdmissionQueue, PushError};
 use super::request::{Request, Response};
 
 type ReplyTx = std::sync::mpsc::Sender<Response>;
@@ -57,16 +67,18 @@ impl Server {
         }
     }
 
-    /// Serve until a shutdown command arrives. `engine` runs on the
-    /// calling thread; accept/connection threads are spawned internally.
-    pub fn serve(&self, mut engine: Engine) -> Result<ServingMetrics> {
+    /// Serve until a shutdown command arrives. The continuous-batching
+    /// `engine` runs on the calling thread; accept/connection threads
+    /// are spawned internally.
+    pub fn serve(&self, mut engine: BatchEngine) -> Result<ServingMetrics> {
         let listener =
             TcpListener::bind(&self.cfg.addr).with_context(|| self.cfg.addr.clone())?;
         listener.set_nonblocking(true)?;
         crate::log_info!(
-            "serving {} (drafter={}) on {}",
-            engine.target.spec.name,
-            engine.drafter.name(),
+            "serving {} (method={}, batch={}) on {}",
+            engine.spec.name,
+            engine.method().name(),
+            engine.batch(),
             self.cfg.addr
         );
         // accept loop on a helper thread
@@ -88,7 +100,7 @@ impl Server {
                         }));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
+                        std::thread::sleep(Duration::from_millis(5));
                     }
                     Err(_) => break,
                 }
@@ -98,50 +110,75 @@ impl Server {
             }
         });
 
-        // engine loop (this thread)
+        // engine loop (this thread): drain the admission queue into the
+        // batcher, step it, reply per-slot as requests complete
+        let mut inflight: HashMap<u64, ReplyTx> = HashMap::new();
         while !self.shutdown.load(Ordering::Relaxed) {
-            let Some((req, tx)) =
-                self.queue.pop_timeout(std::time::Duration::from_millis(50))
-            else {
-                continue;
-            };
-            let wait = req.arrival.elapsed();
-            let t0 = Instant::now();
-            let resp = match engine.generate(&req.prompt, &req.cfg) {
-                Ok(r) => Response {
-                    id: req.id,
-                    text: r.text,
-                    new_tokens: r.metrics.new_tokens,
-                    tau: r.metrics.tau(),
-                    cycles: r.metrics.cycles,
-                    latency_ms: req.arrival.elapsed().as_secs_f64() * 1e3,
-                    gen_ms: t0.elapsed().as_secs_f64() * 1e3,
-                    error: None,
-                },
-                Err(e) => Response {
-                    id: req.id,
-                    text: String::new(),
-                    new_tokens: 0,
-                    tau: 0.0,
-                    cycles: 0,
-                    latency_ms: req.arrival.elapsed().as_secs_f64() * 1e3,
-                    gen_ms: 0.0,
-                    error: Some(format!("{e:#}")),
-                },
-            };
-            {
-                let mut m = self.metrics.lock().unwrap();
-                m.record_done(
-                    resp.new_tokens,
-                    resp.cycles,
-                    resp.tau,
-                    std::time::Duration::from_secs_f64(resp.latency_ms / 1e3),
-                    wait,
-                );
+            // admit up to the engine's slot count; the rest stays in the
+            // bounded queue so capacity shedding keeps working
+            let mut drained = self.queue.drain_up_to(engine.admission_room());
+            if drained.is_empty() && !engine.has_work() {
+                // idle: block briefly for the next request
+                match self.queue.pop_timeout(Duration::from_millis(50)) {
+                    Some(item) => drained.push(item),
+                    None => continue,
+                }
             }
-            let _ = tx.send(resp);
+            for (req, tx) in drained {
+                inflight.insert(req.id, tx);
+                engine.submit(req);
+            }
+            if !engine.has_work() {
+                continue;
+            }
+            // record into a local delta so conn threads (stats, shed
+            // counting) never wait a whole decode iteration for the lock
+            let mut delta = ServingMetrics::default();
+            let step = engine.step(&mut delta);
+            self.metrics.lock().unwrap().merge(&delta);
+            match step {
+                Ok(done) => {
+                    let stalled = engine.stalled(&done);
+                    for resp in done {
+                        if let Some(tx) = inflight.remove(&resp.id) {
+                            let _ = tx.send(resp);
+                        }
+                    }
+                    // a stalled engine means the head request can never
+                    // admit (the whole pool is free and still too small)
+                    // — fail the queued requests rather than spin forever
+                    if stalled {
+                        let ids = engine.abort_all();
+                        self.metrics.lock().unwrap().requests_failed += ids.len() as u64;
+                        for id in ids {
+                            if let Some(tx) = inflight.remove(&id) {
+                                let _ = tx.send(Response::error(
+                                    id,
+                                    "request exceeds KV pool capacity",
+                                ));
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    crate::log_warn!("engine step failed: {e:#}");
+                    let ids = engine.abort_all();
+                    self.metrics.lock().unwrap().requests_failed += ids.len() as u64;
+                    for id in ids {
+                        if let Some(tx) = inflight.remove(&id) {
+                            let _ = tx.send(Response::error(id, format!("{e:#}")));
+                        }
+                    }
+                }
+            }
         }
         self.queue.close();
+        // Drop every reply channel (queued and in-flight) *before*
+        // joining the connection threads: each blocked `rx.recv()` then
+        // errors and its connection answers "server shutting down" —
+        // otherwise join would wait on connections that wait on us.
+        drop(self.queue.drain_up_to(usize::MAX));
+        drop(inflight);
         let _ = accept_handle.join();
         let m = self.metrics.lock().unwrap().clone();
         Ok(m)
@@ -163,14 +200,34 @@ fn handle_conn(
     metrics: Arc<Mutex<ServingMetrics>>,
     next_id: Arc<AtomicU64>,
 ) -> Result<()> {
+    // a read timeout lets idle keep-alive connections notice shutdown:
+    // without it, a client that simply stays connected would block this
+    // thread in read_line forever and serve() could never join it
+    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    let mut line = String::new();
+    let mut buf: Vec<u8> = Vec::new();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        buf.clear();
+        // accumulate raw bytes across timeout retries: a slow sender's
+        // partial line survives even when the split lands inside a
+        // multibyte character (read_line would drop such bytes)
+        loop {
+            match reader.read_until(b'\n', &mut buf) {
+                Ok(0) => return Ok(()), // client closed
+                Ok(_) => break,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if shutdown.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
         }
+        let line = String::from_utf8_lossy(&buf);
         let trimmed = line.trim();
         if trimmed.is_empty() {
             continue;
@@ -192,11 +249,18 @@ fn handle_conn(
                 let m = metrics.lock().unwrap();
                 let j = Json::obj(vec![
                     ("requests_done", Json::num(m.requests_done as f64)),
+                    ("requests_rejected", Json::num(m.requests_rejected as f64)),
+                    ("requests_deferred", Json::num(m.requests_deferred as f64)),
+                    ("requests_failed", Json::num(m.requests_failed as f64)),
                     ("tokens_out", Json::num(m.tokens_out as f64)),
                     ("tok_per_sec", Json::num(m.tokens_per_sec())),
                     ("mean_tau", Json::num(m.mean_tau())),
+                    ("mean_occupancy", Json::num(m.mean_occupancy())),
+                    ("peak_occupancy", Json::num(m.occupancy_peak as f64)),
                     ("p50_ms", Json::num(m.latency.percentile_us(0.5) / 1e3)),
                     ("p99_ms", Json::num(m.latency.percentile_us(0.99) / 1e3)),
+                    ("wait_p50_ms", Json::num(m.queue_wait.percentile_us(0.5) / 1e3)),
+                    ("ttfc_p50_ms", Json::num(m.ttfc.percentile_us(0.5) / 1e3)),
                 ]);
                 writeln!(writer, "{}", j.to_string())?;
                 continue;
@@ -207,16 +271,29 @@ fn handle_conn(
         match Request::from_json(id, &v) {
             Some(req) => {
                 let (tx, rx) = std::sync::mpsc::channel();
-                if queue.try_push((req, tx)).is_err() {
-                    let mut m = metrics.lock().unwrap();
-                    m.requests_rejected += 1;
-                    drop(m);
-                    writeln!(
-                        writer,
-                        "{}",
-                        Json::obj(vec![("error", Json::str("queue full"))]).to_string()
-                    )?;
-                    continue;
+                match queue.try_push((req, tx)) {
+                    Ok(()) => {}
+                    Err(PushError::Full(_)) => {
+                        // shed: the bounded queue is the 429 analogue
+                        let mut m = metrics.lock().unwrap();
+                        m.requests_rejected += 1;
+                        drop(m);
+                        writeln!(
+                            writer,
+                            "{}",
+                            Json::obj(vec![("error", Json::str("queue full"))]).to_string()
+                        )?;
+                        continue;
+                    }
+                    Err(PushError::Closed(_)) => {
+                        writeln!(
+                            writer,
+                            "{}",
+                            Json::obj(vec![("error", Json::str("server shutting down"))])
+                                .to_string()
+                        )?;
+                        return Ok(());
+                    }
                 }
                 match rx.recv() {
                     Ok(resp) => writeln!(writer, "{}", resp.to_json().to_string())?,

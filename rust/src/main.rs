@@ -3,7 +3,7 @@
 //!
 //! Commands:
 //!   generate   one-shot generation with any drafter
-//!   serve      TCP JSON-lines API server (single-engine worker)
+//!   serve      TCP JSON-lines API server over the continuous batcher
 //!   batch      closed-workload run through the continuous batcher
 //!   bench      regenerate paper tables/figures (table1|table2|table3|fig3|microbench|all)
 //!   selfcheck  losslessness + stack sanity across all drafters
@@ -29,7 +29,8 @@ fasteagle <command> [flags]
 
 commands:
   generate   --prompt TEXT [--drafter D] [--target T] [--temp F] [--max-new N]
-  serve      [--addr HOST:PORT] [--drafter D] [--target T]
+  serve      [--addr HOST:PORT] [--method vanilla|eagle3|fasteagle] [--target T]
+             [--batch B] [--chain N] [--pool-blocks N] [--queue N]
   batch      [--batch B] [--method vanilla|eagle3|fasteagle] [--requests N]
   bench      table1|table2|table3|fig3|microbench|all [--quick]
   selfcheck  [--target T]
@@ -88,12 +89,35 @@ fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn batch_method(args: &Args) -> Result<BatchMethod> {
+    // --method preferred; --drafter kept as an alias from the
+    // single-engine serve days
+    let name = args.str_or("method", &args.str_or("drafter", "fasteagle"));
+    Ok(match name.as_str() {
+        "vanilla" => BatchMethod::Vanilla,
+        "eagle3" => BatchMethod::Eagle3,
+        "fasteagle" => BatchMethod::FastEagle,
+        other => bail!("unknown batch method {other:?}"),
+    })
+}
+
+fn batch_config(args: &Args) -> Result<BatchConfig> {
+    let mut cfg = BatchConfig::new(args.usize_or("batch", 1), batch_method(args)?);
+    cfg.chain_len = args.usize_or("chain", 2);
+    if let Some(v) = args.get("pool-blocks") {
+        // a typo must not silently disable admission control
+        let p: usize = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --pool-blocks {v:?}"))?;
+        cfg.pool_blocks = Some(p);
+    }
+    Ok(cfg)
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let rt = Arc::new(Runtime::cpu()?);
     let store = open_store(args, &rt)?;
-    let target = TargetModel::open(Rc::clone(&store))?;
-    let drafter = make_drafter(Rc::clone(&store), &args.str_or("drafter", "fasteagle"))?;
-    let engine = Engine::new(target, drafter);
+    let engine = BatchEngine::new(Rc::clone(&store), batch_config(args)?)?;
     let server = Server::new(ServerConfig {
         addr: args.str_or("addr", "127.0.0.1:7399"),
         queue_capacity: args.usize_or("queue", 64),
@@ -106,24 +130,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_batch(args: &Args) -> Result<()> {
     let rt = Arc::new(Runtime::cpu()?);
     let store = open_store(args, &rt)?;
-    let method = match args.str_or("method", "fasteagle").as_str() {
-        "vanilla" => BatchMethod::Vanilla,
-        "eagle3" => BatchMethod::Eagle3,
-        "fasteagle" => BatchMethod::FastEagle,
-        other => bail!("unknown batch method {other:?}"),
-    };
-    let mut cfg = BatchConfig::new(args.usize_or("batch", 1), method);
-    cfg.chain_len = args.usize_or("chain", 2);
-    cfg.temperature = args.f64_or("temp", 0.0) as f32;
-    let mut engine = BatchEngine::new(Rc::clone(&store), cfg)?;
+    let mut engine = BatchEngine::new(Rc::clone(&store), batch_config(args)?)?;
     let root = artifacts_dir(args);
     let prompts =
         fasteagle::workload::load_prompts(std::path::Path::new(&root), "dialog")?;
     let n = args.usize_or("requests", 8);
+    // generation parameters are per-request: each gets its own seed so
+    // stochastic streams differ across the batch
+    let base_seed = args.usize_or("seed", 0) as u64;
+    let temp = args.f64_or("temp", 0.0) as f32;
     let reqs: Vec<Request> = (0..n)
         .map(|i| {
             let mut r = Request::new(i as u64, prompts[i % prompts.len()].clone());
             r.cfg.max_new_tokens = args.usize_or("max-new", 48);
+            r.cfg.temperature = temp;
+            r.cfg.seed = base_seed.wrapping_add(i as u64);
             r
         })
         .collect();
@@ -131,12 +152,14 @@ fn cmd_batch(args: &Args) -> Result<()> {
     let (resps, m) = engine.run(reqs)?;
     let toks: usize = resps.iter().map(|r| r.new_tokens).sum();
     println!(
-        "{} requests, {} tokens in {:.1}s -> {:.1} tok/s (tau={:.2})",
+        "{} requests, {} tokens in {:.1}s -> {:.1} tok/s (tau={:.2}, occ={:.2}, deferred={})",
         resps.len(),
         toks,
         t0.elapsed().as_secs_f64(),
         toks as f64 / t0.elapsed().as_secs_f64(),
         m.mean_tau(),
+        m.mean_occupancy(),
+        m.requests_deferred,
     );
     Ok(())
 }

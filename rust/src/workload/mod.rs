@@ -1,12 +1,14 @@
-//! Workload generation: held-out task prompts exported by the python
-//! side (`artifacts/prompts/<task>.json`), arrival processes, and trace
-//! replay for the serving benchmarks.
+//! Workload generation and drivers: held-out task prompts exported by
+//! the python side (`artifacts/prompts/<task>.json`), arrival processes,
+//! and trace replay through the continuous batcher's `step()` loop for
+//! the serving benchmarks.
 
 use std::path::Path;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::{BatchEngine, Request, Response, ServingMetrics};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
@@ -98,6 +100,73 @@ pub fn bursty_trace(
         }
     }
     out
+}
+
+/// Pick a serving target for batch > 1 demos/tests: prefer `mid` when
+/// its spec lowers a batch size above 1 (smallest such batch wins, so
+/// the cheapest batched executables are used), else fall back to
+/// `base` at batch 1. Returns the target directory and the batch.
+pub fn batched_serving_target(artifacts_root: &Path) -> Option<(std::path::PathBuf, usize)> {
+    for target in ["mid", "base"] {
+        let dir = artifacts_root.join(target);
+        let Ok(text) = std::fs::read_to_string(dir.join("spec.json")) else {
+            continue;
+        };
+        let Ok(spec) = crate::model::ModelSpec::parse(&text) else {
+            continue;
+        };
+        let batch = spec
+            .batch_sizes
+            .iter()
+            .copied()
+            .filter(|&b| b > 1)
+            .min()
+            .unwrap_or(1);
+        if batch > 1 || target == "base" {
+            return Some((dir, batch));
+        }
+    }
+    None
+}
+
+/// Open-loop replay of a trace through the continuous batcher: each item
+/// is submitted at its arrival offset and the engine is stepped until
+/// every request completes — the same scheduler path the live TCP
+/// server drives. Request ids start at `base_id`.
+pub fn replay_trace(
+    engine: &mut BatchEngine,
+    trace: &[TraceItem],
+    base_id: u64,
+) -> Result<(Vec<Response>, ServingMetrics)> {
+    let mut metrics = ServingMetrics::default();
+    let mut responses = Vec::new();
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    while next < trace.len() || engine.has_work() {
+        while next < trace.len() && trace[next].at <= t0.elapsed() {
+            let mut r = Request::new(base_id + next as u64, trace[next].prompt.clone());
+            r.cfg.max_new_tokens = trace[next].max_new;
+            engine.submit(r);
+            next += 1;
+        }
+        if !engine.has_work() {
+            // idle until the next arrival
+            let now = t0.elapsed();
+            if trace[next].at > now {
+                std::thread::sleep(trace[next].at - now);
+            }
+            continue;
+        }
+        let done = engine.step(&mut metrics)?;
+        if engine.stalled(&done) {
+            bail!("trace replay stalled: KV pool cannot cover a single request");
+        }
+        if let Some(err) = done.iter().find_map(|r| r.error.as_deref()) {
+            bail!("request failed during trace replay: {err}");
+        }
+        responses.extend(done);
+    }
+    Ok((responses, metrics))
 }
 
 #[cfg(test)]

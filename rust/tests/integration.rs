@@ -223,8 +223,9 @@ fn kv_compact_then_continue_matches_sequential() {
 }
 
 /// Batch engine at B=1 must agree with the single-request engine's
-/// vanilla output (same greedy stream) and complete a multi-request
-/// queue.
+/// vanilla output (same greedy stream), complete a multi-request queue,
+/// and honor per-request generation parameters (max_new_tokens differs
+/// across the queue).
 #[test]
 fn batch_engine_b1_matches_single_engine() {
     let dir = require_artifacts!();
@@ -241,24 +242,33 @@ fn batch_engine_b1_matches_single_engine() {
         let reqs: Vec<Request> = (0..3)
             .map(|i| {
                 let mut r = Request::new(i, PROMPTS[0]);
-                r.cfg.max_new_tokens = 24;
+                // request 2 asks for a shorter generation than the rest
+                r.cfg.max_new_tokens = if i == 2 { 12 } else { 24 };
                 r
             })
             .collect();
-        let (resps, _m) = eng.run(reqs).unwrap();
+        let (resps, m) = eng.run(reqs).unwrap();
         assert_eq!(resps.len(), 3);
         for r in &resps {
-            assert_eq!(
-                r.text, reference.text,
-                "batch {:?} diverged from single-engine vanilla",
-                method
-            );
+            if r.id == 2 {
+                assert_eq!(r.new_tokens, 12, "per-request max_new not honored");
+            } else {
+                assert_eq!(r.new_tokens, 24);
+                assert_eq!(
+                    r.text, reference.text,
+                    "batch {:?} diverged from single-engine vanilla",
+                    method
+                );
+            }
         }
+        assert_eq!(m.requests_done, 3);
+        assert!(m.mean_occupancy() > 0.0);
     }
 }
 
 /// Pool-constrained batch run must still finish everything (requests
-/// queue rather than fail).
+/// queue rather than fail), and with a single slot nothing is ever
+/// pool-deferred (deferrals require a free slot blocked on blocks).
 #[test]
 fn batch_engine_respects_block_pool() {
     let dir = require_artifacts!();
@@ -277,6 +287,44 @@ fn batch_engine_respects_block_pool() {
             r
         })
         .collect();
-    let (resps, _) = eng.run(reqs).unwrap();
+    let (resps, m) = eng.run(reqs).unwrap();
     assert_eq!(resps.len(), 2);
+    assert_eq!(m.requests_deferred, 0);
+}
+
+/// Step-driven scheduling: submitting mid-flight works, and a request
+/// whose slot frees up is admitted on the next step.
+#[test]
+fn batch_engine_step_admits_mid_flight_submissions() {
+    let dir = require_artifacts!();
+    let st = store(&dir);
+    let mut eng = BatchEngine::new(
+        Rc::clone(&st),
+        BatchConfig::new(1, BatchMethod::FastEagle),
+    )
+    .unwrap();
+    let mut metrics = fasteagle::coordinator::ServingMetrics::default();
+    let mut r0 = Request::new(0, PROMPTS[0]);
+    r0.cfg.max_new_tokens = 8;
+    eng.submit(r0);
+    let mut done = Vec::new();
+    // drive a few steps, then submit a second request while the first
+    // may still be in flight
+    let mut submitted_second = false;
+    while done.len() < 2 {
+        done.extend(eng.step(&mut metrics).unwrap());
+        if !submitted_second {
+            let mut r1 = Request::new(1, PROMPTS[1]);
+            r1.cfg.max_new_tokens = 8;
+            eng.submit(r1);
+            submitted_second = true;
+        }
+        assert!(eng.has_work() || done.len() == 2);
+    }
+    assert_eq!(done.len(), 2);
+    assert!(done.iter().any(|r| r.id == 0));
+    assert!(done.iter().any(|r| r.id == 1));
+    assert_eq!(metrics.requests_done, 2);
+    assert_eq!(metrics.queue_wait.count(), 2);
+    assert_eq!(metrics.ttfc.count(), 2);
 }

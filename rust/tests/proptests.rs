@@ -1,9 +1,13 @@
 //! Hand-rolled property tests (the offline registry has no proptest —
 //! DESIGN.md §Substitutions) over the coordinator-side invariants that
-//! don't need artifacts: tree construction, lossless acceptance, KV
-//! compaction, the paged pool, and the JSON substrate. Seeded PCG sweeps,
-//! hundreds of cases each.
+//! don't need artifacts: tree construction (Backbone Expansion), lossless
+//! acceptance, KV compaction, the paged pool, the admission queue under
+//! thread contention, and the JSON substrate. Seeded PCG sweeps, hundreds
+//! of cases each.
 
+use std::sync::Arc;
+
+use fasteagle::coordinator::{AdmissionQueue, PushError};
 use fasteagle::model::{BlockPool, KvCache, Lease};
 use fasteagle::spec::{verify_tree, DraftTree, Sampler};
 use fasteagle::util::json::Json;
@@ -68,6 +72,155 @@ fn acceptance_path_invariants_random_sweep() {
 
 fn crate_argmax(xs: &[f32]) -> usize {
     fasteagle::util::rng::argmax(xs)
+}
+
+/// Backbone-Expansion invariants (§2.2), top-k and sampled variants:
+/// exactly one depth-N backbone path, at most k−1 side branches per
+/// level, and ancestor sets consistent with the tree-attention mask rows
+/// (root-anchored, strictly ascending, depth == index along the path).
+#[test]
+fn backbone_expansion_invariants_random_sweep() {
+    let mut rng = Pcg64::new(31, 0);
+    for case in 0..300 {
+        let v = 8 + rng.below(56);
+        let n = 1 + rng.below(6);
+        let k = 1 + rng.below(4);
+        let dists: Vec<Vec<f32>> = (0..n).map(|_| random_dist(&mut rng, v)).collect();
+        let root = rng.below(v) as i32;
+        let tree = if case % 2 == 0 {
+            DraftTree::backbone_expansion(root, dists, k)
+        } else {
+            DraftTree::backbone_expansion_sampled(root, dists, k, &mut rng)
+        };
+        tree.check_invariants(k).unwrap();
+        assert_eq!(tree.max_depth(), n);
+
+        // exactly one backbone node per level 1..=N, forming one path
+        let mut backbone_path = vec![0usize];
+        for depth in 1..=n {
+            let nodes: Vec<usize> = (0..tree.len())
+                .filter(|&i| tree.nodes[i].depth == depth && tree.nodes[i].backbone)
+                .collect();
+            assert_eq!(nodes.len(), 1, "depth {depth} must have one backbone node");
+            assert_eq!(
+                tree.nodes[nodes[0]].parent,
+                *backbone_path.last().unwrap(),
+                "backbone must be parent-linked"
+            );
+            backbone_path.push(nodes[0]);
+
+            // at most k-1 side branches per level, all hanging off the
+            // previous backbone node
+            let side: Vec<usize> = (0..tree.len())
+                .filter(|&i| tree.nodes[i].depth == depth && !tree.nodes[i].backbone)
+                .collect();
+            assert!(side.len() <= k - 1, "depth {depth}: {} side branches", side.len());
+            for &s in &side {
+                assert_eq!(tree.nodes[s].parent, backbone_path[depth - 1]);
+                assert!(tree.children(s).is_empty(), "side branches are leaves");
+            }
+        }
+
+        // ancestor-mask consistency for every slot
+        for s in 0..tree.len() {
+            let a = tree.ancestors(s);
+            assert_eq!(a[0], 0, "mask rows are root-anchored");
+            assert_eq!(*a.last().unwrap(), s, "mask rows include the row itself");
+            assert!(a.windows(2).all(|w| w[0] < w[1]), "strictly ascending");
+            for (j, &x) in a.iter().enumerate() {
+                assert_eq!(tree.nodes[x].depth, j, "j-th ancestor sits at depth j");
+            }
+            for w in a.windows(2) {
+                assert_eq!(tree.nodes[w[1]].parent, w[0], "consecutive = parent-linked");
+            }
+        }
+    }
+}
+
+/// Multi-threaded admission queue: concurrent producers and consumers
+/// with a mid-stream close. Every item is either consumed exactly once
+/// or bounced back to its producer with a `Closed`/`Full` error — no
+/// loss, no duplication — and `pop` drains then returns `None`.
+#[test]
+fn admission_queue_concurrent_push_pop_close() {
+    const PRODUCERS: u64 = 4;
+    const PER_PRODUCER: u64 = 200;
+    let q: Arc<AdmissionQueue<u64>> = Arc::new(AdmissionQueue::new(8));
+
+    let producers: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut accepted = Vec::new();
+                for i in 0..PER_PRODUCER {
+                    let item = p * 1000 + i;
+                    match q.push(item) {
+                        Ok(()) => accepted.push(item),
+                        Err(_) => break, // queue closed mid-stream
+                    }
+                }
+                accepted
+            })
+        })
+        .collect();
+    let consumers: Vec<_> = (0..2)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(x) = q.pop() {
+                    got.push(x);
+                }
+                got
+            })
+        })
+        .collect();
+
+    // close somewhere in the middle of the stream
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    q.close();
+
+    let mut accepted: Vec<u64> = Vec::new();
+    for p in producers {
+        accepted.extend(p.join().unwrap());
+    }
+    let mut consumed: Vec<u64> = Vec::new();
+    for c in consumers {
+        consumed.extend(c.join().unwrap());
+    }
+    // whatever was accepted before the close is delivered exactly once
+    accepted.sort_unstable();
+    consumed.sort_unstable();
+    assert_eq!(accepted, consumed, "no loss, no duplication");
+    // post-close pushes report Closed, and pop on the drained queue ends
+    assert!(matches!(q.try_push(9999), Err(PushError::Closed(9999))));
+    assert_eq!(q.pop(), None);
+}
+
+/// FIFO order survives a full/empty oscillation under try_push sheds.
+#[test]
+fn admission_queue_sheds_preserve_fifo() {
+    let q: AdmissionQueue<usize> = AdmissionQueue::new(4);
+    let mut accepted = Vec::new();
+    let mut popped = Vec::new();
+    for i in 0..64 {
+        match q.try_push(i) {
+            Ok(()) => accepted.push(i),
+            Err(PushError::Full(_)) => {
+                // drain half on pressure, like the engine's admission pass
+                for _ in 0..2 {
+                    if let Some(x) = q.pop_timeout(std::time::Duration::from_millis(1)) {
+                        popped.push(x);
+                    }
+                }
+            }
+            Err(PushError::Closed(_)) => unreachable!("never closed here"),
+        }
+    }
+    while let Some(x) = q.pop_timeout(std::time::Duration::from_millis(1)) {
+        popped.push(x);
+    }
+    assert_eq!(popped, accepted, "accepted items come out in FIFO order");
 }
 
 /// Greedy acceptance is deterministic and equals the target argmax chain

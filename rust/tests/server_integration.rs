@@ -1,21 +1,21 @@
-//! TCP API server round-trip: spin the server up on a test port, issue
-//! requests from client threads, check responses and stats, shut down.
+//! TCP API server round-trip over the continuous batcher: spin the
+//! server up on a test port, issue requests from client threads, check
+//! per-request generation parameters, out-of-admission-order completion
+//! (batch >= 2), stats, and shutdown.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::path::PathBuf;
 use std::rc::Rc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use fasteagle::coordinator::{Server, ServerConfig};
-use fasteagle::draft::make_drafter;
-use fasteagle::model::TargetModel;
+use fasteagle::coordinator::{BatchConfig, BatchEngine, BatchMethod, Server, ServerConfig};
 use fasteagle::runtime::{ArtifactStore, Runtime};
-use fasteagle::spec::Engine;
 use fasteagle::util::json::Json;
+use fasteagle::workload::batched_serving_target;
 
-fn artifacts_base() -> Option<PathBuf> {
+fn artifacts_root() -> Option<PathBuf> {
     let candidates = [
         std::env::var("FE_ARTIFACTS").unwrap_or_default(),
         "artifacts".to_string(),
@@ -26,7 +26,6 @@ fn artifacts_base() -> Option<PathBuf> {
         .filter(|c| !c.is_empty())
         .map(PathBuf::from)
         .find(|p| p.join("base").join("spec.json").exists())
-        .map(|p| p.join("base"))
 }
 
 const ADDR: &str = "127.0.0.1:7433";
@@ -42,17 +41,23 @@ fn query(line: &str) -> Json {
 }
 
 #[test]
-fn server_roundtrip_and_shutdown() {
-    let Some(dir) = artifacts_base() else {
+fn server_roundtrip_concurrency_and_shutdown() {
+    let Some(root) = artifacts_root() else {
         eprintln!("skipping: no artifacts");
+        return;
+    };
+    let Some((dir, batch)) = batched_serving_target(&root) else {
+        eprintln!("skipping: no serving target");
         return;
     };
     let server_thread = std::thread::spawn(move || {
         let rt = Arc::new(Runtime::cpu().unwrap());
         let store = Rc::new(ArtifactStore::open(rt, dir).unwrap());
-        let target = TargetModel::open(Rc::clone(&store)).unwrap();
-        let drafter = make_drafter(Rc::clone(&store), "fasteagle").unwrap();
-        let engine = Engine::new(target, drafter);
+        let engine = BatchEngine::new(
+            Rc::clone(&store),
+            BatchConfig::new(batch, BatchMethod::FastEagle),
+        )
+        .unwrap();
         let server = Server::new(ServerConfig { addr: ADDR.into(), queue_capacity: 8 });
         server.serve(engine).unwrap()
     });
@@ -75,31 +80,75 @@ fn server_roundtrip_and_shutdown() {
     let v = query(r#"{"max_new": 4}"#);
     assert!(v.get("error").is_some());
 
-    // two real generations from separate client threads
-    let handles: Vec<_> = (0..2)
-        .map(|i| {
-            std::thread::spawn(move || {
-                let req = format!(
-                    r#"{{"prompt":"USER: tell me about city transport and the steady bridge. ({i})\nASSISTANT:","max_new":16}}"#
-                );
-                query(&req)
-            })
-        })
-        .collect();
-    for h in handles {
-        let v = h.join().unwrap();
-        assert!(v.get("error").is_none(), "{v:?}");
-        assert_eq!(v.get("new_tokens").and_then(Json::as_usize), Some(16));
-        assert!(v.get("tau").and_then(Json::as_f64).unwrap() >= 1.0);
+    // Two in-flight requests: the long one is admitted first, the short
+    // one second. With batch >= 2 they decode concurrently and the short
+    // one must complete first — out of admission order. Completion order
+    // is observed via a shared log each client appends to on reply.
+    let order: Arc<Mutex<Vec<&'static str>>> = Arc::new(Mutex::new(Vec::new()));
+    let o = Arc::clone(&order);
+    let long = std::thread::spawn(move || {
+        let v = query(
+            r#"{"prompt":"USER: tell me about city transport and the steady bridge.\nASSISTANT:","max_new":40}"#,
+        );
+        o.lock().unwrap().push("long");
+        v
+    });
+    // let the long request reach the engine first
+    std::thread::sleep(Duration::from_millis(300));
+    let o = Arc::clone(&order);
+    let short = std::thread::spawn(move || {
+        let v = query(
+            r#"{"prompt":"USER: tell me about machine learning and the fast cache.\nASSISTANT:","max_new":4}"#,
+        );
+        o.lock().unwrap().push("short");
+        v
+    });
+    let vl = long.join().unwrap();
+    let vs = short.join().unwrap();
+    assert!(vl.get("error").is_none(), "{vl:?}");
+    assert!(vs.get("error").is_none(), "{vs:?}");
+    // per-request max_new_tokens honored
+    assert_eq!(vl.get("new_tokens").and_then(Json::as_usize), Some(40));
+    assert_eq!(vs.get("new_tokens").and_then(Json::as_usize), Some(4));
+    assert!(vl.get("tau").and_then(Json::as_f64).unwrap() >= 1.0);
+    // the engine's own occupancy gauge says whether the two actually
+    // overlapped in slots; only then is completion order meaningful
+    // (avoids a wall-clock race on very fast machines)
+    let stats = query(r#"{"cmd":"stats"}"#);
+    let peak = stats.get("peak_occupancy").and_then(Json::as_f64).unwrap_or(0.0);
+    if batch >= 2 && peak >= 2.0 {
+        assert_eq!(
+            order.lock().unwrap().as_slice(),
+            ["short", "long"],
+            "short request (admitted second) must complete before the long one"
+        );
+    } else if batch >= 2 {
+        eprintln!("note: requests never overlapped (peak={peak}); order check skipped");
     }
+
+    // per-request temperature/seed: same prompt + seed at T=1 reproduces
+    // exactly, across separate requests with different server-side ids
+    let stoch = r#"{"prompt":"Q: Ben has 4 coins and buys 9 more coins. how many coins does Ben have?\nA:","max_new":12,"temperature":1.0,"seed":42}"#;
+    let a = query(stoch);
+    let b = query(stoch);
+    assert!(a.get("error").is_none(), "{a:?}");
+    assert_eq!(
+        a.get("text").and_then(Json::as_str),
+        b.get("text").and_then(Json::as_str),
+        "same per-request seed must reproduce the same stochastic stream"
+    );
+    assert_eq!(a.get("new_tokens").and_then(Json::as_usize), Some(12));
 
     // stats
     let v = query(r#"{"cmd":"stats"}"#);
-    assert_eq!(v.get("requests_done").and_then(Json::as_usize), Some(2));
+    assert_eq!(v.get("requests_done").and_then(Json::as_usize), Some(4));
+    assert!(v.get("mean_occupancy").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(v.get("ttfc_p50_ms").is_some());
 
     // shutdown
     let v = query(r#"{"cmd":"shutdown"}"#);
     assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
     let metrics = server_thread.join().unwrap();
-    assert_eq!(metrics.requests_done, 2);
+    assert_eq!(metrics.requests_done, 4);
+    assert_eq!(metrics.requests_rejected, 0);
 }

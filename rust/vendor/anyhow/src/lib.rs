@@ -1,0 +1,179 @@
+//! Offline stand-in for the `anyhow` crate (the crate registry in this
+//! environment is empty — DESIGN.md §Substitutions). Implements the
+//! subset the workspace uses: `Error` with a context chain, `Result`,
+//! the `Context` extension trait for `Result` and `Option`, and the
+//! `anyhow!` / `bail!` macros. Display mirrors upstream: `{}` prints the
+//! outermost message, `{:#}` prints the full `outer: inner: ...` chain,
+//! and `{:?}` prints a "Caused by:" listing.
+
+use std::fmt;
+
+/// `Result` with a defaulted error type, as upstream.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message plus an optional chain of causes (outermost first).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Causes from outermost to innermost, starting with this error.
+    fn chain(&self) -> impl Iterator<Item = &Error> {
+        std::iter::successors(Some(self), |e| e.source.as_deref())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain on one line, upstream-style.
+            for (i, e) in self.chain().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{}", e.msg)?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for e in self.chain().skip(1) {
+                write!(f, "\n    {}", e.msg)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the std source chain into our chain so `{:#}` keeps
+        // the underlying cause (e.g. the io::Error under a file open).
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err = Error::msg(msgs.pop().unwrap());
+        while let Some(m) = msgs.pop() {
+            err = err.context(m);
+        }
+        err
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = io_err().into();
+        let e = e.context("open spec.json").context("load artifacts");
+        assert_eq!(format!("{e}"), "load artifacts");
+        assert_eq!(format!("{e:#}"), "load artifacts: open spec.json: no such file");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn result_and_option_context() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading: no such file");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        assert_eq!(Some(3).context("present").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("failed with code {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "failed with code 7");
+        let e = anyhow!("plain {}", "message");
+        assert_eq!(format!("{e}"), "plain message");
+    }
+}
