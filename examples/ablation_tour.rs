@@ -13,7 +13,7 @@ use fasteagle::spec::{Engine, GenConfig};
 
 fn main() -> anyhow::Result<()> {
     let root = std::env::var("FE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let rt = Arc::new(Runtime::cpu()?);
+    let rt = Arc::new(Runtime::from_env()?);
     let store = Rc::new(ArtifactStore::open(rt, format!("{root}/base").into())?);
     let prompt =
         "USER: tell me about healthy food and the quiet garden.\nASSISTANT:";

@@ -14,7 +14,7 @@ use fasteagle::spec::{Engine, GenConfig};
 
 fn main() -> anyhow::Result<()> {
     let root = std::env::var("FE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let rt = Arc::new(Runtime::cpu()?);
+    let rt = Arc::new(Runtime::from_env()?);
     let store = Rc::new(ArtifactStore::open(rt, format!("{root}/base").into())?);
 
     let prompt = "Q: Ana has 12 apples and buys 7 more apples. how many apples does Ana have?\nA:";

@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         let (dir, batch) =
             workload::batched_serving_target(std::path::Path::new(&root2))
                 .ok_or_else(|| anyhow::anyhow!("no serving target under {root2}"))?;
-        let rt = Arc::new(Runtime::cpu()?);
+        let rt = Arc::new(Runtime::from_env()?);
         let store = Rc::new(ArtifactStore::open(rt, dir)?);
         let engine = BatchEngine::new(
             Rc::clone(&store),

@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     } else {
         ("base", 1)
     };
-    let rt = Arc::new(Runtime::cpu()?);
+    let rt = Arc::new(Runtime::from_env()?);
     let store = Rc::new(ArtifactStore::open(rt, format!("{root}/{target}").into())?);
     let prompts = workload::load_prompts(std::path::Path::new(&root), "inst")?;
     let trace = workload::bursty_trace(&prompts, 2, batch * 2, Duration::from_millis(200), 32, 7);

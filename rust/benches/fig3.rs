@@ -1,9 +1,8 @@
 //! `cargo bench` entry for the fig3 harness (hand-rolled; criterion is
-//! unavailable offline). FE_BENCH_QUICK=1 shrinks the sweep.
+//! unavailable offline). FE_BENCH_QUICK=1 or `-- --quick` shrinks the
+//! sweep; `-- --backend interpret` runs on the in-process HLO
+//! interpreter (generating fixture artifacts if none exist), so this
+//! lane runs anywhere without PJRT.
 fn main() {
-    let quick = std::env::var("FE_BENCH_QUICK").as_deref() == Ok("1");
-    if let Err(e) = fasteagle::bench::run_named("fig3", quick) {
-        eprintln!("fig3 failed: {e:#}");
-        std::process::exit(1);
-    }
+    fasteagle::bench::bench_main("fig3");
 }

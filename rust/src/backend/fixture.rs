@@ -1,0 +1,760 @@
+//! Fixture artifact generator: a tiny (d_model=16, 2-layer) target +
+//! cascaded-drafter (+ EAGLE baseline) artifact tree the HLO interpreter
+//! can execute, emitted **deterministically from a seed** — same seed,
+//! bit-identical tree, bit-identical greedy decodes.
+//!
+//! The tree has exactly the layout `aot.py` produces (`spec.json`,
+//! `hlo/<exec>.hlo.txt` + `.io.json`, `weights/<set>.few`,
+//! `prompts/<task>.json`, root `manifest.json`), so `ArtifactStore`,
+//! `SpecEngine`, `BatchEngine`, the TCP server and the benches all run
+//! on it unmodified — this is what un-skips the artifact-gated
+//! integration tests in CI.
+//!
+//! The drafters are not trained; they are *constructed* to correlate
+//! with the target (shared token embeddings and output head, drafter
+//! position table shifted by one so an anchor's draft mimics the
+//! target's next row), which yields τ > 1 level-1 acceptance and
+//! realistic depth falloff while staying fully deterministic.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::weights::write_few;
+use crate::util::rng::Pcg64;
+
+use super::hlo::builder::{H, HloBuilder, Ty};
+
+// fixture model dimensions (single head keeps the lowered graphs small;
+// everything downstream reads them from spec.json, not from here)
+const D: usize = 16;
+const L: usize = 2;
+const KH: usize = 1;
+const HD: usize = 16;
+const FFN: usize = 32;
+const V: usize = 272;
+const S: usize = 128;
+const N_CASCADE: usize = 3;
+const PREFILL_CHUNK: usize = 16;
+const TREE_TOP_K: usize = 2;
+const VERIFY_MS: [usize; 4] = [1, 3, 8, 16];
+const CHUNK_TS: [usize; 3] = [1, 8, 32];
+const BATCHED_MS: [usize; 2] = [1, 3];
+const BATCHED_TS: [usize; 2] = [1, 8];
+
+const TASKS: [&str; 5] = ["dialog", "code", "math", "inst", "news"];
+
+// ---------------------------------------------------------------------------
+// weight specs + values
+// ---------------------------------------------------------------------------
+
+type NamedTensors = Vec<(String, HostTensor)>;
+
+fn layer_specs(prefix: &str) -> Vec<(String, Vec<usize>)> {
+    vec![
+        (format!("{prefix}/wq"), vec![D, D]),
+        (format!("{prefix}/wk"), vec![D, D]),
+        (format!("{prefix}/wv"), vec![D, D]),
+        (format!("{prefix}/wo"), vec![D, D]),
+        (format!("{prefix}/w1"), vec![D, FFN]),
+        (format!("{prefix}/w2"), vec![FFN, D]),
+    ]
+}
+
+fn target_weight_specs() -> Vec<(String, Vec<usize>)> {
+    let mut w = vec![("emb".to_string(), vec![V, D]), ("pos".to_string(), vec![S, D])];
+    for l in 0..L {
+        w.extend(layer_specs(&format!("l{l}")));
+    }
+    w.push(("w_out".to_string(), vec![D, V]));
+    w
+}
+
+fn fe_weight_specs() -> Vec<(String, Vec<usize>)> {
+    let mut w = vec![
+        ("fe/in".to_string(), vec![3 * D, D]),
+        ("fe/emb".to_string(), vec![V, D]),
+        ("fe/pos".to_string(), vec![S, D]),
+    ];
+    for i in 0..N_CASCADE {
+        w.extend(layer_specs(&format!("fe/l{i}")));
+    }
+    w.push(("fe/head".to_string(), vec![D, V]));
+    w
+}
+
+/// Weight inputs of one EAGLE executable (`first` selects the input
+/// projection; the rest is shared with the other variant).
+fn eagle_weight_specs(first: bool) -> Vec<(String, Vec<usize>)> {
+    let proj = if first {
+        ("eg/first_in".to_string(), vec![3 * D, D])
+    } else {
+        ("eg/next_in".to_string(), vec![D, D])
+    };
+    let mut w = vec![
+        proj,
+        ("eg/emb".to_string(), vec![V, D]),
+        ("eg/pos".to_string(), vec![S, D]),
+    ];
+    w.extend(layer_specs("eg/l"));
+    w.push(("eg/head".to_string(), vec![D, V]));
+    w
+}
+
+fn rand_tensor(rng: &mut Pcg64, dims: Vec<usize>, scale: f32) -> HostTensor {
+    let n: usize = dims.iter().product();
+    let data: Vec<f32> =
+        (0..n).map(|_| (rng.next_f64() as f32 * 2.0 - 1.0) * scale).collect();
+    HostTensor::f32(dims, data)
+}
+
+fn rand_layer(rng: &mut Pcg64, prefix: &str, s_qkv: f32, s_out: f32) -> NamedTensors {
+    vec![
+        (format!("{prefix}/wq"), rand_tensor(rng, vec![D, D], s_qkv)),
+        (format!("{prefix}/wk"), rand_tensor(rng, vec![D, D], s_qkv)),
+        (format!("{prefix}/wv"), rand_tensor(rng, vec![D, D], s_qkv)),
+        (format!("{prefix}/wo"), rand_tensor(rng, vec![D, D], s_out)),
+        (format!("{prefix}/w1"), rand_tensor(rng, vec![D, FFN], s_qkv)),
+        (format!("{prefix}/w2"), rand_tensor(rng, vec![FFN, D], s_out)),
+    ]
+}
+
+/// The drafter position table is the target's shifted by one: the draft
+/// for anchor position p mimics the target's row at p+1.
+fn shifted_pos(pos: &HostTensor) -> HostTensor {
+    let src = pos.as_f32().unwrap();
+    let mut data = vec![0.0f32; S * D];
+    for p in 0..S {
+        let q = (p + 1).min(S - 1);
+        data[p * D..(p + 1) * D].copy_from_slice(&src[q * D..(q + 1) * D]);
+    }
+    HostTensor::f32(vec![S, D], data)
+}
+
+/// All three weight sets from one seed.
+fn gen_weights(seed: u64) -> (NamedTensors, NamedTensors, NamedTensors) {
+    let mut rng = Pcg64::new(seed, 17);
+    // target: token/pos embeddings dominate, attention/FFN perturb —
+    // predictable enough that a head-sharing drafter gets accepted
+    let emb = rand_tensor(&mut rng, vec![V, D], 1.0);
+    let pos = rand_tensor(&mut rng, vec![S, D], 0.3);
+    let mut target: NamedTensors =
+        vec![("emb".to_string(), emb.clone()), ("pos".to_string(), pos.clone())];
+    for l in 0..L {
+        target.extend(rand_layer(&mut rng, &format!("l{l}"), 0.125, 0.06));
+    }
+    let w_out = rand_tensor(&mut rng, vec![D, V], 0.5);
+    target.push(("w_out".to_string(), w_out.clone()));
+
+    // fasteagle: shared embeddings/head, shifted positions, small cascade
+    let mut fe: NamedTensors = vec![
+        ("fe/in".to_string(), rand_tensor(&mut rng, vec![3 * D, D], 0.02)),
+        ("fe/emb".to_string(), emb.clone()),
+        ("fe/pos".to_string(), shifted_pos(&pos)),
+    ];
+    for i in 0..N_CASCADE {
+        fe.extend(rand_layer(&mut rng, &format!("fe/l{i}"), 0.06, 0.03));
+    }
+    fe.push(("fe/head".to_string(), w_out.clone()));
+
+    // eagle: one layer, same construction
+    let mut eg: NamedTensors = vec![
+        ("eg/first_in".to_string(), rand_tensor(&mut rng, vec![3 * D, D], 0.02)),
+        ("eg/next_in".to_string(), rand_tensor(&mut rng, vec![D, D], 0.02)),
+        ("eg/emb".to_string(), emb),
+        ("eg/pos".to_string(), shifted_pos(&pos)),
+    ];
+    eg.extend(rand_layer(&mut rng, "eg/l", 0.06, 0.03));
+    eg.push(("eg/head".to_string(), w_out));
+    (target, fe, eg)
+}
+
+// ---------------------------------------------------------------------------
+// HLO emission
+// ---------------------------------------------------------------------------
+
+struct LayerWH {
+    wq: H,
+    wk: H,
+    wv: H,
+    wo: H,
+    w1: H,
+    w2: H,
+}
+
+fn io_entry(name: &str, kind: Option<&str>, shape: &[usize], dtype: &str) -> String {
+    let kind_s = kind.map(|k| format!("\"kind\": \"{k}\", ")).unwrap_or_default();
+    format!("{{\"name\": \"{name}\", {kind_s}\"shape\": {shape:?}, \"dtype\": \"{dtype}\"}}")
+}
+
+fn io_json(name: &str, inputs: &[String], outputs: &[String]) -> String {
+    format!(
+        "{{\"name\": \"{name}\", \"inputs\": [{}], \"outputs\": [{}]}}",
+        inputs.join(", "),
+        outputs.join(", ")
+    )
+}
+
+/// Declare the weight parameters in spec order; returns name -> handle.
+fn weight_params(
+    hb: &mut HloBuilder,
+    specs: &[(String, Vec<usize>)],
+    io_in: &mut Vec<String>,
+) -> HashMap<String, H> {
+    let mut map = HashMap::new();
+    for (name, dims) in specs {
+        let h = hb.param(Ty::F32, dims.clone());
+        io_in.push(io_entry(name, Some("weight"), dims, "float32"));
+        map.insert(name.clone(), h);
+    }
+    map
+}
+
+fn layer_handles(w: &HashMap<String, H>, prefix: &str) -> LayerWH {
+    let g = |k: &str| w[&format!("{prefix}/{k}")].clone();
+    LayerWH { wq: g("wq"), wk: g("wk"), wv: g("wv"), wo: g("wo"), w1: g("w1"), w2: g("w2") }
+}
+
+/// One pre-norm-free attention + tanh-FFN block over a KV cache slice.
+///
+/// `kv` has dims `[layer?, 2, B, S, KH, HD]`; the block writes this
+/// call's K/V rows at `clen..clen+rows` of (layer, batch), attends over
+/// the full S slots under the additive `mask2d`, and returns the
+/// residual-updated activations plus the updated cache.
+#[allow(clippy::too_many_arguments)]
+fn attn_ffn_layer(
+    hb: &mut HloBuilder,
+    x: H,
+    w: &LayerWH,
+    kv: H,
+    layer: Option<usize>,
+    batch: usize,
+    clen: &H,
+    mask2d: &H,
+) -> (H, H) {
+    let rows = x.dims[0];
+    let d = x.dims[1];
+    let q = hb.matmul(&x, &w.wq);
+    let k = hb.matmul(&x, &w.wk);
+    let v = hb.matmul(&x, &w.wv);
+
+    let mut upd_dims = if layer.is_some() { vec![1, 1, 1] } else { vec![1, 1] };
+    upd_dims.extend([rows, KH, HD]);
+    let starts = |hb: &mut HloBuilder, plane: i32| -> Vec<H> {
+        let mut st = Vec::new();
+        if let Some(l) = layer {
+            st.push(hb.const_s32(l as i32));
+        }
+        st.push(hb.const_s32(plane));
+        st.push(hb.const_s32(batch as i32));
+        st.push(clen.clone());
+        st.push(hb.const_s32(0));
+        st.push(hb.const_s32(0));
+        st
+    };
+    let k6 = hb.reshape(&k, upd_dims.clone());
+    let sk = starts(hb, 0);
+    let kv = hb.dus(&kv, &k6, &sk);
+    let v6 = hb.reshape(&v, upd_dims);
+    let sv = starts(hb, 1);
+    let kv = hb.dus(&kv, &v6, &sv);
+
+    let read = |hb: &mut HloBuilder, kv: &H, plane: usize| -> H {
+        let mut ranges = Vec::new();
+        if let Some(l) = layer {
+            ranges.push((l, l + 1));
+        }
+        ranges.push((plane, plane + 1));
+        ranges.push((batch, batch + 1));
+        ranges.extend([(0, S), (0, KH), (0, HD)]);
+        let sl = hb.slice(kv, &ranges);
+        hb.reshape(&sl, vec![S, KH * HD])
+    };
+    let k_all = read(hb, &kv, 0);
+    let v_all = read(hb, &kv, 1);
+
+    // scores + masked softmax over all S slots (masked-out slots get
+    // exactly-zero probability: exp(-1e9 - max) underflows to 0.0)
+    let scores = hb.matmul_nt(&q, &k_all);
+    let scale = hb.const_f32(1.0 / (HD as f32).sqrt());
+    let scale_b = hb.splat(&scale, vec![rows, S]);
+    let scores = hb.mul(&scores, &scale_b);
+    let scores = hb.add(&scores, mask2d);
+    let rmax = hb.reduce_max(&scores, &[1]);
+    let rmax_b = hb.broadcast(&rmax, vec![rows, S], &[0]);
+    let shifted = hb.sub(&scores, &rmax_b);
+    let e = hb.exp(&shifted);
+    let rsum = hb.reduce_add(&e, &[1]);
+    let rsum_b = hb.broadcast(&rsum, vec![rows, S], &[0]);
+    let p = hb.div(&e, &rsum_b);
+    let attn = hb.matmul(&p, &v_all);
+
+    let proj = hb.matmul(&attn, &w.wo);
+    let x = hb.add(&x, &proj);
+    let h1m = hb.matmul(&x, &w.w1);
+    let h1 = hb.tanh(&h1m);
+    let ff = hb.matmul(&h1, &w.w2);
+    let x = hb.add(&x, &ff);
+    debug_assert_eq!(x.dims, vec![rows, d]);
+    (x, kv)
+}
+
+fn concat_or_single(hb: &mut HloBuilder, parts: Vec<H>, dim: usize) -> H {
+    if parts.len() == 1 {
+        parts.into_iter().next().unwrap()
+    } else {
+        let refs: Vec<&H> = parts.iter().collect();
+        hb.concat(&refs, dim)
+    }
+}
+
+/// Per-batch-element views of the shared runtime inputs.
+struct BatchView {
+    toks: H,
+    pos: H,
+    mask: H,
+    clen: H,
+}
+
+fn batch_view(
+    hb: &mut HloBuilder,
+    b: usize,
+    rows: usize,
+    toks: &H,
+    pos: &H,
+    mask: &H,
+    clen: &H,
+) -> BatchView {
+    let tb = hb.slice(toks, &[(b, b + 1), (0, rows)]);
+    let tb = hb.reshape(&tb, vec![rows]);
+    let pb = hb.slice(pos, &[(b, b + 1), (0, rows)]);
+    let pb = hb.reshape(&pb, vec![rows]);
+    let mb = hb.slice(mask, &[(b, b + 1), (0, rows), (0, S)]);
+    let mb = hb.reshape(&mb, vec![rows, S]);
+    let cb = hb.slice(clen, &[(b, b + 1)]);
+    let cb = hb.reshape(&cb, vec![]);
+    BatchView { toks: tb, pos: pb, mask: mb, clen: cb }
+}
+
+/// `tgt_m{m}[_b{b}]`: verify/prefill forward with feature taps.
+fn emit_tgt(name: &str, m: usize, bsz: usize) -> (String, String) {
+    let mut hb = HloBuilder::new(name);
+    let mut io_in = Vec::new();
+    let w = weight_params(&mut hb, &target_weight_specs(), &mut io_in);
+    let layers: Vec<LayerWH> = (0..L).map(|l| layer_handles(&w, &format!("l{l}"))).collect();
+
+    let tokens = hb.param(Ty::S32, vec![bsz, m]);
+    io_in.push(io_entry("tokens", Some("arg"), &[bsz, m], "int32"));
+    let positions = hb.param(Ty::S32, vec![bsz, m]);
+    io_in.push(io_entry("positions", Some("arg"), &[bsz, m], "int32"));
+    let mask = hb.param(Ty::F32, vec![bsz, m, S]);
+    io_in.push(io_entry("mask", Some("arg"), &[bsz, m, S], "float32"));
+    let cache_len = hb.param(Ty::S32, vec![bsz]);
+    io_in.push(io_entry("cache_len", Some("arg"), &[bsz], "int32"));
+    let kv_dims = vec![L, 2, bsz, S, KH, HD];
+    let mut kv = hb.param(Ty::F32, kv_dims.clone());
+    io_in.push(io_entry("kv", Some("state"), &kv_dims, "float32"));
+
+    let mut feats_parts = Vec::new();
+    let mut logits_parts = Vec::new();
+    for b in 0..bsz {
+        let view = batch_view(&mut hb, b, m, &tokens, &positions, &mask, &cache_len);
+        let te = hb.gather_rows(&w["emb"], &view.toks);
+        let pe = hb.gather_rows(&w["pos"], &view.pos);
+        let mut x = hb.add(&te, &pe);
+        let mut taps = vec![x.clone()];
+        for (l, lw) in layers.iter().enumerate() {
+            let (nx, nkv) =
+                attn_ffn_layer(&mut hb, x, lw, kv, Some(l), b, &view.clen, &view.mask);
+            x = nx;
+            kv = nkv;
+            taps.push(x.clone());
+        }
+        let tap_refs: Vec<&H> = taps.iter().collect();
+        let f = hb.concat(&tap_refs, 1);
+        let lg = hb.matmul(&x, &w["w_out"]);
+        let f3 = hb.reshape(&f, vec![1, m, 3 * D]);
+        feats_parts.push(f3);
+        let l3 = hb.reshape(&lg, vec![1, m, V]);
+        logits_parts.push(l3);
+    }
+    let feats = concat_or_single(&mut hb, feats_parts, 0);
+    let logits = concat_or_single(&mut hb, logits_parts, 0);
+    let io_out = vec![
+        io_entry("feats", None, &[bsz, m, 3 * D], "float32"),
+        io_entry("kv", None, &kv_dims, "float32"),
+        io_entry("logits", None, &[bsz, m, V], "float32"),
+    ];
+    (hb.finish(&[&feats, &kv, &logits]), io_json(name, &io_in, &io_out))
+}
+
+/// `fe_t{t}[_b{b}]`: the cascaded drafter — one pass over the anchors
+/// yields all N_CASCADE per-level draft logits.
+fn emit_fe(name: &str, t: usize, bsz: usize) -> (String, String) {
+    let mut hb = HloBuilder::new(name);
+    let mut io_in = Vec::new();
+    let w = weight_params(&mut hb, &fe_weight_specs(), &mut io_in);
+    let layers: Vec<LayerWH> =
+        (0..N_CASCADE).map(|i| layer_handles(&w, &format!("fe/l{i}"))).collect();
+
+    let feats = hb.param(Ty::F32, vec![bsz, t, 3 * D]);
+    io_in.push(io_entry("feats", Some("arg"), &[bsz, t, 3 * D], "float32"));
+    let next_tokens = hb.param(Ty::S32, vec![bsz, t]);
+    io_in.push(io_entry("next_tokens", Some("arg"), &[bsz, t], "int32"));
+    let anchor_pos = hb.param(Ty::S32, vec![bsz, t]);
+    io_in.push(io_entry("anchor_pos", Some("arg"), &[bsz, t], "int32"));
+    let mask = hb.param(Ty::F32, vec![bsz, t, S]);
+    io_in.push(io_entry("mask", Some("arg"), &[bsz, t, S], "float32"));
+    let ctx_len = hb.param(Ty::S32, vec![bsz]);
+    io_in.push(io_entry("ctx_len", Some("arg"), &[bsz], "int32"));
+    let dkv_dims = vec![N_CASCADE, 2, bsz, S, KH, HD];
+    let mut dkv = hb.param(Ty::F32, dkv_dims.clone());
+    io_in.push(io_entry("dkv", Some("state"), &dkv_dims, "float32"));
+
+    let mut logits_parts = Vec::new();
+    for b in 0..bsz {
+        let view = batch_view(&mut hb, b, t, &next_tokens, &anchor_pos, &mask, &ctx_len);
+        let fb = hb.slice(&feats, &[(b, b + 1), (0, t), (0, 3 * D)]);
+        let fb = hb.reshape(&fb, vec![t, 3 * D]);
+        let fp = hb.matmul(&fb, &w["fe/in"]);
+        let te = hb.gather_rows(&w["fe/emb"], &view.toks);
+        let pe = hb.gather_rows(&w["fe/pos"], &view.pos);
+        let x0 = hb.add(&fp, &te);
+        let mut x = hb.add(&x0, &pe);
+        let mut levels = Vec::new();
+        for (i, lw) in layers.iter().enumerate() {
+            let (nx, nkv) =
+                attn_ffn_layer(&mut hb, x, lw, dkv, Some(i), b, &view.clen, &view.mask);
+            x = nx;
+            dkv = nkv;
+            let lv = hb.matmul(&x, &w["fe/head"]);
+            let lv = hb.reshape(&lv, vec![t, 1, V]);
+            levels.push(lv);
+        }
+        let lb = concat_or_single(&mut hb, levels, 1);
+        let lb = hb.reshape(&lb, vec![1, t, N_CASCADE, V]);
+        logits_parts.push(lb);
+    }
+    let logits = concat_or_single(&mut hb, logits_parts, 0);
+    let io_out = vec![
+        io_entry("dkv", None, &dkv_dims, "float32"),
+        io_entry("logits", None, &[bsz, t, N_CASCADE, V], "float32"),
+    ];
+    (hb.finish(&[&dkv, &logits]), io_json(name, &io_in, &io_out))
+}
+
+/// `eg3_first_t{t}` / `eg_next_t1` (`[_b{b}]`): the single-layer
+/// autoregressive EAGLE baseline drafter.
+fn emit_eagle(name: &str, first: bool, t: usize, bsz: usize) -> (String, String) {
+    let fin = if first { 3 * D } else { D };
+    let proj_name = if first { "eg/first_in" } else { "eg/next_in" };
+    let mut hb = HloBuilder::new(name);
+    let mut io_in = Vec::new();
+    let w = weight_params(&mut hb, &eagle_weight_specs(first), &mut io_in);
+    let lw = layer_handles(&w, "eg/l");
+
+    let feat_in = hb.param(Ty::F32, vec![bsz, t, fin]);
+    io_in.push(io_entry("feat_in", Some("arg"), &[bsz, t, fin], "float32"));
+    let tokens = hb.param(Ty::S32, vec![bsz, t]);
+    io_in.push(io_entry("tokens", Some("arg"), &[bsz, t], "int32"));
+    let anchor_pos = hb.param(Ty::S32, vec![bsz, t]);
+    io_in.push(io_entry("anchor_pos", Some("arg"), &[bsz, t], "int32"));
+    let mask = hb.param(Ty::F32, vec![bsz, t, S]);
+    io_in.push(io_entry("mask", Some("arg"), &[bsz, t, S], "float32"));
+    let ctx_len = hb.param(Ty::S32, vec![bsz]);
+    io_in.push(io_entry("ctx_len", Some("arg"), &[bsz], "int32"));
+    let ekv_dims = vec![2, bsz, S, KH, HD];
+    let mut ekv = hb.param(Ty::F32, ekv_dims.clone());
+    io_in.push(io_entry("ekv", Some("state"), &ekv_dims, "float32"));
+
+    let mut h_parts = Vec::new();
+    let mut logits_parts = Vec::new();
+    for b in 0..bsz {
+        let view = batch_view(&mut hb, b, t, &tokens, &anchor_pos, &mask, &ctx_len);
+        let fb = hb.slice(&feat_in, &[(b, b + 1), (0, t), (0, fin)]);
+        let fb = hb.reshape(&fb, vec![t, fin]);
+        let fp = hb.matmul(&fb, &w[proj_name]);
+        let te = hb.gather_rows(&w["eg/emb"], &view.toks);
+        let pe = hb.gather_rows(&w["eg/pos"], &view.pos);
+        let x0 = hb.add(&fp, &te);
+        let x = hb.add(&x0, &pe);
+        let (x, nekv) = attn_ffn_layer(&mut hb, x, &lw, ekv, None, b, &view.clen, &view.mask);
+        ekv = nekv;
+        let hh = hb.reshape(&x, vec![1, t, D]);
+        h_parts.push(hh);
+        let lg = hb.matmul(&x, &w["eg/head"]);
+        let lg = hb.reshape(&lg, vec![1, t, V]);
+        logits_parts.push(lg);
+    }
+    let h = concat_or_single(&mut hb, h_parts, 0);
+    let logits = concat_or_single(&mut hb, logits_parts, 0);
+    let io_out = vec![
+        io_entry("ekv", None, &ekv_dims, "float32"),
+        io_entry("h", None, &[bsz, t, D], "float32"),
+        io_entry("logits", None, &[bsz, t, V], "float32"),
+    ];
+    (hb.finish(&[&ekv, &h, &logits]), io_json(name, &io_in, &io_out))
+}
+
+// ---------------------------------------------------------------------------
+// tree assembly
+// ---------------------------------------------------------------------------
+
+fn spec_json(target: &str, exec_names: &[String], batch_sizes: &[usize]) -> String {
+    let execs: Vec<String> = exec_names.iter().map(|n| format!("\"{n}\": {{}}")).collect();
+    let batches: Vec<String> = batch_sizes.iter().map(|b| b.to_string()).collect();
+    format!(
+        r#"{{
+ "name": "{target}", "stands_for": "interpreter-fixture",
+ "d_model": {D}, "n_layers": {L}, "n_heads": {KH}, "n_kv_heads": {KH},
+ "head_dim": {HD}, "ffn": {FFN}, "taps": [0, 1, 2], "max_seq": {S},
+ "vocab": {V}, "feat_dim": {fd}, "bos": 256, "eos": 257, "pad": 258,
+ "prefill_chunk": {PREFILL_CHUNK}, "draft_depth": {N_CASCADE},
+ "tree_top_k": {TREE_TOP_K}, "tree_nodes": {nodes},
+ "medusa_heads": 4, "sps_chain": 5,
+ "sps": {{"d_model": {D}, "n_layers": 1, "n_kv_heads": {KH}, "head_dim": {HD}}},
+ "drafter_sets": ["fasteagle", "eagle3"],
+ "executables": {{{execs}}},
+ "batch_sizes": [{batches}]
+}}
+"#,
+        fd = 3 * D,
+        nodes = N_CASCADE * TREE_TOP_K,
+        execs = execs.join(", "),
+        batches = batches.join(", "),
+    )
+}
+
+fn prompt_set(task: &str) -> Vec<String> {
+    let topics: [(&str, &str); 8] = match task {
+        "code" => [
+            ("write a function to add numbers", "return the sum"),
+            ("sort a list fast", "use quicksort"),
+            ("parse a config file", "read each line"),
+            ("reverse a string", "swap the ends"),
+            ("hash a password", "salt it first"),
+            ("walk a tree", "visit children"),
+            ("open a socket", "bind the port"),
+            ("cache a result", "key by input"),
+        ],
+        "math" => [
+            ("Ben has 4 coins and buys 9 more coins", "how many coins"),
+            ("a train goes 60 miles in 2 hours", "how fast is it"),
+            ("12 apples split among 3 kids", "how many each"),
+            ("a square has side 5", "what is the area"),
+            ("7 times 8 minus 6", "what is the value"),
+            ("half of 90 plus 13", "what is the total"),
+            ("a jar holds 24 candies, 9 eaten", "how many left"),
+            ("3 packs of 11 pens", "how many pens"),
+        ],
+        "inst" => [
+            ("make tea", "steps please"),
+            ("plant a seed", "short guide"),
+            ("fold a letter", "explain simply"),
+            ("clean a lens", "what to avoid"),
+            ("pack a bag", "list the items"),
+            ("tie a knot", "step by step"),
+            ("draw a map", "where to start"),
+            ("store apples", "keep them fresh"),
+        ],
+        "news" => [
+            ("the harbor opened a new bridge", "summarize"),
+            ("rain flooded the old market", "summarize"),
+            ("the team won the spring cup", "summarize"),
+            ("a library added night hours", "summarize"),
+            ("the mill hired ten workers", "summarize"),
+            ("buses switched to new routes", "summarize"),
+            ("the fair drew record crowds", "summarize"),
+            ("a bakery won the town prize", "summarize"),
+        ],
+        _ => [
+            ("machine learning and the fast cache", "tell me more"),
+            ("city transport and the steady bridge", "tell me more"),
+            ("summer rain and the quiet river", "tell me more"),
+            ("old maps and the long road", "tell me more"),
+            ("night trains and the far lights", "tell me more"),
+            ("warm bread and the small shop", "tell me more"),
+            ("deep caves and the cold air", "tell me more"),
+            ("tall ships and the wide bay", "tell me more"),
+        ],
+    };
+    topics
+        .iter()
+        .map(|(a, b)| format!("USER: {a}. {b}.\nASSISTANT:"))
+        .collect()
+}
+
+fn write_json(path: &Path, text: &str) -> Result<()> {
+    std::fs::write(path, text).with_context(|| format!("write {path:?}"))
+}
+
+/// Emit one `<root>/<target>/` artifact directory.
+pub fn generate_target_dir(dir: &Path, target: &str, seed: u64, batch_sizes: &[usize]) -> Result<()> {
+    let hlo_dir = dir.join("hlo");
+    let wdir = dir.join("weights");
+    std::fs::create_dir_all(&hlo_dir)?;
+    std::fs::create_dir_all(&wdir)?;
+
+    let (target_w, fe_w, eg_w) = gen_weights(seed);
+    write_few(&wdir.join("target.few"), &target_w)?;
+    write_few(&wdir.join("fasteagle.few"), &fe_w)?;
+    write_few(&wdir.join("eagle3.few"), &eg_w)?;
+
+    let mut plan: Vec<(String, String, String)> = Vec::new(); // (name, hlo, io)
+    for m in VERIFY_MS {
+        let name = format!("tgt_m{m}");
+        let (h, io) = emit_tgt(&name, m, 1);
+        plan.push((name, h, io));
+    }
+    for t in CHUNK_TS {
+        let name = format!("fe_t{t}");
+        let (h, io) = emit_fe(&name, t, 1);
+        plan.push((name, h, io));
+        let name = format!("eg3_first_t{t}");
+        let (h, io) = emit_eagle(&name, true, t, 1);
+        plan.push((name, h, io));
+    }
+    {
+        let (h, io) = emit_eagle("eg_next_t1", false, 1, 1);
+        plan.push(("eg_next_t1".to_string(), h, io));
+    }
+    for &b in batch_sizes.iter().filter(|&&b| b > 1) {
+        for m in BATCHED_MS {
+            let name = format!("tgt_m{m}_b{b}");
+            let (h, io) = emit_tgt(&name, m, b);
+            plan.push((name, h, io));
+        }
+        for t in BATCHED_TS {
+            let name = format!("fe_t{t}_b{b}");
+            let (h, io) = emit_fe(&name, t, b);
+            plan.push((name, h, io));
+            let name = format!("eg3_first_t{t}_b{b}");
+            let (h, io) = emit_eagle(&name, true, t, b);
+            plan.push((name, h, io));
+        }
+        let name = format!("eg_next_t1_b{b}");
+        let (h, io) = emit_eagle(&name, false, 1, b);
+        plan.push((name, h, io));
+    }
+
+    let mut names = Vec::new();
+    for (name, hlo, io) in &plan {
+        std::fs::write(hlo_dir.join(format!("{name}.hlo.txt")), hlo)?;
+        std::fs::write(hlo_dir.join(format!("{name}.io.json")), io)?;
+        names.push(name.clone());
+    }
+    write_json(&dir.join("spec.json"), &spec_json(target, &names, batch_sizes))
+}
+
+/// Emit a full artifact tree (`manifest.json`, `prompts/`, targets
+/// `base` (B=1) and `mid` (adds B=2 serving executables)).
+pub fn generate_tree(root: &Path, seed: u64) -> Result<()> {
+    std::fs::create_dir_all(root.join("prompts"))?;
+    for task in TASKS {
+        let prompts = prompt_set(task);
+        let quoted: Vec<String> =
+            prompts.iter().map(|p| format!("{:?}", p)).collect();
+        write_json(
+            &root.join("prompts").join(format!("{task}.json")),
+            &format!("[{}]", quoted.join(", ")),
+        )?;
+    }
+    let tasks_q: Vec<String> = TASKS.iter().map(|t| format!("\"{t}\"")).collect();
+    let stands: Vec<String> = TASKS
+        .iter()
+        .map(|t| format!("\"{t}\": \"fixture\""))
+        .collect();
+    write_json(
+        &root.join("manifest.json"),
+        &format!(
+            r#"{{
+ "targets": ["base", "mid"],
+ "tasks": [{tasks}],
+ "task_stands_for": {{{stands}}},
+ "vocab": {V},
+ "fast_build": true,
+ "fixture_seed": {seed},
+ "tree": {{"depth": {N_CASCADE}, "top_k": {TREE_TOP_K}, "nodes": {nodes}}}
+}}
+"#,
+            tasks = tasks_q.join(", "),
+            stands = stands.join(", "),
+            nodes = N_CASCADE * TREE_TOP_K,
+        ),
+    )?;
+    generate_target_dir(&root.join("base"), "base", seed, &[1])?;
+    generate_target_dir(&root.join("mid"), "mid", seed.wrapping_add(1), &[1, 2])?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::hlo::eval::{evaluate, Value};
+    use crate::backend::hlo::parser::parse_module;
+    use std::rc::Rc;
+
+    #[test]
+    fn weight_specs_match_generated_values() {
+        let (t, f, e) = gen_weights(7);
+        let tspec = target_weight_specs();
+        assert_eq!(t.len(), tspec.len());
+        for ((name, tensor), (sname, sdims)) in t.iter().zip(&tspec) {
+            assert_eq!(name, sname);
+            assert_eq!(&tensor.shape, sdims);
+        }
+        let fspec = fe_weight_specs();
+        assert_eq!(f.len(), fspec.len());
+        // the eagle set is the union of both variants' specs
+        let first: Vec<_> = eagle_weight_specs(true);
+        let next: Vec<_> = eagle_weight_specs(false);
+        for (name, _) in first.iter().chain(&next) {
+            assert!(e.iter().any(|(n, _)| n == name), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let (a, _, _) = gen_weights(42);
+        let (b, _, _) = gen_weights(42);
+        let (c, _, _) = gen_weights(43);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    /// The emitted tgt module parses, evaluates, and its KV write is
+    /// visible to the row that owns it.
+    #[test]
+    fn tgt_module_runs_through_interpreter() {
+        let (hlo, _io) = emit_tgt("tgt_m1", 1, 1);
+        let module = parse_module(&hlo).unwrap();
+        let (tw, _, _) = gen_weights(5);
+        let mut args: Vec<Rc<Value>> = tw
+            .iter()
+            .map(|(_, t)| {
+                Rc::new(Value::f32(t.shape.clone(), t.as_f32().unwrap().to_vec()))
+            })
+            .collect();
+        args.push(Rc::new(Value::i32(vec![1, 1], vec![97])));
+        args.push(Rc::new(Value::i32(vec![1, 1], vec![0])));
+        let mut mask = vec![-1e9f32; S];
+        mask[0] = 0.0;
+        args.push(Rc::new(Value::f32(vec![1, 1, S], mask)));
+        args.push(Rc::new(Value::i32(vec![1], vec![0])));
+        args.push(Rc::new(Value::f32(
+            vec![L, 2, 1, S, KH, HD],
+            vec![0.0; L * 2 * S * KH * HD],
+        )));
+        let out = evaluate(&module, &args).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].dims, vec![1, 1, 3 * D]); // feats
+        assert_eq!(out[2].dims, vec![1, 1, V]); // logits
+        let logits = out[2].f32s().unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // K row 0 of layer 0 was written
+        let kv = out[1].f32s().unwrap();
+        assert!(kv[..HD].iter().any(|&v| v != 0.0));
+    }
+}

@@ -1,0 +1,428 @@
+//! Programmatic HLO-*text* builder.
+//!
+//! Emits modules in the same dependency-ordered, one-instruction-per-line
+//! form `aot.py` produces, restricted to the interpreter's op set. The
+//! fixture generator uses it to lower the tiny target/drafter graphs;
+//! the interpreter property tests use it to generate op-level programs
+//! against naive references. Shapes are tracked per handle so a fixture
+//! bug surfaces as a builder panic, not a silent wrong artifact.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ty {
+    F32,
+    S32,
+    Pred,
+}
+
+impl Ty {
+    fn text(self) -> &'static str {
+        match self {
+            Ty::F32 => "f32",
+            Ty::S32 => "s32",
+            Ty::Pred => "pred",
+        }
+    }
+}
+
+/// Handle to an emitted instruction (name + tracked shape).
+#[derive(Debug, Clone)]
+pub struct H {
+    pub name: String,
+    pub ty: Ty,
+    pub dims: Vec<usize>,
+}
+
+impl H {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+fn shape_text(ty: Ty, dims: &[usize]) -> String {
+    let dims_s: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+    format!("{}[{}]", ty.text(), dims_s.join(","))
+}
+
+fn list_text(xs: &[usize]) -> String {
+    let s: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("{{{}}}", s.join(","))
+}
+
+pub struct HloBuilder {
+    module: String,
+    body: Vec<String>,
+    /// (name, text) of reduce-body computations, emitted before ENTRY
+    aux: Vec<(String, String)>,
+    aux_names: BTreeSet<String>,
+    next: usize,
+    nparams: usize,
+}
+
+impl HloBuilder {
+    pub fn new(module: &str) -> HloBuilder {
+        HloBuilder {
+            module: module.to_string(),
+            body: Vec::new(),
+            aux: Vec::new(),
+            aux_names: BTreeSet::new(),
+            next: 0,
+            nparams: 0,
+        }
+    }
+
+    fn fresh(&mut self) -> String {
+        let n = self.next;
+        self.next += 1;
+        format!("v{n}")
+    }
+
+    fn push(&mut self, ty: Ty, dims: Vec<usize>, expr: String) -> H {
+        let name = self.fresh();
+        self.body.push(format!("  %{name} = {} {expr}", shape_text(ty, &dims)));
+        H { name, ty, dims }
+    }
+
+    pub fn param(&mut self, ty: Ty, dims: Vec<usize>) -> H {
+        let n = self.nparams;
+        self.nparams += 1;
+        self.push(ty, dims, format!("parameter({n})"))
+    }
+
+    pub fn const_f32(&mut self, v: f32) -> H {
+        // `{v:?}` prints the shortest round-tripping decimal for f32
+        self.push(Ty::F32, vec![], format!("constant({v:?})"))
+    }
+
+    pub fn const_s32(&mut self, v: i32) -> H {
+        self.push(Ty::S32, vec![], format!("constant({v})"))
+    }
+
+    fn binary(&mut self, op: &str, a: &H, b: &H) -> H {
+        assert_eq!(a.dims, b.dims, "{op}: operand shapes differ");
+        assert_eq!(a.ty, b.ty, "{op}: operand dtypes differ");
+        self.push(a.ty, a.dims.clone(), format!("{op}(%{}, %{})", a.name, b.name))
+    }
+
+    pub fn add(&mut self, a: &H, b: &H) -> H {
+        self.binary("add", a, b)
+    }
+
+    pub fn sub(&mut self, a: &H, b: &H) -> H {
+        self.binary("subtract", a, b)
+    }
+
+    pub fn mul(&mut self, a: &H, b: &H) -> H {
+        self.binary("multiply", a, b)
+    }
+
+    pub fn div(&mut self, a: &H, b: &H) -> H {
+        self.binary("divide", a, b)
+    }
+
+    pub fn max(&mut self, a: &H, b: &H) -> H {
+        self.binary("maximum", a, b)
+    }
+
+    pub fn min(&mut self, a: &H, b: &H) -> H {
+        self.binary("minimum", a, b)
+    }
+
+    pub fn exp(&mut self, a: &H) -> H {
+        self.push(a.ty, a.dims.clone(), format!("exponential(%{})", a.name))
+    }
+
+    pub fn tanh(&mut self, a: &H) -> H {
+        self.push(a.ty, a.dims.clone(), format!("tanh(%{})", a.name))
+    }
+
+    pub fn compare(&mut self, a: &H, b: &H, dir: &str) -> H {
+        assert_eq!(a.dims, b.dims, "compare: operand shapes differ");
+        self.push(
+            Ty::Pred,
+            a.dims.clone(),
+            format!("compare(%{}, %{}), direction={dir}", a.name, b.name),
+        )
+    }
+
+    pub fn select(&mut self, p: &H, t: &H, f: &H) -> H {
+        assert_eq!(p.ty, Ty::Pred);
+        assert_eq!(t.dims, f.dims);
+        self.push(
+            t.ty,
+            t.dims.clone(),
+            format!("select(%{}, %{}, %{})", p.name, t.name, f.name),
+        )
+    }
+
+    pub fn convert(&mut self, a: &H, to: Ty) -> H {
+        self.push(to, a.dims.clone(), format!("convert(%{})", a.name))
+    }
+
+    pub fn iota(&mut self, ty: Ty, dims: Vec<usize>, dim: usize) -> H {
+        self.push(ty, dims, format!("iota(), iota_dimension={dim}"))
+    }
+
+    pub fn reshape(&mut self, a: &H, dims: Vec<usize>) -> H {
+        assert_eq!(a.numel(), dims.iter().product::<usize>(), "reshape numel");
+        self.push(a.ty, dims, format!("reshape(%{})", a.name))
+    }
+
+    /// `mapping[i]` = output dim that input dim i maps to.
+    pub fn broadcast(&mut self, a: &H, dims: Vec<usize>, mapping: &[usize]) -> H {
+        assert_eq!(mapping.len(), a.dims.len(), "broadcast mapping rank");
+        self.push(
+            a.ty,
+            dims,
+            format!("broadcast(%{}), dimensions={}", a.name, list_text(mapping)),
+        )
+    }
+
+    pub fn transpose(&mut self, a: &H, perm: &[usize]) -> H {
+        let dims: Vec<usize> = perm.iter().map(|&p| a.dims[p]).collect();
+        self.push(
+            a.ty,
+            dims,
+            format!("transpose(%{}), dimensions={}", a.name, list_text(perm)),
+        )
+    }
+
+    /// (start, limit) per dim, stride 1.
+    pub fn slice(&mut self, a: &H, ranges: &[(usize, usize)]) -> H {
+        assert_eq!(ranges.len(), a.dims.len(), "slice rank");
+        let dims: Vec<usize> = ranges.iter().map(|&(s, l)| l - s).collect();
+        let parts: Vec<String> = ranges.iter().map(|&(s, l)| format!("[{s}:{l}]")).collect();
+        self.push(
+            a.ty,
+            dims,
+            format!("slice(%{}), slice={{{}}}", a.name, parts.join(", ")),
+        )
+    }
+
+    pub fn concat(&mut self, parts: &[&H], dim: usize) -> H {
+        assert!(!parts.is_empty());
+        let mut dims = parts[0].dims.clone();
+        dims[dim] = parts.iter().map(|p| p.dims[dim]).sum();
+        let names: Vec<String> = parts.iter().map(|p| format!("%{}", p.name)).collect();
+        self.push(
+            parts[0].ty,
+            dims,
+            format!("concatenate({}), dimensions={{{dim}}}", names.join(", ")),
+        )
+    }
+
+    pub fn dot_general(
+        &mut self,
+        a: &H,
+        b: &H,
+        lhs_batch: &[usize],
+        rhs_batch: &[usize],
+        lhs_contract: &[usize],
+        rhs_contract: &[usize],
+    ) -> H {
+        let mut dims: Vec<usize> = lhs_batch.iter().map(|&d| a.dims[d]).collect();
+        dims.extend(
+            (0..a.dims.len())
+                .filter(|d| !lhs_batch.contains(d) && !lhs_contract.contains(d))
+                .map(|d| a.dims[d]),
+        );
+        dims.extend(
+            (0..b.dims.len())
+                .filter(|d| !rhs_batch.contains(d) && !rhs_contract.contains(d))
+                .map(|d| b.dims[d]),
+        );
+        let mut attrs = String::new();
+        if !lhs_batch.is_empty() {
+            let _ = write!(
+                attrs,
+                "lhs_batch_dims={}, rhs_batch_dims={}, ",
+                list_text(lhs_batch),
+                list_text(rhs_batch)
+            );
+        }
+        let _ = write!(
+            attrs,
+            "lhs_contracting_dims={}, rhs_contracting_dims={}",
+            list_text(lhs_contract),
+            list_text(rhs_contract)
+        );
+        self.push(Ty::F32, dims, format!("dot(%{}, %{}), {attrs}", a.name, b.name))
+    }
+
+    /// [m,k] x [k,n] -> [m,n]
+    pub fn matmul(&mut self, a: &H, b: &H) -> H {
+        assert_eq!(a.dims.len(), 2);
+        assert_eq!(b.dims.len(), 2);
+        assert_eq!(a.dims[1], b.dims[0], "matmul inner dim");
+        self.dot_general(a, b, &[], &[], &[1], &[0])
+    }
+
+    /// [m,k] x [n,k] -> [m,n] (contract both trailing dims)
+    pub fn matmul_nt(&mut self, a: &H, b: &H) -> H {
+        assert_eq!(a.dims[1], b.dims[1], "matmul_nt inner dim");
+        self.dot_general(a, b, &[], &[], &[1], &[1])
+    }
+
+    /// Row gather: `table[n, d...]` indexed by `idx` (s32, any rank)
+    /// -> `[idx.dims..., d...]`.
+    pub fn gather_rows(&mut self, table: &H, idx: &H) -> H {
+        assert_eq!(idx.ty, Ty::S32);
+        let row_dims = &table.dims[1..];
+        let mut dims = idx.dims.clone();
+        dims.extend_from_slice(row_dims);
+        let offset_dims: Vec<usize> =
+            (idx.dims.len()..idx.dims.len() + row_dims.len()).collect();
+        let mut slice_sizes = vec![1usize];
+        slice_sizes.extend_from_slice(row_dims);
+        self.push(
+            table.ty,
+            dims,
+            format!(
+                "gather(%{}, %{}), offset_dims={}, collapsed_slice_dims={{0}}, \
+                 start_index_map={{0}}, index_vector_dim={}, slice_sizes={}",
+                table.name,
+                idx.name,
+                list_text(&offset_dims),
+                idx.dims.len(),
+                list_text(&slice_sizes),
+            ),
+        )
+    }
+
+    fn reducer(&mut self, op: &str, ty: Ty) -> String {
+        let name = format!("red_{op}_{}", ty.text());
+        if self.aux_names.insert(name.clone()) {
+            let t = shape_text(ty, &[]);
+            let text = format!(
+                "%{name} {{\n  %a = {t} parameter(0)\n  %b = {t} parameter(1)\n  ROOT %r = {t} {op}(%a, %b)\n}}\n"
+            );
+            self.aux.push((name.clone(), text));
+        }
+        name
+    }
+
+    fn reduce(&mut self, a: &H, init: &H, dims: &[usize], op: &str) -> H {
+        let body = self.reducer(op, a.ty);
+        let out_dims: Vec<usize> = a
+            .dims
+            .iter()
+            .enumerate()
+            .filter(|(d, _)| !dims.contains(d))
+            .map(|(_, &s)| s)
+            .collect();
+        self.push(
+            a.ty,
+            out_dims,
+            format!(
+                "reduce(%{}, %{}), dimensions={}, to_apply=%{body}",
+                a.name,
+                init.name,
+                list_text(dims)
+            ),
+        )
+    }
+
+    pub fn reduce_add(&mut self, a: &H, dims: &[usize]) -> H {
+        let init = self.const_f32(0.0);
+        self.reduce(a, &init, dims, "add")
+    }
+
+    pub fn reduce_max(&mut self, a: &H, dims: &[usize]) -> H {
+        // finite lower bound: avoids printing/parsing infinities
+        let init = self.const_f32(-3.0e38);
+        self.reduce(a, &init, dims, "maximum")
+    }
+
+    /// dynamic-update-slice with one scalar s32 start per dimension.
+    pub fn dus(&mut self, operand: &H, update: &H, starts: &[H]) -> H {
+        assert_eq!(starts.len(), operand.dims.len(), "dus starts rank");
+        assert_eq!(update.dims.len(), operand.dims.len(), "dus update rank");
+        let idx: Vec<String> = starts.iter().map(|s| format!("%{}", s.name)).collect();
+        self.push(
+            operand.ty,
+            operand.dims.clone(),
+            format!(
+                "dynamic-update-slice(%{}, %{}, {})",
+                operand.name,
+                update.name,
+                idx.join(", ")
+            ),
+        )
+    }
+
+    /// Broadcast a scalar to `dims`.
+    pub fn splat(&mut self, scalar: &H, dims: Vec<usize>) -> H {
+        assert!(scalar.dims.is_empty(), "splat wants a scalar");
+        self.broadcast(scalar, dims, &[])
+    }
+
+    /// Finish the module with a ROOT tuple over `outs`.
+    pub fn finish(self, outs: &[&H]) -> String {
+        let mut text = format!("HloModule {}\n\n", self.module);
+        for (_, aux) in &self.aux {
+            text.push_str(aux);
+            text.push('\n');
+        }
+        text.push_str("ENTRY %main {\n");
+        for line in &self.body {
+            text.push_str(line);
+            text.push('\n');
+        }
+        let shapes: Vec<String> =
+            outs.iter().map(|h| shape_text(h.ty, &h.dims)).collect();
+        let names: Vec<String> = outs.iter().map(|h| format!("%{}", h.name)).collect();
+        let _ = writeln!(
+            text,
+            "  ROOT %out = ({}) tuple({})",
+            shapes.join(", "),
+            names.join(", ")
+        );
+        text.push_str("}\n");
+        text
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::hlo::eval::{evaluate, Value};
+    use crate::backend::hlo::parser::parse_module;
+    use std::rc::Rc;
+
+    #[test]
+    fn built_module_parses_and_runs() {
+        let mut b = HloBuilder::new("toy");
+        let x = b.param(Ty::F32, vec![2, 3]);
+        let w = b.param(Ty::F32, vec![3, 2]);
+        let y = b.matmul(&x, &w);
+        let t = b.tanh(&y);
+        let s = b.reduce_add(&t, &[1]);
+        let text = b.finish(&[&t, &s]);
+        let m = parse_module(&text).unwrap();
+        let xs = Rc::new(Value::f32(vec![2, 3], vec![0.1; 6]));
+        let ws = Rc::new(Value::f32(vec![3, 2], vec![0.5; 6]));
+        let out = evaluate(&m, &[xs, ws]).unwrap();
+        assert_eq!(out[0].dims, vec![2, 2]);
+        assert_eq!(out[1].dims, vec![2]);
+        let expect = (0.15f32).tanh();
+        for v in out[0].f32s().unwrap() {
+            assert!((v - expect).abs() < 1e-6);
+        }
+        for v in out[1].f32s().unwrap() {
+            assert!((v - 2.0 * expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn f32_constants_roundtrip_exactly() {
+        let mut b = HloBuilder::new("c");
+        let c = b.const_f32(0.1234567);
+        let d = b.splat(&c, vec![2]);
+        let text = b.finish(&[&d]);
+        let m = parse_module(&text).unwrap();
+        let out = evaluate(&m, &[]).unwrap();
+        assert_eq!(out[0].f32s().unwrap(), &[0.1234567f32; 2]);
+    }
+}

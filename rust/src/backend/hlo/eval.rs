@@ -1,0 +1,973 @@
+//! CPU evaluator for parsed HLO modules.
+//!
+//! Reference-style, deterministic implementation of the op set the model
+//! graphs need (dot, elementwise, reshape/broadcast/transpose,
+//! slice/concatenate/gather/dynamic-update-slice, select/compare,
+//! exp/tanh, reduce, iota, convert, constant, tuple). Every reduction
+//! and dot accumulates in a fixed index order, so results are exactly
+//! reproducible across runs and across executables that share rows —
+//! the property the lossless-acceptance tests lean on.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::parser::{
+    BinOp, CmpDir, Computation, DotDims, GatherDims, HloModule, Instr, Op, PrimType, Shape,
+    UnOp,
+};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Buf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Pred(Vec<bool>),
+}
+
+impl Buf {
+    pub fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::I32(v) => v.len(),
+            Buf::Pred(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn ty(&self) -> PrimType {
+        match self {
+            Buf::F32(_) => PrimType::F32,
+            Buf::I32(_) => PrimType::S32,
+            Buf::Pred(_) => PrimType::Pred,
+        }
+    }
+}
+
+/// One evaluated array value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Value {
+    pub dims: Vec<usize>,
+    pub buf: Buf,
+}
+
+impl Value {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Value {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Value { dims, buf: Buf::F32(data) }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Value {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Value { dims, buf: Buf::I32(data) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.buf {
+            Buf::F32(v) => Ok(v),
+            other => bail!("expected f32 buffer, got {:?}", other.ty()),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.buf {
+            Buf::I32(v) => Ok(v),
+            other => bail!("expected s32 buffer, got {:?}", other.ty()),
+        }
+    }
+
+    fn preds(&self) -> Result<&[bool]> {
+        match &self.buf {
+            Buf::Pred(v) => Ok(v),
+            other => bail!("expected pred buffer, got {:?}", other.ty()),
+        }
+    }
+}
+
+/// Row-major strides.
+fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Advance a row-major multi-index; returns false after the last one.
+fn next_index(idx: &mut [usize], dims: &[usize]) -> bool {
+    for d in (0..dims.len()).rev() {
+        idx[d] += 1;
+        if idx[d] < dims[d] {
+            return true;
+        }
+        idx[d] = 0;
+    }
+    false
+}
+
+fn linear(idx: &[usize], strides: &[usize]) -> usize {
+    idx.iter().zip(strides).map(|(i, s)| i * s).sum()
+}
+
+fn check_shape(v: &Value, shape: &Shape, what: &str) -> Result<()> {
+    if v.dims != shape.dims || v.buf.ty() != shape.ty {
+        bail!(
+            "{what}: value is {:?}/{:?}, instruction says {:?}/{:?}",
+            v.buf.ty(),
+            v.dims,
+            shape.ty,
+            shape.dims
+        );
+    }
+    Ok(())
+}
+
+fn binary_f32(a: &[f32], b: &[f32], op: BinOp) -> Result<Vec<f32>> {
+    let f: fn(f32, f32) -> f32 = match op {
+        BinOp::Add => |x, y| x + y,
+        BinOp::Sub => |x, y| x - y,
+        BinOp::Mul => |x, y| x * y,
+        BinOp::Div => |x, y| x / y,
+        BinOp::Max => f32::max,
+        BinOp::Min => f32::min,
+        BinOp::And | BinOp::Or => bail!("logical op on f32"),
+    };
+    Ok(a.iter().zip(b).map(|(&x, &y)| f(x, y)).collect())
+}
+
+fn binary_i32(a: &[i32], b: &[i32], op: BinOp) -> Result<Vec<i32>> {
+    let f: fn(i32, i32) -> i32 = match op {
+        BinOp::Add => |x, y| x.wrapping_add(y),
+        BinOp::Sub => |x, y| x.wrapping_sub(y),
+        BinOp::Mul => |x, y| x.wrapping_mul(y),
+        BinOp::Div => |x, y| if y == 0 { 0 } else { x.wrapping_div(y) },
+        BinOp::Max => i32::max,
+        BinOp::Min => i32::min,
+        BinOp::And | BinOp::Or => bail!("logical op on s32"),
+    };
+    Ok(a.iter().zip(b).map(|(&x, &y)| f(x, y)).collect())
+}
+
+fn cmp<T: PartialOrd + PartialEq + Copy>(a: &[T], b: &[T], dir: CmpDir) -> Vec<bool> {
+    let f: fn(T, T) -> bool = match dir {
+        CmpDir::Eq => |x, y| x == y,
+        CmpDir::Ne => |x, y| x != y,
+        CmpDir::Lt => |x, y| x < y,
+        CmpDir::Le => |x, y| x <= y,
+        CmpDir::Gt => |x, y| x > y,
+        CmpDir::Ge => |x, y| x >= y,
+    };
+    a.iter().zip(b).map(|(&x, &y)| f(x, y)).collect()
+}
+
+/// Resolve a reduce body to its binary op: the computation must be a
+/// single binary instruction over its two parameters.
+fn reducer_of(comp: &Computation) -> Result<BinOp> {
+    let root = &comp.instrs[comp.root];
+    match root.op {
+        Op::Binary(b) => Ok(b),
+        _ => bail!("reduce body {:?} is not a plain binary op", comp.name),
+    }
+}
+
+/// Evaluate the module's entry computation over positional `args`.
+/// Returns the root tuple's parts (a single-element vec for non-tuple
+/// roots).
+pub fn evaluate(module: &HloModule, args: &[Rc<Value>]) -> Result<Vec<Value>> {
+    let entry = module.entry_computation();
+    if args.len() != entry.params.len() {
+        bail!(
+            "entry {:?} wants {} parameters, got {}",
+            entry.name,
+            entry.params.len(),
+            args.len()
+        );
+    }
+    let mut env: HashMap<&str, Rc<Value>> = HashMap::with_capacity(entry.instrs.len());
+    let mut root_parts: Option<Vec<Value>> = None;
+    for (i, ins) in entry.instrs.iter().enumerate() {
+        if let Op::Tuple = ins.op {
+            if i != entry.root {
+                bail!("non-root tuple instruction {:?}", ins.name);
+            }
+            let mut parts = Vec::with_capacity(ins.operands.len());
+            for o in &ins.operands {
+                let v = env
+                    .get(o.as_str())
+                    .with_context(|| format!("tuple operand {o:?} undefined"))?;
+                parts.push((**v).clone());
+            }
+            root_parts = Some(parts);
+            continue;
+        }
+        // parameters alias the caller's Rc — bound weights stay pinned
+        // and per-call args are staged once at the call boundary, never
+        // re-copied per instruction; everything else is fresh
+        let v = match &ins.op {
+            Op::Parameter(n) => Rc::clone(
+                args.get(*n)
+                    .with_context(|| format!("parameter {n} out of range"))?,
+            ),
+            _ => Rc::new(
+                eval_instr(module, ins, &env)
+                    .with_context(|| format!("instruction {:?}", ins.name))?,
+            ),
+        };
+        check_shape(&v, &ins.shape, &ins.name)?;
+        env.insert(ins.name.as_str(), v);
+    }
+    if let Some(parts) = root_parts {
+        return Ok(parts);
+    }
+    let root = &entry.instrs[entry.root];
+    Ok(vec![(**env.get(root.name.as_str()).context("root value missing")?).clone()])
+}
+
+fn operand<'e>(
+    ins: &Instr,
+    n: usize,
+    env: &'e HashMap<&str, Rc<Value>>,
+) -> Result<&'e Rc<Value>> {
+    let name = ins
+        .operands
+        .get(n)
+        .with_context(|| format!("missing operand {n}"))?;
+    env.get(name.as_str()).with_context(|| format!("operand {name:?} undefined"))
+}
+
+fn eval_instr(
+    module: &HloModule,
+    ins: &Instr,
+    env: &HashMap<&str, Rc<Value>>,
+) -> Result<Value> {
+    let out_dims = ins.shape.dims.clone();
+    Ok(match &ins.op {
+        Op::Parameter(_) => unreachable!("parameters aliased in evaluate()"),
+        // scalar-literal constants splat to their declared shape, as in
+        // real XLA printouts (`f32[128]{0} constant(0)`)
+        Op::ConstF32(v) => {
+            let n = out_dims.iter().product();
+            Value::f32(out_dims, vec![*v; n])
+        }
+        Op::ConstS32(v) => {
+            let n = out_dims.iter().product();
+            Value::i32(out_dims, vec![*v; n])
+        }
+        Op::ConstPred(v) => {
+            let n = out_dims.iter().product();
+            Value { dims: out_dims, buf: Buf::Pred(vec![*v; n]) }
+        }
+        Op::Iota { dim } => {
+            let st = strides(&out_dims);
+            let n: usize = out_dims.iter().product();
+            let mut data = vec![0i32; n];
+            if n > 0 {
+                let mut idx = vec![0usize; out_dims.len()];
+                loop {
+                    data[linear(&idx, &st)] = idx[*dim] as i32;
+                    if !next_index(&mut idx, &out_dims) {
+                        break;
+                    }
+                }
+            }
+            match ins.shape.ty {
+                PrimType::S32 => Value::i32(out_dims, data),
+                PrimType::F32 => {
+                    Value::f32(out_dims, data.iter().map(|&x| x as f32).collect())
+                }
+                PrimType::Pred => bail!("pred iota"),
+            }
+        }
+        Op::Convert => {
+            let a = operand(ins, 0, env)?;
+            let buf = match (&a.buf, ins.shape.ty) {
+                (Buf::F32(v), PrimType::S32) => {
+                    // XLA convert rounds toward zero
+                    Buf::I32(v.iter().map(|&x| x as i32).collect())
+                }
+                (Buf::I32(v), PrimType::F32) => {
+                    Buf::F32(v.iter().map(|&x| x as f32).collect())
+                }
+                (Buf::Pred(v), PrimType::F32) => {
+                    Buf::F32(v.iter().map(|&x| if x { 1.0 } else { 0.0 }).collect())
+                }
+                (Buf::Pred(v), PrimType::S32) => {
+                    Buf::I32(v.iter().map(|&x| x as i32).collect())
+                }
+                (b, t) if b.ty() == t => b.clone(),
+                (b, t) => bail!("unsupported convert {:?} -> {t:?}", b.ty()),
+            };
+            Value { dims: out_dims, buf }
+        }
+        Op::Unary(u) => {
+            let a = operand(ins, 0, env)?;
+            match (&a.buf, u) {
+                (Buf::F32(v), UnOp::Exp) => {
+                    Value::f32(out_dims, v.iter().map(|x| x.exp()).collect())
+                }
+                (Buf::F32(v), UnOp::Tanh) => {
+                    Value::f32(out_dims, v.iter().map(|x| x.tanh()).collect())
+                }
+                (Buf::F32(v), UnOp::Neg) => {
+                    Value::f32(out_dims, v.iter().map(|x| -x).collect())
+                }
+                (Buf::I32(v), UnOp::Neg) => {
+                    Value::i32(out_dims, v.iter().map(|x| x.wrapping_neg()).collect())
+                }
+                (b, u) => bail!("unsupported unary {u:?} on {:?}", b.ty()),
+            }
+        }
+        Op::Binary(b) => {
+            let x = operand(ins, 0, env)?;
+            let y = operand(ins, 1, env)?;
+            if x.dims != y.dims {
+                bail!("binary operand shapes differ: {:?} vs {:?}", x.dims, y.dims);
+            }
+            let buf = match (&x.buf, &y.buf) {
+                (Buf::F32(a), Buf::F32(c)) => Buf::F32(binary_f32(a, c, *b)?),
+                (Buf::I32(a), Buf::I32(c)) => Buf::I32(binary_i32(a, c, *b)?),
+                (Buf::Pred(a), Buf::Pred(c)) => match b {
+                    BinOp::And => {
+                        Buf::Pred(a.iter().zip(c).map(|(&p, &q)| p && q).collect())
+                    }
+                    BinOp::Or => {
+                        Buf::Pred(a.iter().zip(c).map(|(&p, &q)| p || q).collect())
+                    }
+                    other => bail!("unsupported pred binary {other:?}"),
+                },
+                _ => bail!("mixed-dtype binary"),
+            };
+            Value { dims: out_dims, buf }
+        }
+        Op::Compare(dir) => {
+            let x = operand(ins, 0, env)?;
+            let y = operand(ins, 1, env)?;
+            if x.dims != y.dims {
+                bail!("compare shapes differ: {:?} vs {:?}", x.dims, y.dims);
+            }
+            let preds = match (&x.buf, &y.buf) {
+                (Buf::F32(a), Buf::F32(b)) => cmp(a, b, *dir),
+                (Buf::I32(a), Buf::I32(b)) => cmp(a, b, *dir),
+                _ => bail!("unsupported compare operand types"),
+            };
+            Value { dims: out_dims, buf: Buf::Pred(preds) }
+        }
+        Op::Select => {
+            let p = operand(ins, 0, env)?;
+            let t = operand(ins, 1, env)?;
+            let f = operand(ins, 2, env)?;
+            if p.dims != t.dims || t.dims != f.dims {
+                bail!("select shapes differ");
+            }
+            let preds = p.preds()?;
+            let buf = match (&t.buf, &f.buf) {
+                (Buf::F32(a), Buf::F32(b)) => Buf::F32(
+                    preds.iter().zip(a.iter().zip(b)).map(|(&c, (&x, &y))| if c { x } else { y }).collect(),
+                ),
+                (Buf::I32(a), Buf::I32(b)) => Buf::I32(
+                    preds.iter().zip(a.iter().zip(b)).map(|(&c, (&x, &y))| if c { x } else { y }).collect(),
+                ),
+                _ => bail!("select branch dtypes differ"),
+            };
+            Value { dims: out_dims, buf }
+        }
+        Op::Dot(d) => eval_dot(operand(ins, 0, env)?, operand(ins, 1, env)?, d, out_dims)?,
+        Op::Reshape => {
+            let a = operand(ins, 0, env)?;
+            if a.numel() != out_dims.iter().product::<usize>() {
+                bail!("reshape numel mismatch: {:?} -> {:?}", a.dims, out_dims);
+            }
+            Value { dims: out_dims, buf: a.buf.clone() }
+        }
+        Op::Broadcast(mapping) => eval_broadcast(operand(ins, 0, env)?, mapping, out_dims)?,
+        Op::Transpose(perm) => eval_transpose(operand(ins, 0, env)?, perm, out_dims)?,
+        Op::Slice(ranges) => eval_slice(operand(ins, 0, env)?, ranges, out_dims)?,
+        Op::Concatenate(dim) => {
+            let vals: Vec<&Rc<Value>> = (0..ins.operands.len())
+                .map(|i| operand(ins, i, env))
+                .collect::<Result<Vec<_>>>()?;
+            eval_concat(&vals, *dim, out_dims)?
+        }
+        Op::Gather(g) => eval_gather(operand(ins, 0, env)?, operand(ins, 1, env)?, g, out_dims)?,
+        Op::Reduce { dims, to_apply } => {
+            let comp = module
+                .computations
+                .get(to_apply)
+                .with_context(|| format!("reduce body {to_apply:?} missing"))?;
+            eval_reduce(
+                operand(ins, 0, env)?,
+                operand(ins, 1, env)?,
+                dims,
+                reducer_of(comp)?,
+                out_dims,
+            )?
+        }
+        Op::DynamicUpdateSlice => {
+            let n_idx = ins.operands.len().saturating_sub(2);
+            let mut starts = Vec::with_capacity(n_idx);
+            for i in 0..n_idx {
+                let s = operand(ins, 2 + i, env)?;
+                let v = s.i32s().context("dus start index")?;
+                starts.push(*v.first().context("empty dus start")? as i64);
+            }
+            eval_dus(operand(ins, 0, env)?, operand(ins, 1, env)?, &starts)?
+        }
+        Op::Tuple => unreachable!("tuples handled at the root"),
+    })
+}
+
+fn eval_broadcast(a: &Value, mapping: &[usize], out_dims: Vec<usize>) -> Result<Value> {
+    if mapping.len() != a.dims.len() {
+        bail!("broadcast dims {:?} rank-mismatch input {:?}", mapping, a.dims);
+    }
+    let out_st = strides(&out_dims);
+    let n: usize = out_dims.iter().product();
+    let in_st = strides(&a.dims);
+    // per-output-dim input stride (0 when the dim is new)
+    let mut eff = vec![0usize; out_dims.len()];
+    for (in_d, &out_d) in mapping.iter().enumerate() {
+        if out_d >= out_dims.len() || a.dims[in_d] != out_dims[out_d] {
+            bail!("broadcast mapping {mapping:?}: input {:?} -> output {:?}", a.dims, out_dims);
+        }
+        eff[out_d] = in_st[in_d];
+    }
+    let mut src = vec![0usize; n];
+    if n > 0 {
+        let mut idx = vec![0usize; out_dims.len()];
+        loop {
+            let o = linear(&idx, &out_st);
+            src[o] = idx.iter().zip(&eff).map(|(i, s)| i * s).sum();
+            if !next_index(&mut idx, &out_dims) {
+                break;
+            }
+        }
+    }
+    let buf = match &a.buf {
+        Buf::F32(v) => Buf::F32(src.iter().map(|&i| v[i]).collect()),
+        Buf::I32(v) => Buf::I32(src.iter().map(|&i| v[i]).collect()),
+        Buf::Pred(v) => Buf::Pred(src.iter().map(|&i| v[i]).collect()),
+    };
+    Ok(Value { dims: out_dims, buf })
+}
+
+fn eval_transpose(a: &Value, perm: &[usize], out_dims: Vec<usize>) -> Result<Value> {
+    if perm.len() != a.dims.len() {
+        bail!("transpose perm {:?} rank-mismatch {:?}", perm, a.dims);
+    }
+    let in_st = strides(&a.dims);
+    let out_st = strides(&out_dims);
+    let n = a.numel();
+    let mut src = vec![0usize; n];
+    if n > 0 {
+        let mut idx = vec![0usize; out_dims.len()];
+        loop {
+            // out index i maps to input dim perm[i]
+            let mut in_off = 0usize;
+            for (i, &p) in perm.iter().enumerate() {
+                in_off += idx[i] * in_st[p];
+            }
+            src[linear(&idx, &out_st)] = in_off;
+            if !next_index(&mut idx, &out_dims) {
+                break;
+            }
+        }
+    }
+    let buf = match &a.buf {
+        Buf::F32(v) => Buf::F32(src.iter().map(|&i| v[i]).collect()),
+        Buf::I32(v) => Buf::I32(src.iter().map(|&i| v[i]).collect()),
+        Buf::Pred(v) => Buf::Pred(src.iter().map(|&i| v[i]).collect()),
+    };
+    Ok(Value { dims: out_dims, buf })
+}
+
+fn eval_slice(a: &Value, ranges: &[(usize, usize, usize)], out_dims: Vec<usize>) -> Result<Value> {
+    if ranges.len() != a.dims.len() {
+        bail!("slice rank mismatch");
+    }
+    for (d, &(s, l, st)) in ranges.iter().enumerate() {
+        if st == 0 || l > a.dims[d] || s > l {
+            bail!("bad slice range {:?} for dim {d} of {:?}", ranges[d], a.dims);
+        }
+    }
+    let in_st = strides(&a.dims);
+    let out_st = strides(&out_dims);
+    let n: usize = out_dims.iter().product();
+    let mut src = vec![0usize; n];
+    if n > 0 {
+        let mut idx = vec![0usize; out_dims.len()];
+        loop {
+            let mut in_off = 0usize;
+            for (d, &i) in idx.iter().enumerate() {
+                in_off += (ranges[d].0 + i * ranges[d].2) * in_st[d];
+            }
+            src[linear(&idx, &out_st)] = in_off;
+            if !next_index(&mut idx, &out_dims) {
+                break;
+            }
+        }
+    }
+    let buf = match &a.buf {
+        Buf::F32(v) => Buf::F32(src.iter().map(|&i| v[i]).collect()),
+        Buf::I32(v) => Buf::I32(src.iter().map(|&i| v[i]).collect()),
+        Buf::Pred(v) => Buf::Pred(src.iter().map(|&i| v[i]).collect()),
+    };
+    Ok(Value { dims: out_dims, buf })
+}
+
+fn eval_concat(vals: &[&Rc<Value>], dim: usize, out_dims: Vec<usize>) -> Result<Value> {
+    let first = vals.first().context("empty concatenate")?;
+    let rank = first.dims.len();
+    if dim >= rank {
+        bail!("concatenate dim {dim} out of range");
+    }
+    // outer = product of dims before `dim`; each input contributes a
+    // contiguous chunk of (its dim size * inner) per outer step
+    let outer: usize = out_dims[..dim].iter().product();
+    let inner: usize = out_dims[dim + 1..].iter().product();
+    macro_rules! concat_t {
+        ($variant:ident, $t:ty, $get:ident) => {{
+            let mut out: Vec<$t> = Vec::with_capacity(out_dims.iter().product());
+            for o in 0..outer {
+                for v in vals {
+                    let part = match &v.buf {
+                        Buf::$variant(d) => d,
+                        _ => bail!("concatenate dtype mismatch"),
+                    };
+                    let chunk = v.dims[dim] * inner;
+                    out.extend_from_slice(&part[o * chunk..(o + 1) * chunk]);
+                }
+            }
+            Buf::$variant(out)
+        }};
+    }
+    let buf = match &first.buf {
+        Buf::F32(_) => concat_t!(F32, f32, f32s),
+        Buf::I32(_) => concat_t!(I32, i32, i32s),
+        Buf::Pred(_) => concat_t!(Pred, bool, preds),
+    };
+    Ok(Value { dims: out_dims, buf })
+}
+
+/// Standard HLO gather (the general form, per the XLA semantics doc).
+fn eval_gather(
+    operand: &Value,
+    indices: &Value,
+    g: &GatherDims,
+    out_dims: Vec<usize>,
+) -> Result<Value> {
+    let idx_vals = indices.i32s().context("gather indices must be s32")?;
+    let op_dims = &operand.dims;
+    let op_st = strides(op_dims);
+    let idx_st = strides(&indices.dims);
+    // implicit trailing index-vector dim of size 1
+    let ivd_size = if g.index_vector_dim == indices.dims.len() {
+        1
+    } else {
+        indices.dims[g.index_vector_dim]
+    };
+    if g.start_index_map.len() != ivd_size {
+        bail!("gather: start_index_map vs index_vector_dim size mismatch");
+    }
+    // output dims split into batch dims (from indices) and offset dims
+    let out_rank = out_dims.len();
+    let batch_out_dims: Vec<usize> =
+        (0..out_rank).filter(|d| !g.offset_dims.contains(d)).collect();
+    // offset output dims map, in order, to operand dims not collapsed
+    let offset_op_dims: Vec<usize> =
+        (0..op_dims.len()).filter(|d| !g.collapsed_slice_dims.contains(d)).collect();
+    if offset_op_dims.len() != g.offset_dims.len() {
+        bail!("gather: offset_dims vs collapsed_slice_dims mismatch");
+    }
+
+    let n: usize = out_dims.iter().product();
+    let mut src = vec![0usize; n];
+    if n > 0 {
+        let out_st = strides(&out_dims);
+        let mut idx = vec![0usize; out_rank];
+        loop {
+            // batch index into start_indices (insert index_vector_dim)
+            let mut start_vec = vec![0i64; ivd_size];
+            for (k, sv) in start_vec.iter_mut().enumerate() {
+                let mut sidx: Vec<usize> = Vec::with_capacity(indices.dims.len());
+                let mut b_it = batch_out_dims.iter().map(|&d| idx[d]);
+                for d in 0..indices.dims.len() {
+                    if d == g.index_vector_dim {
+                        sidx.push(k);
+                    } else {
+                        sidx.push(b_it.next().context("gather batch rank mismatch")?);
+                    }
+                }
+                *sv = idx_vals[linear(&sidx, &idx_st)] as i64;
+            }
+            // operand index = clamped start + offset
+            let mut op_idx = vec![0usize; op_dims.len()];
+            for (k, &d) in g.start_index_map.iter().enumerate() {
+                let max_start = (op_dims[d] - g.slice_sizes[d]) as i64;
+                op_idx[d] = start_vec[k].clamp(0, max_start) as usize;
+            }
+            for (&o, &d) in g.offset_dims.iter().zip(&offset_op_dims) {
+                op_idx[d] += idx[o];
+            }
+            src[linear(&idx, &out_st)] = linear(&op_idx, &op_st);
+            if !next_index(&mut idx, &out_dims) {
+                break;
+            }
+        }
+    }
+    let buf = match &operand.buf {
+        Buf::F32(v) => Buf::F32(src.iter().map(|&i| v[i]).collect()),
+        Buf::I32(v) => Buf::I32(src.iter().map(|&i| v[i]).collect()),
+        Buf::Pred(v) => Buf::Pred(src.iter().map(|&i| v[i]).collect()),
+    };
+    Ok(Value { dims: out_dims, buf })
+}
+
+fn eval_reduce(
+    a: &Value,
+    init: &Value,
+    red_dims: &[usize],
+    op: BinOp,
+    out_dims: Vec<usize>,
+) -> Result<Value> {
+    let kept: Vec<usize> = (0..a.dims.len()).filter(|d| !red_dims.contains(d)).collect();
+    let out_st = strides(&out_dims);
+    let n_out: usize = out_dims.iter().product();
+
+    macro_rules! reduce_t {
+        ($variant:ident, $t:ty, $apply:expr) => {{
+            let data = match &a.buf {
+                Buf::$variant(v) => v,
+                _ => bail!("reduce dtype mismatch"),
+            };
+            let init_v: $t = match &init.buf {
+                Buf::$variant(v) => *v.first().context("empty reduce init")?,
+                _ => bail!("reduce init dtype mismatch"),
+            };
+            let mut out = vec![init_v; n_out];
+            if a.numel() > 0 {
+                let in_st = strides(&a.dims);
+                let mut idx = vec![0usize; a.dims.len()];
+                let apply: fn($t, $t) -> $t = $apply;
+                loop {
+                    let mut o = 0usize;
+                    for (k, &d) in kept.iter().enumerate() {
+                        o += idx[d] * out_st[k];
+                    }
+                    out[o] = apply(out[o], data[linear(&idx, &in_st)]);
+                    if !next_index(&mut idx, &a.dims) {
+                        break;
+                    }
+                }
+            }
+            Buf::$variant(out)
+        }};
+    }
+    let buf = match (&a.buf, op) {
+        (Buf::F32(_), BinOp::Add) => reduce_t!(F32, f32, |x, y| x + y),
+        (Buf::F32(_), BinOp::Mul) => reduce_t!(F32, f32, |x, y| x * y),
+        (Buf::F32(_), BinOp::Max) => reduce_t!(F32, f32, f32::max),
+        (Buf::F32(_), BinOp::Min) => reduce_t!(F32, f32, f32::min),
+        (Buf::I32(_), BinOp::Add) => reduce_t!(I32, i32, |x, y| x.wrapping_add(y)),
+        (Buf::I32(_), BinOp::Max) => reduce_t!(I32, i32, i32::max),
+        (Buf::I32(_), BinOp::Min) => reduce_t!(I32, i32, i32::min),
+        (b, op) => bail!("unsupported reduce {op:?} over {:?}", b.ty()),
+    };
+    Ok(Value { dims: out_dims, buf })
+}
+
+fn eval_dus(operand: &Value, update: &Value, starts: &[i64]) -> Result<Value> {
+    if starts.len() != operand.dims.len() || update.dims.len() != operand.dims.len() {
+        bail!("dynamic-update-slice rank mismatch");
+    }
+    for (&od, &ud) in operand.dims.iter().zip(&update.dims) {
+        if ud > od {
+            bail!("dus update {:?} exceeds operand {:?}", update.dims, operand.dims);
+        }
+    }
+    // XLA semantics: starts are clamped so the update fits
+    let clamped: Vec<usize> = starts
+        .iter()
+        .zip(operand.dims.iter().zip(&update.dims))
+        .map(|(&s, (&od, &ud))| s.clamp(0, (od - ud) as i64) as usize)
+        .collect();
+    let op_st = strides(&operand.dims);
+    let up_st = strides(&update.dims);
+    macro_rules! dus_t {
+        ($variant:ident) => {{
+            let mut out = match &operand.buf {
+                Buf::$variant(v) => v.clone(),
+                _ => bail!("dus dtype mismatch"),
+            };
+            let upd = match &update.buf {
+                Buf::$variant(v) => v,
+                _ => bail!("dus update dtype mismatch"),
+            };
+            if update.numel() > 0 {
+                let mut idx = vec![0usize; update.dims.len()];
+                loop {
+                    let mut o = 0usize;
+                    for (d, &i) in idx.iter().enumerate() {
+                        o += (clamped[d] + i) * op_st[d];
+                    }
+                    out[o] = upd[linear(&idx, &up_st)];
+                    if !next_index(&mut idx, &update.dims) {
+                        break;
+                    }
+                }
+            }
+            Buf::$variant(out)
+        }};
+    }
+    let buf = match &operand.buf {
+        Buf::F32(_) => dus_t!(F32),
+        Buf::I32(_) => dus_t!(I32),
+        Buf::Pred(_) => dus_t!(Pred),
+    };
+    Ok(Value { dims: operand.dims.clone(), buf })
+}
+
+/// General dot per dot_dimension_numbers: output dims are batch dims,
+/// then lhs free dims, then rhs free dims. Accumulation order is the
+/// row-major enumeration of the contraction space — fixed across calls.
+pub fn eval_dot(lhs: &Value, rhs: &Value, d: &DotDims, out_dims: Vec<usize>) -> Result<Value> {
+    let a = lhs.f32s().context("dot lhs must be f32")?;
+    let b = rhs.f32s().context("dot rhs must be f32")?;
+    let lfree: Vec<usize> = (0..lhs.dims.len())
+        .filter(|i| !d.lhs_batch.contains(i) && !d.lhs_contract.contains(i))
+        .collect();
+    let rfree: Vec<usize> = (0..rhs.dims.len())
+        .filter(|i| !d.rhs_batch.contains(i) && !d.rhs_contract.contains(i))
+        .collect();
+    if d.lhs_batch.len() != d.rhs_batch.len() || d.lhs_contract.len() != d.rhs_contract.len() {
+        bail!("dot dimension-number arity mismatch");
+    }
+    for (&l, &r) in d.lhs_contract.iter().zip(&d.rhs_contract) {
+        if lhs.dims[l] != rhs.dims[r] {
+            bail!("dot contracting dims differ: {} vs {}", lhs.dims[l], rhs.dims[r]);
+        }
+    }
+    let batch_dims: Vec<usize> = d.lhs_batch.iter().map(|&i| lhs.dims[i]).collect();
+    let contract_dims: Vec<usize> = d.lhs_contract.iter().map(|&i| lhs.dims[i]).collect();
+    let lfree_dims: Vec<usize> = lfree.iter().map(|&i| lhs.dims[i]).collect();
+    let rfree_dims: Vec<usize> = rfree.iter().map(|&i| rhs.dims[i]).collect();
+    {
+        let mut expect = batch_dims.clone();
+        expect.extend(&lfree_dims);
+        expect.extend(&rfree_dims);
+        if expect != out_dims {
+            bail!("dot output shape {:?} != computed {:?}", out_dims, expect);
+        }
+    }
+    let l_st = strides(&lhs.dims);
+    let r_st = strides(&rhs.dims);
+    let n_out: usize = out_dims.iter().product();
+    let mut out = vec![0f32; n_out];
+    if n_out > 0 {
+        let mut bidx = vec![0usize; batch_dims.len()];
+        let mut o = 0usize;
+        loop {
+            let l_b: usize = bidx.iter().zip(&d.lhs_batch).map(|(&i, &dd)| i * l_st[dd]).sum();
+            let r_b: usize = bidx.iter().zip(&d.rhs_batch).map(|(&i, &dd)| i * r_st[dd]).sum();
+            let mut lidx = vec![0usize; lfree.len()];
+            loop {
+                let l_f: usize =
+                    lidx.iter().zip(&lfree).map(|(&i, &dd)| i * l_st[dd]).sum::<usize>() + l_b;
+                let mut ridx = vec![0usize; rfree.len()];
+                loop {
+                    let r_f: usize =
+                        ridx.iter().zip(&rfree).map(|(&i, &dd)| i * r_st[dd]).sum::<usize>() + r_b;
+                    let mut acc = 0f32;
+                    // a zero-size contracting dim contracts nothing: the
+                    // result stays 0.0, as XLA defines it
+                    if contract_dims.iter().product::<usize>() > 0 {
+                        let mut cidx = vec![0usize; contract_dims.len()];
+                        loop {
+                            let l_off: usize = cidx
+                                .iter()
+                                .zip(&d.lhs_contract)
+                                .map(|(&i, &dd)| i * l_st[dd])
+                                .sum::<usize>()
+                                + l_f;
+                            let r_off: usize = cidx
+                                .iter()
+                                .zip(&d.rhs_contract)
+                                .map(|(&i, &dd)| i * r_st[dd])
+                                .sum::<usize>()
+                                + r_f;
+                            acc += a[l_off] * b[r_off];
+                            if contract_dims.is_empty() || !next_index(&mut cidx, &contract_dims) {
+                                break;
+                            }
+                        }
+                    }
+                    out[o] = acc;
+                    o += 1;
+                    if rfree.is_empty() || !next_index(&mut ridx, &rfree_dims) {
+                        break;
+                    }
+                }
+                if lfree.is_empty() || !next_index(&mut lidx, &lfree_dims) {
+                    break;
+                }
+            }
+            if batch_dims.is_empty() || !next_index(&mut bidx, &batch_dims) {
+                break;
+            }
+        }
+    }
+    Ok(Value::f32(out_dims, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::hlo::parser::parse_module;
+
+    fn run(text: &str, args: Vec<Value>) -> Vec<Value> {
+        let m = parse_module(text).unwrap();
+        let args: Vec<Rc<Value>> = args.into_iter().map(Rc::new).collect();
+        evaluate(&m, &args).unwrap()
+    }
+
+    #[test]
+    fn softmax_building_blocks() {
+        let text = r#"
+HloModule t
+%red_max {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %m = f32[] maximum(%a, %b)
+}
+%red_add {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+ENTRY %main {
+  %x = f32[2,3] parameter(0)
+  %ninf = f32[] constant(-1e30)
+  %zero = f32[] constant(0)
+  %mx = f32[2] reduce(%x, %ninf), dimensions={1}, to_apply=%red_max
+  %mb = f32[2,3] broadcast(%mx), dimensions={0}
+  %sh = f32[2,3] subtract(%x, %mb)
+  %e = f32[2,3] exponential(%sh)
+  %se = f32[2] reduce(%e, %zero), dimensions={1}, to_apply=%red_add
+  %sb = f32[2,3] broadcast(%se), dimensions={0}
+  ROOT %p = f32[2,3] divide(%e, %sb)
+}
+"#;
+        let x = Value::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 0.0, 0.0, 0.0]);
+        let out = run(text, vec![x]);
+        let p = out[0].f32s().unwrap();
+        let s0: f32 = p[..3].iter().sum();
+        assert!((s0 - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+        for v in &p[3..] {
+            assert!((v - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dot_matmul_matches_naive() {
+        let text = r#"
+HloModule t
+ENTRY %main {
+  %a = f32[2,3] parameter(0)
+  %b = f32[3,2] parameter(1)
+  ROOT %c = f32[2,2] dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"#;
+        let a = Value::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Value::f32(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let out = run(text, vec![a, b]);
+        assert_eq!(out[0].f32s().unwrap(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn gather_rows_and_dus_roundtrip() {
+        let text = r#"
+HloModule t
+ENTRY %main {
+  %table = f32[4,2] parameter(0)
+  %idx = s32[3] parameter(1)
+  %g = f32[3,2] gather(%table, %idx), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,2}
+  %start = s32[] parameter(2)
+  %z = s32[] constant(0)
+  %upd = f32[4,2] dynamic-update-slice(%table, %g, %start, %z)
+  ROOT %t = (f32[3,2], f32[4,2]) tuple(%g, %upd)
+}
+"#;
+        let table = Value::f32(vec![4, 2], vec![0., 1., 10., 11., 20., 21., 30., 31.]);
+        let idx = Value::i32(vec![3], vec![2, 0, 3]);
+        let start = Value::i32(vec![], vec![1]);
+        let out = run(text, vec![table, idx, start]);
+        assert_eq!(out[0].f32s().unwrap(), &[20., 21., 0., 1., 30., 31.]);
+        // rows 1..4 replaced by the gathered rows
+        assert_eq!(
+            out[1].f32s().unwrap(),
+            &[0., 1., 20., 21., 0., 1., 30., 31.]
+        );
+    }
+
+    #[test]
+    fn iota_select_compare_concat() {
+        let text = r#"
+HloModule t
+ENTRY %main {
+  %x = f32[4] parameter(0)
+  %i = s32[4] iota(), iota_dimension=0
+  %two = s32[] constant(2)
+  %tb = s32[4] broadcast(%two), dimensions={}
+  %p = pred[4] compare(%i, %tb), direction=LT
+  %zero = f32[] constant(0)
+  %zb = f32[4] broadcast(%zero), dimensions={}
+  %sel = f32[4] select(%p, %x, %zb)
+  %t = f32[4] transpose(%sel), dimensions={0}
+  ROOT %c = f32[8] concatenate(%sel, %t), dimensions={0}
+}
+"#;
+        let x = Value::f32(vec![4], vec![5., 6., 7., 8.]);
+        let out = run(text, vec![x]);
+        assert_eq!(out[0].f32s().unwrap(), &[5., 6., 0., 0., 5., 6., 0., 0.]);
+    }
+
+    #[test]
+    fn splat_constants_fill_their_shape() {
+        let text = r#"
+HloModule t
+ENTRY %main {
+  %x = f32[2,3] parameter(0)
+  %z = f32[2,3] constant(1.5)
+  ROOT %s = f32[2,3] add(%x, %z)
+}
+"#;
+        let x = Value::f32(vec![2, 3], vec![0.5; 6]);
+        let out = run(text, vec![x]);
+        assert_eq!(out[0].f32s().unwrap(), &[2.0; 6]);
+    }
+
+    #[test]
+    fn dus_clamps_start_like_xla() {
+        let text = r#"
+HloModule t
+ENTRY %main {
+  %x = f32[4] parameter(0)
+  %u = f32[2] parameter(1)
+  %s = s32[] parameter(2)
+  ROOT %o = f32[4] dynamic-update-slice(%x, %u, %s)
+}
+"#;
+        let x = Value::f32(vec![4], vec![0.; 4]);
+        let u = Value::f32(vec![2], vec![1., 2.]);
+        let s = Value::i32(vec![], vec![9]); // clamped to 2
+        let out = run(text, vec![x, u, s]);
+        assert_eq!(out[0].f32s().unwrap(), &[0., 0., 1., 2.]);
+    }
+}

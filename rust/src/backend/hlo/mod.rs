@@ -1,0 +1,7 @@
+//! In-process HLO substrate: text parser, CPU evaluator, and a
+//! programmatic HLO-text builder (used by the fixture generator and the
+//! interpreter property tests).
+
+pub mod builder;
+pub mod eval;
+pub mod parser;

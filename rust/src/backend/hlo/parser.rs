@@ -1,0 +1,636 @@
+//! Parser for the HLO-*text* subset our lowered graphs use.
+//!
+//! HLO text is the artifact interchange format (see `runtime::client`);
+//! this parser understands the instruction forms the fixture generator
+//! emits and that `aot.py`-lowered modules of the same op set use:
+//! one module, N named computations (reduce bodies + ENTRY), one
+//! instruction per line in dependency order. Layout annotations
+//! (`{1,0}`), `metadata={...}` and typed operands (`f32[2]{0} %a`) are
+//! accepted and ignored, so real XLA printouts of supported ops parse
+//! too. Unsupported opcodes are a hard, named error at compile time —
+//! never a silent wrong answer at execution time.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimType {
+    F32,
+    S32,
+    Pred,
+}
+
+impl PrimType {
+    fn from_str(s: &str) -> Result<PrimType> {
+        Ok(match s {
+            "f32" => PrimType::F32,
+            "s32" => PrimType::S32,
+            "pred" => PrimType::Pred,
+            other => bail!("unsupported element type {other:?}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Shape {
+    pub ty: PrimType,
+    pub dims: Vec<usize>,
+}
+
+impl Shape {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    And,
+    Or,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Exp,
+    Tanh,
+    Neg,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpDir {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+#[derive(Debug, Clone)]
+pub struct DotDims {
+    pub lhs_batch: Vec<usize>,
+    pub rhs_batch: Vec<usize>,
+    pub lhs_contract: Vec<usize>,
+    pub rhs_contract: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GatherDims {
+    pub offset_dims: Vec<usize>,
+    pub collapsed_slice_dims: Vec<usize>,
+    pub start_index_map: Vec<usize>,
+    pub index_vector_dim: usize,
+    pub slice_sizes: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub enum Op {
+    Parameter(usize),
+    /// scalar constants only (weights arrive as parameters)
+    ConstF32(f32),
+    ConstS32(i32),
+    ConstPred(bool),
+    Iota {
+        dim: usize,
+    },
+    Convert,
+    Unary(UnOp),
+    Binary(BinOp),
+    Compare(CmpDir),
+    Select,
+    Dot(DotDims),
+    Reshape,
+    Broadcast(Vec<usize>),
+    Transpose(Vec<usize>),
+    /// (start, limit, stride) per dimension
+    Slice(Vec<(usize, usize, usize)>),
+    Concatenate(usize),
+    Gather(GatherDims),
+    Reduce {
+        dims: Vec<usize>,
+        to_apply: String,
+    },
+    DynamicUpdateSlice,
+    Tuple,
+}
+
+#[derive(Debug, Clone)]
+pub struct Instr {
+    pub name: String,
+    /// element shape; tuple-typed instructions carry their parts here
+    pub shape: Shape,
+    pub tuple_shapes: Option<Vec<Shape>>,
+    pub op: Op,
+    pub operands: Vec<String>,
+    /// carried the `ROOT` marker in the source text
+    pub is_root: bool,
+}
+
+#[derive(Debug)]
+pub struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    /// instruction index per parameter number
+    pub params: Vec<usize>,
+    pub root: usize,
+}
+
+#[derive(Debug)]
+pub struct HloModule {
+    pub name: String,
+    pub computations: HashMap<String, Computation>,
+    pub entry: String,
+}
+
+impl HloModule {
+    pub fn entry_computation(&self) -> &Computation {
+        &self.computations[&self.entry]
+    }
+}
+
+/// Split at `sep` occurring at bracket depth 0 (wrt `{[(`).
+fn split_top(s: &str, sep: char) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '{' | '[' | '(' => depth += 1,
+            '}' | ']' | ')' => depth -= 1,
+            c if c == sep && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+fn strip_pct(s: &str) -> &str {
+    s.trim().trim_start_matches('%')
+}
+
+/// Parse one non-tuple shape like `f32[1,8]{1,0}` or `pred[]`; layout
+/// suffix is ignored.
+fn parse_shape(s: &str) -> Result<Shape> {
+    let s = s.trim();
+    let open = s.find('[').with_context(|| format!("shape {s:?} has no '['"))?;
+    let close = s.find(']').with_context(|| format!("shape {s:?} has no ']'"))?;
+    let ty = PrimType::from_str(&s[..open])?;
+    let inner = &s[open + 1..close];
+    let dims = if inner.trim().is_empty() {
+        Vec::new()
+    } else {
+        inner
+            .split(',')
+            .map(|d| d.trim().parse::<usize>().with_context(|| format!("bad dim in {s:?}")))
+            .collect::<Result<Vec<_>>>()?
+    };
+    Ok(Shape { ty, dims })
+}
+
+/// Parse a shape that may be a tuple. Returns (element-or-first shape,
+/// optional tuple parts, rest-of-line after the shape text).
+fn parse_shape_prefix(s: &str) -> Result<(Shape, Option<Vec<Shape>>, &str)> {
+    let s = s.trim_start();
+    if let Some(stripped) = s.strip_prefix('(') {
+        let close = {
+            let mut depth = 1i32;
+            let mut idx = None;
+            for (i, c) in stripped.char_indices() {
+                match c {
+                    '(' => depth += 1,
+                    ')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            idx = Some(i);
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            idx.context("unterminated tuple shape")?
+        };
+        let parts = split_top(&stripped[..close], ',')
+            .iter()
+            .map(|p| parse_shape(p))
+            .collect::<Result<Vec<_>>>()?;
+        let first = parts.first().cloned().context("empty tuple shape")?;
+        return Ok((first, Some(parts), &stripped[close + 1..]));
+    }
+    // scan to the end of `ty[dims]{layout?}`
+    let close = s.find(']').with_context(|| format!("no shape in {s:?}"))?;
+    let mut end = close + 1;
+    let bytes = s.as_bytes();
+    if bytes.get(end) == Some(&b'{') {
+        let rest = &s[end..];
+        let c = rest.find('}').context("unterminated layout")?;
+        end += c + 1;
+    }
+    Ok((parse_shape(&s[..end])?, None, &s[end..]))
+}
+
+fn parse_usize_list(v: &str) -> Result<Vec<usize>> {
+    let v = v.trim();
+    let inner = v
+        .strip_prefix('{')
+        .and_then(|x| x.strip_suffix('}'))
+        .with_context(|| format!("expected braced list, got {v:?}"))?;
+    if inner.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    inner
+        .split(',')
+        .map(|d| d.trim().parse::<usize>().with_context(|| format!("bad int in {v:?}")))
+        .collect()
+}
+
+/// `{[0:1], [2:18:1]}` -> [(0,1,1), (2,18,1)]
+fn parse_slice_attr(v: &str) -> Result<Vec<(usize, usize, usize)>> {
+    let inner = v
+        .trim()
+        .strip_prefix('{')
+        .and_then(|x| x.strip_suffix('}'))
+        .with_context(|| format!("bad slice attr {v:?}"))?;
+    split_top(inner, ',')
+        .iter()
+        .map(|part| {
+            let p = part.trim();
+            let p = p
+                .strip_prefix('[')
+                .and_then(|x| x.strip_suffix(']'))
+                .with_context(|| format!("bad slice range {part:?}"))?;
+            let nums: Vec<usize> = p
+                .split(':')
+                .map(|n| n.trim().parse().with_context(|| format!("bad slice bound {p:?}")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(match nums.len() {
+                2 => (nums[0], nums[1], 1),
+                3 => (nums[0], nums[1], nums[2]),
+                _ => bail!("bad slice range {part:?}"),
+            })
+        })
+        .collect()
+}
+
+fn attr_map(attrs: &str) -> Vec<(String, String)> {
+    split_top(attrs, ',')
+        .iter()
+        .filter_map(|a| {
+            let a = a.trim();
+            if a.is_empty() {
+                return None;
+            }
+            let (k, v) = a.split_once('=')?;
+            Some((k.trim().to_string(), v.trim().to_string()))
+        })
+        .collect()
+}
+
+fn get_attr<'a>(attrs: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    attrs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+fn req_attr<'a>(attrs: &'a [(String, String)], key: &str, op: &str) -> Result<&'a str> {
+    get_attr(attrs, key).with_context(|| format!("{op}: missing attribute {key}"))
+}
+
+fn parse_instr(line: &str) -> Result<Instr> {
+    let line = line.trim();
+    let is_root = line.starts_with("ROOT ");
+    let line = line.trim_start_matches("ROOT ").trim();
+    let (lhs, rhs) = line.split_once('=').with_context(|| format!("no '=' in {line:?}"))?;
+    let name = strip_pct(lhs).to_string();
+    let (shape, tuple_shapes, rest) = parse_shape_prefix(rhs)?;
+    let rest = rest.trim_start();
+    let open = rest
+        .find('(')
+        .with_context(|| format!("{name}: no operand list in {rest:?}"))?;
+    let opcode = rest[..open].trim();
+    // find matching close paren
+    let mut depth = 0i32;
+    let mut close = None;
+    for (i, c) in rest.char_indices().skip(open) {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    close = Some(i);
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let close = close.with_context(|| format!("{name}: unterminated operand list"))?;
+    let operand_text = &rest[open + 1..close];
+    let operands: Vec<String> = if operand_text.trim().is_empty() {
+        Vec::new()
+    } else {
+        split_top(operand_text, ',')
+            .iter()
+            .map(|o| {
+                // accept typed operands (`f32[2]{0} %a`): keep the last token
+                let t = o.trim();
+                strip_pct(t.rsplit(' ').next().unwrap_or(t)).to_string()
+            })
+            .collect()
+    };
+    let attrs = attr_map(rest[close + 1..].trim_start_matches(','));
+
+    let op = match opcode {
+        "parameter" => Op::Parameter(
+            operand_text
+                .trim()
+                .parse()
+                .with_context(|| format!("{name}: bad parameter number"))?,
+        ),
+        "constant" => {
+            let lit = operand_text.trim();
+            match shape.ty {
+                PrimType::F32 => Op::ConstF32(
+                    lit.parse().with_context(|| format!("{name}: bad f32 constant {lit:?}"))?,
+                ),
+                PrimType::S32 => Op::ConstS32(
+                    lit.parse().with_context(|| format!("{name}: bad s32 constant {lit:?}"))?,
+                ),
+                PrimType::Pred => Op::ConstPred(lit == "true" || lit == "1"),
+            }
+        }
+        "iota" => Op::Iota {
+            dim: req_attr(&attrs, "iota_dimension", "iota")?
+                .parse()
+                .context("iota_dimension")?,
+        },
+        "convert" => Op::Convert,
+        "exponential" => Op::Unary(UnOp::Exp),
+        "tanh" => Op::Unary(UnOp::Tanh),
+        "negate" => Op::Unary(UnOp::Neg),
+        "add" => Op::Binary(BinOp::Add),
+        "subtract" => Op::Binary(BinOp::Sub),
+        "multiply" => Op::Binary(BinOp::Mul),
+        "divide" => Op::Binary(BinOp::Div),
+        "maximum" => Op::Binary(BinOp::Max),
+        "minimum" => Op::Binary(BinOp::Min),
+        "and" => Op::Binary(BinOp::And),
+        "or" => Op::Binary(BinOp::Or),
+        "compare" => {
+            let dir = match req_attr(&attrs, "direction", "compare")? {
+                "EQ" => CmpDir::Eq,
+                "NE" => CmpDir::Ne,
+                "LT" => CmpDir::Lt,
+                "LE" => CmpDir::Le,
+                "GT" => CmpDir::Gt,
+                "GE" => CmpDir::Ge,
+                other => bail!("{name}: bad compare direction {other:?}"),
+            };
+            Op::Compare(dir)
+        }
+        "select" => Op::Select,
+        "dot" => Op::Dot(DotDims {
+            lhs_batch: get_attr(&attrs, "lhs_batch_dims")
+                .map(parse_usize_list)
+                .transpose()?
+                .unwrap_or_default(),
+            rhs_batch: get_attr(&attrs, "rhs_batch_dims")
+                .map(parse_usize_list)
+                .transpose()?
+                .unwrap_or_default(),
+            lhs_contract: parse_usize_list(req_attr(&attrs, "lhs_contracting_dims", "dot")?)?,
+            rhs_contract: parse_usize_list(req_attr(&attrs, "rhs_contracting_dims", "dot")?)?,
+        }),
+        "reshape" => Op::Reshape,
+        "broadcast" => Op::Broadcast(
+            get_attr(&attrs, "dimensions")
+                .map(parse_usize_list)
+                .transpose()?
+                .unwrap_or_default(),
+        ),
+        "transpose" => {
+            Op::Transpose(parse_usize_list(req_attr(&attrs, "dimensions", "transpose")?)?)
+        }
+        "slice" => Op::Slice(parse_slice_attr(req_attr(&attrs, "slice", "slice")?)?),
+        "concatenate" => Op::Concatenate(
+            parse_usize_list(req_attr(&attrs, "dimensions", "concatenate")?)?
+                .first()
+                .copied()
+                .context("concatenate: empty dimensions")?,
+        ),
+        "gather" => Op::Gather(GatherDims {
+            offset_dims: parse_usize_list(req_attr(&attrs, "offset_dims", "gather")?)?,
+            collapsed_slice_dims: parse_usize_list(
+                req_attr(&attrs, "collapsed_slice_dims", "gather")?,
+            )?,
+            start_index_map: parse_usize_list(req_attr(&attrs, "start_index_map", "gather")?)?,
+            index_vector_dim: req_attr(&attrs, "index_vector_dim", "gather")?
+                .parse()
+                .context("index_vector_dim")?,
+            slice_sizes: parse_usize_list(req_attr(&attrs, "slice_sizes", "gather")?)?,
+        }),
+        "reduce" => Op::Reduce {
+            dims: parse_usize_list(req_attr(&attrs, "dimensions", "reduce")?)?,
+            to_apply: strip_pct(req_attr(&attrs, "to_apply", "reduce")?).to_string(),
+        },
+        "dynamic-update-slice" => Op::DynamicUpdateSlice,
+        "tuple" => Op::Tuple,
+        other => bail!("unsupported HLO opcode {other:?} (instruction {name})"),
+    };
+    Ok(Instr { name, shape, tuple_shapes, op, operands, is_root })
+}
+
+/// Parse full HLO module text.
+pub fn parse_module(text: &str) -> Result<HloModule> {
+    let mut module_name = String::from("module");
+    let mut computations: HashMap<String, Computation> = HashMap::new();
+    let mut entry: Option<String> = None;
+
+    let mut current: Option<(String, bool, Vec<Instr>)> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("//") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("HloModule") {
+            module_name = rest
+                .trim()
+                .split([',', ' '])
+                .next()
+                .unwrap_or("module")
+                .to_string();
+            continue;
+        }
+        if line == "}" {
+            let (name, is_entry, instrs) =
+                current.take().context("stray '}' outside computation")?;
+            let comp = finish_computation(name.clone(), instrs)
+                .with_context(|| format!("computation {name}"))?;
+            if is_entry {
+                entry = Some(name.clone());
+            }
+            computations.insert(name, comp);
+            continue;
+        }
+        if line.ends_with('{') {
+            let header = line.trim_end_matches('{').trim();
+            let is_entry = header.starts_with("ENTRY");
+            let header = header.trim_start_matches("ENTRY").trim();
+            // `%main.42 (p0: f32[...]) -> ... {` or bare `add {`
+            let name = strip_pct(header.split(['(', ' ']).next().unwrap_or(header)).to_string();
+            if name.is_empty() {
+                bail!("line {}: computation with no name", lineno + 1);
+            }
+            current = Some((name, is_entry, Vec::new()));
+            continue;
+        }
+        let (_, _, instrs) = current
+            .as_mut()
+            .with_context(|| format!("line {}: instruction outside computation", lineno + 1))?;
+        instrs
+            .push(parse_instr(line).with_context(|| format!("line {}: {raw:?}", lineno + 1))?);
+    }
+    if current.is_some() {
+        bail!("unterminated computation");
+    }
+    let entry = entry
+        .or_else(|| {
+            // single-computation modules need no ENTRY marker
+            if computations.len() == 1 {
+                computations.keys().next().cloned()
+            } else {
+                None
+            }
+        })
+        .context("module has no ENTRY computation")?;
+    Ok(HloModule { name: module_name, computations, entry })
+}
+
+fn finish_computation(name: String, instrs: Vec<Instr>) -> Result<Computation> {
+    if instrs.is_empty() {
+        bail!("empty computation");
+    }
+    let mut params: Vec<(usize, usize)> = Vec::new();
+    for (i, ins) in instrs.iter().enumerate() {
+        if let Op::Parameter(n) = ins.op {
+            params.push((n, i));
+        }
+    }
+    params.sort_unstable();
+    for (want, (got, _)) in params.iter().enumerate() {
+        if *got != want {
+            bail!("parameter numbers not dense: {:?}", params.iter().map(|p| p.0).collect::<Vec<_>>());
+        }
+    }
+    // honor an explicit ROOT marker anywhere in the body; a module with
+    // none (or several — malformed) falls back to the last instruction
+    let marked: Vec<usize> = instrs
+        .iter()
+        .enumerate()
+        .filter(|(_, i)| i.is_root)
+        .map(|(i, _)| i)
+        .collect();
+    let root = match marked.as_slice() {
+        [] => instrs.len() - 1,
+        [r] => *r,
+        more => bail!("multiple ROOT instructions: {more:?}"),
+    };
+    Ok(Computation {
+        name,
+        params: params.into_iter().map(|(_, i)| i).collect(),
+        instrs,
+        root,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule toy
+
+%red_add_f32 {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main {
+  %p0 = f32[2,3]{1,0} parameter(0)
+  %c = f32[] constant(2.5)
+  %cb = f32[2,3] broadcast(%c), dimensions={}
+  %m = f32[2,3] multiply(f32[2,3]{1,0} %p0, %cb)
+  %z = f32[] constant(0)
+  %r = f32[2] reduce(%m, %z), dimensions={1}, to_apply=%red_add_f32
+  ROOT %t = (f32[2,3], f32[2]) tuple(%m, %r)
+}
+"#;
+
+    #[test]
+    fn parses_sample_module() {
+        let m = parse_module(SAMPLE).unwrap();
+        assert_eq!(m.name, "toy");
+        assert_eq!(m.entry, "main");
+        assert_eq!(m.computations.len(), 2);
+        let e = m.entry_computation();
+        assert_eq!(e.params.len(), 1);
+        let root = &e.instrs[e.root];
+        assert!(matches!(root.op, Op::Tuple));
+        assert_eq!(root.operands, vec!["m", "r"]);
+        assert_eq!(root.tuple_shapes.as_ref().unwrap().len(), 2);
+        let red = e.instrs.iter().find(|i| i.name == "r").unwrap();
+        match &red.op {
+            Op::Reduce { dims, to_apply } => {
+                assert_eq!(dims, &[1]);
+                assert_eq!(to_apply, "red_add_f32");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_gather_and_slice_attrs() {
+        let g = parse_instr(
+            "%g = f32[4,16] gather(%emb, %idx), offset_dims={1}, collapsed_slice_dims={0}, \
+             start_index_map={0}, index_vector_dim=1, slice_sizes={1,16}",
+        )
+        .unwrap();
+        match &g.op {
+            Op::Gather(d) => {
+                assert_eq!(d.offset_dims, vec![1]);
+                assert_eq!(d.slice_sizes, vec![1, 16]);
+            }
+            other => panic!("{other:?}"),
+        }
+        let s =
+            parse_instr("%s = f32[1,16] slice(%x), slice={[0:1], [0:16]}").unwrap();
+        match &s.op {
+            Op::Slice(r) => assert_eq!(r, &vec![(0, 1, 1), (0, 16, 1)]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unsupported_opcode_is_a_named_error() {
+        let e = parse_instr("%x = f32[2] cosine(%y)").unwrap_err();
+        assert!(format!("{e:#}").contains("cosine"));
+    }
+
+    #[test]
+    fn scalar_constant_forms() {
+        let c = parse_instr("%c = f32[] constant(-1e9)").unwrap();
+        assert!(matches!(c.op, Op::ConstF32(v) if v == -1e9));
+        let i = parse_instr("%i = s32[] constant(-3)").unwrap();
+        assert!(matches!(i.op, Op::ConstS32(-3)));
+    }
+}

@@ -1,0 +1,142 @@
+//! HLO interpreter backend: parse the `.hlo.txt` executable once at
+//! "compile" time, evaluate it on the CPU at call time.
+//!
+//! This is the backend that makes the artifact-gated integration tests
+//! and benches run in CI: no `xla_extension`, no network, deterministic
+//! arithmetic (fixed accumulation order in `backend::hlo::eval`), so a
+//! fixed fixture seed reproduces greedy decodes bit-for-bit.
+
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::ExecManifest;
+use crate::runtime::tensor::{Dtype, HostTensor, TensorData};
+
+use super::hlo::eval::{evaluate, Buf, Value};
+use super::hlo::parser::{parse_module, HloModule, PrimType};
+use super::{Backend, BackendBound, BackendExec};
+
+#[derive(Default)]
+pub struct HloInterpreter;
+
+impl HloInterpreter {
+    pub fn new() -> HloInterpreter {
+        HloInterpreter
+    }
+}
+
+fn to_value(t: &HostTensor) -> Value {
+    match &t.data {
+        TensorData::F32(v) => Value::f32(t.shape.clone(), v.clone()),
+        TensorData::I32(v) => Value::i32(t.shape.clone(), v.clone()),
+    }
+}
+
+fn to_host(v: Value) -> Result<HostTensor> {
+    match v.buf {
+        Buf::F32(data) => Ok(HostTensor::f32(v.dims, data)),
+        Buf::I32(data) => Ok(HostTensor::i32(v.dims, data)),
+        Buf::Pred(_) => bail!("executable output is pred-typed"),
+    }
+}
+
+fn prim_of(d: Dtype) -> PrimType {
+    match d {
+        Dtype::F32 => PrimType::F32,
+        Dtype::I32 => PrimType::S32,
+    }
+}
+
+impl Backend for HloInterpreter {
+    fn platform_name(&self) -> String {
+        "hlo-interpreter".to_string()
+    }
+
+    fn compile(&self, hlo_path: &Path, manifest: &ExecManifest) -> Result<Box<dyn BackendExec>> {
+        let text = std::fs::read_to_string(hlo_path)
+            .with_context(|| format!("read {hlo_path:?}"))?;
+        let module =
+            parse_module(&text).with_context(|| format!("parse {hlo_path:?}"))?;
+        // cross-check the manifest against the module's entry signature
+        // now, so a drifted artifact fails at compile, not mid-serve
+        let entry = module.entry_computation();
+        if entry.params.len() != manifest.inputs.len() {
+            bail!(
+                "{}: module has {} parameters, manifest lists {} inputs",
+                manifest.name,
+                entry.params.len(),
+                manifest.inputs.len()
+            );
+        }
+        for (i, spec) in manifest.inputs.iter().enumerate() {
+            let p = &entry.instrs[entry.params[i]];
+            if p.shape.dims != spec.shape || p.shape.ty != prim_of(spec.dtype) {
+                bail!(
+                    "{}: parameter {i} ({:?}) is {:?}/{:?}, manifest says {:?}/{:?}",
+                    manifest.name,
+                    spec.name,
+                    p.shape.ty,
+                    p.shape.dims,
+                    spec.dtype,
+                    spec.shape
+                );
+            }
+        }
+        Ok(Box::new(InterpExec { module: Arc::new(module), name: manifest.name.clone() }))
+    }
+}
+
+pub struct InterpExec {
+    module: Arc<HloModule>,
+    name: String,
+}
+
+impl BackendExec for InterpExec {
+    fn bind(&self, weights: &[Option<&HostTensor>]) -> Result<Box<dyn BackendBound>> {
+        let pinned = weights
+            .iter()
+            .map(|w| w.map(|t| Rc::new(to_value(t))))
+            .collect();
+        Ok(Box::new(InterpBound {
+            module: Arc::clone(&self.module),
+            name: self.name.clone(),
+            weights: pinned,
+        }))
+    }
+}
+
+pub struct InterpBound {
+    module: Arc<HloModule>,
+    name: String,
+    weights: Vec<Option<Rc<Value>>>,
+}
+
+impl BackendBound for InterpBound {
+    fn call(&self, args: &[Option<&HostTensor>]) -> Result<Vec<HostTensor>> {
+        if args.len() != self.weights.len() {
+            bail!(
+                "{}: {} positional args, executable has {} inputs",
+                self.name,
+                args.len(),
+                self.weights.len()
+            );
+        }
+        let mut full: Vec<Rc<Value>> = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            match (a, &self.weights[i]) {
+                (Some(t), None) => full.push(Rc::new(to_value(t))),
+                (None, Some(w)) => full.push(Rc::clone(w)),
+                (Some(_), Some(_)) => {
+                    bail!("{}: input {i} is weight-bound and passed at call", self.name)
+                }
+                (None, None) => bail!("{}: input {i} missing", self.name),
+            }
+        }
+        let outs = evaluate(&self.module, &full)
+            .with_context(|| format!("interpret {}", self.name))?;
+        outs.into_iter().map(to_host).collect()
+    }
+}

@@ -1,0 +1,105 @@
+//! Execution backends behind the runtime layer.
+//!
+//! `runtime::client::Runtime` used to hard-code the PJRT bindings; the
+//! [`Backend`] trait extracts the three operations the serving stack
+//! actually needs — *compile* an HLO-text executable, *bind* a weight
+//! set once, *execute* with per-call inputs — so the same draft→verify
+//! pipeline runs against either implementation:
+//!
+//! * [`pjrt::PjrtBackend`] — the original path through the `xla` crate
+//!   (real PJRT when linked against `xla_extension`, the vendored host
+//!   stub otherwise).
+//! * [`interp::HloInterpreter`] — an in-process HLO-text parser +
+//!   CPU evaluator (`backend::hlo`). No native toolchain, runs
+//!   everywhere `cargo test` runs; this is the backend the CI
+//!   integration lane and the fixture artifacts use.
+//!
+//! [`fixture`] generates a tiny but complete artifact tree (target +
+//! cascaded drafter + EAGLE baseline) the interpreter can execute, so
+//! `SpecEngine` drives real draft→verify→accept cycles without PJRT.
+
+pub mod fixture;
+pub mod hlo;
+pub mod interp;
+pub mod pjrt;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::ExecManifest;
+use crate::runtime::tensor::HostTensor;
+
+/// Which backend executes the artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT via the `xla` crate (vendored host stub unless the real
+    /// bindings are linked).
+    Pjrt,
+    /// In-process HLO interpreter (always available).
+    Interpret,
+}
+
+impl BackendKind {
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(s: &str) -> Result<BackendKind> {
+        Ok(match s {
+            "pjrt" | "cpu" | "xla" => BackendKind::Pjrt,
+            "interpret" | "interpreter" | "interp" => BackendKind::Interpret,
+            other => bail!("unknown backend {other:?} (want pjrt|interpret)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Interpret => "interpret",
+        }
+    }
+}
+
+/// A device/execution substrate: compiles HLO-text executables.
+pub trait Backend: Send + Sync {
+    fn platform_name(&self) -> String;
+
+    /// Compile the HLO text at `hlo_path` against its IO manifest.
+    fn compile(&self, hlo_path: &Path, manifest: &ExecManifest) -> Result<Box<dyn BackendExec>>;
+}
+
+/// A compiled executable (backend-specific state).
+pub trait BackendExec {
+    /// Stage the weight-kind inputs once: `weights[i]` is `Some` exactly
+    /// for manifest input `i` of kind Weight (PJRT uploads device
+    /// buffers here; the interpreter pins host values).
+    fn bind(&self, weights: &[Option<&HostTensor>]) -> Result<Box<dyn BackendBound>>;
+}
+
+/// An executable bound to a weight set.
+pub trait BackendBound {
+    /// Execute with per-call inputs: `args[i]` is `Some` exactly for the
+    /// non-weight manifest inputs, in manifest (= HLO parameter) order.
+    /// Returns outputs in module tuple order.
+    fn call(&self, args: &[Option<&HostTensor>]) -> Result<Vec<HostTensor>>;
+}
+
+/// Construct a backend by kind.
+pub fn make_backend(kind: BackendKind) -> Result<Box<dyn Backend>> {
+    Ok(match kind {
+        BackendKind::Pjrt => Box::new(pjrt::PjrtBackend::new()?),
+        BackendKind::Interpret => Box::new(interp::HloInterpreter::new()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(BackendKind::from_str("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::from_str("interpret").unwrap(), BackendKind::Interpret);
+        assert_eq!(BackendKind::from_str("interp").unwrap(), BackendKind::Interpret);
+        assert!(BackendKind::from_str("tpu").is_err());
+        assert_eq!(BackendKind::Interpret.name(), "interpret");
+    }
+}

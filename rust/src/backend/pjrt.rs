@@ -1,0 +1,151 @@
+//! PJRT backend: the original execution path, adapted from
+//! /opt/xla-example/load_hlo — HLO *text* is the interchange format (the
+//! text parser reassigns the 64-bit instruction ids jax ≥ 0.5 emits,
+//! which xla_extension 0.5.1 would otherwise reject).
+//!
+//! Weights are transferred to device buffers **once** per
+//! (executable, weight-set) pair (`bind`); per-call inputs go through
+//! `buffer_from_host_buffer` and everything executes via `execute_b`, so
+//! the multi-MB parameter tensors never cross the host boundary on the
+//! request path.
+
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::ExecManifest;
+use crate::runtime::tensor::{HostTensor, TensorData};
+
+use super::{Backend, BackendBound, BackendExec};
+
+pub struct PjrtBackend {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtBackend { client: Arc::new(client) })
+    }
+}
+
+fn upload(client: &xla::PjRtClient, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+    let buf = match &t.data {
+        TensorData::F32(v) => client.buffer_from_host_buffer::<f32>(v, &t.shape, None),
+        TensorData::I32(v) => client.buffer_from_host_buffer::<i32>(v, &t.shape, None),
+    };
+    buf.context("host->device transfer")
+}
+
+impl Backend for PjrtBackend {
+    fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, hlo_path: &Path, manifest: &ExecManifest) -> Result<Box<dyn BackendExec>> {
+        let t0 = Instant::now();
+        let proto =
+            xla::HloModuleProto::from_text_file(hlo_path.to_str().context("non-utf8 path")?)
+                .with_context(|| format!("parse {hlo_path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", manifest.name))?;
+        crate::log_debug!(
+            "pjrt compiled {} in {:.0}ms",
+            manifest.name,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        Ok(Box::new(PjrtExec {
+            inner: Rc::new(PjrtExecInner {
+                client: Arc::clone(&self.client),
+                exe,
+                name: manifest.name.clone(),
+                n_outputs: manifest.outputs.len(),
+            }),
+        }))
+    }
+}
+
+struct PjrtExecInner {
+    client: Arc<xla::PjRtClient>,
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+    n_outputs: usize,
+}
+
+pub struct PjrtExec {
+    inner: Rc<PjrtExecInner>,
+}
+
+impl BackendExec for PjrtExec {
+    fn bind(&self, weights: &[Option<&HostTensor>]) -> Result<Box<dyn BackendBound>> {
+        let mut wbufs = Vec::with_capacity(weights.len());
+        for w in weights {
+            wbufs.push(match w {
+                Some(t) => Some(upload(&self.inner.client, t)?),
+                None => None,
+            });
+        }
+        Ok(Box::new(PjrtBound { inner: Rc::clone(&self.inner), wbufs }))
+    }
+}
+
+pub struct PjrtBound {
+    inner: Rc<PjrtExecInner>,
+    wbufs: Vec<Option<xla::PjRtBuffer>>,
+}
+
+impl BackendBound for PjrtBound {
+    fn call(&self, args: &[Option<&HostTensor>]) -> Result<Vec<HostTensor>> {
+        if args.len() != self.wbufs.len() {
+            bail!(
+                "{}: {} positional args, executable has {} inputs",
+                self.inner.name,
+                args.len(),
+                self.wbufs.len()
+            );
+        }
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        for (i, a) in args.iter().enumerate() {
+            match (a, &self.wbufs[i]) {
+                (Some(t), None) => owned.push(upload(&self.inner.client, t)?),
+                (None, Some(_)) => {}
+                (Some(_), Some(_)) => {
+                    bail!("{}: input {i} is weight-bound and passed at call", self.inner.name)
+                }
+                (None, None) => bail!("{}: input {i} missing", self.inner.name),
+            }
+        }
+        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        let mut o = 0usize;
+        for (i, a) in args.iter().enumerate() {
+            if a.is_some() {
+                bufs.push(&owned[o]);
+                o += 1;
+            } else {
+                bufs.push(self.wbufs[i].as_ref().unwrap());
+            }
+        }
+        let result = self
+            .inner
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&bufs)
+            .with_context(|| format!("execute {}", self.inner.name))?;
+        let tuple = result[0][0].to_literal_sync().context("fetch result literal")?;
+        let parts = tuple.to_tuple().context("untuple result")?;
+        if parts.len() != self.inner.n_outputs {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.inner.name,
+                parts.len(),
+                self.inner.n_outputs
+            );
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}

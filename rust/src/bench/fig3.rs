@@ -8,7 +8,7 @@ use anyhow::Result;
 use crate::spec::GenConfig;
 use crate::util::json::Json;
 
-use super::harness::{render_table, run_method, write_report, BenchEnv};
+use super::harness::{has_weights, render_table, run_method, write_report, BenchEnv};
 
 const TARGET: &str = "base";
 const METHODS: [&str; 3] = ["fasteagle", "eagle3", "eagle2"];
@@ -21,6 +21,10 @@ pub fn run(env: &BenchEnv) -> Result<()> {
     let mut depth_max = 0;
     let mut results = Vec::new();
     for m in METHODS {
+        if !has_weights(env, TARGET, m) {
+            println!("fig3: weight set {m:?} not built — skipping");
+            continue;
+        }
         let agg = run_method(env, TARGET, m, &prompts, &cfg)?;
         depth_max = depth_max.max(agg.metrics.depth_attempts.len());
         results.push(agg);

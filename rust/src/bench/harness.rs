@@ -28,18 +28,24 @@ pub struct BenchEnv {
 }
 
 impl BenchEnv {
-    /// `None` when artifacts are missing (benches skip gracefully).
+    /// Backend comes from `FE_BACKEND` (the CLI's `--backend` flag
+    /// exports it). `None` when artifacts are missing on the PJRT
+    /// backend (benches skip gracefully); on the interpreter backend a
+    /// missing tree is generated on the fly — that lane runs everywhere.
     pub fn open(quick: bool) -> Result<Option<BenchEnv>> {
-        let artifacts = artifacts_root();
+        let runtime = Arc::new(Runtime::from_env()?);
+        let mut artifacts = artifacts_root();
         if !artifacts.join("manifest.json").exists() {
-            return Ok(None);
+            if runtime.kind() != crate::backend::BackendKind::Interpret {
+                return Ok(None);
+            }
+            // regenerate every run: generation is cheap and a cached
+            // tree from an older fixture generator would silently drift
+            artifacts = PathBuf::from("bench_out").join("fixture_artifacts");
+            crate::backend::fixture::generate_tree(&artifacts, 0)?;
+            println!("bench: no artifacts; using interpreter fixture at {artifacts:?}");
         }
-        Ok(Some(BenchEnv {
-            runtime: Arc::new(Runtime::cpu()?),
-            artifacts,
-            quick,
-            stores: Default::default(),
-        }))
+        Ok(Some(BenchEnv { runtime, artifacts, quick, stores: Default::default() }))
     }
 
     pub fn store(&self, target: &str) -> Result<Rc<ArtifactStore>> {
@@ -82,6 +88,17 @@ pub fn artifacts_root() -> PathBuf {
     std::env::var("FE_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Whether `<target>/weights/<set>.few` exists — fixture trees ship
+/// only a subset of the paper's drafter variants, so benches skip the
+/// rest instead of hard-failing.
+pub fn has_weights(env: &BenchEnv, target: &str, set: &str) -> bool {
+    env.artifacts
+        .join(target)
+        .join("weights")
+        .join(format!("{set}.few"))
+        .exists()
 }
 
 #[derive(Debug, Clone)]

@@ -14,7 +14,7 @@ use crate::spec::Sampler;
 use crate::util::json::Json;
 use crate::util::stats::summarize;
 
-use super::harness::{render_table, write_report, BenchEnv};
+use super::harness::{has_weights, render_table, write_report, BenchEnv};
 
 const TARGET: &str = "base";
 
@@ -78,13 +78,7 @@ pub fn run(env: &BenchEnv) -> Result<()> {
 
     // drafter cycle cost: observe(1 anchor) + draft
     for dn in ["fasteagle", "eagle3", "medusa", "sps"] {
-        if !env
-            .artifacts
-            .join(TARGET)
-            .join("weights")
-            .join(format!("{dn}.few"))
-            .exists()
-        {
+        if !has_weights(env, TARGET, dn) {
             continue;
         }
         let mut dr = make_drafter(Rc::clone(&store), dn)?;

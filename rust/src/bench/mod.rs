@@ -19,6 +19,36 @@ pub use harness::BenchEnv;
 
 use anyhow::Result;
 
+/// Validate a `--backend` flag (if present) and export it as
+/// `FE_BACKEND` for [`BenchEnv::open`]. Single home for the
+/// backend-export contract, shared by the CLI `bench` command and the
+/// `cargo bench` entrypoints.
+pub fn export_backend(args: &crate::util::cli::Args) -> Result<()> {
+    if let Some(b) = args.get("backend") {
+        crate::backend::BackendKind::from_str(b)?;
+        std::env::set_var("FE_BACKEND", b);
+    }
+    Ok(())
+}
+
+/// Shared `cargo bench` entrypoint plumbing: honor `FE_BENCH_QUICK=1` or
+/// `-- --quick`, validate + export `-- --backend pjrt|interpret`, then
+/// run the named harness. Exits non-zero on failure so `cargo bench`
+/// reports it.
+pub fn bench_main(name: &str) {
+    let args = crate::util::cli::Args::from_env();
+    let quick =
+        std::env::var("FE_BENCH_QUICK").as_deref() == Ok("1") || args.bool_flag("quick");
+    if let Err(e) = export_backend(&args) {
+        eprintln!("{name}: {e:#}");
+        std::process::exit(2);
+    }
+    if let Err(e) = run_named(name, quick) {
+        eprintln!("{name} failed: {e:#}");
+        std::process::exit(1);
+    }
+}
+
 pub fn run_named(name: &str, quick: bool) -> Result<()> {
     let Some(env) = BenchEnv::open(quick)? else {
         println!("bench {name}: artifacts/ missing — run `make artifacts` first; skipping");

@@ -11,7 +11,7 @@ use crate::spec::GenConfig;
 use crate::util::json::Json;
 use crate::workload::{paper_name, TASKS};
 
-use super::harness::{render_table, run_method, write_report, BenchEnv};
+use super::harness::{has_weights, render_table, run_method, write_report, BenchEnv};
 
 fn methods_for(target: &str) -> Vec<&'static str> {
     if target == "base" {
@@ -53,13 +53,7 @@ pub fn run(env: &BenchEnv) -> Result<()> {
             }
             // methods that exist for this target (weight sets on disk)
             for method in methods_for(target) {
-                if !env
-                    .artifacts
-                    .join(target)
-                    .join("weights")
-                    .join(format!("{method}.few"))
-                    .exists()
-                {
+                if !has_weights(env, target, method) {
                     continue;
                 }
                 // Methods that relax acceptance (Medusa) are greedy-only

@@ -12,7 +12,7 @@ use crate::spec::GenConfig;
 use crate::util::json::Json;
 use crate::workload::paper_name;
 
-use super::harness::{render_table, run_method, write_report, BenchEnv};
+use super::harness::{has_weights, render_table, run_method, write_report, BenchEnv};
 
 const TARGET: &str = "base";
 const TASKS2: [&str; 2] = ["dialog", "math"];
@@ -39,6 +39,10 @@ pub fn run(env: &BenchEnv) -> Result<()> {
     let mut rows = Vec::new();
     let mut report = Vec::new();
     for (label, wset, use_tree) in variants {
+        if !has_weights(env, TARGET, wset) {
+            println!("table2: weight set {wset:?} not built — skipping {label:?}");
+            continue;
+        }
         let mut row = vec![label.to_string()];
         let mut cells = Vec::new();
         for (i, task) in TASKS2.iter().enumerate() {

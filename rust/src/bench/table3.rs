@@ -103,6 +103,30 @@ pub fn run(env: &BenchEnv) -> Result<()> {
     println!("\n=== Table 3 (batched throughput vs vanilla, {TARGET}, chain=2, no tree) ===");
     println!("KV block budget: {budget} blocks (vanilla-sized at b={bmax})");
     println!("{}", render_table(&headers, &rows));
+
+    // scheduler-side pressure gauges (previously JSON-only): how many
+    // distinct requests waited on the KV pool, and the mean occupied
+    // slots per decode step — the mechanism behind the throughput curve
+    let gauge_headers: Vec<String> = std::iter::once("method".to_string())
+        .chain(batches.iter().map(|b| format!("b={b} defer/occ")))
+        .collect();
+    let gauge_rows: Vec<Vec<String>> = methods
+        .iter()
+        .enumerate()
+        .map(|(mi, &method)| {
+            std::iter::once(method.name().to_string())
+                .chain(
+                    batches
+                        .iter()
+                        .enumerate()
+                        .map(|(bi, _)| format!("{}/{:.2}", deferred[mi][bi], occupancy[mi][bi])),
+                )
+                .collect()
+        })
+        .collect();
+    println!("--- scheduler pressure (requests_deferred / mean slot occupancy) ---");
+    println!("{}", render_table(&gauge_headers, &gauge_rows));
+
     let path = write_report("table3", &Json::Arr(report))?;
     println!("report -> {path:?}");
     Ok(())

@@ -15,6 +15,7 @@
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured results.
 
+pub mod backend;
 pub mod bench;
 pub mod coordinator;
 pub mod draft;

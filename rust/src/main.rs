@@ -7,16 +7,19 @@
 //!   batch      closed-workload run through the continuous batcher
 //!   bench      regenerate paper tables/figures (table1|table2|table3|fig3|microbench|all)
 //!   selfcheck  losslessness + stack sanity across all drafters
+//!   fixture    emit the deterministic interpreter-backed artifact tree
 //!
 //! Common flags: --artifacts DIR (default ./artifacts; env FE_ARTIFACTS),
 //! --target NAME (default base), --drafter NAME (default fasteagle),
-//! --temp F, --max-new N, --seed N, --quick.
+//! --backend pjrt|interpret (env FE_BACKEND), --temp F, --max-new N,
+//! --seed N, --quick.
 
 use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use fasteagle::backend::BackendKind;
 use fasteagle::coordinator::{BatchConfig, BatchEngine, BatchMethod, Request, Server, ServerConfig};
 use fasteagle::draft::make_drafter;
 use fasteagle::model::TargetModel;
@@ -34,8 +37,18 @@ commands:
   batch      [--batch B] [--method vanilla|eagle3|fasteagle] [--requests N]
   bench      table1|table2|table3|fig3|microbench|all [--quick]
   selfcheck  [--target T]
+  fixture    [--out DIR] [--seed N]   emit interpreter-runnable artifacts
 
-flags: --artifacts DIR  --seed N  --quick";
+flags: --artifacts DIR  --backend pjrt|interpret  --seed N  --quick";
+
+/// Backend selection: `--backend` flag, else `FE_BACKEND`, else PJRT.
+fn make_runtime(args: &Args) -> Result<Arc<Runtime>> {
+    let rt = match args.get("backend") {
+        Some(b) => Runtime::new(BackendKind::from_str(b)?)?,
+        None => Runtime::from_env()?,
+    };
+    Ok(Arc::new(rt))
+}
 
 fn artifacts_dir(args: &Args) -> String {
     args.get("artifacts")
@@ -65,7 +78,7 @@ fn gen_config(args: &Args) -> GenConfig {
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
-    let rt = Arc::new(Runtime::cpu()?);
+    let rt = make_runtime(args)?;
     let store = open_store(args, &rt)?;
     let target = TargetModel::open(Rc::clone(&store))?;
     let drafter = make_drafter(Rc::clone(&store), &args.str_or("drafter", "fasteagle"))?;
@@ -115,7 +128,7 @@ fn batch_config(args: &Args) -> Result<BatchConfig> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let rt = Arc::new(Runtime::cpu()?);
+    let rt = make_runtime(args)?;
     let store = open_store(args, &rt)?;
     let engine = BatchEngine::new(Rc::clone(&store), batch_config(args)?)?;
     let server = Server::new(ServerConfig {
@@ -128,7 +141,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_batch(args: &Args) -> Result<()> {
-    let rt = Arc::new(Runtime::cpu()?);
+    let rt = make_runtime(args)?;
     let store = open_store(args, &rt)?;
     let mut engine = BatchEngine::new(Rc::clone(&store), batch_config(args)?)?;
     let root = artifacts_dir(args);
@@ -165,7 +178,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
 }
 
 fn cmd_selfcheck(args: &Args) -> Result<()> {
-    let rt = Arc::new(Runtime::cpu()?);
+    let rt = make_runtime(args)?;
     let root = artifacts_dir(args);
     let target_name = args.str_or("target", "base");
     let dir: std::path::PathBuf = format!("{root}/{target_name}").into();
@@ -212,6 +225,18 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Emit the deterministic interpreter-backed artifact tree (tiny target
+/// + cascaded drafter + EAGLE baseline) — the no-PJRT path to a running
+/// draft→verify pipeline.
+fn cmd_fixture(args: &Args) -> Result<()> {
+    let out = args.str_or("out", "fixture_artifacts");
+    let seed = args.usize_or("seed", 0) as u64;
+    fasteagle::backend::fixture::generate_tree(std::path::Path::new(&out), seed)?;
+    println!("fixture artifact tree (seed {seed}) -> {out}");
+    println!("try: fasteagle selfcheck --backend interpret --artifacts {out}");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     let Some(cmd) = args.positional.first().map(String::as_str) else {
@@ -229,9 +254,13 @@ fn main() -> Result<()> {
                 .map(String::as_str)
                 .unwrap_or("all");
             std::env::set_var("FE_ARTIFACTS", artifacts_dir(&args));
+            // BenchEnv reads the backend from the env (`--backend
+            // interpret` is the everywhere-runnable lane)
+            fasteagle::bench::export_backend(&args)?;
             fasteagle::bench::run_named(which, args.bool_flag("quick"))
         }
         "selfcheck" => cmd_selfcheck(&args),
+        "fixture" => cmd_fixture(&args),
         other => {
             println!("unknown command {other:?}\n{USAGE}");
             std::process::exit(2);

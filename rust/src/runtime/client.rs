@@ -1,48 +1,62 @@
-//! PJRT runtime: load AOT-lowered HLO text, compile once, execute from
-//! the serving hot path. Adapted from /opt/xla-example/load_hlo —
-//! HLO *text* is the interchange format (the text parser reassigns the
-//! 64-bit instruction ids jax ≥ 0.5 emits, which xla_extension 0.5.1
-//! would otherwise reject).
+//! Runtime layer over a pluggable execution [`Backend`]: load an
+//! AOT-lowered HLO-text executable + its `.io.json` manifest, compile it
+//! once, bind a weight set once, and execute from the serving hot path.
 //!
-//! Weights are transferred to device buffers **once** per
-//! (executable, weight-set) pair (`Executable::bind`); per-call inputs go
-//! through `buffer_from_host_buffer` and everything executes via
-//! `execute_b`, so the multi-MB parameter tensors never cross the host
-//! boundary on the request path.
+//! The backend is selected at `Runtime` construction:
+//! * [`Runtime::cpu`] — PJRT (`backend::pjrt`), the serving path.
+//! * [`Runtime::interpreter`] — in-process HLO interpreter
+//!   (`backend::interp`), the CI / no-toolchain path.
+//! * [`Runtime::from_env`] — `FE_BACKEND=pjrt|interpret` (default pjrt).
+//!
+//! Manifest validation (names, shapes, dtypes, weight binding) lives
+//! here so every backend gets the same hard errors on drifted artifacts.
 
 use std::path::Path;
-use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::backend::{make_backend, Backend, BackendBound, BackendExec, BackendKind};
+
 use super::manifest::{ExecManifest, Kind};
-use super::tensor::{HostTensor, TensorData};
+use super::tensor::HostTensor;
 use super::weights::WeightSet;
 
 pub struct Runtime {
-    pub(crate) client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
+    kind: BackendKind,
 }
 
 impl Runtime {
+    /// PJRT-backed runtime (real bindings when linked, vendored host
+    /// stub otherwise).
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Runtime { client })
+        Runtime::new(BackendKind::Pjrt)
+    }
+
+    /// In-process HLO-interpreter runtime: runs anywhere `cargo test`
+    /// runs, no `xla_extension` required.
+    pub fn interpreter() -> Result<Runtime> {
+        Runtime::new(BackendKind::Interpret)
+    }
+
+    pub fn new(kind: BackendKind) -> Result<Runtime> {
+        Ok(Runtime { backend: make_backend(kind)?, kind })
+    }
+
+    /// Backend from the `FE_BACKEND` env var (`pjrt` when unset).
+    pub fn from_env() -> Result<Runtime> {
+        match std::env::var("FE_BACKEND") {
+            Ok(v) if !v.is_empty() => Runtime::new(BackendKind::from_str(&v)?),
+            _ => Runtime::cpu(),
+        }
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        self.kind
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub(crate) fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
-        let buf = match &t.data {
-            TensorData::F32(v) => {
-                self.client.buffer_from_host_buffer::<f32>(v, &t.shape, None)
-            }
-            TensorData::I32(v) => {
-                self.client.buffer_from_host_buffer::<i32>(v, &t.shape, None)
-            }
-        };
-        buf.context("host->device transfer")
+        self.backend.platform_name()
     }
 
     /// Load + compile one executable from `<dir>/<name>.hlo.txt` and its
@@ -51,15 +65,8 @@ impl Runtime {
         let hlo_path = hlo_dir.join(format!("{name}.hlo.txt"));
         let io_path = hlo_dir.join(format!("{name}.io.json"));
         let manifest = ExecManifest::load(&io_path)?;
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parse {hlo_path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
-        crate::log_debug!("compiled {name} in {:.0}ms", t0.elapsed().as_secs_f64() * 1e3);
-        Ok(Executable { name: name.to_string(), manifest, exe })
+        let imp = self.backend.compile(&hlo_path, &manifest)?;
+        Ok(Executable { name: name.to_string(), manifest, imp })
     }
 }
 
@@ -67,35 +74,36 @@ impl Runtime {
 pub struct Executable {
     pub name: String,
     pub manifest: ExecManifest,
-    exe: xla::PjRtLoadedExecutable,
+    imp: Box<dyn BackendExec>,
 }
 
 impl Executable {
-    /// Pre-transfer a weight set's tensors for this executable's weight
+    /// Pre-stage a weight set's tensors for this executable's weight
     /// inputs. Fails fast on any name/shape/dtype mismatch.
     pub fn bind(
         self: &std::rc::Rc<Self>,
-        rt: &Runtime,
+        _rt: &Runtime,
         weights: &WeightSet,
     ) -> Result<BoundExec> {
-        let mut wbufs = Vec::with_capacity(self.manifest.inputs.len());
+        let mut wrefs: Vec<Option<&HostTensor>> =
+            Vec::with_capacity(self.manifest.inputs.len());
         for spec in &self.manifest.inputs {
             if spec.kind == Kind::Weight {
                 weights.check(&spec.name, &spec.shape, spec.dtype)?;
-                let t = weights.tensor(&spec.name).unwrap();
-                wbufs.push(Some(rt.upload(t)?));
+                wrefs.push(Some(weights.tensor(&spec.name).unwrap()));
             } else {
-                wbufs.push(None);
+                wrefs.push(None);
             }
         }
-        Ok(BoundExec { exec: std::rc::Rc::clone(self), wbufs })
+        let bound = self.imp.bind(&wrefs)?;
+        Ok(BoundExec { exec: std::rc::Rc::clone(self), bound })
     }
 }
 
-/// An executable bound to a weight set (weights resident on device).
+/// An executable bound to a weight set (weights staged backend-side).
 pub struct BoundExec {
     pub exec: std::rc::Rc<Executable>,
-    wbufs: Vec<Option<xla::PjRtBuffer>>,
+    bound: Box<dyn BackendBound>,
 }
 
 impl BoundExec {
@@ -110,13 +118,12 @@ impl BoundExec {
     /// `args`: (name, tensor) for every input with kind != weight, in any
     /// order. Missing or shape-mismatched args are hard errors. Returns
     /// host tensors in manifest output order.
-    pub fn call(&self, rt: &Runtime, args: &[(&str, &HostTensor)]) -> Result<Vec<HostTensor>> {
+    pub fn call(&self, _rt: &Runtime, args: &[(&str, &HostTensor)]) -> Result<Vec<HostTensor>> {
         let m = self.manifest();
-        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
-        let mut order: Vec<isize> = Vec::with_capacity(m.inputs.len());
+        let mut positional: Vec<Option<&HostTensor>> = Vec::with_capacity(m.inputs.len());
         for spec in &m.inputs {
             match spec.kind {
-                Kind::Weight => order.push(-1),
+                Kind::Weight => positional.push(None),
                 Kind::Arg | Kind::State => {
                     let (_, t) = args
                         .iter()
@@ -127,48 +134,37 @@ impl BoundExec {
                     if t.shape != spec.shape || t.dtype() != spec.dtype {
                         bail!(
                             "{}: input {:?} got {:?}/{:?}, manifest wants {:?}/{:?}",
-                            self.name(), spec.name, t.shape, t.dtype(),
-                            spec.shape, spec.dtype
+                            self.name(),
+                            spec.name,
+                            t.shape,
+                            t.dtype(),
+                            spec.shape,
+                            spec.dtype
                         );
                     }
-                    owned.push(rt.upload(t)?);
-                    order.push(owned.len() as isize - 1);
+                    positional.push(Some(*t));
                 }
             }
         }
-        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(order.len());
-        for (i, w) in order.iter().enumerate() {
-            if *w < 0 {
-                bufs.push(self.wbufs[i].as_ref().unwrap());
-            } else {
-                bufs.push(&owned[*w as usize]);
-            }
-        }
-        let result = self
-            .exec
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&bufs)
-            .with_context(|| format!("execute {}", self.name()))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetch result literal")?;
-        let parts = tuple.to_tuple().context("untuple result")?;
-        if parts.len() != m.outputs.len() {
+        let out = self.bound.call(&positional)?;
+        if out.len() != m.outputs.len() {
             bail!(
                 "{}: got {} outputs, manifest says {}",
-                self.name(), parts.len(), m.outputs.len()
+                self.name(),
+                out.len(),
+                m.outputs.len()
             );
         }
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, spec) in parts.iter().zip(&m.outputs) {
-            let t = HostTensor::from_literal(lit)?;
+        for (t, spec) in out.iter().zip(&m.outputs) {
             if t.shape != spec.shape {
                 bail!(
                     "{}: output {:?} has shape {:?}, manifest says {:?}",
-                    self.name(), spec.name, t.shape, spec.shape
+                    self.name(),
+                    spec.name,
+                    t.shape,
+                    spec.shape
                 );
             }
-            out.push(t);
         }
         Ok(out)
     }

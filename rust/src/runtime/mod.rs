@@ -1,8 +1,10 @@
-//! Runtime layer: everything that touches the PJRT boundary.
+//! Runtime layer: everything that touches the executable boundary.
 //!
 //! `python/compile/aot.py` lowers the L2 JAX graphs (with the L1 Pallas
 //! kernels inlined in interpret mode) to HLO text; this module loads,
-//! compiles and executes them. Python never runs at serving time.
+//! compiles and executes them through a pluggable `crate::backend`
+//! (PJRT for serving, the in-process HLO interpreter for CI). Python
+//! never runs at serving time.
 
 pub mod client;
 pub mod manifest;
@@ -10,6 +12,7 @@ pub mod registry;
 pub mod tensor;
 pub mod weights;
 
+pub use crate::backend::BackendKind;
 pub use client::{BoundExec, Executable, Runtime};
 pub use manifest::{ExecManifest, IoSpec, Kind};
 pub use registry::ArtifactStore;

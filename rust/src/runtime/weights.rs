@@ -1,4 +1,6 @@
-//! FEW1 weight-file reader (writer: `python/compile/fmt.py`).
+//! FEW1 weight-file reader + writer (the python writer lives in
+//! `python/compile/fmt.py`; the Rust writer serves the interpreter
+//! fixture generator).
 //!
 //! A weight set is a name → tensor map; the executable wrapper binds the
 //! "weight"-kind inputs of an `*.io.json` manifest against it by name,
@@ -119,6 +121,40 @@ impl WeightSet {
     }
 }
 
+/// Write a FEW1 weight file (the exact format [`WeightSet::load`]
+/// reads). Tensor order is preserved on disk; names must be unique.
+pub fn write_few(path: &Path, tensors: &[(String, HostTensor)]) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        if name.len() > u16::MAX as usize {
+            bail!("tensor name too long: {name:?}");
+        }
+        f.write_all(&(name.len() as u16).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        let (tag, raw): (u8, Vec<u8>) = match &t.data {
+            super::tensor::TensorData::F32(v) => {
+                (0, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+            }
+            super::tensor::TensorData::I32(v) => {
+                (1, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+            }
+        };
+        f.write_all(&[tag, t.shape.len() as u8])?;
+        for &d in &t.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        f.write_all(&raw)?;
+    }
+    // surface write errors here, not as a silent Drop-time flush failure
+    f.flush()?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,6 +198,26 @@ mod tests {
         assert_eq!(ws.tensor("c").unwrap().as_i32().unwrap(), &[7]);
         assert!(ws.check("a/b", &[2], Dtype::F32).is_ok());
         assert!(ws.check("a/b", &[3], Dtype::F32).is_err());
+    }
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let dir = std::env::temp_dir().join("few_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.few");
+        write_few(
+            &p,
+            &[
+                ("emb".to_string(), HostTensor::f32(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0])),
+                ("ids".to_string(), HostTensor::i32(vec![3], vec![7, -8, 9])),
+            ],
+        )
+        .unwrap();
+        let ws = WeightSet::load(&p).unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws.tensor("emb").unwrap().as_f32().unwrap(), &[1.0, -2.0, 3.5, 0.0]);
+        assert_eq!(ws.tensor("ids").unwrap().as_i32().unwrap(), &[7, -8, 9]);
+        assert!(ws.check("emb", &[2, 2], Dtype::F32).is_ok());
     }
 
     #[test]

@@ -1,0 +1,69 @@
+//! Shared artifact discovery for the integration test binaries.
+//!
+//! Real artifacts are located via FE_ARTIFACTS, then ./artifacts, then
+//! /tmp/art_test (the dev smoke build) and run on the backend named by
+//! FE_BACKEND (default PJRT; an invalid value is a hard error, matching
+//! `Runtime::from_env`). When no artifact tree is present, a
+//! deterministic fixture tree is generated once per process and
+//! everything runs through the in-process HLO interpreter — the tests
+//! never skip.
+
+// each test binary uses a subset of these helpers
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::{Arc, OnceLock};
+
+use fasteagle::backend::{fixture, BackendKind};
+use fasteagle::runtime::{ArtifactStore, Runtime};
+
+pub const FIXTURE_SEED: u64 = 0;
+
+fn fixture_root() -> &'static PathBuf {
+    static FIXTURE: OnceLock<PathBuf> = OnceLock::new();
+    FIXTURE.get_or_init(|| {
+        let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR"))
+            .join(format!("fe_fixture_{}", std::process::id()));
+        fixture::generate_tree(&dir, FIXTURE_SEED).expect("generate fixture artifacts");
+        dir
+    })
+}
+
+/// (artifact-tree root, backend): real artifacts on the env-selected
+/// backend when present, else the generated fixture on the interpreter.
+pub fn artifacts_root() -> (PathBuf, BackendKind) {
+    let candidates = [
+        std::env::var("FE_ARTIFACTS").unwrap_or_default(),
+        "artifacts".to_string(),
+        "/tmp/art_test".to_string(),
+    ];
+    let found = candidates
+        .iter()
+        .filter(|c| !c.is_empty())
+        .map(PathBuf::from)
+        .find(|p| p.join("base").join("spec.json").exists());
+    match found {
+        Some(p) => {
+            let kind = match std::env::var("FE_BACKEND") {
+                Ok(v) if !v.is_empty() => {
+                    BackendKind::from_str(&v).expect("invalid FE_BACKEND")
+                }
+                _ => BackendKind::Pjrt,
+            };
+            (p, kind)
+        }
+        None => (fixture_root().clone(), BackendKind::Interpret),
+    }
+}
+
+/// Like [`artifacts_root`], resolved to the `base` target directory.
+pub fn artifacts_base() -> (PathBuf, BackendKind) {
+    let (root, kind) = artifacts_root();
+    (root.join("base"), kind)
+}
+
+pub fn store_with(dir: &PathBuf, kind: BackendKind) -> Rc<ArtifactStore> {
+    let rt = Arc::new(Runtime::new(kind).expect("create runtime"));
+    Rc::new(ArtifactStore::open(rt, dir.clone()).expect("open store"))
+}

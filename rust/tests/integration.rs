@@ -1,50 +1,25 @@
-//! Integration tests over real artifacts (L3 ↔ PJRT ↔ lowered L2/L1).
+//! Integration tests over artifacts (L3 ↔ backend ↔ lowered L2/L1).
 //!
-//! Artifacts are located via FE_ARTIFACTS, then ./artifacts, then
-//! /tmp/art_test (the dev smoke build). Tests skip cleanly when no
-//! artifact tree is present so `cargo test` works before
-//! `make artifacts`.
+//! Real artifacts are located via FE_ARTIFACTS, then ./artifacts, then
+//! /tmp/art_test (the dev smoke build) and run on the backend named by
+//! FE_BACKEND (default PJRT). When no artifact tree is present the
+//! tests no longer skip: a deterministic fixture tree is generated once
+//! per process and everything runs through the in-process HLO
+//! interpreter — the full draft→verify→accept pipeline in plain
+//! `cargo test`, no `xla_extension` required.
+
+mod common;
 
 use std::path::PathBuf;
 use std::rc::Rc;
-use std::sync::Arc;
 
+use common::{artifacts_base, store_with};
+use fasteagle::backend::{fixture, BackendKind};
 use fasteagle::coordinator::{BatchConfig, BatchEngine, BatchMethod, Request};
 use fasteagle::draft::make_drafter;
 use fasteagle::model::{KvCache, MaskRow, TargetModel};
-use fasteagle::runtime::{ArtifactStore, Runtime};
 use fasteagle::spec::{Engine, GenConfig};
 
-fn artifacts_base() -> Option<PathBuf> {
-    let candidates = [
-        std::env::var("FE_ARTIFACTS").unwrap_or_default(),
-        "artifacts".to_string(),
-        "/tmp/art_test".to_string(),
-    ];
-    candidates
-        .iter()
-        .filter(|c| !c.is_empty())
-        .map(PathBuf::from)
-        .find(|p| p.join("base").join("spec.json").exists())
-        .map(|p| p.join("base"))
-}
-
-macro_rules! require_artifacts {
-    () => {
-        match artifacts_base() {
-            Some(p) => p,
-            None => {
-                eprintln!("skipping: no artifacts (run `make artifacts`)");
-                return;
-            }
-        }
-    };
-}
-
-fn store(dir: &PathBuf) -> Rc<ArtifactStore> {
-    let rt = Arc::new(Runtime::cpu().expect("pjrt cpu"));
-    Rc::new(ArtifactStore::open(rt, dir.clone()).expect("open store"))
-}
 
 const PROMPTS: [&str; 2] = [
     "USER: tell me about machine learning and the fast cache.\nASSISTANT:",
@@ -55,8 +30,8 @@ const PROMPTS: [&str; 2] = [
 /// drafter must produce token-identical output to vanilla decoding.
 #[test]
 fn greedy_losslessness_all_drafters() {
-    let dir = require_artifacts!();
-    let st = store(&dir);
+    let (dir, kind) = artifacts_base();
+    let st = store_with(&dir, kind);
     let cfg = GenConfig { max_new_tokens: 40, ..Default::default() };
     let mut vanilla = Engine::new(
         TargetModel::open(Rc::clone(&st)).unwrap(),
@@ -94,8 +69,8 @@ fn greedy_losslessness_all_drafters() {
 /// Chain mode (the "w/o Constrained Tree" ablation) must also be lossless.
 #[test]
 fn greedy_losslessness_chain_mode() {
-    let dir = require_artifacts!();
-    let st = store(&dir);
+    let (dir, kind) = artifacts_base();
+    let st = store_with(&dir, kind);
     let tree_cfg = GenConfig { max_new_tokens: 32, ..Default::default() };
     let chain_cfg = GenConfig { max_new_tokens: 32, use_tree: false, ..Default::default() };
     let mut vanilla = Engine::new(
@@ -115,8 +90,8 @@ fn greedy_losslessness_chain_mode() {
 /// invariants (tau >= 1, requested length).
 #[test]
 fn stochastic_generation_invariants() {
-    let dir = require_artifacts!();
-    let st = store(&dir);
+    let (dir, kind) = artifacts_base();
+    let st = store_with(&dir, kind);
     for dn in ["fasteagle", "eagle3"] {
         let mut eng = Engine::new(
             TargetModel::open(Rc::clone(&st)).unwrap(),
@@ -143,8 +118,8 @@ fn stochastic_generation_invariants() {
 /// must equal prefill(P) followed by a single decode step of t.
 #[test]
 fn prefill_step_equivalence_across_chunk_boundaries() {
-    let dir = require_artifacts!();
-    let st = store(&dir);
+    let (dir, kind) = artifacts_base();
+    let st = store_with(&dir, kind);
     let tm = TargetModel::open(Rc::clone(&st)).unwrap();
     for plen in [2usize, 31, 32, 33, 40] {
         let tokens: Vec<i32> =
@@ -176,8 +151,8 @@ fn prefill_step_equivalence_across_chunk_boundaries() {
 /// here via direct cache inspection).
 #[test]
 fn kv_compact_then_continue_matches_sequential() {
-    let dir = require_artifacts!();
-    let st = store(&dir);
+    let (dir, kind) = artifacts_base();
+    let st = store_with(&dir, kind);
     let tm = TargetModel::open(Rc::clone(&st)).unwrap();
     let prompt: Vec<i32> = vec![256, 104, 105, 106];
     // path A: feed 2 extra tokens in one verify call (chain rows), keep both
@@ -222,14 +197,79 @@ fn kv_compact_then_continue_matches_sequential() {
     let _ = out_a;
 }
 
+/// The acceptance path runs end-to-end on whatever backend is active:
+/// at least one full draft→verify→accept cycle completes, and greedy
+/// decode is exactly reproducible — two fresh engines over the same
+/// artifacts produce token-identical output.
+#[test]
+fn end_to_end_cycles_and_exact_greedy_reproducibility() {
+    let (dir, kind) = artifacts_base();
+    let cfg = GenConfig { max_new_tokens: 24, ..Default::default() };
+    let mut tokens_runs = Vec::new();
+    for _ in 0..2 {
+        // fresh store + engine: nothing carries over but the artifacts
+        let st = store_with(&dir, kind);
+        let mut eng = Engine::new(
+            TargetModel::open(Rc::clone(&st)).unwrap(),
+            make_drafter(Rc::clone(&st), "fasteagle").unwrap(),
+        );
+        let r = eng.generate(PROMPTS[0], &cfg).unwrap();
+        assert!(r.metrics.cycles >= 1, "no draft→verify→accept cycle ran");
+        assert_eq!(r.tokens.len(), 24);
+        tokens_runs.push(r.tokens);
+    }
+    assert_eq!(tokens_runs[0], tokens_runs[1], "greedy decode not reproducible");
+}
+
+/// Fixture generation is a pure function of the seed: two trees from
+/// the same seed are byte-identical (and decode identically through the
+/// interpreter); a different seed changes the weights.
+#[test]
+fn fixture_trees_are_seed_deterministic() {
+    let base = PathBuf::from(env!("CARGO_TARGET_TMPDIR"))
+        .join(format!("fe_fixture_det_{}", std::process::id()));
+    let (a, b, c) = (base.join("a"), base.join("b"), base.join("c"));
+    fixture::generate_tree(&a, 7).unwrap();
+    fixture::generate_tree(&b, 7).unwrap();
+    fixture::generate_tree(&c, 8).unwrap();
+    for rel in [
+        "base/spec.json",
+        "base/hlo/tgt_m8.hlo.txt",
+        "base/hlo/fe_t8.io.json",
+        "base/weights/target.few",
+        "base/weights/fasteagle.few",
+    ] {
+        let fa = std::fs::read(a.join(rel)).unwrap();
+        let fb = std::fs::read(b.join(rel)).unwrap();
+        assert_eq!(fa, fb, "{rel} differs between same-seed trees");
+    }
+    assert_ne!(
+        std::fs::read(a.join("base/weights/target.few")).unwrap(),
+        std::fs::read(c.join("base/weights/target.few")).unwrap(),
+        "different seeds must produce different weights"
+    );
+    // same seed ⇒ identical greedy decode through the interpreter
+    let cfg = GenConfig { max_new_tokens: 12, ..Default::default() };
+    let mut out = Vec::new();
+    for root in [&a, &b] {
+        let st = store_with(&root.join("base"), BackendKind::Interpret);
+        let mut eng = Engine::new(
+            TargetModel::open(Rc::clone(&st)).unwrap(),
+            make_drafter(Rc::clone(&st), "fasteagle").unwrap(),
+        );
+        out.push(eng.generate(PROMPTS[1], &cfg).unwrap().tokens);
+    }
+    assert_eq!(out[0], out[1]);
+}
+
 /// Batch engine at B=1 must agree with the single-request engine's
 /// vanilla output (same greedy stream), complete a multi-request queue,
 /// and honor per-request generation parameters (max_new_tokens differs
 /// across the queue).
 #[test]
 fn batch_engine_b1_matches_single_engine() {
-    let dir = require_artifacts!();
-    let st = store(&dir);
+    let (dir, kind) = artifacts_base();
+    let st = store_with(&dir, kind);
     let cfg = GenConfig { max_new_tokens: 24, ..Default::default() };
     let mut vanilla = Engine::new(
         TargetModel::open(Rc::clone(&st)).unwrap(),
@@ -271,8 +311,8 @@ fn batch_engine_b1_matches_single_engine() {
 /// pool-deferred (deferrals require a free slot blocked on blocks).
 #[test]
 fn batch_engine_respects_block_pool() {
-    let dir = require_artifacts!();
-    let st = store(&dir);
+    let (dir, kind) = artifacts_base();
+    let st = store_with(&dir, kind);
     let mut cfg = BatchConfig::new(1, BatchMethod::FastEagle);
     // exactly one request's worth of blocks
     let spec = fasteagle::model::ModelSpec::parse(&st.spec_json().unwrap()).unwrap();
@@ -296,8 +336,8 @@ fn batch_engine_respects_block_pool() {
 /// whose slot frees up is admitted on the next step.
 #[test]
 fn batch_engine_step_admits_mid_flight_submissions() {
-    let dir = require_artifacts!();
-    let st = store(&dir);
+    let (dir, kind) = artifacts_base();
+    let st = store_with(&dir, kind);
     let mut eng = BatchEngine::new(
         Rc::clone(&st),
         BatchConfig::new(1, BatchMethod::FastEagle),

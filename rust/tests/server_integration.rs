@@ -3,30 +3,19 @@
 //! per-request generation parameters, out-of-admission-order completion
 //! (batch >= 2), stats, and shutdown.
 
+mod common;
+
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::path::PathBuf;
 use std::rc::Rc;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use common::artifacts_root;
 use fasteagle::coordinator::{BatchConfig, BatchEngine, BatchMethod, Server, ServerConfig};
 use fasteagle::runtime::{ArtifactStore, Runtime};
 use fasteagle::util::json::Json;
 use fasteagle::workload::batched_serving_target;
-
-fn artifacts_root() -> Option<PathBuf> {
-    let candidates = [
-        std::env::var("FE_ARTIFACTS").unwrap_or_default(),
-        "artifacts".to_string(),
-        "/tmp/art_test".to_string(),
-    ];
-    candidates
-        .iter()
-        .filter(|c| !c.is_empty())
-        .map(PathBuf::from)
-        .find(|p| p.join("base").join("spec.json").exists())
-}
 
 const ADDR: &str = "127.0.0.1:7433";
 
@@ -42,16 +31,13 @@ fn query(line: &str) -> Json {
 
 #[test]
 fn server_roundtrip_concurrency_and_shutdown() {
-    let Some(root) = artifacts_root() else {
-        eprintln!("skipping: no artifacts");
-        return;
-    };
+    let (root, kind) = artifacts_root();
     let Some((dir, batch)) = batched_serving_target(&root) else {
         eprintln!("skipping: no serving target");
         return;
     };
     let server_thread = std::thread::spawn(move || {
-        let rt = Arc::new(Runtime::cpu().unwrap());
+        let rt = Arc::new(Runtime::new(kind).unwrap());
         let store = Rc::new(ArtifactStore::open(rt, dir).unwrap());
         let engine = BatchEngine::new(
             Rc::clone(&store),
