@@ -110,6 +110,38 @@ fn main() -> anyhow::Result<()> {
     println!("throughput: {:.1} tok/s   {:.2} req/s", tokens as f64 / wall, latencies.len() as f64 / wall);
     println!("latency ms: p50={:.0} p90={:.0} p99={:.0} max={:.0}", s.p50, s.p90, s.p99, s.max);
 
+    // --- streaming: per-cycle token frames over the same protocol -----
+    // "stream": true opts into one {"event":"tokens",...} frame per
+    // draft->verify->commit cycle before the final response.
+    let conn = TcpStream::connect(ADDR)?;
+    let mut w = conn.try_clone()?;
+    let mut r = BufReader::new(conn);
+    let req = Json::obj(vec![
+        ("prompt", Json::str("USER: tell me about city transport and the steady bridge.\nASSISTANT:")),
+        ("max_new", Json::num(32.0)),
+        ("stream", Json::Bool(true)),
+    ]);
+    writeln!(w, "{}", req.to_string())?;
+    let mut frames = 0usize;
+    print!("\nstreaming: ");
+    loop {
+        let mut line = String::new();
+        r.read_line(&mut line)?;
+        let v = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if v.get("event").and_then(Json::as_str) == Some("tokens") {
+            frames += 1;
+            print!("{}", v.get("text").and_then(Json::as_str).unwrap_or(""));
+            std::io::stdout().flush()?;
+        } else {
+            println!(
+                "\nstreamed {} tokens over {frames} cycle frames (tau={:.2})",
+                v.get("new_tokens").and_then(Json::as_usize).unwrap_or(0),
+                v.get("tau").and_then(Json::as_f64).unwrap_or(0.0),
+            );
+            break;
+        }
+    }
+
     // shutdown
     let stream = TcpStream::connect(ADDR)?;
     let mut w = stream.try_clone()?;

@@ -352,6 +352,27 @@ impl HloBuilder {
         )
     }
 
+    /// dynamic-slice with one scalar s32 start per dimension; the
+    /// output shape is `sizes`.
+    pub fn dynamic_slice(&mut self, a: &H, starts: &[H], sizes: &[usize]) -> H {
+        assert_eq!(starts.len(), a.dims.len(), "dynamic-slice starts rank");
+        assert_eq!(sizes.len(), a.dims.len(), "dynamic-slice sizes rank");
+        for (d, (&sz, &od)) in sizes.iter().zip(&a.dims).enumerate() {
+            assert!(sz <= od, "dynamic-slice size {sz} exceeds dim {d} ({od})");
+        }
+        let idx: Vec<String> = starts.iter().map(|s| format!("%{}", s.name)).collect();
+        self.push(
+            a.ty,
+            sizes.to_vec(),
+            format!(
+                "dynamic-slice(%{}, {}), dynamic_slice_sizes={}",
+                a.name,
+                idx.join(", "),
+                list_text(sizes)
+            ),
+        )
+    }
+
     /// Broadcast a scalar to `dims`.
     pub fn splat(&mut self, scalar: &H, dims: Vec<usize>) -> H {
         assert!(scalar.dims.is_empty(), "splat wants a scalar");
@@ -413,6 +434,22 @@ mod tests {
         for v in out[1].f32s().unwrap() {
             assert!((v - 2.0 * expect).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn dynamic_slice_roundtrips_through_text() {
+        let mut b = HloBuilder::new("ds");
+        let x = b.param(Ty::F32, vec![3, 2]);
+        let i = b.param(Ty::S32, vec![]);
+        let j = b.const_s32(0);
+        let d = b.dynamic_slice(&x, &[i, j], &[1, 2]);
+        let text = b.finish(&[&d]);
+        let m = parse_module(&text).unwrap();
+        let xs = Rc::new(Value::f32(vec![3, 2], vec![0., 1., 10., 11., 20., 21.]));
+        let is = Rc::new(Value::i32(vec![], vec![2]));
+        let out = evaluate(&m, &[xs, is]).unwrap();
+        assert_eq!(out[0].dims, vec![1, 2]);
+        assert_eq!(out[0].f32s().unwrap(), &[20., 21.]);
     }
 
     #[test]

@@ -118,6 +118,9 @@ pub enum Op {
         to_apply: String,
     },
     DynamicUpdateSlice,
+    /// slice sizes per dimension; start indices arrive as scalar s32
+    /// operands (one per dimension), clamped like XLA's dynamic-slice
+    DynamicSlice(Vec<usize>),
     Tuple,
 }
 
@@ -443,6 +446,11 @@ fn parse_instr(line: &str) -> Result<Instr> {
             to_apply: strip_pct(req_attr(&attrs, "to_apply", "reduce")?).to_string(),
         },
         "dynamic-update-slice" => Op::DynamicUpdateSlice,
+        "dynamic-slice" => Op::DynamicSlice(parse_usize_list(req_attr(
+            &attrs,
+            "dynamic_slice_sizes",
+            "dynamic-slice",
+        )?)?),
         "tuple" => Op::Tuple,
         other => bail!("unsupported HLO opcode {other:?} (instruction {name})"),
     };
@@ -618,6 +626,19 @@ ENTRY %main {
             Op::Slice(r) => assert_eq!(r, &vec![(0, 1, 1), (0, 16, 1)]),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn parses_dynamic_slice_attrs() {
+        let d = parse_instr(
+            "%d = f32[1,4] dynamic-slice(%x, %i, %j), dynamic_slice_sizes={1,4}",
+        )
+        .unwrap();
+        match &d.op {
+            Op::DynamicSlice(sizes) => assert_eq!(sizes, &vec![1, 4]),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(d.operands, vec!["x", "i", "j"]);
     }
 
     #[test]

@@ -106,12 +106,18 @@ pub struct MethodAgg {
     pub method: String,
     pub tok_per_sec: f64,
     pub tau: f64,
+    /// mean wall time (ms) until the first cycle committed tokens — the
+    /// streaming time-to-first-tokens analogue, measured by driving the
+    /// per-cycle `GenSession` API directly
+    pub first_cycle_ms: f64,
     pub metrics: GenMetrics,
 }
 
-/// Run one method over a prompt set on the single-request engine.
-/// The first prompt is run twice: the extra pass warms the lazy
-/// executable compilation out of the measurement.
+/// Run one method over a prompt set on the single-request engine,
+/// driving the step-wise `GenSession` API (the same cycles
+/// `Engine::generate` drains, plus per-cycle visibility for the
+/// time-to-first-tokens stat). The first prompt is run twice: the extra
+/// pass warms the lazy executable compilation out of the measurement.
 pub fn run_method(
     env: &BenchEnv,
     target: &str,
@@ -135,16 +141,36 @@ pub fn run_method(
         .generate(prompts.last().unwrap(), &warm_cfg)
         .context("warmup2")?;
     let mut agg = GenMetrics::default();
+    let mut first_ms_sum = 0.0f64;
+    let mut first_ms_n = 0usize;
     for (i, p) in prompts.iter().enumerate() {
         let mut c = cfg.clone();
         c.seed = cfg.seed.wrapping_add(i as u64);
-        let r = engine.generate(p, &c)?;
+        let t0 = std::time::Instant::now();
+        let mut session = engine.start_session(p, &c)?;
+        let mut first: Option<f64> = None;
+        while !session.finished() {
+            let ev = session.step()?;
+            if first.is_none() && !ev.committed_tokens.is_empty() {
+                first = Some(t0.elapsed().as_secs_f64() * 1e3);
+            }
+        }
+        if let Some(ms) = first {
+            first_ms_sum += ms;
+            first_ms_n += 1;
+        }
+        let r = session.finish();
         agg.merge(&r.metrics);
     }
     Ok(MethodAgg {
         method: drafter.to_string(),
         tok_per_sec: agg.tokens_per_sec(),
         tau: agg.tau(),
+        first_cycle_ms: if first_ms_n > 0 {
+            first_ms_sum / first_ms_n as f64
+        } else {
+            0.0
+        },
         metrics: agg,
     })
 }

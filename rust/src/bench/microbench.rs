@@ -138,6 +138,45 @@ pub fn run(env: &BenchEnv) -> Result<()> {
         ]));
     }
 
+    // interpreter dot fast path: the kernel `--backend interpret` bench
+    // lanes lean on once dims grow past the fixture sizes — measured
+    // through the full parse->evaluate pipeline like real executables
+    if env.runtime.kind() == crate::backend::BackendKind::Interpret {
+        use crate::backend::hlo::builder::{HloBuilder, Ty};
+        use crate::backend::hlo::eval::{evaluate, Value};
+        use crate::backend::hlo::parser::parse_module;
+        for &(m, k, n) in &[(32usize, 64usize, 64usize), (128, 128, 128)] {
+            let mut hb = HloBuilder::new("dotbench");
+            let pa = hb.param(Ty::F32, vec![m, k]);
+            let pb = hb.param(Ty::F32, vec![k, n]);
+            let c = hb.matmul(&pa, &pb);
+            let text = hb.finish(&[&c]);
+            let module = parse_module(&text)?;
+            let a = Rc::new(Value::f32(vec![m, k], vec![0.5; m * k]));
+            let b = Rc::new(Value::f32(vec![k, n], vec![0.25; k * n]));
+            let samples = time_loop(
+                || {
+                    let _ = evaluate(&module, &[Rc::clone(&a), Rc::clone(&b)])?;
+                    Ok(())
+                },
+                iters,
+            )?;
+            let s = summarize(&samples);
+            let name = format!("interp_dot_{m}x{k}x{n}");
+            rows.push(vec![
+                name.clone(),
+                format!("{:.2}", s.mean),
+                format!("{:.2}", s.p50),
+                format!("{:.2}", s.p99),
+            ]);
+            report.push(Json::obj(vec![
+                ("exec", Json::str(&name)),
+                ("mean_ms", Json::num(s.mean)),
+                ("p50_ms", Json::num(s.p50)),
+            ]));
+        }
+    }
+
     println!("\n=== Microbench (per-call latency, ms) ===");
     let headers: Vec<String> =
         ["op", "mean", "p50", "p99"].iter().map(|s| s.to_string()).collect();

@@ -83,6 +83,7 @@ pub fn run(env: &BenchEnv) -> Result<()> {
                         ("speedup", Json::num(spd)),
                         ("tau", Json::num(agg.tau)),
                         ("tok_per_sec", Json::num(agg.tok_per_sec)),
+                        ("first_cycle_ms", Json::num(agg.first_cycle_ms)),
                         ("baseline_tok_per_sec", Json::num(base_tps[i])),
                     ]));
                 }

@@ -6,29 +6,40 @@
 //! Design mirrors vLLM's single-scheduler loop at miniature scale. The
 //! engine is **step-driven**: each [`BatchEngine::step`] performs one
 //! admission pass over the internal pending queue plus one batched
-//! decode iteration, and returns whichever requests completed. The
-//! closed-workload [`BatchEngine::run`] used by the benches is a thin
-//! wrapper that submits everything up front and steps until drained —
-//! the serving loop and the benchmark exercise the same code path.
+//! decode iteration, and returns whichever requests completed
+//! ([`BatchEngine::step_events`] additionally reports every slot's
+//! per-cycle [`SlotEvent`] — what the server's streaming frames are made
+//! of). The closed-workload [`BatchEngine::run`] used by the benches is
+//! a thin wrapper that submits everything up front and steps until
+//! drained — the serving loop and the benchmark exercise the same code
+//! path.
+//!
+//! Each slot drives the same [`SlotCycle`] core as the single-request
+//! `GenSession` (prompt budget, tree build from `DraftOutput`, mask-row
+//! construction, lossless accept, commit bookkeeping) — only the
+//! forward passes are batched here.
 //!
 //! * **Admission lane**: new requests prefill on the B=1 executables,
 //!   then their KV/drafter state is copied into a free slot of the
 //!   batched state tensors. Generation parameters (temperature, seed,
 //!   max_new_tokens, stop_on_eos) are honored **per request** — each
-//!   slot carries its own sampler.
-//! * **Decode loop**: one batched draft (method-specific) + one batched
-//!   verification per iteration; per-slot lossless acceptance and KV
-//!   compaction on the host.
+//!   slot carries its own sampler — and so is the **method**: one pool
+//!   serves fasteagle, eagle3 and vanilla slots side by side
+//!   (`Request::method`, falling back to the engine default).
+//! * **Decode loop**: one batched draft per drafting method + one
+//!   batched verification per iteration; per-slot lossless acceptance
+//!   and KV compaction on the host.
 //! * **Slot eviction**: a finished request's KV lease is released and
 //!   its lane zeroed in the same iteration it completes, so queued work
 //!   can be admitted on the very next step.
 //! * **Paged admission control**: every request leases KV blocks for the
-//!   target's L layers plus its drafter's KV layers (FastEagle N=6 vs
-//!   EAGLE 1 vs vanilla 0). When the pool can't cover a request it waits
-//!   in the queue — this is the memory-pressure mechanism that caps
-//!   FastEagle's batched throughput in Table 3. Each distinct request's
-//!   deferral is counted once (`requests_deferred`), no matter how many
-//!   scheduler passes it waits through.
+//!   target's L layers plus **its own method's** drafter KV layers
+//!   (FastEagle N=6 vs EAGLE 1 vs vanilla 0). When the pool can't cover
+//!   a request it waits in the queue — this is the memory-pressure
+//!   mechanism that caps FastEagle's batched throughput in Table 3.
+//!   Each distinct request's deferral is counted once
+//!   (`requests_deferred`), no matter how many scheduler passes it
+//!   waits through.
 
 use std::collections::{HashSet, VecDeque};
 use std::rc::Rc;
@@ -36,11 +47,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::draft::{Drafter, EagleDrafter, FastEagleDrafter, ObserveArgs};
+use crate::draft::{DraftOutput, Drafter, EagleDrafter, FastEagleDrafter, ObserveArgs};
 use crate::model::{BlockPool, KvCache, Lease, MaskRow, ModelSpec, TargetModel, Tokenizer, NEG};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::ArtifactStore;
-use crate::spec::{verify_tree, DraftTree, Sampler};
+use crate::spec::{prompt_budget, truncate_prompt, verify_rows, DraftTree, SlotCycle};
 
 use super::metrics::ServingMetrics;
 use super::request::{Request, Response};
@@ -68,15 +79,26 @@ impl BatchMethod {
             BatchMethod::Eagle3 => "eagle3",
         }
     }
+
+    pub fn from_name(name: &str) -> Option<BatchMethod> {
+        Some(match name {
+            "vanilla" => BatchMethod::Vanilla,
+            "fasteagle" => BatchMethod::FastEagle,
+            "eagle3" => BatchMethod::Eagle3,
+            _ => return None,
+        })
+    }
 }
 
 #[derive(Debug, Clone)]
 pub struct BatchConfig {
     pub batch: usize,
+    /// default method for requests that don't carry their own
+    /// (`Request::method`); a pool can mix methods across slots
     pub method: BatchMethod,
     /// draft chain length per cycle (Table 3: 2). Engine-wide because it
     /// fixes the lowered executable shapes; everything else (temperature,
-    /// seed, max_new_tokens, stop_on_eos) is per-request.
+    /// seed, max_new_tokens, stop_on_eos, method) is per-request.
     pub chain_len: usize,
     /// KV block pool (admission control); `None` = unbounded
     pub pool_blocks: Option<usize>,
@@ -97,12 +119,11 @@ impl BatchConfig {
 
 struct Slot {
     req: Request,
-    sampler: Sampler,
-    pending: i32,
-    out: Vec<i32>,
-    cycles: usize,
-    tau_sum: usize,
-    eos_hit: bool,
+    method: BatchMethod,
+    /// the shared per-request cycle core (sampler, pending token,
+    /// committed output, termination) — same state machine as
+    /// `GenSession`
+    cycle: SlotCycle,
     /// when the request entered its slot (gen_ms = admitted_at -> retire)
     admitted_at: Instant,
     lease: Lease,
@@ -111,6 +132,32 @@ struct Slot {
     // EAGLE per-slot draft state
     eg_h: Vec<f32>,
     eg_q1: Vec<f32>,
+}
+
+/// One slot's cycle outcome within a [`BatchEngine::step_events`] —
+/// the per-cycle progress the streaming protocol forwards to clients.
+/// Carries raw token ids only; consumers that want text decode on
+/// demand ([`BatchEngine::decode`]) so non-streaming callers pay
+/// nothing per cycle.
+#[derive(Debug, Clone)]
+pub struct SlotEvent {
+    pub id: u64,
+    /// 1-based cycle index for this request
+    pub cycle: usize,
+    /// tokens committed this cycle (post eos/max_new truncation)
+    pub tokens: Vec<i32>,
+    /// accepted path length including the root
+    pub accepted_len: usize,
+    pub finished: bool,
+}
+
+/// What one scheduler step produced.
+#[derive(Debug, Default)]
+pub struct StepOutcome {
+    /// completed (or failed-at-admission) requests
+    pub finished: Vec<Response>,
+    /// one event per active slot that ran a cycle this step
+    pub events: Vec<SlotEvent>,
 }
 
 /// Pool-admission bookkeeping shared by [`BatchEngine::step`] and the
@@ -154,7 +201,12 @@ pub struct BatchEngine {
     cfg: BatchConfig,
     tokenizer: Tokenizer,
     kv: KvCache,
-    dkv: Option<KvCache>, // FE: [N,2,B,C,..]; EAGLE: [2,B,C,..]
+    /// FastEagle batched drafter state [N,2,B,C,..]; allocated on the
+    /// first fasteagle admission (mixed pools may never need it)
+    fe_dkv: Option<KvCache>,
+    /// EAGLE batched drafter state [2,B,C,..]; allocated on the first
+    /// eagle3 admission
+    eg_dkv: Option<KvCache>,
     slots: Vec<Option<Slot>>,
     pool: BlockPool,
     /// submitted but not yet admitted to a slot
@@ -200,15 +252,6 @@ impl BatchEngine {
         let kv = KvCache::zeros(vec![
             spec.n_layers, 2, b, spec.max_seq, spec.n_kv_heads, spec.head_dim,
         ])?;
-        let dkv = match cfg.method {
-            BatchMethod::Vanilla => None,
-            BatchMethod::FastEagle => Some(KvCache::zeros(vec![
-                spec.draft_depth, 2, b, spec.max_seq, spec.n_kv_heads, spec.head_dim,
-            ])?),
-            BatchMethod::Eagle3 => Some(KvCache::zeros(vec![
-                2, b, spec.max_seq, spec.n_kv_heads, spec.head_dim,
-            ])?),
-        };
         let tokenizer = Tokenizer::new(spec.bos, spec.eos, spec.pad);
         let pool_blocks = cfg.pool_blocks.unwrap_or(usize::MAX / 4);
         let pool = BlockPool::new(pool_blocks, cfg.block_slots);
@@ -219,7 +262,8 @@ impl BatchEngine {
             cfg,
             tokenizer,
             kv,
-            dkv,
+            fe_dkv: None,
+            eg_dkv: None,
             slots,
             pool,
             pending: VecDeque::new(),
@@ -227,12 +271,23 @@ impl BatchEngine {
         })
     }
 
+    /// The engine's default method (requests may override per-request).
     pub fn method(&self) -> BatchMethod {
         self.cfg.method
     }
 
+    /// Decode committed tokens with this engine's tokenizer — how
+    /// streaming consumers turn [`SlotEvent::tokens`] into frame text.
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        self.tokenizer.decode(tokens)
+    }
+
     pub fn batch(&self) -> usize {
         self.cfg.batch
+    }
+
+    fn method_of(&self, req: &Request) -> BatchMethod {
+        req.method.unwrap_or(self.cfg.method)
     }
 
     /// Enqueue a request for admission on a future [`step`](Self::step).
@@ -263,6 +318,15 @@ impl BatchEngine {
             .saturating_sub(self.active_len() + self.pending.len())
     }
 
+    /// Free blocks in the KV pool (admission-control observability).
+    pub fn pool_available(&self) -> usize {
+        self.pool.available()
+    }
+
+    pub fn pool_total(&self) -> usize {
+        self.pool.total()
+    }
+
     fn exec_suffix(&self) -> String {
         if self.cfg.batch == 1 {
             String::new()
@@ -271,11 +335,39 @@ impl BatchEngine {
         }
     }
 
-    /// Request cost in pool blocks (target + drafter KV layers).
-    fn request_blocks(&self) -> usize {
-        let drafter_layers = self.cfg.method.drafter_kv_layers(&self.spec);
+    /// One request's cost in pool blocks (target + that method's drafter
+    /// KV layers) — the per-method lease accounting mixed fleets rely on.
+    pub fn request_blocks(&self, method: BatchMethod) -> usize {
+        let drafter_layers = method.drafter_kv_layers(&self.spec);
         self.pool
             .blocks_for(self.spec.max_seq, self.spec.n_layers + drafter_layers)
+    }
+
+    fn ensure_fe_dkv(&mut self) -> Result<&mut KvCache> {
+        if self.fe_dkv.is_none() {
+            self.fe_dkv = Some(KvCache::zeros(vec![
+                self.spec.draft_depth,
+                2,
+                self.cfg.batch,
+                self.spec.max_seq,
+                self.spec.n_kv_heads,
+                self.spec.head_dim,
+            ])?);
+        }
+        Ok(self.fe_dkv.as_mut().unwrap())
+    }
+
+    fn ensure_eg_dkv(&mut self) -> Result<&mut KvCache> {
+        if self.eg_dkv.is_none() {
+            self.eg_dkv = Some(KvCache::zeros(vec![
+                2,
+                self.cfg.batch,
+                self.spec.max_seq,
+                self.spec.n_kv_heads,
+                self.spec.head_dim,
+            ])?);
+        }
+        Ok(self.eg_dkv.as_mut().unwrap())
     }
 
     /// Prefill one request on the B=1 lane and move its state into slot
@@ -285,32 +377,27 @@ impl BatchEngine {
         // gen_ms spans from here so prefill time is covered by it (the
         // queue-wait histogram ends at the admission decision)
         let admitted_at = Instant::now();
+        let method = self.method_of(&req);
         let target = TargetModel::open(Rc::clone(&self.store))?;
         let mut kv1 = target.new_kv()?;
         let mut ptoks = self.tokenizer.encode_prompt(&req.prompt);
-        let budget = self
-            .spec
-            .max_seq
-            .saturating_sub(req.cfg.max_new_tokens + self.cfg.chain_len + 3);
-        if ptoks.len() > budget {
-            ptoks = ptoks[ptoks.len() - budget..].to_vec();
-        }
+        let budget = prompt_budget(
+            self.spec.max_seq,
+            req.cfg.max_new_tokens,
+            self.cfg.chain_len + 3,
+        );
+        truncate_prompt(&mut ptoks, budget);
         let pre = target.prefill(&mut kv1, &ptoks)?;
-        // per-request generation parameters: the slot owns its sampler
-        let mut sampler = Sampler::new(req.cfg.temperature, req.cfg.seed);
-        let d0 = sampler.dist_from_logits(&pre.last_logits);
-        let pending = sampler.sample(&d0);
+        // per-request generation parameters: the slot owns its cycle
+        // core (sampler, pending token, output, termination)
+        let cycle = SlotCycle::start(req.cfg.clone(), &pre.last_logits);
         let mut next: Vec<i32> = ptoks[1..].to_vec();
-        next.push(pending);
+        next.push(cycle.pending);
 
         let mut slot = Slot {
             req,
-            sampler,
-            pending,
-            out: Vec::new(),
-            cycles: 0,
-            tau_sum: 0,
-            eos_hit: false,
+            method,
+            cycle,
             admitted_at,
             lease: Lease::default(),
             fe_logits: Vec::new(),
@@ -318,7 +405,7 @@ impl BatchEngine {
             eg_q1: Vec::new(),
         };
         self.kv.copy_request_from(slot_idx, &kv1)?;
-        match self.cfg.method {
+        match method {
             BatchMethod::Vanilla => {}
             BatchMethod::FastEagle => {
                 let mut d =
@@ -330,8 +417,8 @@ impl BatchEngine {
                     first_pos: 0,
                 })?;
                 let (dkv1, logits) = d.state();
-                self.dkv.as_mut().unwrap().copy_request_from(slot_idx, dkv1)?;
                 slot.fe_logits = logits.to_vec();
+                self.ensure_fe_dkv()?.copy_request_from(slot_idx, dkv1)?;
             }
             BatchMethod::Eagle3 => {
                 let mut d = EagleDrafter::new(Rc::clone(&self.store), "eagle3", true)?;
@@ -342,9 +429,9 @@ impl BatchEngine {
                     first_pos: 0,
                 })?;
                 let (ekv1, h, q1) = d.state();
-                self.dkv.as_mut().unwrap().copy_request_from(slot_idx, ekv1)?;
                 slot.eg_h = h.to_vec();
                 slot.eg_q1 = q1.to_vec();
+                self.ensure_eg_dkv()?.copy_request_from(slot_idx, ekv1)?;
             }
         }
         slot.lease = std::mem::take(lease);
@@ -352,19 +439,25 @@ impl BatchEngine {
         Ok(())
     }
 
-    /// Draft a depth-`chain_len` backbone chain per active slot.
-    /// Returns per-slot (tokens, dists).
-    fn draft_chains(&mut self) -> Result<Vec<Option<(Vec<i32>, Vec<Vec<f32>>)>>> {
+    /// One draft per active slot, dispatched by the slot's method:
+    /// FastEagle chains come straight off the cascade logits produced
+    /// during observe (zero executable calls), EAGLE slots share one
+    /// batched autoregressive loop, vanilla slots draft nothing.
+    fn draft_outputs(&mut self) -> Result<Vec<Option<DraftOutput>>> {
         let bsz = self.cfg.batch;
         let (v, d, c) = (self.spec.vocab, self.spec.d_model, self.spec.max_seq);
         let depth = self.cfg.chain_len;
-        let mut out: Vec<Option<(Vec<i32>, Vec<Vec<f32>>)>> = (0..bsz).map(|_| None).collect();
-        match self.cfg.method {
-            BatchMethod::Vanilla => {}
-            BatchMethod::FastEagle => {
-                // the cascade already produced all N levels during observe
-                for (b, s) in self.slots.iter_mut().enumerate() {
-                    let Some(slot) = s else { continue };
+        let mut out: Vec<Option<DraftOutput>> = (0..bsz).map(|_| None).collect();
+        // host-side methods first (no executable calls)
+        for (b, s) in self.slots.iter_mut().enumerate() {
+            let Some(slot) = s else { continue };
+            if slot.cycle.finished() {
+                continue;
+            }
+            match slot.method {
+                BatchMethod::Vanilla => out[b] = Some(DraftOutput::None),
+                BatchMethod::FastEagle => {
+                    // the cascade already produced all N levels during observe
                     let temp = slot.req.cfg.temperature;
                     let mut toks = Vec::with_capacity(depth);
                     let mut dists = Vec::with_capacity(depth);
@@ -372,111 +465,125 @@ impl BatchEngine {
                         let mut q = slot.fe_logits[lvl * v..(lvl + 1) * v].to_vec();
                         crate::util::rng::softmax_temp(&mut q, temp);
                         // chain links are q-samples at T>0 (losslessness)
-                        toks.push(slot.sampler.sample(&q));
+                        toks.push(slot.cycle.sampler.sample(&q));
                         dists.push(q);
                     }
-                    out[b] = Some((toks, dists));
+                    out[b] = Some(DraftOutput::Chain(toks, dists));
+                }
+                BatchMethod::Eagle3 => {}
+            }
+        }
+        // EAGLE slots: level 1 from observe; levels 2.. via batched eg_next
+        let mut eg_chains: Vec<Option<(Vec<i32>, Vec<Vec<f32>>)>> =
+            (0..bsz).map(|_| None).collect();
+        let mut hs: Vec<Vec<f32>> = Vec::with_capacity(bsz);
+        let mut any_eagle = false;
+        for (b, s) in self.slots.iter_mut().enumerate() {
+            match s {
+                Some(slot)
+                    if slot.method == BatchMethod::Eagle3 && !slot.cycle.finished() =>
+                {
+                    let mut q = slot.eg_q1.clone();
+                    crate::util::rng::softmax_temp(&mut q, slot.req.cfg.temperature);
+                    let tok = slot.cycle.sampler.sample(&q);
+                    eg_chains[b] = Some((vec![tok], vec![q]));
+                    hs.push(slot.eg_h.clone());
+                    any_eagle = true;
+                }
+                _ => hs.push(vec![0.0; d]),
+            }
+        }
+        if any_eagle && depth > 1 {
+            let suffix = self.exec_suffix();
+            let exec = self.store.bind(&format!("eg_next_t1{suffix}"), "eagle3")?;
+            let mut ekv_tmp = self.eg_dkv.as_ref().expect("eagle slot admitted").clone();
+            for step in 1..depth {
+                let mut feat = vec![0.0f32; bsz * d];
+                let mut toks = vec![self.spec.pad; bsz];
+                let mut pos = vec![0i32; bsz];
+                let mut ctx = vec![0i32; bsz];
+                let mut rows: Vec<Vec<MaskRow>> = vec![vec![]; bsz];
+                for b in 0..bsz {
+                    if let Some((t, _)) = &eg_chains[b] {
+                        feat[b * d..(b + 1) * d].copy_from_slice(&hs[b]);
+                        toks[b] = t[step - 1];
+                        let base = ekv_tmp.len(b);
+                        pos[b] = ((base + step) as i32).min(c as i32 - 1);
+                        ctx[b] = (base + step - 1) as i32;
+                        rows[b] =
+                            vec![MaskRow { prefix_upto: base + step, extra: vec![] }];
+                    }
+                }
+                let mask = build_mask_b(bsz, 1, c, &rows);
+                let feat_t = HostTensor::f32(vec![bsz, 1, d], feat);
+                let tok_t = HostTensor::i32(vec![bsz, 1], toks);
+                let pos_t = HostTensor::i32(vec![bsz, 1], pos);
+                let ctx_t = HostTensor::i32(vec![bsz], ctx);
+                let outs = exec.call(
+                    &self.store.runtime,
+                    &[
+                        ("feat_in", &feat_t),
+                        ("tokens", &tok_t),
+                        ("anchor_pos", &pos_t),
+                        ("mask", &mask),
+                        ("ctx_len", &ctx_t),
+                        ("ekv", ekv_tmp.tensor()),
+                    ],
+                )?;
+                let l = outs[exec.out_idx("logits")?].as_f32()?.to_vec();
+                let hvec = outs[exec.out_idx("h")?].as_f32()?.to_vec();
+                let ki = exec.out_idx("ekv")?;
+                let mut outs = outs;
+                ekv_tmp.update_from(outs.swap_remove(ki))?;
+                for b in 0..bsz {
+                    if let Some((t, dd)) = &mut eg_chains[b] {
+                        let slot = self.slots[b].as_mut().unwrap();
+                        let mut q = l[b * v..(b + 1) * v].to_vec();
+                        crate::util::rng::softmax_temp(&mut q, slot.req.cfg.temperature);
+                        let tok = slot.cycle.sampler.sample(&q);
+                        t.push(tok);
+                        dd.push(q);
+                        hs[b].copy_from_slice(&hvec[b * d..(b + 1) * d]);
+                    }
                 }
             }
-            BatchMethod::Eagle3 => {
-                // level 1 from observe; levels 2.. via batched eg_next
-                let mut hs: Vec<Vec<f32>> = Vec::with_capacity(bsz);
-                for (b, s) in self.slots.iter_mut().enumerate() {
-                    if let Some(slot) = s {
-                        let mut q = slot.eg_q1.clone();
-                        crate::util::rng::softmax_temp(&mut q, slot.req.cfg.temperature);
-                        let tok = slot.sampler.sample(&q);
-                        out[b] = Some((vec![tok], vec![q]));
-                        hs.push(slot.eg_h.clone());
-                    } else {
-                        hs.push(vec![0.0; d]);
-                    }
-                }
-                let exec = self
-                    .store
-                    .bind(&format!("eg_next_t1{}", self.exec_suffix()), "eagle3")?;
-                let mut ekv_tmp = self.dkv.as_ref().unwrap().clone();
-                for step in 1..depth {
-                    let mut feat = vec![0.0f32; bsz * d];
-                    let mut toks = vec![self.spec.pad; bsz];
-                    let mut pos = vec![0i32; bsz];
-                    let mut ctx = vec![0i32; bsz];
-                    let mut rows: Vec<Vec<MaskRow>> = vec![vec![]; bsz];
-                    for b in 0..bsz {
-                        if let Some((t, _)) = &out[b] {
-                            feat[b * d..(b + 1) * d].copy_from_slice(&hs[b]);
-                            toks[b] = t[step - 1];
-                            let base = ekv_tmp.len(b);
-                            pos[b] = ((base + step) as i32).min(c as i32 - 1);
-                            ctx[b] = (base + step - 1) as i32;
-                            rows[b] =
-                                vec![MaskRow { prefix_upto: base + step, extra: vec![] }];
-                        }
-                    }
-                    let mask = build_mask_b(bsz, 1, c, &rows);
-                    let feat_t = HostTensor::f32(vec![bsz, 1, d], feat);
-                    let tok_t = HostTensor::i32(vec![bsz, 1], toks);
-                    let pos_t = HostTensor::i32(vec![bsz, 1], pos);
-                    let ctx_t = HostTensor::i32(vec![bsz], ctx);
-                    let outs = exec.call(
-                        &self.store.runtime,
-                        &[
-                            ("feat_in", &feat_t),
-                            ("tokens", &tok_t),
-                            ("anchor_pos", &pos_t),
-                            ("mask", &mask),
-                            ("ctx_len", &ctx_t),
-                            ("ekv", ekv_tmp.tensor()),
-                        ],
-                    )?;
-                    let l = outs[exec.out_idx("logits")?].as_f32()?.to_vec();
-                    let hvec = outs[exec.out_idx("h")?].as_f32()?.to_vec();
-                    let ki = exec.out_idx("ekv")?;
-                    let mut outs = outs;
-                    ekv_tmp.update_from(outs.swap_remove(ki))?;
-                    for b in 0..bsz {
-                        if let Some((t, dd)) = &mut out[b] {
-                            let slot = self.slots[b].as_mut().unwrap();
-                            let mut q = l[b * v..(b + 1) * v].to_vec();
-                            crate::util::rng::softmax_temp(&mut q, slot.req.cfg.temperature);
-                            let tok = slot.sampler.sample(&q);
-                            t.push(tok);
-                            dd.push(q);
-                            hs[b].copy_from_slice(&hvec[b * d..(b + 1) * d]);
-                        }
-                    }
-                }
-                // ekv_tmp dropped: temp entries rolled back
+            // ekv_tmp dropped: temp entries rolled back
+        }
+        for (b, chain) in eg_chains.into_iter().enumerate() {
+            if let Some((toks, dists)) = chain {
+                out[b] = Some(DraftOutput::Chain(toks, dists));
             }
         }
         Ok(out)
     }
 
     /// One batched decode iteration over all active slots. Returns
-    /// finished responses; finished slots are evicted (lease released,
-    /// lane zeroed) before returning so the next admission pass can
-    /// reuse them.
-    fn decode_iteration(&mut self, metrics: &mut ServingMetrics) -> Result<Vec<Response>> {
+    /// finished responses plus per-slot cycle events; finished slots are
+    /// evicted (lease released, lane zeroed) before returning so the
+    /// next admission pass can reuse them.
+    fn decode_iteration(
+        &mut self,
+        metrics: &mut ServingMetrics,
+    ) -> Result<(Vec<Response>, Vec<SlotEvent>)> {
         let bsz = self.cfg.batch;
         let (v, fd, s) = (self.spec.vocab, self.spec.feat_dim, self.spec.max_seq);
         let eos_tok = self.spec.eos;
-        let m = match self.cfg.method {
-            BatchMethod::Vanilla => 1,
-            _ => 1 + self.cfg.chain_len,
-        };
-        let chains = self.draft_chains()?;
-        // assemble per-slot trees
+        // verification rows this iteration: 1 when only vanilla slots
+        // are active, root + chain otherwise (mixed pools pad the
+        // vanilla slots' unused rows)
+        let any_draft = self.slots.iter().flatten().any(|sl| {
+            sl.method != BatchMethod::Vanilla && !sl.cycle.finished()
+        });
+        let m = if any_draft { 1 + self.cfg.chain_len } else { 1 };
+        let drafts = self.draft_outputs()?;
+        // assemble per-slot trees through the shared cycle core
         let mut trees: Vec<Option<DraftTree>> = (0..bsz).map(|_| None).collect();
-        for b in 0..bsz {
-            let Some(slot) = &self.slots[b] else { continue };
-            let tree = match (&chains[b], self.cfg.method) {
-                (_, BatchMethod::Vanilla) => DraftTree::root_only(slot.pending),
-                (Some((toks, dists)), _) => {
-                    DraftTree::chain(slot.pending, toks, dists.clone())
-                }
-                (None, _) => DraftTree::root_only(slot.pending),
-            };
-            trees[b] = Some(tree);
+        for (b, draft) in drafts.into_iter().enumerate() {
+            let Some(slot) = &mut self.slots[b] else { continue };
+            if slot.cycle.finished() {
+                continue;
+            }
+            trees[b] = Some(slot.cycle.build_tree(draft.unwrap_or(DraftOutput::None), 1));
         }
         // batched verify
         let mut tokens = vec![self.spec.pad; bsz * m];
@@ -487,16 +594,10 @@ impl BatchEngine {
             let Some(tree) = &trees[b] else { continue };
             let base = self.kv.len(b);
             ctx[b] = base as i32;
-            for (i, node) in tree.nodes.iter().enumerate() {
-                tokens[b * m + i] = node.token;
-                pos[b * m + i] = ((base + node.depth) as i32).min(s as i32 - 1);
-            }
-            rows[b] = (0..tree.len())
-                .map(|i| MaskRow {
-                    prefix_upto: base,
-                    extra: tree.ancestors(i).iter().map(|&a| base + a).collect(),
-                })
-                .collect();
+            let (toks, ps, rws) = verify_rows(tree, base, s);
+            tokens[b * m..b * m + tree.len()].copy_from_slice(&toks);
+            pos[b * m..b * m + tree.len()].copy_from_slice(&ps);
+            rows[b] = rws;
         }
         let mask = build_mask_b(bsz, m, s, &rows);
         let exec = self
@@ -521,52 +622,40 @@ impl BatchEngine {
         let mut outs = outs;
         self.kv.update_from(outs.swap_remove(ki))?;
 
-        // per-slot acceptance + commit
+        // per-slot acceptance + commit through the shared cycle core
         let mut observe_feats: Vec<Vec<f32>> = vec![vec![]; bsz];
         let mut observe_next: Vec<Vec<i32>> = vec![vec![]; bsz];
         let mut observe_first: Vec<usize> = vec![0; bsz];
+        let mut events = Vec::new();
         let mut finished = Vec::new();
         for b in 0..bsz {
             let Some(tree) = &trees[b] else { continue };
             let base = self.kv.len(b);
             let slot = self.slots[b].as_mut().unwrap();
-            let target_dists: Vec<Vec<f32>> = (0..tree.len())
-                .map(|i| {
-                    slot.sampler
-                        .dist_from_logits(&logits[(b * m + i) * v..(b * m + i + 1) * v])
-                })
-                .collect();
-            let acc = verify_tree(tree, &target_dists, &mut slot.sampler);
+            let acc = slot.cycle.accept(
+                tree,
+                &logits[b * m * v..(b * m + tree.len()) * v],
+                v,
+            );
             self.kv.compact(b, base, &acc.accepted_slots)?;
-            slot.cycles += 1;
-            if slot.cycles == 1 {
+            if slot.cycle.metrics.cycles == 1 {
                 metrics.record_first_cycle(slot.req.arrival.elapsed());
             }
-            slot.tau_sum += acc.accepted_slots.len();
-            let acc_tokens: Vec<i32> = acc
-                .accepted_slots
-                .iter()
-                .map(|&sl| tree.nodes[sl].token)
-                .collect();
+            let commit = slot.cycle.commit(tree, &acc, eos_tok);
             let mut f = Vec::with_capacity(acc.accepted_slots.len() * fd);
             for &sl in &acc.accepted_slots {
                 f.extend_from_slice(&feats[(b * m + sl) * fd..(b * m + sl + 1) * fd]);
             }
-            let mut next: Vec<i32> = acc_tokens[1..].to_vec();
-            next.push(acc.bonus);
             observe_feats[b] = f;
-            observe_next[b] = next;
+            observe_next[b] = commit.observe_next;
             observe_first[b] = base;
-            slot.pending = acc.bonus;
-            // only the newly appended tokens can contain a fresh EOS
-            let scan_from = slot.out.len();
-            slot.out.extend_from_slice(&acc_tokens);
-            if slot.req.cfg.stop_on_eos && !slot.eos_hit {
-                if let Some(p) = slot.out[scan_from..].iter().position(|&t| t == eos_tok) {
-                    slot.out.truncate(scan_from + p + 1);
-                    slot.eos_hit = true;
-                }
-            }
+            events.push(SlotEvent {
+                id: slot.req.id,
+                cycle: slot.cycle.metrics.cycles,
+                tokens: commit.committed,
+                accepted_len: acc.accepted_slots.len(),
+                finished: commit.finished,
+            });
         }
 
         // batched drafter observe over the newly committed anchors
@@ -577,9 +666,7 @@ impl BatchEngine {
         for b in 0..bsz {
             let done = match &self.slots[b] {
                 Some(slot) => {
-                    slot.eos_hit
-                        || slot.out.len() >= slot.req.cfg.max_new_tokens
-                        || self.kv.len(b) + m + 2 > s
+                    slot.cycle.finished() || self.kv.len(b) + m + 2 > s
                 }
                 None => false,
             };
@@ -587,59 +674,87 @@ impl BatchEngine {
                 let mut slot = self.slots[b].take().unwrap();
                 self.pool.release(&mut slot.lease);
                 self.kv.set_len(b, 0);
-                if let Some(dkv) = self.dkv.as_mut() {
-                    dkv.set_len(b, 0);
+                match slot.method {
+                    BatchMethod::FastEagle => {
+                        if let Some(dkv) = self.fe_dkv.as_mut() {
+                            dkv.set_len(b, 0);
+                        }
+                    }
+                    BatchMethod::Eagle3 => {
+                        if let Some(dkv) = self.eg_dkv.as_mut() {
+                            dkv.set_len(b, 0);
+                        }
+                    }
+                    BatchMethod::Vanilla => {}
                 }
-                slot.out.truncate(slot.req.cfg.max_new_tokens);
+                for ev in events.iter_mut().filter(|e| e.id == slot.req.id) {
+                    ev.finished = true;
+                }
+                let cycles = slot.cycle.metrics.cycles;
                 finished.push(Response {
                     id: slot.req.id,
-                    text: self.tokenizer.decode(&slot.out),
-                    new_tokens: slot.out.len(),
-                    tau: if slot.cycles > 0 {
-                        slot.tau_sum as f64 / slot.cycles as f64
-                    } else {
-                        0.0
-                    },
-                    cycles: slot.cycles,
+                    text: self.tokenizer.decode(&slot.cycle.out),
+                    new_tokens: slot.cycle.out.len(),
+                    tau: slot.cycle.metrics.tau(),
+                    cycles,
                     latency_ms: slot.req.arrival.elapsed().as_secs_f64() * 1e3,
                     gen_ms: slot.admitted_at.elapsed().as_secs_f64() * 1e3,
                     error: None,
                 });
             }
         }
-        Ok(finished)
+        Ok((finished, events))
     }
 
     /// Batched `observe` (FE cascade / EAGLE first-step) over each slot's
-    /// newly committed anchors, updating per-slot draft state.
+    /// newly committed anchors, one call per drafting method present in
+    /// the pool, updating per-slot draft state.
     fn batched_observe(
         &mut self,
         feats: &[Vec<f32>],
         next: &[Vec<i32>],
         first_pos: &[usize],
     ) -> Result<()> {
-        if matches!(self.cfg.method, BatchMethod::Vanilla) {
+        self.observe_method(BatchMethod::FastEagle, feats, next, first_pos)?;
+        self.observe_method(BatchMethod::Eagle3, feats, next, first_pos)
+    }
+
+    fn observe_method(
+        &mut self,
+        method: BatchMethod,
+        feats: &[Vec<f32>],
+        next: &[Vec<i32>],
+        first_pos: &[usize],
+    ) -> Result<()> {
+        if method == BatchMethod::Vanilla {
             return Ok(());
         }
         let bsz = self.cfg.batch;
         let fd = self.spec.feat_dim;
         let (v, d, c) = (self.spec.vocab, self.spec.d_model, self.spec.max_seq);
-        let n_max = next.iter().map(|x| x.len()).max().unwrap_or(0);
+        let members: Vec<usize> = (0..bsz)
+            .filter(|&b| {
+                matches!(&self.slots[b], Some(slot) if slot.method == method)
+                    && !next[b].is_empty()
+            })
+            .collect();
+        let n_max = members.iter().map(|&b| next[b].len()).max().unwrap_or(0);
         if n_max == 0 {
             return Ok(());
         }
         let t = if n_max > 8 { 32 } else if n_max > 1 { 8 } else { 1 };
         let suffix = self.exec_suffix();
-        let dkv = self.dkv.as_mut().unwrap();
+        let dkv = match method {
+            BatchMethod::FastEagle => self.fe_dkv.as_mut().expect("fe slot admitted"),
+            BatchMethod::Eagle3 => self.eg_dkv.as_mut().expect("eagle slot admitted"),
+            BatchMethod::Vanilla => unreachable!(),
+        };
         let mut feat_in = vec![0.0f32; bsz * t * fd];
         let mut toks = vec![self.spec.pad; bsz * t];
         let mut pos = vec![0i32; bsz * t];
         let mut ctx = vec![0i32; bsz];
         let mut rows: Vec<Vec<MaskRow>> = vec![vec![]; bsz];
-        for b in 0..bsz {
-            if self.slots[b].is_none() || next[b].is_empty() {
-                continue;
-            }
+        for &b in &members {
             let n = next[b].len();
             let base = dkv.len(b);
             ctx[b] = base as i32;
@@ -657,7 +772,7 @@ impl BatchEngine {
         let tok_t = HostTensor::i32(vec![bsz, t], toks);
         let pos_t = HostTensor::i32(vec![bsz, t], pos);
         let ctx_t = HostTensor::i32(vec![bsz], ctx);
-        match self.cfg.method {
+        match method {
             BatchMethod::FastEagle => {
                 let exec = self.store.bind(&format!("fe_t{t}{suffix}"), "fasteagle")?;
                 let outs = exec.call(
@@ -676,10 +791,7 @@ impl BatchEngine {
                 let ki = exec.out_idx("dkv")?;
                 let mut outs = outs;
                 dkv.update_from(outs.swap_remove(ki))?;
-                for b in 0..bsz {
-                    if self.slots[b].is_none() || next[b].is_empty() {
-                        continue;
-                    }
+                for &b in &members {
                     let n = next[b].len();
                     let row = b * t + (n - 1);
                     let slot = self.slots[b].as_mut().unwrap();
@@ -707,10 +819,7 @@ impl BatchEngine {
                 let ki = exec.out_idx("ekv")?;
                 let mut outs = outs;
                 dkv.update_from(outs.swap_remove(ki))?;
-                for b in 0..bsz {
-                    if self.slots[b].is_none() || next[b].is_empty() {
-                        continue;
-                    }
+                for &b in &members {
                     let n = next[b].len();
                     let row = b * t + (n - 1);
                     let slot = self.slots[b].as_mut().unwrap();
@@ -731,6 +840,13 @@ impl BatchEngine {
     /// — queue wait, deferrals, occupancy, time-to-first-cycle,
     /// completions — are recorded into `metrics`.
     pub fn step(&mut self, metrics: &mut ServingMetrics) -> Result<Vec<Response>> {
+        Ok(self.step_events(metrics)?.finished)
+    }
+
+    /// Like [`step`](Self::step), but additionally reports every active
+    /// slot's per-cycle [`SlotEvent`] — the engine-side source of the
+    /// protocol's streaming `tokens` frames.
+    pub fn step_events(&mut self, metrics: &mut ServingMetrics) -> Result<StepOutcome> {
         // admission pass: fill free slots from the head of the queue. An
         // admit failure (artifact/executable error) answers that request
         // with an error response instead of poisoning the engine; its
@@ -740,10 +856,14 @@ impl BatchEngine {
             if self.slots[b].is_some() {
                 continue;
             }
-            let Some(front_id) = self.pending.front().map(|r| r.id) else {
+            let Some((front_id, front_method)) = self
+                .pending
+                .front()
+                .map(|r| (r.id, self.method_of(r)))
+            else {
                 break;
             };
-            let cost = self.request_blocks();
+            let cost = self.request_blocks(front_method);
             let Some(mut lease) =
                 self.ledger.try_admit(&mut self.pool, cost, front_id, metrics)
             else {
@@ -765,10 +885,10 @@ impl BatchEngine {
             }
         }
         if self.slots.iter().all(|s| s.is_none()) {
-            return Ok(failed);
+            return Ok(StepOutcome { finished: failed, events: Vec::new() });
         }
         metrics.record_occupancy(self.active_len());
-        let mut finished = self.decode_iteration(metrics)?;
+        let (mut finished, events) = self.decode_iteration(metrics)?;
         for r in &finished {
             metrics.record_done(
                 r.new_tokens,
@@ -778,7 +898,7 @@ impl BatchEngine {
             );
         }
         finished.append(&mut failed);
-        Ok(finished)
+        Ok(StepOutcome { finished, events })
     }
 
     /// True when the last step made no progress and never can: it
@@ -799,7 +919,10 @@ impl BatchEngine {
             if let Some(mut slot) = self.slots[b].take() {
                 self.pool.release(&mut slot.lease);
                 self.kv.set_len(b, 0);
-                if let Some(dkv) = self.dkv.as_mut() {
+                if let Some(dkv) = self.fe_dkv.as_mut() {
+                    dkv.set_len(b, 0);
+                }
+                if let Some(dkv) = self.eg_dkv.as_mut() {
                     dkv.set_len(b, 0);
                 }
                 ids.push(slot.req.id);
@@ -867,6 +990,14 @@ mod tests {
         assert_eq!(BatchMethod::Vanilla.drafter_kv_layers(&spec), 0);
         assert_eq!(BatchMethod::Eagle3.drafter_kv_layers(&spec), 1);
         assert_eq!(BatchMethod::FastEagle.drafter_kv_layers(&spec), spec.draft_depth);
+    }
+
+    #[test]
+    fn method_names_roundtrip() {
+        for m in [BatchMethod::Vanilla, BatchMethod::FastEagle, BatchMethod::Eagle3] {
+            assert_eq!(BatchMethod::from_name(m.name()), Some(m));
+        }
+        assert_eq!(BatchMethod::from_name("medusa"), None);
     }
 
     /// Admitting more requests than the KV pool covers counts each

@@ -7,7 +7,7 @@ pub mod queue;
 pub mod request;
 pub mod server;
 
-pub use batcher::{BatchConfig, BatchEngine, BatchMethod};
+pub use batcher::{BatchConfig, BatchEngine, BatchMethod, SlotEvent, StepOutcome};
 pub use metrics::ServingMetrics;
 pub use queue::{AdmissionQueue, PushError};
 pub use request::{Request, Response};

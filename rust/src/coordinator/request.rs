@@ -5,11 +5,18 @@ use std::time::Instant;
 use crate::spec::GenConfig;
 use crate::util::json::Json;
 
+use super::batcher::BatchMethod;
+
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub prompt: String,
     pub cfg: GenConfig,
+    /// speculative method for this request; `None` uses the engine's
+    /// default — one pool can serve mixed-method fleets
+    pub method: Option<BatchMethod>,
+    /// opt-in incremental `{"event":"tokens",...}` frames per cycle
+    pub stream: bool,
     pub arrival: Instant,
 }
 
@@ -19,17 +26,21 @@ impl Request {
             id,
             prompt: prompt.into(),
             cfg: GenConfig::default(),
+            method: None,
+            stream: false,
             arrival: Instant::now(),
         }
     }
 
     /// Parse an API request line: {"prompt": "...", "max_new": 64,
-    /// "temperature": 0.0, "seed": 1}.
+    /// "temperature": 0.0, "seed": 1, "method": "fasteagle",
+    /// "stream": false}.
     ///
     /// An explicit `seed` pins the sampling stream (same seed + prompt
     /// reproduces exactly); omitting it derives a per-request seed from
     /// the id so concurrent stochastic requests sample diversely
-    /// instead of all sharing the default-0 stream.
+    /// instead of all sharing the default-0 stream. An unknown `method`
+    /// value falls back to the server's default method.
     pub fn from_json(id: u64, v: &Json) -> Option<Request> {
         let prompt = v.get("prompt")?.as_str()?.to_string();
         let mut cfg = GenConfig::default();
@@ -46,7 +57,12 @@ impl Request {
         if let Some(e) = v.get("stop_on_eos").and_then(Json::as_bool) {
             cfg.stop_on_eos = e;
         }
-        Some(Request { id, prompt, cfg, arrival: Instant::now() })
+        let method = v
+            .get("method")
+            .and_then(Json::as_str)
+            .and_then(BatchMethod::from_name);
+        let stream = v.get("stream").and_then(Json::as_bool).unwrap_or(false);
+        Some(Request { id, prompt, cfg, method, stream, arrival: Instant::now() })
     }
 }
 
@@ -107,7 +123,20 @@ mod tests {
         assert_eq!(r.prompt, "hi");
         assert_eq!(r.cfg.max_new_tokens, 10);
         assert!((r.cfg.temperature - 1.0).abs() < 1e-6);
+        assert_eq!(r.method, None);
+        assert!(!r.stream);
         assert!(Request::from_json(0, &Json::parse("{}").unwrap()).is_none());
+    }
+
+    #[test]
+    fn request_method_and_stream_flags() {
+        let v = Json::parse(r#"{"prompt":"p","method":"vanilla","stream":true}"#).unwrap();
+        let r = Request::from_json(1, &v).unwrap();
+        assert_eq!(r.method, Some(BatchMethod::Vanilla));
+        assert!(r.stream);
+        // unknown method values fall back to the engine default
+        let v = Json::parse(r#"{"prompt":"p","method":"warp-drive"}"#).unwrap();
+        assert_eq!(Request::from_json(2, &v).unwrap().method, None);
     }
 
     #[test]

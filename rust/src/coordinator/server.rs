@@ -5,21 +5,28 @@
 //! single-scheduler design).
 //!
 //! The engine thread drains the bounded [`AdmissionQueue`] into
-//! [`BatchEngine::step`], so up to `batch` requests decode concurrently
-//! and each connection is answered the moment its slot completes —
-//! requests finish out of admission order when their lengths differ.
+//! [`BatchEngine::step_events`], so up to `batch` requests decode
+//! concurrently and each connection is answered the moment its slot
+//! completes — requests finish out of admission order when their
+//! lengths differ. A request with `"stream": true` additionally
+//! receives one `{"event":"tokens",...}` frame per decode cycle before
+//! its final response — the per-cycle [`SlotEvent`]s the engine already
+//! produces, forwarded over the same connection.
 //! Back-pressure is two-staged: the engine keeps at most `batch`
 //! requests internally; everything beyond that waits in the bounded
 //! queue, and past its capacity `try_push` sheds with a "queue full"
 //! reply (HTTP-429 analogue) distinct from the shutdown path.
 //!
 //! Protocol (one JSON object per line):
-//!   -> {"prompt": "...", "max_new": 64, "temperature": 0.0, "seed": 1}
+//!   -> {"prompt": "...", "max_new": 64, "temperature": 0.0, "seed": 1,
+//!       "method": "fasteagle", "stream": false}
+//!   <- {"event": "tokens", "id": .., "cycle": .., "tokens": [..],
+//!       "text": "..", "accepted": ..}    (per cycle, stream mode only)
 //!   <- {"id": .., "text": "...", "tau": .., "new_tokens": .., ...}
 //!   -> {"cmd": "stats"}   <- serving metrics
 //!   -> {"cmd": "shutdown"}
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -30,12 +37,30 @@ use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
-use super::batcher::BatchEngine;
+use super::batcher::{BatchEngine, SlotEvent};
 use super::metrics::ServingMetrics;
 use super::queue::{AdmissionQueue, PushError};
 use super::request::{Request, Response};
 
-type ReplyTx = std::sync::mpsc::Sender<Response>;
+/// What the engine thread sends back per request: zero or more
+/// streaming frames, then exactly one final response.
+enum Reply {
+    Frame(Json),
+    Done(Response),
+}
+
+type ReplyTx = std::sync::mpsc::Sender<Reply>;
+
+fn frame_json(ev: &SlotEvent, text: &str) -> Json {
+    Json::obj(vec![
+        ("event", Json::str("tokens")),
+        ("id", Json::num(ev.id as f64)),
+        ("cycle", Json::num(ev.cycle as f64)),
+        ("tokens", Json::Arr(ev.tokens.iter().map(|&t| Json::num(t as f64)).collect())),
+        ("text", Json::str(text)),
+        ("accepted", Json::num(ev.accepted_len as f64)),
+    ])
+}
 
 pub struct ServerConfig {
     pub addr: String,
@@ -75,7 +100,7 @@ impl Server {
             TcpListener::bind(&self.cfg.addr).with_context(|| self.cfg.addr.clone())?;
         listener.set_nonblocking(true)?;
         crate::log_info!(
-            "serving {} (method={}, batch={}) on {}",
+            "serving {} (default method={}, batch={}) on {}",
             engine.spec.name,
             engine.method().name(),
             engine.batch(),
@@ -111,8 +136,10 @@ impl Server {
         });
 
         // engine loop (this thread): drain the admission queue into the
-        // batcher, step it, reply per-slot as requests complete
+        // batcher, step it, reply per-slot as requests complete — and
+        // forward per-cycle token frames to streaming requests
         let mut inflight: HashMap<u64, ReplyTx> = HashMap::new();
+        let mut streaming: HashSet<u64> = HashSet::new();
         while !self.shutdown.load(Ordering::Relaxed) {
             // admit up to the engine's slot count; the rest stays in the
             // bounded queue so capacity shedding keeps working
@@ -125,6 +152,9 @@ impl Server {
                 }
             }
             for (req, tx) in drained {
+                if req.stream {
+                    streaming.insert(req.id);
+                }
                 inflight.insert(req.id, tx);
                 engine.submit(req);
             }
@@ -134,14 +164,29 @@ impl Server {
             // record into a local delta so conn threads (stats, shed
             // counting) never wait a whole decode iteration for the lock
             let mut delta = ServingMetrics::default();
-            let step = engine.step(&mut delta);
+            let step = engine.step_events(&mut delta);
             self.metrics.lock().unwrap().merge(&delta);
             match step {
-                Ok(done) => {
+                Ok(outcome) => {
+                    // per-cycle frames first, so every frame of a request
+                    // precedes its final response on the wire; decode
+                    // only for streaming requests so everyone else pays
+                    // nothing per cycle
+                    for ev in &outcome.events {
+                        if ev.tokens.is_empty() || !streaming.contains(&ev.id) {
+                            continue;
+                        }
+                        if let Some(tx) = inflight.get(&ev.id) {
+                            let text = engine.decode(&ev.tokens);
+                            let _ = tx.send(Reply::Frame(frame_json(ev, &text)));
+                        }
+                    }
+                    let done = outcome.finished;
                     let stalled = engine.stalled(&done);
                     for resp in done {
+                        streaming.remove(&resp.id);
                         if let Some(tx) = inflight.remove(&resp.id) {
-                            let _ = tx.send(resp);
+                            let _ = tx.send(Reply::Done(resp));
                         }
                     }
                     // a stalled engine means the head request can never
@@ -151,11 +196,12 @@ impl Server {
                         let ids = engine.abort_all();
                         self.metrics.lock().unwrap().requests_failed += ids.len() as u64;
                         for id in ids {
+                            streaming.remove(&id);
                             if let Some(tx) = inflight.remove(&id) {
-                                let _ = tx.send(Response::error(
+                                let _ = tx.send(Reply::Done(Response::error(
                                     id,
                                     "request exceeds KV pool capacity",
-                                ));
+                                )));
                             }
                         }
                     }
@@ -165,8 +211,9 @@ impl Server {
                     let ids = engine.abort_all();
                     self.metrics.lock().unwrap().requests_failed += ids.len() as u64;
                     for id in ids {
+                        streaming.remove(&id);
                         if let Some(tx) = inflight.remove(&id) {
-                            let _ = tx.send(Response::error(id, format!("{e:#}")));
+                            let _ = tx.send(Reply::Done(Response::error(id, format!("{e:#}"))));
                         }
                     }
                 }
@@ -295,16 +342,23 @@ fn handle_conn(
                         return Ok(());
                     }
                 }
-                match rx.recv() {
-                    Ok(resp) => writeln!(writer, "{}", resp.to_json().to_string())?,
-                    Err(_) => {
-                        writeln!(
-                            writer,
-                            "{}",
-                            Json::obj(vec![("error", Json::str("server shutting down"))])
-                                .to_string()
-                        )?;
-                        return Ok(());
+                // zero or more streaming frames, then the final response
+                loop {
+                    match rx.recv() {
+                        Ok(Reply::Frame(j)) => writeln!(writer, "{}", j.to_string())?,
+                        Ok(Reply::Done(resp)) => {
+                            writeln!(writer, "{}", resp.to_json().to_string())?;
+                            break;
+                        }
+                        Err(_) => {
+                            writeln!(
+                                writer,
+                                "{}",
+                                Json::obj(vec![("error", Json::str("server shutting down"))])
+                                    .to_string()
+                            )?;
+                            return Ok(());
+                        }
                     }
                 }
             }

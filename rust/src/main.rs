@@ -17,7 +17,7 @@
 use std::rc::Rc;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use fasteagle::backend::BackendKind;
 use fasteagle::coordinator::{BatchConfig, BatchEngine, BatchMethod, Request, Server, ServerConfig};
@@ -106,12 +106,8 @@ fn batch_method(args: &Args) -> Result<BatchMethod> {
     // --method preferred; --drafter kept as an alias from the
     // single-engine serve days
     let name = args.str_or("method", &args.str_or("drafter", "fasteagle"));
-    Ok(match name.as_str() {
-        "vanilla" => BatchMethod::Vanilla,
-        "eagle3" => BatchMethod::Eagle3,
-        "fasteagle" => BatchMethod::FastEagle,
-        other => bail!("unknown batch method {other:?}"),
-    })
+    BatchMethod::from_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown batch method {name:?}"))
 }
 
 fn batch_config(args: &Args) -> Result<BatchConfig> {

@@ -1,6 +1,7 @@
 //! Single-request generation engine: the paper's §2.4 inference pipeline.
 //!
-//! Per cycle:
+//! Per cycle (see [`super::session`] — the cycle state machine itself
+//! lives there, shared with the continuous batcher):
 //! 1. **Non-autoregressive drafting** — the drafter emits per-level
 //!    distributions; Backbone Expansion builds the constrained tree with
 //!    the pending token as root.
@@ -10,18 +11,18 @@
 //! 3. **Update** — accepted rows are compacted into the canonical KV
 //!    prefix, the drafter observes the newly-committed anchors (real
 //!    verified features), and the bonus becomes the next pending token.
-
-use std::time::Instant;
+//!
+//! [`Engine::generate`] is a thin drain-the-session wrapper over
+//! [`GenSession`]; callers that want per-cycle control (streaming,
+//! adaptive draft schedules) use [`Engine::start_session`] directly.
 
 use anyhow::Result;
 
-use crate::draft::{DraftOutput, Drafter, ObserveArgs};
-use crate::model::{KvCache, MaskRow, TargetModel, Tokenizer};
+use crate::draft::Drafter;
+use crate::model::{TargetModel, Tokenizer};
 
-use super::accept::verify_tree;
 use super::metrics::GenMetrics;
-use super::sampler::Sampler;
-use super::tree::DraftTree;
+use super::session::GenSession;
 
 #[derive(Debug, Clone)]
 pub struct GenConfig {
@@ -68,153 +69,19 @@ impl Engine {
         Engine { target, drafter, tokenizer }
     }
 
+    /// Begin a resumable session: prefill now, then one cycle per
+    /// [`GenSession::step`].
+    pub fn start_session(&mut self, prompt: &str, cfg: &GenConfig) -> Result<GenSession<'_>> {
+        GenSession::new(&self.target, &mut self.drafter, self.tokenizer, prompt, cfg)
+    }
+
+    /// Blocking generation: drain a session to completion.
     pub fn generate(&mut self, prompt: &str, cfg: &GenConfig) -> Result<GenResult> {
-        let t_start = Instant::now();
-        let mut metrics = GenMetrics::default();
-        let spec = self.target.spec.clone();
-        let fd = spec.feat_dim;
-        let mut sampler = Sampler::new(cfg.temperature, cfg.seed);
-        self.drafter.reset()?;
-        let mut kv: KvCache = self.target.new_kv()?;
-
-        // prompt, truncated so the worst-case cycle still fits in max_seq
-        let mut ptoks = self.tokenizer.encode_prompt(prompt);
-        let budget = spec
-            .max_seq
-            .saturating_sub(cfg.max_new_tokens + spec.tree_nodes + 2);
-        if ptoks.len() > budget {
-            ptoks = ptoks[ptoks.len() - budget..].to_vec();
+        let mut session =
+            GenSession::new(&self.target, &mut self.drafter, self.tokenizer, prompt, cfg)?;
+        while !session.finished() {
+            session.step()?;
         }
-        metrics.prompt_tokens = ptoks.len();
-
-        // 1. prefill + initial pending token
-        let pre = {
-            let _g = metrics.timer.start("prefill");
-            self.target.prefill(&mut kv, &ptoks)?
-        };
-        let first_dist = sampler.dist_from_logits(&pre.last_logits);
-        let mut pending = sampler.sample(&first_dist);
-        {
-            let _g = metrics.timer.start("observe");
-            let mut next: Vec<i32> = ptoks[1..].to_vec();
-            next.push(pending);
-            self.drafter.observe(ObserveArgs {
-                feats: &pre.feats,
-                anchor_tokens: &ptoks,
-                next_tokens: &next,
-                first_pos: 0,
-            })?;
-        }
-
-        let mut out_tokens: Vec<i32> = Vec::with_capacity(cfg.max_new_tokens);
-        let eff_k = if cfg.use_tree { spec.tree_top_k } else { 1 };
-
-        'outer: while out_tokens.len() < cfg.max_new_tokens {
-            let c = kv.len(0);
-            // capacity guard: pending + tree rows must fit
-            if c + spec.tree_nodes + 2 > spec.max_seq {
-                break;
-            }
-            // 2. draft
-            let draft_out = {
-                let _g = metrics.timer.start("draft");
-                self.drafter.draft(pending, c - 1, cfg.temperature)?
-            };
-            let tree = {
-                let _g = metrics.timer.start("tree");
-                match draft_out {
-                    DraftOutput::Levels(mut dists) => {
-                        if let Some(d) = cfg.max_depth {
-                            dists.truncate(d);
-                        }
-                        if sampler.greedy() {
-                            DraftTree::backbone_expansion(pending, dists, eff_k)
-                        } else {
-                            // stochastic: candidates must be q-samples
-                            // without replacement for lossless acceptance
-                            DraftTree::backbone_expansion_sampled(
-                                pending, dists, eff_k, sampler.rng_mut())
-                        }
-                    }
-                    DraftOutput::Chain(mut toks, mut dists) => {
-                        if let Some(d) = cfg.max_depth {
-                            toks.truncate(d);
-                            dists.truncate(d);
-                        }
-                        DraftTree::chain(pending, &toks, dists)
-                    }
-                    DraftOutput::None => DraftTree::root_only(pending),
-                }
-            };
-            // 3. verify
-            let tokens = tree.tokens();
-            let positions: Vec<i32> =
-                tree.depths().iter().map(|&d| (c + d) as i32).collect();
-            let rows: Vec<MaskRow> = (0..tree.len())
-                .map(|i| MaskRow {
-                    prefix_upto: c,
-                    extra: tree.ancestors(i).iter().map(|&s| c + s).collect(),
-                })
-                .collect();
-            let vout = {
-                let _g = metrics.timer.start("verify");
-                self.target.step(&mut kv, &tokens, &positions, &rows)?
-            };
-            let v = spec.vocab;
-
-            // 4. accept (lossless)
-            let accept = {
-                let _g = metrics.timer.start("accept");
-                let target_dists: Vec<Vec<f32>> = (0..tree.len())
-                    .map(|i| sampler.dist_from_logits(&vout.logits[i * v..(i + 1) * v]))
-                    .collect();
-                verify_tree(&tree, &target_dists, &mut sampler)
-            };
-            metrics.record_cycle(accept.accepted_slots.len(), &accept.depth_events);
-
-            // 5. commit: compact accepted rows into the canonical prefix
-            {
-                let _g = metrics.timer.start("commit");
-                kv.compact(0, c, &accept.accepted_slots)?;
-            }
-            let accepted_tokens: Vec<i32> = accept
-                .accepted_slots
-                .iter()
-                .map(|&s| tree.nodes[s].token)
-                .collect();
-
-            // 6. drafter observes the new anchors (verified features)
-            {
-                let _g = metrics.timer.start("observe");
-                let mut feats = Vec::with_capacity(accept.accepted_slots.len() * fd);
-                for &s in &accept.accepted_slots {
-                    feats.extend_from_slice(&vout.feats[s * fd..(s + 1) * fd]);
-                }
-                let mut next: Vec<i32> = accepted_tokens[1..].to_vec();
-                next.push(accept.bonus);
-                self.drafter.observe(ObserveArgs {
-                    feats: &feats,
-                    anchor_tokens: &accepted_tokens,
-                    next_tokens: &next,
-                    first_pos: c,
-                })?;
-            }
-
-            pending = accept.bonus;
-            for t in accepted_tokens {
-                out_tokens.push(t);
-                if cfg.stop_on_eos && t == spec.eos {
-                    break 'outer;
-                }
-                if out_tokens.len() >= cfg.max_new_tokens {
-                    break 'outer;
-                }
-            }
-        }
-
-        metrics.new_tokens = out_tokens.len();
-        metrics.wall = t_start.elapsed();
-        let text = self.tokenizer.decode(&out_tokens);
-        Ok(GenResult { tokens: out_tokens, text, metrics })
+        Ok(session.finish())
     }
 }

@@ -1,0 +1,512 @@
+//! Resumable, step-driven generation: the draft → verify → commit
+//! *cycle* as the public unit of progress.
+//!
+//! FastEagle's single-pass cascade makes the cycle the natural
+//! scheduling quantum, and per-cycle control is what streaming partial
+//! tokens and adaptive draft structures (AdaEAGLE-style) hang off. This
+//! module is the **single home of the cycle state machine**:
+//!
+//! * [`SlotCycle`] — the per-request cycle core (sampler, pending/root
+//!   token, committed output, eos/max_new termination, metrics). Both
+//!   the single-request [`GenSession`] and every continuous-batcher
+//!   slot drive one, so the EAGLE-family observe/accept contract lives
+//!   in exactly one place.
+//! * [`GenSession`] — a resumable session over a target + drafter:
+//!   `Engine::start_session(..)` then repeated [`GenSession::step`],
+//!   each returning a [`CycleEvent`] with the tokens committed that
+//!   cycle. `Engine::generate` is a thin drain-the-session wrapper.
+//! * [`prompt_budget`] / [`truncate_prompt`] / [`verify_rows`] — the
+//!   shared prompt-truncation and tree→verification-row plumbing.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::draft::{DraftOutput, Drafter, ObserveArgs};
+use crate::model::{KvCache, MaskRow, ModelSpec, TargetModel, Tokenizer};
+
+use super::accept::{verify_tree, AcceptResult};
+use super::engine::{GenConfig, GenResult};
+use super::metrics::GenMetrics;
+use super::sampler::Sampler;
+use super::tree::DraftTree;
+
+/// What one cycle produced. `committed_tokens` is exactly the slice
+/// appended to the request's output this cycle (post eos/max_new
+/// truncation), so concatenating events reproduces the final token
+/// stream byte-for-byte.
+#[derive(Debug, Clone)]
+pub struct CycleEvent {
+    pub committed_tokens: Vec<i32>,
+    /// bonus token sampled from the target at the last accepted node
+    /// (next cycle's pending/root token)
+    pub bonus: i32,
+    /// accepted path length including the root
+    pub accepted_len: usize,
+    /// (depth, accepted?) walk events (Fig. 3 instrumentation)
+    pub depth_events: Vec<(usize, bool)>,
+    pub finished: bool,
+}
+
+impl CycleEvent {
+    fn noop(pending: i32) -> CycleEvent {
+        CycleEvent {
+            committed_tokens: Vec::new(),
+            bonus: pending,
+            accepted_len: 0,
+            depth_events: Vec::new(),
+            finished: true,
+        }
+    }
+}
+
+/// What [`SlotCycle::commit`] decided for one cycle.
+#[derive(Debug, Clone)]
+pub struct CycleCommit {
+    /// full accepted path tokens (root first) — the drafter's new anchors
+    pub accepted_tokens: Vec<i32>,
+    /// token_{j+1} per anchor (bonus closes the last pair) — the
+    /// drafter-observe `next_tokens` contract
+    pub observe_next: Vec<i32>,
+    /// tokens actually appended to the output this cycle
+    pub committed: Vec<i32>,
+    pub finished: bool,
+}
+
+/// Prompt-token budget so the worst-case cycle still fits in `max_seq`:
+/// the committed output plus `worst_case_rows` temporary verification
+/// rows. The single-request engine passes `tree_nodes + 2`, the batched
+/// lane `chain_len + 3`.
+pub fn prompt_budget(max_seq: usize, max_new_tokens: usize, worst_case_rows: usize) -> usize {
+    max_seq.saturating_sub(max_new_tokens + worst_case_rows)
+}
+
+/// Keep the newest `budget` prompt tokens (prompts are truncated from
+/// the front so the generation context survives).
+pub fn truncate_prompt(ptoks: &mut Vec<i32>, budget: usize) {
+    if ptoks.len() > budget {
+        *ptoks = ptoks[ptoks.len() - budget..].to_vec();
+    }
+}
+
+/// (tokens, positions, mask rows) for one tree verification with the
+/// canonical prefix ending at `base`. Slot i's row sees the prefix plus
+/// its own ancestor chain in the temp region — the tree-attention mask.
+pub fn verify_rows(
+    tree: &DraftTree,
+    base: usize,
+    max_seq: usize,
+) -> (Vec<i32>, Vec<i32>, Vec<MaskRow>) {
+    let tokens = tree.tokens();
+    let positions: Vec<i32> = tree
+        .depths()
+        .iter()
+        .map(|&d| ((base + d) as i32).min(max_seq as i32 - 1))
+        .collect();
+    let rows: Vec<MaskRow> = (0..tree.len())
+        .map(|i| MaskRow {
+            prefix_upto: base,
+            extra: tree.ancestors(i).iter().map(|&s| base + s).collect(),
+        })
+        .collect();
+    (tokens, positions, rows)
+}
+
+/// Per-request cycle state shared by [`GenSession`] (B=1) and the
+/// continuous batcher's slots: per-request sampler, pending token,
+/// committed output and termination bookkeeping. Everything a request
+/// carries *between* cycles, independent of how the forward passes are
+/// batched.
+#[derive(Debug, Clone)]
+pub struct SlotCycle {
+    pub cfg: GenConfig,
+    pub sampler: Sampler,
+    /// next cycle's root: always a true target-distribution sample
+    pub pending: i32,
+    /// committed tokens beyond the prompt
+    pub out: Vec<i32>,
+    pub metrics: GenMetrics,
+    pub eos_hit: bool,
+    finished: bool,
+}
+
+impl SlotCycle {
+    /// Start a request's cycle state from the prefill's last-token
+    /// logits: seeds the per-request sampler and draws the first
+    /// pending token.
+    pub fn start(cfg: GenConfig, last_logits: &[f32]) -> SlotCycle {
+        let mut sampler = Sampler::new(cfg.temperature, cfg.seed);
+        let d0 = sampler.dist_from_logits(last_logits);
+        let pending = sampler.sample(&d0);
+        let finished = cfg.max_new_tokens == 0;
+        SlotCycle {
+            cfg,
+            sampler,
+            pending,
+            out: Vec::new(),
+            metrics: GenMetrics::default(),
+            eos_hit: false,
+            finished,
+        }
+    }
+
+    pub fn finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Terminate externally (capacity exhaustion, abort).
+    pub fn finish(&mut self) {
+        self.finished = true;
+    }
+
+    /// Build this cycle's constrained tree from a drafter's output —
+    /// the one home of `max_depth` truncation and of the greedy-top-k
+    /// vs sampled-without-replacement candidate rule.
+    pub fn build_tree(&mut self, draft: DraftOutput, k: usize) -> DraftTree {
+        let _g = self.metrics.timer.start("tree");
+        DraftTree::from_draft(self.pending, draft, k, self.cfg.max_depth, &mut self.sampler)
+    }
+
+    /// Lossless acceptance over `logits` (row-major, one `vocab`-sized
+    /// row per tree slot). Records the cycle into the metrics.
+    pub fn accept(&mut self, tree: &DraftTree, logits: &[f32], vocab: usize) -> AcceptResult {
+        let acc = {
+            let _g = self.metrics.timer.start("accept");
+            let target_dists: Vec<Vec<f32>> = (0..tree.len())
+                .map(|i| self.sampler.dist_from_logits(&logits[i * vocab..(i + 1) * vocab]))
+                .collect();
+            verify_tree(tree, &target_dists, &mut self.sampler)
+        };
+        self.metrics
+            .record_cycle(acc.accepted_slots.len(), &acc.depth_events);
+        acc
+    }
+
+    /// Fold an acceptance into the request: append the accepted path to
+    /// the output (honoring `stop_on_eos` and `max_new_tokens`), advance
+    /// the pending token to the bonus, and report what this cycle
+    /// committed plus the drafter-observe token pairs.
+    pub fn commit(&mut self, tree: &DraftTree, acc: &AcceptResult, eos: i32) -> CycleCommit {
+        let accepted_tokens: Vec<i32> = acc
+            .accepted_slots
+            .iter()
+            .map(|&s| tree.nodes[s].token)
+            .collect();
+        let mut observe_next: Vec<i32> = accepted_tokens[1..].to_vec();
+        observe_next.push(acc.bonus);
+        self.pending = acc.bonus;
+        let start = self.out.len();
+        self.out.extend_from_slice(&accepted_tokens);
+        if self.cfg.stop_on_eos && !self.eos_hit {
+            if let Some(p) = self.out[start..].iter().position(|&t| t == eos) {
+                self.out.truncate(start + p + 1);
+                self.eos_hit = true;
+            }
+        }
+        if self.out.len() >= self.cfg.max_new_tokens {
+            self.out.truncate(self.cfg.max_new_tokens);
+            self.finished = true;
+        }
+        if self.eos_hit {
+            self.finished = true;
+        }
+        CycleCommit {
+            accepted_tokens,
+            observe_next,
+            committed: self.out[start..].to_vec(),
+            finished: self.finished,
+        }
+    }
+}
+
+/// A resumable single-request generation session: prefill happens in
+/// [`GenSession::new`], then each [`step`](GenSession::step) runs one
+/// draft → verify → commit cycle and yields a [`CycleEvent`]. Dropping
+/// the session abandons the generation; [`finish`](GenSession::finish)
+/// assembles the same [`GenResult`] the blocking `Engine::generate`
+/// returns.
+pub struct GenSession<'e> {
+    target: &'e TargetModel,
+    drafter: &'e mut Box<dyn Drafter>,
+    tokenizer: Tokenizer,
+    spec: ModelSpec,
+    kv: KvCache,
+    pub cycle: SlotCycle,
+    eff_k: usize,
+    t_start: Instant,
+    sealed: bool,
+}
+
+impl<'e> GenSession<'e> {
+    pub fn new(
+        target: &'e TargetModel,
+        drafter: &'e mut Box<dyn Drafter>,
+        tokenizer: Tokenizer,
+        prompt: &str,
+        cfg: &GenConfig,
+    ) -> Result<GenSession<'e>> {
+        let t_start = Instant::now();
+        let spec = target.spec.clone();
+        let mut metrics = GenMetrics::default();
+        drafter.reset()?;
+        let mut kv = target.new_kv()?;
+
+        // prompt, truncated so the worst-case cycle still fits in max_seq
+        let mut ptoks = tokenizer.encode_prompt(prompt);
+        let budget = prompt_budget(spec.max_seq, cfg.max_new_tokens, spec.tree_nodes + 2);
+        truncate_prompt(&mut ptoks, budget);
+        metrics.prompt_tokens = ptoks.len();
+
+        // prefill + initial pending token
+        let pre = {
+            let _g = metrics.timer.start("prefill");
+            target.prefill(&mut kv, &ptoks)?
+        };
+        let mut cycle = SlotCycle::start(cfg.clone(), &pre.last_logits);
+        cycle.metrics = metrics;
+        {
+            let _g = cycle.metrics.timer.start("observe");
+            let mut next: Vec<i32> = ptoks[1..].to_vec();
+            next.push(cycle.pending);
+            drafter.observe(ObserveArgs {
+                feats: &pre.feats,
+                anchor_tokens: &ptoks,
+                next_tokens: &next,
+                first_pos: 0,
+            })?;
+        }
+        let eff_k = if cfg.use_tree { spec.tree_top_k } else { 1 };
+        Ok(GenSession {
+            target,
+            drafter,
+            tokenizer,
+            spec,
+            kv,
+            cycle,
+            eff_k,
+            t_start,
+            sealed: false,
+        })
+    }
+
+    pub fn finished(&self) -> bool {
+        self.cycle.finished()
+    }
+
+    /// Committed tokens so far.
+    pub fn tokens(&self) -> &[i32] {
+        &self.cycle.out
+    }
+
+    pub fn metrics(&self) -> &GenMetrics {
+        &self.cycle.metrics
+    }
+
+    fn seal(&mut self) {
+        if !self.sealed {
+            self.cycle.metrics.new_tokens = self.cycle.out.len();
+            self.cycle.metrics.wall = self.t_start.elapsed();
+            self.sealed = true;
+        }
+    }
+
+    /// Run one draft → verify → commit cycle. On a finished session this
+    /// is a no-op event with `finished: true`.
+    pub fn step(&mut self) -> Result<CycleEvent> {
+        if self.cycle.finished() {
+            self.seal();
+            return Ok(CycleEvent::noop(self.cycle.pending));
+        }
+        let c = self.kv.len(0);
+        // capacity guard: pending + tree rows must fit
+        if c + self.spec.tree_nodes + 2 > self.spec.max_seq {
+            self.cycle.finish();
+            self.seal();
+            return Ok(CycleEvent::noop(self.cycle.pending));
+        }
+
+        // 1. draft
+        let draft_out = {
+            let _g = self.cycle.metrics.timer.start("draft");
+            self.drafter
+                .draft(self.cycle.pending, c - 1, self.cycle.cfg.temperature)?
+        };
+        let tree = self.cycle.build_tree(draft_out, self.eff_k);
+
+        // 2. verify: one target forward over all tree rows
+        let (tokens, positions, rows) = verify_rows(&tree, c, self.spec.max_seq);
+        let vout = {
+            let _g = self.cycle.metrics.timer.start("verify");
+            self.target.step(&mut self.kv, &tokens, &positions, &rows)?
+        };
+
+        // 3. accept (lossless)
+        let accept = self.cycle.accept(&tree, &vout.logits, self.spec.vocab);
+
+        // 4. commit: compact accepted rows into the canonical prefix
+        {
+            let _g = self.cycle.metrics.timer.start("commit");
+            self.kv.compact(0, c, &accept.accepted_slots)?;
+        }
+        let commit = self.cycle.commit(&tree, &accept, self.spec.eos);
+
+        // 5. drafter observes the new anchors (verified features)
+        {
+            let _g = self.cycle.metrics.timer.start("observe");
+            let fd = self.spec.feat_dim;
+            let mut feats = Vec::with_capacity(accept.accepted_slots.len() * fd);
+            for &s in &accept.accepted_slots {
+                feats.extend_from_slice(&vout.feats[s * fd..(s + 1) * fd]);
+            }
+            self.drafter.observe(ObserveArgs {
+                feats: &feats,
+                anchor_tokens: &commit.accepted_tokens,
+                next_tokens: &commit.observe_next,
+                first_pos: c,
+            })?;
+        }
+        if self.cycle.finished() {
+            self.seal();
+        }
+        Ok(CycleEvent {
+            committed_tokens: commit.committed,
+            bonus: accept.bonus,
+            accepted_len: accept.accepted_slots.len(),
+            depth_events: accept.depth_events,
+            finished: self.cycle.finished(),
+        })
+    }
+
+    /// Consume the session into the blocking-API result.
+    pub fn finish(mut self) -> GenResult {
+        self.seal();
+        let text = self.tokenizer.decode(&self.cycle.out);
+        GenResult {
+            tokens: std::mem::take(&mut self.cycle.out),
+            text,
+            metrics: std::mem::take(&mut self.cycle.metrics),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_budget_and_truncation() {
+        assert_eq!(prompt_budget(256, 64, 20), 172);
+        assert_eq!(prompt_budget(16, 64, 20), 0);
+        let mut toks: Vec<i32> = (0..10).collect();
+        truncate_prompt(&mut toks, 4);
+        assert_eq!(toks, vec![6, 7, 8, 9]);
+        let mut toks: Vec<i32> = (0..3).collect();
+        truncate_prompt(&mut toks, 4);
+        assert_eq!(toks, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn verify_rows_mirror_tree_ancestry() {
+        let dists = vec![vec![0.6f32, 0.4], vec![0.7, 0.3]];
+        let tree = DraftTree::backbone_expansion(1, dists, 2);
+        let (tokens, positions, rows) = verify_rows(&tree, 10, 64);
+        assert_eq!(tokens, tree.tokens());
+        assert_eq!(positions[0], 10);
+        assert_eq!(rows.len(), tree.len());
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.prefix_upto, 10);
+            let anc: Vec<usize> = tree.ancestors(i).iter().map(|&s| 10 + s).collect();
+            assert_eq!(r.extra, anc);
+        }
+        // positions clamp at max_seq - 1
+        let (_, positions, _) = verify_rows(&tree, 63, 64);
+        assert!(positions.iter().all(|&p| p <= 63));
+    }
+
+    fn one_hot(v: usize, hot: usize) -> Vec<f32> {
+        let mut d = vec![0.0; v];
+        d[hot] = 1.0;
+        d
+    }
+
+    #[test]
+    fn slot_cycle_commits_and_terminates() {
+        let cfg = GenConfig { max_new_tokens: 3, ..Default::default() };
+        let mut cy = SlotCycle::start(cfg, &one_hot(8, 5));
+        assert_eq!(cy.pending, 5);
+        assert!(!cy.finished());
+
+        // greedy chain 5 -> 2 accepted, bonus 7
+        let draft = DraftOutput::Levels(vec![one_hot(8, 2)]);
+        let tree = cy.build_tree(draft, 1);
+        let mut logits = Vec::new();
+        for slot in 0..tree.len() {
+            let hot = match tree.nodes[slot].token {
+                5 => 2usize,
+                2 => 7,
+                _ => 0,
+            };
+            logits.extend(one_hot(8, hot));
+        }
+        let acc = cy.accept(&tree, &logits, 8);
+        assert_eq!(acc.accepted_slots.len(), 2);
+        let commit = cy.commit(&tree, &acc, 999);
+        assert_eq!(commit.committed, vec![5, 2]);
+        assert_eq!(commit.accepted_tokens, vec![5, 2]);
+        assert_eq!(commit.observe_next, vec![2, 7]);
+        assert!(!commit.finished);
+        assert_eq!(cy.pending, 7);
+        assert_eq!(cy.metrics.cycles, 1);
+        assert_eq!(cy.metrics.tau_sum, 2);
+
+        // next cycle overflows max_new: committed truncated to 1 token
+        let draft = DraftOutput::Levels(vec![one_hot(8, 4)]);
+        let tree = cy.build_tree(draft, 1);
+        let mut logits = Vec::new();
+        for slot in 0..tree.len() {
+            let hot = match tree.nodes[slot].token {
+                7 => 4usize,
+                4 => 6,
+                _ => 0,
+            };
+            logits.extend(one_hot(8, hot));
+        }
+        let acc = cy.accept(&tree, &logits, 8);
+        let commit = cy.commit(&tree, &acc, 999);
+        assert_eq!(commit.committed, vec![7]);
+        assert!(commit.finished);
+        assert!(cy.finished());
+        assert_eq!(cy.out, vec![5, 2, 7]);
+    }
+
+    #[test]
+    fn slot_cycle_stops_on_eos_inclusive() {
+        let eos = 3;
+        let cfg = GenConfig { max_new_tokens: 10, stop_on_eos: true, ..Default::default() };
+        let mut cy = SlotCycle::start(cfg, &one_hot(8, 1));
+        let draft = DraftOutput::Levels(vec![one_hot(8, eos as usize), one_hot(8, 6)]);
+        let tree = cy.build_tree(draft, 1);
+        let mut logits = Vec::new();
+        for slot in 0..tree.len() {
+            let hot = match tree.nodes[slot].token {
+                1 => eos as usize,
+                3 => 6usize,
+                _ => 0,
+            };
+            logits.extend(one_hot(8, hot));
+        }
+        let acc = cy.accept(&tree, &logits, 8);
+        let commit = cy.commit(&tree, &acc, eos);
+        // eos itself is committed, nothing after it
+        assert_eq!(*commit.committed.last().unwrap(), eos);
+        assert!(cy.eos_hit);
+        assert!(cy.finished());
+    }
+
+    #[test]
+    fn zero_budget_request_finishes_without_a_cycle() {
+        let cfg = GenConfig { max_new_tokens: 0, ..Default::default() };
+        let cy = SlotCycle::start(cfg, &one_hot(4, 2));
+        assert!(cy.finished());
+    }
+}

@@ -14,7 +14,10 @@
 //! rows appended at `cache_len` — ancestor sets double as tree-attention
 //! mask rows (§2.4).
 
+use crate::draft::DraftOutput;
 use crate::util::rng::{top_k_indices, Pcg64};
+
+use super::sampler::Sampler;
 
 /// Draw up to k distinct indices from a probability vector, each drawn
 /// from the remaining renormalized mass (sampling without replacement).
@@ -136,6 +139,48 @@ impl DraftTree {
         }
         tree.dists = dists;
         tree
+    }
+
+    /// Truncate a drafter's output to at most `depth` levels. The one
+    /// home of the `max_depth` rule (Table 3 uses 2) — previously
+    /// inlined in the engine and mirrored by the batcher.
+    pub fn truncate_draft(draft: &mut DraftOutput, depth: usize) {
+        match draft {
+            DraftOutput::Levels(dists) => dists.truncate(depth),
+            DraftOutput::Chain(toks, dists) => {
+                toks.truncate(depth);
+                dists.truncate(depth);
+            }
+            DraftOutput::None => {}
+        }
+    }
+
+    /// Build the cycle's tree from a drafter's output: applies the
+    /// `max_depth` truncation, then Backbone Expansion with top-k
+    /// candidates (greedy) or q-samples without replacement (stochastic
+    /// — required for lossless multi-round acceptance). Shared by the
+    /// single-request session and every continuous-batcher slot.
+    pub fn from_draft(
+        pending: i32,
+        mut draft: DraftOutput,
+        k: usize,
+        max_depth: Option<usize>,
+        sampler: &mut Sampler,
+    ) -> DraftTree {
+        if let Some(d) = max_depth {
+            Self::truncate_draft(&mut draft, d);
+        }
+        match draft {
+            DraftOutput::Levels(dists) => {
+                if sampler.greedy() {
+                    DraftTree::backbone_expansion(pending, dists, k)
+                } else {
+                    DraftTree::backbone_expansion_sampled(pending, dists, k, sampler.rng_mut())
+                }
+            }
+            DraftOutput::Chain(toks, dists) => DraftTree::chain(pending, &toks, dists),
+            DraftOutput::None => DraftTree::root_only(pending),
+        }
     }
 
     /// Chain from pre-sampled tokens (SpS drafting, Table-3 chains);
@@ -324,6 +369,42 @@ mod tests {
             let t = DraftTree::backbone_expansion_sampled(1, dists, 3, &mut rng);
             t.check_invariants(3).unwrap();
             assert_eq!(t.len(), 13);
+        }
+    }
+
+    #[test]
+    fn from_draft_truncates_every_output_kind() {
+        let mut s = Sampler::new(0.0, 1);
+        let dists: Vec<_> = (0..6).map(|i| dist(8, i)).collect();
+        let t = DraftTree::from_draft(0, DraftOutput::Levels(dists.clone()), 2, Some(2), &mut s);
+        assert_eq!(t.max_depth(), 2);
+        assert_eq!(t.len(), 1 + 2 * 2);
+        let chain = DraftOutput::Chain(vec![1, 2, 3, 4], dists[..4].to_vec());
+        let t = DraftTree::from_draft(0, chain, 2, Some(3), &mut s);
+        assert_eq!(t.max_depth(), 3);
+        assert_eq!(t.tokens(), vec![0, 1, 2, 3]);
+        let t = DraftTree::from_draft(7, DraftOutput::None, 2, Some(1), &mut s);
+        assert_eq!(t.len(), 1);
+        // no max_depth: untouched
+        let t = DraftTree::from_draft(0, DraftOutput::Levels(dists), 3, None, &mut s);
+        assert_eq!(t.max_depth(), 6);
+    }
+
+    #[test]
+    fn from_draft_samples_without_replacement_when_stochastic() {
+        let mut s = Sampler::new(1.0, 3);
+        for _ in 0..50 {
+            let dists: Vec<Vec<f32>> = (0..3)
+                .map(|_| {
+                    let mut d: Vec<f32> =
+                        (0..8).map(|_| s.rng_mut().next_f64() as f32 + 0.01).collect();
+                    let sum: f32 = d.iter().sum();
+                    d.iter_mut().for_each(|x| *x /= sum);
+                    d
+                })
+                .collect();
+            let t = DraftTree::from_draft(0, DraftOutput::Levels(dists), 3, None, &mut s);
+            t.check_invariants(3).unwrap();
         }
     }
 

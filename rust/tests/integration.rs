@@ -13,12 +13,13 @@ mod common;
 use std::path::PathBuf;
 use std::rc::Rc;
 
-use common::{artifacts_base, store_with};
+use common::{artifacts_base, artifacts_root, store_with};
 use fasteagle::backend::{fixture, BackendKind};
 use fasteagle::coordinator::{BatchConfig, BatchEngine, BatchMethod, Request};
 use fasteagle::draft::make_drafter;
 use fasteagle::model::{KvCache, MaskRow, TargetModel};
 use fasteagle::spec::{Engine, GenConfig};
+use fasteagle::workload::batched_serving_target;
 
 
 const PROMPTS: [&str; 2] = [
@@ -304,6 +305,86 @@ fn batch_engine_b1_matches_single_engine() {
         assert_eq!(m.requests_done, 3);
         assert!(m.mean_occupancy() > 0.0);
     }
+}
+
+/// Mixed-method fleet: one pool serves a fasteagle and a vanilla
+/// request side by side. Per-method KV lease accounting (fasteagle
+/// leases its drafter layers, vanilla none), concurrent occupancy when
+/// batched executables exist, out-of-order completion, and the vanilla
+/// slot's output still matches the single-request vanilla engine.
+#[test]
+fn mixed_method_fleet_shares_one_pool() {
+    let (root, kind) = artifacts_root();
+    let Some((dir, batch)) = batched_serving_target(&root) else {
+        eprintln!("skipping: no serving target");
+        return;
+    };
+    let st = store_with(&dir, kind);
+
+    // single-engine vanilla reference for the vanilla slot's output
+    let short_cfg = GenConfig { max_new_tokens: 6, ..Default::default() };
+    let mut vanilla = Engine::new(
+        TargetModel::open(Rc::clone(&st)).unwrap(),
+        make_drafter(Rc::clone(&st), "vanilla").unwrap(),
+    );
+    let reference = vanilla.generate(PROMPTS[1], &short_cfg).unwrap();
+
+    let mut eng = BatchEngine::new(
+        Rc::clone(&st),
+        BatchConfig::new(batch, BatchMethod::FastEagle),
+    )
+    .unwrap();
+    let fe_cost = eng.request_blocks(BatchMethod::FastEagle);
+    let van_cost = eng.request_blocks(BatchMethod::Vanilla);
+    assert!(
+        fe_cost > van_cost,
+        "fasteagle leases drafter KV layers on top of the target's ({fe_cost} vs {van_cost})"
+    );
+    let total = eng.pool_total();
+
+    // long fasteagle request (engine default method), short vanilla one
+    // (per-request override) — the vanilla request is admitted second
+    let mut r_fe = Request::new(0, PROMPTS[0]);
+    r_fe.cfg.max_new_tokens = 24;
+    let mut r_van = Request::new(1, PROMPTS[1]);
+    r_van.method = Some(BatchMethod::Vanilla);
+    r_van.cfg.max_new_tokens = 6;
+    eng.submit(r_fe);
+    eng.submit(r_van);
+
+    let mut metrics = fasteagle::coordinator::ServingMetrics::default();
+    let mut done = Vec::new();
+    let mut saw_both_active = false;
+    while done.len() < 2 {
+        let step = eng.step(&mut metrics).unwrap();
+        if eng.active_len() == 2 {
+            saw_both_active = true;
+            // both leases held at their method-specific cost
+            assert_eq!(eng.pool_available(), total - fe_cost - van_cost);
+        }
+        done.extend(step);
+        assert!(eng.has_work() || done.len() == 2);
+    }
+    assert_eq!(eng.pool_available(), total, "all leases released on retire");
+
+    let van = done.iter().find(|r| r.id == 1).unwrap();
+    let fe = done.iter().find(|r| r.id == 0).unwrap();
+    assert!(van.error.is_none() && fe.error.is_none());
+    assert_eq!(van.new_tokens, 6);
+    assert_eq!(fe.new_tokens, 24);
+    assert!(fe.tau >= 1.0);
+    assert_eq!(
+        van.text, reference.text,
+        "vanilla slot in a mixed pool must match the single-request vanilla engine"
+    );
+    if batch >= 2 {
+        assert!(saw_both_active, "mixed-method requests must occupy slots concurrently");
+        assert_eq!(
+            done[0].id, 1,
+            "short vanilla request (admitted second) completes out of admission order"
+        );
+    }
+    assert_eq!(metrics.requests_done, 2);
 }
 
 /// Pool-constrained batch run must still finish everything (requests

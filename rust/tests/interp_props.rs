@@ -216,6 +216,43 @@ fn slice_matches_naive_over_random_ranges() {
 }
 
 #[test]
+fn dynamic_slice_matches_naive_with_clamping() {
+    let mut rng = Pcg64::new(109, 0);
+    for _ in 0..60 {
+        let (a, b) = (2 + rng.below(6), 2 + rng.below(6));
+        let data = randv(&mut rng, a * b);
+        let sa = 1 + rng.below(a);
+        let sb = 1 + rng.below(b);
+        // starts include out-of-range values: XLA clamps so the window fits
+        let st_a = rng.below(a + 4) as i32 - 2;
+        let st_b = rng.below(b + 4) as i32 - 2;
+        let mut hb = HloBuilder::new("ds");
+        let p = hb.param(Ty::F32, vec![a, b]);
+        let s0 = hb.param(Ty::S32, vec![]);
+        let s1 = hb.param(Ty::S32, vec![]);
+        let d = hb.dynamic_slice(&p, &[s0, s1], &[sa, sb]);
+        let text = hb.finish(&[&d]);
+        let out = run(
+            &text,
+            vec![
+                Value::f32(vec![a, b], data.clone()),
+                Value::i32(vec![], vec![st_a]),
+                Value::i32(vec![], vec![st_b]),
+            ],
+        );
+        assert_eq!(out[0].dims, vec![sa, sb]);
+        let got = out[0].f32s().unwrap();
+        let ca = (st_a.max(0) as usize).min(a - sa);
+        let cb = (st_b.max(0) as usize).min(b - sb);
+        for i in 0..sa {
+            for j in 0..sb {
+                assert_eq!(got[i * sb + j], data[(ca + i) * b + (cb + j)]);
+            }
+        }
+    }
+}
+
+#[test]
 fn dynamic_update_slice_matches_naive_with_clamping() {
     let mut rng = Pcg64::new(107, 0);
     for _ in 0..60 {

@@ -19,14 +19,28 @@ use fasteagle::workload::batched_serving_target;
 
 const ADDR: &str = "127.0.0.1:7433";
 
-fn query(line: &str) -> Json {
-    let stream = TcpStream::connect(ADDR).expect("connect");
+fn query_at(addr: &str, line: &str) -> Json {
+    let stream = TcpStream::connect(addr).expect("connect");
     let mut w = stream.try_clone().unwrap();
     writeln!(w, "{line}").unwrap();
     let mut r = BufReader::new(stream);
     let mut out = String::new();
     r.read_line(&mut out).unwrap();
     Json::parse(out.trim()).expect("json response")
+}
+
+fn query(line: &str) -> Json {
+    query_at(ADDR, line)
+}
+
+fn wait_for_listener(addr: &str) {
+    for _ in 0..600 {
+        if TcpStream::connect(addr).is_ok() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    panic!("server did not start on {addr}");
 }
 
 #[test]
@@ -137,4 +151,95 @@ fn server_roundtrip_concurrency_and_shutdown() {
     let metrics = server_thread.join().unwrap();
     assert_eq!(metrics.requests_done, 4);
     assert_eq!(metrics.requests_rejected, 0);
+}
+
+/// Streaming mode: `"stream": true` yields one `{"event":"tokens",...}`
+/// frame per decode cycle before the final response. On a multi-cycle
+/// generation at least two incremental frames arrive first, and the
+/// concatenated frame tokens decode to exactly the non-streaming
+/// output — streaming never changes what is generated.
+#[test]
+fn server_streams_cycle_frames_byte_identical() {
+    const SADDR: &str = "127.0.0.1:7434";
+    let (root, kind) = artifacts_root();
+    let Some((dir, batch)) = batched_serving_target(&root) else {
+        eprintln!("skipping: no serving target");
+        return;
+    };
+    let server_thread = std::thread::spawn(move || {
+        let rt = Arc::new(Runtime::new(kind).unwrap());
+        let store = Rc::new(ArtifactStore::open(rt, dir).unwrap());
+        let engine = BatchEngine::new(
+            Rc::clone(&store),
+            BatchConfig::new(batch, BatchMethod::FastEagle),
+        )
+        .unwrap();
+        let server = Server::new(ServerConfig { addr: SADDR.into(), queue_capacity: 8 });
+        server.serve(engine).unwrap()
+    });
+    wait_for_listener(SADDR);
+
+    // non-streaming reference for the same prompt/params
+    let reference = query_at(
+        SADDR,
+        r#"{"prompt":"USER: tell me about machine learning and the fast cache.\nASSISTANT:","max_new":24}"#,
+    );
+    assert!(reference.get("error").is_none(), "{reference:?}");
+    let ref_text = reference
+        .get("text")
+        .and_then(Json::as_str)
+        .unwrap()
+        .to_string();
+
+    // same request with "stream": true — frames, then the final response
+    let stream = TcpStream::connect(SADDR).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    writeln!(
+        w,
+        r#"{{"prompt":"USER: tell me about machine learning and the fast cache.\nASSISTANT:","max_new":24,"stream":true}}"#
+    )
+    .unwrap();
+    let mut r = BufReader::new(stream);
+    let mut frames = 0usize;
+    let mut toks: Vec<i32> = Vec::new();
+    let final_resp = loop {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let v = Json::parse(line.trim()).expect("json line");
+        if v.get("event").and_then(Json::as_str) == Some("tokens") {
+            frames += 1;
+            for t in v.get("tokens").and_then(Json::as_arr).expect("tokens array") {
+                toks.push(t.as_i64().unwrap() as i32);
+            }
+        } else {
+            break v; // the final (non-event) response ends the stream
+        }
+    };
+    assert!(
+        frames >= 2,
+        "multi-cycle generation must stream multiple incremental frames, got {frames}"
+    );
+    assert!(final_resp.get("error").is_none(), "{final_resp:?}");
+    assert_eq!(final_resp.get("new_tokens").and_then(Json::as_usize), Some(24));
+    let cycles = final_resp.get("cycles").and_then(Json::as_usize).unwrap();
+    assert!(frames <= cycles, "at most one frame per cycle ({frames} vs {cycles})");
+    assert_eq!(toks.len(), 24, "concatenated frames must cover every committed token");
+    // byte-identical reassembly: decode(concat frame tokens) equals the
+    // streamed final text equals the non-streaming text
+    let bytes: Vec<u8> = toks
+        .iter()
+        .filter(|&&t| (0..256).contains(&t))
+        .map(|&t| t as u8)
+        .collect();
+    let concat = String::from_utf8_lossy(&bytes).into_owned();
+    let streamed_text = final_resp.get("text").and_then(Json::as_str).unwrap();
+    assert_eq!(concat, streamed_text, "frames must reassemble the final text exactly");
+    assert_eq!(
+        streamed_text, ref_text,
+        "streaming must not change the generated output"
+    );
+
+    let v = query_at(SADDR, r#"{"cmd":"shutdown"}"#);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    server_thread.join().unwrap();
 }
