@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
         let server = Server::new(ServerConfig {
             addr: ADDR.into(),
             queue_capacity: 64,
+            ..Default::default()
         });
         let m = server.serve(engine)?;
         eprintln!("[server] {}", m.report());

@@ -14,6 +14,8 @@ use std::fmt::Write as _;
 pub enum Ty {
     F32,
     S32,
+    U32,
+    U64,
     Pred,
 }
 
@@ -22,6 +24,8 @@ impl Ty {
         match self {
             Ty::F32 => "f32",
             Ty::S32 => "s32",
+            Ty::U32 => "u32",
+            Ty::U64 => "u64",
             Ty::Pred => "pred",
         }
     }
@@ -373,6 +377,30 @@ impl HloBuilder {
         )
     }
 
+    /// Tuple projection (for tuple-valued ops like rng-bit-generator).
+    pub fn get_tuple_element(&mut self, tuple: &H, index: usize, ty: Ty, dims: Vec<usize>) -> H {
+        self.push(ty, dims, format!("get-tuple-element(%{}), index={index}", tuple.name))
+    }
+
+    /// Deterministic Threefry bit generator over a `u64[2]`
+    /// `[key, counter]` state: emits the tuple-shaped
+    /// `rng-bit-generator` plus its two projections and returns
+    /// `(new_state, bits)` — `bits` is `u32[dims]`.
+    pub fn rng_threefry(&mut self, state: &H, dims: Vec<usize>) -> (H, H) {
+        assert_eq!(state.ty, Ty::U64, "threefry state is u64[2]");
+        assert_eq!(state.dims, vec![2], "threefry state is u64[2]");
+        let name = self.fresh();
+        let bits_shape = shape_text(Ty::U32, &dims);
+        self.body.push(format!(
+            "  %{name} = (u64[2], {bits_shape}) rng-bit-generator(%{}), algorithm=rng_threefry",
+            state.name
+        ));
+        let tuple = H { name, ty: Ty::U64, dims: vec![2] };
+        let new_state = self.get_tuple_element(&tuple, 0, Ty::U64, vec![2]);
+        let bits = self.get_tuple_element(&tuple, 1, Ty::U32, dims);
+        (new_state, bits)
+    }
+
     /// Broadcast a scalar to `dims`.
     pub fn splat(&mut self, scalar: &H, dims: Vec<usize>) -> H {
         assert!(scalar.dims.is_empty(), "splat wants a scalar");
@@ -450,6 +478,28 @@ mod tests {
         let out = evaluate(&m, &[xs, is]).unwrap();
         assert_eq!(out[0].dims, vec![1, 2]);
         assert_eq!(out[0].f32s().unwrap(), &[20., 21.]);
+    }
+
+    #[test]
+    fn rng_threefry_roundtrips_through_text() {
+        let mut b = HloBuilder::new("rng");
+        let st = b.param(Ty::U64, vec![2]);
+        let (ns, bits) = b.rng_threefry(&st, vec![5]);
+        let f = b.convert(&bits, Ty::F32);
+        let text = b.finish(&[&ns, &bits, &f]);
+        let m = parse_module(&text).unwrap();
+        let state = Rc::new(Value::u64(vec![2], vec![42, 0]));
+        let out = evaluate(&m, &[Rc::clone(&state)]).unwrap();
+        assert_eq!(out[0].dims, vec![2]);
+        // 5 u32s = 3 blocks -> counter advances by 3
+        assert_eq!(out[0].u64s().unwrap(), &[42, 3]);
+        assert_eq!(out[1].dims, vec![5]);
+        let bits1 = out[1].u32s().unwrap().to_vec();
+        // deterministic: same state, same stream
+        let out2 = evaluate(&m, &[state]).unwrap();
+        assert_eq!(out2[1].u32s().unwrap(), bits1.as_slice());
+        // converts to f32 value-wise
+        assert_eq!(out[2].f32s().unwrap()[0], bits1[0] as f32);
     }
 
     #[test]

@@ -22,6 +22,8 @@ use super::parser::{
 pub enum Buf {
     F32(Vec<f32>),
     I32(Vec<i32>),
+    U32(Vec<u32>),
+    U64(Vec<u64>),
     Pred(Vec<bool>),
 }
 
@@ -30,6 +32,8 @@ impl Buf {
         match self {
             Buf::F32(v) => v.len(),
             Buf::I32(v) => v.len(),
+            Buf::U32(v) => v.len(),
+            Buf::U64(v) => v.len(),
             Buf::Pred(v) => v.len(),
         }
     }
@@ -42,6 +46,8 @@ impl Buf {
         match self {
             Buf::F32(_) => PrimType::F32,
             Buf::I32(_) => PrimType::S32,
+            Buf::U32(_) => PrimType::U32,
+            Buf::U64(_) => PrimType::U64,
             Buf::Pred(_) => PrimType::Pred,
         }
     }
@@ -65,6 +71,11 @@ impl Value {
         Value { dims, buf: Buf::I32(data) }
     }
 
+    pub fn u64(dims: Vec<usize>, data: Vec<u64>) -> Value {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Value { dims, buf: Buf::U64(data) }
+    }
+
     pub fn numel(&self) -> usize {
         self.dims.iter().product()
     }
@@ -80,6 +91,20 @@ impl Value {
         match &self.buf {
             Buf::I32(v) => Ok(v),
             other => bail!("expected s32 buffer, got {:?}", other.ty()),
+        }
+    }
+
+    pub fn u32s(&self) -> Result<&[u32]> {
+        match &self.buf {
+            Buf::U32(v) => Ok(v),
+            other => bail!("expected u32 buffer, got {:?}", other.ty()),
+        }
+    }
+
+    pub fn u64s(&self) -> Result<&[u64]> {
+        match &self.buf {
+            Buf::U64(v) => Ok(v),
+            other => bail!("expected u64 buffer, got {:?}", other.ty()),
         }
     }
 
@@ -191,21 +216,59 @@ pub fn evaluate(module: &HloModule, args: &[Rc<Value>]) -> Result<Vec<Value>> {
         );
     }
     let mut env: HashMap<&str, Rc<Value>> = HashMap::with_capacity(entry.instrs.len());
+    // tuple-valued instructions (tuple, rng-bit-generator) live here;
+    // get-tuple-element projects them back into `env`
+    let mut tuples: HashMap<&str, Vec<Rc<Value>>> = HashMap::new();
     let mut root_parts: Option<Vec<Value>> = None;
     for (i, ins) in entry.instrs.iter().enumerate() {
-        if let Op::Tuple = ins.op {
-            if i != entry.root {
-                bail!("non-root tuple instruction {:?}", ins.name);
+        match &ins.op {
+            Op::Tuple => {
+                let mut parts = Vec::with_capacity(ins.operands.len());
+                for o in &ins.operands {
+                    let v = env
+                        .get(o.as_str())
+                        .with_context(|| format!("tuple operand {o:?} undefined"))?;
+                    parts.push(Rc::clone(v));
+                }
+                if i == entry.root {
+                    root_parts = Some(parts.iter().map(|v| (**v).clone()).collect());
+                }
+                tuples.insert(ins.name.as_str(), parts);
+                continue;
             }
-            let mut parts = Vec::with_capacity(ins.operands.len());
-            for o in &ins.operands {
-                let v = env
-                    .get(o.as_str())
-                    .with_context(|| format!("tuple operand {o:?} undefined"))?;
-                parts.push((**v).clone());
+            Op::RngBitGenerator => {
+                let state_name = ins
+                    .operands
+                    .first()
+                    .with_context(|| format!("{}: rng missing state operand", ins.name))?;
+                let state = env
+                    .get(state_name.as_str())
+                    .with_context(|| format!("rng state {state_name:?} undefined"))?;
+                let (new_state, bits) = eval_rng_threefry(state, ins)
+                    .with_context(|| format!("instruction {:?}", ins.name))?;
+                let parts = vec![Rc::new(new_state), Rc::new(bits)];
+                if i == entry.root {
+                    root_parts = Some(parts.iter().map(|v| (**v).clone()).collect());
+                }
+                tuples.insert(ins.name.as_str(), parts);
+                continue;
             }
-            root_parts = Some(parts);
-            continue;
+            Op::GetTupleElement(k) => {
+                let src = ins
+                    .operands
+                    .first()
+                    .with_context(|| format!("{}: gte missing operand", ins.name))?;
+                let parts = tuples.get(src.as_str()).with_context(|| {
+                    format!("get-tuple-element source {src:?} is not a tuple")
+                })?;
+                let v = Rc::clone(parts.get(*k).with_context(|| {
+                    format!("{}: tuple index {k} out of range", ins.name)
+                })?);
+                check_shape(&v, &ins.shape, &ins.name)?;
+                env.insert(ins.name.as_str(), v);
+                continue;
+            }
+            _ => {}
         }
         // parameters alias the caller's Rc — bound weights stay pinned
         // and per-call args are staged once at the call boundary, never
@@ -260,6 +323,14 @@ fn eval_instr(
             let n = out_dims.iter().product();
             Value::i32(out_dims, vec![*v; n])
         }
+        Op::ConstU32(v) => {
+            let n = out_dims.iter().product();
+            Value { dims: out_dims, buf: Buf::U32(vec![*v; n]) }
+        }
+        Op::ConstU64(v) => {
+            let n = out_dims.iter().product();
+            Value { dims: out_dims, buf: Buf::U64(vec![*v; n]) }
+        }
         Op::ConstPred(v) => {
             let n = out_dims.iter().product();
             Value { dims: out_dims, buf: Buf::Pred(vec![*v; n]) }
@@ -282,7 +353,7 @@ fn eval_instr(
                 PrimType::F32 => {
                     Value::f32(out_dims, data.iter().map(|&x| x as f32).collect())
                 }
-                PrimType::Pred => bail!("pred iota"),
+                other => bail!("unsupported iota element type {other:?}"),
             }
         }
         Op::Convert => {
@@ -300,6 +371,17 @@ fn eval_instr(
                 }
                 (Buf::Pred(v), PrimType::S32) => {
                     Buf::I32(v.iter().map(|&x| x as i32).collect())
+                }
+                // rng bits flow into the f32/s32 graph world via convert
+                (Buf::U32(v), PrimType::F32) => {
+                    Buf::F32(v.iter().map(|&x| x as f32).collect())
+                }
+                (Buf::U32(v), PrimType::S32) => {
+                    // XLA integral convert wraps (two's-complement reinterpret)
+                    Buf::I32(v.iter().map(|&x| x as i32).collect())
+                }
+                (Buf::U64(v), PrimType::U32) => {
+                    Buf::U32(v.iter().map(|&x| x as u32).collect())
                 }
                 (b, t) if b.ty() == t => b.clone(),
                 (b, t) => bail!("unsupported convert {:?} -> {t:?}", b.ty()),
@@ -434,8 +516,70 @@ fn eval_instr(
             }
             eval_dynamic_slice(operand(ins, 0, env)?, &starts, sizes, out_dims)?
         }
-        Op::Tuple => unreachable!("tuples handled at the root"),
+        Op::Tuple | Op::RngBitGenerator | Op::GetTupleElement(_) => {
+            unreachable!("tuple-valued ops handled in evaluate()")
+        }
     })
+}
+
+/// One Threefry-2x32 block (Salmon et al., 20 rounds) — the
+/// deterministic counter-based generator behind `rng-bit-generator`
+/// with `algorithm=rng_threefry`.
+fn threefry2x32(key: [u32; 2], ctr: [u32; 2]) -> [u32; 2] {
+    const ROTS: [[u32; 4]; 2] = [[13, 15, 26, 6], [17, 29, 16, 24]];
+    let ks = [key[0], key[1], key[0] ^ key[1] ^ 0x1BD1_1BDA];
+    let mut x = [ctr[0].wrapping_add(ks[0]), ctr[1].wrapping_add(ks[1])];
+    for group in 0..5u32 {
+        let rots = ROTS[(group % 2) as usize];
+        for &r in &rots {
+            x[0] = x[0].wrapping_add(x[1]);
+            x[1] = x[1].rotate_left(r) ^ x[0];
+        }
+        let g = group as usize;
+        x[0] = x[0].wrapping_add(ks[(g + 1) % 3]);
+        x[1] = x[1].wrapping_add(ks[(g + 2) % 3].wrapping_add(group + 1));
+    }
+    x
+}
+
+/// `rng-bit-generator(algorithm=rng_threefry)`: XLA-style `u64[2]`
+/// state interpreted as `[key, counter]`. Block `i` encrypts
+/// `counter + i` under the key, yielding 2×u32 of output; the returned
+/// state advances the counter by the number of blocks consumed, so
+/// chained calls never reuse a counter (determinism *and*
+/// independence). Not bit-compatible with XLA's exact stream — but
+/// fully deterministic, which is the property the stack needs.
+fn eval_rng_threefry(state: &Value, ins: &Instr) -> Result<(Value, Value)> {
+    let st = state.u64s().context("rng state must be u64")?;
+    if state.dims != [2] {
+        bail!("rng-bit-generator state must be u64[2], got {:?}", state.dims);
+    }
+    let shapes = ins
+        .tuple_shapes
+        .as_ref()
+        .context("rng-bit-generator must be tuple-shaped (state, bits)")?;
+    if shapes.len() != 2 || shapes[0].ty != PrimType::U64 || shapes[0].dims != [2] {
+        bail!("rng-bit-generator output 0 must be the u64[2] state");
+    }
+    let out_shape = &shapes[1];
+    if out_shape.ty != PrimType::U32 {
+        bail!("rng-bit-generator emits u32 bits, shape says {:?}", out_shape.ty);
+    }
+    let n: usize = out_shape.dims.iter().product();
+    let key = [st[0] as u32, (st[0] >> 32) as u32];
+    let blocks = n.div_ceil(2);
+    let mut bits = Vec::with_capacity(blocks * 2);
+    for i in 0..blocks {
+        let c = st[1].wrapping_add(i as u64);
+        let out = threefry2x32(key, [c as u32, (c >> 32) as u32]);
+        bits.push(out[0]);
+        bits.push(out[1]);
+    }
+    bits.truncate(n);
+    let new_state =
+        Value { dims: vec![2], buf: Buf::U64(vec![st[0], st[1].wrapping_add(blocks as u64)]) };
+    let bits_v = Value { dims: out_shape.dims.clone(), buf: Buf::U32(bits) };
+    Ok((new_state, bits_v))
 }
 
 fn eval_broadcast(a: &Value, mapping: &[usize], out_dims: Vec<usize>) -> Result<Value> {
@@ -467,6 +611,8 @@ fn eval_broadcast(a: &Value, mapping: &[usize], out_dims: Vec<usize>) -> Result<
     let buf = match &a.buf {
         Buf::F32(v) => Buf::F32(src.iter().map(|&i| v[i]).collect()),
         Buf::I32(v) => Buf::I32(src.iter().map(|&i| v[i]).collect()),
+        Buf::U32(v) => Buf::U32(src.iter().map(|&i| v[i]).collect()),
+        Buf::U64(v) => Buf::U64(src.iter().map(|&i| v[i]).collect()),
         Buf::Pred(v) => Buf::Pred(src.iter().map(|&i| v[i]).collect()),
     };
     Ok(Value { dims: out_dims, buf })
@@ -497,6 +643,8 @@ fn eval_transpose(a: &Value, perm: &[usize], out_dims: Vec<usize>) -> Result<Val
     let buf = match &a.buf {
         Buf::F32(v) => Buf::F32(src.iter().map(|&i| v[i]).collect()),
         Buf::I32(v) => Buf::I32(src.iter().map(|&i| v[i]).collect()),
+        Buf::U32(v) => Buf::U32(src.iter().map(|&i| v[i]).collect()),
+        Buf::U64(v) => Buf::U64(src.iter().map(|&i| v[i]).collect()),
         Buf::Pred(v) => Buf::Pred(src.iter().map(|&i| v[i]).collect()),
     };
     Ok(Value { dims: out_dims, buf })
@@ -531,6 +679,8 @@ fn eval_slice(a: &Value, ranges: &[(usize, usize, usize)], out_dims: Vec<usize>)
     let buf = match &a.buf {
         Buf::F32(v) => Buf::F32(src.iter().map(|&i| v[i]).collect()),
         Buf::I32(v) => Buf::I32(src.iter().map(|&i| v[i]).collect()),
+        Buf::U32(v) => Buf::U32(src.iter().map(|&i| v[i]).collect()),
+        Buf::U64(v) => Buf::U64(src.iter().map(|&i| v[i]).collect()),
         Buf::Pred(v) => Buf::Pred(src.iter().map(|&i| v[i]).collect()),
     };
     Ok(Value { dims: out_dims, buf })
@@ -565,6 +715,8 @@ fn eval_concat(vals: &[&Rc<Value>], dim: usize, out_dims: Vec<usize>) -> Result<
     let buf = match &first.buf {
         Buf::F32(_) => concat_t!(F32, f32, f32s),
         Buf::I32(_) => concat_t!(I32, i32, i32s),
+        Buf::U32(_) => concat_t!(U32, u32, u32s),
+        Buf::U64(_) => concat_t!(U64, u64, u64s),
         Buf::Pred(_) => concat_t!(Pred, bool, preds),
     };
     Ok(Value { dims: out_dims, buf })
@@ -639,6 +791,8 @@ fn eval_gather(
     let buf = match &operand.buf {
         Buf::F32(v) => Buf::F32(src.iter().map(|&i| v[i]).collect()),
         Buf::I32(v) => Buf::I32(src.iter().map(|&i| v[i]).collect()),
+        Buf::U32(v) => Buf::U32(src.iter().map(|&i| v[i]).collect()),
+        Buf::U64(v) => Buf::U64(src.iter().map(|&i| v[i]).collect()),
         Buf::Pred(v) => Buf::Pred(src.iter().map(|&i| v[i]).collect()),
     };
     Ok(Value { dims: out_dims, buf })
@@ -651,6 +805,44 @@ fn eval_reduce(
     op: BinOp,
     out_dims: Vec<usize>,
 ) -> Result<Value> {
+    // Fast path for the overwhelmingly common form in our lowered
+    // graphs: a single f32 reduction over the *last* axis (softmax
+    // row-sum/row-max). The input rows are contiguous in row-major
+    // order, so each output folds one unit-stride slice — no multi-dim
+    // index arithmetic per element. The fold applies the operator in
+    // the same ascending element order as the general path below
+    // (apply(apply(init, x0), x1)...), so results are bit-identical.
+    if red_dims.len() == 1
+        && !a.dims.is_empty()
+        && red_dims[0] == a.dims.len() - 1
+        && a.dims[a.dims.len() - 1] > 0
+    {
+        if let Buf::F32(data) = &a.buf {
+            let fast: Option<fn(f32, f32) -> f32> = match op {
+                BinOp::Add => Some(|x, y| x + y),
+                BinOp::Max => Some(f32::max),
+                BinOp::Min => Some(f32::min),
+                _ => None,
+            };
+            if let Some(apply) = fast {
+                let init_v = match &init.buf {
+                    Buf::F32(v) => *v.first().context("empty reduce init")?,
+                    _ => bail!("reduce init dtype mismatch"),
+                };
+                let k = a.dims[a.dims.len() - 1];
+                let n_out: usize = out_dims.iter().product();
+                let mut out = Vec::with_capacity(n_out);
+                for row in data.chunks_exact(k) {
+                    let mut acc = init_v;
+                    for &x in row {
+                        acc = apply(acc, x);
+                    }
+                    out.push(acc);
+                }
+                return Ok(Value { dims: out_dims, buf: Buf::F32(out) });
+            }
+        }
+    }
     let kept: Vec<usize> = (0..a.dims.len()).filter(|d| !red_dims.contains(d)).collect();
     let out_st = strides(&out_dims);
     let n_out: usize = out_dims.iter().product();
@@ -743,6 +935,8 @@ fn eval_dus(operand: &Value, update: &Value, starts: &[i64]) -> Result<Value> {
     let buf = match &operand.buf {
         Buf::F32(_) => dus_t!(F32),
         Buf::I32(_) => dus_t!(I32),
+        Buf::U32(_) => dus_t!(U32),
+        Buf::U64(_) => dus_t!(U64),
         Buf::Pred(_) => dus_t!(Pred),
     };
     Ok(Value { dims: operand.dims.clone(), buf })
@@ -793,6 +987,8 @@ fn eval_dynamic_slice(
     let buf = match &a.buf {
         Buf::F32(v) => Buf::F32(src.iter().map(|&i| v[i]).collect()),
         Buf::I32(v) => Buf::I32(src.iter().map(|&i| v[i]).collect()),
+        Buf::U32(v) => Buf::U32(src.iter().map(|&i| v[i]).collect()),
+        Buf::U64(v) => Buf::U64(src.iter().map(|&i| v[i]).collect()),
         Buf::Pred(v) => Buf::Pred(src.iter().map(|&i| v[i]).collect()),
     };
     Ok(Value { dims: out_dims, buf })
@@ -950,6 +1146,50 @@ ENTRY %main {
         assert!(p[2] > p[1] && p[1] > p[0]);
         for v in &p[3..] {
             assert!((v - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn last_axis_reduce_fast_path_is_bit_identical() {
+        // values chosen so float addition order matters: the fast path
+        // must fold in exactly the general path's ascending order
+        let text = r#"
+HloModule t
+%red_add {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+%red_max {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %m = f32[] maximum(%a, %b)
+}
+ENTRY %main {
+  %x = f32[3,5] parameter(0)
+  %zero = f32[] constant(0)
+  %ninf = f32[] constant(-1e30)
+  %s = f32[3] reduce(%x, %zero), dimensions={1}, to_apply=%red_add
+  %mx = f32[3] reduce(%x, %ninf), dimensions={1}, to_apply=%red_max
+  ROOT %t = (f32[3], f32[3]) tuple(%s, %mx)
+}
+"#;
+        let data: Vec<f32> = (0..15)
+            .map(|i| (i as f32) * 1.000001e-3 + if i % 3 == 0 { 1e7 } else { 0.0 })
+            .collect();
+        let x = Value::f32(vec![3, 5], data.clone());
+        let out = run(text, vec![x]);
+        // reference: the general path's fold order, by hand
+        for r in 0..3 {
+            let row = &data[r * 5..(r + 1) * 5];
+            let mut sum = 0.0f32;
+            let mut mx = -1e30f32;
+            for &v in row {
+                sum += v;
+                mx = mx.max(v);
+            }
+            assert_eq!(out[0].f32s().unwrap()[r].to_bits(), sum.to_bits());
+            assert_eq!(out[1].f32s().unwrap()[r].to_bits(), mx.to_bits());
         }
     }
 

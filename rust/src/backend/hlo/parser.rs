@@ -18,6 +18,8 @@ use anyhow::{bail, Context, Result};
 pub enum PrimType {
     F32,
     S32,
+    U32,
+    U64,
     Pred,
 }
 
@@ -26,6 +28,8 @@ impl PrimType {
         Ok(match s {
             "f32" => PrimType::F32,
             "s32" => PrimType::S32,
+            "u32" => PrimType::U32,
+            "u64" => PrimType::U64,
             "pred" => PrimType::Pred,
             other => bail!("unsupported element type {other:?}"),
         })
@@ -96,6 +100,8 @@ pub enum Op {
     /// scalar constants only (weights arrive as parameters)
     ConstF32(f32),
     ConstS32(i32),
+    ConstU32(u32),
+    ConstU64(u64),
     ConstPred(bool),
     Iota {
         dim: usize,
@@ -121,6 +127,12 @@ pub enum Op {
     /// slice sizes per dimension; start indices arrive as scalar s32
     /// operands (one per dimension), clamped like XLA's dynamic-slice
     DynamicSlice(Vec<usize>),
+    /// deterministic counter-based RNG (Threefry-2x32): consumes a
+    /// u64[2] `[key, counter]` state, produces `(new_state, u32 bits)`
+    /// as a tuple — projected out with get-tuple-element
+    RngBitGenerator,
+    /// tuple projection: operand must be a tuple-valued instruction
+    GetTupleElement(usize),
     Tuple,
 }
 
@@ -368,6 +380,12 @@ fn parse_instr(line: &str) -> Result<Instr> {
                 PrimType::S32 => Op::ConstS32(
                     lit.parse().with_context(|| format!("{name}: bad s32 constant {lit:?}"))?,
                 ),
+                PrimType::U32 => Op::ConstU32(
+                    lit.parse().with_context(|| format!("{name}: bad u32 constant {lit:?}"))?,
+                ),
+                PrimType::U64 => Op::ConstU64(
+                    lit.parse().with_context(|| format!("{name}: bad u64 constant {lit:?}"))?,
+                ),
                 PrimType::Pred => Op::ConstPred(lit == "true" || lit == "1"),
             }
         }
@@ -451,6 +469,18 @@ fn parse_instr(line: &str) -> Result<Instr> {
             "dynamic_slice_sizes",
             "dynamic-slice",
         )?)?),
+        "rng-bit-generator" => {
+            let algo = req_attr(&attrs, "algorithm", "rng-bit-generator")?;
+            if algo != "rng_threefry" {
+                bail!("{name}: unsupported rng algorithm {algo:?} (only rng_threefry)");
+            }
+            Op::RngBitGenerator
+        }
+        "get-tuple-element" => Op::GetTupleElement(
+            req_attr(&attrs, "index", "get-tuple-element")?
+                .parse()
+                .with_context(|| format!("{name}: bad tuple index"))?,
+        ),
         "tuple" => Op::Tuple,
         other => bail!("unsupported HLO opcode {other:?} (instruction {name})"),
     };
@@ -639,6 +669,28 @@ ENTRY %main {
             other => panic!("{other:?}"),
         }
         assert_eq!(d.operands, vec!["x", "i", "j"]);
+    }
+
+    #[test]
+    fn parses_rng_bit_generator_and_gte() {
+        let r = parse_instr(
+            "%r = (u64[2], u32[8]) rng-bit-generator(%state), algorithm=rng_threefry",
+        )
+        .unwrap();
+        assert!(matches!(r.op, Op::RngBitGenerator));
+        assert_eq!(r.operands, vec!["state"]);
+        let shapes = r.tuple_shapes.as_ref().unwrap();
+        assert_eq!(shapes[0].ty, PrimType::U64);
+        assert_eq!(shapes[1].ty, PrimType::U32);
+        assert_eq!(shapes[1].dims, vec![8]);
+        let g = parse_instr("%g = u32[8] get-tuple-element(%r), index=1").unwrap();
+        assert!(matches!(g.op, Op::GetTupleElement(1)));
+        // non-threefry algorithms are a named error, not silence
+        let e = parse_instr(
+            "%r = (u64[2], u32[8]) rng-bit-generator(%s), algorithm=rng_philox",
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("rng_philox"));
     }
 
     #[test]

@@ -39,6 +39,9 @@ fn to_host(v: Value) -> Result<HostTensor> {
     match v.buf {
         Buf::F32(data) => Ok(HostTensor::f32(v.dims, data)),
         Buf::I32(data) => Ok(HostTensor::i32(v.dims, data)),
+        Buf::U32(_) | Buf::U64(_) => {
+            bail!("executable output is unsigned-typed (convert before the root)")
+        }
         Buf::Pred(_) => bail!("executable output is pred-typed"),
     }
 }

@@ -138,13 +138,43 @@ pub fn run(env: &BenchEnv) -> Result<()> {
         ]));
     }
 
-    // interpreter dot fast path: the kernel `--backend interpret` bench
-    // lanes lean on once dims grow past the fixture sizes — measured
-    // through the full parse->evaluate pipeline like real executables
+    // interpreter dot + reduce fast paths: the kernels `--backend
+    // interpret` bench lanes lean on once dims grow past the fixture
+    // sizes — measured through the full parse->evaluate pipeline like
+    // real executables
     if env.runtime.kind() == crate::backend::BackendKind::Interpret {
         use crate::backend::hlo::builder::{HloBuilder, Ty};
         use crate::backend::hlo::eval::{evaluate, Value};
         use crate::backend::hlo::parser::parse_module;
+        for &(rows_n, k) in &[(256usize, 512usize), (1024, 256)] {
+            let mut hb = HloBuilder::new("redbench");
+            let p = hb.param(Ty::F32, vec![rows_n, k]);
+            let s = hb.reduce_add(&p, &[1]);
+            let mx = hb.reduce_max(&p, &[1]);
+            let text = hb.finish(&[&s, &mx]);
+            let module = parse_module(&text)?;
+            let x = Rc::new(Value::f32(vec![rows_n, k], vec![0.5; rows_n * k]));
+            let samples = time_loop(
+                || {
+                    let _ = evaluate(&module, &[Rc::clone(&x)])?;
+                    Ok(())
+                },
+                iters,
+            )?;
+            let s = summarize(&samples);
+            let name = format!("interp_reduce_{rows_n}x{k}");
+            rows.push(vec![
+                name.clone(),
+                format!("{:.2}", s.mean),
+                format!("{:.2}", s.p50),
+                format!("{:.2}", s.p99),
+            ]);
+            report.push(Json::obj(vec![
+                ("exec", Json::str(&name)),
+                ("mean_ms", Json::num(s.mean)),
+                ("p50_ms", Json::num(s.p50)),
+            ]));
+        }
         for &(m, k, n) in &[(32usize, 64usize, 64usize), (128, 128, 128)] {
             let mut hb = HloBuilder::new("dotbench");
             let pa = hb.param(Ty::F32, vec![m, k]);

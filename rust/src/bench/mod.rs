@@ -11,6 +11,7 @@ pub mod depth;
 pub mod fig3;
 pub mod harness;
 pub mod microbench;
+pub mod serving;
 pub mod table1;
 pub mod table2;
 pub mod table3;
@@ -61,12 +62,14 @@ pub fn run_named(name: &str, quick: bool) -> Result<()> {
         "fig3" => fig3::run(&env),
         "microbench" => microbench::run(&env),
         "depth" => depth::run(&env),
+        "serve" => serving::run(&env),
         "all" => {
             table1::run(&env)?;
             table2::run(&env)?;
             table3::run(&env)?;
             fig3::run(&env)?;
             depth::run(&env)?;
+            serving::run(&env)?;
             microbench::run(&env)
         }
         other => anyhow::bail!("unknown bench {other:?}"),

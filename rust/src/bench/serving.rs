@@ -1,0 +1,221 @@
+//! Open-loop TCP serving bench: tail latency vs offered load, per
+//! scheduling policy.
+//!
+//! For each (policy, arrival rate) cell this harness boots the real TCP
+//! server (`coordinator/server.rs`) over a continuous-batching engine,
+//! replays a Poisson trace against it through
+//! [`crate::workload::replay_trace_tcp`] — real connections, streaming
+//! on, TTFT marked at the first `tokens` frame — and reports
+//! p50/p95/p99 TTFT plus per-token decode latency. This is the
+//! ROADMAP's open-loop serving study: unlike the closed-loop Table 3
+//! (which only measures throughput), an open-loop client keeps sending
+//! at the offered rate while the server falls behind, so queueing shows
+//! up as TTFT tail growth — exactly what chunked prefill and the
+//! scheduler policies are meant to shape.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{BatchConfig, BatchEngine, BatchMethod, PolicyKind, Server, ServerConfig};
+use crate::runtime::{ArtifactStore, Runtime};
+use crate::util::json::Json;
+use crate::util::stats::percentile_sorted;
+use crate::workload::{batched_serving_target, poisson_trace, replay_trace_tcp};
+
+use super::harness::{render_table, write_report, BenchEnv};
+
+const BASE_PORT: u16 = 7461;
+
+struct Cell {
+    policy: PolicyKind,
+    rate: f64,
+    done: usize,
+    shed: usize,
+    ttft_p50: f64,
+    ttft_p95: f64,
+    ttft_p99: f64,
+    tok_p50: f64,
+    tok_p95: f64,
+    server_report: String,
+}
+
+fn percentiles(mut xs: Vec<f64>) -> (f64, f64, f64) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        percentile_sorted(&xs, 0.5),
+        percentile_sorted(&xs, 0.95),
+        percentile_sorted(&xs, 0.99),
+    )
+}
+
+/// Everything shared across the bench's (policy, rate) cells.
+struct CellSetup<'a> {
+    kind: crate::backend::BackendKind,
+    dir: &'a std::path::Path,
+    batch: usize,
+    prompts: &'a [String],
+    n: usize,
+    max_new: usize,
+}
+
+fn run_cell(setup: &CellSetup, policy: PolicyKind, rate: f64, port: u16) -> Result<Cell> {
+    let addr = format!("127.0.0.1:{port}");
+    let kind = setup.kind;
+    let batch = setup.batch;
+    let dir2 = setup.dir.to_path_buf();
+    let addr2 = addr.clone();
+    let server_thread = std::thread::spawn(move || -> Result<String> {
+        let rt = Arc::new(Runtime::new(kind)?);
+        let store = Rc::new(ArtifactStore::open(rt, dir2)?);
+        let mut cfg = BatchConfig::new(batch, BatchMethod::FastEagle);
+        cfg.policy = policy;
+        let engine = BatchEngine::new(Rc::clone(&store), cfg)?;
+        let server = Server::new(ServerConfig {
+            addr: addr2,
+            queue_capacity: 64,
+            ..Default::default()
+        });
+        let m = server.serve(engine)?;
+        Ok(m.report())
+    });
+    // wait for the listener; if the server thread already died, surface
+    // its real error instead of a generic timeout
+    let mut up = false;
+    for _ in 0..600 {
+        if std::net::TcpStream::connect(&addr).is_ok() {
+            up = true;
+            break;
+        }
+        if server_thread.is_finished() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    if !up {
+        if server_thread.is_finished() {
+            return match server_thread.join() {
+                Ok(Ok(_)) => {
+                    Err(anyhow::anyhow!("bench server exited before serving on {addr}"))
+                }
+                Ok(Err(e)) => {
+                    Err(e.context(format!("bench server failed to start on {addr}")))
+                }
+                Err(_) => Err(anyhow::anyhow!("bench server thread panicked")),
+            };
+        }
+        anyhow::bail!("bench server did not start on {addr}");
+    }
+
+    let trace = poisson_trace(setup.prompts, setup.n, rate, setup.max_new, 42);
+    let stats = replay_trace_tcp(&addr, &trace)?;
+
+    // shutdown the server and collect its own metrics line
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let s = std::net::TcpStream::connect(&addr)?;
+        let mut w = s.try_clone()?;
+        writeln!(w, "{}", r#"{"cmd":"shutdown"}"#)?;
+        let mut line = String::new();
+        let _ = BufReader::new(s).read_line(&mut line);
+    }
+    let server_report = server_thread
+        .join()
+        .map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+
+    let ok: Vec<_> = stats.iter().filter(|s| s.error.is_none()).collect();
+    let shed = stats.len() - ok.len();
+    if ok.is_empty() {
+        anyhow::bail!("open-loop bench completed zero requests");
+    }
+    let (ttft_p50, ttft_p95, ttft_p99) =
+        percentiles(ok.iter().map(|s| s.ttft_ms).collect());
+    let (tok_p50, tok_p95, _) =
+        percentiles(ok.iter().map(|s| s.per_token_ms()).collect());
+    Ok(Cell {
+        policy,
+        rate,
+        done: ok.len(),
+        shed,
+        ttft_p50,
+        ttft_p95,
+        ttft_p99,
+        tok_p50,
+        tok_p95,
+        server_report,
+    })
+}
+
+pub fn run(env: &BenchEnv) -> Result<()> {
+    let Some((dir, batch)) = batched_serving_target(&env.artifacts) else {
+        println!("bench serve: no serving target under {:?}; skipping", env.artifacts);
+        return Ok(());
+    };
+    let prompts = env.prompts("dialog", 8).context("dialog prompts")?;
+    let (n, max_new, rates): (usize, usize, Vec<f64>) = if env.quick {
+        (8, 12, vec![2.0, 8.0])
+    } else {
+        (24, 32, vec![1.0, 4.0, 16.0])
+    };
+
+    let setup = CellSetup {
+        kind: env.runtime.kind(),
+        dir: &dir,
+        batch,
+        prompts: &prompts,
+        n,
+        max_new,
+    };
+    let mut rows = Vec::new();
+    let mut report = Vec::new();
+    let mut port = BASE_PORT;
+    for policy in [PolicyKind::Fcfs, PolicyKind::Spf] {
+        for &rate in &rates {
+            let cell = run_cell(&setup, policy, rate, port)?;
+            port += 1;
+            println!(
+                "serve[{} @ {:>5.1} req/s]: {}",
+                cell.policy.name(),
+                rate,
+                cell.server_report
+            );
+            rows.push(vec![
+                cell.policy.name().to_string(),
+                format!("{:.1}", cell.rate),
+                format!("{}", cell.done),
+                format!("{}", cell.shed),
+                format!("{:.0}", cell.ttft_p50),
+                format!("{:.0}", cell.ttft_p95),
+                format!("{:.0}", cell.ttft_p99),
+                format!("{:.1}", cell.tok_p50),
+                format!("{:.1}", cell.tok_p95),
+            ]);
+            report.push(Json::obj(vec![
+                ("policy", Json::str(policy.name())),
+                ("rate_per_sec", Json::num(rate)),
+                ("done", Json::num(cell.done as f64)),
+                ("shed", Json::num(cell.shed as f64)),
+                ("ttft_p50_ms", Json::num(cell.ttft_p50)),
+                ("ttft_p95_ms", Json::num(cell.ttft_p95)),
+                ("ttft_p99_ms", Json::num(cell.ttft_p99)),
+                ("per_token_p50_ms", Json::num(cell.tok_p50)),
+                ("per_token_p95_ms", Json::num(cell.tok_p95)),
+            ]));
+        }
+    }
+
+    println!("\n=== Open-loop TCP serving: TTFT / per-token latency vs offered load ===");
+    let headers: Vec<String> = [
+        "policy", "req/s", "done", "shed", "ttft_p50", "ttft_p95", "ttft_p99",
+        "tok_p50", "tok_p95",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    println!("{}", render_table(&headers, &rows));
+    println!("(TTFT and per-token figures in ms, measured from scheduled arrival)");
+    let path = write_report("serve_open_loop", &Json::Arr(report))?;
+    println!("report -> {path:?}");
+    Ok(())
+}

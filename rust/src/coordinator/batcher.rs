@@ -3,32 +3,41 @@
 //! paper's Table 3 study (throughput vs batch size, chain length 2,
 //! tree disabled).
 //!
-//! Design mirrors vLLM's single-scheduler loop at miniature scale. The
-//! engine is **step-driven**: each [`BatchEngine::step`] performs one
-//! admission pass over the internal pending queue plus one batched
-//! decode iteration, and returns whichever requests completed
+//! Design mirrors vLLM's single-scheduler loop at miniature scale, with
+//! the *decisions* carved out into [`super::scheduler`]: each
+//! [`BatchEngine::step`] asks the [`Scheduler`] for a [`SchedulePlan`]
+//! (admit / chunk-prefill / run / preempt / resume over read-only
+//! views) and merely executes it — one batched iteration per step —
+//! returning whichever requests completed
 //! ([`BatchEngine::step_events`] additionally reports every slot's
-//! per-cycle [`SlotEvent`] — what the server's streaming frames are made
-//! of). The closed-workload [`BatchEngine::run`] used by the benches is
-//! a thin wrapper that submits everything up front and steps until
-//! drained — the serving loop and the benchmark exercise the same code
-//! path.
+//! per-cycle [`SlotEvent`] — what the server's streaming frames are
+//! made of). The closed-workload [`BatchEngine::run`] used by the
+//! benches is a thin wrapper that submits everything up front and steps
+//! until drained — the serving loop and the benchmark exercise the same
+//! code path.
 //!
 //! Each slot drives the same [`SlotCycle`] core as the single-request
 //! `GenSession` (prompt budget, tree build from `DraftOutput`, mask-row
 //! construction, lossless accept, commit bookkeeping) — only the
 //! forward passes are batched here.
 //!
-//! * **Admission lane**: new requests prefill on the B=1 executables,
-//!   then their KV/drafter state is copied into a free slot of the
-//!   batched state tensors. Generation parameters (temperature, seed,
-//!   max_new_tokens, stop_on_eos) are honored **per request** — each
-//!   slot carries its own sampler — and so is the **method**: one pool
-//!   serves fasteagle, eagle3 and vanilla slots side by side
-//!   (`Request::method`, falling back to the engine default).
+//! * **Chunked prefill on the batched lane**: admission is cheap (a KV
+//!   lease plus a [`SlotPhase::Prefilling`] slot); the prompt is then
+//!   ingested in fixed-token chunks that ride the *same* batched target
+//!   call that verifies the decoding slots' trees, so a long prompt
+//!   never head-of-line-blocks decode progress. Generation parameters
+//!   (temperature, seed, max_new_tokens, stop_on_eos) are honored
+//!   **per request** — each slot carries its own sampler — and so are
+//!   the **method** (one pool serves fasteagle, eagle3 and vanilla
+//!   slots side by side) and the scheduling **priority**.
 //! * **Decode loop**: one batched draft per drafting method + one
 //!   batched verification per iteration; per-slot lossless acceptance
 //!   and KV compaction on the host.
+//! * **Preemption with lease shrinking**: under pool pressure the
+//!   policy can pause a lower-priority decoding slot — its KV state is
+//!   parked on the host, its lease shrunk to exactly the committed
+//!   prefix — and resume it later with no recomputation (the committed
+//!   output is byte-identical to an uninterrupted run).
 //! * **Slot eviction**: a finished request's KV lease is released and
 //!   its lane zeroed in the same iteration it completes, so queued work
 //!   can be admitted on the very next step.
@@ -39,22 +48,26 @@
 //!   mechanism that caps FastEagle's batched throughput in Table 3.
 //!   Each distinct request's deferral is counted once
 //!   (`requests_deferred`), no matter how many scheduler passes it
-//!   waits through.
+//!   waits through — that bookkeeping lives in the scheduler now.
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::VecDeque;
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::draft::{DraftOutput, Drafter, EagleDrafter, FastEagleDrafter, ObserveArgs};
-use crate::model::{BlockPool, KvCache, Lease, MaskRow, ModelSpec, TargetModel, Tokenizer, NEG};
+use crate::model::{BlockPool, KvCache, Lease, MaskRow, ModelSpec, Tokenizer, NEG};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::ArtifactStore;
-use crate::spec::{prompt_budget, truncate_prompt, verify_rows, DraftTree, SlotCycle};
+use crate::spec::{prompt_budget, truncate_prompt, verify_rows, DraftTree, SlotCycle, SlotPhase};
 
 use super::metrics::ServingMetrics;
 use super::request::{Request, Response};
+use super::scheduler::{
+    preempt::shrink_gain, ActiveView, ParkedView, PendingView, PolicyKind, PrefillProgress,
+    SchedConfig, SchedView, SchedulePlan, Scheduler,
+};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BatchMethod {
@@ -98,11 +111,19 @@ pub struct BatchConfig {
     pub method: BatchMethod,
     /// draft chain length per cycle (Table 3: 2). Engine-wide because it
     /// fixes the lowered executable shapes; everything else (temperature,
-    /// seed, max_new_tokens, stop_on_eos, method) is per-request.
+    /// seed, max_new_tokens, stop_on_eos, method, priority) is
+    /// per-request.
     pub chain_len: usize,
     /// KV block pool (admission control); `None` = unbounded
     pub pool_blocks: Option<usize>,
     pub block_slots: usize,
+    /// scheduling policy (`--policy fcfs|spf`)
+    pub policy: PolicyKind,
+    /// max prompt tokens ingested per slot per step; the batched call's
+    /// verify rows (`1 + chain_len`) are a further hard cap
+    pub prefill_chunk: usize,
+    /// preemption budget per scheduler step (0 disables preemption)
+    pub max_preemptions_per_step: usize,
 }
 
 impl BatchConfig {
@@ -113,6 +134,9 @@ impl BatchConfig {
             chain_len: 2,
             pool_blocks: None,
             block_slots: 16,
+            policy: PolicyKind::Fcfs,
+            prefill_chunk: usize::MAX,
+            max_preemptions_per_step: 1,
         }
     }
 }
@@ -120,18 +144,55 @@ impl BatchConfig {
 struct Slot {
     req: Request,
     method: BatchMethod,
+    /// prompt-ingestion progress; `Some` while the slot is Prefilling
+    prefill: Option<PrefillProgress>,
     /// the shared per-request cycle core (sampler, pending token,
     /// committed output, termination) — same state machine as
-    /// `GenSession`
-    cycle: SlotCycle,
-    /// when the request entered its slot (gen_ms = admitted_at -> retire)
+    /// `GenSession`; `Some` once Decoding
+    cycle: Option<SlotCycle>,
+    /// when the request (re-)entered its slot; `gen_ms_accum` carries
+    /// generation time from before a preemption
     admitted_at: Instant,
+    gen_ms_accum: f64,
     lease: Lease,
     // FastEagle per-slot draft state: [N, V] logits from the cascade
     fe_logits: Vec<f32>,
     // EAGLE per-slot draft state
     eg_h: Vec<f32>,
     eg_q1: Vec<f32>,
+}
+
+impl Slot {
+    fn phase(&self) -> SlotPhase {
+        if self.prefill.is_some() {
+            SlotPhase::Prefilling
+        } else {
+            SlotPhase::Decoding
+        }
+    }
+
+    fn finished(&self) -> bool {
+        self.cycle.as_ref().map(|c| c.finished()).unwrap_or(false)
+    }
+}
+
+/// A preempted request's complete state, parked on the host: KV +
+/// drafter tensors for its committed prefix, the live `SlotCycle`
+/// (sampler stream included, so the stochastic output is unchanged by
+/// the pause), and the shrunk lease that still pays for the parked
+/// rows.
+struct Parked {
+    req: Request,
+    method: BatchMethod,
+    cycle: SlotCycle,
+    kv: KvCache,
+    fe_dkv: Option<KvCache>,
+    eg_dkv: Option<KvCache>,
+    fe_logits: Vec<f32>,
+    eg_h: Vec<f32>,
+    eg_q1: Vec<f32>,
+    lease: Lease,
+    gen_ms_accum: f64,
 }
 
 /// One slot's cycle outcome within a [`BatchEngine::step_events`] —
@@ -154,45 +215,10 @@ pub struct SlotEvent {
 /// What one scheduler step produced.
 #[derive(Debug, Default)]
 pub struct StepOutcome {
-    /// completed (or failed-at-admission) requests
+    /// completed (or failed) requests
     pub finished: Vec<Response>,
     /// one event per active slot that ran a cycle this step
     pub events: Vec<SlotEvent>,
-}
-
-/// Pool-admission bookkeeping shared by [`BatchEngine::step`] and the
-/// unit tests: decides whether the head-of-queue request can take a free
-/// slot, counting each distinct request's deferral exactly once (a
-/// request waiting through many scheduler passes used to inflate
-/// `requests_rejected` once per pass).
-#[derive(Debug, Default)]
-struct AdmissionLedger {
-    deferred: HashSet<u64>,
-}
-
-impl AdmissionLedger {
-    fn try_admit(
-        &mut self,
-        pool: &mut BlockPool,
-        cost: usize,
-        id: u64,
-        metrics: &mut ServingMetrics,
-    ) -> Option<Lease> {
-        if !pool.can_alloc(cost) {
-            if self.deferred.insert(id) {
-                metrics.requests_deferred += 1;
-            }
-            return None;
-        }
-        self.deferred.remove(&id);
-        let mut lease = Lease::default();
-        pool.alloc(cost, &mut lease).expect("can_alloc checked");
-        Some(lease)
-    }
-
-    fn clear(&mut self) {
-        self.deferred.clear();
-    }
 }
 
 pub struct BatchEngine {
@@ -211,7 +237,9 @@ pub struct BatchEngine {
     pool: BlockPool,
     /// submitted but not yet admitted to a slot
     pending: VecDeque<Request>,
-    ledger: AdmissionLedger,
+    /// preempted requests awaiting resume (state parked on the host)
+    parked: VecDeque<Parked>,
+    scheduler: Scheduler,
 }
 
 /// Batched additive mask [B, T, S] from per-slot row descriptors.
@@ -256,6 +284,13 @@ impl BatchEngine {
         let pool_blocks = cfg.pool_blocks.unwrap_or(usize::MAX / 4);
         let pool = BlockPool::new(pool_blocks, cfg.block_slots);
         let slots = (0..b).map(|_| None).collect();
+        let scheduler = Scheduler::new(
+            cfg.policy,
+            SchedConfig {
+                prefill_chunk: cfg.prefill_chunk,
+                max_preemptions_per_step: cfg.max_preemptions_per_step,
+            },
+        );
         Ok(BatchEngine {
             store,
             spec,
@@ -267,13 +302,19 @@ impl BatchEngine {
             slots,
             pool,
             pending: VecDeque::new(),
-            ledger: AdmissionLedger::default(),
+            parked: VecDeque::new(),
+            scheduler,
         })
     }
 
     /// The engine's default method (requests may override per-request).
     pub fn method(&self) -> BatchMethod {
         self.cfg.method
+    }
+
+    /// Active scheduling policy name (observability).
+    pub fn policy_name(&self) -> &'static str {
+        self.scheduler.policy_name()
     }
 
     /// Decode committed tokens with this engine's tokenizer — how
@@ -305,8 +346,19 @@ impl BatchEngine {
         self.pending.len()
     }
 
+    /// Preempted requests parked awaiting resume.
+    pub fn parked_len(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Lifecycle phase of one slot (`None` = free) — test/observability
+    /// hook for the chunked-prefill and preemption paths.
+    pub fn slot_phase(&self, b: usize) -> Option<SlotPhase> {
+        self.slots.get(b).and_then(|s| s.as_ref()).map(|s| s.phase())
+    }
+
     pub fn has_work(&self) -> bool {
-        self.active_len() > 0 || !self.pending.is_empty()
+        self.active_len() > 0 || !self.pending.is_empty() || !self.parked.is_empty()
     }
 
     /// How many more requests the engine wants queued internally: enough
@@ -343,6 +395,11 @@ impl BatchEngine {
             .blocks_for(self.spec.max_seq, self.spec.n_layers + drafter_layers)
     }
 
+    /// Target + drafter KV layers a request's lease pays for.
+    fn lease_layers(&self, method: BatchMethod) -> usize {
+        self.spec.n_layers + method.drafter_kv_layers(&self.spec)
+    }
+
     fn ensure_fe_dkv(&mut self) -> Result<&mut KvCache> {
         if self.fe_dkv.is_none() {
             self.fe_dkv = Some(KvCache::zeros(vec![
@@ -370,16 +427,87 @@ impl BatchEngine {
         Ok(self.eg_dkv.as_mut().unwrap())
     }
 
-    /// Prefill one request on the B=1 lane and move its state into slot
-    /// `slot_idx`. The lease is taken only on success — on error the
-    /// caller still owns it and must release it back to the pool.
-    fn admit(&mut self, slot_idx: usize, req: Request, lease: &mut Lease) -> Result<()> {
-        // gen_ms spans from here so prefill time is covered by it (the
-        // queue-wait histogram ends at the admission decision)
-        let admitted_at = Instant::now();
+    /// Verify rows the batched call exposes per step — the hard cap on
+    /// a slot's prefill chunk.
+    fn max_rows(&self) -> usize {
+        1 + self.cfg.chain_len
+    }
+
+    /// Snapshot the engine state for the scheduler.
+    fn sched_view(&self) -> SchedView {
+        let bsz = self.cfg.batch;
+        let free_slots: Vec<usize> =
+            (0..bsz).filter(|&b| self.slots[b].is_none()).collect();
+        let pending: Vec<PendingView> = self
+            .pending
+            .iter()
+            .map(|r| {
+                let budget = prompt_budget(
+                    self.spec.max_seq,
+                    r.cfg.max_new_tokens,
+                    self.cfg.chain_len + 3,
+                );
+                PendingView {
+                    id: r.id,
+                    priority: r.priority,
+                    // byte tokenizer: prompt bytes + BOS, pre-truncation cap
+                    prompt_tokens: (r.prompt.len() + 1).min(budget.max(1)),
+                    cost_blocks: self.request_blocks(self.method_of(r)),
+                }
+            })
+            .collect();
+        let parked: Vec<ParkedView> = self
+            .parked
+            .iter()
+            .map(|p| ParkedView {
+                id: p.req.id,
+                priority: p.req.priority,
+                resume_delta_blocks: self
+                    .request_blocks(p.method)
+                    .saturating_sub(p.lease.blocks.len()),
+            })
+            .collect();
+        let active: Vec<ActiveView> = (0..bsz)
+            .filter_map(|b| {
+                let slot = self.slots[b].as_ref()?;
+                let committed_cost = self
+                    .pool
+                    .blocks_for(self.kv.len(b), self.lease_layers(slot.method));
+                Some(ActiveView {
+                    slot: b,
+                    id: slot.req.id,
+                    priority: slot.req.priority,
+                    phase: slot.phase(),
+                    prefill_remaining: slot
+                        .prefill
+                        .as_ref()
+                        .map(|p| p.remaining())
+                        .unwrap_or(0),
+                    shrink_gain_blocks: match slot.phase() {
+                        SlotPhase::Decoding => {
+                            shrink_gain(slot.lease.blocks.len(), committed_cost)
+                        }
+                        SlotPhase::Prefilling => 0,
+                    },
+                    finished: slot.finished(),
+                })
+            })
+            .collect();
+        SchedView {
+            free_slots,
+            pool_available: self.pool.available(),
+            max_rows: self.max_rows(),
+            pending,
+            parked,
+            active,
+        }
+    }
+
+    /// Place a pending request into a free slot as `Prefilling`. Cheap:
+    /// no forward pass — the prompt is ingested chunk by chunk on the
+    /// batched lane by subsequent iterations.
+    fn admit_request(&mut self, slot_idx: usize, req: Request, lease: Lease) {
         let method = self.method_of(&req);
-        let target = TargetModel::open(Rc::clone(&self.store))?;
-        let mut kv1 = target.new_kv()?;
         let mut ptoks = self.tokenizer.encode_prompt(&req.prompt);
         let budget = prompt_budget(
             self.spec.max_seq,
@@ -387,71 +515,127 @@ impl BatchEngine {
             self.cfg.chain_len + 3,
         );
         truncate_prompt(&mut ptoks, budget);
-        let pre = target.prefill(&mut kv1, &ptoks)?;
-        // per-request generation parameters: the slot owns its cycle
-        // core (sampler, pending token, output, termination)
-        let cycle = SlotCycle::start(req.cfg.clone(), &pre.last_logits);
-        let mut next: Vec<i32> = ptoks[1..].to_vec();
-        next.push(cycle.pending);
-
-        let mut slot = Slot {
+        if ptoks.is_empty() {
+            // degenerate budget (max_new ~ max_seq): keep one row so the
+            // slot still produces last-token logits
+            ptoks.push(self.spec.bos);
+        }
+        self.kv.set_len(slot_idx, 0);
+        self.slots[slot_idx] = Some(Slot {
             req,
             method,
-            cycle,
-            admitted_at,
-            lease: Lease::default(),
+            prefill: Some(PrefillProgress::new(ptoks)),
+            cycle: None,
+            admitted_at: Instant::now(),
+            gen_ms_accum: 0.0,
+            lease,
             fe_logits: Vec::new(),
             eg_h: Vec::new(),
             eg_q1: Vec::new(),
+        });
+    }
+
+    /// Pause a decoding slot under pool pressure: park its KV/drafter
+    /// state on the host, shrink its lease to the committed prefix, and
+    /// queue it for resume. The sampler stream travels with the
+    /// `SlotCycle`, so the eventual output is byte-identical to an
+    /// uninterrupted run.
+    fn park_slot(&mut self, b: usize, metrics: &mut ServingMetrics) -> Result<()> {
+        let mut slot = self.slots[b].take().expect("preempt of empty slot");
+        let committed = self.kv.len(b);
+        let kv = self.kv.extract_request(b)?;
+        self.kv.set_len(b, 0);
+        let fe_dkv = match (&slot.method, self.fe_dkv.as_mut()) {
+            (BatchMethod::FastEagle, Some(d)) => {
+                let parked = d.extract_request(b)?;
+                d.set_len(b, 0);
+                Some(parked)
+            }
+            _ => None,
         };
-        self.kv.copy_request_from(slot_idx, &kv1)?;
-        match method {
-            BatchMethod::Vanilla => {}
-            BatchMethod::FastEagle => {
-                let mut d =
-                    FastEagleDrafter::new(Rc::clone(&self.store), "fasteagle", "fe")?;
-                d.observe(ObserveArgs {
-                    feats: &pre.feats,
-                    anchor_tokens: &ptoks,
-                    next_tokens: &next,
-                    first_pos: 0,
-                })?;
-                let (dkv1, logits) = d.state();
-                slot.fe_logits = logits.to_vec();
-                self.ensure_fe_dkv()?.copy_request_from(slot_idx, dkv1)?;
+        let eg_dkv = match (&slot.method, self.eg_dkv.as_mut()) {
+            (BatchMethod::Eagle3, Some(d)) => {
+                let parked = d.extract_request(b)?;
+                d.set_len(b, 0);
+                Some(parked)
             }
-            BatchMethod::Eagle3 => {
-                let mut d = EagleDrafter::new(Rc::clone(&self.store), "eagle3", true)?;
-                d.observe(ObserveArgs {
-                    feats: &pre.feats,
-                    anchor_tokens: &ptoks,
-                    next_tokens: &next,
-                    first_pos: 0,
-                })?;
-                let (ekv1, h, q1) = d.state();
-                slot.eg_h = h.to_vec();
-                slot.eg_q1 = q1.to_vec();
-                self.ensure_eg_dkv()?.copy_request_from(slot_idx, ekv1)?;
-            }
-        }
-        slot.lease = std::mem::take(lease);
-        self.slots[slot_idx] = Some(slot);
+            _ => None,
+        };
+        let layers = self.lease_layers(slot.method);
+        self.pool.shrink(&mut slot.lease, committed, layers);
+        metrics.preemptions += 1;
+        self.parked.push_back(Parked {
+            cycle: slot.cycle.take().expect("only decoding slots are preempted"),
+            req: slot.req,
+            method: slot.method,
+            kv,
+            fe_dkv,
+            eg_dkv,
+            fe_logits: slot.fe_logits,
+            eg_h: slot.eg_h,
+            eg_q1: slot.eg_q1,
+            lease: slot.lease,
+            gen_ms_accum: slot.gen_ms_accum
+                + slot.admitted_at.elapsed().as_secs_f64() * 1e3,
+        });
         Ok(())
     }
 
-    /// One draft per active slot, dispatched by the slot's method:
+    /// Restore a parked request into a free slot: grow the lease back
+    /// to full cost and copy its KV/drafter state into the lane.
+    fn resume_parked(
+        &mut self,
+        slot_idx: usize,
+        parked_idx: usize,
+        metrics: &mut ServingMetrics,
+    ) -> Result<()> {
+        let p = self
+            .parked
+            .remove(parked_idx)
+            .expect("resume of missing parked entry");
+        let layers = self.lease_layers(p.method);
+        let mut lease = p.lease;
+        self.pool.ensure(&mut lease, self.spec.max_seq, layers)?;
+        self.kv.copy_request_from(slot_idx, &p.kv)?;
+        if let Some(d) = &p.fe_dkv {
+            self.ensure_fe_dkv()?.copy_request_from(slot_idx, d)?;
+        }
+        if let Some(d) = &p.eg_dkv {
+            self.ensure_eg_dkv()?.copy_request_from(slot_idx, d)?;
+        }
+        self.slots[slot_idx] = Some(Slot {
+            req: p.req,
+            method: p.method,
+            prefill: None,
+            cycle: Some(p.cycle),
+            admitted_at: Instant::now(),
+            gen_ms_accum: p.gen_ms_accum,
+            lease,
+            fe_logits: p.fe_logits,
+            eg_h: p.eg_h,
+            eg_q1: p.eg_q1,
+        });
+        metrics.resumes += 1;
+        Ok(())
+    }
+
+    /// One draft per running slot, dispatched by the slot's method:
     /// FastEagle chains come straight off the cascade logits produced
     /// during observe (zero executable calls), EAGLE slots share one
     /// batched autoregressive loop, vanilla slots draft nothing.
-    fn draft_outputs(&mut self) -> Result<Vec<Option<DraftOutput>>> {
+    fn draft_outputs(&mut self, run: &[usize]) -> Result<Vec<Option<DraftOutput>>> {
         let bsz = self.cfg.batch;
         let (v, d, c) = (self.spec.vocab, self.spec.d_model, self.spec.max_seq);
         let depth = self.cfg.chain_len;
+        let mut in_run = vec![false; bsz];
+        for &b in run {
+            in_run[b] = true;
+        }
         let mut out: Vec<Option<DraftOutput>> = (0..bsz).map(|_| None).collect();
         // host-side methods first (no executable calls)
         for (b, s) in self.slots.iter_mut().enumerate() {
             let Some(slot) = s else { continue };
-            if slot.cycle.finished() {
+            if !in_run[b] {
                 continue;
             }
             match slot.method {
@@ -459,13 +643,14 @@ impl BatchEngine {
                 BatchMethod::FastEagle => {
                     // the cascade already produced all N levels during observe
                     let temp = slot.req.cfg.temperature;
+                    let cycle = slot.cycle.as_mut().expect("run slot is decoding");
                     let mut toks = Vec::with_capacity(depth);
                     let mut dists = Vec::with_capacity(depth);
                     for lvl in 0..depth.min(self.spec.draft_depth) {
                         let mut q = slot.fe_logits[lvl * v..(lvl + 1) * v].to_vec();
                         crate::util::rng::softmax_temp(&mut q, temp);
                         // chain links are q-samples at T>0 (losslessness)
-                        toks.push(slot.cycle.sampler.sample(&q));
+                        toks.push(cycle.sampler.sample(&q));
                         dists.push(q);
                     }
                     out[b] = Some(DraftOutput::Chain(toks, dists));
@@ -480,12 +665,11 @@ impl BatchEngine {
         let mut any_eagle = false;
         for (b, s) in self.slots.iter_mut().enumerate() {
             match s {
-                Some(slot)
-                    if slot.method == BatchMethod::Eagle3 && !slot.cycle.finished() =>
-                {
+                Some(slot) if in_run[b] && slot.method == BatchMethod::Eagle3 => {
                     let mut q = slot.eg_q1.clone();
                     crate::util::rng::softmax_temp(&mut q, slot.req.cfg.temperature);
-                    let tok = slot.cycle.sampler.sample(&q);
+                    let cycle = slot.cycle.as_mut().expect("run slot is decoding");
+                    let tok = cycle.sampler.sample(&q);
                     eg_chains[b] = Some((vec![tok], vec![q]));
                     hs.push(slot.eg_h.clone());
                     any_eagle = true;
@@ -540,7 +724,8 @@ impl BatchEngine {
                         let slot = self.slots[b].as_mut().unwrap();
                         let mut q = l[b * v..(b + 1) * v].to_vec();
                         crate::util::rng::softmax_temp(&mut q, slot.req.cfg.temperature);
-                        let tok = slot.cycle.sampler.sample(&q);
+                        let cycle = slot.cycle.as_mut().expect("run slot is decoding");
+                        let tok = cycle.sampler.sample(&q);
                         t.push(tok);
                         dd.push(q);
                         hs[b].copy_from_slice(&hvec[b * d..(b + 1) * d]);
@@ -557,121 +742,248 @@ impl BatchEngine {
         Ok(out)
     }
 
-    /// One batched decode iteration over all active slots. Returns
-    /// finished responses plus per-slot cycle events; finished slots are
-    /// evicted (lease released, lane zeroed) before returning so the
-    /// next admission pass can reuse them.
-    fn decode_iteration(
+    /// A finished prompt ingestion: start the slot's cycle core from the
+    /// last prompt token's logits and run the drafter's prompt observe
+    /// over the accumulated features. The observe runs on the B=1
+    /// drafter executables and its state is copied into the batch lane
+    /// — the batched observe call writes rows into *every* lane, so
+    /// using it for a single slot would corrupt the other slots'
+    /// drafter KV. (The expensive part — the target forward over the
+    /// prompt — already happened chunk by chunk on the batched lane.)
+    /// Errors here are per-request (missing drafter weights, say) — the
+    /// caller fails that request without poisoning the pool.
+    fn finalize_prefill(&mut self, b: usize, last_logits: &[f32]) -> Result<()> {
+        let (ptoks, feats, method, cfg) = {
+            let slot = self.slots[b].as_mut().expect("prefill slot");
+            let pf = slot.prefill.take().expect("finalize of non-prefilling slot");
+            (pf.ptoks, pf.feats, slot.method, slot.req.cfg.clone())
+        };
+        let cycle = SlotCycle::start(cfg, last_logits);
+        let mut next: Vec<i32> = ptoks[1..].to_vec();
+        next.push(cycle.pending);
+        match method {
+            BatchMethod::Vanilla => {}
+            BatchMethod::FastEagle => {
+                let mut d =
+                    FastEagleDrafter::new(Rc::clone(&self.store), "fasteagle", "fe")?;
+                d.observe(ObserveArgs {
+                    feats: &feats,
+                    anchor_tokens: &ptoks,
+                    next_tokens: &next,
+                    first_pos: 0,
+                })?;
+                let (dkv1, logits) = d.state();
+                let fe_logits = logits.to_vec();
+                self.ensure_fe_dkv()?.copy_request_from(b, dkv1)?;
+                self.slots[b].as_mut().unwrap().fe_logits = fe_logits;
+            }
+            BatchMethod::Eagle3 => {
+                let mut d = EagleDrafter::new(Rc::clone(&self.store), "eagle3", true)?;
+                d.observe(ObserveArgs {
+                    feats: &feats,
+                    anchor_tokens: &ptoks,
+                    next_tokens: &next,
+                    first_pos: 0,
+                })?;
+                let (ekv1, h, q1) = d.state();
+                let (eg_h, eg_q1) = (h.to_vec(), q1.to_vec());
+                self.ensure_eg_dkv()?.copy_request_from(b, ekv1)?;
+                let slot = self.slots[b].as_mut().unwrap();
+                slot.eg_h = eg_h;
+                slot.eg_q1 = eg_q1;
+            }
+        }
+        self.slots[b].as_mut().unwrap().cycle = Some(cycle);
+        Ok(())
+    }
+
+    /// Evict a slot whose drafter setup failed: release its lease and
+    /// answer the request with an error instead of poisoning the engine.
+    fn fail_slot(&mut self, b: usize, err: String, metrics: &mut ServingMetrics) -> Response {
+        let mut slot = self.slots[b].take().expect("failing an empty slot");
+        self.pool.release(&mut slot.lease);
+        self.kv.set_len(b, 0);
+        if let Some(dkv) = self.fe_dkv.as_mut() {
+            dkv.set_len(b, 0);
+        }
+        if let Some(dkv) = self.eg_dkv.as_mut() {
+            dkv.set_len(b, 0);
+        }
+        metrics.requests_failed += 1;
+        crate::log_warn!("request {} failed: {err}", slot.req.id);
+        Response::error(slot.req.id, err)
+    }
+
+    /// One batched iteration executing a plan's `prefill` + `run`
+    /// sections, then retiring finished slots (lease released, lane
+    /// zeroed) so the next admission pass can reuse them.
+    fn iteration(
         &mut self,
+        plan: &SchedulePlan,
         metrics: &mut ServingMetrics,
     ) -> Result<(Vec<Response>, Vec<SlotEvent>)> {
         let bsz = self.cfg.batch;
         let (v, fd, s) = (self.spec.vocab, self.spec.feat_dim, self.spec.max_seq);
         let eos_tok = self.spec.eos;
-        // verification rows this iteration: 1 when only vanilla slots
-        // are active, root + chain otherwise (mixed pools pad the
-        // vanilla slots' unused rows)
-        let any_draft = self.slots.iter().flatten().any(|sl| {
-            sl.method != BatchMethod::Vanilla && !sl.cycle.finished()
-        });
-        let m = if any_draft { 1 + self.cfg.chain_len } else { 1 };
-        let drafts = self.draft_outputs()?;
-        // assemble per-slot trees through the shared cycle core
-        let mut trees: Vec<Option<DraftTree>> = (0..bsz).map(|_| None).collect();
-        for (b, draft) in drafts.into_iter().enumerate() {
-            let Some(slot) = &mut self.slots[b] else { continue };
-            if slot.cycle.finished() {
-                continue;
-            }
-            trees[b] = Some(slot.cycle.build_tree(draft.unwrap_or(DraftOutput::None), 1));
-        }
-        // batched verify
-        let mut tokens = vec![self.spec.pad; bsz * m];
-        let mut pos = vec![0i32; bsz * m];
-        let mut ctx = vec![0i32; bsz];
-        let mut rows: Vec<Vec<MaskRow>> = vec![vec![]; bsz];
-        for b in 0..bsz {
-            let Some(tree) = &trees[b] else { continue };
-            let base = self.kv.len(b);
-            ctx[b] = base as i32;
-            let (toks, ps, rws) = verify_rows(tree, base, s);
-            tokens[b * m..b * m + tree.len()].copy_from_slice(&toks);
-            pos[b * m..b * m + tree.len()].copy_from_slice(&ps);
-            rows[b] = rws;
-        }
-        let mask = build_mask_b(bsz, m, s, &rows);
-        let exec = self
-            .store
-            .bind(&format!("tgt_m{m}{}", self.exec_suffix()), "target")?;
-        let tok_t = HostTensor::i32(vec![bsz, m], tokens);
-        let pos_t = HostTensor::i32(vec![bsz, m], pos);
-        let ctx_t = HostTensor::i32(vec![bsz], ctx);
-        let outs = exec.call(
-            &self.store.runtime,
-            &[
-                ("tokens", &tok_t),
-                ("positions", &pos_t),
-                ("mask", &mask),
-                ("cache_len", &ctx_t),
-                ("kv", self.kv.tensor()),
-            ],
-        )?;
-        let logits = outs[exec.out_idx("logits")?].as_f32()?.to_vec();
-        let feats = outs[exec.out_idx("feats")?].as_f32()?.to_vec();
-        let ki = exec.out_idx("kv")?;
-        let mut outs = outs;
-        self.kv.update_from(outs.swap_remove(ki))?;
-
-        // per-slot acceptance + commit through the shared cycle core
-        let mut observe_feats: Vec<Vec<f32>> = vec![vec![]; bsz];
-        let mut observe_next: Vec<Vec<i32>> = vec![vec![]; bsz];
-        let mut observe_first: Vec<usize> = vec![0; bsz];
-        let mut events = Vec::new();
         let mut finished = Vec::new();
-        for b in 0..bsz {
-            let Some(tree) = &trees[b] else { continue };
-            let base = self.kv.len(b);
-            let slot = self.slots[b].as_mut().unwrap();
-            let acc = slot.cycle.accept(
-                tree,
-                &logits[b * m * v..(b * m + tree.len()) * v],
-                v,
-            );
-            self.kv.compact(b, base, &acc.accepted_slots)?;
-            if slot.cycle.metrics.cycles == 1 {
-                metrics.record_first_cycle(slot.req.arrival.elapsed());
-            }
-            let commit = slot.cycle.commit(tree, &acc, eos_tok);
-            let mut f = Vec::with_capacity(acc.accepted_slots.len() * fd);
-            for &sl in &acc.accepted_slots {
-                f.extend_from_slice(&feats[(b * m + sl) * fd..(b * m + sl + 1) * fd]);
-            }
-            observe_feats[b] = f;
-            observe_next[b] = commit.observe_next;
-            observe_first[b] = base;
-            events.push(SlotEvent {
-                id: slot.req.id,
-                cycle: slot.cycle.metrics.cycles,
-                tokens: commit.committed,
-                accepted_len: acc.accepted_slots.len(),
-                finished: commit.finished,
+        let mut events = Vec::new();
+        if plan.has_work() {
+            // verification rows this iteration: 1 when only vanilla
+            // decoders run, root + chain when anything drafts or
+            // prefills (mixed pools pad the unused rows)
+            let any_draft = plan.run.iter().any(|&b| {
+                matches!(&self.slots[b], Some(sl) if sl.method != BatchMethod::Vanilla)
             });
-        }
+            let m = if any_draft || !plan.prefill.is_empty() {
+                1 + self.cfg.chain_len
+            } else {
+                1
+            };
+            let drafts = self.draft_outputs(&plan.run)?;
+            // assemble per-slot trees through the shared cycle core
+            let mut trees: Vec<Option<DraftTree>> = (0..bsz).map(|_| None).collect();
+            for &b in &plan.run {
+                let slot = self.slots[b].as_mut().expect("run slot occupied");
+                let cycle = slot.cycle.as_mut().expect("run slot is decoding");
+                let draft = drafts[b].clone().unwrap_or(DraftOutput::None);
+                trees[b] = Some(cycle.build_tree(draft, 1));
+            }
+            // batched call: tree rows for decoders, prompt-chunk rows for
+            // prefilling slots
+            let mut tokens = vec![self.spec.pad; bsz * m];
+            let mut pos = vec![0i32; bsz * m];
+            let mut ctx = vec![0i32; bsz];
+            let mut rows: Vec<Vec<MaskRow>> = vec![vec![]; bsz];
+            for b in 0..bsz {
+                let Some(tree) = &trees[b] else { continue };
+                let base = self.kv.len(b);
+                ctx[b] = base as i32;
+                let (toks, ps, rws) = verify_rows(tree, base, s);
+                tokens[b * m..b * m + tree.len()].copy_from_slice(&toks);
+                pos[b * m..b * m + tree.len()].copy_from_slice(&ps);
+                rows[b] = rws;
+            }
+            for &(b, n) in &plan.prefill {
+                let slot = self.slots[b].as_ref().expect("prefill slot occupied");
+                let pf = slot.prefill.as_ref().expect("prefill slot is prefilling");
+                let base = pf.pos;
+                debug_assert_eq!(self.kv.len(b), base, "prefill pos tracks kv len");
+                debug_assert!(n <= m, "chunk exceeds verify rows");
+                ctx[b] = base as i32;
+                for i in 0..n {
+                    tokens[b * m + i] = pf.ptoks[base + i];
+                    pos[b * m + i] = ((base + i) as i32).min(s as i32 - 1);
+                }
+                rows[b] = (0..n)
+                    .map(|i| MaskRow { prefix_upto: base + i + 1, extra: vec![] })
+                    .collect();
+            }
+            let mask = build_mask_b(bsz, m, s, &rows);
+            let exec = self
+                .store
+                .bind(&format!("tgt_m{m}{}", self.exec_suffix()), "target")?;
+            let tok_t = HostTensor::i32(vec![bsz, m], tokens);
+            let pos_t = HostTensor::i32(vec![bsz, m], pos);
+            let ctx_t = HostTensor::i32(vec![bsz], ctx);
+            let outs = exec.call(
+                &self.store.runtime,
+                &[
+                    ("tokens", &tok_t),
+                    ("positions", &pos_t),
+                    ("mask", &mask),
+                    ("cache_len", &ctx_t),
+                    ("kv", self.kv.tensor()),
+                ],
+            )?;
+            let logits = outs[exec.out_idx("logits")?].as_f32()?.to_vec();
+            let feats = outs[exec.out_idx("feats")?].as_f32()?.to_vec();
+            let ki = exec.out_idx("kv")?;
+            let mut outs = outs;
+            self.kv.update_from(outs.swap_remove(ki))?;
 
-        // batched drafter observe over the newly committed anchors
-        self.batched_observe(&observe_feats, &observe_next, &observe_first)?;
+            // per-slot acceptance + commit through the shared cycle core
+            let mut observe_feats: Vec<Vec<f32>> = vec![vec![]; bsz];
+            let mut observe_next: Vec<Vec<i32>> = vec![vec![]; bsz];
+            let mut observe_first: Vec<usize> = vec![0; bsz];
+            for b in 0..bsz {
+                let Some(tree) = &trees[b] else { continue };
+                let base = self.kv.len(b);
+                let slot = self.slots[b].as_mut().unwrap();
+                let cycle = slot.cycle.as_mut().expect("run slot is decoding");
+                let acc = cycle.accept(
+                    tree,
+                    &logits[b * m * v..(b * m + tree.len()) * v],
+                    v,
+                );
+                self.kv.compact(b, base, &acc.accepted_slots)?;
+                let slot = self.slots[b].as_mut().unwrap();
+                let cycle = slot.cycle.as_mut().unwrap();
+                if cycle.metrics.cycles == 1 {
+                    metrics.record_first_cycle(slot.req.arrival.elapsed());
+                }
+                let commit = cycle.commit(tree, &acc, eos_tok);
+                let mut f = Vec::with_capacity(acc.accepted_slots.len() * fd);
+                for &sl in &acc.accepted_slots {
+                    f.extend_from_slice(&feats[(b * m + sl) * fd..(b * m + sl + 1) * fd]);
+                }
+                observe_feats[b] = f;
+                observe_next[b] = commit.observe_next;
+                observe_first[b] = base;
+                events.push(SlotEvent {
+                    id: slot.req.id,
+                    cycle: cycle.metrics.cycles,
+                    tokens: commit.committed,
+                    accepted_len: acc.accepted_slots.len(),
+                    finished: commit.finished,
+                });
+            }
+
+            // batched drafter observe over the newly committed anchors
+            self.batched_observe(&observe_feats, &observe_next, &observe_first)?;
+
+            // prefilling slots: fold the chunk in; on the last chunk,
+            // seed the cycle core and observe the prompt. This runs
+            // strictly AFTER the batched observe above: that call
+            // writes rows into every lane of the method's state tensor
+            // (non-members get pad rows at ctx 0), so a lane must not
+            // receive its freshly observed prompt state until the
+            // step's batched writes are done — otherwise rows 0..t of
+            // the new prefix would be silently overwritten.
+            for &(b, n) in &plan.prefill {
+                metrics.prefill_chunks += 1;
+                let (base, done) = {
+                    let slot = self.slots[b].as_mut().unwrap();
+                    let pf = slot.prefill.as_mut().unwrap();
+                    let base = pf.pos;
+                    pf.advance(n, &feats[(b * m) * fd..(b * m + n) * fd]);
+                    (base, pf.done())
+                };
+                self.kv.set_len(b, base + n);
+                if done {
+                    let last = logits[(b * m + n - 1) * v..(b * m + n) * v].to_vec();
+                    if let Err(e) = self.finalize_prefill(b, &last) {
+                        finished.push(self.fail_slot(b, format!("{e:#}"), metrics));
+                    }
+                }
+            }
+        }
 
         // retire finished slots: release the KV lease immediately so the
         // next admission pass can hand the blocks to queued work
+        let margin = self.max_rows() + 2;
         for b in 0..bsz {
             let done = match &self.slots[b] {
                 Some(slot) => {
-                    slot.cycle.finished() || self.kv.len(b) + m + 2 > s
+                    slot.finished()
+                        || (slot.cycle.is_some() && self.kv.len(b) + margin > s)
                 }
                 None => false,
             };
             if done {
                 let mut slot = self.slots[b].take().unwrap();
+                if let Some(cycle) = slot.cycle.as_mut() {
+                    cycle.finish();
+                }
                 self.pool.release(&mut slot.lease);
                 self.kv.set_len(b, 0);
                 match slot.method {
@@ -690,15 +1002,17 @@ impl BatchEngine {
                 for ev in events.iter_mut().filter(|e| e.id == slot.req.id) {
                     ev.finished = true;
                 }
-                let cycles = slot.cycle.metrics.cycles;
+                let cycle = slot.cycle.expect("retired slot has a cycle");
+                let cycles = cycle.metrics.cycles;
                 finished.push(Response {
                     id: slot.req.id,
-                    text: self.tokenizer.decode(&slot.cycle.out),
-                    new_tokens: slot.cycle.out.len(),
-                    tau: slot.cycle.metrics.tau(),
+                    text: self.tokenizer.decode(&cycle.out),
+                    new_tokens: cycle.out.len(),
+                    tau: cycle.metrics.tau(),
                     cycles,
                     latency_ms: slot.req.arrival.elapsed().as_secs_f64() * 1e3,
-                    gen_ms: slot.admitted_at.elapsed().as_secs_f64() * 1e3,
+                    gen_ms: slot.gen_ms_accum
+                        + slot.admitted_at.elapsed().as_secs_f64() * 1e3,
                     error: None,
                 });
             }
@@ -834,11 +1148,12 @@ impl BatchEngine {
         Ok(())
     }
 
-    /// One scheduler step: admit pending requests into free slots (KV
-    /// pool permitting), then run one batched decode iteration. Returns
-    /// the responses that completed this step (possibly empty). Metrics
-    /// — queue wait, deferrals, occupancy, time-to-first-cycle,
-    /// completions — are recorded into `metrics`.
+    /// One scheduler step: ask the scheduler for a plan (admissions,
+    /// prefill chunks, preemptions, resumes, runs) and execute it.
+    /// Returns the responses that completed this step (possibly empty).
+    /// Metrics — queue wait, deferrals, occupancy, time-to-first-cycle,
+    /// preemptions/resumes, the parked-token gauge, completions — are
+    /// recorded into `metrics`.
     pub fn step(&mut self, metrics: &mut ServingMetrics) -> Result<Vec<Response>> {
         Ok(self.step_events(metrics)?.finished)
     }
@@ -847,72 +1162,78 @@ impl BatchEngine {
     /// slot's per-cycle [`SlotEvent`] — the engine-side source of the
     /// protocol's streaming `tokens` frames.
     pub fn step_events(&mut self, metrics: &mut ServingMetrics) -> Result<StepOutcome> {
-        // admission pass: fill free slots from the head of the queue. An
-        // admit failure (artifact/executable error) answers that request
-        // with an error response instead of poisoning the engine; its
-        // lease goes straight back to the pool.
-        let mut failed: Vec<Response> = Vec::new();
-        for b in 0..self.cfg.batch {
-            if self.slots[b].is_some() {
-                continue;
-            }
-            let Some((front_id, front_method)) = self
-                .pending
-                .front()
-                .map(|r| (r.id, self.method_of(r)))
-            else {
-                break;
-            };
-            let cost = self.request_blocks(front_method);
-            let Some(mut lease) =
-                self.ledger.try_admit(&mut self.pool, cost, front_id, metrics)
-            else {
-                break; // head-of-line waits on KV blocks
-            };
-            let req = self.pending.pop_front().unwrap();
-            // queue wait ends at the admission decision, not after
-            // prefill — but only successful admissions belong in the
-            // histogram
-            let wait = req.arrival.elapsed();
-            match self.admit(b, req, &mut lease) {
-                Ok(()) => metrics.record_admitted(wait),
-                Err(e) => {
-                    self.pool.release(&mut lease);
-                    metrics.requests_failed += 1;
-                    crate::log_warn!("admission of request {front_id} failed: {e:#}");
-                    failed.push(Response::error(front_id, format!("{e:#}")));
-                }
+        let view = self.sched_view();
+        let plan = self.scheduler.plan(&view);
+        metrics.requests_deferred += plan.new_deferrals;
+
+        // execute the plan: preempt -> resume -> admit, then iterate
+        for &b in &plan.preempt {
+            self.park_slot(b, metrics)?;
+        }
+        {
+            // resolve resume indices against the live deque: remove the
+            // highest indices first so earlier ones stay valid
+            let mut resumes: Vec<(usize, usize)> = plan.resume.clone();
+            resumes.sort_by(|a, b| b.1.cmp(&a.1));
+            for (slot, pidx) in resumes {
+                self.resume_parked(slot, pidx, metrics)?;
             }
         }
+        {
+            let mut admits: Vec<(usize, usize)> = plan.admit.clone();
+            admits.sort_by(|a, b| b.1.cmp(&a.1));
+            for (slot, qidx) in admits {
+                let req = self
+                    .pending
+                    .remove(qidx)
+                    .expect("admitted request left the queue");
+                // queue wait ends at the admission decision
+                metrics.record_admitted(req.arrival.elapsed());
+                let cost = self.request_blocks(self.method_of(&req));
+                let mut lease = Lease::default();
+                self.pool
+                    .alloc(cost, &mut lease)
+                    .expect("scheduler checked pool availability");
+                self.admit_request(slot, req, lease);
+            }
+        }
+        let parked_tokens: usize = self.parked.iter().map(|p| p.kv.len(0)).sum();
+        metrics.record_parked(parked_tokens);
         if self.slots.iter().all(|s| s.is_none()) {
-            return Ok(StepOutcome { finished: failed, events: Vec::new() });
+            return Ok(StepOutcome::default());
         }
         metrics.record_occupancy(self.active_len());
-        let (mut finished, events) = self.decode_iteration(metrics)?;
+        let (mut finished, events) = self.iteration(&plan, metrics)?;
         for r in &finished {
-            metrics.record_done(
-                r.new_tokens,
-                r.cycles,
-                r.tau,
-                Duration::from_secs_f64(r.latency_ms / 1e3),
-            );
+            if r.error.is_none() {
+                metrics.record_done(
+                    r.new_tokens,
+                    r.cycles,
+                    r.tau,
+                    Duration::from_secs_f64(r.latency_ms / 1e3),
+                );
+            }
         }
-        finished.append(&mut failed);
         Ok(StepOutcome { finished, events })
     }
 
     /// True when the last step made no progress and never can: it
-    /// returned no responses, every slot is free (so the whole pool is
-    /// released), and the head pending request still could not admit.
-    /// Shared by [`run`](Self::run), the TCP server, and the trace
-    /// drivers so the stall invariant lives in one place.
+    /// returned no responses, every slot is free, and the waiting work
+    /// (pending or parked) still could not be placed — the planner runs
+    /// before every iteration, so an empty engine with waiting work
+    /// means nothing was fundable. Shared by [`run`](Self::run), the
+    /// TCP server, and the trace drivers so the stall invariant lives
+    /// in one place.
     pub fn stalled(&self, last_step: &[Response]) -> bool {
-        last_step.is_empty() && self.active_len() == 0 && !self.pending.is_empty()
+        last_step.is_empty()
+            && self.active_len() == 0
+            && (!self.pending.is_empty() || !self.parked.is_empty())
     }
 
-    /// Drop every pending and active request (releasing KV leases) and
-    /// return their ids — the server's failure path when a step errors,
-    /// so it can answer each in-flight connection instead of dying.
+    /// Drop every pending, parked and active request (releasing KV
+    /// leases) and return their ids — the server's failure path when a
+    /// step errors, so it can answer each in-flight connection instead
+    /// of dying.
     pub fn abort_all(&mut self) -> Vec<u64> {
         let mut ids = Vec::new();
         for b in 0..self.cfg.batch {
@@ -928,10 +1249,14 @@ impl BatchEngine {
                 ids.push(slot.req.id);
             }
         }
+        for mut p in self.parked.drain(..) {
+            self.pool.release(&mut p.lease);
+            ids.push(p.req.id);
+        }
         for r in self.pending.drain(..) {
             ids.push(r.id);
         }
-        self.ledger.clear();
+        self.scheduler.clear();
         ids
     }
 
@@ -998,33 +1323,5 @@ mod tests {
             assert_eq!(BatchMethod::from_name(m.name()), Some(m));
         }
         assert_eq!(BatchMethod::from_name("medusa"), None);
-    }
-
-    /// Admitting more requests than the KV pool covers counts each
-    /// distinct deferred request exactly once, however many scheduler
-    /// passes it waits through — the old per-pass increment inflated the
-    /// counter (and conflated deferrals with true rejections).
-    #[test]
-    fn deferred_admissions_count_once_per_request() {
-        let cost = 4;
-        let mut pool = BlockPool::new(cost, 16); // covers exactly one request
-        let mut ledger = AdmissionLedger::default();
-        let mut m = ServingMetrics::default();
-
-        let lease0 = ledger.try_admit(&mut pool, cost, 0, &mut m).expect("req 0 fits");
-        // requests 1 and 2 wait across many scheduler passes
-        for _ in 0..5 {
-            assert!(ledger.try_admit(&mut pool, cost, 1, &mut m).is_none());
-        }
-        assert!(ledger.try_admit(&mut pool, cost, 2, &mut m).is_none());
-        assert_eq!(m.requests_deferred, 2, "one count per distinct request");
-        assert_eq!(m.requests_rejected, 0, "deferrals are not rejections");
-
-        // request 0 finishes -> its blocks free -> request 1 admits
-        // without bumping the deferral counter again
-        let mut l0 = lease0;
-        pool.release(&mut l0);
-        assert!(ledger.try_admit(&mut pool, cost, 1, &mut m).is_some());
-        assert_eq!(m.requests_deferred, 2);
     }
 }

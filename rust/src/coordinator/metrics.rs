@@ -30,6 +30,19 @@ pub struct ServingMetrics {
     pub tokens_out: u64,
     pub cycles: u64,
     pub tau_sum: f64,
+    /// prompt chunks ingested on the batched lane (chunked prefill)
+    pub prefill_chunks: u64,
+    /// slots paused under pool pressure (lease shrunk, state parked)
+    pub preemptions: u64,
+    /// parked requests restored into a slot
+    pub resumes: u64,
+    /// parked-token gauge: committed tokens held by parked requests,
+    /// sampled once per scheduler step
+    pub parked_tokens: u64,
+    pub parked_tokens_peak: u64,
+    /// gauge sample count (lets `merge` distinguish "other never
+    /// sampled" from "other sampled zero")
+    pub parked_samples: u64,
     /// arrival -> completion
     pub latency: Histogram,
     /// arrival -> slot admission
@@ -54,6 +67,12 @@ impl Default for ServingMetrics {
             tokens_out: 0,
             cycles: 0,
             tau_sum: 0.0,
+            prefill_chunks: 0,
+            preemptions: 0,
+            resumes: 0,
+            parked_tokens: 0,
+            parked_tokens_peak: 0,
+            parked_samples: 0,
             latency: Histogram::new(),
             queue_wait: Histogram::new(),
             ttfc: Histogram::new(),
@@ -74,6 +93,13 @@ impl ServingMetrics {
     /// queue wait + prefill + one batched iteration).
     pub fn record_first_cycle(&mut self, since_arrival: Duration) {
         self.ttfc.record_us(since_arrival.as_secs_f64() * 1e6);
+    }
+
+    /// Sample the parked-token gauge at one scheduler step.
+    pub fn record_parked(&mut self, tokens: usize) {
+        self.parked_tokens = tokens as u64;
+        self.parked_tokens_peak = self.parked_tokens_peak.max(tokens as u64);
+        self.parked_samples += 1;
     }
 
     /// Sample the number of occupied slots at one scheduler step.
@@ -109,6 +135,14 @@ impl ServingMetrics {
         self.tokens_out += other.tokens_out;
         self.cycles += other.cycles;
         self.tau_sum += other.tau_sum;
+        self.prefill_chunks += other.prefill_chunks;
+        self.preemptions += other.preemptions;
+        self.resumes += other.resumes;
+        if other.parked_samples > 0 {
+            self.parked_tokens = other.parked_tokens;
+        }
+        self.parked_tokens_peak = self.parked_tokens_peak.max(other.parked_tokens_peak);
+        self.parked_samples += other.parked_samples;
         self.latency.merge(&other.latency);
         self.queue_wait.merge(&other.queue_wait);
         self.ttfc.merge(&other.ttfc);
@@ -146,7 +180,8 @@ impl ServingMetrics {
     pub fn report(&self) -> String {
         format!(
             "done={} rejected={} deferred={} failed={} tokens={} tok/s={:.1} tau={:.2} \
-             p50={:.0}ms p99={:.0}ms wait_p50={:.0}ms ttfc_p50={:.0}ms occ={:.2}/{}",
+             p50={:.0}ms p99={:.0}ms wait_p50={:.0}ms ttfc_p50={:.0}ms occ={:.2}/{} \
+             pfc={} preempt={} resume={} parked={}/{}",
             self.requests_done,
             self.requests_rejected,
             self.requests_deferred,
@@ -160,6 +195,11 @@ impl ServingMetrics {
             self.ttfc.percentile_us(0.5) / 1e3,
             self.mean_occupancy(),
             self.occupancy_peak,
+            self.prefill_chunks,
+            self.preemptions,
+            self.resumes,
+            self.parked_tokens,
+            self.parked_tokens_peak,
         )
     }
 }
@@ -221,6 +261,29 @@ mod tests {
         assert_eq!(shared.ttfc.count(), 1);
         assert_eq!(shared.occupancy_peak, 3);
         assert!((shared.mean_tau() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parked_gauge_merges_as_latest_sample_and_peak() {
+        let mut shared = ServingMetrics::default();
+        shared.record_parked(20);
+        let mut delta = ServingMetrics::default();
+        delta.record_parked(7);
+        delta.preemptions = 1;
+        delta.resumes = 1;
+        delta.prefill_chunks = 5;
+        shared.merge(&delta);
+        assert_eq!(shared.parked_tokens, 7, "gauge takes the newer sample");
+        assert_eq!(shared.parked_tokens_peak, 20);
+        assert_eq!(shared.preemptions, 1);
+        assert_eq!(shared.resumes, 1);
+        assert_eq!(shared.prefill_chunks, 5);
+        // a delta that never sampled the gauge leaves it untouched
+        let empty = ServingMetrics::default();
+        shared.merge(&empty);
+        assert_eq!(shared.parked_tokens, 7);
+        let r = shared.report();
+        assert!(r.contains("preempt=1") && r.contains("parked=7/20"), "{r}");
     }
 
     #[test]

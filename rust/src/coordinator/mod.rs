@@ -1,14 +1,17 @@
-//! Serving coordinator (L3): admission queue, continuous batcher over
-//! the batched executables, TCP JSON API server, serving metrics.
+//! Serving coordinator (L3): admission queue, scheduler (policies,
+//! chunked prefill, preemption), continuous batcher over the batched
+//! executables, TCP JSON API server, serving metrics.
 
 pub mod batcher;
 pub mod metrics;
 pub mod queue;
 pub mod request;
+pub mod scheduler;
 pub mod server;
 
 pub use batcher::{BatchConfig, BatchEngine, BatchMethod, SlotEvent, StepOutcome};
 pub use metrics::ServingMetrics;
 pub use queue::{AdmissionQueue, PushError};
 pub use request::{Request, Response};
+pub use scheduler::{PolicyKind, SchedulePlan, Scheduler, SchedulerPolicy};
 pub use server::{Server, ServerConfig};

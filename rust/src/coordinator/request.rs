@@ -17,6 +17,11 @@ pub struct Request {
     pub method: Option<BatchMethod>,
     /// opt-in incremental `{"event":"tokens",...}` frames per cycle
     pub stream: bool,
+    /// scheduling priority (higher = more urgent; default 0). The
+    /// policy uses it for admission ordering and as the preemption
+    /// threshold: only strictly lower-priority slots may be paused to
+    /// fund this request's admission.
+    pub priority: i32,
     pub arrival: Instant,
 }
 
@@ -28,13 +33,14 @@ impl Request {
             cfg: GenConfig::default(),
             method: None,
             stream: false,
+            priority: 0,
             arrival: Instant::now(),
         }
     }
 
     /// Parse an API request line: {"prompt": "...", "max_new": 64,
     /// "temperature": 0.0, "seed": 1, "method": "fasteagle",
-    /// "stream": false}.
+    /// "stream": false, "priority": 0}.
     ///
     /// An explicit `seed` pins the sampling stream (same seed + prompt
     /// reproduces exactly); omitting it derives a per-request seed from
@@ -62,7 +68,8 @@ impl Request {
             .and_then(Json::as_str)
             .and_then(BatchMethod::from_name);
         let stream = v.get("stream").and_then(Json::as_bool).unwrap_or(false);
-        Some(Request { id, prompt, cfg, method, stream, arrival: Instant::now() })
+        let priority = v.get("priority").and_then(Json::as_i64).unwrap_or(0) as i32;
+        Some(Request { id, prompt, cfg, method, stream, priority, arrival: Instant::now() })
     }
 }
 
@@ -130,10 +137,19 @@ mod tests {
 
     #[test]
     fn request_method_and_stream_flags() {
-        let v = Json::parse(r#"{"prompt":"p","method":"vanilla","stream":true}"#).unwrap();
+        let v = Json::parse(
+            r#"{"prompt":"p","method":"vanilla","stream":true,"priority":3}"#,
+        )
+        .unwrap();
         let r = Request::from_json(1, &v).unwrap();
         assert_eq!(r.method, Some(BatchMethod::Vanilla));
         assert!(r.stream);
+        assert_eq!(r.priority, 3);
+        // priority defaults to 0 (and accepts negatives)
+        let v = Json::parse(r#"{"prompt":"p"}"#).unwrap();
+        assert_eq!(Request::from_json(1, &v).unwrap().priority, 0);
+        let v = Json::parse(r#"{"prompt":"p","priority":-2}"#).unwrap();
+        assert_eq!(Request::from_json(1, &v).unwrap().priority, -2);
         // unknown method values fall back to the engine default
         let v = Json::parse(r#"{"prompt":"p","method":"warp-drive"}"#).unwrap();
         assert_eq!(Request::from_json(2, &v).unwrap().method, None);

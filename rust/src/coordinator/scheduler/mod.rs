@@ -1,0 +1,454 @@
+//! The scheduling brain of the continuous batcher.
+//!
+//! `BatchEngine` used to decide admission, prefill, eviction and
+//! back-pressure inline; now every per-step decision is made here, over
+//! read-only views of the engine's state, and handed back as an
+//! explicit [`SchedulePlan`] that the engine merely executes:
+//!
+//! * **admit** — which pending requests take free slots this step, in
+//!   [`SchedulerPolicy`] order, each funded by a KV-block lease;
+//! * **prefill** — how many prompt tokens each `Prefilling` slot
+//!   ingests this step (chunked prefill on the batched lane — see
+//!   [`prefill`]);
+//! * **preempt** — which decoding slots are paused under pool pressure
+//!   so a higher-priority admission can be funded from their shrunk
+//!   leases (see [`preempt`]);
+//! * **resume** — which parked requests re-enter a slot (they beat
+//!   fresh admissions — their shrunk lease already holds blocks);
+//! * **run** — which slots execute a draft → verify → commit cycle.
+//!
+//! The scheduler also owns deferral bookkeeping: a request that had a
+//! free slot but could not be funded from the pool counts once in
+//! `new_deferrals`, however many steps it waits (the engine folds this
+//! into `ServingMetrics::requests_deferred`).
+
+pub mod policy;
+pub mod preempt;
+pub mod prefill;
+
+use std::collections::HashSet;
+
+use crate::spec::SlotPhase;
+
+pub use policy::{FcfsPolicy, PolicyKind, SchedulerPolicy, ShortestPromptFirst};
+pub use prefill::{chunk_for, PrefillProgress};
+
+/// One pending (submitted, not yet admitted) request, as the policy
+/// sees it.
+#[derive(Debug, Clone)]
+pub struct PendingView {
+    pub id: u64,
+    pub priority: i32,
+    /// truncated prompt length — what chunked prefill will ingest
+    pub prompt_tokens: usize,
+    /// full KV-lease cost (target + this request's drafter layers)
+    pub cost_blocks: usize,
+}
+
+/// One parked (preempted) request awaiting resume. (The parked-token
+/// gauge is the engine's own bookkeeping, sampled post-plan in
+/// `step_events` — it is deliberately not part of this view.)
+#[derive(Debug, Clone)]
+pub struct ParkedView {
+    pub id: u64,
+    pub priority: i32,
+    /// blocks needed on top of the shrunk lease it still holds
+    pub resume_delta_blocks: usize,
+}
+
+/// One occupied slot.
+#[derive(Debug, Clone)]
+pub struct ActiveView {
+    pub slot: usize,
+    pub id: u64,
+    pub priority: i32,
+    pub phase: SlotPhase,
+    /// prompt tokens not yet ingested (Prefilling slots)
+    pub prefill_remaining: usize,
+    /// blocks a preemption of this slot would free
+    pub shrink_gain_blocks: usize,
+    pub finished: bool,
+}
+
+/// Read-only snapshot of everything a step's decisions depend on.
+#[derive(Debug, Clone)]
+pub struct SchedView {
+    pub free_slots: Vec<usize>,
+    pub pool_available: usize,
+    /// verify rows the batched call exposes this step — the hard cap on
+    /// any slot's prefill chunk
+    pub max_rows: usize,
+    pub pending: Vec<PendingView>,
+    pub parked: Vec<ParkedView>,
+    pub active: Vec<ActiveView>,
+}
+
+/// What one scheduler step decided. Slot/queue indices refer to the
+/// [`SchedView`] the plan was made from; the engine executes sections
+/// in order: preempt → resume → admit → (prefill + run).
+#[derive(Debug, Default)]
+pub struct SchedulePlan {
+    /// slots to pause: park state, shrink lease to committed tokens
+    pub preempt: Vec<usize>,
+    /// (slot, parked-queue index) to restore
+    pub resume: Vec<(usize, usize)>,
+    /// (slot, pending-queue index) to admit into `Prefilling`
+    pub admit: Vec<(usize, usize)>,
+    /// (slot, tokens) prompt chunks to ingest this step
+    pub prefill: Vec<(usize, usize)>,
+    /// slots that run a decode cycle this step
+    pub run: Vec<usize>,
+    /// distinct requests newly deferred on pool pressure this step
+    pub new_deferrals: u64,
+}
+
+impl SchedulePlan {
+    /// Anything for the batched iteration to do?
+    pub fn has_work(&self) -> bool {
+        !self.prefill.is_empty() || !self.run.is_empty()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// max prompt tokens ingested per slot per step (further capped by
+    /// the batched call's verify rows)
+    pub prefill_chunk: usize,
+    /// preemption budget per step (0 disables preemption)
+    pub max_preemptions_per_step: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig { prefill_chunk: usize::MAX, max_preemptions_per_step: 1 }
+    }
+}
+
+/// Policy + per-step planning + deferral bookkeeping.
+pub struct Scheduler {
+    policy: Box<dyn SchedulerPolicy>,
+    cfg: SchedConfig,
+    /// ids already counted in `requests_deferred` (each distinct
+    /// request counts once, however many passes it waits)
+    deferred: HashSet<u64>,
+}
+
+impl Scheduler {
+    pub fn new(kind: PolicyKind, mut cfg: SchedConfig) -> Scheduler {
+        // a zero chunk could never finish a prompt — clamp, don't stall
+        cfg.prefill_chunk = cfg.prefill_chunk.max(1);
+        Scheduler { policy: kind.build(), cfg, deferred: HashSet::new() }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Forget all deferral bookkeeping (engine abort path).
+    pub fn clear(&mut self) {
+        self.deferred.clear();
+    }
+
+    /// Decide one step. Pure over the view except for the deferral set.
+    pub fn plan(&mut self, view: &SchedView) -> SchedulePlan {
+        let mut plan = SchedulePlan::default();
+        let mut avail = view.pool_available;
+        let mut free = view.free_slots.clone();
+
+        // 1. resumes first: a parked request already holds (and pays
+        // for) its committed prefix — finishing it releases everything
+        for (pi, parked) in view.parked.iter().enumerate() {
+            if free.is_empty() {
+                break;
+            }
+            if parked.resume_delta_blocks <= avail {
+                avail -= parked.resume_delta_blocks;
+                let slot = free.remove(0);
+                plan.resume.push((slot, pi));
+                self.deferred.remove(&parked.id);
+            }
+        }
+
+        // 2. admissions in policy order, preemption as the funding
+        // fallback; the policy's head-of-line waits if unfundable
+        let order = self.policy.admission_order(&view.pending);
+        for qi in order {
+            if free.is_empty() {
+                break;
+            }
+            let req = &view.pending[qi];
+            let mut funded_by_preemption = false;
+            if req.cost_blocks > avail {
+                // tentative victim selection — committed only if the
+                // gains actually fund this admission
+                let mut chosen: Vec<&ActiveView> = Vec::new();
+                let mut gain = 0usize;
+                while req.cost_blocks > avail + gain
+                    && plan.preempt.len() + chosen.len() < self.cfg.max_preemptions_per_step
+                {
+                    let candidates: Vec<ActiveView> = view
+                        .active
+                        .iter()
+                        .filter(|a| {
+                            a.phase == SlotPhase::Decoding
+                                && !a.finished
+                                && a.shrink_gain_blocks > 0
+                                && !plan.preempt.contains(&a.slot)
+                                && !chosen.iter().any(|c| c.slot == a.slot)
+                        })
+                        .cloned()
+                        .collect();
+                    let Some(v) = self.policy.preempt_victim(&candidates, req) else {
+                        break;
+                    };
+                    let victim = view
+                        .active
+                        .iter()
+                        .find(|a| a.slot == candidates[v].slot)
+                        .expect("candidate came from the active view");
+                    gain += victim.shrink_gain_blocks;
+                    chosen.push(victim);
+                }
+                if req.cost_blocks <= avail + gain {
+                    funded_by_preemption = !chosen.is_empty();
+                    for victim in chosen {
+                        plan.preempt.push(victim.slot);
+                        free.push(victim.slot);
+                    }
+                    avail += gain;
+                } else {
+                    if self.deferred.insert(req.id) {
+                        plan.new_deferrals += 1;
+                    }
+                    break;
+                }
+            }
+            avail -= req.cost_blocks;
+            let slot = free.remove(0);
+            plan.admit.push((slot, qi));
+            self.deferred.remove(&req.id);
+            if funded_by_preemption {
+                // fence: leftover shrink gain must not fund further
+                // admissions this step — a later equal-priority arrival
+                // could otherwise run on the parked victim's blocks
+                // while the victim (same priority) waits, inverting the
+                // strictly-lower-priority preemption contract
+                break;
+            }
+        }
+
+        // 3. per-step work: chunks for every surviving Prefilling slot
+        // (including this step's admissions), cycles for every
+        // unfinished Decoding slot (including this step's resumes)
+        for a in &view.active {
+            if plan.preempt.contains(&a.slot) {
+                continue;
+            }
+            match a.phase {
+                SlotPhase::Prefilling => {
+                    let chunk = chunk_for(
+                        a.prefill_remaining,
+                        self.cfg.prefill_chunk,
+                        view.max_rows,
+                    );
+                    if chunk > 0 {
+                        plan.prefill.push((a.slot, chunk));
+                    }
+                }
+                SlotPhase::Decoding => {
+                    if !a.finished {
+                        plan.run.push(a.slot);
+                    }
+                }
+            }
+        }
+        for &(slot, qi) in &plan.admit {
+            let chunk = chunk_for(
+                view.pending[qi].prompt_tokens,
+                self.cfg.prefill_chunk,
+                view.max_rows,
+            );
+            if chunk > 0 {
+                plan.prefill.push((slot, chunk));
+            }
+        }
+        for &(slot, _) in &plan.resume {
+            plan.run.push(slot);
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view() -> SchedView {
+        SchedView {
+            free_slots: vec![],
+            pool_available: 0,
+            max_rows: 3,
+            pending: Vec::new(),
+            parked: Vec::new(),
+            active: Vec::new(),
+        }
+    }
+
+    fn pend(id: u64, priority: i32, prompt: usize, cost: usize) -> PendingView {
+        PendingView { id, priority, prompt_tokens: prompt, cost_blocks: cost }
+    }
+
+    fn decoding(slot: usize, id: u64, priority: i32, gain: usize) -> ActiveView {
+        ActiveView {
+            slot,
+            id,
+            priority,
+            phase: SlotPhase::Decoding,
+            prefill_remaining: 0,
+            shrink_gain_blocks: gain,
+            finished: false,
+        }
+    }
+
+    #[test]
+    fn admits_in_order_until_slots_or_blocks_run_out() {
+        let mut s = Scheduler::new(PolicyKind::Fcfs, SchedConfig::default());
+        let mut v = view();
+        v.free_slots = vec![0, 1];
+        v.pool_available = 10;
+        v.pending = vec![pend(1, 0, 5, 4), pend(2, 0, 9, 4), pend(3, 0, 2, 4)];
+        let plan = s.plan(&v);
+        assert_eq!(plan.admit, vec![(0, 0), (1, 1)]);
+        // admitted requests get a first prefill chunk, capped by rows
+        assert_eq!(plan.prefill, vec![(0, 3), (1, 3)]);
+        assert_eq!(plan.new_deferrals, 0, "slot scarcity is not a deferral");
+    }
+
+    /// The old `AdmissionLedger` invariant, now owned by the scheduler:
+    /// each distinct pool-starved request counts once, however many
+    /// planning passes it waits through.
+    #[test]
+    fn deferred_admissions_count_once_per_request() {
+        let mut s = Scheduler::new(PolicyKind::Fcfs, SchedConfig::default());
+        let mut v = view();
+        v.free_slots = vec![0];
+        v.pool_available = 3; // cannot fund cost 4
+        v.pending = vec![pend(7, 0, 5, 4)];
+        let mut total = 0;
+        for _ in 0..5 {
+            let plan = s.plan(&v);
+            assert!(plan.admit.is_empty());
+            total += plan.new_deferrals;
+        }
+        assert_eq!(total, 1, "one count per distinct request");
+        // blocks free up -> admits without re-counting
+        v.pool_available = 4;
+        let plan = s.plan(&v);
+        assert_eq!(plan.admit, vec![(0, 0)]);
+        assert_eq!(plan.new_deferrals, 0);
+    }
+
+    #[test]
+    fn preempts_lower_priority_to_fund_admission() {
+        let mut s = Scheduler::new(PolicyKind::Fcfs, SchedConfig::default());
+        let mut v = view();
+        v.free_slots = vec![1];
+        v.pool_available = 1;
+        v.pending = vec![pend(9, 2, 4, 4)];
+        v.active = vec![decoding(0, 5, 0, 6)];
+        let plan = s.plan(&v);
+        assert_eq!(plan.preempt, vec![0]);
+        assert_eq!(plan.admit, vec![(1, 0)]);
+        // the victim does not also run this step
+        assert!(plan.run.is_empty());
+    }
+
+    /// Leftover shrink gain is fenced: after a preemption-funded
+    /// admission, no further request admits this step — otherwise an
+    /// equal-priority later arrival could run on the parked victim's
+    /// blocks while the victim waits (priority inversion).
+    #[test]
+    fn preemption_gain_never_funds_a_second_admission() {
+        let mut s = Scheduler::new(PolicyKind::Fcfs, SchedConfig::default());
+        let mut v = view();
+        v.free_slots = vec![1];
+        v.pool_available = 0;
+        v.pending = vec![pend(9, 5, 4, 4), pend(8, 0, 4, 4)];
+        v.active = vec![decoding(0, 5, 0, 10)]; // gain 10 covers both costs
+        let plan = s.plan(&v);
+        assert_eq!(plan.preempt, vec![0]);
+        assert_eq!(plan.admit, vec![(1, 0)], "only the out-ranking request admits");
+        assert_eq!(plan.new_deferrals, 0);
+    }
+
+    #[test]
+    fn no_pointless_preemption_when_gain_cannot_fund() {
+        let mut s = Scheduler::new(PolicyKind::Fcfs, SchedConfig::default());
+        let mut v = view();
+        v.free_slots = vec![1];
+        v.pool_available = 0;
+        v.pending = vec![pend(9, 2, 4, 40)];
+        v.active = vec![decoding(0, 5, 0, 6)]; // gain 6 < cost 40
+        let plan = s.plan(&v);
+        assert!(plan.preempt.is_empty(), "don't pause work it can't help");
+        assert!(plan.admit.is_empty());
+        assert_eq!(plan.new_deferrals, 1);
+        assert_eq!(plan.run, vec![0], "the survivor keeps decoding");
+    }
+
+    #[test]
+    fn equal_priority_never_preempts() {
+        let mut s = Scheduler::new(PolicyKind::Spf, SchedConfig::default());
+        let mut v = view();
+        v.free_slots = vec![1];
+        v.pool_available = 0;
+        v.pending = vec![pend(9, 0, 4, 4)];
+        v.active = vec![decoding(0, 5, 0, 8)];
+        let plan = s.plan(&v);
+        assert!(plan.preempt.is_empty());
+        assert_eq!(plan.new_deferrals, 1);
+    }
+
+    #[test]
+    fn parked_requests_resume_before_fresh_admissions() {
+        let mut s = Scheduler::new(PolicyKind::Fcfs, SchedConfig::default());
+        let mut v = view();
+        v.free_slots = vec![0];
+        v.pool_available = 5;
+        v.parked = vec![ParkedView {
+            id: 3,
+            priority: 0,
+            resume_delta_blocks: 5,
+        }];
+        v.pending = vec![pend(8, 0, 4, 4)];
+        let plan = s.plan(&v);
+        assert_eq!(plan.resume, vec![(0, 0)]);
+        assert!(plan.admit.is_empty(), "the lone slot went to the resume");
+        assert_eq!(plan.run, vec![0], "resumed slots decode this step");
+    }
+
+    #[test]
+    fn prefilling_slots_get_chunks_alongside_decoders() {
+        let mut s = Scheduler::new(
+            PolicyKind::Fcfs,
+            SchedConfig { prefill_chunk: 2, ..Default::default() },
+        );
+        let mut v = view();
+        v.active = vec![
+            ActiveView {
+                slot: 0,
+                id: 1,
+                priority: 0,
+                phase: SlotPhase::Prefilling,
+                prefill_remaining: 9,
+                shrink_gain_blocks: 0,
+                finished: false,
+            },
+            decoding(1, 2, 0, 4),
+        ];
+        let plan = s.plan(&v);
+        assert_eq!(plan.prefill, vec![(0, 2)], "chunk capped by config");
+        assert_eq!(plan.run, vec![1]);
+        assert!(plan.has_work());
+    }
+}

@@ -1,0 +1,180 @@
+//! Scheduling policies: who admits next, and who gets paused under
+//! pool pressure.
+//!
+//! A [`SchedulerPolicy`] is consulted by [`super::Scheduler::plan`] at
+//! every step; it never touches engine state — it only orders the
+//! pending queue and picks preemption victims over read-only views, so
+//! policies are trivially unit-testable and new ones (deadline-aware,
+//! fair-share, AdaEAGLE-style adaptive) slot in without touching the
+//! batcher.
+
+use super::preempt::lowest_priority_victim;
+use super::{ActiveView, PendingView};
+
+/// Which built-in policy to run; selected with `--policy` on the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// first-come first-served (arrival order, priority only breaks
+    /// pool-pressure ties via preemption)
+    Fcfs,
+    /// shortest-prompt-first within priority classes: higher-priority
+    /// requests first, then shorter prompts (cheapest time-to-first-token
+    /// first), then arrival order
+    Spf,
+}
+
+impl PolicyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Fcfs => "fcfs",
+            PolicyKind::Spf => "spf",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<PolicyKind> {
+        Some(match name {
+            "fcfs" => PolicyKind::Fcfs,
+            "spf" => PolicyKind::Spf,
+            _ => return None,
+        })
+    }
+
+    pub fn build(self) -> Box<dyn SchedulerPolicy> {
+        match self {
+            PolicyKind::Fcfs => Box::new(FcfsPolicy),
+            PolicyKind::Spf => Box::new(ShortestPromptFirst),
+        }
+    }
+}
+
+/// Pure decision interface over scheduler views. Implementations must
+/// be deterministic: same views, same answers (the preemption
+/// byte-identity property tests rely on it).
+pub trait SchedulerPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Admission order: indices into `pending`, most-preferred first.
+    /// The planner honors this order strictly — if the first returned
+    /// request cannot be funded (even after preemption), admission
+    /// stops for this step, so an order is also a head-of-line
+    /// definition.
+    fn admission_order(&self, pending: &[PendingView]) -> Vec<usize>;
+
+    /// Choose a victim among `candidates` (active, preemptible slots)
+    /// to free pool blocks for `incoming`; `None` declines to preempt.
+    /// Returns an index into `candidates`.
+    fn preempt_victim(
+        &self,
+        candidates: &[ActiveView],
+        incoming: &PendingView,
+    ) -> Option<usize>;
+}
+
+/// Arrival order; preempts only strictly lower-priority slots.
+pub struct FcfsPolicy;
+
+impl SchedulerPolicy for FcfsPolicy {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn admission_order(&self, pending: &[PendingView]) -> Vec<usize> {
+        (0..pending.len()).collect()
+    }
+
+    fn preempt_victim(
+        &self,
+        candidates: &[ActiveView],
+        incoming: &PendingView,
+    ) -> Option<usize> {
+        lowest_priority_victim(candidates, incoming.priority)
+    }
+}
+
+/// Priority classes first, then shortest prompt (the classic
+/// time-to-first-token optimizer for interactive traffic), then
+/// arrival order as the deterministic tie-break.
+pub struct ShortestPromptFirst;
+
+impl SchedulerPolicy for ShortestPromptFirst {
+    fn name(&self) -> &'static str {
+        "spf"
+    }
+
+    fn admission_order(&self, pending: &[PendingView]) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..pending.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (pa, pb) = (&pending[a], &pending[b]);
+            pb.priority
+                .cmp(&pa.priority)
+                .then(pa.prompt_tokens.cmp(&pb.prompt_tokens))
+                .then(a.cmp(&b))
+        });
+        order
+    }
+
+    fn preempt_victim(
+        &self,
+        candidates: &[ActiveView],
+        incoming: &PendingView,
+    ) -> Option<usize> {
+        lowest_priority_victim(candidates, incoming.priority)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::SlotPhase;
+
+    fn pending(id: u64, priority: i32, prompt_tokens: usize) -> PendingView {
+        PendingView { id, priority, prompt_tokens, cost_blocks: 4 }
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in [PolicyKind::Fcfs, PolicyKind::Spf] {
+            assert_eq!(PolicyKind::from_name(k.name()), Some(k));
+            assert_eq!(k.build().name(), k.name());
+        }
+        assert_eq!(PolicyKind::from_name("lottery"), None);
+    }
+
+    #[test]
+    fn fcfs_is_arrival_order() {
+        let p = vec![pending(9, 0, 50), pending(1, 5, 2), pending(4, -1, 1)];
+        assert_eq!(FcfsPolicy.admission_order(&p), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn spf_orders_by_priority_then_prompt_then_arrival() {
+        let p = vec![
+            pending(0, 0, 50), // long, normal priority
+            pending(1, 0, 3),  // short, normal priority
+            pending(2, 2, 80), // high priority beats both
+            pending(3, 0, 3),  // same as #1 -> arrival order breaks the tie
+        ];
+        assert_eq!(ShortestPromptFirst.admission_order(&p), vec![2, 1, 3, 0]);
+    }
+
+    #[test]
+    fn preemption_targets_strictly_lower_priority_only() {
+        let mk = |slot, priority, gain| ActiveView {
+            slot,
+            id: slot as u64,
+            priority,
+            phase: SlotPhase::Decoding,
+            prefill_remaining: 0,
+            shrink_gain_blocks: gain,
+            finished: false,
+        };
+        let candidates = vec![mk(0, 0, 4), mk(1, -2, 2), mk(2, -2, 8)];
+        // equal priority never preempts
+        assert_eq!(FcfsPolicy.preempt_victim(&candidates, &pending(9, 0, 4)), None);
+        // lowest priority wins; larger shrink gain breaks the tie
+        assert_eq!(
+            ShortestPromptFirst.preempt_victim(&candidates, &pending(9, 1, 4)),
+            Some(2)
+        );
+    }
+}

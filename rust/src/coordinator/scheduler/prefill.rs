@@ -1,0 +1,71 @@
+//! Chunked-prefill progress tracking.
+//!
+//! Admission no longer runs a whole-prompt prefill on the B=1
+//! executables (the old head-of-line block): a newly admitted request
+//! enters its slot in [`crate::spec::SlotPhase::Prefilling`] carrying a
+//! [`PrefillProgress`], and each scheduler step feeds the next
+//! fixed-token chunk of its prompt through the *batched* target call —
+//! the same call that verifies the decoding slots' trees, so prompt
+//! ingestion rides along decode steps instead of stalling them. The
+//! per-step chunk is bounded by the verify rows the lowered executable
+//! exposes (`max_rows`) and by the engine's configured chunk size.
+
+/// Tokens to ingest for one slot this step: the un-ingested remainder,
+/// capped by the configured chunk size and by the batched call's row
+/// budget. The single home of the chunk-sizing rule — the planner uses
+/// it for both continuing and freshly admitted prefills.
+pub fn chunk_for(remaining: usize, cfg_chunk: usize, max_rows: usize) -> usize {
+    remaining.min(cfg_chunk).min(max_rows)
+}
+
+/// One admitted request's prompt-ingestion state: the (truncated)
+/// prompt tokens, how many have landed in the KV prefix, and the
+/// per-token features accumulated for the drafter's post-prefill
+/// observe.
+#[derive(Debug, Clone)]
+pub struct PrefillProgress {
+    pub ptoks: Vec<i32>,
+    pub pos: usize,
+    /// [pos, feat_dim] features of every ingested prompt token
+    pub feats: Vec<f32>,
+}
+
+impl PrefillProgress {
+    pub fn new(ptoks: Vec<i32>) -> PrefillProgress {
+        PrefillProgress { ptoks, pos: 0, feats: Vec::new() }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.ptoks.len() - self.pos
+    }
+
+    pub fn done(&self) -> bool {
+        self.pos >= self.ptoks.len()
+    }
+
+    /// Fold one executed chunk into the progress.
+    pub fn advance(&mut self, n: usize, chunk_feats: &[f32]) {
+        debug_assert!(self.pos + n <= self.ptoks.len());
+        self.pos += n;
+        self.feats.extend_from_slice(chunk_feats);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cap_at_rows_and_config() {
+        let mut p = PrefillProgress::new((0..10).collect());
+        assert_eq!(p.remaining(), 10);
+        assert_eq!(chunk_for(p.remaining(), usize::MAX, 3), 3);
+        assert_eq!(chunk_for(p.remaining(), 2, 3), 2);
+        p.advance(3, &[0.0; 6]);
+        assert_eq!(p.pos, 3);
+        assert_eq!(p.feats.len(), 6);
+        p.advance(7, &[]);
+        assert!(p.done());
+        assert_eq!(chunk_for(p.remaining(), usize::MAX, 3), 0);
+    }
+}

@@ -12,14 +12,21 @@
 //! receives one `{"event":"tokens",...}` frame per decode cycle before
 //! its final response — the per-cycle [`SlotEvent`]s the engine already
 //! produces, forwarded over the same connection.
-//! Back-pressure is two-staged: the engine keeps at most `batch`
+//!
+//! Back-pressure is three-staged: the engine keeps at most `batch`
 //! requests internally; everything beyond that waits in the bounded
 //! queue, and past its capacity `try_push` sheds with a "queue full"
-//! reply (HTTP-429 analogue) distinct from the shutdown path.
+//! reply (HTTP-429 analogue) distinct from the shutdown path. Per
+//! connection, at most `frame_queue` streaming frames may sit
+//! undelivered at once — when a slow consumer falls behind, the
+//! [`FrameGate`] coalesces its subsequent cycles into one merged frame
+//! instead of queueing without bound, so one stalled client costs O(its
+//! own output), never O(frames × cycles). Coalescing only merges
+//! frames; every committed token is still delivered exactly once.
 //!
 //! Protocol (one JSON object per line):
 //!   -> {"prompt": "...", "max_new": 64, "temperature": 0.0, "seed": 1,
-//!       "method": "fasteagle", "stream": false}
+//!       "method": "fasteagle", "stream": false, "priority": 0}
 //!   <- {"event": "tokens", "id": .., "cycle": .., "tokens": [..],
 //!       "text": "..", "accepted": ..}    (per cycle, stream mode only)
 //!   <- {"id": .., "text": "...", "tau": .., "new_tokens": .., ...}
@@ -29,7 +36,7 @@
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -49,7 +56,72 @@ enum Reply {
     Done(Response),
 }
 
-type ReplyTx = std::sync::mpsc::Sender<Reply>;
+/// The engine thread's handle to one connection: the reply channel plus
+/// the number of streaming frames queued but not yet written to the
+/// socket (incremented on send, decremented by the connection thread
+/// after each write) — the signal the [`FrameGate`] throttles on.
+struct ConnReply {
+    tx: std::sync::mpsc::Sender<Reply>,
+    queued_frames: Arc<AtomicUsize>,
+}
+
+/// Per-request streaming flow control: when a connection already has
+/// `cap` undelivered frames, further cycles are *coalesced* into one
+/// pending frame per request (tokens concatenated, accepted counts
+/// summed, cycle index advanced to the newest) instead of queued. The
+/// merged frame goes out as soon as the consumer drains below the cap
+/// — or at request completion via [`flush`](FrameGate::flush) — so the
+/// stream always delivers every committed token exactly once, in
+/// order, with bounded memory per connection.
+struct FrameGate {
+    cap: usize,
+    backlog: HashMap<u64, SlotEvent>,
+}
+
+impl FrameGate {
+    fn new(cap: usize) -> FrameGate {
+        FrameGate { cap, backlog: HashMap::new() }
+    }
+
+    fn fold(&mut self, ev: &SlotEvent) {
+        let entry = self.backlog.entry(ev.id).or_insert_with(|| SlotEvent {
+            id: ev.id,
+            cycle: ev.cycle,
+            tokens: Vec::new(),
+            accepted_len: 0,
+            finished: false,
+        });
+        entry.tokens.extend_from_slice(&ev.tokens);
+        entry.cycle = ev.cycle;
+        entry.accepted_len += ev.accepted_len;
+        entry.finished |= ev.finished;
+    }
+
+    /// Offer one cycle event given the connection's current queue
+    /// depth. Returns the (possibly merged) frame to send now, or
+    /// `None` when the consumer is at capacity and the event was
+    /// coalesced into its backlog.
+    fn offer(&mut self, ev: &SlotEvent, queued: usize) -> Option<SlotEvent> {
+        self.fold(ev);
+        if queued < self.cap {
+            self.backlog.remove(&ev.id)
+        } else {
+            None
+        }
+    }
+
+    /// Drain the request's remaining backlog (request completion): the
+    /// final merged frame is always delivered so the concatenated
+    /// frames cover every committed token.
+    fn flush(&mut self, id: u64) -> Option<SlotEvent> {
+        self.backlog.remove(&id)
+    }
+
+    /// Drop any backlog (error/abort paths).
+    fn forget(&mut self, id: u64) {
+        self.backlog.remove(&id);
+    }
+}
 
 fn frame_json(ev: &SlotEvent, text: &str) -> Json {
     Json::obj(vec![
@@ -65,17 +137,20 @@ fn frame_json(ev: &SlotEvent, text: &str) -> Json {
 pub struct ServerConfig {
     pub addr: String,
     pub queue_capacity: usize,
+    /// max undelivered streaming frames per connection before cycles
+    /// coalesce (0 = coalesce everything into one frame at completion)
+    pub frame_queue: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:7399".into(), queue_capacity: 64 }
+        ServerConfig { addr: "127.0.0.1:7399".into(), queue_capacity: 64, frame_queue: 16 }
     }
 }
 
 pub struct Server {
     cfg: ServerConfig,
-    queue: Arc<AdmissionQueue<(Request, ReplyTx)>>,
+    queue: Arc<AdmissionQueue<(Request, ConnReply)>>,
     metrics: Arc<Mutex<ServingMetrics>>,
     shutdown: Arc<AtomicBool>,
     next_id: AtomicU64,
@@ -100,10 +175,11 @@ impl Server {
             TcpListener::bind(&self.cfg.addr).with_context(|| self.cfg.addr.clone())?;
         listener.set_nonblocking(true)?;
         crate::log_info!(
-            "serving {} (default method={}, batch={}) on {}",
+            "serving {} (default method={}, batch={}, policy={}) on {}",
             engine.spec.name,
             engine.method().name(),
             engine.batch(),
+            engine.policy_name(),
             self.cfg.addr
         );
         // accept loop on a helper thread
@@ -137,9 +213,11 @@ impl Server {
 
         // engine loop (this thread): drain the admission queue into the
         // batcher, step it, reply per-slot as requests complete — and
-        // forward per-cycle token frames to streaming requests
-        let mut inflight: HashMap<u64, ReplyTx> = HashMap::new();
+        // forward per-cycle token frames to streaming requests, gated by
+        // each connection's undelivered-frame count
+        let mut inflight: HashMap<u64, ConnReply> = HashMap::new();
         let mut streaming: HashSet<u64> = HashSet::new();
+        let mut gate = FrameGate::new(self.cfg.frame_queue);
         while !self.shutdown.load(Ordering::Relaxed) {
             // admit up to the engine's slot count; the rest stays in the
             // bounded queue so capacity shedding keeps working
@@ -176,17 +254,32 @@ impl Server {
                         if ev.tokens.is_empty() || !streaming.contains(&ev.id) {
                             continue;
                         }
-                        if let Some(tx) = inflight.get(&ev.id) {
-                            let text = engine.decode(&ev.tokens);
-                            let _ = tx.send(Reply::Frame(frame_json(ev, &text)));
+                        if let Some(conn) = inflight.get(&ev.id) {
+                            let queued = conn.queued_frames.load(Ordering::Relaxed);
+                            if let Some(merged) = gate.offer(ev, queued) {
+                                let text = engine.decode(&merged.tokens);
+                                conn.queued_frames.fetch_add(1, Ordering::Relaxed);
+                                let _ = conn
+                                    .tx
+                                    .send(Reply::Frame(frame_json(&merged, &text)));
+                            }
                         }
                     }
                     let done = outcome.finished;
                     let stalled = engine.stalled(&done);
                     for resp in done {
                         streaming.remove(&resp.id);
-                        if let Some(tx) = inflight.remove(&resp.id) {
-                            let _ = tx.send(Reply::Done(resp));
+                        if let Some(conn) = inflight.remove(&resp.id) {
+                            // a slow consumer's coalesced backlog still
+                            // goes out before its final response
+                            if let Some(merged) = gate.flush(resp.id) {
+                                let text = engine.decode(&merged.tokens);
+                                conn.queued_frames.fetch_add(1, Ordering::Relaxed);
+                                let _ = conn
+                                    .tx
+                                    .send(Reply::Frame(frame_json(&merged, &text)));
+                            }
+                            let _ = conn.tx.send(Reply::Done(resp));
                         }
                     }
                     // a stalled engine means the head request can never
@@ -197,8 +290,9 @@ impl Server {
                         self.metrics.lock().unwrap().requests_failed += ids.len() as u64;
                         for id in ids {
                             streaming.remove(&id);
-                            if let Some(tx) = inflight.remove(&id) {
-                                let _ = tx.send(Reply::Done(Response::error(
+                            gate.forget(id);
+                            if let Some(conn) = inflight.remove(&id) {
+                                let _ = conn.tx.send(Reply::Done(Response::error(
                                     id,
                                     "request exceeds KV pool capacity",
                                 )));
@@ -212,8 +306,10 @@ impl Server {
                     self.metrics.lock().unwrap().requests_failed += ids.len() as u64;
                     for id in ids {
                         streaming.remove(&id);
-                        if let Some(tx) = inflight.remove(&id) {
-                            let _ = tx.send(Reply::Done(Response::error(id, format!("{e:#}"))));
+                        gate.forget(id);
+                        if let Some(conn) = inflight.remove(&id) {
+                            let _ =
+                                conn.tx.send(Reply::Done(Response::error(id, format!("{e:#}"))));
                         }
                     }
                 }
@@ -242,7 +338,7 @@ impl Server {
 
 fn handle_conn(
     stream: TcpStream,
-    queue: Arc<AdmissionQueue<(Request, ReplyTx)>>,
+    queue: Arc<AdmissionQueue<(Request, ConnReply)>>,
     shutdown: Arc<AtomicBool>,
     metrics: Arc<Mutex<ServingMetrics>>,
     next_id: Arc<AtomicU64>,
@@ -304,6 +400,10 @@ fn handle_conn(
                     ("mean_tau", Json::num(m.mean_tau())),
                     ("mean_occupancy", Json::num(m.mean_occupancy())),
                     ("peak_occupancy", Json::num(m.occupancy_peak as f64)),
+                    ("prefill_chunks", Json::num(m.prefill_chunks as f64)),
+                    ("preemptions", Json::num(m.preemptions as f64)),
+                    ("resumes", Json::num(m.resumes as f64)),
+                    ("parked_tokens", Json::num(m.parked_tokens as f64)),
                     ("p50_ms", Json::num(m.latency.percentile_us(0.5) / 1e3)),
                     ("p99_ms", Json::num(m.latency.percentile_us(0.99) / 1e3)),
                     ("wait_p50_ms", Json::num(m.queue_wait.percentile_us(0.5) / 1e3)),
@@ -318,7 +418,10 @@ fn handle_conn(
         match Request::from_json(id, &v) {
             Some(req) => {
                 let (tx, rx) = std::sync::mpsc::channel();
-                match queue.try_push((req, tx)) {
+                let queued_frames = Arc::new(AtomicUsize::new(0));
+                let conn =
+                    ConnReply { tx, queued_frames: Arc::clone(&queued_frames) };
+                match queue.try_push((req, conn)) {
                     Ok(()) => {}
                     Err(PushError::Full(_)) => {
                         // shed: the bounded queue is the 429 analogue
@@ -345,7 +448,11 @@ fn handle_conn(
                 // zero or more streaming frames, then the final response
                 loop {
                     match rx.recv() {
-                        Ok(Reply::Frame(j)) => writeln!(writer, "{}", j.to_string())?,
+                        Ok(Reply::Frame(j)) => {
+                            writeln!(writer, "{}", j.to_string())?;
+                            // delivered: open the gate for the next frame
+                            queued_frames.fetch_sub(1, Ordering::Relaxed);
+                        }
                         Ok(Reply::Done(resp)) => {
                             writeln!(writer, "{}", resp.to_json().to_string())?;
                             break;
@@ -370,5 +477,55 @@ fn handle_conn(
                 )?;
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64, cycle: usize, tokens: &[i32]) -> SlotEvent {
+        SlotEvent {
+            id,
+            cycle,
+            tokens: tokens.to_vec(),
+            accepted_len: tokens.len(),
+            finished: false,
+        }
+    }
+
+    /// A consumer at capacity gets its cycles coalesced; once it drains,
+    /// one merged frame carries everything — no token lost or repeated.
+    #[test]
+    fn frame_gate_coalesces_when_consumer_lags() {
+        let mut g = FrameGate::new(2);
+        // queue has room: frames pass through immediately
+        let out = g.offer(&ev(7, 1, &[1, 2]), 0).expect("room -> send");
+        assert_eq!(out.tokens, vec![1, 2]);
+        // consumer at cap: two cycles coalesce into backlog
+        assert!(g.offer(&ev(7, 2, &[3]), 2).is_none());
+        assert!(g.offer(&ev(7, 3, &[4, 5]), 2).is_none());
+        // consumer drains below cap: next cycle flushes the whole merge
+        let merged = g.offer(&ev(7, 4, &[6]), 1).expect("room again");
+        assert_eq!(merged.tokens, vec![3, 4, 5, 6]);
+        assert_eq!(merged.cycle, 4, "cycle index advances to the newest");
+        assert_eq!(merged.accepted_len, 4);
+        // nothing left pending
+        assert!(g.flush(7).is_none());
+    }
+
+    /// Completion always drains the backlog, so concatenated frames
+    /// cover every committed token even for a never-draining consumer.
+    #[test]
+    fn frame_gate_flushes_backlog_on_completion() {
+        let mut g = FrameGate::new(0); // cap 0: nothing passes inline
+        assert!(g.offer(&ev(3, 1, &[10]), 0).is_none());
+        assert!(g.offer(&ev(3, 2, &[11, 12]), 0).is_none());
+        let fin = g.flush(3).expect("backlog flushes at completion");
+        assert_eq!(fin.tokens, vec![10, 11, 12]);
+        // per-request isolation: another id is untouched
+        assert!(g.offer(&ev(4, 1, &[1]), 0).is_none());
+        g.forget(4);
+        assert!(g.flush(4).is_none(), "forget drops the backlog");
     }
 }

@@ -20,7 +20,9 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use fasteagle::backend::BackendKind;
-use fasteagle::coordinator::{BatchConfig, BatchEngine, BatchMethod, Request, Server, ServerConfig};
+use fasteagle::coordinator::{
+    BatchConfig, BatchEngine, BatchMethod, PolicyKind, Request, Server, ServerConfig,
+};
 use fasteagle::draft::make_drafter;
 use fasteagle::model::TargetModel;
 use fasteagle::runtime::{ArtifactStore, Runtime};
@@ -34,8 +36,10 @@ commands:
   generate   --prompt TEXT [--drafter D] [--target T] [--temp F] [--max-new N]
   serve      [--addr HOST:PORT] [--method vanilla|eagle3|fasteagle] [--target T]
              [--batch B] [--chain N] [--pool-blocks N] [--queue N]
+             [--policy fcfs|spf] [--prefill-chunk N] [--frame-queue N]
   batch      [--batch B] [--method vanilla|eagle3|fasteagle] [--requests N]
-  bench      table1|table2|table3|fig3|microbench|all [--quick]
+             [--policy fcfs|spf]
+  bench      table1|table2|table3|fig3|microbench|serve|all [--quick]
   selfcheck  [--target T]
   fixture    [--out DIR] [--seed N]   emit interpreter-runnable artifacts
 
@@ -120,6 +124,15 @@ fn batch_config(args: &Args) -> Result<BatchConfig> {
             .map_err(|_| anyhow::anyhow!("invalid --pool-blocks {v:?}"))?;
         cfg.pool_blocks = Some(p);
     }
+    if let Some(p) = args.get("policy") {
+        cfg.policy = PolicyKind::from_name(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown scheduling policy {p:?}"))?;
+    }
+    if let Some(c) = args.get("prefill-chunk") {
+        cfg.prefill_chunk = c
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid --prefill-chunk {c:?}"))?;
+    }
     Ok(cfg)
 }
 
@@ -130,6 +143,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = Server::new(ServerConfig {
         addr: args.str_or("addr", "127.0.0.1:7399"),
         queue_capacity: args.usize_or("queue", 64),
+        frame_queue: args.usize_or("frame-queue", 16),
     });
     let metrics = server.serve(engine)?;
     println!("server done: {}", metrics.report());

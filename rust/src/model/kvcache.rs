@@ -143,6 +143,38 @@ impl KvCache {
         Ok(())
     }
 
+    /// Copy one batch slot's canonical rows out into a fresh
+    /// single-request (batch=1) cache of the same plane/row geometry —
+    /// the inverse of [`copy_request_from`](Self::copy_request_from).
+    /// Used by the scheduler's preemption path: a paused request's KV
+    /// state is parked on the host so its batch lane (and the pool
+    /// blocks beyond its committed prefix) can be handed to other work,
+    /// then restored verbatim on resume (no recomputation).
+    pub fn extract_request(&self, b: usize) -> Result<KvCache> {
+        let lay = self.layout;
+        if b >= lay.batch {
+            bail!("extract_request: slot {b} out of range (batch {})", lay.batch);
+        }
+        let n = self.len(b);
+        let mut shape = self.tensor.shape.clone();
+        let batch_axis = shape.len() - 4;
+        shape[batch_axis] = 1;
+        let mut out = KvCache::zeros(shape)?;
+        {
+            let src_data = self.tensor.as_f32()?;
+            let dst_data = out.tensor.as_f32_mut()?;
+            let dl = out.layout;
+            for plane in 0..lay.planes {
+                let so = lay.offset(plane, b, 0);
+                let doff = dl.offset(plane, 0, 0);
+                dst_data[doff..doff + n * lay.row]
+                    .copy_from_slice(&src_data[so..so + n * lay.row]);
+            }
+        }
+        out.len[0] = n;
+        Ok(out)
+    }
+
     /// Raw mutable data access (tests and synthetic-state setup).
     pub fn tensor_mut_for_tests(&mut self) -> &mut [f32] {
         self.tensor.as_f32_mut().unwrap()
@@ -204,6 +236,43 @@ mod tests {
         let mut kv = filled_cache();
         assert!(kv.compact(0, 0, &[2, 1]).is_err());
         assert!(kv.compact(0, 2, &[0, 5]).is_err()); // out of range
+    }
+
+    #[test]
+    fn extract_then_copy_back_roundtrips() {
+        let mut kv = filled_cache();
+        kv.set_len(1, 3);
+        let parked = kv.extract_request(1).unwrap();
+        assert_eq!(parked.layout.batch, 1);
+        assert_eq!(parked.len(0), 3);
+        for plane in 0..2 {
+            for slot in 0..3 {
+                assert_eq!(parked.row(plane, 0, slot), kv.row(plane, 1, slot));
+            }
+        }
+        // wipe the lane, then restore — rows must come back verbatim
+        let reference: Vec<Vec<f32>> =
+            (0..2).flat_map(|p| (0..3).map(move |s| (p, s))).map(|(p, s)| kv.row(p, 1, s).to_vec()).collect();
+        kv.set_len(1, 0);
+        {
+            let lay = kv.layout;
+            let data = kv.tensor_mut_for_tests();
+            for plane in 0..lay.planes {
+                let off = lay.offset(plane, 1, 0);
+                for v in &mut data[off..off + 4 * lay.row] {
+                    *v = 0.0;
+                }
+            }
+        }
+        kv.copy_request_from(1, &parked).unwrap();
+        assert_eq!(kv.len(1), 3);
+        let mut i = 0;
+        for p in 0..2 {
+            for s in 0..3 {
+                assert_eq!(kv.row(p, 1, s), reference[i].as_slice());
+                i += 1;
+            }
+        }
     }
 
     #[test]

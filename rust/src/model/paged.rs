@@ -13,7 +13,12 @@ use anyhow::{bail, Result};
 #[derive(Debug)]
 pub struct BlockPool {
     block_slots: usize,
+    /// recycled block ids (released leases)
     free: Vec<u32>,
+    /// first never-issued id: ids `next..total` exist only as capacity,
+    /// so an effectively-unbounded pool (the engine's default is
+    /// `usize::MAX / 4` blocks) costs nothing until leased
+    next: usize,
     total: usize,
 }
 
@@ -26,11 +31,7 @@ pub struct Lease {
 impl BlockPool {
     pub fn new(total_blocks: usize, block_slots: usize) -> BlockPool {
         assert!(block_slots > 0);
-        BlockPool {
-            block_slots,
-            free: (0..total_blocks as u32).rev().collect(),
-            total: total_blocks,
-        }
+        BlockPool { block_slots, free: Vec::new(), next: 0, total: total_blocks }
     }
 
     pub fn block_slots(&self) -> usize {
@@ -38,7 +39,7 @@ impl BlockPool {
     }
 
     pub fn available(&self) -> usize {
-        self.free.len()
+        self.free.len() + (self.total - self.next)
     }
 
     pub fn total(&self) -> usize {
@@ -53,15 +54,23 @@ impl BlockPool {
     }
 
     pub fn can_alloc(&self, n: usize) -> bool {
-        self.free.len() >= n
+        self.available() >= n
     }
 
     pub fn alloc(&mut self, n: usize, lease: &mut Lease) -> Result<()> {
-        if self.free.len() < n {
-            bail!("block pool exhausted: want {n}, have {}", self.free.len());
+        if self.available() < n {
+            bail!("block pool exhausted: want {n}, have {}", self.available());
         }
         for _ in 0..n {
-            lease.blocks.push(self.free.pop().unwrap());
+            match self.free.pop() {
+                Some(b) => lease.blocks.push(b),
+                None => {
+                    // ids are capacity accounting, not addresses — a
+                    // wrap past u32 would need >4e9 live blocks
+                    lease.blocks.push(self.next as u32);
+                    self.next += 1;
+                }
+            }
         }
         Ok(())
     }
@@ -84,6 +93,22 @@ impl BlockPool {
     pub fn release(&mut self, lease: &mut Lease) {
         self.free.append(&mut lease.blocks);
         debug_assert!(self.free.len() <= self.total);
+    }
+
+    /// Shrink a lease to cover `slots` slots, returning the excess
+    /// blocks to the pool. The preemption path uses this to park a
+    /// paused request at the cost of its committed tokens only; the
+    /// blocks come back via [`ensure`](Self::ensure) on resume.
+    /// Returns how many blocks were released.
+    pub fn shrink(&mut self, lease: &mut Lease, slots: usize, kv_layers: usize) -> usize {
+        let want = self.blocks_for(slots, kv_layers);
+        let mut released = 0usize;
+        while lease.blocks.len() > want {
+            self.free.push(lease.blocks.pop().unwrap());
+            released += 1;
+        }
+        debug_assert!(self.free.len() <= self.total);
+        released
     }
 }
 
@@ -130,6 +155,25 @@ mod tests {
         pool.ensure(&mut lease, 20, 1).unwrap(); // idempotent
         assert_eq!(lease.blocks.len(), pool.blocks_for(20, 1));
         pool.release(&mut lease);
+    }
+
+    #[test]
+    fn shrink_then_ensure_roundtrips() {
+        let mut pool = BlockPool::new(100, 16);
+        let mut lease = Lease::default();
+        // full lease for 64 slots, then shrink to 20 committed slots
+        pool.ensure(&mut lease, 64, 2).unwrap();
+        let full = lease.blocks.len();
+        let released = pool.shrink(&mut lease, 20, 2);
+        assert_eq!(lease.blocks.len(), pool.blocks_for(20, 2));
+        assert_eq!(released, full - pool.blocks_for(20, 2));
+        assert!(released > 0);
+        // shrinking below never over-releases; ensure grows back exactly
+        assert_eq!(pool.shrink(&mut lease, 20, 2), 0);
+        pool.ensure(&mut lease, 64, 2).unwrap();
+        assert_eq!(lease.blocks.len(), full);
+        pool.release(&mut lease);
+        assert_eq!(pool.available(), 100);
     }
 
     #[test]

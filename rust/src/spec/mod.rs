@@ -15,5 +15,6 @@ pub use metrics::GenMetrics;
 pub use sampler::Sampler;
 pub use session::{
     prompt_budget, truncate_prompt, verify_rows, CycleCommit, CycleEvent, GenSession, SlotCycle,
+    SlotPhase,
 };
 pub use tree::{DraftTree, TreeNode};

@@ -31,6 +31,21 @@ use super::metrics::GenMetrics;
 use super::sampler::Sampler;
 use super::tree::DraftTree;
 
+/// Lifecycle phase of one request's slot. A freshly admitted request
+/// ingests its prompt in fixed-token chunks that ride along the batched
+/// decode steps (`Prefilling`); once the last chunk lands it owns a
+/// [`SlotCycle`] and runs one draft → verify → commit cycle per step
+/// (`Decoding`). The single-request [`GenSession`] collapses the
+/// prefill phase into its constructor, so it is always `Decoding` by
+/// the time callers can observe it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotPhase {
+    /// prompt chunks still being ingested on the batched lane
+    Prefilling,
+    /// running draft → verify → commit cycles
+    Decoding,
+}
+
 /// What one cycle produced. `committed_tokens` is exactly the slice
 /// appended to the request's output this cycle (post eos/max_new
 /// truncation), so concatenating events reproduces the final token

@@ -3,6 +3,8 @@
 //! and trace replay through the continuous batcher's `step()` loop for
 //! the serving benchmarks.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
@@ -169,6 +171,96 @@ pub fn replay_trace(
     Ok((responses, metrics))
 }
 
+/// One request's client-side measurements from an open-loop TCP replay.
+/// Latencies are measured from the request's *scheduled* arrival time
+/// (not the moment the client thread got around to sending), so a
+/// saturated server shows up as tail latency instead of being hidden by
+/// coordinated omission.
+#[derive(Debug, Clone)]
+pub struct TcpReqStat {
+    pub index: usize,
+    /// scheduled arrival -> first streamed `tokens` frame (TTFT)
+    pub ttft_ms: f64,
+    /// scheduled arrival -> final response line
+    pub total_ms: f64,
+    pub tokens: usize,
+    /// server-side error reply ("queue full" shed, ...), if any
+    pub error: Option<String>,
+}
+
+impl TcpReqStat {
+    /// Mean decode latency per token after the first frame.
+    pub fn per_token_ms(&self) -> f64 {
+        (self.total_ms - self.ttft_ms) / (self.tokens.saturating_sub(1).max(1) as f64)
+    }
+}
+
+/// Open-loop replay of a trace against a live TCP server: one client
+/// thread per request connects at its arrival offset, sends the
+/// request with `"stream": true` (the first `tokens` frame is the TTFT
+/// mark), and reads to the final response. This drives the real
+/// `coordinator/server.rs` wire path — admission queue, scheduler,
+/// streaming flow control — not the in-process engine.
+pub fn replay_trace_tcp(addr: &str, trace: &[TraceItem]) -> Result<Vec<TcpReqStat>> {
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (index, item) in trace.iter().cloned().enumerate() {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || -> Result<TcpReqStat> {
+            let since = t0.elapsed();
+            if item.at > since {
+                std::thread::sleep(item.at - since);
+            }
+            let at_ms = item.at.as_secs_f64() * 1e3;
+            let elapsed_ms = move || t0.elapsed().as_secs_f64() * 1e3 - at_ms;
+            let stream = TcpStream::connect(&addr)?;
+            let mut w = stream.try_clone()?;
+            let req = Json::obj(vec![
+                ("prompt", Json::str(&item.prompt)),
+                ("max_new", Json::num(item.max_new as f64)),
+                ("stream", Json::Bool(true)),
+            ]);
+            writeln!(w, "{}", req.to_string())?;
+            let mut r = BufReader::new(stream);
+            let mut ttft_ms = f64::NAN;
+            let mut tokens = 0usize;
+            loop {
+                let mut line = String::new();
+                if r.read_line(&mut line)? == 0 {
+                    bail!("connection closed before final response");
+                }
+                let v = Json::parse(line.trim())
+                    .map_err(|e| anyhow::anyhow!("bad reply line: {e}"))?;
+                if v.get("event").and_then(Json::as_str) == Some("tokens") {
+                    if ttft_ms.is_nan() {
+                        ttft_ms = elapsed_ms();
+                    }
+                    continue;
+                }
+                let total_ms = elapsed_ms();
+                let error = v
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .map(String::from);
+                tokens = v
+                    .get("new_tokens")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0);
+                if ttft_ms.is_nan() {
+                    ttft_ms = total_ms; // errored before any frame
+                }
+                return Ok(TcpReqStat { index, ttft_ms, total_ms, tokens, error });
+            }
+        }));
+    }
+    let mut out = Vec::with_capacity(handles.len());
+    for h in handles {
+        out.push(h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??);
+    }
+    out.sort_by_key(|s| s.index);
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,5 +289,20 @@ mod tests {
     fn paper_names() {
         assert_eq!(paper_name("code"), "HumanEval");
         assert_eq!(paper_name("nope"), "?");
+    }
+
+    #[test]
+    fn per_token_latency_excludes_ttft() {
+        let s = TcpReqStat {
+            index: 0,
+            ttft_ms: 10.0,
+            total_ms: 110.0,
+            tokens: 11,
+            error: None,
+        };
+        assert!((s.per_token_ms() - 10.0).abs() < 1e-9);
+        // degenerate outputs never divide by zero
+        let s = TcpReqStat { tokens: 0, ..s };
+        assert!((s.per_token_ms() - 100.0).abs() < 1e-9);
     }
 }

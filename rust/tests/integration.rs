@@ -17,8 +17,8 @@ use common::{artifacts_base, artifacts_root, store_with};
 use fasteagle::backend::{fixture, BackendKind};
 use fasteagle::coordinator::{BatchConfig, BatchEngine, BatchMethod, Request};
 use fasteagle::draft::make_drafter;
-use fasteagle::model::{KvCache, MaskRow, TargetModel};
-use fasteagle::spec::{Engine, GenConfig};
+use fasteagle::model::{BlockPool, KvCache, MaskRow, ModelSpec, TargetModel};
+use fasteagle::spec::{Engine, GenConfig, SlotPhase};
 use fasteagle::workload::batched_serving_target;
 
 
@@ -448,4 +448,307 @@ fn batch_engine_step_admits_mid_flight_submissions() {
     assert_eq!(metrics.requests_done, 2);
     assert_eq!(metrics.queue_wait.count(), 2);
     assert_eq!(metrics.ttfc.count(), 2);
+}
+
+/// Chunked prefill on the batched lane: admitting a long prompt must
+/// not head-of-line-block a decoding slot. While the long request is
+/// still `Prefilling` (its prompt ingested in verify-row-sized chunks),
+/// the already-running request keeps committing tokens in the same
+/// steps — and the long request still completes with its full output.
+#[test]
+fn chunked_prefill_admits_long_prompt_while_decode_commits() {
+    let (root, kind) = artifacts_root();
+    let Some((dir, batch)) = batched_serving_target(&root) else {
+        eprintln!("skipping: no serving target");
+        return;
+    };
+    if batch < 2 {
+        eprintln!("skipping: serving target has no batched executables");
+        return;
+    }
+    let st = store_with(&dir, kind);
+    let mut eng = BatchEngine::new(
+        Rc::clone(&st),
+        BatchConfig::new(batch, BatchMethod::FastEagle),
+    )
+    .unwrap();
+    let mut metrics = fasteagle::coordinator::ServingMetrics::default();
+
+    // request A: short prompt, long generation — gets decoding first
+    let mut ra = Request::new(0, PROMPTS[1]);
+    ra.cfg.max_new_tokens = 48;
+    eng.submit(ra);
+    // drive A through its own prefill into decode
+    for _ in 0..200 {
+        let _ = eng.step_events(&mut metrics).unwrap();
+        if eng.slot_phase(0) == Some(SlotPhase::Decoding) {
+            break;
+        }
+    }
+    assert_eq!(eng.slot_phase(0), Some(SlotPhase::Decoding), "A never reached decode");
+
+    // request B: long prompt (many chunks), short generation
+    let long_prompt = "the quick brown fox jumps over the lazy dog. ".repeat(2)
+        + "USER: summarize the fast cache design.\nASSISTANT:";
+    let mut rb = Request::new(1, long_prompt);
+    rb.cfg.max_new_tokens = 4;
+    eng.submit(rb);
+
+    let mut overlap_steps = 0usize;
+    let mut a_tokens_during_b_prefill = 0usize;
+    let mut done = Vec::new();
+    for _ in 0..500 {
+        let b_slot = (0..batch).find(|&b| {
+            eng.slot_phase(b) == Some(SlotPhase::Prefilling)
+        });
+        let out = eng.step_events(&mut metrics).unwrap();
+        if b_slot.is_some() {
+            // a step where B was still ingesting prompt chunks: count
+            // tokens A committed in that same step
+            let a_commits: usize = out
+                .events
+                .iter()
+                .filter(|e| e.id == 0)
+                .map(|e| e.tokens.len())
+                .sum();
+            if a_commits > 0 {
+                overlap_steps += 1;
+                a_tokens_during_b_prefill += a_commits;
+            }
+        }
+        done.extend(out.finished);
+        if done.len() == 2 {
+            break;
+        }
+    }
+    assert_eq!(done.len(), 2, "both requests must complete");
+    assert!(done.iter().all(|r| r.error.is_none()));
+    assert!(
+        overlap_steps >= 2,
+        "decode must keep committing while the long prompt prefills \
+         (saw {overlap_steps} overlapping steps)"
+    );
+    assert!(a_tokens_during_b_prefill >= 2);
+    assert!(
+        metrics.prefill_chunks > 2,
+        "a long prompt must take multiple chunks (got {})",
+        metrics.prefill_chunks
+    );
+    let b = done.iter().find(|r| r.id == 1).unwrap();
+    assert_eq!(b.new_tokens, 4, "chunked-prefilled request still generates fully");
+}
+
+/// Batching must be invisible to each request: a request admitted
+/// mid-flight — finishing its chunked prefill in the very step another
+/// same-method slot commits (and observes) — must produce the same
+/// output *and the same per-cycle acceptance (tau)* as running alone.
+/// Guards the drafter-state isolation between lanes: the step's
+/// batched observe writes rows into every lane of the method's state
+/// tensor, so a newly prefilled slot's drafter KV must be installed
+/// after those writes, not before.
+#[test]
+fn staggered_same_method_admission_is_batch_invariant() {
+    let (root, kind) = artifacts_root();
+    let Some((dir, batch)) = batched_serving_target(&root) else {
+        eprintln!("skipping: no serving target");
+        return;
+    };
+    if batch < 2 {
+        eprintln!("skipping: needs concurrent lanes");
+        return;
+    }
+    let st = store_with(&dir, kind);
+    // B: short prompt (finalizes within a few chunks, while A decodes)
+    let short_prompt = "Q: hi\nA:";
+    let solo = |prompt: &str, id: u64, max_new: usize| {
+        let mut eng = BatchEngine::new(
+            Rc::clone(&st),
+            BatchConfig::new(batch, BatchMethod::FastEagle),
+        )
+        .unwrap();
+        let mut r = Request::new(id, prompt);
+        r.cfg.max_new_tokens = max_new;
+        let (resps, _) = eng.run(vec![r]).unwrap();
+        resps.into_iter().next().unwrap()
+    };
+    let ref_a = solo(PROMPTS[0], 0, 64);
+    let ref_b = solo(short_prompt, 1, 24);
+
+    let mut eng = BatchEngine::new(
+        Rc::clone(&st),
+        BatchConfig::new(batch, BatchMethod::FastEagle),
+    )
+    .unwrap();
+    let mut metrics = fasteagle::coordinator::ServingMetrics::default();
+    let mut ra = Request::new(0, PROMPTS[0]);
+    ra.cfg.max_new_tokens = 64;
+    eng.submit(ra);
+    for _ in 0..200 {
+        let _ = eng.step(&mut metrics).unwrap();
+        if eng.slot_phase(0) == Some(SlotPhase::Decoding) {
+            break;
+        }
+    }
+    assert_eq!(eng.slot_phase(0), Some(SlotPhase::Decoding));
+    let mut rb = Request::new(1, short_prompt);
+    rb.cfg.max_new_tokens = 24;
+    eng.submit(rb);
+    let mut done = Vec::new();
+    for _ in 0..1000 {
+        done.extend(eng.step(&mut metrics).unwrap());
+        if done.len() == 2 {
+            break;
+        }
+    }
+    assert_eq!(done.len(), 2);
+    for (resp, reference) in [
+        (done.iter().find(|r| r.id == 0).unwrap(), &ref_a),
+        (done.iter().find(|r| r.id == 1).unwrap(), &ref_b),
+    ] {
+        assert!(resp.error.is_none());
+        assert_eq!(resp.text, reference.text, "batching changed request {}", resp.id);
+        assert_eq!(
+            resp.cycles, reference.cycles,
+            "request {}: cycle count (draft quality) changed under batching",
+            resp.id
+        );
+        assert!(
+            (resp.tau - reference.tau).abs() < 1e-9,
+            "request {}: tau changed under batching ({} vs {})",
+            resp.id,
+            resp.tau,
+            reference.tau
+        );
+    }
+}
+
+/// Preemption invariants, property-style across methods: pausing a
+/// low-priority request under pool pressure (lease shrunk to its
+/// committed tokens, state parked) and resuming it later must produce
+/// byte-identical output to an undisturbed run — including the
+/// stochastic sampler stream — and the block pool must balance to zero
+/// leaked blocks once everything drains.
+#[test]
+fn preemption_pause_resume_byte_identity_and_pool_balance() {
+    let (root, kind) = artifacts_root();
+    let Some((dir, batch)) = batched_serving_target(&root) else {
+        eprintln!("skipping: no serving target");
+        return;
+    };
+    if batch < 2 {
+        eprintln!("skipping: preemption needs a second lane to admit into");
+        return;
+    }
+    let st = store_with(&dir, kind);
+    let spec = ModelSpec::parse(&st.spec_json().unwrap()).unwrap();
+    let block_slots = 16usize;
+    let probe = BlockPool::new(1, block_slots);
+    let fe_full = probe.blocks_for(spec.max_seq, spec.n_layers + spec.draft_depth);
+
+    for (trial, victim_method) in
+        [BatchMethod::Vanilla, BatchMethod::FastEagle, BatchMethod::Eagle3]
+            .into_iter()
+            .enumerate()
+    {
+        // the victim request: low priority, stochastic (so byte-identity
+        // also proves the sampler stream survives the pause)
+        let make_victim = || {
+            let mut r = Request::new(10, PROMPTS[0]);
+            r.method = Some(victim_method);
+            r.cfg.max_new_tokens = 20;
+            r.cfg.temperature = 1.0;
+            r.cfg.seed = 7 + trial as u64;
+            r.priority = 0;
+            r
+        };
+
+        // reference: the same request, alone, on an unconstrained engine
+        let reference = {
+            let mut eng = BatchEngine::new(
+                Rc::clone(&st),
+                BatchConfig::new(batch, BatchMethod::FastEagle),
+            )
+            .unwrap();
+            let (resps, _) = eng.run(vec![make_victim()]).unwrap();
+            resps.into_iter().next().unwrap()
+        };
+
+        // constrained pool: sized so the high-priority fasteagle request
+        // can only be funded by shrinking the victim's lease down to its
+        // committed prefix (fe_full + the victim's worst-case committed
+        // cost), whatever step the preemption lands on
+        let victim_layers =
+            spec.n_layers + victim_method.drafter_kv_layers(&spec);
+        let victim_rows_max = PROMPTS[0].len() + 1 + 20 + 8;
+        let victim_cost_max = probe.blocks_for(victim_rows_max, victim_layers);
+        let victim_full = probe.blocks_for(spec.max_seq, victim_layers);
+        assert!(
+            victim_cost_max < victim_full,
+            "fixture too small for a meaningful shrink"
+        );
+        let mut cfg = BatchConfig::new(batch, BatchMethod::FastEagle);
+        cfg.pool_blocks = Some(fe_full + victim_cost_max);
+        cfg.block_slots = block_slots;
+        let mut eng = BatchEngine::new(Rc::clone(&st), cfg).unwrap();
+        let total = eng.pool_total();
+
+        let mut metrics = fasteagle::coordinator::ServingMetrics::default();
+        eng.submit(make_victim());
+        // let the victim get decoding and commit a few cycles
+        for _ in 0..300 {
+            let _ = eng.step(&mut metrics).unwrap();
+            if eng.slot_phase(0) == Some(SlotPhase::Decoding) {
+                break;
+            }
+        }
+        for _ in 0..3 {
+            let _ = eng.step(&mut metrics).unwrap();
+        }
+
+        // high-priority fasteagle request arrives: under this pool it
+        // can only admit by preempting the victim
+        let mut hi = Request::new(20, PROMPTS[1]);
+        hi.cfg.max_new_tokens = 8;
+        hi.priority = 5;
+        eng.submit(hi);
+
+        let mut done = Vec::new();
+        for _ in 0..1000 {
+            done.extend(eng.step(&mut metrics).unwrap());
+            if done.len() == 2 {
+                break;
+            }
+            assert!(eng.has_work(), "engine drained without finishing both");
+        }
+        assert_eq!(done.len(), 2, "[{victim_method:?}] both must finish");
+        assert!(done.iter().all(|r| r.error.is_none()));
+        assert!(
+            metrics.preemptions >= 1,
+            "[{victim_method:?}] pool pressure must have preempted the victim"
+        );
+        assert_eq!(
+            metrics.resumes, metrics.preemptions,
+            "every pause must be matched by a resume"
+        );
+        assert!(metrics.parked_tokens_peak > 0, "parked tokens were gauged");
+        assert_eq!(
+            metrics.parked_tokens, 0,
+            "nothing stays parked after the drain"
+        );
+        // the high-priority request finished first (that's what the
+        // preemption bought)
+        assert_eq!(done[0].id, 20, "[{victim_method:?}] priority served first");
+        // byte-identity: pause/resume must not change a single token of
+        // the victim's (stochastic) output
+        let victim = done.iter().find(|r| r.id == 10).unwrap();
+        assert_eq!(victim.new_tokens, reference.new_tokens);
+        assert_eq!(
+            victim.text, reference.text,
+            "[{victim_method:?}] pause/resume changed the committed output"
+        );
+        // pool accounting balances to zero on drain: every lease —
+        // full, shrunk, regrown — returned
+        assert_eq!(eng.pool_available(), total, "[{victim_method:?}] leaked blocks");
+        assert_eq!(eng.parked_len(), 0);
+    }
 }

@@ -252,6 +252,52 @@ fn dynamic_slice_matches_naive_with_clamping() {
     }
 }
 
+/// rng-bit-generator (threefry): output shape follows the request for
+/// any length (including odd ones that split a 2x32 block), the stream
+/// is a pure function of the state, distinct keys/counters produce
+/// distinct streams, and the returned state advances by the blocks
+/// consumed — so chaining calls through the returned state never
+/// replays bits.
+#[test]
+fn rng_threefry_shape_determinism_and_state_advance() {
+    let mut rng = Pcg64::new(108, 0);
+    for _ in 0..40 {
+        let n = 1 + rng.below(33);
+        let key = rng.next_u64();
+        let ctr = rng.next_u64();
+        let mut hb = HloBuilder::new("rng");
+        let st = hb.param(Ty::U64, vec![2]);
+        let (ns, bits) = hb.rng_threefry(&st, vec![n]);
+        let text = hb.finish(&[&ns, &bits]);
+        let run1 = run(&text, vec![Value::u64(vec![2], vec![key, ctr])]);
+        assert_eq!(run1[1].dims, vec![n], "bits shape follows the request");
+        assert_eq!(
+            run1[0].u64s().unwrap(),
+            &[key, ctr.wrapping_add(n.div_ceil(2) as u64)],
+            "state advances by blocks consumed"
+        );
+        // determinism: same state -> identical stream
+        let run2 = run(&text, vec![Value::u64(vec![2], vec![key, ctr])]);
+        assert_eq!(run1[1].u32s().unwrap(), run2[1].u32s().unwrap());
+        // sensitivity: a different key or counter changes the stream
+        // (compare the first block, which every n includes)
+        let other = run(&text, vec![Value::u64(vec![2], vec![key ^ 1, ctr])]);
+        assert_ne!(
+            run1[1].u32s().unwrap()[0],
+            other[1].u32s().unwrap()[0],
+            "key must perturb the stream"
+        );
+        // chaining through the returned state yields fresh bits
+        let next_state = run1[0].u64s().unwrap().to_vec();
+        let chained = run(&text, vec![Value::u64(vec![2], next_state)]);
+        assert_ne!(
+            run1[1].u32s().unwrap()[0],
+            chained[1].u32s().unwrap()[0],
+            "advanced counter must not replay the stream"
+        );
+    }
+}
+
 #[test]
 fn dynamic_update_slice_matches_naive_with_clamping() {
     let mut rng = Pcg64::new(107, 0);

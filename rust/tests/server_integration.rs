@@ -58,7 +58,11 @@ fn server_roundtrip_concurrency_and_shutdown() {
             BatchConfig::new(batch, BatchMethod::FastEagle),
         )
         .unwrap();
-        let server = Server::new(ServerConfig { addr: ADDR.into(), queue_capacity: 8 });
+        let server = Server::new(ServerConfig {
+            addr: ADDR.into(),
+            queue_capacity: 8,
+            ..Default::default()
+        });
         server.serve(engine).unwrap()
     });
     // wait for listener
@@ -174,7 +178,11 @@ fn server_streams_cycle_frames_byte_identical() {
             BatchConfig::new(batch, BatchMethod::FastEagle),
         )
         .unwrap();
-        let server = Server::new(ServerConfig { addr: SADDR.into(), queue_capacity: 8 });
+        let server = Server::new(ServerConfig {
+            addr: SADDR.into(),
+            queue_capacity: 8,
+            ..Default::default()
+        });
         server.serve(engine).unwrap()
     });
     wait_for_listener(SADDR);
@@ -240,6 +248,89 @@ fn server_streams_cycle_frames_byte_identical() {
     );
 
     let v = query_at(SADDR, r#"{"cmd":"shutdown"}"#);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    server_thread.join().unwrap();
+}
+
+/// Streaming flow control: a deliberately slow reader must not make the
+/// server queue one frame per cycle without bound. With `frame_queue: 0`
+/// (the hard-throttle setting: no frame may sit undelivered) every
+/// cycle coalesces into the per-request backlog, and the completion
+/// flush delivers exactly one merged frame that still carries every
+/// committed token — byte-identical to the final text.
+#[test]
+fn server_coalesces_frames_for_slow_consumer() {
+    const CADDR: &str = "127.0.0.1:7435";
+    let (root, kind) = artifacts_root();
+    let Some((dir, batch)) = batched_serving_target(&root) else {
+        eprintln!("skipping: no serving target");
+        return;
+    };
+    let server_thread = std::thread::spawn(move || {
+        let rt = Arc::new(Runtime::new(kind).unwrap());
+        let store = Rc::new(ArtifactStore::open(rt, dir).unwrap());
+        let engine = BatchEngine::new(
+            Rc::clone(&store),
+            BatchConfig::new(batch, BatchMethod::FastEagle),
+        )
+        .unwrap();
+        let server = Server::new(ServerConfig {
+            addr: CADDR.into(),
+            queue_capacity: 8,
+            frame_queue: 0,
+        });
+        server.serve(engine).unwrap()
+    });
+    wait_for_listener(CADDR);
+
+    let stream = TcpStream::connect(CADDR).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    writeln!(
+        w,
+        r#"{{"prompt":"USER: tell me about machine learning and the fast cache.\nASSISTANT:","max_new":24,"stream":true}}"#
+    )
+    .unwrap();
+    // deliberately slow reader: don't touch the socket until generation
+    // has certainly finished — frames must have coalesced server-side
+    std::thread::sleep(Duration::from_millis(500));
+    let mut r = BufReader::new(stream);
+    let mut frames = 0usize;
+    let mut toks: Vec<i32> = Vec::new();
+    let final_resp = loop {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let v = Json::parse(line.trim()).expect("json line");
+        if v.get("event").and_then(Json::as_str) == Some("tokens") {
+            frames += 1;
+            for t in v.get("tokens").and_then(Json::as_arr).expect("tokens array") {
+                toks.push(t.as_i64().unwrap() as i32);
+            }
+        } else {
+            break v;
+        }
+    };
+    assert!(final_resp.get("error").is_none(), "{final_resp:?}");
+    let cycles = final_resp.get("cycles").and_then(Json::as_usize).unwrap();
+    assert_eq!(
+        frames, 1,
+        "frame_queue=0 must coalesce all {cycles} cycles into one flush frame"
+    );
+    assert!(cycles > 1, "test needs a multi-cycle generation to be meaningful");
+    // coalescing loses no tokens: the merged frame reassembles the text
+    assert_eq!(toks.len(), 24, "merged frame must carry every committed token");
+    let bytes: Vec<u8> = toks
+        .iter()
+        .filter(|&&t| (0..256).contains(&t))
+        .map(|&t| t as u8)
+        .collect();
+    let concat = String::from_utf8_lossy(&bytes).into_owned();
+    assert_eq!(
+        concat,
+        final_resp.get("text").and_then(Json::as_str).unwrap(),
+        "coalesced frame must reassemble the final text exactly"
+    );
+
+    let v = query_at(CADDR, r#"{"cmd":"shutdown"}"#);
     assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
     server_thread.join().unwrap();
 }
