@@ -9,7 +9,7 @@ use std::sync::Arc;
 use fasteagle::draft::make_drafter;
 use fasteagle::model::TargetModel;
 use fasteagle::runtime::{ArtifactStore, Runtime};
-use fasteagle::spec::{Engine, GenConfig};
+use fasteagle::spec::{DraftConfig, Engine, GenConfig};
 
 fn main() -> anyhow::Result<()> {
     let root = std::env::var("FE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -36,7 +36,12 @@ fn main() -> anyhow::Result<()> {
     for (label, wset, use_tree) in variants {
         let target = TargetModel::open(Rc::clone(&store))?;
         let mut eng = Engine::new(target, make_drafter(Rc::clone(&store), wset)?);
-        let cfg = GenConfig { max_new_tokens: 48, use_tree, ..Default::default() };
+        let top_k = if use_tree { None } else { Some(1) };
+        let cfg = GenConfig {
+            max_new_tokens: 48,
+            draft: DraftConfig { top_k, ..Default::default() },
+            ..Default::default()
+        };
         eng.generate(prompt, &cfg)?; // warm
         let r = eng.generate(prompt, &cfg)?;
         println!(

@@ -521,7 +521,9 @@ fn spec_json(target: &str, exec_names: &[String], batch_sizes: &[usize]) -> Stri
 }}
 "#,
         fd = 3 * D,
-        nodes = N_CASCADE * TREE_TOP_K,
+        // emitted for external tooling; ModelSpec re-derives it from
+        // the same DraftPlan helper, so the two can never drift
+        nodes = crate::spec::plan::default_draft_nodes(N_CASCADE, TREE_TOP_K),
         execs = execs.join(", "),
         batches = batches.join(", "),
     )
@@ -681,7 +683,7 @@ pub fn generate_tree(root: &Path, seed: u64) -> Result<()> {
 "#,
             tasks = tasks_q.join(", "),
             stands = stands.join(", "),
-            nodes = N_CASCADE * TREE_TOP_K,
+            nodes = crate::spec::plan::default_draft_nodes(N_CASCADE, TREE_TOP_K),
         ),
     )?;
     generate_target_dir(&root.join("base"), "base", seed, &[1])?;

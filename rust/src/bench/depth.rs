@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use crate::spec::GenConfig;
+use crate::spec::{DraftConfig, GenConfig};
 use crate::util::json::Json;
 
 use super::harness::{render_table, run_method, write_report, BenchEnv};
@@ -38,7 +38,7 @@ pub fn run(env: &BenchEnv) -> Result<()> {
         for &d in &depths {
             let cfg = GenConfig {
                 max_new_tokens: max_new,
-                max_depth: Some(d),
+                draft: DraftConfig { depth: Some(d), ..Default::default() },
                 ..Default::default()
             };
             let agg = run_method(env, TARGET, method, &prompts, &cfg)?;

@@ -117,7 +117,8 @@ pub fn run(env: &BenchEnv) -> Result<()> {
                     })?;
                     pos = 4;
                 }
-                let out = dr.draft(72, pos - 1, 0.0)?;
+                // unbounded levels: measure the drafter's full native cost
+                let out = dr.draft(72, pos - 1, 0.0, usize::MAX)?;
                 let _ = &out;
                 let _ = sampler.coin();
                 Ok(())

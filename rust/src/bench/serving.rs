@@ -1,18 +1,20 @@
 //! Open-loop TCP serving bench: tail latency vs offered load, per
-//! scheduling policy.
+//! scheduling policy × draft planner.
 //!
-//! For each (policy, arrival rate) cell this harness boots the real TCP
-//! server (`coordinator/server.rs`) over a continuous-batching engine,
-//! replays a Poisson trace against it through
-//! [`crate::workload::replay_trace_tcp`] — real connections, streaming
-//! on, TTFT marked at the first `tokens` frame — and reports
-//! p50/p95/p99 TTFT plus per-token decode latency. This is the
-//! ROADMAP's open-loop serving study: unlike the closed-loop Table 3
-//! (which only measures throughput), an open-loop client keeps sending
-//! at the offered rate while the server falls behind, so queueing shows
-//! up as TTFT tail growth — exactly what chunked prefill and the
-//! scheduler policies are meant to shape.
+//! For each (policy, planner, arrival rate) cell this harness boots the
+//! real TCP server (`coordinator/server.rs`) over a continuous-batching
+//! engine with that cell's default [`PlannerKind`], replays a Poisson
+//! trace against it through [`crate::workload::replay_trace_tcp`] —
+//! real connections, streaming on, TTFT marked at the first `tokens`
+//! frame — and reports p50/p95/p99 TTFT plus per-token decode latency,
+//! the served acceptance length (τ), and the plan gauges
+//! (`plan_depth_mean`/`plan_nodes_mean` from the server's stats
+//! endpoint). This is the ROADMAP's open-loop serving study plus the
+//! DraftPlan study: the static planner pays a fixed draft cost per
+//! cycle, the adaptive planner trades draft cost against acceptance
+//! per slot — the table shows acceptance length vs draft cost per cell.
 
+use std::io::{BufRead, BufReader, Write};
 use std::rc::Rc;
 use std::sync::Arc;
 
@@ -20,6 +22,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{BatchConfig, BatchEngine, BatchMethod, PolicyKind, Server, ServerConfig};
 use crate::runtime::{ArtifactStore, Runtime};
+use crate::spec::PlannerKind;
 use crate::util::json::Json;
 use crate::util::stats::percentile_sorted;
 use crate::workload::{batched_serving_target, poisson_trace, replay_trace_tcp};
@@ -30,6 +33,7 @@ const BASE_PORT: u16 = 7461;
 
 struct Cell {
     policy: PolicyKind,
+    planner: PlannerKind,
     rate: f64,
     done: usize,
     shed: usize,
@@ -38,6 +42,11 @@ struct Cell {
     ttft_p99: f64,
     tok_p50: f64,
     tok_p95: f64,
+    /// served acceptance length (mean τ) and plan gauges from the
+    /// server's stats endpoint — acceptance vs draft cost per cell
+    tau: f64,
+    plan_depth_mean: f64,
+    plan_nodes_mean: f64,
     server_report: String,
 }
 
@@ -50,7 +59,7 @@ fn percentiles(mut xs: Vec<f64>) -> (f64, f64, f64) {
     )
 }
 
-/// Everything shared across the bench's (policy, rate) cells.
+/// Everything shared across the bench's (policy, planner, rate) cells.
 struct CellSetup<'a> {
     kind: crate::backend::BackendKind,
     dir: &'a std::path::Path,
@@ -60,7 +69,23 @@ struct CellSetup<'a> {
     max_new: usize,
 }
 
-fn run_cell(setup: &CellSetup, policy: PolicyKind, rate: f64, port: u16) -> Result<Cell> {
+/// One JSON-line query against a live server (stats, shutdown).
+fn server_query(addr: &str, line: &str) -> Result<Json> {
+    let s = std::net::TcpStream::connect(addr)?;
+    let mut w = s.try_clone()?;
+    writeln!(w, "{line}")?;
+    let mut out = String::new();
+    BufReader::new(s).read_line(&mut out)?;
+    Json::parse(out.trim()).map_err(|e| anyhow::anyhow!("bad server reply: {e}"))
+}
+
+fn run_cell(
+    setup: &CellSetup,
+    policy: PolicyKind,
+    planner: PlannerKind,
+    rate: f64,
+    port: u16,
+) -> Result<Cell> {
     let addr = format!("127.0.0.1:{port}");
     let kind = setup.kind;
     let batch = setup.batch;
@@ -71,6 +96,7 @@ fn run_cell(setup: &CellSetup, policy: PolicyKind, rate: f64, port: u16) -> Resu
         let store = Rc::new(ArtifactStore::open(rt, dir2)?);
         let mut cfg = BatchConfig::new(batch, BatchMethod::FastEagle);
         cfg.policy = policy;
+        cfg.draft.planner = Some(planner);
         let engine = BatchEngine::new(Rc::clone(&store), cfg)?;
         let server = Server::new(ServerConfig {
             addr: addr2,
@@ -111,9 +137,15 @@ fn run_cell(setup: &CellSetup, policy: PolicyKind, rate: f64, port: u16) -> Resu
     let trace = poisson_trace(setup.prompts, setup.n, rate, setup.max_new, 42);
     let stats = replay_trace_tcp(&addr, &trace)?;
 
-    // shutdown the server and collect its own metrics line
+    // collect the plan gauges before shutting the server down
+    let server_stats = server_query(&addr, r#"{"cmd":"stats"}"#)?;
+    let stat = |key: &str| server_stats.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+    let (tau, plan_depth_mean, plan_nodes_mean) =
+        (stat("mean_tau"), stat("plan_depth_mean"), stat("plan_nodes_mean"));
+    // shutdown: the write must land (or the join below never returns),
+    // but the reply is best-effort — it can be lost to the teardown
+    // race and a failed read must not discard the sweep
     {
-        use std::io::{BufRead, BufReader, Write};
         let s = std::net::TcpStream::connect(&addr)?;
         let mut w = s.try_clone()?;
         writeln!(w, "{}", r#"{"cmd":"shutdown"}"#)?;
@@ -135,6 +167,7 @@ fn run_cell(setup: &CellSetup, policy: PolicyKind, rate: f64, port: u16) -> Resu
         percentiles(ok.iter().map(|s| s.per_token_ms()).collect());
     Ok(Cell {
         policy,
+        planner,
         rate,
         done: ok.len(),
         shed,
@@ -143,6 +176,9 @@ fn run_cell(setup: &CellSetup, policy: PolicyKind, rate: f64, port: u16) -> Resu
         ttft_p99,
         tok_p50,
         tok_p95,
+        tau,
+        plan_depth_mean,
+        plan_nodes_mean,
         server_report,
     })
 }
@@ -154,7 +190,7 @@ pub fn run(env: &BenchEnv) -> Result<()> {
     };
     let prompts = env.prompts("dialog", 8).context("dialog prompts")?;
     let (n, max_new, rates): (usize, usize, Vec<f64>) = if env.quick {
-        (8, 12, vec![2.0, 8.0])
+        (8, 12, vec![4.0])
     } else {
         (24, 32, vec![1.0, 4.0, 16.0])
     };
@@ -171,50 +207,67 @@ pub fn run(env: &BenchEnv) -> Result<()> {
     let mut report = Vec::new();
     let mut port = BASE_PORT;
     for policy in [PolicyKind::Fcfs, PolicyKind::Spf] {
-        for &rate in &rates {
-            let cell = run_cell(&setup, policy, rate, port)?;
-            port += 1;
-            println!(
-                "serve[{} @ {:>5.1} req/s]: {}",
-                cell.policy.name(),
-                rate,
-                cell.server_report
-            );
-            rows.push(vec![
-                cell.policy.name().to_string(),
-                format!("{:.1}", cell.rate),
-                format!("{}", cell.done),
-                format!("{}", cell.shed),
-                format!("{:.0}", cell.ttft_p50),
-                format!("{:.0}", cell.ttft_p95),
-                format!("{:.0}", cell.ttft_p99),
-                format!("{:.1}", cell.tok_p50),
-                format!("{:.1}", cell.tok_p95),
-            ]);
-            report.push(Json::obj(vec![
-                ("policy", Json::str(policy.name())),
-                ("rate_per_sec", Json::num(rate)),
-                ("done", Json::num(cell.done as f64)),
-                ("shed", Json::num(cell.shed as f64)),
-                ("ttft_p50_ms", Json::num(cell.ttft_p50)),
-                ("ttft_p95_ms", Json::num(cell.ttft_p95)),
-                ("ttft_p99_ms", Json::num(cell.ttft_p99)),
-                ("per_token_p50_ms", Json::num(cell.tok_p50)),
-                ("per_token_p95_ms", Json::num(cell.tok_p95)),
-            ]));
+        for planner in [PlannerKind::Static, PlannerKind::Adaptive] {
+            for &rate in &rates {
+                let cell = run_cell(&setup, policy, planner, rate, port)?;
+                port += 1;
+                println!(
+                    "serve[{}/{} @ {:>5.1} req/s]: {}",
+                    cell.policy.name(),
+                    cell.planner.name(),
+                    rate,
+                    cell.server_report
+                );
+                rows.push(vec![
+                    cell.policy.name().to_string(),
+                    cell.planner.name().to_string(),
+                    format!("{:.1}", cell.rate),
+                    format!("{}", cell.done),
+                    format!("{}", cell.shed),
+                    format!("{:.0}", cell.ttft_p50),
+                    format!("{:.0}", cell.ttft_p95),
+                    format!("{:.0}", cell.ttft_p99),
+                    format!("{:.1}", cell.tok_p50),
+                    format!("{:.1}", cell.tok_p95),
+                    format!("{:.2}", cell.tau),
+                    format!("{:.2}", cell.plan_depth_mean),
+                    format!("{:.2}", cell.plan_nodes_mean),
+                ]);
+                report.push(Json::obj(vec![
+                    ("policy", Json::str(policy.name())),
+                    ("planner", Json::str(planner.name())),
+                    ("rate_per_sec", Json::num(rate)),
+                    ("done", Json::num(cell.done as f64)),
+                    ("shed", Json::num(cell.shed as f64)),
+                    ("ttft_p50_ms", Json::num(cell.ttft_p50)),
+                    ("ttft_p95_ms", Json::num(cell.ttft_p95)),
+                    ("ttft_p99_ms", Json::num(cell.ttft_p99)),
+                    ("per_token_p50_ms", Json::num(cell.tok_p50)),
+                    ("per_token_p95_ms", Json::num(cell.tok_p95)),
+                    ("mean_tau", Json::num(cell.tau)),
+                    ("plan_depth_mean", Json::num(cell.plan_depth_mean)),
+                    ("plan_nodes_mean", Json::num(cell.plan_nodes_mean)),
+                ]));
+            }
         }
     }
 
-    println!("\n=== Open-loop TCP serving: TTFT / per-token latency vs offered load ===");
+    println!(
+        "\n=== Open-loop TCP serving: TTFT / per-token latency / draft cost \
+         vs offered load ==="
+    );
     let headers: Vec<String> = [
-        "policy", "req/s", "done", "shed", "ttft_p50", "ttft_p95", "ttft_p99",
-        "tok_p50", "tok_p95",
+        "policy", "planner", "req/s", "done", "shed", "ttft_p50", "ttft_p95",
+        "ttft_p99", "tok_p50", "tok_p95", "tau", "plan_d", "plan_n",
     ]
     .iter()
     .map(|s| s.to_string())
     .collect();
     println!("{}", render_table(&headers, &rows));
-    println!("(TTFT and per-token figures in ms, measured from scheduled arrival)");
+    println!(
+        "(TTFT and per-token figures in ms from scheduled arrival; tau = mean \
+         accepted length per cycle, plan_d/plan_n = mean planned depth/nodes)"
+    );
     let path = write_report("serve_open_loop", &Json::Arr(report))?;
     println!("report -> {path:?}");
     Ok(())

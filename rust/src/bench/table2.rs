@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::spec::GenConfig;
+use crate::spec::{DraftConfig, GenConfig};
 use crate::util::json::Json;
 use crate::workload::paper_name;
 
@@ -47,9 +47,11 @@ pub fn run(env: &BenchEnv) -> Result<()> {
         let mut cells = Vec::new();
         for (i, task) in TASKS2.iter().enumerate() {
             let prompts = env.prompts(task, n_prompts)?;
+            // "w/o Constrained Tree" plans a chain: top-k 1
+            let top_k = if use_tree { None } else { Some(1) };
             let cfg = GenConfig {
                 max_new_tokens: max_new,
-                use_tree,
+                draft: DraftConfig { top_k, ..Default::default() },
                 ..Default::default()
             };
             let agg = run_method(env, TARGET, wset, &prompts, &cfg)?;

@@ -60,7 +60,10 @@ use crate::draft::{DraftOutput, Drafter, EagleDrafter, FastEagleDrafter, Observe
 use crate::model::{BlockPool, KvCache, Lease, MaskRow, ModelSpec, Tokenizer, NEG};
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::ArtifactStore;
-use crate::spec::{prompt_budget, truncate_prompt, verify_rows, DraftTree, SlotCycle, SlotPhase};
+use crate::spec::{
+    prompt_budget, truncate_prompt, verify_rows, DraftConfig, DraftPlan, DraftTree, SlotCycle,
+    SlotPhase,
+};
 
 use super::metrics::ServingMetrics;
 use super::request::{Request, Response};
@@ -110,10 +113,14 @@ pub struct BatchConfig {
     /// (`Request::method`); a pool can mix methods across slots
     pub method: BatchMethod,
     /// draft chain length per cycle (Table 3: 2). Engine-wide because it
-    /// fixes the lowered executable shapes; everything else (temperature,
-    /// seed, max_new_tokens, stop_on_eos, method, priority) is
-    /// per-request.
+    /// fixes the lowered executable shapes — the hard ceiling every
+    /// per-slot [`DraftPlan`] is clamped to; everything else
+    /// (temperature, seed, max_new_tokens, stop_on_eos, method,
+    /// priority, draft plan) is per-request.
     pub chain_len: usize,
+    /// serving-wide draft-plan defaults (`--planner`, `--draft-depth`,
+    /// ...); a request's own `"draft"` object overrides field-wise
+    pub draft: DraftConfig,
     /// KV block pool (admission control); `None` = unbounded
     pub pool_blocks: Option<usize>,
     pub block_slots: usize,
@@ -132,6 +139,7 @@ impl BatchConfig {
             batch,
             method,
             chain_len: 2,
+            draft: DraftConfig::default(),
             pool_blocks: None,
             block_slots: 16,
             policy: PolicyKind::Fcfs,
@@ -428,9 +436,27 @@ impl BatchEngine {
     }
 
     /// Verify rows the batched call exposes per step — the hard cap on
-    /// a slot's prefill chunk.
+    /// a slot's prefill chunk and on any slot's [`DraftPlan`] rows.
     fn max_rows(&self) -> usize {
         1 + self.cfg.chain_len
+    }
+
+    /// Resolve a request's draft knobs into the batched lane's base
+    /// plan. The batched executables verify chains (one candidate per
+    /// level, `1 + chain_len` rows), so the plan is a chain clamped to
+    /// the engine's chain length; `top_k` is ignored on this lane.
+    /// Vanilla slots plan a root-only draft.
+    fn base_plan(&self, method: BatchMethod, draft: &DraftConfig) -> DraftPlan {
+        let native = match method {
+            BatchMethod::Vanilla => 0,
+            BatchMethod::FastEagle | BatchMethod::Eagle3 => self.cfg.chain_len,
+        };
+        let mut plan = DraftPlan::chain_of(draft.depth.unwrap_or(native));
+        if let Some(b) = draft.budget {
+            plan.node_budget = plan.node_budget.min(b);
+        }
+        plan.clamp_to(self.cfg.chain_len, self.max_rows() - 1);
+        plan
     }
 
     /// Snapshot the engine state for the scheduler.
@@ -619,14 +645,20 @@ impl BatchEngine {
         Ok(())
     }
 
-    /// One draft per running slot, dispatched by the slot's method:
-    /// FastEagle chains come straight off the cascade logits produced
-    /// during observe (zero executable calls), EAGLE slots share one
-    /// batched autoregressive loop, vanilla slots draft nothing.
-    fn draft_outputs(&mut self, run: &[usize]) -> Result<Vec<Option<DraftOutput>>> {
+    /// One draft per running slot, dispatched by the slot's method and
+    /// sized by the slot's per-cycle plan (`plan_depths[b]` = chain
+    /// levels this cycle, 0 for vanilla): FastEagle chains come
+    /// straight off the cascade logits produced during observe (zero
+    /// executable calls), EAGLE slots share one batched autoregressive
+    /// loop that each slot exits at its own planned depth, vanilla
+    /// slots draft nothing.
+    fn draft_outputs(
+        &mut self,
+        run: &[usize],
+        plan_depths: &[usize],
+    ) -> Result<Vec<Option<DraftOutput>>> {
         let bsz = self.cfg.batch;
         let (v, d, c) = (self.spec.vocab, self.spec.d_model, self.spec.max_seq);
-        let depth = self.cfg.chain_len;
         let mut in_run = vec![false; bsz];
         for &b in run {
             in_run[b] = true;
@@ -641,7 +673,9 @@ impl BatchEngine {
             match slot.method {
                 BatchMethod::Vanilla => out[b] = Some(DraftOutput::None),
                 BatchMethod::FastEagle => {
-                    // the cascade already produced all N levels during observe
+                    // the cascade already produced all N levels during
+                    // observe; the plan says how many to use this cycle
+                    let depth = plan_depths[b];
                     let temp = slot.req.cfg.temperature;
                     let cycle = slot.cycle.as_mut().expect("run slot is decoding");
                     let mut toks = Vec::with_capacity(depth);
@@ -658,36 +692,46 @@ impl BatchEngine {
                 BatchMethod::Eagle3 => {}
             }
         }
-        // EAGLE slots: level 1 from observe; levels 2.. via batched eg_next
+        // EAGLE slots: level 1 from observe; levels 2.. via batched
+        // eg_next, each slot stopping at its own planned depth
         let mut eg_chains: Vec<Option<(Vec<i32>, Vec<Vec<f32>>)>> =
             (0..bsz).map(|_| None).collect();
         let mut hs: Vec<Vec<f32>> = Vec::with_capacity(bsz);
-        let mut any_eagle = false;
+        let mut eg_max = 0usize;
         for (b, s) in self.slots.iter_mut().enumerate() {
             match s {
-                Some(slot) if in_run[b] && slot.method == BatchMethod::Eagle3 => {
+                Some(slot)
+                    if in_run[b]
+                        && slot.method == BatchMethod::Eagle3
+                        && plan_depths[b] > 0 =>
+                {
                     let mut q = slot.eg_q1.clone();
                     crate::util::rng::softmax_temp(&mut q, slot.req.cfg.temperature);
                     let cycle = slot.cycle.as_mut().expect("run slot is decoding");
                     let tok = cycle.sampler.sample(&q);
                     eg_chains[b] = Some((vec![tok], vec![q]));
                     hs.push(slot.eg_h.clone());
-                    any_eagle = true;
+                    eg_max = eg_max.max(plan_depths[b]);
                 }
                 _ => hs.push(vec![0.0; d]),
             }
         }
-        if any_eagle && depth > 1 {
+        if eg_max > 1 {
             let suffix = self.exec_suffix();
             let exec = self.store.bind(&format!("eg_next_t1{suffix}"), "eagle3")?;
             let mut ekv_tmp = self.eg_dkv.as_ref().expect("eagle slot admitted").clone();
-            for step in 1..depth {
+            for step in 1..eg_max {
                 let mut feat = vec![0.0f32; bsz * d];
                 let mut toks = vec![self.spec.pad; bsz];
                 let mut pos = vec![0i32; bsz];
                 let mut ctx = vec![0i32; bsz];
                 let mut rows: Vec<Vec<MaskRow>> = vec![vec![]; bsz];
                 for b in 0..bsz {
+                    // slots whose plan ends before this level ride along
+                    // as pad rows (their chain is already complete)
+                    if step >= plan_depths[b] {
+                        continue;
+                    }
                     if let Some((t, _)) = &eg_chains[b] {
                         feat[b * d..(b + 1) * d].copy_from_slice(&hs[b]);
                         toks[b] = t[step - 1];
@@ -720,6 +764,9 @@ impl BatchEngine {
                 let mut outs = outs;
                 ekv_tmp.update_from(outs.swap_remove(ki))?;
                 for b in 0..bsz {
+                    if step >= plan_depths[b] {
+                        continue;
+                    }
                     if let Some((t, dd)) = &mut eg_chains[b] {
                         let slot = self.slots[b].as_mut().unwrap();
                         let mut q = l[b * v..(b + 1) * v].to_vec();
@@ -753,12 +800,16 @@ impl BatchEngine {
     /// Errors here are per-request (missing drafter weights, say) — the
     /// caller fails that request without poisoning the pool.
     fn finalize_prefill(&mut self, b: usize, last_logits: &[f32]) -> Result<()> {
-        let (ptoks, feats, method, cfg) = {
+        let (ptoks, feats, method, mut cfg) = {
             let slot = self.slots[b].as_mut().expect("prefill slot");
             let pf = slot.prefill.take().expect("finalize of non-prefilling slot");
             (pf.ptoks, pf.feats, slot.method, slot.req.cfg.clone())
         };
-        let cycle = SlotCycle::start(cfg, last_logits);
+        // request knobs over serving defaults, resolved to this lane's
+        // chain-shaped base plan
+        cfg.draft = cfg.draft.merged(&self.cfg.draft);
+        let base = self.base_plan(method, &cfg.draft);
+        let cycle = SlotCycle::start(cfg, base, last_logits);
         let mut next: Vec<i32> = ptoks[1..].to_vec();
         next.push(cycle.pending);
         match method {
@@ -828,25 +879,44 @@ impl BatchEngine {
         let mut finished = Vec::new();
         let mut events = Vec::new();
         if plan.has_work() {
-            // verification rows this iteration: 1 when only vanilla
-            // decoders run, root + chain when anything drafts or
-            // prefills (mixed pools pad the unused rows)
-            let any_draft = plan.run.iter().any(|&b| {
-                matches!(&self.slots[b], Some(sl) if sl.method != BatchMethod::Vanilla)
-            });
-            let m = if any_draft || !plan.prefill.is_empty() {
-                1 + self.cfg.chain_len
-            } else {
-                1
-            };
-            let drafts = self.draft_outputs(&plan.run)?;
+            // per-slot cycle plans first: each running slot's planner
+            // sizes this cycle's draft (adaptive slots shrink/grow here)
+            let mut plan_depths = vec![0usize; bsz];
+            let mut rows_needed = 1usize;
+            for &b in &plan.run {
+                let slot = self.slots[b].as_mut().expect("run slot occupied");
+                let method = slot.method;
+                let cycle = slot.cycle.as_mut().expect("run slot is decoding");
+                let depth = {
+                    let p = cycle.begin_cycle();
+                    match method {
+                        BatchMethod::Vanilla => 0,
+                        // chain plans: the budget caps the chain too
+                        _ => p.depth.min(p.node_budget),
+                    }
+                };
+                metrics.record_plan(depth, depth, cycle.accept_window_mean());
+                plan_depths[b] = depth;
+                rows_needed = rows_needed.max(1 + depth);
+            }
+            // verification rows this iteration: the smallest lowered
+            // verify-M covering the largest planned row count and every
+            // prefill chunk (mixed pools pad the unused rows)
+            for &(_, n) in &plan.prefill {
+                rows_needed = rows_needed.max(n);
+            }
+            let m = self
+                .spec
+                .verify_m_lowered(rows_needed, self.cfg.batch)
+                .unwrap_or(1 + self.cfg.chain_len);
+            let drafts = self.draft_outputs(&plan.run, &plan_depths)?;
             // assemble per-slot trees through the shared cycle core
             let mut trees: Vec<Option<DraftTree>> = (0..bsz).map(|_| None).collect();
             for &b in &plan.run {
                 let slot = self.slots[b].as_mut().expect("run slot occupied");
                 let cycle = slot.cycle.as_mut().expect("run slot is decoding");
                 let draft = drafts[b].clone().unwrap_or(DraftOutput::None);
-                trees[b] = Some(cycle.build_tree(draft, 1));
+                trees[b] = Some(cycle.build_tree(draft));
             }
             // batched call: tree rows for decoders, prompt-chunk rows for
             // prefilling slots

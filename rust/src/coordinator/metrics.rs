@@ -43,6 +43,18 @@ pub struct ServingMetrics {
     /// gauge sample count (lets `merge` distinguish "other never
     /// sampled" from "other sampled zero")
     pub parked_samples: u64,
+    /// per-slot draft-plan decisions, one sample per run cycle: what
+    /// depth/node count the planner chose (the observable trace of
+    /// adaptive draft structures — min == max means the shape never
+    /// moved)
+    pub plan_samples: u64,
+    pub plan_depth_sum: u64,
+    pub plan_nodes_sum: u64,
+    pub plan_depth_min: u64,
+    pub plan_depth_max: u64,
+    /// rolling acceptance-window means reported by adaptive planners
+    pub accept_window_sum: f64,
+    pub accept_window_samples: u64,
     /// arrival -> completion
     pub latency: Histogram,
     /// arrival -> slot admission
@@ -73,6 +85,13 @@ impl Default for ServingMetrics {
             parked_tokens: 0,
             parked_tokens_peak: 0,
             parked_samples: 0,
+            plan_samples: 0,
+            plan_depth_sum: 0,
+            plan_nodes_sum: 0,
+            plan_depth_min: u64::MAX,
+            plan_depth_max: 0,
+            accept_window_sum: 0.0,
+            accept_window_samples: 0,
             latency: Histogram::new(),
             queue_wait: Histogram::new(),
             ttfc: Histogram::new(),
@@ -100,6 +119,21 @@ impl ServingMetrics {
         self.parked_tokens = tokens as u64;
         self.parked_tokens_peak = self.parked_tokens_peak.max(tokens as u64);
         self.parked_samples += 1;
+    }
+
+    /// Record one slot's draft-plan decision for one cycle: planned
+    /// depth, planned node count, and (for adaptive planners) the
+    /// rolling acceptance-window mean that produced it.
+    pub fn record_plan(&mut self, depth: usize, nodes: usize, window_mean: Option<f64>) {
+        self.plan_samples += 1;
+        self.plan_depth_sum += depth as u64;
+        self.plan_nodes_sum += nodes as u64;
+        self.plan_depth_min = self.plan_depth_min.min(depth as u64);
+        self.plan_depth_max = self.plan_depth_max.max(depth as u64);
+        if let Some(w) = window_mean {
+            self.accept_window_sum += w;
+            self.accept_window_samples += 1;
+        }
     }
 
     /// Sample the number of occupied slots at one scheduler step.
@@ -143,6 +177,13 @@ impl ServingMetrics {
         }
         self.parked_tokens_peak = self.parked_tokens_peak.max(other.parked_tokens_peak);
         self.parked_samples += other.parked_samples;
+        self.plan_samples += other.plan_samples;
+        self.plan_depth_sum += other.plan_depth_sum;
+        self.plan_nodes_sum += other.plan_nodes_sum;
+        self.plan_depth_min = self.plan_depth_min.min(other.plan_depth_min);
+        self.plan_depth_max = self.plan_depth_max.max(other.plan_depth_max);
+        self.accept_window_sum += other.accept_window_sum;
+        self.accept_window_samples += other.accept_window_samples;
         self.latency.merge(&other.latency);
         self.queue_wait.merge(&other.queue_wait);
         self.ttfc.merge(&other.ttfc);
@@ -177,11 +218,50 @@ impl ServingMetrics {
         }
     }
 
+    /// Mean planned draft depth per run cycle.
+    pub fn mean_plan_depth(&self) -> f64 {
+        if self.plan_samples == 0 {
+            0.0
+        } else {
+            self.plan_depth_sum as f64 / self.plan_samples as f64
+        }
+    }
+
+    /// Mean planned draft-node count per run cycle.
+    pub fn mean_plan_nodes(&self) -> f64 {
+        if self.plan_samples == 0 {
+            0.0
+        } else {
+            self.plan_nodes_sum as f64 / self.plan_samples as f64
+        }
+    }
+
+    /// Mean of the adaptive planners' rolling acceptance-window means.
+    pub fn mean_accept_window(&self) -> f64 {
+        if self.accept_window_samples == 0 {
+            0.0
+        } else {
+            self.accept_window_sum / self.accept_window_samples as f64
+        }
+    }
+
     pub fn report(&self) -> String {
+        let plan = if self.plan_samples == 0 {
+            "plan_d=- plan_n=-".to_string()
+        } else {
+            format!(
+                "plan_d={:.2}[{}-{}] plan_n={:.2} acc_win={:.2}",
+                self.mean_plan_depth(),
+                self.plan_depth_min,
+                self.plan_depth_max,
+                self.mean_plan_nodes(),
+                self.mean_accept_window(),
+            )
+        };
         format!(
             "done={} rejected={} deferred={} failed={} tokens={} tok/s={:.1} tau={:.2} \
              p50={:.0}ms p99={:.0}ms wait_p50={:.0}ms ttfc_p50={:.0}ms occ={:.2}/{} \
-             pfc={} preempt={} resume={} parked={}/{}",
+             pfc={} preempt={} resume={} parked={}/{} {plan}",
             self.requests_done,
             self.requests_rejected,
             self.requests_deferred,
@@ -284,6 +364,35 @@ mod tests {
         assert_eq!(shared.parked_tokens, 7);
         let r = shared.report();
         assert!(r.contains("preempt=1") && r.contains("parked=7/20"), "{r}");
+    }
+
+    #[test]
+    fn plan_gauges_record_and_merge() {
+        let mut m = ServingMetrics::default();
+        assert_eq!(m.mean_plan_depth(), 0.0);
+        assert!(m.report().contains("plan_d=-"), "unsampled plans render as dashes");
+        m.record_plan(2, 2, None);
+        m.record_plan(1, 1, Some(0.5));
+        assert_eq!(m.plan_samples, 2);
+        assert!((m.mean_plan_depth() - 1.5).abs() < 1e-9);
+        assert!((m.mean_plan_nodes() - 1.5).abs() < 1e-9);
+        assert_eq!(m.plan_depth_min, 1);
+        assert_eq!(m.plan_depth_max, 2);
+        assert!((m.mean_accept_window() - 0.5).abs() < 1e-9);
+        let mut delta = ServingMetrics::default();
+        delta.record_plan(3, 6, Some(1.5));
+        m.merge(&delta);
+        assert_eq!(m.plan_samples, 3);
+        assert_eq!(m.plan_depth_max, 3);
+        assert_eq!(m.plan_depth_min, 1);
+        assert!((m.mean_plan_nodes() - 3.0).abs() < 1e-9);
+        assert!((m.mean_accept_window() - 1.0).abs() < 1e-9);
+        // merging an unsampled delta leaves the min untouched
+        m.merge(&ServingMetrics::default());
+        assert_eq!(m.plan_depth_min, 1);
+        let r = m.report();
+        assert!(r.contains("plan_d=2.00[1-3]"), "{r}");
+        assert!(r.contains("plan_n=3.00"), "{r}");
     }
 
     #[test]

@@ -12,6 +12,6 @@ pub mod server;
 pub use batcher::{BatchConfig, BatchEngine, BatchMethod, SlotEvent, StepOutcome};
 pub use metrics::ServingMetrics;
 pub use queue::{AdmissionQueue, PushError};
-pub use request::{Request, Response};
+pub use request::{ParseError, Request, Response};
 pub use scheduler::{PolicyKind, SchedulePlan, Scheduler, SchedulerPolicy};
 pub use server::{Server, ServerConfig};

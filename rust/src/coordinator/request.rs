@@ -2,10 +2,32 @@
 
 use std::time::Instant;
 
-use crate::spec::GenConfig;
+use crate::spec::{DraftConfig, GenConfig, PlannerKind};
 use crate::util::json::Json;
 
 use super::batcher::BatchMethod;
+
+/// A structured request-parse failure: which field was bad and why.
+/// The server echoes both back in the JSON error reply, so malformed
+/// requests die with a reason instead of a bare "missing prompt".
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    /// dotted field path (e.g. `"draft.depth"`)
+    pub field: &'static str,
+    pub reason: String,
+}
+
+impl ParseError {
+    fn new(field: &'static str, reason: impl Into<String>) -> ParseError {
+        ParseError { field, reason: reason.into() }
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.field, self.reason)
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -40,36 +62,129 @@ impl Request {
 
     /// Parse an API request line: {"prompt": "...", "max_new": 64,
     /// "temperature": 0.0, "seed": 1, "method": "fasteagle",
-    /// "stream": false, "priority": 0}.
+    /// "stream": false, "priority": 0,
+    /// "draft": {"planner": "static"|"adaptive", "depth": N,
+    ///           "top_k": N, "budget": N}}.
+    ///
+    /// Every present field is validated; a malformed one returns a
+    /// [`ParseError`] naming the field and the reason (sent back in the
+    /// server's error reply). Unset `"draft"` fields fall back to the
+    /// serving defaults and ultimately to the model spec.
     ///
     /// An explicit `seed` pins the sampling stream (same seed + prompt
     /// reproduces exactly); omitting it derives a per-request seed from
     /// the id so concurrent stochastic requests sample diversely
-    /// instead of all sharing the default-0 stream. An unknown `method`
-    /// value falls back to the server's default method.
-    pub fn from_json(id: u64, v: &Json) -> Option<Request> {
-        let prompt = v.get("prompt")?.as_str()?.to_string();
+    /// instead of all sharing the default-0 stream.
+    pub fn from_json(id: u64, v: &Json) -> Result<Request, ParseError> {
+        let prompt = match v.get("prompt") {
+            None => return Err(ParseError::new("prompt", "required")),
+            Some(p) => p
+                .as_str()
+                .ok_or_else(|| ParseError::new("prompt", "must be a string"))?
+                .to_string(),
+        };
         let mut cfg = GenConfig::default();
-        if let Some(m) = v.get("max_new").and_then(Json::as_usize) {
-            cfg.max_new_tokens = m;
+        if let Some(m) = v.get("max_new") {
+            cfg.max_new_tokens = m
+                .as_usize()
+                .ok_or_else(|| ParseError::new("max_new", "must be a non-negative integer"))?;
         }
-        if let Some(t) = v.get("temperature").and_then(Json::as_f64) {
-            cfg.temperature = t as f32;
+        if let Some(t) = v.get("temperature") {
+            cfg.temperature = t
+                .as_f64()
+                .ok_or_else(|| ParseError::new("temperature", "must be a number"))?
+                as f32;
         }
-        match v.get("seed").and_then(Json::as_i64) {
-            Some(s) => cfg.seed = s as u64,
+        match v.get("seed") {
+            Some(s) => {
+                cfg.seed = s
+                    .as_i64()
+                    .ok_or_else(|| ParseError::new("seed", "must be an integer"))?
+                    as u64
+            }
             None => cfg.seed = id.wrapping_mul(0x9e37_79b9_7f4a_7c15),
         }
-        if let Some(e) = v.get("stop_on_eos").and_then(Json::as_bool) {
-            cfg.stop_on_eos = e;
+        if let Some(e) = v.get("stop_on_eos") {
+            cfg.stop_on_eos = e
+                .as_bool()
+                .ok_or_else(|| ParseError::new("stop_on_eos", "must be a boolean"))?;
         }
-        let method = v
-            .get("method")
-            .and_then(Json::as_str)
-            .and_then(BatchMethod::from_name);
-        let stream = v.get("stream").and_then(Json::as_bool).unwrap_or(false);
-        let priority = v.get("priority").and_then(Json::as_i64).unwrap_or(0) as i32;
-        Some(Request { id, prompt, cfg, method, stream, priority, arrival: Instant::now() })
+        cfg.draft = Self::parse_draft(v.get("draft"))?;
+        let method = match v.get("method") {
+            None => None,
+            Some(m) => {
+                let name = m
+                    .as_str()
+                    .ok_or_else(|| ParseError::new("method", "must be a string"))?;
+                Some(BatchMethod::from_name(name).ok_or_else(|| {
+                    ParseError::new(
+                        "method",
+                        format!("unknown method {name:?} (vanilla|eagle3|fasteagle)"),
+                    )
+                })?)
+            }
+        };
+        let stream = match v.get("stream") {
+            None => false,
+            Some(s) => s
+                .as_bool()
+                .ok_or_else(|| ParseError::new("stream", "must be a boolean"))?,
+        };
+        let priority = match v.get("priority") {
+            None => 0,
+            Some(p) => p
+                .as_i64()
+                .ok_or_else(|| ParseError::new("priority", "must be an integer"))?
+                as i32,
+        };
+        Ok(Request { id, prompt, cfg, method, stream, priority, arrival: Instant::now() })
+    }
+
+    /// Validate the optional `"draft"` object into a [`DraftConfig`].
+    fn parse_draft(v: Option<&Json>) -> Result<DraftConfig, ParseError> {
+        let mut out = DraftConfig::default();
+        let Some(v) = v else { return Ok(out) };
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| ParseError::new("draft", "must be an object"))?;
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "planner" | "depth" | "top_k" | "budget") {
+                return Err(ParseError::new(
+                    "draft",
+                    format!("unknown key {key:?} (planner|depth|top_k|budget)"),
+                ));
+            }
+        }
+        if let Some(p) = obj.get("planner") {
+            let name = p
+                .as_str()
+                .ok_or_else(|| ParseError::new("draft.planner", "must be a string"))?;
+            out.planner = Some(PlannerKind::from_name(name).ok_or_else(|| {
+                ParseError::new(
+                    "draft.planner",
+                    format!("unknown planner {name:?} (static|adaptive)"),
+                )
+            })?);
+        }
+        let pos_int = |v: &Json, field: &'static str| -> Result<usize, ParseError> {
+            match v.as_usize() {
+                Some(n) if (1..=crate::spec::plan::MAX_DRAFT_KNOB).contains(&n) => Ok(n),
+                _ => Err(ParseError::new(
+                    field,
+                    format!("must be an integer in 1..={}", crate::spec::plan::MAX_DRAFT_KNOB),
+                )),
+            }
+        };
+        if let Some(d) = obj.get("depth") {
+            out.depth = Some(pos_int(d, "draft.depth")?);
+        }
+        if let Some(k) = obj.get("top_k") {
+            out.top_k = Some(pos_int(k, "draft.top_k")?);
+        }
+        if let Some(b) = obj.get("budget") {
+            out.budget = Some(pos_int(b, "draft.budget")?);
+        }
+        Ok(out)
     }
 }
 
@@ -132,7 +247,10 @@ mod tests {
         assert!((r.cfg.temperature - 1.0).abs() < 1e-6);
         assert_eq!(r.method, None);
         assert!(!r.stream);
-        assert!(Request::from_json(0, &Json::parse("{}").unwrap()).is_none());
+        assert_eq!(r.cfg.draft, DraftConfig::default());
+        let err = Request::from_json(0, &Json::parse("{}").unwrap()).unwrap_err();
+        assert_eq!(err.field, "prompt");
+        assert_eq!(err.reason, "required");
     }
 
     #[test]
@@ -150,9 +268,61 @@ mod tests {
         assert_eq!(Request::from_json(1, &v).unwrap().priority, 0);
         let v = Json::parse(r#"{"prompt":"p","priority":-2}"#).unwrap();
         assert_eq!(Request::from_json(1, &v).unwrap().priority, -2);
-        // unknown method values fall back to the engine default
+        // unknown method values die with a structured reason
         let v = Json::parse(r#"{"prompt":"p","method":"warp-drive"}"#).unwrap();
-        assert_eq!(Request::from_json(2, &v).unwrap().method, None);
+        let err = Request::from_json(2, &v).unwrap_err();
+        assert_eq!(err.field, "method");
+        assert!(err.reason.contains("warp-drive"), "{err}");
+    }
+
+    #[test]
+    fn malformed_fields_name_themselves() {
+        for (line, field) in [
+            (r#"{"prompt":7}"#, "prompt"),
+            (r#"{"prompt":"p","max_new":-3}"#, "max_new"),
+            (r#"{"prompt":"p","temperature":"hot"}"#, "temperature"),
+            (r#"{"prompt":"p","seed":"x"}"#, "seed"),
+            (r#"{"prompt":"p","stream":"yes"}"#, "stream"),
+            (r#"{"prompt":"p","stop_on_eos":1}"#, "stop_on_eos"),
+            (r#"{"prompt":"p","priority":"high"}"#, "priority"),
+        ] {
+            let v = Json::parse(line).unwrap();
+            let err = Request::from_json(1, &v).unwrap_err();
+            assert_eq!(err.field, field, "{line}");
+            assert!(!err.reason.is_empty());
+        }
+    }
+
+    #[test]
+    fn draft_object_parses_and_validates() {
+        let v = Json::parse(
+            r#"{"prompt":"p","draft":{"planner":"adaptive","depth":4,"top_k":2,"budget":6}}"#,
+        )
+        .unwrap();
+        let r = Request::from_json(1, &v).unwrap();
+        assert_eq!(r.cfg.draft.planner, Some(crate::spec::PlannerKind::Adaptive));
+        assert_eq!(r.cfg.draft.depth, Some(4));
+        assert_eq!(r.cfg.draft.top_k, Some(2));
+        assert_eq!(r.cfg.draft.budget, Some(6));
+        // partial objects leave the rest unset
+        let v = Json::parse(r#"{"prompt":"p","draft":{"planner":"static"}}"#).unwrap();
+        let r = Request::from_json(1, &v).unwrap();
+        assert_eq!(r.cfg.draft.planner, Some(crate::spec::PlannerKind::Static));
+        assert_eq!(r.cfg.draft.depth, None);
+        // malformed drafts die with the offending field
+        for (line, field) in [
+            (r#"{"prompt":"p","draft":"adaptive"}"#, "draft"),
+            (r#"{"prompt":"p","draft":{"plan":"x"}}"#, "draft"),
+            (r#"{"prompt":"p","draft":{"planner":"magic"}}"#, "draft.planner"),
+            (r#"{"prompt":"p","draft":{"planner":3}}"#, "draft.planner"),
+            (r#"{"prompt":"p","draft":{"depth":0}}"#, "draft.depth"),
+            (r#"{"prompt":"p","draft":{"top_k":-1}}"#, "draft.top_k"),
+            (r#"{"prompt":"p","draft":{"budget":"big"}}"#, "draft.budget"),
+        ] {
+            let v = Json::parse(line).unwrap();
+            let err = Request::from_json(1, &v).unwrap_err();
+            assert_eq!(err.field, field, "{line}");
+        }
     }
 
     #[test]

@@ -26,7 +26,10 @@
 //!
 //! Protocol (one JSON object per line):
 //!   -> {"prompt": "...", "max_new": 64, "temperature": 0.0, "seed": 1,
-//!       "method": "fasteagle", "stream": false, "priority": 0}
+//!       "method": "fasteagle", "stream": false, "priority": 0,
+//!       "draft": {"planner": "static"|"adaptive", "depth": N,
+//!                 "top_k": N, "budget": N}}
+//!      (malformed fields are answered with {"error": ..., "field": ...})
 //!   <- {"event": "tokens", "id": .., "cycle": .., "tokens": [..],
 //!       "text": "..", "accepted": ..}    (per cycle, stream mode only)
 //!   <- {"id": .., "text": "...", "tau": .., "new_tokens": .., ...}
@@ -404,6 +407,9 @@ fn handle_conn(
                     ("preemptions", Json::num(m.preemptions as f64)),
                     ("resumes", Json::num(m.resumes as f64)),
                     ("parked_tokens", Json::num(m.parked_tokens as f64)),
+                    ("plan_depth_mean", Json::num(m.mean_plan_depth())),
+                    ("plan_nodes_mean", Json::num(m.mean_plan_nodes())),
+                    ("accept_window_mean", Json::num(m.mean_accept_window())),
                     ("p50_ms", Json::num(m.latency.percentile_us(0.5) / 1e3)),
                     ("p99_ms", Json::num(m.latency.percentile_us(0.99) / 1e3)),
                     ("wait_p50_ms", Json::num(m.queue_wait.percentile_us(0.5) / 1e3)),
@@ -416,7 +422,7 @@ fn handle_conn(
         }
         let id = next_id.fetch_add(1, Ordering::Relaxed);
         match Request::from_json(id, &v) {
-            Some(req) => {
+            Ok(req) => {
                 let (tx, rx) = std::sync::mpsc::channel();
                 let queued_frames = Arc::new(AtomicUsize::new(0));
                 let conn =
@@ -469,11 +475,17 @@ fn handle_conn(
                     }
                 }
             }
-            None => {
+            Err(e) => {
+                // structured parse failure: name the field and the why,
+                // so clients can fix the request instead of guessing
                 writeln!(
                     writer,
                     "{}",
-                    Json::obj(vec![("error", Json::str("missing prompt"))]).to_string()
+                    Json::obj(vec![
+                        ("error", Json::str(&format!("invalid request: {e}"))),
+                        ("field", Json::str(e.field)),
+                    ])
+                    .to_string()
                 )?;
             }
         }

@@ -160,12 +160,23 @@ impl Drafter for EagleDrafter {
         Ok(())
     }
 
-    fn draft(&mut self, _pending: i32, anchor_pos: usize, temperature: f32) -> Result<DraftOutput> {
+    fn draft(
+        &mut self,
+        _pending: i32,
+        anchor_pos: usize,
+        temperature: f32,
+        max_levels: usize,
+    ) -> Result<DraftOutput> {
         if !self.has_pending {
             return Err(anyhow::anyhow!("draft before observe")).context("eagle");
         }
         let (v, d, c) = (self.spec.vocab, self.spec.d_model, self.spec.max_seq);
-        let n_levels = self.spec.draft_depth;
+        // each level past the first costs one sequential eg_next call —
+        // stop at the plan's depth instead of drafting throwaway levels
+        let n_levels = self.spec.draft_depth.min(max_levels);
+        if n_levels == 0 {
+            return Ok(DraftOutput::Levels(Vec::new()));
+        }
         let mut dists = Vec::with_capacity(n_levels);
         let mut q1 = self.q1_logits.clone();
         softmax_temp(&mut q1, temperature);

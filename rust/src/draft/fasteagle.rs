@@ -159,12 +159,20 @@ impl Drafter for FastEagleDrafter {
         Ok(())
     }
 
-    fn draft(&mut self, _pending: i32, _anchor_pos: usize, temperature: f32) -> Result<DraftOutput> {
+    fn draft(
+        &mut self,
+        _pending: i32,
+        _anchor_pos: usize,
+        temperature: f32,
+        max_levels: usize,
+    ) -> Result<DraftOutput> {
         if !self.has_pending {
             return Err(anyhow::anyhow!("draft before observe")).context("fasteagle");
         }
         let v = self.spec.vocab;
-        let dists = (0..self.spec.draft_depth)
+        // the cascade already produced every level during observe —
+        // the plan's depth just bounds how many are materialized
+        let dists = (0..self.spec.draft_depth.min(max_levels))
             .map(|i| {
                 let mut d = self.pending_logits[i * v..(i + 1) * v].to_vec();
                 softmax_temp(&mut d, temperature);

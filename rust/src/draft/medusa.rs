@@ -54,11 +54,19 @@ impl Drafter for MedusaDrafter {
         Ok(())
     }
 
-    fn draft(&mut self, _pending: i32, _anchor_pos: usize, temperature: f32) -> Result<DraftOutput> {
+    fn draft(
+        &mut self,
+        _pending: i32,
+        _anchor_pos: usize,
+        temperature: f32,
+        max_levels: usize,
+    ) -> Result<DraftOutput> {
         if !self.has_pending {
             return Err(anyhow::anyhow!("draft before observe")).context("medusa");
         }
-        let (v, k) = (self.spec.vocab, self.spec.medusa_heads);
+        // one head bank call emits every head; the plan bounds how many
+        // head distributions are materialized
+        let (v, k) = (self.spec.vocab, self.spec.medusa_heads.min(max_levels));
         let feats_t =
             HostTensor::f32(vec![1, 1, self.spec.feat_dim], self.anchor_feat.clone());
         let exec = self.store.bind("medusa", "medusa")?;

@@ -64,8 +64,17 @@ pub trait Drafter {
     fn reset(&mut self) -> Result<()>;
     fn observe(&mut self, args: ObserveArgs<'_>) -> Result<()>;
     /// `temperature` shapes the emitted distributions; `anchor_pos` is
-    /// the position of the pending token's predecessor.
-    fn draft(&mut self, pending: i32, anchor_pos: usize, temperature: f32) -> Result<DraftOutput>;
+    /// the position of the pending token's predecessor; `max_levels` is
+    /// the cycle's planned depth — drafters that pay per level (EAGLE's
+    /// sequential `eg_next` calls, SpS's LM steps) stop there instead
+    /// of drafting levels the plan would throw away.
+    fn draft(
+        &mut self,
+        pending: i32,
+        anchor_pos: usize,
+        temperature: f32,
+        max_levels: usize,
+    ) -> Result<DraftOutput>;
 }
 
 /// Construct any drafter by its weight-set name.

@@ -70,16 +70,25 @@ impl Drafter for SpsDrafter {
         Ok(())
     }
 
-    fn draft(&mut self, pending: i32, anchor_pos: usize, temperature: f32) -> Result<DraftOutput> {
+    fn draft(
+        &mut self,
+        pending: i32,
+        anchor_pos: usize,
+        temperature: f32,
+        max_levels: usize,
+    ) -> Result<DraftOutput> {
         if !self.has_ctx {
             return Err(anyhow::anyhow!("draft before observe")).context("sps");
         }
         let base = self.skv.len(0);
-        let mut tokens = Vec::with_capacity(self.chain);
-        let mut dists = Vec::with_capacity(self.chain);
+        // each chain link costs one draft-LM step — stop at the plan's
+        // depth instead of drafting links the tree would drop
+        let chain = self.chain.min(max_levels);
+        let mut tokens = Vec::with_capacity(chain);
+        let mut dists = Vec::with_capacity(chain);
         let mut cur = pending;
         // temp slots base, base+1, ... — rolled back by restoring len
-        for s in 0..self.chain {
+        for s in 0..chain {
             let pos = ((anchor_pos + 1 + s) as i32).min(self.lm.spec.max_seq as i32 - 1);
             let rows = [MaskRow { prefix_upto: base + s + 1, extra: vec![] }];
             self.skv.set_len(0, base + s);

@@ -35,7 +35,13 @@ impl Drafter for VanillaDrafter {
         Ok(())
     }
 
-    fn draft(&mut self, _pending: i32, _anchor_pos: usize, _t: f32) -> Result<DraftOutput> {
+    fn draft(
+        &mut self,
+        _pending: i32,
+        _anchor_pos: usize,
+        _t: f32,
+        _max_levels: usize,
+    ) -> Result<DraftOutput> {
         Ok(DraftOutput::None)
     }
 }

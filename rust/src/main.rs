@@ -26,7 +26,7 @@ use fasteagle::coordinator::{
 use fasteagle::draft::make_drafter;
 use fasteagle::model::TargetModel;
 use fasteagle::runtime::{ArtifactStore, Runtime};
-use fasteagle::spec::{Engine, GenConfig};
+use fasteagle::spec::{DraftConfig, Engine, GenConfig, PlannerKind};
 use fasteagle::util::cli::Args;
 
 const USAGE: &str = "\
@@ -42,6 +42,10 @@ commands:
   bench      table1|table2|table3|fig3|microbench|serve|all [--quick]
   selfcheck  [--target T]
   fixture    [--out DIR] [--seed N]   emit interpreter-runnable artifacts
+
+draft-plan flags (generate/serve/batch; per-request \"draft\" overrides):
+  --planner static|adaptive  --draft-depth N  --draft-top-k N
+  --draft-budget N  --no-tree (alias for --draft-top-k 1)
 
 flags: --artifacts DIR  --backend pjrt|interpret  --seed N  --quick";
 
@@ -70,15 +74,47 @@ fn open_store(args: &Args, rt: &Arc<Runtime>) -> Result<Rc<ArtifactStore>> {
     )?))
 }
 
-fn gen_config(args: &Args) -> GenConfig {
-    GenConfig {
+/// Draft-structure knobs shared by generate/serve/batch. `--no-tree`
+/// (the "w/o Constrained Tree" ablation) is an alias for
+/// `--draft-top-k 1`; `--max-depth` is kept as an alias of
+/// `--draft-depth` from the pre-plan CLI.
+fn draft_config(args: &Args) -> Result<DraftConfig> {
+    let planner = match args.get("planner") {
+        None => None,
+        Some(p) => Some(
+            PlannerKind::from_name(p)
+                .ok_or_else(|| anyhow::anyhow!("unknown planner {p:?} (static|adaptive)"))?,
+        ),
+    };
+    let parse_knob = |key: &str| -> Result<Option<usize>> {
+        let cap = fasteagle::spec::plan::MAX_DRAFT_KNOB;
+        match args.get(key) {
+            None => Ok(None),
+            Some(v) => match v.parse::<usize>() {
+                Ok(n) if (1..=cap).contains(&n) => Ok(Some(n)),
+                _ => Err(anyhow::anyhow!("invalid --{key} {v:?} (integer in 1..={cap})")),
+            },
+        }
+    };
+    let depth = match parse_knob("draft-depth")? {
+        Some(d) => Some(d),
+        None => parse_knob("max-depth")?,
+    };
+    let mut top_k = parse_knob("draft-top-k")?;
+    if args.bool_flag("no-tree") {
+        top_k = Some(1);
+    }
+    Ok(DraftConfig { planner, depth, top_k, budget: parse_knob("draft-budget")? })
+}
+
+fn gen_config(args: &Args) -> Result<GenConfig> {
+    Ok(GenConfig {
         temperature: args.f64_or("temp", 0.0) as f32,
         max_new_tokens: args.usize_or("max-new", 64),
         seed: args.usize_or("seed", 0) as u64,
-        use_tree: !args.bool_flag("no-tree"),
-        max_depth: args.get("max-depth").and_then(|v| v.parse().ok()),
+        draft: draft_config(args)?,
         stop_on_eos: args.bool_flag("stop-on-eos"),
-    }
+    })
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -91,7 +127,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         .get("prompt")
         .context("--prompt required")?
         .to_string();
-    let cfg = gen_config(args);
+    let cfg = gen_config(args)?;
     let r = engine.generate(&prompt, &cfg)?;
     println!("{}", r.text);
     eprintln!(
@@ -117,6 +153,7 @@ fn batch_method(args: &Args) -> Result<BatchMethod> {
 fn batch_config(args: &Args) -> Result<BatchConfig> {
     let mut cfg = BatchConfig::new(args.usize_or("batch", 1), batch_method(args)?);
     cfg.chain_len = args.usize_or("chain", 2);
+    cfg.draft = draft_config(args)?;
     if let Some(v) = args.get("pool-blocks") {
         // a typo must not silently disable admission control
         let p: usize = v

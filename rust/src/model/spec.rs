@@ -34,6 +34,9 @@ pub struct ModelSpec {
     pub prefill_chunk: usize,
     pub draft_depth: usize,
     pub tree_top_k: usize,
+    /// derived: default-plan draft nodes (`draft_depth * tree_top_k`)
+    /// via `spec::plan::default_draft_nodes` — no longer read from the
+    /// JSON, so the shape arithmetic has exactly one home
     pub tree_nodes: usize,
     pub medusa_heads: usize,
     pub sps_chain: usize,
@@ -41,6 +44,9 @@ pub struct ModelSpec {
     pub drafter_sets: Vec<String>,
     pub batch_sizes: Vec<usize>,
     pub verify_ms: Vec<usize>,
+    /// lowered batched verify variants: (batch, sorted verify-M list)
+    /// from `tgt_m{M}_b{B}` executables
+    pub verify_ms_by_batch: Vec<(usize, Vec<usize>)>,
 }
 
 fn req_usize(v: &Json, key: &str) -> Result<usize> {
@@ -53,14 +59,23 @@ impl ModelSpec {
     pub fn parse(text: &str) -> Result<ModelSpec> {
         let v = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
         let sps = v.get("sps").context("spec.json missing sps")?;
-        // executable inventory -> which verify-M variants exist
+        // executable inventory -> which verify-M variants exist, per
+        // batch (tgt_m{M} at B=1, tgt_m{M}_b{B} on the batched lane)
         let mut verify_ms: Vec<usize> = Vec::new();
+        let mut by_batch: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
         if let Some(execs) = v.get("executables").and_then(Json::as_obj) {
             for name in execs.keys() {
                 if let Some(rest) = name.strip_prefix("tgt_m") {
-                    if !rest.contains("_b") {
-                        if let Ok(m) = rest.parse::<usize>() {
-                            verify_ms.push(m);
+                    match rest.split_once("_b") {
+                        None => {
+                            if let Ok(m) = rest.parse::<usize>() {
+                                verify_ms.push(m);
+                            }
+                        }
+                        Some((m, b)) => {
+                            if let (Ok(m), Ok(b)) = (m.parse::<usize>(), b.parse::<usize>()) {
+                                by_batch.entry(b).or_default().push(m);
+                            }
                         }
                     }
                 }
@@ -68,6 +83,14 @@ impl ModelSpec {
         }
         verify_ms.sort_unstable();
         verify_ms.dedup();
+        let verify_ms_by_batch: Vec<(usize, Vec<usize>)> = by_batch
+            .into_iter()
+            .map(|(b, mut ms)| {
+                ms.sort_unstable();
+                ms.dedup();
+                (b, ms)
+            })
+            .collect();
         Ok(ModelSpec {
             name: v.get("name").and_then(Json::as_str).context("name")?.to_string(),
             stands_for: v
@@ -97,7 +120,10 @@ impl ModelSpec {
             prefill_chunk: req_usize(&v, "prefill_chunk")?,
             draft_depth: req_usize(&v, "draft_depth")?,
             tree_top_k: req_usize(&v, "tree_top_k")?,
-            tree_nodes: req_usize(&v, "tree_nodes")?,
+            tree_nodes: crate::spec::plan::default_draft_nodes(
+                req_usize(&v, "draft_depth")?,
+                req_usize(&v, "tree_top_k")?,
+            ),
             medusa_heads: req_usize(&v, "medusa_heads")?,
             sps_chain: req_usize(&v, "sps_chain")?,
             sps: SpsDims {
@@ -117,6 +143,7 @@ impl ModelSpec {
                 .map(|a| a.iter().filter_map(Json::as_usize).collect())
                 .unwrap_or_else(|| vec![1]),
             verify_ms,
+            verify_ms_by_batch,
         })
     }
 
@@ -140,9 +167,24 @@ impl ModelSpec {
     pub fn verify_m_for(&self, m: usize) -> Option<usize> {
         self.verify_ms.iter().copied().find(|&v| v >= m)
     }
+
+    /// Smallest lowered verify variant with at least `rows` rows on the
+    /// `batch` lane — how the batched engine picks its per-step
+    /// executable from the step's largest [`DraftPlan`] row count.
+    pub fn verify_m_lowered(&self, rows: usize, batch: usize) -> Option<usize> {
+        if batch <= 1 {
+            return self.verify_m_for(rows);
+        }
+        self.verify_ms_by_batch
+            .iter()
+            .find(|(b, _)| *b == batch)
+            .and_then(|(_, ms)| ms.iter().copied().find(|&m| m >= rows))
+    }
 }
 
-/// Shared sample spec for unit tests across modules.
+/// Shared sample spec for unit tests across modules. (`tree_nodes` is
+/// deliberately absent: the spec derives it from the default
+/// `DraftPlan` shape.)
 #[cfg(test)]
 pub mod tests_sample {
     pub const SAMPLE: &str = r#"{
@@ -151,10 +193,10 @@ pub mod tests_sample {
       "head_dim": 32, "ffn": 576, "taps": [1,3,5], "max_seq": 256,
       "vocab": 272, "feat_dim": 576, "bos": 256, "eos": 257, "pad": 258,
       "prefill_chunk": 32, "draft_depth": 6, "tree_top_k": 3,
-      "tree_nodes": 18, "medusa_heads": 4, "sps_chain": 5,
+      "medusa_heads": 4, "sps_chain": 5,
       "sps": {"d_model": 96, "n_layers": 2, "n_kv_heads": 1, "head_dim": 32},
       "drafter_sets": ["fasteagle", "eagle3"],
-      "executables": {"tgt_m1": {}, "tgt_m18": {}, "tgt_m2_b4": {}},
+      "executables": {"tgt_m1": {}, "tgt_m18": {}, "tgt_m2_b4": {}, "tgt_m5_b4": {}},
       "batch_sizes": [1]
     }"#;
 }
@@ -174,5 +216,28 @@ mod tests {
         assert_eq!(s.verify_m_for(5), Some(18));
         assert_eq!(s.verify_m_for(1), Some(1));
         assert_eq!(s.verify_m_for(99), None);
+    }
+
+    #[test]
+    fn tree_nodes_derives_from_the_default_plan() {
+        let s = ModelSpec::parse(SAMPLE).unwrap();
+        // no "tree_nodes" in the JSON: derived from depth x top-k
+        assert_eq!(s.tree_nodes, 6 * 3);
+        assert_eq!(
+            s.tree_nodes,
+            crate::spec::plan::DraftPlan::default_for(&s).draft_nodes()
+        );
+    }
+
+    #[test]
+    fn batched_verify_variants_parse_and_select() {
+        let s = ModelSpec::parse(SAMPLE).unwrap();
+        assert_eq!(s.verify_ms_by_batch, vec![(4, vec![2, 5])]);
+        assert_eq!(s.verify_m_lowered(1, 4), Some(2));
+        assert_eq!(s.verify_m_lowered(3, 4), Some(5));
+        assert_eq!(s.verify_m_lowered(6, 4), None);
+        assert_eq!(s.verify_m_lowered(9, 2), None, "no batch-2 executables");
+        // batch 1 falls through to the unbatched inventory
+        assert_eq!(s.verify_m_lowered(5, 1), Some(18));
     }
 }

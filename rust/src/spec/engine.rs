@@ -22,6 +22,7 @@ use crate::draft::Drafter;
 use crate::model::{TargetModel, Tokenizer};
 
 use super::metrics::GenMetrics;
+use super::plan::DraftConfig;
 use super::session::GenSession;
 
 #[derive(Debug, Clone)]
@@ -29,11 +30,11 @@ pub struct GenConfig {
     pub temperature: f32,
     pub max_new_tokens: usize,
     pub seed: u64,
-    /// tree top-k (1 = chain); `use_tree = false` forces a chain — the
-    /// "w/o Constrained Tree" ablation
-    pub use_tree: bool,
-    /// truncate the draft to this depth (Table 3 uses 2)
-    pub max_depth: Option<usize>,
+    /// draft-structure knobs (planner, depth, top-k, node budget); all
+    /// optional — unset fields resolve to the model spec's defaults.
+    /// `top_k: Some(1)` forces a chain — the "w/o Constrained Tree"
+    /// ablation; `depth: Some(2)` is Table 3's truncation.
+    pub draft: DraftConfig,
     pub stop_on_eos: bool,
 }
 
@@ -43,8 +44,7 @@ impl Default for GenConfig {
             temperature: 0.0,
             max_new_tokens: 64,
             seed: 0,
-            use_tree: true,
-            max_depth: None,
+            draft: DraftConfig::default(),
             stop_on_eos: false,
         }
     }

@@ -1,10 +1,12 @@
 //! Speculative-decoding core: constrained draft trees (§2.2), lossless
-//! verification (§2.4), sampling, the per-request cycle core + resumable
-//! session, the blocking engine, and metrics.
+//! verification (§2.4), per-cycle draft planning ([`plan`]), sampling,
+//! the per-request cycle core + resumable session, the blocking engine,
+//! and metrics.
 
 pub mod accept;
 pub mod engine;
 pub mod metrics;
+pub mod plan;
 pub mod sampler;
 pub mod session;
 pub mod tree;
@@ -12,6 +14,7 @@ pub mod tree;
 pub use accept::{verify_tree, AcceptResult};
 pub use engine::{Engine, GenConfig, GenResult};
 pub use metrics::GenMetrics;
+pub use plan::{AdaptivePlanner, DraftConfig, DraftPlan, DraftPlanner, PlannerKind, StaticPlanner};
 pub use sampler::Sampler;
 pub use session::{
     prompt_budget, truncate_prompt, verify_rows, CycleCommit, CycleEvent, GenSession, SlotCycle,

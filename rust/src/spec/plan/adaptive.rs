@@ -1,0 +1,181 @@
+//! AdaEAGLE-style adaptive draft structures: size the next cycle's
+//! draft from recent acceptance instead of drafting a fixed tree.
+//!
+//! The planner keeps a rolling window of the last `WINDOW` cycles'
+//! accepted draft lengths. Each cycle it plans
+//!
+//! * `depth  = clamp(⌊ā⌋ + 1, 1, base.depth)` — one level of headroom
+//!   over the mean acceptance length ā, so a request whose drafts keep
+//!   dying stops paying for deep drafts while one whose drafts land
+//!   plans right back up to the base depth;
+//! * `k = 1 + round((base_k − 1) · min(ā / base.depth, 1))` — branching
+//!   shrinks toward a chain as acceptance collapses.
+//!
+//! Both maps are nondecreasing in ā, which gives the planner its core
+//! guarantee (unit-tested below): **low acceptance never grows the
+//! plan** — if the window mean does not rise, neither does any plan
+//! dimension. The first cycle (empty window) optimistically plans the
+//! full base shape; the plan never exceeds the base in any dimension,
+//! so capacity accounting done against the base plan stays sound.
+
+use std::collections::VecDeque;
+
+use super::planner::DraftPlanner;
+use super::{DraftPlan, PlannerKind};
+
+/// Rolling-window size: long enough to smooth cycle-to-cycle acceptance
+/// noise, short enough to track phase changes within one generation.
+const WINDOW: usize = 8;
+
+#[derive(Debug, Clone)]
+pub struct AdaptivePlanner {
+    /// ceiling shape (the resolved static plan)
+    base: DraftPlan,
+    /// accepted draft nodes of the last `WINDOW` cycles
+    window: VecDeque<usize>,
+}
+
+impl AdaptivePlanner {
+    pub fn new(base: DraftPlan) -> AdaptivePlanner {
+        AdaptivePlanner { base, window: VecDeque::with_capacity(WINDOW) }
+    }
+
+    fn mean(&self) -> Option<f64> {
+        if self.window.is_empty() {
+            return None;
+        }
+        Some(self.window.iter().sum::<usize>() as f64 / self.window.len() as f64)
+    }
+}
+
+impl DraftPlanner for AdaptivePlanner {
+    fn kind(&self) -> PlannerKind {
+        PlannerKind::Adaptive
+    }
+
+    fn next_plan(&mut self) -> DraftPlan {
+        let Some(a) = self.mean() else {
+            // no evidence yet: optimistic full-shape start
+            return self.base.clone();
+        };
+        if self.base.depth == 0 {
+            return self.base.clone();
+        }
+        let depth = ((a.floor() as usize) + 1).clamp(1, self.base.depth);
+        let base_k = self.base.k_for(0);
+        let ratio = (a / self.base.depth as f64).min(1.0);
+        let k = 1 + ((base_k - 1) as f64 * ratio).round() as usize;
+        let mut plan = DraftPlan::uniform(depth, k);
+        plan.node_budget = plan.node_budget.min(self.base.node_budget);
+        plan
+    }
+
+    fn observe(&mut self, accepted_drafts: usize) {
+        if self.window.len() == WINDOW {
+            self.window.pop_front();
+        }
+        self.window.push_back(accepted_drafts);
+    }
+
+    fn window_mean(&self) -> Option<f64> {
+        self.mean()
+    }
+
+    fn box_clone(&self) -> Box<dyn DraftPlanner> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> DraftPlan {
+        DraftPlan::uniform(6, 3)
+    }
+
+    /// Core monotonicity guarantee: under persistently low acceptance
+    /// the plan never grows — every successive plan is <= the previous
+    /// one in depth, branching, and node count.
+    #[test]
+    fn low_acceptance_never_grows_the_plan() {
+        let mut p = AdaptivePlanner::new(base());
+        let mut prev = p.next_plan();
+        assert_eq!(prev, base(), "empty window starts at the base shape");
+        for _ in 0..20 {
+            p.observe(0);
+            let plan = p.next_plan();
+            assert!(plan.depth <= prev.depth, "depth grew under zero acceptance");
+            assert!(plan.k_for(0) <= prev.k_for(0), "branching grew");
+            assert!(plan.draft_nodes() <= prev.draft_nodes(), "nodes grew");
+            prev = plan;
+        }
+        // fully collapsed: a 1-deep chain, but never below one level
+        assert_eq!(prev.depth, 1);
+        assert_eq!(prev.k_for(0), 1);
+    }
+
+    /// The plan is a nondecreasing function of the window mean: a
+    /// planner fed strictly lower acceptance never plans bigger than
+    /// one fed higher acceptance.
+    #[test]
+    fn plan_is_monotone_in_window_mean() {
+        for (lo, hi) in [(0usize, 1usize), (1, 2), (0, 6), (2, 5), (3, 6)] {
+            let mut p_lo = AdaptivePlanner::new(base());
+            let mut p_hi = AdaptivePlanner::new(base());
+            for _ in 0..WINDOW {
+                p_lo.observe(lo);
+                p_hi.observe(hi);
+            }
+            let (a, b) = (p_lo.next_plan(), p_hi.next_plan());
+            assert!(a.depth <= b.depth, "{lo} vs {hi}: depth {} > {}", a.depth, b.depth);
+            assert!(a.k_for(0) <= b.k_for(0), "{lo} vs {hi}: branching inverted");
+            assert!(a.draft_nodes() <= b.draft_nodes());
+        }
+    }
+
+    #[test]
+    fn never_exceeds_the_base_plan() {
+        let mut p = AdaptivePlanner::new(base());
+        for pattern in [[9usize, 9, 9, 9], [0, 9, 0, 9], [6, 6, 6, 6]] {
+            for &a in &pattern {
+                p.observe(a);
+                let plan = p.next_plan();
+                assert!(plan.depth <= 6);
+                assert!(plan.k_for(0) <= 3);
+                assert!(plan.draft_nodes() <= base().draft_nodes());
+                assert!(plan.node_budget <= base().node_budget);
+            }
+        }
+    }
+
+    #[test]
+    fn recovers_when_acceptance_returns() {
+        let mut p = AdaptivePlanner::new(base());
+        for _ in 0..WINDOW {
+            p.observe(0);
+        }
+        assert_eq!(p.next_plan().depth, 1);
+        for _ in 0..WINDOW {
+            p.observe(6);
+        }
+        let plan = p.next_plan();
+        assert_eq!(plan.depth, 6, "full acceptance grows back to the base depth");
+        assert_eq!(plan.k_for(0), 3);
+    }
+
+    #[test]
+    fn window_is_rolling() {
+        let mut p = AdaptivePlanner::new(base());
+        for _ in 0..100 {
+            p.observe(6);
+        }
+        for _ in 0..WINDOW {
+            p.observe(0);
+        }
+        assert_eq!(p.window_mean(), Some(0.0), "old samples age out");
+        let mut q = AdaptivePlanner::new(DraftPlan::root_only());
+        q.observe(3);
+        assert_eq!(q.next_plan(), DraftPlan::root_only(), "degenerate base is stable");
+    }
+}

@@ -1,0 +1,294 @@
+//! First-class draft-structure planning: the per-cycle [`DraftPlan`].
+//!
+//! The paper's "constrained draft tree that preserves lossless
+//! verification cost" used to be a scatter of knobs (`use_tree`,
+//! `max_depth`, `spec.tree_top_k`, truncation inlined in
+//! `tree::from_draft`). This module makes the draft *shape* a value: a
+//! [`DraftPlan`] — depth, per-level branching, node budget — is the
+//! single source of truth for the tree a cycle may build and therefore
+//! for its verify-lane cost (tree slots map 1:1 to verification rows
+//! and temporary KV rows). A [`DraftPlanner`](planner::DraftPlanner)
+//! produces one plan per cycle:
+//!
+//! * [`StaticPlanner`](planner::StaticPlanner) — a fixed plan; with the
+//!   spec's defaults it reproduces the pre-plan behavior byte for byte.
+//! * [`AdaptivePlanner`](adaptive::AdaptivePlanner) — AdaEAGLE-style:
+//!   sizes the next cycle's draft from a rolling window of recent
+//!   acceptance lengths, shrinking depth/branching when drafts keep
+//!   getting rejected and growing back (never beyond the base plan)
+//!   when acceptance recovers.
+//!
+//! Requests carry a [`DraftConfig`] (every field optional; the JSON
+//! protocol's `"draft"` object and the CLI's `--planner`/`--draft-*`
+//! flags fill it) which is resolved against the model spec into the
+//! base plan at session/slot start.
+
+pub mod adaptive;
+pub mod planner;
+
+pub use adaptive::AdaptivePlanner;
+pub use planner::{DraftPlanner, StaticPlanner};
+
+use crate::model::ModelSpec;
+
+/// Upper bound on user-supplied draft knobs (depth / top-k / budget).
+/// Far above any lowered executable's row count, but small enough that
+/// a typo'd huge value is a validation error instead of an
+/// out-of-memory abort (plans allocate `vec![k; depth]`).
+pub const MAX_DRAFT_KNOB: usize = 1024;
+
+/// The shape one cycle's constrained draft tree may take — and, through
+/// the 1:1 slot↔row mapping, the cycle's verification cost.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DraftPlan {
+    /// maximum draft levels below the root (0 = root-only / vanilla)
+    pub depth: usize,
+    /// candidates attached at each level; level `i` uses
+    /// `branching[i]`, levels past the end reuse the last entry
+    pub branching: Vec<usize>,
+    /// hard cap on non-root tree nodes — the verify-lane budget
+    pub node_budget: usize,
+}
+
+impl DraftPlan {
+    /// Uniform tree: `depth` levels of `k` candidates, budget non-binding.
+    pub fn uniform(depth: usize, k: usize) -> DraftPlan {
+        let k = k.max(1);
+        DraftPlan {
+            depth,
+            branching: vec![k; depth],
+            node_budget: depth.saturating_mul(k),
+        }
+    }
+
+    /// Chain plan: one candidate per level (the batched serving lane's
+    /// shape — its lowered executables verify `1 + depth` rows).
+    pub fn chain_of(depth: usize) -> DraftPlan {
+        DraftPlan::uniform(depth, 1)
+    }
+
+    /// Root-only plan (vanilla decoding).
+    pub fn root_only() -> DraftPlan {
+        DraftPlan { depth: 0, branching: Vec::new(), node_budget: 0 }
+    }
+
+    /// The spec's default draft shape — the one home of the
+    /// depth/top-k pair that `spec.json`, `GenConfig` and the fixture
+    /// generator used to hard-code independently.
+    pub fn default_for(spec: &ModelSpec) -> DraftPlan {
+        DraftPlan::uniform(spec.draft_depth, spec.tree_top_k)
+    }
+
+    /// Resolve request knobs against the spec: unset fields fall back
+    /// to `native_depth` (the drafter's own level count, or the batched
+    /// lane's chain length) and `spec.tree_top_k`.
+    pub fn resolve(cfg: &DraftConfig, spec: &ModelSpec, native_depth: usize) -> DraftPlan {
+        let depth = cfg.depth.unwrap_or(native_depth);
+        let k = cfg.top_k.unwrap_or(spec.tree_top_k).max(1);
+        let mut plan = DraftPlan::uniform(depth, k);
+        if let Some(b) = cfg.budget {
+            plan.node_budget = plan.node_budget.min(b);
+        }
+        plan
+    }
+
+    /// Branching factor at `level` (levels past the end reuse the last
+    /// entry; an empty plan branches 1).
+    pub fn k_for(&self, level: usize) -> usize {
+        self.branching
+            .get(level)
+            .or_else(|| self.branching.last())
+            .copied()
+            .unwrap_or(1)
+            .max(1)
+    }
+
+    /// Non-root nodes this plan admits (per-level branching summed,
+    /// capped by the node budget).
+    pub fn draft_nodes(&self) -> usize {
+        let sum: usize = (0..self.depth).map(|l| self.k_for(l)).sum();
+        sum.min(self.node_budget)
+    }
+
+    /// Verification rows a tree built under this plan needs: the root
+    /// plus every admissible draft node.
+    pub fn total_rows(&self) -> usize {
+        1 + self.draft_nodes()
+    }
+
+    /// Clamp in place to an executable's limits: at most `depth_cap`
+    /// levels and `node_cap` non-root nodes.
+    pub fn clamp_to(&mut self, depth_cap: usize, node_cap: usize) {
+        self.depth = self.depth.min(depth_cap);
+        self.branching.truncate(self.depth);
+        self.node_budget = self.node_budget.min(node_cap);
+    }
+}
+
+/// Which [`DraftPlanner`] a request runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannerKind {
+    Static,
+    Adaptive,
+}
+
+impl PlannerKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlannerKind::Static => "static",
+            PlannerKind::Adaptive => "adaptive",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<PlannerKind> {
+        Some(match name {
+            "static" => PlannerKind::Static,
+            "adaptive" => PlannerKind::Adaptive,
+            _ => return None,
+        })
+    }
+
+    /// Build the planner for a request whose resolved base plan is
+    /// `base` (the adaptive planner never grows beyond it).
+    pub fn build(self, base: DraftPlan) -> Box<dyn DraftPlanner> {
+        match self {
+            PlannerKind::Static => Box::new(StaticPlanner::new(base)),
+            PlannerKind::Adaptive => Box::new(AdaptivePlanner::new(base)),
+        }
+    }
+}
+
+/// Per-request draft-structure knobs, every field optional: `None`
+/// falls back to the serving default and ultimately to the model spec.
+/// Carried on `GenConfig`, filled by the protocol's `"draft"` object or
+/// the CLI's `--planner`/`--draft-depth`/`--draft-top-k`/`--draft-budget`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DraftConfig {
+    pub planner: Option<PlannerKind>,
+    pub depth: Option<usize>,
+    pub top_k: Option<usize>,
+    pub budget: Option<usize>,
+}
+
+impl DraftConfig {
+    /// Field-wise fallback: every unset knob takes `fallback`'s value
+    /// (request over serving default).
+    pub fn merged(&self, fallback: &DraftConfig) -> DraftConfig {
+        DraftConfig {
+            planner: self.planner.or(fallback.planner),
+            depth: self.depth.or(fallback.depth),
+            top_k: self.top_k.or(fallback.top_k),
+            budget: self.budget.or(fallback.budget),
+        }
+    }
+
+    pub fn planner_kind(&self) -> PlannerKind {
+        self.planner.unwrap_or(PlannerKind::Static)
+    }
+}
+
+/// The default draft-node count for a (depth, top-k) pair — shared by
+/// `ModelSpec` (derives `tree_nodes`) and the fixture generator so the
+/// shape arithmetic has one home.
+pub fn default_draft_nodes(depth: usize, top_k: usize) -> usize {
+    DraftPlan::uniform(depth, top_k).draft_nodes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_shape_and_rows() {
+        let p = DraftPlan::uniform(6, 3);
+        assert_eq!(p.depth, 6);
+        assert_eq!(p.k_for(0), 3);
+        assert_eq!(p.k_for(5), 3);
+        assert_eq!(p.draft_nodes(), 18);
+        assert_eq!(p.total_rows(), 19);
+        let c = DraftPlan::chain_of(4);
+        assert_eq!(c.draft_nodes(), 4);
+        assert_eq!(DraftPlan::root_only().total_rows(), 1);
+    }
+
+    #[test]
+    fn budget_binds_nodes() {
+        let mut p = DraftPlan::uniform(6, 3);
+        p.node_budget = 7;
+        assert_eq!(p.draft_nodes(), 7);
+        assert_eq!(p.total_rows(), 8);
+    }
+
+    #[test]
+    fn k_for_extends_last_level_and_floors_at_one() {
+        let p = DraftPlan { depth: 4, branching: vec![3, 2], node_budget: 100 };
+        assert_eq!(p.k_for(0), 3);
+        assert_eq!(p.k_for(1), 2);
+        assert_eq!(p.k_for(3), 2, "past-the-end levels reuse the last entry");
+        assert_eq!(p.draft_nodes(), 3 + 2 + 2 + 2);
+        assert_eq!(DraftPlan::root_only().k_for(0), 1);
+    }
+
+    #[test]
+    fn clamp_to_caps_depth_and_budget() {
+        let mut p = DraftPlan::uniform(6, 3);
+        p.clamp_to(2, 4);
+        assert_eq!(p.depth, 2);
+        assert_eq!(p.branching.len(), 2);
+        assert_eq!(p.draft_nodes(), 4);
+    }
+
+    #[test]
+    fn resolve_defaults_come_from_spec() {
+        let spec = ModelSpec::parse(crate::model::spec::tests_sample::SAMPLE).unwrap();
+        let p = DraftPlan::resolve(&DraftConfig::default(), &spec, spec.draft_depth);
+        assert_eq!(p, DraftPlan::default_for(&spec));
+        assert_eq!(p.draft_nodes(), spec.tree_nodes);
+        // explicit knobs win
+        let cfg = DraftConfig {
+            depth: Some(2),
+            top_k: Some(1),
+            budget: Some(1),
+            planner: None,
+        };
+        let p = DraftPlan::resolve(&cfg, &spec, spec.draft_depth);
+        assert_eq!(p.depth, 2);
+        assert_eq!(p.k_for(0), 1);
+        assert_eq!(p.draft_nodes(), 1, "explicit budget binds");
+        // native depth (the drafter's own level count) is the depth default
+        let p = DraftPlan::resolve(&DraftConfig::default(), &spec, 4);
+        assert_eq!(p.depth, 4);
+    }
+
+    #[test]
+    fn merged_prefers_request_fields() {
+        let server = DraftConfig {
+            planner: Some(PlannerKind::Adaptive),
+            depth: Some(4),
+            top_k: None,
+            budget: Some(9),
+        };
+        let req = DraftConfig { depth: Some(2), ..Default::default() };
+        let m = req.merged(&server);
+        assert_eq!(m.planner, Some(PlannerKind::Adaptive));
+        assert_eq!(m.depth, Some(2));
+        assert_eq!(m.top_k, None);
+        assert_eq!(m.budget, Some(9));
+        assert_eq!(DraftConfig::default().planner_kind(), PlannerKind::Static);
+    }
+
+    #[test]
+    fn planner_names_roundtrip() {
+        for k in [PlannerKind::Static, PlannerKind::Adaptive] {
+            assert_eq!(PlannerKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(PlannerKind::from_name("magic"), None);
+    }
+
+    #[test]
+    fn default_nodes_helper_matches_plan() {
+        assert_eq!(default_draft_nodes(6, 3), 18);
+        assert_eq!(default_draft_nodes(0, 3), 0);
+        assert_eq!(default_draft_nodes(5, 0), 5, "top-k floors at 1");
+    }
+}

@@ -1,0 +1,82 @@
+//! The per-cycle planning contract and the fixed-shape planner.
+
+use super::{DraftPlan, PlannerKind};
+
+/// Produces one [`DraftPlan`] per cycle for one request and hears back
+/// how the cycle went. Each request (engine session or batcher slot)
+/// owns its planner, so adaptive state is per slot.
+pub trait DraftPlanner: std::fmt::Debug {
+    fn kind(&self) -> PlannerKind;
+
+    /// The plan for the cycle about to run.
+    fn next_plan(&mut self) -> DraftPlan;
+
+    /// Feed back one finished cycle: how many *draft* nodes (beyond the
+    /// always-committed root) the verifier accepted.
+    fn observe(&mut self, accepted_drafts: usize);
+
+    /// Mean of the rolling acceptance window, if this planner keeps one
+    /// (observability — surfaced in `ServingMetrics`).
+    fn window_mean(&self) -> Option<f64>;
+
+    fn box_clone(&self) -> Box<dyn DraftPlanner>;
+}
+
+impl Clone for Box<dyn DraftPlanner> {
+    fn clone(&self) -> Self {
+        self.box_clone()
+    }
+}
+
+/// Fixed shape every cycle. With the spec-default plan this reproduces
+/// the pre-`DraftPlan` engine byte for byte (property-tested in
+/// `tests/plan_props.rs`).
+#[derive(Debug, Clone)]
+pub struct StaticPlanner {
+    plan: DraftPlan,
+}
+
+impl StaticPlanner {
+    pub fn new(plan: DraftPlan) -> StaticPlanner {
+        StaticPlanner { plan }
+    }
+}
+
+impl DraftPlanner for StaticPlanner {
+    fn kind(&self) -> PlannerKind {
+        PlannerKind::Static
+    }
+
+    fn next_plan(&mut self) -> DraftPlan {
+        self.plan.clone()
+    }
+
+    fn observe(&mut self, _accepted_drafts: usize) {}
+
+    fn window_mean(&self) -> Option<f64> {
+        None
+    }
+
+    fn box_clone(&self) -> Box<dyn DraftPlanner> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_planner_is_constant() {
+        let base = DraftPlan::uniform(4, 2);
+        let mut p = StaticPlanner::new(base.clone());
+        assert_eq!(p.kind(), PlannerKind::Static);
+        assert_eq!(p.next_plan(), base);
+        p.observe(0);
+        p.observe(4);
+        assert_eq!(p.next_plan(), base, "feedback never changes a static plan");
+        assert_eq!(p.window_mean(), None);
+        let c: Box<dyn DraftPlanner> = p.box_clone();
+        assert_eq!(c.kind(), PlannerKind::Static);
+    }
+}

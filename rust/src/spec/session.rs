@@ -28,6 +28,7 @@ use crate::model::{KvCache, MaskRow, ModelSpec, TargetModel, Tokenizer};
 use super::accept::{verify_tree, AcceptResult};
 use super::engine::{GenConfig, GenResult};
 use super::metrics::GenMetrics;
+use super::plan::{DraftPlan, DraftPlanner};
 use super::sampler::Sampler;
 use super::tree::DraftTree;
 
@@ -90,8 +91,10 @@ pub struct CycleCommit {
 
 /// Prompt-token budget so the worst-case cycle still fits in `max_seq`:
 /// the committed output plus `worst_case_rows` temporary verification
-/// rows. The single-request engine passes `tree_nodes + 2`, the batched
-/// lane `chain_len + 3`.
+/// rows. The single-request engine derives `worst_case_rows` from the
+/// request's base [`DraftPlan`] (`total_rows() + 1` — tree rows plus
+/// the bonus row), the batched lane from its executable shape
+/// (`chain_len + 3`).
 pub fn prompt_budget(max_seq: usize, max_new_tokens: usize, worst_case_rows: usize) -> usize {
     max_seq.saturating_sub(max_new_tokens + worst_case_rows)
 }
@@ -136,6 +139,12 @@ pub fn verify_rows(
 pub struct SlotCycle {
     pub cfg: GenConfig,
     pub sampler: Sampler,
+    /// per-request draft-structure planner (static or adaptive),
+    /// seeded from the resolved base plan
+    planner: Box<dyn DraftPlanner>,
+    /// the plan governing the current cycle — refreshed by
+    /// [`begin_cycle`](Self::begin_cycle) before drafting
+    pub plan: DraftPlan,
     /// next cycle's root: always a true target-distribution sample
     pub pending: i32,
     /// committed tokens beyond the prompt
@@ -147,22 +156,39 @@ pub struct SlotCycle {
 
 impl SlotCycle {
     /// Start a request's cycle state from the prefill's last-token
-    /// logits: seeds the per-request sampler and draws the first
-    /// pending token.
-    pub fn start(cfg: GenConfig, last_logits: &[f32]) -> SlotCycle {
+    /// logits: seeds the per-request sampler, builds the draft planner
+    /// from the resolved `base` plan, and draws the first pending token.
+    pub fn start(cfg: GenConfig, base: DraftPlan, last_logits: &[f32]) -> SlotCycle {
         let mut sampler = Sampler::new(cfg.temperature, cfg.seed);
         let d0 = sampler.dist_from_logits(last_logits);
         let pending = sampler.sample(&d0);
         let finished = cfg.max_new_tokens == 0;
+        let planner = cfg.draft.planner_kind().build(base.clone());
         SlotCycle {
             cfg,
             sampler,
+            planner,
+            plan: base,
             pending,
             out: Vec::new(),
             metrics: GenMetrics::default(),
             eos_hit: false,
             finished,
         }
+    }
+
+    /// Ask the planner for the cycle about to run and make its plan
+    /// current. Callers draft to `plan.depth` levels and then feed the
+    /// drafter's output to [`build_tree`](Self::build_tree).
+    pub fn begin_cycle(&mut self) -> &DraftPlan {
+        self.plan = self.planner.next_plan();
+        &self.plan
+    }
+
+    /// Rolling acceptance-window mean, when the planner keeps one
+    /// (adaptive observability — `None` for static plans).
+    pub fn accept_window_mean(&self) -> Option<f64> {
+        self.planner.window_mean()
     }
 
     pub fn finished(&self) -> bool {
@@ -174,16 +200,18 @@ impl SlotCycle {
         self.finished = true;
     }
 
-    /// Build this cycle's constrained tree from a drafter's output —
-    /// the one home of `max_depth` truncation and of the greedy-top-k
-    /// vs sampled-without-replacement candidate rule.
-    pub fn build_tree(&mut self, draft: DraftOutput, k: usize) -> DraftTree {
+    /// Build this cycle's constrained tree from a drafter's output
+    /// under the current [`DraftPlan`] — the one home of depth
+    /// truncation, branching, the node budget and the greedy-top-k vs
+    /// sampled-without-replacement candidate rule.
+    pub fn build_tree(&mut self, draft: DraftOutput) -> DraftTree {
         let _g = self.metrics.timer.start("tree");
-        DraftTree::from_draft(self.pending, draft, k, self.cfg.max_depth, &mut self.sampler)
+        DraftTree::from_draft(self.pending, draft, &self.plan, &mut self.sampler)
     }
 
     /// Lossless acceptance over `logits` (row-major, one `vocab`-sized
-    /// row per tree slot). Records the cycle into the metrics.
+    /// row per tree slot). Records the cycle into the metrics and feeds
+    /// the accepted draft length back to the planner.
     pub fn accept(&mut self, tree: &DraftTree, logits: &[f32], vocab: usize) -> AcceptResult {
         let acc = {
             let _g = self.metrics.timer.start("accept");
@@ -194,6 +222,8 @@ impl SlotCycle {
         };
         self.metrics
             .record_cycle(acc.accepted_slots.len(), &acc.depth_events);
+        self.planner
+            .observe(acc.accepted_slots.len().saturating_sub(1));
         acc
     }
 
@@ -247,7 +277,9 @@ pub struct GenSession<'e> {
     spec: ModelSpec,
     kv: KvCache,
     pub cycle: SlotCycle,
-    eff_k: usize,
+    /// worst-case rows one cycle may append (base plan + bonus row) —
+    /// the capacity-guard margin
+    worst_rows: usize,
     t_start: Instant,
     sealed: bool,
 }
@@ -266,9 +298,15 @@ impl<'e> GenSession<'e> {
         drafter.reset()?;
         let mut kv = target.new_kv()?;
 
+        // resolve the request's draft knobs into the base plan: the
+        // depth default is this drafter's own level count, so an unset
+        // plan never truncates what the drafter natively emits
+        let base = DraftPlan::resolve(&cfg.draft, &spec, drafter.depth());
+        let worst_rows = base.total_rows() + 1;
+
         // prompt, truncated so the worst-case cycle still fits in max_seq
         let mut ptoks = tokenizer.encode_prompt(prompt);
-        let budget = prompt_budget(spec.max_seq, cfg.max_new_tokens, spec.tree_nodes + 2);
+        let budget = prompt_budget(spec.max_seq, cfg.max_new_tokens, worst_rows);
         truncate_prompt(&mut ptoks, budget);
         metrics.prompt_tokens = ptoks.len();
 
@@ -277,7 +315,7 @@ impl<'e> GenSession<'e> {
             let _g = metrics.timer.start("prefill");
             target.prefill(&mut kv, &ptoks)?
         };
-        let mut cycle = SlotCycle::start(cfg.clone(), &pre.last_logits);
+        let mut cycle = SlotCycle::start(cfg.clone(), base, &pre.last_logits);
         cycle.metrics = metrics;
         {
             let _g = cycle.metrics.timer.start("observe");
@@ -290,7 +328,6 @@ impl<'e> GenSession<'e> {
                 first_pos: 0,
             })?;
         }
-        let eff_k = if cfg.use_tree { spec.tree_top_k } else { 1 };
         Ok(GenSession {
             target,
             drafter,
@@ -298,7 +335,7 @@ impl<'e> GenSession<'e> {
             spec,
             kv,
             cycle,
-            eff_k,
+            worst_rows,
             t_start,
             sealed: false,
         })
@@ -333,20 +370,26 @@ impl<'e> GenSession<'e> {
             return Ok(CycleEvent::noop(self.cycle.pending));
         }
         let c = self.kv.len(0);
-        // capacity guard: pending + tree rows must fit
-        if c + self.spec.tree_nodes + 2 > self.spec.max_seq {
+        // capacity guard: pending + worst-case tree rows must fit
+        if c + self.worst_rows > self.spec.max_seq {
             self.cycle.finish();
             self.seal();
             return Ok(CycleEvent::noop(self.cycle.pending));
         }
 
-        // 1. draft
+        // 1. plan, then draft to the planned depth (a level costs real
+        // work for sequential drafters — EAGLE's eg_next chain, SpS's
+        // LM steps — so levels the plan would drop are never drafted)
+        let levels = {
+            let plan = self.cycle.begin_cycle();
+            plan.depth.min(plan.node_budget)
+        };
         let draft_out = {
             let _g = self.cycle.metrics.timer.start("draft");
             self.drafter
-                .draft(self.cycle.pending, c - 1, self.cycle.cfg.temperature)?
+                .draft(self.cycle.pending, c - 1, self.cycle.cfg.temperature, levels)?
         };
-        let tree = self.cycle.build_tree(draft_out, self.eff_k);
+        let tree = self.cycle.build_tree(draft_out);
 
         // 2. verify: one target forward over all tree rows
         let (tokens, positions, rows) = verify_rows(&tree, c, self.spec.max_seq);
@@ -447,13 +490,13 @@ mod tests {
     #[test]
     fn slot_cycle_commits_and_terminates() {
         let cfg = GenConfig { max_new_tokens: 3, ..Default::default() };
-        let mut cy = SlotCycle::start(cfg, &one_hot(8, 5));
+        let mut cy = SlotCycle::start(cfg, DraftPlan::uniform(4, 1), &one_hot(8, 5));
         assert_eq!(cy.pending, 5);
         assert!(!cy.finished());
 
         // greedy chain 5 -> 2 accepted, bonus 7
         let draft = DraftOutput::Levels(vec![one_hot(8, 2)]);
-        let tree = cy.build_tree(draft, 1);
+        let tree = cy.build_tree(draft);
         let mut logits = Vec::new();
         for slot in 0..tree.len() {
             let hot = match tree.nodes[slot].token {
@@ -476,7 +519,7 @@ mod tests {
 
         // next cycle overflows max_new: committed truncated to 1 token
         let draft = DraftOutput::Levels(vec![one_hot(8, 4)]);
-        let tree = cy.build_tree(draft, 1);
+        let tree = cy.build_tree(draft);
         let mut logits = Vec::new();
         for slot in 0..tree.len() {
             let hot = match tree.nodes[slot].token {
@@ -498,9 +541,9 @@ mod tests {
     fn slot_cycle_stops_on_eos_inclusive() {
         let eos = 3;
         let cfg = GenConfig { max_new_tokens: 10, stop_on_eos: true, ..Default::default() };
-        let mut cy = SlotCycle::start(cfg, &one_hot(8, 1));
+        let mut cy = SlotCycle::start(cfg, DraftPlan::uniform(4, 1), &one_hot(8, 1));
         let draft = DraftOutput::Levels(vec![one_hot(8, eos as usize), one_hot(8, 6)]);
-        let tree = cy.build_tree(draft, 1);
+        let tree = cy.build_tree(draft);
         let mut logits = Vec::new();
         for slot in 0..tree.len() {
             let hot = match tree.nodes[slot].token {
@@ -521,7 +564,34 @@ mod tests {
     #[test]
     fn zero_budget_request_finishes_without_a_cycle() {
         let cfg = GenConfig { max_new_tokens: 0, ..Default::default() };
-        let cy = SlotCycle::start(cfg, &one_hot(4, 2));
+        let cy = SlotCycle::start(cfg, DraftPlan::uniform(4, 1), &one_hot(4, 2));
         assert!(cy.finished());
+    }
+
+    #[test]
+    fn adaptive_slot_cycle_shrinks_its_plan_after_rejections() {
+        use crate::spec::plan::{DraftConfig, PlannerKind};
+        let cfg = GenConfig {
+            max_new_tokens: 100,
+            draft: DraftConfig { planner: Some(PlannerKind::Adaptive), ..Default::default() },
+            ..Default::default()
+        };
+        let mut cy = SlotCycle::start(cfg, DraftPlan::uniform(4, 1), &one_hot(8, 5));
+        // first cycle plans the full base shape
+        assert_eq!(cy.begin_cycle().depth, 4);
+        assert!(cy.accept_window_mean().is_none());
+        // a draft the target rejects outright: root committed, 0 drafts
+        let draft = DraftOutput::Levels(vec![one_hot(8, 2)]);
+        let tree = cy.build_tree(draft);
+        // target wants 6 everywhere: draft token 2 is rejected
+        let mut logits = Vec::new();
+        for _ in 0..tree.len() {
+            logits.extend(one_hot(8, 6));
+        }
+        let acc = cy.accept(&tree, &logits, 8);
+        assert_eq!(acc.accepted_slots.len(), 1, "only the root survives");
+        assert_eq!(cy.accept_window_mean(), Some(0.0));
+        // the planner saw the rejection: the next plan is shallower
+        assert_eq!(cy.begin_cycle().depth, 1);
     }
 }

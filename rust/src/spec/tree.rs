@@ -17,6 +17,7 @@
 use crate::draft::DraftOutput;
 use crate::util::rng::{top_k_indices, Pcg64};
 
+use super::plan::DraftPlan;
 use super::sampler::Sampler;
 
 /// Draw up to k distinct indices from a probability vector, each drawn
@@ -85,8 +86,10 @@ impl DraftTree {
     /// Backbone Expansion from per-level draft distributions, candidates
     /// chosen by top-k (greedy decoding: acceptance compares against the
     /// target argmax, so the k most probable candidates are optimal).
+    /// Uniform-k convenience over [`Self::backbone_expansion_planned`].
     pub fn backbone_expansion(pending: i32, dists: Vec<Vec<f32>>, k: usize) -> DraftTree {
-        Self::backbone_expansion_impl(pending, dists, k, None)
+        let plan = DraftPlan::uniform(dists.len(), k);
+        Self::backbone_expansion_impl(pending, dists, &plan, None)
     }
 
     /// Backbone Expansion with candidates *sampled without replacement*
@@ -102,18 +105,36 @@ impl DraftTree {
         k: usize,
         rng: &mut crate::util::rng::Pcg64,
     ) -> DraftTree {
-        Self::backbone_expansion_impl(pending, dists, k, Some(rng))
+        let plan = DraftPlan::uniform(dists.len(), k);
+        Self::backbone_expansion_impl(pending, dists, &plan, Some(rng))
+    }
+
+    /// Backbone Expansion under an explicit [`DraftPlan`]: level `i`
+    /// attaches `plan.k_for(i)` candidates, expansion stops at
+    /// `plan.depth` levels or when the node budget is spent.
+    pub fn backbone_expansion_planned(
+        pending: i32,
+        dists: Vec<Vec<f32>>,
+        plan: &DraftPlan,
+        rng: Option<&mut crate::util::rng::Pcg64>,
+    ) -> DraftTree {
+        Self::backbone_expansion_impl(pending, dists, plan, rng)
     }
 
     fn backbone_expansion_impl(
         pending: i32,
         dists: Vec<Vec<f32>>,
-        k: usize,
+        plan: &DraftPlan,
         mut rng: Option<&mut crate::util::rng::Pcg64>,
     ) -> DraftTree {
         let mut tree = DraftTree::root_only(pending);
         let mut backbone = 0usize; // slot of the current backbone tail
+        let mut budget = plan.node_budget;
         for (level, q) in dists.iter().enumerate() {
+            if level >= plan.depth || budget == 0 {
+                break;
+            }
+            let k = plan.k_for(level).min(budget);
             let cand = match rng.as_deref_mut() {
                 None => top_k_indices(q, k),
                 Some(rng) => sample_without_replacement(q, k, rng),
@@ -121,6 +142,7 @@ impl DraftTree {
             if cand.is_empty() {
                 break;
             }
+            budget -= cand.len();
             let mut next_backbone = None;
             for (rank, &tok) in cand.iter().enumerate() {
                 let slot = tree.nodes.len();
@@ -141,9 +163,9 @@ impl DraftTree {
         tree
     }
 
-    /// Truncate a drafter's output to at most `depth` levels. The one
-    /// home of the `max_depth` rule (Table 3 uses 2) — previously
-    /// inlined in the engine and mirrored by the batcher.
+    /// Truncate a drafter's output to at most `depth` levels —
+    /// [`from_draft`](Self::from_draft) applies it under the cycle's
+    /// [`DraftPlan`] (Table 3 effectively plans depth 2).
     pub fn truncate_draft(draft: &mut DraftOutput, depth: usize) {
         match draft {
             DraftOutput::Levels(dists) => dists.truncate(depth),
@@ -155,30 +177,40 @@ impl DraftTree {
         }
     }
 
-    /// Build the cycle's tree from a drafter's output: applies the
-    /// `max_depth` truncation, then Backbone Expansion with top-k
-    /// candidates (greedy) or q-samples without replacement (stochastic
-    /// — required for lossless multi-round acceptance). Shared by the
-    /// single-request session and every continuous-batcher slot.
+    /// Build the cycle's tree from a drafter's output under the cycle's
+    /// [`DraftPlan`] — the one home of depth truncation, per-level
+    /// branching and the node budget, with top-k candidates (greedy) or
+    /// q-samples without replacement (stochastic — required for
+    /// lossless multi-round acceptance). Shared by the single-request
+    /// session and every continuous-batcher slot.
     pub fn from_draft(
         pending: i32,
-        mut draft: DraftOutput,
-        k: usize,
-        max_depth: Option<usize>,
+        draft: DraftOutput,
+        plan: &DraftPlan,
         sampler: &mut Sampler,
     ) -> DraftTree {
-        if let Some(d) = max_depth {
-            Self::truncate_draft(&mut draft, d);
-        }
         match draft {
-            DraftOutput::Levels(dists) => {
+            DraftOutput::Levels(mut dists) => {
+                dists.truncate(plan.depth);
                 if sampler.greedy() {
-                    DraftTree::backbone_expansion(pending, dists, k)
+                    DraftTree::backbone_expansion_planned(pending, dists, plan, None)
                 } else {
-                    DraftTree::backbone_expansion_sampled(pending, dists, k, sampler.rng_mut())
+                    DraftTree::backbone_expansion_planned(
+                        pending,
+                        dists,
+                        plan,
+                        Some(sampler.rng_mut()),
+                    )
                 }
             }
-            DraftOutput::Chain(toks, dists) => DraftTree::chain(pending, &toks, dists),
+            DraftOutput::Chain(mut toks, mut dists) => {
+                // a chain holds one node per level: both the depth and
+                // the node budget cap its length
+                let cap = plan.depth.min(plan.node_budget);
+                toks.truncate(cap);
+                dists.truncate(cap);
+                DraftTree::chain(pending, &toks, dists)
+            }
             DraftOutput::None => DraftTree::root_only(pending),
         }
     }
@@ -376,18 +408,44 @@ mod tests {
     fn from_draft_truncates_every_output_kind() {
         let mut s = Sampler::new(0.0, 1);
         let dists: Vec<_> = (0..6).map(|i| dist(8, i)).collect();
-        let t = DraftTree::from_draft(0, DraftOutput::Levels(dists.clone()), 2, Some(2), &mut s);
+        let plan = DraftPlan::uniform(2, 2);
+        let t = DraftTree::from_draft(0, DraftOutput::Levels(dists.clone()), &plan, &mut s);
         assert_eq!(t.max_depth(), 2);
         assert_eq!(t.len(), 1 + 2 * 2);
         let chain = DraftOutput::Chain(vec![1, 2, 3, 4], dists[..4].to_vec());
-        let t = DraftTree::from_draft(0, chain, 2, Some(3), &mut s);
+        let plan = DraftPlan::uniform(3, 2);
+        let t = DraftTree::from_draft(0, chain, &plan, &mut s);
         assert_eq!(t.max_depth(), 3);
         assert_eq!(t.tokens(), vec![0, 1, 2, 3]);
-        let t = DraftTree::from_draft(7, DraftOutput::None, 2, Some(1), &mut s);
+        let plan = DraftPlan::uniform(1, 2);
+        let t = DraftTree::from_draft(7, DraftOutput::None, &plan, &mut s);
         assert_eq!(t.len(), 1);
-        // no max_depth: untouched
-        let t = DraftTree::from_draft(0, DraftOutput::Levels(dists), 3, None, &mut s);
+        // plan deeper than the draft: untouched
+        let plan = DraftPlan::uniform(9, 3);
+        let t = DraftTree::from_draft(0, DraftOutput::Levels(dists), &plan, &mut s);
         assert_eq!(t.max_depth(), 6);
+    }
+
+    #[test]
+    fn from_draft_honors_budget_and_per_level_branching() {
+        let mut s = Sampler::new(0.0, 1);
+        let dists: Vec<_> = (0..4).map(|i| dist(8, i)).collect();
+        // budget 5 stops expansion mid-tree: 3 + 2 nodes, 2 levels deep
+        let plan = DraftPlan { depth: 4, branching: vec![3], node_budget: 5 };
+        let t = DraftTree::from_draft(0, DraftOutput::Levels(dists.clone()), &plan, &mut s);
+        assert_eq!(t.len(), 1 + 5);
+        assert_eq!(t.max_depth(), 2);
+        t.check_invariants(3).unwrap();
+        // per-level branching narrows with depth
+        let plan = DraftPlan { depth: 3, branching: vec![3, 1, 1], node_budget: 9 };
+        let t = DraftTree::from_draft(0, DraftOutput::Levels(dists.clone()), &plan, &mut s);
+        assert_eq!(t.len(), 1 + 3 + 1 + 1);
+        t.check_invariants(3).unwrap();
+        // a chain is capped by the node budget too
+        let chain = DraftOutput::Chain(vec![1, 2, 3, 4], dists);
+        let plan = DraftPlan { depth: 4, branching: vec![1], node_budget: 2 };
+        let t = DraftTree::from_draft(0, chain, &plan, &mut s);
+        assert_eq!(t.tokens(), vec![0, 1, 2]);
     }
 
     #[test]
@@ -403,7 +461,8 @@ mod tests {
                     d
                 })
                 .collect();
-            let t = DraftTree::from_draft(0, DraftOutput::Levels(dists), 3, None, &mut s);
+            let plan = DraftPlan::uniform(3, 3);
+            let t = DraftTree::from_draft(0, DraftOutput::Levels(dists), &plan, &mut s);
             t.check_invariants(3).unwrap();
         }
     }

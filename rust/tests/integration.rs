@@ -15,10 +15,10 @@ use std::rc::Rc;
 
 use common::{artifacts_base, artifacts_root, store_with};
 use fasteagle::backend::{fixture, BackendKind};
-use fasteagle::coordinator::{BatchConfig, BatchEngine, BatchMethod, Request};
+use fasteagle::coordinator::{BatchConfig, BatchEngine, BatchMethod, Request, ServingMetrics};
 use fasteagle::draft::make_drafter;
 use fasteagle::model::{BlockPool, KvCache, MaskRow, ModelSpec, TargetModel};
-use fasteagle::spec::{Engine, GenConfig, SlotPhase};
+use fasteagle::spec::{DraftConfig, Engine, GenConfig, PlannerKind, SlotPhase};
 use fasteagle::workload::batched_serving_target;
 
 
@@ -73,7 +73,11 @@ fn greedy_losslessness_chain_mode() {
     let (dir, kind) = artifacts_base();
     let st = store_with(&dir, kind);
     let tree_cfg = GenConfig { max_new_tokens: 32, ..Default::default() };
-    let chain_cfg = GenConfig { max_new_tokens: 32, use_tree: false, ..Default::default() };
+    let chain_cfg = GenConfig {
+        max_new_tokens: 32,
+        draft: DraftConfig { top_k: Some(1), ..Default::default() },
+        ..Default::default()
+    };
     let mut vanilla = Engine::new(
         TargetModel::open(Rc::clone(&st)).unwrap(),
         make_drafter(Rc::clone(&st), "vanilla").unwrap(),
@@ -305,6 +309,174 @@ fn batch_engine_b1_matches_single_engine() {
         assert_eq!(m.requests_done, 3);
         assert!(m.mean_occupancy() > 0.0);
     }
+}
+
+/// The DraftPlan resolution path is identity-preserving: spelling the
+/// spec defaults out as explicit static-planner knobs must reproduce
+/// the default config's output byte-for-byte, greedy and stochastic.
+#[test]
+fn static_planner_explicit_knobs_match_default_output() {
+    let (dir, kind) = artifacts_base();
+    let st = store_with(&dir, kind);
+    for (dn, temp) in [("fasteagle", 0.0f32), ("eagle3", 0.0), ("fasteagle", 1.0)] {
+        let mut eng = Engine::new(
+            TargetModel::open(Rc::clone(&st)).unwrap(),
+            make_drafter(Rc::clone(&st), dn).unwrap(),
+        );
+        let base_cfg = GenConfig {
+            max_new_tokens: 20,
+            temperature: temp,
+            seed: 7,
+            ..Default::default()
+        };
+        let reference = eng.generate(PROMPTS[0], &base_cfg).unwrap();
+        let explicit = GenConfig {
+            draft: DraftConfig {
+                planner: Some(PlannerKind::Static),
+                depth: Some(eng.drafter.depth()),
+                top_k: Some(eng.target.spec.tree_top_k),
+                budget: None,
+            },
+            ..base_cfg
+        };
+        let r = eng.generate(PROMPTS[0], &explicit).unwrap();
+        assert_eq!(
+            r.tokens, reference.tokens,
+            "{dn} T={temp}: explicit static plan diverged from the defaults"
+        );
+    }
+}
+
+/// AdaEAGLE-style adaptive drafting on the session API: the per-cycle
+/// tree shape must actually move (the planner reacts to acceptance),
+/// the per-cycle events must reassemble the output byte-for-byte, and
+/// greedy output must stay byte-identical to the static planner's.
+#[test]
+fn adaptive_planner_reshapes_cycles_and_stays_byte_identical() {
+    let (dir, kind) = artifacts_base();
+    let st = store_with(&dir, kind);
+    let mut shapes_varied = false;
+    for dn in ["fasteagle", "eagle3"] {
+        for prompt in PROMPTS {
+            let static_cfg = GenConfig { max_new_tokens: 32, ..Default::default() };
+            let adaptive_cfg = GenConfig {
+                max_new_tokens: 32,
+                draft: DraftConfig {
+                    planner: Some(PlannerKind::Adaptive),
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let mut eng = Engine::new(
+                TargetModel::open(Rc::clone(&st)).unwrap(),
+                make_drafter(Rc::clone(&st), dn).unwrap(),
+            );
+            let reference = eng.generate(prompt, &static_cfg).unwrap();
+            let mut session = eng.start_session(prompt, &adaptive_cfg).unwrap();
+            let mut shapes = std::collections::BTreeSet::new();
+            let mut streamed: Vec<i32> = Vec::new();
+            while !session.finished() {
+                let ev = session.step().unwrap();
+                shapes.insert((session.cycle.plan.depth, session.cycle.plan.k_for(0)));
+                streamed.extend(ev.committed_tokens);
+            }
+            let r = session.finish();
+            assert_eq!(streamed, r.tokens, "cycle events must reassemble the output");
+            assert_eq!(
+                r.tokens, reference.tokens,
+                "{dn} on {prompt:?}: adaptive drafting must stay lossless at T=0"
+            );
+            if shapes.len() >= 2 {
+                shapes_varied = true;
+            }
+        }
+    }
+    assert!(
+        shapes_varied,
+        "the adaptive planner never changed the per-cycle tree shape on any run"
+    );
+}
+
+/// Adaptive drafting on the continuous batcher: per-slot plans must
+/// vary (observable through the plan gauges), streamed per-cycle
+/// events must reassemble each request's final text byte-for-byte, and
+/// greedy output must match the static-planner run exactly.
+#[test]
+fn adaptive_planner_varies_batched_slots_and_streams_reassemble() {
+    let (root, kind) = artifacts_root();
+    let Some((dir, batch)) = batched_serving_target(&root) else {
+        eprintln!("skipping: no serving target");
+        return;
+    };
+    let st = store_with(&dir, kind);
+    let make_reqs = || -> Vec<Request> {
+        (0..4)
+            .map(|i| {
+                let mut r = Request::new(i, PROMPTS[i as usize % 2]);
+                r.cfg.max_new_tokens = 20;
+                r
+            })
+            .collect()
+    };
+
+    // static reference: plans never move
+    let mut eng_s = BatchEngine::new(
+        Rc::clone(&st),
+        BatchConfig::new(batch, BatchMethod::FastEagle),
+    )
+    .unwrap();
+    let (mut ref_resps, m_s) = eng_s.run(make_reqs()).unwrap();
+    ref_resps.sort_by_key(|r| r.id);
+    assert!(m_s.plan_samples > 0, "static run records plan decisions");
+    assert_eq!(
+        m_s.plan_depth_min, m_s.plan_depth_max,
+        "a static plan must never change shape"
+    );
+
+    // adaptive run, stepped manually so per-cycle events are visible
+    let mut cfg = BatchConfig::new(batch, BatchMethod::FastEagle);
+    cfg.draft.planner = Some(PlannerKind::Adaptive);
+    let mut eng = BatchEngine::new(Rc::clone(&st), cfg).unwrap();
+    for r in make_reqs() {
+        eng.submit(r);
+    }
+    let mut metrics = ServingMetrics::default();
+    let mut finished = Vec::new();
+    let mut streamed: std::collections::BTreeMap<u64, Vec<i32>> = Default::default();
+    while eng.has_work() {
+        let out = eng.step_events(&mut metrics).unwrap();
+        for ev in &out.events {
+            streamed.entry(ev.id).or_default().extend(ev.tokens.iter().copied());
+        }
+        finished.extend(out.finished);
+    }
+    finished.sort_by_key(|r| r.id);
+    assert_eq!(finished.len(), ref_resps.len());
+    for (a, b) in finished.iter().zip(&ref_resps) {
+        assert_eq!(a.id, b.id);
+        assert!(a.error.is_none(), "{:?}", a.error);
+        assert_eq!(
+            a.text, b.text,
+            "request {}: adaptive drafting must stay lossless at T=0",
+            a.id
+        );
+        assert_eq!(
+            eng.decode(&streamed[&a.id]),
+            a.text,
+            "request {}: streamed cycles must reassemble the text byte-for-byte",
+            a.id
+        );
+    }
+    assert!(
+        metrics.plan_depth_max > metrics.plan_depth_min,
+        "the adaptive planner never changed shape on any slot \
+         (depth stayed at {})",
+        metrics.plan_depth_max
+    );
+    assert!(
+        metrics.accept_window_samples > 0,
+        "adaptive slots must report their acceptance window"
+    );
 }
 
 /// Mixed-method fleet: one pool serves a fasteagle and a vanilla

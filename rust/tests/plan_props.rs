@@ -1,0 +1,204 @@
+//! Property tests for the `DraftPlan` redesign: a `StaticPlanner` with
+//! the resolved default plan must reproduce the pre-redesign trees
+//! **byte-identically** — same nodes (token/parent/depth/level/backbone
+//! flag), same attached distributions, same consumption of the sampler
+//! stream — across every draft-output kind the three serving methods
+//! produce (fasteagle/eagle3 emit per-level `Levels` on the engine
+//! lane and pre-sampled `Chain`s on the batched lane, vanilla emits
+//! `None`) and under both greedy and stochastic candidate selection.
+//!
+//! The reference below is an independent reimplementation of the
+//! pre-`DraftPlan` rules (uniform top-k over the previous backbone
+//! node, optional `max_depth` truncation), not a call into the crate's
+//! expansion code, so drift in the plan wiring cannot cancel out.
+
+use fasteagle::draft::DraftOutput;
+use fasteagle::spec::tree::{sample_without_replacement, DraftTree, TreeNode};
+use fasteagle::spec::{DraftPlan, Sampler};
+use fasteagle::util::rng::{top_k_indices, Pcg64};
+
+/// Pre-redesign tree construction, reimplemented: truncate the draft to
+/// `max_depth` (when set), then attach the top-k (greedy) or k
+/// q-samples without replacement (stochastic) of each level to the
+/// previous backbone node. Chains keep one node per level; `None` is a
+/// root-only tree.
+fn legacy_from_draft(
+    pending: i32,
+    draft: DraftOutput,
+    k: usize,
+    max_depth: Option<usize>,
+    sampler: &mut Sampler,
+) -> DraftTree {
+    let root = TreeNode {
+        token: pending,
+        parent: 0,
+        depth: 0,
+        level: usize::MAX,
+        backbone: true,
+    };
+    let mut nodes = vec![root];
+    match draft {
+        DraftOutput::Levels(mut dists) => {
+            if let Some(d) = max_depth {
+                dists.truncate(d);
+            }
+            let mut backbone = 0usize;
+            for (level, q) in dists.iter().enumerate() {
+                let cand = if sampler.greedy() {
+                    top_k_indices(q, k)
+                } else {
+                    sample_without_replacement(q, k, sampler.rng_mut())
+                };
+                if cand.is_empty() {
+                    break;
+                }
+                let mut next_backbone = backbone;
+                for (rank, &tok) in cand.iter().enumerate() {
+                    if rank == 0 {
+                        next_backbone = nodes.len();
+                    }
+                    nodes.push(TreeNode {
+                        token: tok as i32,
+                        parent: backbone,
+                        depth: level + 1,
+                        level,
+                        backbone: rank == 0,
+                    });
+                }
+                backbone = next_backbone;
+            }
+            DraftTree { nodes, dists }
+        }
+        DraftOutput::Chain(mut toks, mut dists) => {
+            if let Some(d) = max_depth {
+                toks.truncate(d);
+                dists.truncate(d);
+            }
+            for (level, &tok) in toks.iter().enumerate() {
+                let parent = nodes.len() - 1;
+                nodes.push(TreeNode {
+                    token: tok,
+                    parent,
+                    depth: level + 1,
+                    level,
+                    backbone: true,
+                });
+            }
+            DraftTree { nodes, dists }
+        }
+        DraftOutput::None => DraftTree { nodes, dists: vec![] },
+    }
+}
+
+fn assert_trees_identical(a: &DraftTree, b: &DraftTree, ctx: &str) {
+    assert_eq!(a.nodes.len(), b.nodes.len(), "{ctx}: node count");
+    for (i, (x, y)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+        assert_eq!(x.token, y.token, "{ctx}: node {i} token");
+        assert_eq!(x.parent, y.parent, "{ctx}: node {i} parent");
+        assert_eq!(x.depth, y.depth, "{ctx}: node {i} depth");
+        assert_eq!(x.level, y.level, "{ctx}: node {i} level");
+        assert_eq!(x.backbone, y.backbone, "{ctx}: node {i} backbone");
+    }
+    assert_eq!(a.dists, b.dists, "{ctx}: attached distributions");
+}
+
+fn random_dists(rng: &mut Pcg64, levels: usize, vocab: usize) -> Vec<Vec<f32>> {
+    (0..levels)
+        .map(|_| {
+            let mut d: Vec<f32> = (0..vocab).map(|_| rng.next_f64() as f32 + 1e-3).collect();
+            let s: f32 = d.iter().sum();
+            d.iter_mut().for_each(|x| *x /= s);
+            d
+        })
+        .collect()
+}
+
+/// The plan a pre-redesign (k, max_depth) knob pair resolves to: depth
+/// defaults to the draft's native level count, branching is uniform k,
+/// budget non-binding — exactly what `DraftPlan::resolve` produces for
+/// an unset request.
+fn equivalent_plan(k: usize, max_depth: Option<usize>, native_levels: usize) -> DraftPlan {
+    DraftPlan::uniform(max_depth.unwrap_or(native_levels), k)
+}
+
+#[test]
+fn static_plan_reproduces_legacy_levels_trees_greedy_and_stochastic() {
+    let mut rng = Pcg64::new(41, 0);
+    for case in 0..300 {
+        let vocab = 4 + rng.below(24);
+        let levels = 1 + rng.below(6);
+        let k = 1 + rng.below(4);
+        let max_depth = if rng.below(2) == 0 { None } else { Some(1 + rng.below(6)) };
+        let temp = if case % 2 == 0 { 0.0 } else { 1.0 };
+        let seed = case as u64;
+        let dists = random_dists(&mut rng, levels, vocab);
+        let pending = rng.below(vocab) as i32;
+
+        // two samplers with the same seed: one feeds the legacy rules,
+        // one the plan path — identical trees must also consume the
+        // stochastic candidate stream identically
+        let mut s_legacy = Sampler::new(temp, seed);
+        let mut s_plan = Sampler::new(temp, seed);
+        let legacy = legacy_from_draft(
+            pending,
+            DraftOutput::Levels(dists.clone()),
+            k,
+            max_depth,
+            &mut s_legacy,
+        );
+        let plan = equivalent_plan(k, max_depth, levels);
+        let planned =
+            DraftTree::from_draft(pending, DraftOutput::Levels(dists), &plan, &mut s_plan);
+        let ctx = format!(
+            "levels case {case} (v={vocab} n={levels} k={k} depth={max_depth:?} T={temp})"
+        );
+        assert_trees_identical(&legacy, &planned, &ctx);
+        // the sampler streams stayed in lockstep: the next draw agrees
+        let probe = vec![1.0f32 / vocab as f32; vocab];
+        assert_eq!(
+            s_legacy.sample(&probe),
+            s_plan.sample(&probe),
+            "{ctx}: sampler streams diverged"
+        );
+    }
+}
+
+#[test]
+fn static_plan_reproduces_legacy_chain_and_vanilla_trees() {
+    let mut rng = Pcg64::new(42, 1);
+    for case in 0..200 {
+        let vocab = 4 + rng.below(16);
+        let levels = 1 + rng.below(5);
+        let max_depth = if rng.below(2) == 0 { None } else { Some(1 + rng.below(5)) };
+        let temp = if case % 2 == 0 { 0.0 } else { 0.8 };
+        let dists = random_dists(&mut rng, levels, vocab);
+        let toks: Vec<i32> = (0..levels).map(|_| rng.below(vocab) as i32).collect();
+        let pending = rng.below(vocab) as i32;
+
+        // batched-lane / SpS shape: a pre-sampled chain (k irrelevant)
+        let mut s_legacy = Sampler::new(temp, case as u64);
+        let mut s_plan = Sampler::new(temp, case as u64);
+        let legacy = legacy_from_draft(
+            pending,
+            DraftOutput::Chain(toks.clone(), dists.clone()),
+            1,
+            max_depth,
+            &mut s_legacy,
+        );
+        let plan = equivalent_plan(1, max_depth, levels);
+        let planned = DraftTree::from_draft(
+            pending,
+            DraftOutput::Chain(toks, dists),
+            &plan,
+            &mut s_plan,
+        );
+        let ctx = format!("chain case {case} (n={levels} depth={max_depth:?})");
+        assert_trees_identical(&legacy, &planned, &ctx);
+
+        // vanilla shape: no draft at all
+        let legacy = legacy_from_draft(pending, DraftOutput::None, 3, max_depth, &mut s_legacy);
+        let plan = equivalent_plan(3, max_depth, 0);
+        let planned = DraftTree::from_draft(pending, DraftOutput::None, &plan, &mut s_plan);
+        assert_trees_identical(&legacy, &planned, &format!("vanilla case {case}"));
+    }
+}

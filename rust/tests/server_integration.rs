@@ -80,9 +80,21 @@ fn server_roundtrip_concurrency_and_shutdown() {
     let v = query("not json at all");
     assert!(v.get("error").is_some());
 
-    // missing prompt -> error
+    // missing prompt -> structured error naming the field
     let v = query(r#"{"max_new": 4}"#);
     assert!(v.get("error").is_some());
+    assert_eq!(v.get("field").and_then(Json::as_str), Some("prompt"));
+
+    // bad "draft" objects die with the offending field and a reason,
+    // and the connection stays usable afterwards
+    let v = query(r#"{"prompt":"p","draft":{"planner":"warp"}}"#);
+    let err = v.get("error").and_then(Json::as_str).expect("error reply");
+    assert!(err.contains("warp"), "reason should quote the bad value: {err}");
+    assert_eq!(v.get("field").and_then(Json::as_str), Some("draft.planner"));
+    let v = query(r#"{"prompt":"p","draft":{"depth":0}}"#);
+    assert_eq!(v.get("field").and_then(Json::as_str), Some("draft.depth"));
+    let v = query(r#"{"prompt":"p","draft":{"chaos":1}}"#);
+    assert_eq!(v.get("field").and_then(Json::as_str), Some("draft"));
 
     // Two in-flight requests: the long one is admitted first, the short
     // one second. With batch >= 2 they decode concurrently and the short
@@ -199,12 +211,14 @@ fn server_streams_cycle_frames_byte_identical() {
         .unwrap()
         .to_string();
 
-    // same request with "stream": true — frames, then the final response
+    // same request with "stream": true and the adaptive draft planner —
+    // frames, then the final response; adaptive drafting reshapes the
+    // per-cycle chains but must not change a greedy output
     let stream = TcpStream::connect(SADDR).unwrap();
     let mut w = stream.try_clone().unwrap();
     writeln!(
         w,
-        r#"{{"prompt":"USER: tell me about machine learning and the fast cache.\nASSISTANT:","max_new":24,"stream":true}}"#
+        r#"{{"prompt":"USER: tell me about machine learning and the fast cache.\nASSISTANT:","max_new":24,"stream":true,"draft":{{"planner":"adaptive"}}}}"#
     )
     .unwrap();
     let mut r = BufReader::new(stream);
@@ -244,8 +258,18 @@ fn server_streams_cycle_frames_byte_identical() {
     assert_eq!(concat, streamed_text, "frames must reassemble the final text exactly");
     assert_eq!(
         streamed_text, ref_text,
-        "streaming must not change the generated output"
+        "streaming (with adaptive drafting) must not change the generated output"
     );
+
+    // the plan gauges saw the cycles (both the static reference request
+    // and the adaptive streaming one record per-cycle plan decisions)
+    let stats = query_at(SADDR, r#"{"cmd":"stats"}"#);
+    assert!(
+        stats.get("plan_depth_mean").and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+        "{stats:?}"
+    );
+    assert!(stats.get("plan_nodes_mean").is_some());
+    assert!(stats.get("accept_window_mean").is_some());
 
     let v = query_at(SADDR, r#"{"cmd":"shutdown"}"#);
     assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
