@@ -21,11 +21,14 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::runtime::manifest::ExecManifest;
 use crate::runtime::tensor::HostTensor;
 use crate::runtime::weights::write_few;
 use crate::util::rng::Pcg64;
 
 use super::hlo::builder::{H, HloBuilder, Ty};
+use super::hlo::parser::parse_module;
+use super::hlo::verify;
 
 // fixture model dimensions (single head keeps the lowered graphs small;
 // everything downstream reads them from spec.json, not from here)
@@ -643,6 +646,14 @@ pub fn generate_target_dir(dir: &Path, target: &str, seed: u64, batch_sizes: &[u
 
     let mut names = Vec::new();
     for (name, hlo, io) in &plan {
+        // verify every emitted executable before it lands on disk — a
+        // builder regression should fail generation, not a later test
+        let module = parse_module(hlo).with_context(|| format!("fixture {name}: parse"))?;
+        let manifest =
+            ExecManifest::parse(io).with_context(|| format!("fixture {name}: manifest"))?;
+        let mut diags = verify::verify_module(&module);
+        diags.extend(verify::verify_manifest(&module, &manifest));
+        verify::ensure_ok(&format!("fixture {name}"), &diags)?;
         std::fs::write(hlo_dir.join(format!("{name}.hlo.txt")), hlo)?;
         std::fs::write(hlo_dir.join(format!("{name}.io.json")), io)?;
         names.push(name.clone());

@@ -61,18 +61,35 @@ pub struct Value {
 }
 
 impl Value {
+    // Always-on guards (not debug_assert: the tier-1 build is
+    // `--release`, where a silently mis-sized buffer miscomputes).
+    // Inside `evaluate` the per-instruction `check_shape` catches
+    // mismatches first with the instruction named; these cover direct
+    // constructors outside the evaluator.
     pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Value {
-        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "f32 buffer length does not match shape {dims:?}"
+        );
         Value { dims, buf: Buf::F32(data) }
     }
 
     pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Value {
-        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "s32 buffer length does not match shape {dims:?}"
+        );
         Value { dims, buf: Buf::I32(data) }
     }
 
     pub fn u64(dims: Vec<usize>, data: Vec<u64>) -> Value {
-        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "u64 buffer length does not match shape {dims:?}"
+        );
         Value { dims, buf: Buf::U64(data) }
     }
 
@@ -149,6 +166,13 @@ fn check_shape(v: &Value, shape: &Shape, what: &str) -> Result<()> {
             v.dims,
             shape.ty,
             shape.dims
+        );
+    }
+    if v.buf.len() != v.numel() {
+        bail!(
+            "{what}: buffer holds {} element(s) for shape {:?}",
+            v.buf.len(),
+            v.dims
         );
     }
     Ok(())
@@ -336,6 +360,9 @@ fn eval_instr(
             Value { dims: out_dims, buf: Buf::Pred(vec![*v; n]) }
         }
         Op::Iota { dim } => {
+            if *dim >= out_dims.len() {
+                bail!("iota_dimension {dim} out of range for rank {}", out_dims.len());
+            }
             let st = strides(&out_dims);
             let n: usize = out_dims.iter().product();
             let mut data = vec![0i32; n];
@@ -496,6 +523,11 @@ fn eval_instr(
             let mut starts = Vec::with_capacity(n_idx);
             for i in 0..n_idx {
                 let s = operand(ins, 2 + i, env)?;
+                // one scalar start per dimension, as for dynamic-slice —
+                // a vector here is a lowering bug, not data to truncate
+                if !s.dims.is_empty() {
+                    bail!("dynamic-update-slice start {i} is not a scalar: {:?}", s.dims);
+                }
                 let v = s.i32s().context("dus start index")?;
                 starts.push(*v.first().context("empty dus start")? as i64);
             }
@@ -591,9 +623,13 @@ fn eval_broadcast(a: &Value, mapping: &[usize], out_dims: Vec<usize>) -> Result<
     let in_st = strides(&a.dims);
     // per-output-dim input stride (0 when the dim is new)
     let mut eff = vec![0usize; out_dims.len()];
+    let mut used = vec![false; out_dims.len()];
     for (in_d, &out_d) in mapping.iter().enumerate() {
         if out_d >= out_dims.len() || a.dims[in_d] != out_dims[out_d] {
             bail!("broadcast mapping {mapping:?}: input {:?} -> output {:?}", a.dims, out_dims);
+        }
+        if std::mem::replace(&mut used[out_d], true) {
+            bail!("broadcast mapping {mapping:?} repeats output dim {out_d}");
         }
         eff[out_d] = in_st[in_d];
     }
@@ -621,6 +657,17 @@ fn eval_broadcast(a: &Value, mapping: &[usize], out_dims: Vec<usize>) -> Result<
 fn eval_transpose(a: &Value, perm: &[usize], out_dims: Vec<usize>) -> Result<Value> {
     if perm.len() != a.dims.len() {
         bail!("transpose perm {:?} rank-mismatch {:?}", perm, a.dims);
+    }
+    let mut seen = vec![false; perm.len()];
+    for &p in perm {
+        if p >= a.dims.len() || std::mem::replace(&mut seen[p], true) {
+            bail!("transpose {perm:?} is not a permutation of 0..{}", a.dims.len());
+        }
+    }
+    if out_dims.len() != perm.len()
+        || perm.iter().enumerate().any(|(i, &p)| out_dims[i] != a.dims[p])
+    {
+        bail!("transpose output {out_dims:?} inconsistent with input {:?} perm {perm:?}", a.dims);
     }
     let in_st = strides(&a.dims);
     let out_st = strides(&out_dims);
@@ -651,12 +698,20 @@ fn eval_transpose(a: &Value, perm: &[usize], out_dims: Vec<usize>) -> Result<Val
 }
 
 fn eval_slice(a: &Value, ranges: &[(usize, usize, usize)], out_dims: Vec<usize>) -> Result<Value> {
-    if ranges.len() != a.dims.len() {
+    if ranges.len() != a.dims.len() || out_dims.len() != a.dims.len() {
         bail!("slice rank mismatch");
     }
     for (d, &(s, l, st)) in ranges.iter().enumerate() {
         if st == 0 || l > a.dims[d] || s > l {
             bail!("bad slice range {:?} for dim {d} of {:?}", ranges[d], a.dims);
+        }
+        let want = (l - s).div_ceil(st);
+        if out_dims[d] != want {
+            bail!(
+                "slice output dim {d} is {}, range {:?} yields {want}",
+                out_dims[d],
+                ranges[d]
+            );
         }
     }
     let in_st = strides(&a.dims);
@@ -689,8 +744,23 @@ fn eval_slice(a: &Value, ranges: &[(usize, usize, usize)], out_dims: Vec<usize>)
 fn eval_concat(vals: &[&Rc<Value>], dim: usize, out_dims: Vec<usize>) -> Result<Value> {
     let first = vals.first().context("empty concatenate")?;
     let rank = first.dims.len();
-    if dim >= rank {
+    if dim >= rank || out_dims.len() != rank {
         bail!("concatenate dim {dim} out of range");
+    }
+    let mut total = 0usize;
+    for v in vals {
+        if v.dims.len() != rank {
+            bail!("concatenate rank mismatch: {:?} vs {:?}", v.dims, first.dims);
+        }
+        for d in 0..rank {
+            if d != dim && v.dims[d] != out_dims[d] {
+                bail!("concatenate non-concat dim {d} differs: {:?} vs {out_dims:?}", v.dims);
+            }
+        }
+        total += v.dims[dim];
+    }
+    if total != out_dims[dim] {
+        bail!("concatenate dim {dim} sums to {total}, output says {}", out_dims[dim]);
     }
     // outer = product of dims before `dim`; each input contributes a
     // contiguous chunk of (its dim size * inner) per outer step
@@ -733,6 +803,25 @@ fn eval_gather(
     let op_dims = &operand.dims;
     let op_st = strides(op_dims);
     let idx_st = strides(&indices.dims);
+    if g.slice_sizes.len() != op_dims.len() {
+        bail!("gather: slice_sizes {:?} rank-mismatch operand {op_dims:?}", g.slice_sizes);
+    }
+    for (d, (&sz, &od)) in g.slice_sizes.iter().zip(op_dims).enumerate() {
+        // also guards the unsigned `od - sz` start-clamp below
+        if sz > od {
+            bail!("gather: slice_sizes[{d}] = {sz} exceeds operand dim {od}");
+        }
+    }
+    if g.index_vector_dim > indices.dims.len() {
+        bail!(
+            "gather: index_vector_dim {} out of range for indices rank {}",
+            g.index_vector_dim,
+            indices.dims.len()
+        );
+    }
+    if g.start_index_map.iter().any(|&d| d >= op_dims.len()) {
+        bail!("gather: start_index_map {:?} out of operand rank", g.start_index_map);
+    }
     // implicit trailing index-vector dim of size 1
     let ivd_size = if g.index_vector_dim == indices.dims.len() {
         1
@@ -744,6 +833,9 @@ fn eval_gather(
     }
     // output dims split into batch dims (from indices) and offset dims
     let out_rank = out_dims.len();
+    if g.offset_dims.iter().any(|&o| o >= out_rank) {
+        bail!("gather: offset_dims {:?} out of output rank {out_rank}", g.offset_dims);
+    }
     let batch_out_dims: Vec<usize> =
         (0..out_rank).filter(|d| !g.offset_dims.contains(d)).collect();
     // offset output dims map, in order, to operand dims not collapsed
@@ -751,6 +843,23 @@ fn eval_gather(
         (0..op_dims.len()).filter(|d| !g.collapsed_slice_dims.contains(d)).collect();
     if offset_op_dims.len() != g.offset_dims.len() {
         bail!("gather: offset_dims vs collapsed_slice_dims mismatch");
+    }
+    for (&o, &d) in g.offset_dims.iter().zip(&offset_op_dims) {
+        if out_dims[o] != g.slice_sizes[d] {
+            bail!(
+                "gather: output dim {o} is {}, slice size for operand dim {d} is {}",
+                out_dims[o],
+                g.slice_sizes[d]
+            );
+        }
+    }
+    let batch_expect: Vec<usize> = (0..indices.dims.len())
+        .filter(|&d| d != g.index_vector_dim)
+        .map(|d| indices.dims[d])
+        .collect();
+    let batch_got: Vec<usize> = batch_out_dims.iter().map(|&d| out_dims[d]).collect();
+    if batch_got != batch_expect {
+        bail!("gather: output batch dims {batch_got:?} != indices batch dims {batch_expect:?}");
     }
 
     let n: usize = out_dims.iter().product();
@@ -805,6 +914,16 @@ fn eval_reduce(
     op: BinOp,
     out_dims: Vec<usize>,
 ) -> Result<Value> {
+    if let Some(&d) = red_dims.iter().find(|&&d| d >= a.dims.len()) {
+        bail!("reduce dimension {d} out of range for rank {}", a.dims.len());
+    }
+    let kept_dims: Vec<usize> = (0..a.dims.len())
+        .filter(|d| !red_dims.contains(d))
+        .map(|d| a.dims[d])
+        .collect();
+    if kept_dims != out_dims {
+        bail!("reduce output {out_dims:?} != kept dims {kept_dims:?}");
+    }
     // Fast path for the overwhelmingly common form in our lowered
     // graphs: a single f32 reduction over the *last* axis (softmax
     // row-sum/row-max). The input rows are contiguous in row-major

@@ -1,7 +1,12 @@
-//! In-process HLO substrate: text parser, CPU evaluator, and a
-//! programmatic HLO-text builder (used by the fixture generator and the
-//! interpreter property tests).
+//! In-process HLO substrate: text parser, CPU evaluator, static
+//! verifier, and a programmatic HLO-text builder (used by the fixture
+//! generator and the interpreter property tests).
+
+// This layer is the substrate everything else evaluates on; a stray
+// unwrap here turns a shape bug into a panic instead of a diagnostic.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod builder;
 pub mod eval;
 pub mod parser;
+pub mod verify;

@@ -10,7 +10,7 @@
 //! too. Unsupported opcodes are a hard, named error at compile time —
 //! never a silent wrong answer at execution time.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use anyhow::{bail, Context, Result};
 
@@ -516,7 +516,9 @@ pub fn parse_module(text: &str) -> Result<HloModule> {
             if is_entry {
                 entry = Some(name.clone());
             }
-            computations.insert(name, comp);
+            if computations.insert(name.clone(), comp).is_some() {
+                bail!("line {}: duplicate computation name {name:?}", lineno + 1);
+            }
             continue;
         }
         if line.ends_with('{') {
@@ -557,6 +559,12 @@ fn finish_computation(name: String, instrs: Vec<Instr>) -> Result<Computation> {
     if instrs.is_empty() {
         bail!("empty computation");
     }
+    let mut names = HashSet::with_capacity(instrs.len());
+    for ins in &instrs {
+        if !names.insert(ins.name.as_str()) {
+            bail!("duplicate instruction name {:?}", ins.name);
+        }
+    }
     let mut params: Vec<(usize, usize)> = Vec::new();
     for (i, ins) in instrs.iter().enumerate() {
         if let Op::Parameter(n) = ins.op {
@@ -564,6 +572,11 @@ fn finish_computation(name: String, instrs: Vec<Instr>) -> Result<Computation> {
         }
     }
     params.sort_unstable();
+    for w in params.windows(2) {
+        if w[0].0 == w[1].0 {
+            bail!("duplicate parameter number {}", w[0].0);
+        }
+    }
     for (want, (got, _)) in params.iter().enumerate() {
         if *got != want {
             bail!("parameter numbers not dense: {:?}", params.iter().map(|p| p.0).collect::<Vec<_>>());
@@ -705,5 +718,47 @@ ENTRY %main {
         assert!(matches!(c.op, Op::ConstF32(v) if v == -1e9));
         let i = parse_instr("%i = s32[] constant(-3)").unwrap();
         assert!(matches!(i.op, Op::ConstS32(-3)));
+    }
+
+    #[test]
+    fn rejects_duplicate_computation_name() {
+        let e = parse_module(
+            "HloModule dup\n\
+             %f {\n  ROOT %a = f32[] constant(1)\n}\n\
+             %f {\n  ROOT %b = f32[] constant(2)\n}\n\
+             ENTRY %main {\n  ROOT %c = f32[] constant(3)\n}\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate computation name"), "{e:#}");
+    }
+
+    #[test]
+    fn rejects_duplicate_instruction_name() {
+        let e = parse_module(
+            "ENTRY %main {\n  %x = f32[] constant(1)\n  %x = f32[] constant(2)\n\
+             \x20 ROOT %y = f32[] add(%x, %x)\n}\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate instruction name"), "{e:#}");
+    }
+
+    #[test]
+    fn rejects_duplicate_parameter_number() {
+        let e = parse_module(
+            "ENTRY %main {\n  %p0 = f32[] parameter(0)\n  %q0 = f32[] parameter(0)\n\
+             \x20 ROOT %y = f32[] add(%p0, %q0)\n}\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate parameter number"), "{e:#}");
+    }
+
+    #[test]
+    fn rejects_non_dense_parameter_numbers() {
+        let e = parse_module(
+            "ENTRY %main {\n  %p0 = f32[] parameter(0)\n  %p2 = f32[] parameter(2)\n\
+             \x20 ROOT %y = f32[] add(%p0, %p2)\n}\n",
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("not dense"), "{e:#}");
     }
 }

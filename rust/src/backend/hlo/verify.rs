@@ -1,0 +1,1164 @@
+//! Static HLO verifier: shape/dtype inference and validation over the
+//! parsed IR, run *before* a module is ever evaluated.
+//!
+//! The parser ([`super::parser`]) trusts declared shapes, and the
+//! evaluator ([`super::eval`]) discovers disagreements mid-execution —
+//! in the worst case as an index panic. This pass re-derives every
+//! instruction's shape and dtype from its operands' *declared* shapes
+//! using the same semantics the evaluator implements, and reports every
+//! disagreement as a structured [`HloDiag`] naming the computation,
+//! instruction and the rule that fired. It also checks dataflow
+//! (defined-before-use, duplicate names, dense parameter numbering,
+//! unused instructions) and attribute validity (slice bounds,
+//! permutations, gather/dot dimension numbers, reduce bodies, rng state
+//! shape), and cross-checks a module against its `.io.json` manifest
+//! ([`verify_manifest`]).
+//!
+//! Soundness contract (property-tested in `tests/verify_props.rs`):
+//! builder-emitted programs always pass, and a program that passes
+//! never panics in `eval` on shape-conforming inputs.
+//!
+//! The interpreter backend runs this at `Backend::compile`
+//! (`backend::interp`), the fixture generator on every emitted
+//! executable (`backend::fixture`), and the `fasteagle check` CLI on a
+//! whole artifact directory.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::ExecManifest;
+use crate::runtime::tensor::Dtype;
+
+use super::parser::{BinOp, Computation, HloModule, Instr, Op, PrimType, Shape, UnOp};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+/// One verifier finding, anchored to an instruction.
+#[derive(Debug, Clone)]
+pub struct HloDiag {
+    pub severity: Severity,
+    pub computation: String,
+    /// offending instruction name (empty for computation-level findings)
+    pub instruction: String,
+    /// stable rule identifier, e.g. `shape/dot` or `dataflow/undefined`
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for HloDiag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        if self.instruction.is_empty() {
+            write!(f, "{sev}[{}] {}: {}", self.rule, self.computation, self.message)
+        } else {
+            write!(
+                f,
+                "{sev}[{}] {}/%{}: {}",
+                self.rule, self.computation, self.instruction, self.message
+            )
+        }
+    }
+}
+
+pub fn has_errors(diags: &[HloDiag]) -> bool {
+    diags.iter().any(|d| d.severity == Severity::Error)
+}
+
+/// Collapse error-severity diagnostics into one `anyhow` error listing
+/// every finding (warnings pass). `what` names the module being checked.
+pub fn ensure_ok(what: &str, diags: &[HloDiag]) -> Result<()> {
+    let errs: Vec<String> = diags
+        .iter()
+        .filter(|d| d.severity == Severity::Error)
+        .map(HloDiag::to_string)
+        .collect();
+    if errs.is_empty() {
+        return Ok(());
+    }
+    bail!("{what}: {} HLO verifier error(s):\n  {}", errs.len(), errs.join("\n  "))
+}
+
+fn is_tuple_valued(ins: &Instr) -> bool {
+    matches!(ins.op, Op::Tuple | Op::RngBitGenerator)
+}
+
+/// Ops whose `operands` field holds literal text (a parameter number or
+/// a constant literal), not instruction names.
+fn has_name_operands(op: &Op) -> bool {
+    !matches!(
+        op,
+        Op::Parameter(_)
+            | Op::ConstF32(_)
+            | Op::ConstS32(_)
+            | Op::ConstU32(_)
+            | Op::ConstU64(_)
+            | Op::ConstPred(_)
+    )
+}
+
+struct Ck<'a> {
+    module: &'a HloModule,
+    comp: &'a Computation,
+    diags: &'a mut Vec<HloDiag>,
+}
+
+impl Ck<'_> {
+    fn push(&mut self, severity: Severity, instruction: &str, rule: &'static str, message: String) {
+        self.diags.push(HloDiag {
+            severity,
+            computation: self.comp.name.clone(),
+            instruction: instruction.to_string(),
+            rule,
+            message,
+        });
+    }
+
+    fn err(&mut self, ins: &Instr, rule: &'static str, message: String) {
+        self.push(Severity::Error, &ins.name, rule, message);
+    }
+}
+
+/// Verify every computation of a parsed module. Returns all findings;
+/// use [`ensure_ok`] / [`has_errors`] to gate on error severity.
+pub fn verify_module(module: &HloModule) -> Vec<HloDiag> {
+    let mut diags = Vec::new();
+    if !module.computations.contains_key(&module.entry) {
+        diags.push(HloDiag {
+            severity: Severity::Error,
+            computation: module.entry.clone(),
+            instruction: String::new(),
+            rule: "dataflow/entry",
+            message: format!("entry computation {:?} not found in module", module.entry),
+        });
+        return diags;
+    }
+    let mut names: Vec<&str> = module.computations.keys().map(String::as_str).collect();
+    names.sort_unstable();
+    for name in names {
+        if let Some(comp) = module.computations.get(name) {
+            let mut ck = Ck { module, comp, diags: &mut diags };
+            verify_computation(&mut ck);
+        }
+    }
+    diags
+}
+
+fn verify_computation(ck: &mut Ck<'_>) {
+    let comp = ck.comp;
+    let mut defined: HashMap<&str, &Instr> = HashMap::with_capacity(comp.instrs.len());
+    for ins in &comp.instrs {
+        if defined.contains_key(ins.name.as_str()) {
+            ck.err(
+                ins,
+                "dataflow/duplicate-name",
+                format!("instruction name {:?} defined more than once", ins.name),
+            );
+        }
+        check_instr(ck, ins, &defined);
+        defined.insert(ins.name.as_str(), ins);
+    }
+    check_params(ck);
+    check_reachability(ck);
+}
+
+/// Parameter numbers must be dense 0..k and unique (the evaluator binds
+/// positionally).
+fn check_params(ck: &mut Ck<'_>) {
+    let mut nums: Vec<(usize, &Instr)> = Vec::new();
+    for ins in &ck.comp.instrs {
+        if let Op::Parameter(n) = ins.op {
+            nums.push((n, ins));
+        }
+    }
+    nums.sort_by_key(|(n, _)| *n);
+    let mut seen = HashSet::new();
+    for &(n, ins) in &nums {
+        if !seen.insert(n) {
+            ck.err(ins, "dataflow/param-numbering", format!("duplicate parameter number {n}"));
+        }
+        if is_tuple_valued(ins) || ins.tuple_shapes.is_some() {
+            ck.err(ins, "tuple/param", "tuple-shaped parameters are unsupported".to_string());
+        }
+    }
+    for (want, &(got, ins)) in nums.iter().enumerate() {
+        if got != want && seen.len() == nums.len() {
+            ck.err(
+                ins,
+                "dataflow/param-numbering",
+                format!(
+                    "parameter numbers not dense: {:?}",
+                    nums.iter().map(|(n, _)| *n).collect::<Vec<_>>()
+                ),
+            );
+            break;
+        }
+    }
+}
+
+/// Everything not feeding the root (directly or transitively) is dead;
+/// flag it as a warning so drifted emitters get noticed.
+fn check_reachability(ck: &mut Ck<'_>) {
+    let comp = ck.comp;
+    let by_name: HashMap<&str, usize> = comp
+        .instrs
+        .iter()
+        .enumerate()
+        .map(|(i, ins)| (ins.name.as_str(), i))
+        .collect();
+    let mut reached = vec![false; comp.instrs.len()];
+    let mut stack = vec![comp.root];
+    while let Some(i) = stack.pop() {
+        if std::mem::replace(&mut reached[i], true) {
+            continue;
+        }
+        let ins = &comp.instrs[i];
+        if !has_name_operands(&ins.op) {
+            continue;
+        }
+        for o in &ins.operands {
+            if let Some(&j) = by_name.get(o.as_str()) {
+                stack.push(j);
+            }
+        }
+    }
+    for (i, ins) in comp.instrs.iter().enumerate() {
+        if !reached[i] && !matches!(ins.op, Op::Parameter(_)) {
+            ck.push(
+                Severity::Warning,
+                &ins.name,
+                "dataflow/unused",
+                "instruction does not feed the root".to_string(),
+            );
+        }
+    }
+}
+
+fn ty_of(d: Dtype) -> PrimType {
+    match d {
+        Dtype::F32 => PrimType::F32,
+        Dtype::I32 => PrimType::S32,
+    }
+}
+
+/// Cross-check a module's entry signature against its `.io.json`
+/// manifest: parameter count/shape/dtype and root-tuple outputs. Also
+/// rejects output dtypes the host boundary cannot carry (u32/u64/pred —
+/// `interp::to_host` only moves f32/s32).
+pub fn verify_manifest(module: &HloModule, manifest: &ExecManifest) -> Vec<HloDiag> {
+    let mut diags = Vec::new();
+    let Some(entry) = module.computations.get(&module.entry) else {
+        return diags; // verify_module already reported the missing entry
+    };
+    let mut mdiag = |instruction: &str, rule: &'static str, message: String| {
+        diags.push(HloDiag {
+            severity: Severity::Error,
+            computation: module.entry.clone(),
+            instruction: instruction.to_string(),
+            rule,
+            message,
+        });
+    };
+    if entry.params.len() != manifest.inputs.len() {
+        mdiag(
+            "",
+            "manifest/params",
+            format!(
+                "{}: module has {} parameters, manifest lists {} inputs",
+                manifest.name,
+                entry.params.len(),
+                manifest.inputs.len()
+            ),
+        );
+        return diags;
+    }
+    for (i, spec) in manifest.inputs.iter().enumerate() {
+        let p = &entry.instrs[entry.params[i]];
+        if p.shape.dims != spec.shape || p.shape.ty != ty_of(spec.dtype) {
+            mdiag(
+                &p.name.clone(),
+                "manifest/params",
+                format!(
+                    "{}: parameter {i} ({:?}) is {:?}/{:?}, manifest says {:?}/{:?}",
+                    manifest.name, spec.name, p.shape.ty, p.shape.dims, spec.dtype, spec.shape
+                ),
+            );
+        }
+    }
+    let root = &entry.instrs[entry.root];
+    let parts: Vec<Shape> = if is_tuple_valued(root) {
+        root.tuple_shapes.clone().unwrap_or_default()
+    } else {
+        vec![root.shape.clone()]
+    };
+    if parts.len() != manifest.outputs.len() {
+        mdiag(
+            &root.name.clone(),
+            "manifest/outputs",
+            format!(
+                "{}: root produces {} values, manifest lists {} outputs",
+                manifest.name,
+                parts.len(),
+                manifest.outputs.len()
+            ),
+        );
+        return diags;
+    }
+    for (i, (part, spec)) in parts.iter().zip(&manifest.outputs).enumerate() {
+        if !matches!(part.ty, PrimType::F32 | PrimType::S32) {
+            mdiag(
+                &root.name.clone(),
+                "manifest/output-dtype",
+                format!(
+                    "{}: output {i} ({:?}) is {:?} — the host boundary carries only f32/s32 \
+                     (convert before the root)",
+                    manifest.name, spec.name, part.ty
+                ),
+            );
+            continue;
+        }
+        if part.dims != spec.shape || part.ty != ty_of(spec.dtype) {
+            mdiag(
+                &root.name.clone(),
+                "manifest/outputs",
+                format!(
+                    "{}: output {i} ({:?}) is {:?}/{:?}, manifest says {:?}/{:?}",
+                    manifest.name, spec.name, part.ty, part.dims, spec.dtype, spec.shape
+                ),
+            );
+        }
+    }
+    diags
+}
+
+/// Resolve every operand to its defining instruction, or report the
+/// first undefined one and bail out of shape checking for this
+/// instruction (dataflow errors would otherwise cascade).
+fn resolve<'a>(
+    ck: &mut Ck<'_>,
+    ins: &Instr,
+    defined: &HashMap<&str, &'a Instr>,
+) -> Option<Vec<&'a Instr>> {
+    let mut out = Vec::with_capacity(ins.operands.len());
+    for o in &ins.operands {
+        match defined.get(o.as_str()) {
+            Some(d) => out.push(*d),
+            None => {
+                ck.err(
+                    ins,
+                    "dataflow/undefined",
+                    format!("operand {o:?} is not defined before use"),
+                );
+                return None;
+            }
+        }
+    }
+    Some(out)
+}
+
+fn want_arity(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr], n: usize) -> bool {
+    if ops.len() != n {
+        ck.err(
+            ins,
+            "dataflow/operand-count",
+            format!("expected {n} operand(s), got {}", ops.len()),
+        );
+        return false;
+    }
+    true
+}
+
+fn shape_eq(ck: &mut Ck<'_>, ins: &Instr, rule: &'static str, got: &Shape) {
+    if ins.shape.dims != got.dims || ins.shape.ty != got.ty {
+        ck.err(
+            ins,
+            rule,
+            format!(
+                "declared {:?}/{:?}, inferred {:?}/{:?}",
+                ins.shape.ty, ins.shape.dims, got.ty, got.dims
+            ),
+        );
+    }
+}
+
+fn check_instr(ck: &mut Ck<'_>, ins: &Instr, defined: &HashMap<&str, &Instr>) {
+    // tuple discipline: only `tuple` / `rng-bit-generator` may carry a
+    // tuple shape, and tuple-valued instructions are consumable only by
+    // get-tuple-element (the evaluator never puts them in `env`)
+    if is_tuple_valued(ins) {
+        if ins.tuple_shapes.is_none() {
+            ck.err(ins, "tuple/shape", "tuple-valued instruction lacks a tuple shape".to_string());
+            return;
+        }
+    } else if ins.tuple_shapes.is_some() {
+        ck.err(
+            ins,
+            "tuple/shape",
+            "only tuple/rng-bit-generator may be tuple-shaped".to_string(),
+        );
+        return;
+    }
+    if !has_name_operands(&ins.op) {
+        check_leaf(ck, ins);
+        return;
+    }
+    let Some(ops) = resolve(ck, ins, defined) else { return };
+    for o in &ops {
+        if is_tuple_valued(o) && !matches!(ins.op, Op::GetTupleElement(_)) {
+            ck.err(
+                ins,
+                "tuple/discipline",
+                format!("operand {:?} is tuple-valued; only get-tuple-element may consume it", o.name),
+            );
+            return;
+        }
+    }
+    match &ins.op {
+        Op::Parameter(_)
+        | Op::ConstF32(_)
+        | Op::ConstS32(_)
+        | Op::ConstU32(_)
+        | Op::ConstU64(_)
+        | Op::ConstPred(_) => unreachable!("leaf ops handled above"),
+        Op::Iota { dim } => check_iota(ck, ins, *dim),
+        Op::Convert => check_convert(ck, ins, &ops),
+        Op::Unary(u) => check_unary(ck, ins, &ops, *u),
+        Op::Binary(b) => check_binary(ck, ins, &ops, *b),
+        Op::Compare(_) => check_compare(ck, ins, &ops),
+        Op::Select => check_select(ck, ins, &ops),
+        Op::Dot(_) => check_dot(ck, ins, &ops),
+        Op::Reshape => check_reshape(ck, ins, &ops),
+        Op::Broadcast(_) => check_broadcast(ck, ins, &ops),
+        Op::Transpose(_) => check_transpose(ck, ins, &ops),
+        Op::Slice(_) => check_slice(ck, ins, &ops),
+        Op::Concatenate(_) => check_concat(ck, ins, &ops),
+        Op::Gather(_) => check_gather(ck, ins, &ops),
+        Op::Reduce { .. } => check_reduce(ck, ins, &ops),
+        Op::DynamicUpdateSlice => check_dus(ck, ins, &ops),
+        Op::DynamicSlice(_) => check_dynamic_slice(ck, ins, &ops),
+        Op::RngBitGenerator => check_rng(ck, ins, &ops),
+        Op::GetTupleElement(_) => check_gte(ck, ins, &ops),
+        Op::Tuple => check_tuple(ck, ins, &ops),
+    }
+}
+
+/// Leaf ops (parameter / constant): the declared shape is the source of
+/// truth, but the literal kind must agree with the declared dtype and
+/// iota needs a valid dimension.
+fn check_leaf(ck: &mut Ck<'_>, ins: &Instr) {
+    let want = match &ins.op {
+        Op::ConstF32(_) => Some(PrimType::F32),
+        Op::ConstS32(_) => Some(PrimType::S32),
+        Op::ConstU32(_) => Some(PrimType::U32),
+        Op::ConstU64(_) => Some(PrimType::U64),
+        Op::ConstPred(_) => Some(PrimType::Pred),
+        _ => None,
+    };
+    if let Some(w) = want {
+        if ins.shape.ty != w {
+            ck.err(
+                ins,
+                "dtype/constant",
+                format!("{w:?} literal declared as {:?}", ins.shape.ty),
+            );
+        }
+    }
+}
+
+fn check_iota(ck: &mut Ck<'_>, ins: &Instr, dim: usize) {
+    if !matches!(ins.shape.ty, PrimType::S32 | PrimType::F32) {
+        ck.err(ins, "dtype/iota", format!("unsupported iota element type {:?}", ins.shape.ty));
+    }
+    if dim >= ins.shape.dims.len() {
+        ck.err(
+            ins,
+            "attr/iota",
+            format!("iota_dimension {dim} out of range for rank {}", ins.shape.dims.len()),
+        );
+    }
+}
+
+fn check_convert(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    if !want_arity(ck, ins, ops, 1) {
+        return;
+    }
+    let a = &ops[0].shape;
+    if a.dims != ins.shape.dims {
+        ck.err(
+            ins,
+            "shape/convert",
+            format!("operand dims {:?} != declared {:?}", a.dims, ins.shape.dims),
+        );
+    }
+    use PrimType::*;
+    let ok = matches!(
+        (a.ty, ins.shape.ty),
+        (F32, S32) | (S32, F32) | (Pred, F32) | (Pred, S32) | (U32, F32) | (U32, S32) | (U64, U32)
+    ) || a.ty == ins.shape.ty;
+    if !ok {
+        ck.err(ins, "dtype/convert", format!("unsupported convert {:?} -> {:?}", a.ty, ins.shape.ty));
+    }
+}
+
+fn check_unary(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr], u: UnOp) {
+    if !want_arity(ck, ins, ops, 1) {
+        return;
+    }
+    let a = &ops[0].shape;
+    let ok = match u {
+        UnOp::Exp | UnOp::Tanh => a.ty == PrimType::F32,
+        UnOp::Neg => matches!(a.ty, PrimType::F32 | PrimType::S32),
+    };
+    if !ok {
+        ck.err(ins, "dtype/unary", format!("unsupported unary {u:?} on {:?}", a.ty));
+        return;
+    }
+    shape_eq(ck, ins, "shape/unary", a);
+}
+
+fn check_binary(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr], b: BinOp) {
+    if !want_arity(ck, ins, ops, 2) {
+        return;
+    }
+    let (x, y) = (&ops[0].shape, &ops[1].shape);
+    if x.dims != y.dims || x.ty != y.ty {
+        ck.err(
+            ins,
+            "shape/binary",
+            format!("operands {:?}/{:?} vs {:?}/{:?} disagree", x.ty, x.dims, y.ty, y.dims),
+        );
+        return;
+    }
+    let ok = match b {
+        BinOp::And | BinOp::Or => x.ty == PrimType::Pred,
+        _ => matches!(x.ty, PrimType::F32 | PrimType::S32),
+    };
+    if !ok {
+        ck.err(ins, "dtype/binary", format!("unsupported {b:?} on {:?}", x.ty));
+        return;
+    }
+    shape_eq(ck, ins, "shape/binary", x);
+}
+
+fn check_compare(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    if !want_arity(ck, ins, ops, 2) {
+        return;
+    }
+    let (x, y) = (&ops[0].shape, &ops[1].shape);
+    if x.dims != y.dims || x.ty != y.ty {
+        ck.err(
+            ins,
+            "shape/compare",
+            format!("operands {:?}/{:?} vs {:?}/{:?} disagree", x.ty, x.dims, y.ty, y.dims),
+        );
+        return;
+    }
+    if !matches!(x.ty, PrimType::F32 | PrimType::S32) {
+        ck.err(ins, "dtype/compare", format!("unsupported compare on {:?}", x.ty));
+        return;
+    }
+    shape_eq(ck, ins, "shape/compare", &Shape { ty: PrimType::Pred, dims: x.dims.clone() });
+}
+
+fn check_select(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    if !want_arity(ck, ins, ops, 3) {
+        return;
+    }
+    let (p, t, f) = (&ops[0].shape, &ops[1].shape, &ops[2].shape);
+    if p.ty != PrimType::Pred {
+        ck.err(ins, "dtype/select", format!("predicate is {:?}, want pred", p.ty));
+        return;
+    }
+    if p.dims != t.dims || t.dims != f.dims || t.ty != f.ty {
+        ck.err(
+            ins,
+            "shape/select",
+            format!("pred {:?} / branches {:?}:{:?} and {:?}:{:?} disagree", p.dims, t.ty, t.dims, f.ty, f.dims),
+        );
+        return;
+    }
+    if !matches!(t.ty, PrimType::F32 | PrimType::S32) {
+        ck.err(ins, "dtype/select", format!("unsupported select branch type {:?}", t.ty));
+        return;
+    }
+    shape_eq(ck, ins, "shape/select", t);
+}
+
+fn check_dot(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    let Op::Dot(d) = &ins.op else { return };
+    if !want_arity(ck, ins, ops, 2) {
+        return;
+    }
+    let (l, r) = (&ops[0].shape, &ops[1].shape);
+    if l.ty != PrimType::F32 || r.ty != PrimType::F32 {
+        ck.err(ins, "dtype/dot", format!("dot operands must be f32, got {:?}/{:?}", l.ty, r.ty));
+        return;
+    }
+    if d.lhs_batch.len() != d.rhs_batch.len() || d.lhs_contract.len() != d.rhs_contract.len() {
+        ck.err(ins, "attr/dot", "dimension-number arity mismatch".to_string());
+        return;
+    }
+    let lhs_oob = d.lhs_batch.iter().chain(&d.lhs_contract).any(|&i| i >= l.dims.len());
+    let rhs_oob = d.rhs_batch.iter().chain(&d.rhs_contract).any(|&i| i >= r.dims.len());
+    if lhs_oob || rhs_oob {
+        ck.err(
+            ins,
+            "attr/dot",
+            format!(
+                "dimension numbers out of range for operand ranks {}/{}",
+                l.dims.len(),
+                r.dims.len()
+            ),
+        );
+        return;
+    }
+    if d.lhs_batch.iter().any(|i| d.lhs_contract.contains(i))
+        || d.rhs_batch.iter().any(|i| d.rhs_contract.contains(i))
+    {
+        ck.err(ins, "attr/dot", "batch and contracting dims overlap".to_string());
+        return;
+    }
+    for (&a, &b) in d.lhs_contract.iter().zip(&d.rhs_contract) {
+        if l.dims[a] != r.dims[b] {
+            ck.err(
+                ins,
+                "shape/dot",
+                format!("contracting dims differ: {} vs {}", l.dims[a], r.dims[b]),
+            );
+            return;
+        }
+    }
+    for (&a, &b) in d.lhs_batch.iter().zip(&d.rhs_batch) {
+        if l.dims[a] != r.dims[b] {
+            ck.err(ins, "shape/dot", format!("batch dims differ: {} vs {}", l.dims[a], r.dims[b]));
+            return;
+        }
+    }
+    let mut dims: Vec<usize> = d.lhs_batch.iter().map(|&i| l.dims[i]).collect();
+    dims.extend(
+        (0..l.dims.len())
+            .filter(|i| !d.lhs_batch.contains(i) && !d.lhs_contract.contains(i))
+            .map(|i| l.dims[i]),
+    );
+    dims.extend(
+        (0..r.dims.len())
+            .filter(|i| !d.rhs_batch.contains(i) && !d.rhs_contract.contains(i))
+            .map(|i| r.dims[i]),
+    );
+    shape_eq(ck, ins, "shape/dot", &Shape { ty: PrimType::F32, dims });
+}
+
+fn check_reshape(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    if !want_arity(ck, ins, ops, 1) {
+        return;
+    }
+    let a = &ops[0].shape;
+    if a.ty != ins.shape.ty {
+        ck.err(ins, "dtype/reshape", format!("reshape changes dtype {:?} -> {:?}", a.ty, ins.shape.ty));
+    }
+    if a.numel() != ins.shape.numel() {
+        ck.err(
+            ins,
+            "shape/reshape",
+            format!("numel mismatch: {:?} -> {:?}", a.dims, ins.shape.dims),
+        );
+    }
+}
+
+fn check_broadcast(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    let Op::Broadcast(mapping) = &ins.op else { return };
+    if !want_arity(ck, ins, ops, 1) {
+        return;
+    }
+    let a = &ops[0].shape;
+    if a.ty != ins.shape.ty {
+        ck.err(ins, "dtype/broadcast", format!("dtype {:?} -> {:?}", a.ty, ins.shape.ty));
+    }
+    if mapping.len() != a.dims.len() {
+        ck.err(
+            ins,
+            "attr/broadcast",
+            format!("dimensions {mapping:?} rank-mismatch input {:?}", a.dims),
+        );
+        return;
+    }
+    let mut seen = HashSet::new();
+    for (in_d, &out_d) in mapping.iter().enumerate() {
+        if out_d >= ins.shape.dims.len() {
+            ck.err(
+                ins,
+                "attr/broadcast",
+                format!("mapping entry {out_d} out of range for output rank {}", ins.shape.dims.len()),
+            );
+            return;
+        }
+        if !seen.insert(out_d) {
+            ck.err(ins, "attr/broadcast", format!("duplicate output dim {out_d} in {mapping:?}"));
+            return;
+        }
+        if a.dims[in_d] != ins.shape.dims[out_d] {
+            ck.err(
+                ins,
+                "shape/broadcast",
+                format!("mapping {mapping:?}: input {:?} -> output {:?}", a.dims, ins.shape.dims),
+            );
+            return;
+        }
+    }
+}
+
+fn check_transpose(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    let Op::Transpose(perm) = &ins.op else { return };
+    if !want_arity(ck, ins, ops, 1) {
+        return;
+    }
+    let a = &ops[0].shape;
+    if a.ty != ins.shape.ty {
+        ck.err(ins, "dtype/transpose", format!("dtype {:?} -> {:?}", a.ty, ins.shape.ty));
+    }
+    let rank = a.dims.len();
+    if perm.len() != rank {
+        ck.err(ins, "attr/transpose", format!("permutation {perm:?} rank-mismatch {:?}", a.dims));
+        return;
+    }
+    let mut seen = vec![false; rank];
+    for &p in perm {
+        if p >= rank || std::mem::replace(&mut seen[p], true) {
+            ck.err(ins, "attr/transpose", format!("{perm:?} is not a permutation of 0..{rank}"));
+            return;
+        }
+    }
+    let dims: Vec<usize> = perm.iter().map(|&p| a.dims[p]).collect();
+    shape_eq(ck, ins, "shape/transpose", &Shape { ty: a.ty, dims });
+}
+
+fn check_slice(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    let Op::Slice(ranges) = &ins.op else { return };
+    if !want_arity(ck, ins, ops, 1) {
+        return;
+    }
+    let a = &ops[0].shape;
+    if a.ty != ins.shape.ty {
+        ck.err(ins, "dtype/slice", format!("dtype {:?} -> {:?}", a.ty, ins.shape.ty));
+    }
+    if ranges.len() != a.dims.len() {
+        ck.err(ins, "attr/slice", format!("{} ranges for rank {}", ranges.len(), a.dims.len()));
+        return;
+    }
+    let mut dims = Vec::with_capacity(ranges.len());
+    for (d, &(s, l, st)) in ranges.iter().enumerate() {
+        if st == 0 || l > a.dims[d] || s > l {
+            ck.err(
+                ins,
+                "attr/slice",
+                format!("bad range {:?} for dim {d} of {:?}", ranges[d], a.dims),
+            );
+            return;
+        }
+        dims.push((l - s).div_ceil(st));
+    }
+    shape_eq(ck, ins, "shape/slice", &Shape { ty: a.ty, dims });
+}
+
+fn check_concat(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    let Op::Concatenate(dim) = ins.op else { return };
+    let Some(first) = ops.first() else {
+        ck.err(ins, "dataflow/operand-count", "concatenate of nothing".to_string());
+        return;
+    };
+    let rank = first.shape.dims.len();
+    if dim >= rank {
+        ck.err(ins, "attr/concatenate", format!("dimension {dim} out of range for rank {rank}"));
+        return;
+    }
+    let mut dims = first.shape.dims.clone();
+    dims[dim] = 0;
+    for o in ops {
+        let s = &o.shape;
+        if s.ty != first.shape.ty || s.dims.len() != rank {
+            ck.err(
+                ins,
+                "shape/concatenate",
+                format!("operand {:?} ({:?}/{:?}) disagrees with {:?}", o.name, s.ty, s.dims, first.shape),
+            );
+            return;
+        }
+        for d in 0..rank {
+            if d != dim && s.dims[d] != first.shape.dims[d] {
+                ck.err(
+                    ins,
+                    "shape/concatenate",
+                    format!("non-concat dim {d} differs: {:?} vs {:?}", s.dims, first.shape.dims),
+                );
+                return;
+            }
+        }
+        dims[dim] += s.dims[dim];
+    }
+    shape_eq(ck, ins, "shape/concatenate", &Shape { ty: first.shape.ty, dims });
+}
+
+fn check_gather(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    let Op::Gather(g) = &ins.op else { return };
+    if !want_arity(ck, ins, ops, 2) {
+        return;
+    }
+    let (op, idx) = (&ops[0].shape, &ops[1].shape);
+    if idx.ty != PrimType::S32 {
+        ck.err(ins, "dtype/gather", format!("indices must be s32, got {:?}", idx.ty));
+        return;
+    }
+    let op_rank = op.dims.len();
+    if g.slice_sizes.len() != op_rank {
+        ck.err(
+            ins,
+            "attr/gather",
+            format!("slice_sizes {:?} rank-mismatch operand {:?}", g.slice_sizes, op.dims),
+        );
+        return;
+    }
+    for (d, (&sz, &od)) in g.slice_sizes.iter().zip(&op.dims).enumerate() {
+        if sz > od {
+            ck.err(ins, "attr/gather", format!("slice_sizes[{d}] = {sz} exceeds operand dim {od}"));
+            return;
+        }
+    }
+    if g.index_vector_dim > idx.dims.len() {
+        ck.err(
+            ins,
+            "attr/gather",
+            format!("index_vector_dim {} out of range for indices rank {}", g.index_vector_dim, idx.dims.len()),
+        );
+        return;
+    }
+    let ivd_size = if g.index_vector_dim == idx.dims.len() {
+        1
+    } else {
+        idx.dims[g.index_vector_dim]
+    };
+    if g.start_index_map.len() != ivd_size {
+        ck.err(
+            ins,
+            "attr/gather",
+            format!("start_index_map {:?} vs index vector size {ivd_size}", g.start_index_map),
+        );
+        return;
+    }
+    if g.start_index_map.iter().any(|&d| d >= op_rank) {
+        ck.err(ins, "attr/gather", format!("start_index_map {:?} out of operand rank {op_rank}", g.start_index_map));
+        return;
+    }
+    let mut collapsed = HashSet::new();
+    for &d in &g.collapsed_slice_dims {
+        if d >= op_rank || !collapsed.insert(d) {
+            ck.err(
+                ins,
+                "attr/gather",
+                format!("bad collapsed_slice_dims {:?} for operand rank {op_rank}", g.collapsed_slice_dims),
+            );
+            return;
+        }
+        if g.slice_sizes[d] != 1 {
+            ck.err(
+                ins,
+                "attr/gather",
+                format!("collapsed dim {d} must have slice size 1, got {}", g.slice_sizes[d]),
+            );
+            return;
+        }
+    }
+    let offset_op_dims: Vec<usize> =
+        (0..op_rank).filter(|d| !collapsed.contains(d)).collect();
+    if offset_op_dims.len() != g.offset_dims.len() {
+        ck.err(
+            ins,
+            "attr/gather",
+            format!(
+                "offset_dims {:?} vs {} uncollapsed operand dims",
+                g.offset_dims,
+                offset_op_dims.len()
+            ),
+        );
+        return;
+    }
+    // expected output: batch dims (indices sans the index-vector dim)
+    // interleaved with offset dims carrying the slice sizes
+    let out_rank = ins.shape.dims.len();
+    let mut offset_set = HashSet::new();
+    for &o in &g.offset_dims {
+        if o >= out_rank || !offset_set.insert(o) {
+            ck.err(ins, "attr/gather", format!("bad offset_dims {:?} for output rank {out_rank}", g.offset_dims));
+            return;
+        }
+    }
+    let batch_dims: Vec<usize> = (0..idx.dims.len())
+        .filter(|&d| d != g.index_vector_dim)
+        .map(|d| idx.dims[d])
+        .collect();
+    if out_rank != batch_dims.len() + g.offset_dims.len() {
+        ck.err(
+            ins,
+            "shape/gather",
+            format!(
+                "output rank {out_rank} != {} batch dims + {} offset dims",
+                batch_dims.len(),
+                g.offset_dims.len()
+            ),
+        );
+        return;
+    }
+    let mut dims = vec![0usize; out_rank];
+    for (&o, &d) in g.offset_dims.iter().zip(&offset_op_dims) {
+        dims[o] = g.slice_sizes[d];
+    }
+    let mut batch_it = batch_dims.iter();
+    for (d, slot) in dims.iter_mut().enumerate() {
+        if !offset_set.contains(&d) {
+            // counts already checked: one batch dim per non-offset slot
+            if let Some(&b) = batch_it.next() {
+                *slot = b;
+            }
+        }
+    }
+    shape_eq(ck, ins, "shape/gather", &Shape { ty: op.ty, dims });
+}
+
+fn check_reduce(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    let Op::Reduce { dims: red_dims, to_apply } = &ins.op else { return };
+    if !want_arity(ck, ins, ops, 2) {
+        return;
+    }
+    let (a, init) = (&ops[0].shape, &ops[1].shape);
+    if !init.dims.is_empty() {
+        ck.err(ins, "shape/reduce", format!("init value must be scalar, got {:?}", init.dims));
+        return;
+    }
+    if init.ty != a.ty {
+        ck.err(
+            ins,
+            "dtype/reduce",
+            format!("init dtype {:?} != operand dtype {:?}", init.ty, a.ty),
+        );
+        return;
+    }
+    let mut seen = HashSet::new();
+    for &d in red_dims {
+        if d >= a.dims.len() || !seen.insert(d) {
+            ck.err(ins, "attr/reduce", format!("bad dimensions {red_dims:?} for rank {}", a.dims.len()));
+            return;
+        }
+    }
+    // the body must be a plain binary combiner over two scalars of the
+    // operand dtype, and a combination the evaluator implements
+    match ck.module.computations.get(to_apply) {
+        None => {
+            ck.err(ins, "reduce/body", format!("reduce body {to_apply:?} missing"));
+            return;
+        }
+        Some(body) => {
+            let root = &body.instrs[body.root];
+            let combo_ok = match root.op {
+                Op::Binary(b) => matches!(
+                    (a.ty, b),
+                    (PrimType::F32, BinOp::Add | BinOp::Mul | BinOp::Max | BinOp::Min)
+                        | (PrimType::S32, BinOp::Add | BinOp::Max | BinOp::Min)
+                ),
+                _ => false,
+            };
+            if !combo_ok {
+                ck.err(
+                    ins,
+                    "reduce/body",
+                    format!("body {to_apply:?} is not a supported binary combiner for {:?}", a.ty),
+                );
+                return;
+            }
+            let params_ok = body.params.len() == 2
+                && body.params.iter().all(|&p| {
+                    let s = &body.instrs[p].shape;
+                    s.dims.is_empty() && s.ty == a.ty
+                });
+            if !params_ok {
+                ck.err(
+                    ins,
+                    "reduce/body",
+                    format!("body {to_apply:?} must take two {:?} scalars", a.ty),
+                );
+                return;
+            }
+        }
+    }
+    let dims: Vec<usize> = (0..a.dims.len())
+        .filter(|d| !red_dims.contains(d))
+        .map(|d| a.dims[d])
+        .collect();
+    shape_eq(ck, ins, "shape/reduce", &Shape { ty: a.ty, dims });
+}
+
+fn check_dus(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    let Some(op) = ops.first() else {
+        ck.err(ins, "dataflow/operand-count", "dynamic-update-slice needs operands".to_string());
+        return;
+    };
+    let rank = op.shape.dims.len();
+    if !want_arity(ck, ins, ops, 2 + rank) {
+        return;
+    }
+    let upd = &ops[1].shape;
+    if upd.ty != op.shape.ty {
+        ck.err(ins, "dtype/dynamic-update-slice", format!("update {:?} != operand {:?}", upd.ty, op.shape.ty));
+        return;
+    }
+    if upd.dims.len() != rank {
+        ck.err(
+            ins,
+            "shape/dynamic-update-slice",
+            format!("update rank {:?} != operand rank {:?}", upd.dims, op.shape.dims),
+        );
+        return;
+    }
+    for (&ud, &od) in upd.dims.iter().zip(&op.shape.dims) {
+        if ud > od {
+            ck.err(
+                ins,
+                "shape/dynamic-update-slice",
+                format!("update {:?} exceeds operand {:?}", upd.dims, op.shape.dims),
+            );
+            return;
+        }
+    }
+    for s in &ops[2..] {
+        if !s.shape.dims.is_empty() || s.shape.ty != PrimType::S32 {
+            ck.err(
+                ins,
+                "shape/dynamic-update-slice",
+                format!("start {:?} must be a scalar s32, got {:?}/{:?}", s.name, s.shape.ty, s.shape.dims),
+            );
+            return;
+        }
+    }
+    shape_eq(ck, ins, "shape/dynamic-update-slice", &op.shape);
+}
+
+fn check_dynamic_slice(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    let Op::DynamicSlice(sizes) = &ins.op else { return };
+    let Some(op) = ops.first() else {
+        ck.err(ins, "dataflow/operand-count", "dynamic-slice needs operands".to_string());
+        return;
+    };
+    let rank = op.shape.dims.len();
+    if !want_arity(ck, ins, ops, 1 + rank) {
+        return;
+    }
+    if sizes.len() != rank {
+        ck.err(
+            ins,
+            "attr/dynamic-slice",
+            format!("dynamic_slice_sizes {sizes:?} rank-mismatch operand {:?}", op.shape.dims),
+        );
+        return;
+    }
+    for (d, (&sz, &od)) in sizes.iter().zip(&op.shape.dims).enumerate() {
+        if sz > od {
+            ck.err(ins, "attr/dynamic-slice", format!("size {sz} exceeds dim {d} ({od})"));
+            return;
+        }
+    }
+    for s in &ops[1..] {
+        if !s.shape.dims.is_empty() || s.shape.ty != PrimType::S32 {
+            ck.err(
+                ins,
+                "shape/dynamic-slice",
+                format!("start {:?} must be a scalar s32, got {:?}/{:?}", s.name, s.shape.ty, s.shape.dims),
+            );
+            return;
+        }
+    }
+    shape_eq(ck, ins, "shape/dynamic-slice", &Shape { ty: op.shape.ty, dims: sizes.clone() });
+}
+
+fn check_rng(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    if !want_arity(ck, ins, ops, 1) {
+        return;
+    }
+    let st = &ops[0].shape;
+    if st.ty != PrimType::U64 || st.dims != [2] {
+        ck.err(
+            ins,
+            "rng/state",
+            format!("state must be u64[2], got {:?}/{:?}", st.ty, st.dims),
+        );
+        return;
+    }
+    let Some(shapes) = &ins.tuple_shapes else { return };
+    if shapes.len() != 2
+        || shapes[0].ty != PrimType::U64
+        || shapes[0].dims != [2]
+        || shapes[1].ty != PrimType::U32
+    {
+        ck.err(
+            ins,
+            "rng/state",
+            "output must be the (u64[2] state, u32[...] bits) tuple".to_string(),
+        );
+    }
+}
+
+fn check_gte(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    let Op::GetTupleElement(k) = ins.op else { return };
+    if !want_arity(ck, ins, ops, 1) {
+        return;
+    }
+    let src = ops[0];
+    if !is_tuple_valued(src) {
+        ck.err(
+            ins,
+            "tuple/discipline",
+            format!("get-tuple-element source {:?} is not tuple-valued", src.name),
+        );
+        return;
+    }
+    let Some(parts) = &src.tuple_shapes else { return };
+    let Some(part) = parts.get(k) else {
+        ck.err(
+            ins,
+            "tuple/index",
+            format!("tuple index {k} out of range for {} parts", parts.len()),
+        );
+        return;
+    };
+    shape_eq(ck, ins, "shape/get-tuple-element", part);
+}
+
+fn check_tuple(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
+    let Some(parts) = &ins.tuple_shapes else { return };
+    if parts.len() != ops.len() {
+        ck.err(
+            ins,
+            "tuple/shape",
+            format!("{} declared parts for {} operands", parts.len(), ops.len()),
+        );
+        return;
+    }
+    for (part, o) in parts.iter().zip(ops) {
+        if part.dims != o.shape.dims || part.ty != o.shape.ty {
+            ck.err(
+                ins,
+                "shape/tuple",
+                format!(
+                    "part for {:?} declared {:?}/{:?}, operand is {:?}/{:?}",
+                    o.name, part.ty, part.dims, o.shape.ty, o.shape.dims
+                ),
+            );
+            return;
+        }
+    }
+}

@@ -13,10 +13,11 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::manifest::ExecManifest;
-use crate::runtime::tensor::{Dtype, HostTensor, TensorData};
+use crate::runtime::tensor::{HostTensor, TensorData};
 
 use super::hlo::eval::{evaluate, Buf, Value};
-use super::hlo::parser::{parse_module, HloModule, PrimType};
+use super::hlo::parser::{parse_module, HloModule};
+use super::hlo::verify;
 use super::{Backend, BackendBound, BackendExec};
 
 #[derive(Default)]
@@ -46,13 +47,6 @@ fn to_host(v: Value) -> Result<HostTensor> {
     }
 }
 
-fn prim_of(d: Dtype) -> PrimType {
-    match d {
-        Dtype::F32 => PrimType::F32,
-        Dtype::I32 => PrimType::S32,
-    }
-}
-
 impl Backend for HloInterpreter {
     fn platform_name(&self) -> String {
         "hlo-interpreter".to_string()
@@ -63,31 +57,12 @@ impl Backend for HloInterpreter {
             .with_context(|| format!("read {hlo_path:?}"))?;
         let module =
             parse_module(&text).with_context(|| format!("parse {hlo_path:?}"))?;
-        // cross-check the manifest against the module's entry signature
-        // now, so a drifted artifact fails at compile, not mid-serve
-        let entry = module.entry_computation();
-        if entry.params.len() != manifest.inputs.len() {
-            bail!(
-                "{}: module has {} parameters, manifest lists {} inputs",
-                manifest.name,
-                entry.params.len(),
-                manifest.inputs.len()
-            );
-        }
-        for (i, spec) in manifest.inputs.iter().enumerate() {
-            let p = &entry.instrs[entry.params[i]];
-            if p.shape.dims != spec.shape || p.shape.ty != prim_of(spec.dtype) {
-                bail!(
-                    "{}: parameter {i} ({:?}) is {:?}/{:?}, manifest says {:?}/{:?}",
-                    manifest.name,
-                    spec.name,
-                    p.shape.ty,
-                    p.shape.dims,
-                    spec.dtype,
-                    spec.shape
-                );
-            }
-        }
+        // statically verify the program and cross-check the manifest
+        // against the entry signature now, so a drifted or ill-typed
+        // artifact fails at compile, not mid-serve
+        let mut diags = verify::verify_module(&module);
+        diags.extend(verify::verify_manifest(&module, manifest));
+        verify::ensure_ok(&manifest.name, &diags)?;
         Ok(Box::new(InterpExec { module: Arc::new(module), name: manifest.name.clone() }))
     }
 }

@@ -54,7 +54,7 @@ use std::collections::VecDeque;
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::draft::{DraftOutput, Drafter, EagleDrafter, FastEagleDrafter, ObserveArgs};
 use crate::model::{BlockPool, KvCache, Lease, MaskRow, ModelSpec, Tokenizer, NEG};
@@ -283,6 +283,14 @@ impl BatchEngine {
                 "target {:?} has no batch-{} executables (lowered: {:?})",
                 spec.name, cfg.batch, spec.batch_sizes
             );
+        }
+        // engine contract: the chain-shaped plans this engine will emit
+        // (and the prefill chunks they cap) must have a lowered verify
+        // lane at this batch — fail at startup, not mid-serve
+        let report = crate::runtime::contract::check_engine(&spec, cfg.batch, cfg.chain_len);
+        report.ensure_ok()?;
+        for w in report.warnings() {
+            eprintln!("[{}] contract: {w}", spec.name);
         }
         let b = cfg.batch;
         let kv = KvCache::zeros(vec![
@@ -905,10 +913,16 @@ impl BatchEngine {
             for &(_, n) in &plan.prefill {
                 rows_needed = rows_needed.max(n);
             }
-            let m = self
-                .spec
-                .verify_m_lowered(rows_needed, self.cfg.batch)
-                .unwrap_or(1 + self.cfg.chain_len);
+            // the startup contract check guarantees the chain lane exists,
+            // so a miss here is a real inventory hole — fail loudly instead
+            // of silently falling back to a lane that may not fit
+            let m = self.spec.verify_m_lowered(rows_needed, self.cfg.batch).with_context(|| {
+                format!(
+                    "no lowered verify lane covers {rows_needed} rows at batch {} \
+                     (B=1 lanes: {:?}, batched: {:?})",
+                    self.cfg.batch, self.spec.verify_ms, self.spec.verify_ms_by_batch
+                )
+            })?;
             let drafts = self.draft_outputs(&plan.run, &plan_depths)?;
             // assemble per-slot trees through the shared cycle core
             let mut trees: Vec<Option<DraftTree>> = (0..bsz).map(|_| None).collect();

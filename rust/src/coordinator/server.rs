@@ -36,6 +36,11 @@
 //!   -> {"cmd": "stats"}   <- serving metrics
 //!   -> {"cmd": "shutdown"}
 
+// The server must not panic on a poisoned lock or stray unwrap: every
+// fallible path should shed or reply with an error instead (CI promotes
+// these to hard errors via `-D warnings`).
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -246,7 +251,12 @@ impl Server {
             // counting) never wait a whole decode iteration for the lock
             let mut delta = ServingMetrics::default();
             let step = engine.step_events(&mut delta);
-            self.metrics.lock().unwrap().merge(&delta);
+            // a poisoned metrics lock (a panicked conn thread) must not
+            // take the engine down with it — counters stay best-effort
+            self.metrics
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .merge(&delta);
             match step {
                 Ok(outcome) => {
                     // per-cycle frames first, so every frame of a request
@@ -290,7 +300,10 @@ impl Server {
                     // — fail the queued requests rather than spin forever
                     if stalled {
                         let ids = engine.abort_all();
-                        self.metrics.lock().unwrap().requests_failed += ids.len() as u64;
+                        self.metrics
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner)
+                            .requests_failed += ids.len() as u64;
                         for id in ids {
                             streaming.remove(&id);
                             gate.forget(id);
@@ -306,7 +319,10 @@ impl Server {
                 Err(e) => {
                     crate::log_warn!("engine step failed: {e:#}");
                     let ids = engine.abort_all();
-                    self.metrics.lock().unwrap().requests_failed += ids.len() as u64;
+                    self.metrics
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner)
+                        .requests_failed += ids.len() as u64;
                     for id in ids {
                         streaming.remove(&id);
                         gate.forget(id);
@@ -326,7 +342,11 @@ impl Server {
         drop(self.queue.drain_up_to(usize::MAX));
         drop(inflight);
         let _ = accept_handle.join();
-        let m = self.metrics.lock().unwrap().clone();
+        let m = self
+            .metrics
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .clone();
         Ok(m)
     }
 
@@ -392,7 +412,7 @@ fn handle_conn(
                 return Ok(());
             }
             Some("stats") => {
-                let m = metrics.lock().unwrap();
+                let m = metrics.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                 let j = Json::obj(vec![
                     ("requests_done", Json::num(m.requests_done as f64)),
                     ("requests_rejected", Json::num(m.requests_rejected as f64)),
@@ -431,7 +451,8 @@ fn handle_conn(
                     Ok(()) => {}
                     Err(PushError::Full(_)) => {
                         // shed: the bounded queue is the 429 analogue
-                        let mut m = metrics.lock().unwrap();
+                        let mut m =
+                            metrics.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                         m.requests_rejected += 1;
                         drop(m);
                         writeln!(

@@ -8,6 +8,7 @@
 //!   bench      regenerate paper tables/figures (table1|table2|table3|fig3|microbench|all)
 //!   selfcheck  losslessness + stack sanity across all drafters
 //!   fixture    emit the deterministic interpreter-backed artifact tree
+//!   check      static HLO verification + engine-contract report
 //!
 //! Common flags: --artifacts DIR (default ./artifacts; env FE_ARTIFACTS),
 //! --target NAME (default base), --drafter NAME (default fasteagle),
@@ -42,6 +43,8 @@ commands:
   bench      table1|table2|table3|fig3|microbench|serve|all [--quick]
   selfcheck  [--target T]
   fixture    [--out DIR] [--seed N]   emit interpreter-runnable artifacts
+  check      [--target T] [--chain N] [--json]   verify HLO artifacts +
+             engine contract without opening a backend; exit 0 iff clean
 
 draft-plan flags (generate/serve/batch; per-request \"draft\" overrides):
   --planner static|adaptive  --draft-depth N  --draft-top-k N
@@ -284,6 +287,158 @@ fn cmd_fixture(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fasteagle check` — static verification of an artifact directory:
+/// the HLO verifier over every `hlo/*.hlo.txt` (+ its `.io.json`
+/// manifest), the per-executable state-tensor cross-checks, and the
+/// engine-contract report for the B=1 lane and every lowered batch
+/// lane. Pure file reads — no backend is opened, so it runs anywhere
+/// the artifacts do. Exit code 0 iff no error-severity finding.
+fn cmd_check(args: &Args) -> Result<()> {
+    use std::collections::HashSet;
+
+    use fasteagle::backend::hlo::parser::parse_module;
+    use fasteagle::backend::hlo::verify::{self, Severity};
+    use fasteagle::runtime::{contract, ExecManifest};
+    use fasteagle::util::json::Json;
+
+    let root = artifacts_dir(args);
+    let target = args.str_or("target", "base");
+    let dir = std::path::PathBuf::from(format!("{root}/{target}"));
+    let spec_path = dir.join("spec.json");
+    let spec_text = std::fs::read_to_string(&spec_path)
+        .with_context(|| format!("read {}", spec_path.display()))?;
+    let spec = fasteagle::model::ModelSpec::parse(&spec_text)?;
+
+    let mut errors = 0usize;
+    let mut warnings = 0usize;
+    let mut human: Vec<String> = Vec::new();
+    let mut json_rows: Vec<Json> = Vec::new();
+    // the spec-level checks overlap (tree-nodes drift is reported by
+    // every contract entry point) — dedupe identical findings
+    let mut seen: HashSet<String> = HashSet::new();
+    let mut record = |file: &str, sev: Severity, rule: &str, loc: &str, msg: &str| {
+        if !seen.insert(format!("{file}|{rule}|{loc}|{msg}")) {
+            return;
+        }
+        let sev_s = match sev {
+            Severity::Error => {
+                errors += 1;
+                "error"
+            }
+            Severity::Warning => {
+                warnings += 1;
+                "warning"
+            }
+        };
+        human.push(if loc.is_empty() {
+            format!("{file}: {sev_s}[{rule}] {msg}")
+        } else {
+            format!("{file}: {sev_s}[{rule}] {loc}: {msg}")
+        });
+        json_rows.push(Json::obj(vec![
+            ("file", Json::str(file)),
+            ("severity", Json::str(sev_s)),
+            ("rule", Json::str(rule)),
+            ("where", Json::str(loc)),
+            ("message", Json::str(msg)),
+        ]));
+    };
+
+    // Layer 1: HLO verifier + manifest cross-check per executable
+    let hlo_dir = dir.join("hlo");
+    let mut names: Vec<String> = Vec::new();
+    if hlo_dir.is_dir() {
+        for entry in std::fs::read_dir(&hlo_dir)? {
+            let p = entry?.path();
+            let Some(fname) = p.file_name().and_then(|s| s.to_str()) else { continue };
+            if let Some(name) = fname.strip_suffix(".hlo.txt") {
+                names.push(name.to_string());
+            }
+        }
+    }
+    names.sort_unstable();
+    for name in &names {
+        let file = format!("hlo/{name}.hlo.txt");
+        let text = std::fs::read_to_string(hlo_dir.join(format!("{name}.hlo.txt")))
+            .with_context(|| file.clone())?;
+        let module = match parse_module(&text) {
+            Ok(m) => m,
+            Err(e) => {
+                record(&file, Severity::Error, "parse", "", &format!("{e:#}"));
+                continue;
+            }
+        };
+        let mut diags = verify::verify_module(&module);
+        let io_path = hlo_dir.join(format!("{name}.io.json"));
+        match std::fs::read_to_string(&io_path) {
+            Ok(io_text) => match ExecManifest::parse(&io_text) {
+                Ok(manifest) => {
+                    diags.extend(verify::verify_manifest(&module, &manifest));
+                    for i in contract::check_manifest_states(&spec, &manifest).issues {
+                        record(&file, i.severity, i.rule, "", &i.message);
+                    }
+                }
+                Err(e) => {
+                    record(&file, Severity::Error, "manifest/parse", "", &format!("{e:#}"));
+                }
+            },
+            Err(e) => record(
+                &file,
+                Severity::Error,
+                "manifest/missing",
+                "",
+                &format!("{}: {e}", io_path.display()),
+            ),
+        }
+        for d in diags {
+            let loc = if d.instruction.is_empty() {
+                d.computation.clone()
+            } else {
+                format!("{}/%{}", d.computation, d.instruction)
+            };
+            record(&file, d.severity, d.rule, &loc, &d.message);
+        }
+    }
+
+    // Layer 2: engine contract — B=1 planners + every lowered batch lane
+    let chain = args.usize_or("chain", 2);
+    let mut report = contract::check_single(&spec);
+    report.merge(contract::check_engine(&spec, 1, chain));
+    for &b in &spec.batch_sizes {
+        report.merge(contract::check_engine(&spec, b, chain));
+    }
+    report.merge(contract::check_inventory(&spec, &dir));
+    for i in report.issues {
+        record("spec.json", i.severity, i.rule, "", &i.message);
+    }
+
+    if args.bool_flag("json") {
+        let j = Json::obj(vec![
+            ("target", Json::str(&target)),
+            ("errors", Json::num(errors as f64)),
+            ("warnings", Json::num(warnings as f64)),
+            ("diagnostics", Json::Arr(json_rows)),
+        ]);
+        println!("{}", j.to_string());
+    } else {
+        for line in &human {
+            println!("{line}");
+        }
+        println!(
+            "check {}: {} executable(s), {} error(s), {} warning(s) in {}",
+            if errors == 0 { "clean" } else { "FAILED" },
+            names.len(),
+            errors,
+            warnings,
+            dir.display()
+        );
+    }
+    if errors > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     let Some(cmd) = args.positional.first().map(String::as_str) else {
@@ -308,6 +463,7 @@ fn main() -> Result<()> {
         }
         "selfcheck" => cmd_selfcheck(&args),
         "fixture" => cmd_fixture(&args),
+        "check" => cmd_check(&args),
         other => {
             println!("unknown command {other:?}\n{USAGE}");
             std::process::exit(2);

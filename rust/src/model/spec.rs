@@ -38,6 +38,13 @@ pub struct ModelSpec {
     /// via `spec::plan::default_draft_nodes` — no longer read from the
     /// JSON, so the shape arithmetic has exactly one home
     pub tree_nodes: usize,
+    /// the manifest's literal `tree_nodes` field, kept so the contract
+    /// checker can warn when it disagrees with the derived value
+    /// instead of discarding it silently
+    pub tree_nodes_on_disk: Option<usize>,
+    /// every executable name listed in the spec's inventory (used by
+    /// the contract checker to confirm the artifacts exist on disk)
+    pub executables: Vec<String>,
     pub medusa_heads: usize,
     pub sps_chain: usize,
     pub sps: SpsDims,
@@ -62,9 +69,11 @@ impl ModelSpec {
         // executable inventory -> which verify-M variants exist, per
         // batch (tgt_m{M} at B=1, tgt_m{M}_b{B} on the batched lane)
         let mut verify_ms: Vec<usize> = Vec::new();
+        let mut executables: Vec<String> = Vec::new();
         let mut by_batch: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
         if let Some(execs) = v.get("executables").and_then(Json::as_obj) {
             for name in execs.keys() {
+                executables.push(name.clone());
                 if let Some(rest) = name.strip_prefix("tgt_m") {
                     match rest.split_once("_b") {
                         None => {
@@ -83,6 +92,7 @@ impl ModelSpec {
         }
         verify_ms.sort_unstable();
         verify_ms.dedup();
+        executables.sort_unstable();
         let verify_ms_by_batch: Vec<(usize, Vec<usize>)> = by_batch
             .into_iter()
             .map(|(b, mut ms)| {
@@ -124,6 +134,8 @@ impl ModelSpec {
                 req_usize(&v, "draft_depth")?,
                 req_usize(&v, "tree_top_k")?,
             ),
+            tree_nodes_on_disk: v.get("tree_nodes").and_then(Json::as_usize),
+            executables,
             medusa_heads: req_usize(&v, "medusa_heads")?,
             sps_chain: req_usize(&v, "sps_chain")?,
             sps: SpsDims {

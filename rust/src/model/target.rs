@@ -83,6 +83,13 @@ pub struct TargetModel {
 impl TargetModel {
     pub fn open(store: Rc<ArtifactStore>) -> Result<TargetModel> {
         let spec = ModelSpec::parse(&store.spec_json()?)?;
+        // engine contract: every reachable draft plan must have a
+        // lowered verify lane — fail at open, not mid-generation
+        let report = crate::runtime::contract::check_single(&spec);
+        report.ensure_ok()?;
+        for w in report.warnings() {
+            eprintln!("[{}] contract: {w}", spec.name);
+        }
         let (n_layers, d_model) = (spec.n_layers, spec.d_model);
         Ok(TargetModel {
             spec,

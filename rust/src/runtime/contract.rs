@@ -1,0 +1,345 @@
+//! Engine contract checker: static cross-checks between the
+//! [`ModelSpec`] inventory, the per-executable manifests, and the draft
+//! shapes the configured planners can reach — run at engine startup
+//! ([`crate::model::TargetModel::open`], `BatchEngine::new`) and by
+//! `fasteagle check`, so a spec whose lowered `tgt_m{M}[_b{B}]` lanes
+//! cannot carry a reachable [`DraftPlan`] fails fast with an actionable
+//! report instead of panicking (or silently falling back) mid-serve.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::backend::hlo::verify::Severity;
+use crate::model::ModelSpec;
+use crate::spec::plan::{DraftPlan, PlannerKind};
+
+use super::manifest::{ExecManifest, Kind};
+
+/// One contract finding (spec-level, so no instruction anchor —
+/// `rule` + `message` name the lane or tensor instead).
+#[derive(Debug, Clone)]
+pub struct ContractIssue {
+    pub severity: Severity,
+    /// stable rule identifier, e.g. `lane/b1` or `state/shape`
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for ContractIssue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        write!(f, "{sev}[{}] {}", self.rule, self.message)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ContractReport {
+    /// target (spec) name the report is about
+    pub target: String,
+    pub issues: Vec<ContractIssue>,
+}
+
+impl ContractReport {
+    pub fn new(target: &str) -> ContractReport {
+        ContractReport { target: target.to_string(), issues: Vec::new() }
+    }
+
+    fn push(&mut self, severity: Severity, rule: &'static str, message: String) {
+        self.issues.push(ContractIssue { severity, rule, message });
+    }
+
+    pub fn merge(&mut self, other: ContractReport) {
+        self.issues.extend(other.issues);
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.issues.iter().any(|i| i.severity == Severity::Error)
+    }
+
+    pub fn warnings(&self) -> impl Iterator<Item = &ContractIssue> {
+        self.issues.iter().filter(|i| i.severity == Severity::Warning)
+    }
+
+    /// Bail with the full report when any error-severity issue exists
+    /// (warnings alone pass).
+    pub fn ensure_ok(&self) -> Result<()> {
+        if self.has_errors() {
+            bail!("{self}");
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for ContractReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "engine contract report for target {:?}:", self.target)?;
+        for i in &self.issues {
+            writeln!(f, "  {i}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Single-request (B=1) engine contract: every draft shape the
+/// configured planners can reach — for both planner kinds that is the
+/// base (default) plan, the adaptive planner only ever shrinks — must
+/// map to a lowered `verify_m` lane, and prefill chunks (which ride the
+/// same verify executables) must fit one too.
+pub fn check_single(spec: &ModelSpec) -> ContractReport {
+    let mut r = ContractReport::new(&spec.name);
+    let base = DraftPlan::default_for(spec);
+    for kind in [PlannerKind::Static, PlannerKind::Adaptive] {
+        let rows = kind.envelope(&base).total_rows();
+        if spec.verify_m_for(rows).is_none() {
+            r.push(
+                Severity::Error,
+                "lane/b1",
+                format!(
+                    "{} planner envelope (depth {}, top-k {}) needs a verify lane of \
+                     >= {rows} rows, but the lowered B=1 inventory is {:?} — regenerate \
+                     artifacts with a large-enough tgt_m, or shrink the draft plan",
+                    kind.name(),
+                    spec.draft_depth,
+                    spec.tree_top_k,
+                    spec.verify_ms
+                ),
+            );
+        }
+    }
+    if spec.verify_m_for(spec.prefill_chunk).is_none() {
+        r.push(
+            Severity::Error,
+            "lane/prefill",
+            format!(
+                "prefill_chunk {} exceeds every lowered B=1 verify lane {:?}",
+                spec.prefill_chunk, spec.verify_ms
+            ),
+        );
+    }
+    check_tree_nodes(spec, &mut r);
+    r
+}
+
+/// Batched-engine contract: the chain-shaped plans the batcher emits
+/// (`1 + chain_len` verify rows, which also caps its prefill chunks)
+/// must have a lowered lane at the configured batch.
+pub fn check_engine(spec: &ModelSpec, batch: usize, chain_len: usize) -> ContractReport {
+    let mut r = ContractReport::new(&spec.name);
+    if batch > 1 && !spec.batch_sizes.contains(&batch) {
+        r.push(
+            Severity::Error,
+            "lane/batch",
+            format!("batch {batch} is not in the spec's batch_sizes {:?}", spec.batch_sizes),
+        );
+    }
+    let rows = 1 + chain_len;
+    if spec.verify_m_lowered(rows, batch).is_none() {
+        let lanes: Vec<usize> = if batch <= 1 {
+            spec.verify_ms.clone()
+        } else {
+            spec.verify_ms_by_batch
+                .iter()
+                .find(|(b, _)| *b == batch)
+                .map(|(_, ms)| ms.clone())
+                .unwrap_or_default()
+        };
+        r.push(
+            Severity::Error,
+            "lane/chain",
+            format!(
+                "chain_len {chain_len} needs a verify lane of >= {rows} rows at batch \
+                 {batch}, but the lowered inventory there is {lanes:?} — regenerate \
+                 artifacts with a large-enough tgt_m{{M}}_b{batch}, or lower --chain"
+            ),
+        );
+    }
+    check_tree_nodes(spec, &mut r);
+    r
+}
+
+/// Warn when the on-disk `tree_nodes` JSON field disagrees with the
+/// value derived from the default [`DraftPlan`] — the derived value
+/// wins, but a drifted spec file should be noticed, not silently
+/// discarded.
+fn check_tree_nodes(spec: &ModelSpec, r: &mut ContractReport) {
+    if let Some(on_disk) = spec.tree_nodes_on_disk {
+        if on_disk != spec.tree_nodes {
+            r.push(
+                Severity::Warning,
+                "spec/tree-nodes",
+                format!(
+                    "spec.json says tree_nodes = {on_disk}, but the default draft plan \
+                     (depth {} x top-k {}) derives {} — the derived value is used",
+                    spec.draft_depth, spec.tree_top_k, spec.tree_nodes
+                ),
+            );
+        }
+    }
+}
+
+/// Batch lane an executable was lowered for, from the `_b{B}` name
+/// suffix (`tgt_m3_b2`, `fe_t8_b2`); unsuffixed executables are B=1.
+fn batch_of(exec: &str) -> usize {
+    exec.rsplit_once("_b")
+        .and_then(|(_, b)| b.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Cross-check a manifest's per-request state tensors against the
+/// method signatures the engines thread them with: `kv` (target),
+/// `dkv` (FastEagle cascade), `ekv` (EAGLE) caches must have exactly
+/// the shape the spec's dimensions dictate for the executable's batch.
+pub fn check_manifest_states(spec: &ModelSpec, m: &ExecManifest) -> ContractReport {
+    let mut r = ContractReport::new(&spec.name);
+    let b = batch_of(&m.name);
+    // the SpS baseline's separate draft LM (`sps_*`) threads its own,
+    // smaller kv cache; everything else uses the target's geometry
+    let is_sps = m.name.starts_with("sps");
+    let (kv_layers, kv_heads, kv_hd) = if is_sps {
+        (spec.sps.n_layers, spec.sps.n_kv_heads, spec.sps.head_dim)
+    } else {
+        (spec.n_layers, spec.n_kv_heads, spec.head_dim)
+    };
+    for io in &m.inputs {
+        if io.kind != Kind::State {
+            continue;
+        }
+        let kv_tail = [spec.max_seq, kv_heads, kv_hd];
+        let want: Option<Vec<usize>> = match io.name.as_str() {
+            "kv" => {
+                let mut w = vec![kv_layers, 2, b];
+                w.extend(kv_tail);
+                Some(w)
+            }
+            "dkv" => {
+                let mut w = vec![spec.draft_depth, 2, b];
+                w.extend(kv_tail);
+                Some(w)
+            }
+            "ekv" => {
+                let mut w = vec![2, b];
+                w.extend(kv_tail);
+                Some(w)
+            }
+            _ => None,
+        };
+        match want {
+            Some(w) => {
+                if io.shape != w {
+                    r.push(
+                        Severity::Error,
+                        "state/shape",
+                        format!(
+                            "{}: state tensor {:?} is {:?}, its method signature wants {w:?}",
+                            m.name, io.name, io.shape
+                        ),
+                    );
+                }
+            }
+            None => r.push(
+                Severity::Warning,
+                "state/unknown",
+                format!(
+                    "{}: state tensor {:?} ({:?}) is not a known method signature",
+                    m.name, io.name, io.shape
+                ),
+            ),
+        }
+    }
+    r
+}
+
+/// Every executable the spec's inventory lists must exist on disk
+/// (`hlo/<name>.hlo.txt` + `.io.json`) under the target directory.
+pub fn check_inventory(spec: &ModelSpec, target_dir: &Path) -> ContractReport {
+    let mut r = ContractReport::new(&spec.name);
+    for name in &spec.executables {
+        let hlo = target_dir.join("hlo").join(format!("{name}.hlo.txt"));
+        let io = target_dir.join("hlo").join(format!("{name}.io.json"));
+        if !hlo.is_file() || !io.is_file() {
+            r.push(
+                Severity::Error,
+                "inventory/missing",
+                format!("executable {name:?} is listed in spec.json but has no artifact on disk"),
+            );
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::tests_sample::SAMPLE;
+
+    #[test]
+    fn sample_spec_fails_b1_envelope() {
+        // depth 6 x top-k 3 -> 19 rows; the sample's largest lane is 18
+        let spec = ModelSpec::parse(SAMPLE).unwrap();
+        let r = check_single(&spec);
+        assert!(r.has_errors());
+        assert!(r.issues.iter().any(|i| i.rule == "lane/b1"), "{r}");
+        let text = r.to_string();
+        assert!(text.contains("19 rows"), "{text}");
+    }
+
+    #[test]
+    fn chain_lane_check_per_batch() {
+        let spec = ModelSpec::parse(SAMPLE).unwrap();
+        // batch 4 lanes are [2, 5]: chain 2 -> 3 rows fits, chain 6 -> 7 rows does not
+        assert!(!check_engine(&spec, 4, 2).has_errors());
+        let r = check_engine(&spec, 4, 6);
+        assert!(r.issues.iter().any(|i| i.rule == "lane/chain"), "{r}");
+        // batch 2 has no lowered executables at all
+        assert!(check_engine(&spec, 2, 2).issues.iter().any(|i| i.rule == "lane/batch"));
+    }
+
+    #[test]
+    fn tree_nodes_disagreement_warns() {
+        let doctored = SAMPLE.replace("\"prefill_chunk\": 32,", "\"prefill_chunk\": 32, \"tree_nodes\": 999,");
+        let spec = ModelSpec::parse(&doctored).unwrap();
+        assert_eq!(spec.tree_nodes_on_disk, Some(999));
+        let r = check_engine(&spec, 1, 2);
+        assert!(
+            r.warnings().any(|i| i.rule == "spec/tree-nodes"),
+            "{r}"
+        );
+        // a warning alone is not an error
+        assert!(!check_engine(&spec, 4, 2).has_errors());
+    }
+
+    #[test]
+    fn state_shape_cross_check() {
+        let spec = ModelSpec::parse(SAMPLE).unwrap();
+        // matches the spec dims (6 layers, 2 kv heads, head 32, seq 256)
+        let good = ExecManifest::parse(
+            r#"{"name": "tgt_m1", "inputs": [
+                {"name": "kv", "kind": "state", "shape": [6, 2, 1, 256, 2, 32], "dtype": "float32"}
+              ], "outputs": []}"#,
+        )
+        .unwrap();
+        assert!(!check_manifest_states(&spec, &good).has_errors());
+        let bad = ExecManifest::parse(
+            r#"{"name": "tgt_m1_b4", "inputs": [
+                {"name": "kv", "kind": "state", "shape": [6, 2, 1, 256, 2, 32], "dtype": "float32"}
+              ], "outputs": []}"#,
+        )
+        .unwrap();
+        // _b4 executable must thread a batch-4 cache
+        let r = check_manifest_states(&spec, &bad);
+        assert!(r.issues.iter().any(|i| i.rule == "state/shape"), "{r}");
+    }
+
+    #[test]
+    fn batch_suffix_parses() {
+        assert_eq!(batch_of("tgt_m3"), 1);
+        assert_eq!(batch_of("tgt_m3_b2"), 2);
+        assert_eq!(batch_of("fe_t8_b16"), 16);
+        assert_eq!(batch_of("eg_next_t1"), 1);
+    }
+}

@@ -7,6 +7,7 @@
 //! never runs at serving time.
 
 pub mod client;
+pub mod contract;
 pub mod manifest;
 pub mod registry;
 pub mod tensor;
@@ -14,6 +15,7 @@ pub mod weights;
 
 pub use crate::backend::BackendKind;
 pub use client::{BoundExec, Executable, Runtime};
+pub use contract::{ContractIssue, ContractReport};
 pub use manifest::{ExecManifest, IoSpec, Kind};
 pub use registry::ArtifactStore;
 pub use tensor::{Dtype, HostTensor, TensorData};

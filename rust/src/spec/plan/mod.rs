@@ -156,6 +156,17 @@ impl PlannerKind {
             PlannerKind::Adaptive => Box::new(AdaptivePlanner::new(base)),
         }
     }
+
+    /// The largest plan this planner can ever emit for base plan `base`
+    /// — its reachable envelope, which the engine contract checker
+    /// sizes verify lanes against. Both kinds are bounded by the base
+    /// plan: `Static` always emits exactly it, `Adaptive` only ever
+    /// shrinks below it (see [`AdaptivePlanner`]).
+    pub fn envelope(self, base: &DraftPlan) -> DraftPlan {
+        match self {
+            PlannerKind::Static | PlannerKind::Adaptive => base.clone(),
+        }
+    }
 }
 
 /// Per-request draft-structure knobs, every field optional: `None`
@@ -275,6 +286,14 @@ mod tests {
         assert_eq!(m.top_k, None);
         assert_eq!(m.budget, Some(9));
         assert_eq!(DraftConfig::default().planner_kind(), PlannerKind::Static);
+    }
+
+    #[test]
+    fn envelope_is_the_base_plan() {
+        let base = DraftPlan::uniform(3, 2);
+        for k in [PlannerKind::Static, PlannerKind::Adaptive] {
+            assert_eq!(k.envelope(&base), base, "{}", k.name());
+        }
     }
 
     #[test]

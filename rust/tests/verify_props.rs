@@ -1,0 +1,349 @@
+//! Soundness properties of the static HLO verifier and the engine
+//! contract checker.
+//!
+//! Three claims from the verifier's contract:
+//! 1. builder-emitted programs verify with *zero* findings (no errors,
+//!    no unused-instruction warnings) across random shapes;
+//! 2. a program the verifier passes evaluates without panicking on
+//!    shape-conforming inputs;
+//! 3. mutating a passing program (shape, dtype, attribute, or dataflow
+//!    corruption) is rejected with an error that names the offending
+//!    instruction and a stable rule id.
+//!
+//! Plus the engine-contract side: the generated fixture tree is fully
+//! clean, a doctored manifest is rejected, and a spec whose planner
+//! envelope has no verify lane fails `TargetModel::open` /
+//! `BatchEngine::new` with the contract report.
+
+mod common;
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use fasteagle::backend::hlo::builder::{HloBuilder, Ty};
+use fasteagle::backend::hlo::eval::{evaluate, Value};
+use fasteagle::backend::hlo::parser::{
+    parse_module, BinOp, Computation, Instr, Op, PrimType, UnOp,
+};
+use fasteagle::backend::hlo::verify::{has_errors, verify_manifest, verify_module, Severity};
+use fasteagle::backend::BackendKind;
+use fasteagle::coordinator::{BatchConfig, BatchEngine, BatchMethod};
+use fasteagle::model::{ModelSpec, TargetModel};
+use fasteagle::runtime::{contract, ExecManifest};
+use fasteagle::util::rng::Pcg64;
+
+/// One program exercising every op the verifier knows: dot, unary,
+/// binary, compare/select, transpose, both reduce kinds, broadcast,
+/// gather, slice/reshape/concat, dynamic-slice + dynamic-update-slice,
+/// convert, iota, and the threefry rng tuple. Every instruction feeds
+/// the root, so a clean run means zero warnings too.
+fn build_rich(m: usize, k: usize, n: usize, q: usize) -> String {
+    let mut b = HloBuilder::new("rich");
+    let a = b.param(Ty::F32, vec![m, k]);
+    let w = b.param(Ty::F32, vec![k, n]);
+    let idx = b.param(Ty::S32, vec![q]);
+    let st0 = b.param(Ty::S32, vec![]);
+    let st1 = b.param(Ty::S32, vec![]);
+    let state = b.param(Ty::U64, vec![2]);
+
+    let mm = b.matmul(&a, &w);
+    let e = b.exp(&mm);
+    let half = b.const_f32(0.5);
+    let sp = b.splat(&half, vec![m, n]);
+    let th = b.tanh(&sp);
+    let s1 = b.add(&e, &th);
+    let p = b.compare(&mm, &sp, "GT");
+    let sel = b.select(&p, &s1, &mm);
+    let tr = b.transpose(&sel, &[1, 0]);
+    let sum = b.reduce_add(&tr, &[0]);
+    let mx = b.reduce_max(&mm, &[1]);
+    let s2 = b.add(&sum, &mx);
+    let bc = b.broadcast(&s2, vec![m, k], &[0]);
+    let g = b.gather_rows(&a, &idx);
+    let sl = b.slice(&a, &[(1, m), (0, k)]);
+    let rs = b.reshape(&sl, vec![(m - 1) * k]);
+    let cc = b.concat(&[&bc, &sl], 0);
+    let ds = b.dynamic_slice(&a, &[st0.clone(), st1.clone()], &[1, k]);
+    let du = b.dus(&a, &ds, &[st0, st1]);
+    let cv = b.convert(&idx, Ty::F32);
+    let io = b.iota(Ty::S32, vec![q], 0);
+    let s3 = b.add(&io, &idx);
+    let (ns, bits) = b.rng_threefry(&state, vec![q]);
+    b.finish(&[&cc, &rs, &g, &du, &cv, &s3, &ns, &bits])
+}
+
+fn randv(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.next_f64() as f32) * 2.0 - 1.0).collect()
+}
+
+fn rich_dims(rng: &mut Pcg64) -> (usize, usize, usize, usize) {
+    (2 + rng.below(4), 1 + rng.below(4), 1 + rng.below(4), 1 + rng.below(4))
+}
+
+#[test]
+fn builder_programs_verify_with_zero_findings() {
+    let mut rng = Pcg64::new(7, 0);
+    for _ in 0..20 {
+        let (m, k, n, q) = rich_dims(&mut rng);
+        let module = parse_module(&build_rich(m, k, n, q)).expect("parse built module");
+        let diags = verify_module(&module);
+        assert!(
+            diags.is_empty(),
+            "builder program ({m},{k},{n},{q}) must be clean, got: {}",
+            diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("; ")
+        );
+    }
+}
+
+#[test]
+fn verified_programs_evaluate_on_conforming_inputs() {
+    let mut rng = Pcg64::new(11, 0);
+    for _ in 0..20 {
+        let (m, k, n, q) = rich_dims(&mut rng);
+        let module = parse_module(&build_rich(m, k, n, q)).expect("parse built module");
+        assert!(!has_errors(&verify_module(&module)));
+        let idx: Vec<i32> = (0..q).map(|_| rng.below(m) as i32).collect();
+        let args: Vec<Rc<Value>> = vec![
+            Rc::new(Value::f32(vec![m, k], randv(&mut rng, m * k))),
+            Rc::new(Value::f32(vec![k, n], randv(&mut rng, k * n))),
+            Rc::new(Value::i32(vec![q], idx)),
+            Rc::new(Value::i32(vec![], vec![rng.below(m) as i32])),
+            Rc::new(Value::i32(vec![], vec![0])),
+            Rc::new(Value::u64(vec![2], vec![rng.next_u64(), rng.next_u64()])),
+        ];
+        let out = evaluate(&module, &args).expect("verified program must evaluate");
+        assert_eq!(out.len(), 8);
+    }
+}
+
+fn find_mut<'c>(c: &'c mut Computation, pred: impl Fn(&Instr) -> bool) -> &'c mut Instr {
+    c.instrs.iter_mut().find(|i| pred(i)).expect("no matching instruction")
+}
+
+fn find_name(c: &Computation, pred: impl Fn(&Instr) -> bool) -> String {
+    c.instrs.iter().find(|i| pred(i)).expect("no matching instruction").name.clone()
+}
+
+/// Apply `mutate` to the entry computation of a pristine rich program
+/// and assert the verifier reports `rule` as an *error anchored at the
+/// instruction name the mutation returns*.
+fn assert_rejected(rule: &'static str, mutate: impl FnOnce(&mut Computation) -> String) {
+    let mut module = parse_module(&build_rich(3, 2, 4, 5)).expect("parse pristine module");
+    assert!(verify_module(&module).is_empty(), "pristine program must verify clean");
+    let entry = module.entry.clone();
+    let comp = module.computations.get_mut(&entry).expect("entry computation");
+    let name = mutate(comp);
+    let diags = verify_module(&module);
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.severity == Severity::Error && d.rule == rule && d.instruction == name),
+        "expected error[{rule}] at %{name}, got: {}",
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("; ")
+    );
+}
+
+#[test]
+fn mutations_shape_and_dtype_are_rejected() {
+    // declared dot output no longer matches the inferred [m, n]
+    assert_rejected("shape/dot", |c| {
+        let i = find_mut(c, |i| matches!(i.op, Op::Dot(_)));
+        i.shape.dims[0] += 1;
+        i.name.clone()
+    });
+    // exp re-declared as s32: inference still derives f32 from the operand
+    assert_rejected("shape/unary", |c| {
+        let i = find_mut(c, |i| matches!(i.op, Op::Unary(UnOp::Exp)));
+        i.shape.ty = PrimType::S32;
+        i.name.clone()
+    });
+    // reduce init constant flipped to s32 disagrees with the f32 operand
+    assert_rejected("dtype/reduce", |c| {
+        let (red, init) = {
+            let i = c.instrs.iter().find(|i| matches!(i.op, Op::Reduce { .. })).expect("reduce");
+            (i.name.clone(), i.operands[1].clone())
+        };
+        find_mut(c, |i| i.name == init).shape.ty = PrimType::S32;
+        red
+    });
+    // rng state parameter re-declared as u64[3] breaks the threefry signature
+    assert_rejected("rng/state", |c| {
+        let st = find_mut(c, |i| {
+            matches!(i.op, Op::Parameter(_)) && i.shape.ty == PrimType::U64
+        });
+        st.shape.dims = vec![3];
+        find_name(c, |i| matches!(i.op, Op::RngBitGenerator))
+    });
+}
+
+#[test]
+fn mutations_bad_attributes_are_rejected() {
+    // broadcast mapping points past the output rank
+    assert_rejected("attr/broadcast", |c| {
+        let i = find_mut(c, |i| matches!(&i.op, Op::Broadcast(v) if !v.is_empty()));
+        if let Op::Broadcast(v) = &mut i.op {
+            v[0] = 7;
+        }
+        i.name.clone()
+    });
+    // slice limit beyond the operand dimension
+    assert_rejected("attr/slice", |c| {
+        let i = find_mut(c, |i| matches!(i.op, Op::Slice(_)));
+        if let Op::Slice(r) = &mut i.op {
+            r[0].1 = 999;
+        }
+        i.name.clone()
+    });
+    // duplicate entry makes the transpose dims not a permutation
+    assert_rejected("attr/transpose", |c| {
+        let i = find_mut(c, |i| matches!(i.op, Op::Transpose(_)));
+        if let Op::Transpose(p) = &mut i.op {
+            *p = vec![1, 1];
+        }
+        i.name.clone()
+    });
+    // dot contracting dim number past the operand rank
+    assert_rejected("attr/dot", |c| {
+        let i = find_mut(c, |i| matches!(i.op, Op::Dot(_)));
+        if let Op::Dot(d) = &mut i.op {
+            d.lhs_contract = vec![5];
+        }
+        i.name.clone()
+    });
+    // gather slice size larger than the table dimension
+    assert_rejected("attr/gather", |c| {
+        let i = find_mut(c, |i| matches!(i.op, Op::Gather(_)));
+        if let Op::Gather(g) = &mut i.op {
+            g.slice_sizes[1] += 999;
+        }
+        i.name.clone()
+    });
+    // tuple projection index past the rng tuple's two parts
+    assert_rejected("tuple/index", |c| {
+        let i = find_mut(c, |i| matches!(i.op, Op::GetTupleElement(0)));
+        i.op = Op::GetTupleElement(7);
+        i.name.clone()
+    });
+}
+
+#[test]
+fn mutations_broken_dataflow_is_rejected() {
+    // operand renamed to a name that is never defined
+    assert_rejected("dataflow/undefined", |c| {
+        let i = find_mut(c, |i| matches!(i.op, Op::Binary(BinOp::Add)));
+        i.operands[0] = "bogus".to_string();
+        i.name.clone()
+    });
+    // dot hoisted above its operands: defined-before-use must fire
+    assert_rejected("dataflow/undefined", |c| {
+        let pos = c.instrs.iter().position(|i| matches!(i.op, Op::Dot(_))).expect("dot");
+        let ins = c.instrs.remove(pos);
+        let name = ins.name.clone();
+        c.instrs.insert(0, ins);
+        name
+    });
+    // a later instruction stealing an earlier instruction's name
+    assert_rejected("dataflow/duplicate-name", |c| {
+        let dot = find_name(c, |i| matches!(i.op, Op::Dot(_)));
+        find_mut(c, |i| matches!(i.op, Op::Transpose(_))).name = dot.clone();
+        dot
+    });
+    // two parameters claiming the same number
+    assert_rejected("dataflow/param-numbering", |c| {
+        let i = find_mut(c, |i| matches!(i.op, Op::Parameter(1)));
+        i.op = Op::Parameter(0);
+        i.name.clone()
+    });
+}
+
+#[test]
+fn fixture_artifacts_verify_clean() {
+    let (dir, _kind) = common::artifacts_base();
+    let spec_text = std::fs::read_to_string(dir.join("spec.json")).expect("read spec.json");
+    let spec = ModelSpec::parse(&spec_text).expect("parse spec.json");
+    let single = contract::check_single(&spec);
+    assert!(!single.has_errors(), "{single}");
+    let inv = contract::check_inventory(&spec, &dir);
+    assert!(!inv.has_errors(), "{inv}");
+    let mut checked = 0usize;
+    for entry in std::fs::read_dir(dir.join("hlo")).expect("read hlo dir") {
+        let path = entry.expect("dir entry").path();
+        let fname = path.file_name().expect("file name").to_string_lossy().to_string();
+        let Some(stem) = fname.strip_suffix(".hlo.txt") else { continue };
+        let text = std::fs::read_to_string(&path).expect("read hlo");
+        let module = parse_module(&text).unwrap_or_else(|e| panic!("{fname}: parse: {e:#}"));
+        let diags = verify_module(&module);
+        assert!(
+            !has_errors(&diags),
+            "{fname}: {}",
+            diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("; ")
+        );
+        let manifest = ExecManifest::load(&path.with_file_name(format!("{stem}.io.json")))
+            .expect("load manifest");
+        let md = verify_manifest(&module, &manifest);
+        assert!(
+            !has_errors(&md),
+            "{fname}: {}",
+            md.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("; ")
+        );
+        let states = contract::check_manifest_states(&spec, &manifest);
+        assert!(!states.has_errors(), "{fname}: {states}");
+        checked += 1;
+    }
+    assert!(checked > 0, "artifact tree has no executables");
+}
+
+#[test]
+fn manifest_mismatch_is_rejected() {
+    let (dir, _kind) = common::artifacts_base();
+    let text = std::fs::read_to_string(dir.join("hlo").join("tgt_m1.hlo.txt")).expect("read hlo");
+    let module = parse_module(&text).expect("parse tgt_m1");
+    let mut manifest =
+        ExecManifest::load(&dir.join("hlo").join("tgt_m1.io.json")).expect("load manifest");
+    assert!(!has_errors(&verify_manifest(&module, &manifest)));
+    manifest.inputs[0].shape.push(3);
+    let diags = verify_manifest(&module, &manifest);
+    assert!(
+        diags.iter().any(|d| d.severity == Severity::Error && d.rule == "manifest/params"),
+        "doctored manifest must be rejected, got: {}",
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("; ")
+    );
+}
+
+/// Spec whose default draft plan (depth 6 x top-k 3 = 19 verify rows)
+/// has no lowered lane: the largest inventory entry is tgt_m8.
+/// prefill_chunk 8 still fits, so `lane/b1` is the only startup error.
+const BAD_SPEC: &str = r#"{
+  "name": "bad",
+  "d_model": 64, "n_layers": 2, "n_heads": 2, "n_kv_heads": 1,
+  "head_dim": 32, "ffn": 128, "taps": [0, 1], "max_seq": 64,
+  "vocab": 272, "feat_dim": 192, "bos": 256, "eos": 257, "pad": 258,
+  "prefill_chunk": 8, "draft_depth": 6, "tree_top_k": 3,
+  "medusa_heads": 4, "sps_chain": 5,
+  "sps": {"d_model": 32, "n_layers": 1, "n_kv_heads": 1, "head_dim": 32},
+  "executables": {"tgt_m1": {}, "tgt_m8": {}},
+  "batch_sizes": [1]
+}"#;
+
+#[test]
+fn engine_startup_fails_contract_with_report() {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR"))
+        .join(format!("fe_badspec_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create spec dir");
+    std::fs::write(dir.join("spec.json"), BAD_SPEC).expect("write spec.json");
+    let store = common::store_with(&dir, BackendKind::Interpret);
+
+    // single-request engine: the planner envelope has no verify lane
+    let err = TargetModel::open(Rc::clone(&store)).expect_err("open must fail the contract");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("engine contract report"), "{msg}");
+    assert!(msg.contains("lane/b1"), "{msg}");
+
+    // batched engine: chain 9 needs 10 rows, largest lane is 8 — the
+    // contract fires at startup, before any artifact is even opened
+    let mut cfg = BatchConfig::new(1, BatchMethod::Vanilla);
+    cfg.chain_len = 9;
+    let err = BatchEngine::new(store, cfg).expect_err("chain 9 must fail the contract");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("lane/chain"), "{msg}");
+}
