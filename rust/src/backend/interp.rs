@@ -94,6 +94,7 @@ pub struct InterpBound {
 
 impl BackendBound for InterpBound {
     fn call(&self, args: &[Option<&HostTensor>]) -> Result<Vec<HostTensor>> {
+        let _sp = crate::obs::span("interp").label(&self.name);
         if args.len() != self.weights.len() {
             bail!(
                 "{}: {} positional args, executable has {} inputs",

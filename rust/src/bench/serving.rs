@@ -47,6 +47,18 @@ struct Cell {
     tau: f64,
     plan_depth_mean: f64,
     plan_nodes_mean: f64,
+    /// per-phase p50 wall time (µs) for the fasteagle method, from the
+    /// server's always-on phase histograms
+    draft_us_p50: f64,
+    verify_us_p50: f64,
+    accept_us_p50: f64,
+    sched_us_p50: f64,
+    /// Prometheus exposition captured before shutdown (the sweep
+    /// persists the final cell's dump under bench_out/)
+    prom_text: String,
+    /// Chrome trace JSON, captured only when the flight recorder is
+    /// armed (FE_TRACE=1)
+    trace_text: Option<String>,
     server_report: String,
 }
 
@@ -79,6 +91,27 @@ fn server_query(addr: &str, line: &str) -> Result<Json> {
     Json::parse(out.trim()).map_err(|e| anyhow::anyhow!("bad server reply: {e}"))
 }
 
+/// Multi-line query (the Prometheus `metrics` command): accumulate
+/// lines through the `# EOF` terminator.
+fn server_query_text(addr: &str, line: &str) -> Result<String> {
+    let s = std::net::TcpStream::connect(addr)?;
+    let mut w = s.try_clone()?;
+    writeln!(w, "{line}")?;
+    let mut reader = BufReader::new(s);
+    let mut out = String::new();
+    loop {
+        let mut l = String::new();
+        if reader.read_line(&mut l)? == 0 {
+            anyhow::bail!("server closed before the # EOF terminator");
+        }
+        let done = l.trim_end() == "# EOF";
+        out.push_str(&l);
+        if done {
+            return Ok(out);
+        }
+    }
+}
+
 fn run_cell(
     setup: &CellSetup,
     policy: PolicyKind,
@@ -86,6 +119,11 @@ fn run_cell(
     rate: f64,
     port: u16,
 ) -> Result<Cell> {
+    // per-cell traces: drop events from the previous cell's server (it
+    // has already been joined, so no thread is mid-record)
+    if crate::obs::enabled() {
+        crate::obs::reset();
+    }
     let addr = format!("127.0.0.1:{port}");
     let kind = setup.kind;
     let batch = setup.batch;
@@ -142,6 +180,26 @@ fn run_cell(
     let stat = |key: &str| server_stats.get(key).and_then(Json::as_f64).unwrap_or(0.0);
     let (tau, plan_depth_mean, plan_nodes_mean) =
         (stat("mean_tau"), stat("plan_depth_mean"), stat("plan_nodes_mean"));
+    let phase_p50 = |phase: &str| {
+        server_stats
+            .path(&format!("phase_us.fasteagle.{phase}.p50_us"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    let (draft_us_p50, verify_us_p50, accept_us_p50, sched_us_p50) = (
+        phase_p50("draft"),
+        phase_p50("verify"),
+        phase_p50("accept"),
+        phase_p50("sched"),
+    );
+    // export surfaces, captured before shutdown so the sweep can
+    // persist the final cell's dumps under bench_out/
+    let prom_text = server_query_text(&addr, r#"{"cmd":"metrics"}"#)?;
+    let trace_text = if crate::obs::enabled() {
+        Some(server_query(&addr, r#"{"cmd":"trace"}"#)?.to_string())
+    } else {
+        None
+    };
     // shutdown: the write must land (or the join below never returns),
     // but the reply is best-effort — it can be lost to the teardown
     // race and a failed read must not discard the sweep
@@ -179,6 +237,12 @@ fn run_cell(
         tau,
         plan_depth_mean,
         plan_nodes_mean,
+        draft_us_p50,
+        verify_us_p50,
+        accept_us_p50,
+        sched_us_p50,
+        prom_text,
+        trace_text,
         server_report,
     })
 }
@@ -205,6 +269,9 @@ pub fn run(env: &BenchEnv) -> Result<()> {
     };
     let mut rows = Vec::new();
     let mut report = Vec::new();
+    let mut points = Vec::new();
+    let mut last_prom: Option<String> = None;
+    let mut last_trace: Option<String> = None;
     let mut port = BASE_PORT;
     for policy in [PolicyKind::Fcfs, PolicyKind::Spf] {
         for planner in [PlannerKind::Static, PlannerKind::Adaptive] {
@@ -232,6 +299,8 @@ pub fn run(env: &BenchEnv) -> Result<()> {
                     format!("{:.2}", cell.tau),
                     format!("{:.2}", cell.plan_depth_mean),
                     format!("{:.2}", cell.plan_nodes_mean),
+                    format!("{:.0}", cell.draft_us_p50),
+                    format!("{:.0}", cell.verify_us_p50),
                 ]);
                 report.push(Json::obj(vec![
                     ("policy", Json::str(policy.name())),
@@ -247,7 +316,25 @@ pub fn run(env: &BenchEnv) -> Result<()> {
                     ("mean_tau", Json::num(cell.tau)),
                     ("plan_depth_mean", Json::num(cell.plan_depth_mean)),
                     ("plan_nodes_mean", Json::num(cell.plan_nodes_mean)),
+                    ("draft_us_p50", Json::num(cell.draft_us_p50)),
+                    ("verify_us_p50", Json::num(cell.verify_us_p50)),
+                    ("accept_us_p50", Json::num(cell.accept_us_p50)),
+                    ("sched_us_p50", Json::num(cell.sched_us_p50)),
                 ]));
+                points.push(Json::obj(vec![
+                    ("policy", Json::str(policy.name())),
+                    ("planner", Json::str(planner.name())),
+                    ("rate_per_sec", Json::num(rate)),
+                    ("ttft_p50_ms", Json::num(cell.ttft_p50)),
+                    ("per_token_p50_ms", Json::num(cell.tok_p50)),
+                    ("tau", Json::num(cell.tau)),
+                    ("draft_us_p50", Json::num(cell.draft_us_p50)),
+                    ("verify_us_p50", Json::num(cell.verify_us_p50)),
+                ]));
+                last_prom = Some(cell.prom_text.clone());
+                if cell.trace_text.is_some() {
+                    last_trace = cell.trace_text.clone();
+                }
             }
         }
     }
@@ -259,6 +346,7 @@ pub fn run(env: &BenchEnv) -> Result<()> {
     let headers: Vec<String> = [
         "policy", "planner", "req/s", "done", "shed", "ttft_p50", "ttft_p95",
         "ttft_p99", "tok_p50", "tok_p95", "tau", "plan_d", "plan_n",
+        "draft_us", "verify_us",
     ]
     .iter()
     .map(|s| s.to_string())
@@ -266,9 +354,37 @@ pub fn run(env: &BenchEnv) -> Result<()> {
     println!("{}", render_table(&headers, &rows));
     println!(
         "(TTFT and per-token figures in ms from scheduled arrival; tau = mean \
-         accepted length per cycle, plan_d/plan_n = mean planned depth/nodes)"
+         accepted length per cycle, plan_d/plan_n = mean planned depth/nodes, \
+         draft_us/verify_us = per-phase p50 wall time)"
     );
     let path = write_report("serve_open_loop", &Json::Arr(report))?;
     println!("report -> {path:?}");
+
+    // persist the final cell's export surfaces + a compact trajectory
+    // point (the format BENCH_serve.json accumulates across PRs)
+    let out_dir = std::path::Path::new("bench_out");
+    std::fs::create_dir_all(out_dir)?;
+    if let Some(text) = &last_prom {
+        let p = out_dir.join("serve_metrics.prom");
+        std::fs::write(&p, text)?;
+        println!("prometheus -> {p:?}");
+    }
+    if let Some(text) = &last_trace {
+        let p = out_dir.join("serve_trace.json");
+        std::fs::write(&p, text)?;
+        println!("chrome trace -> {p:?} (load in chrome://tracing or ui.perfetto.dev)");
+    }
+    let point = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("bench", Json::str("serve_open_loop")),
+        ("quick", Json::Bool(env.quick)),
+        ("backend", Json::str(&env.runtime.platform())),
+        ("batch", Json::num(batch as f64)),
+        ("requests_per_cell", Json::num(n as f64)),
+        ("max_new", Json::num(max_new as f64)),
+        ("cells", Json::Arr(points)),
+    ]);
+    let p = write_report("BENCH_serve_point", &point)?;
+    println!("trajectory point -> {p:?}");
     Ok(())
 }

@@ -598,6 +598,7 @@ impl BatchEngine {
         let layers = self.lease_layers(slot.method);
         self.pool.shrink(&mut slot.lease, committed, layers);
         metrics.preemptions += 1;
+        crate::obs::mark("preempt", b as u32, slot.req.id, committed as i64);
         self.parked.push_back(Parked {
             cycle: slot.cycle.take().expect("only decoding slots are preempted"),
             req: slot.req,
@@ -637,6 +638,7 @@ impl BatchEngine {
         if let Some(d) = &p.eg_dkv {
             self.ensure_eg_dkv()?.copy_request_from(slot_idx, d)?;
         }
+        crate::obs::mark("resume", slot_idx as u32, p.req.id, 0);
         self.slots[slot_idx] = Some(Slot {
             req: p.req,
             method: p.method,
@@ -664,6 +666,7 @@ impl BatchEngine {
         &mut self,
         run: &[usize],
         plan_depths: &[usize],
+        metrics: &mut ServingMetrics,
     ) -> Result<Vec<Option<DraftOutput>>> {
         let bsz = self.cfg.batch;
         let (v, d, c) = (self.spec.vocab, self.spec.d_model, self.spec.max_seq);
@@ -672,7 +675,10 @@ impl BatchEngine {
             in_run[b] = true;
         }
         let mut out: Vec<Option<DraftOutput>> = (0..bsz).map(|_| None).collect();
-        // host-side methods first (no executable calls)
+        // host-side methods first (no executable calls); FastEagle's
+        // whole draft cost is this loop — the cascade already ran
+        let t_host = Instant::now();
+        let mut any_fe = false;
         for (b, s) in self.slots.iter_mut().enumerate() {
             let Some(slot) = s else { continue };
             if !in_run[b] {
@@ -681,6 +687,7 @@ impl BatchEngine {
             match slot.method {
                 BatchMethod::Vanilla => out[b] = Some(DraftOutput::None),
                 BatchMethod::FastEagle => {
+                    any_fe = true;
                     // the cascade already produced all N levels during
                     // observe; the plan says how many to use this cycle
                     let depth = plan_depths[b];
@@ -700,8 +707,12 @@ impl BatchEngine {
                 BatchMethod::Eagle3 => {}
             }
         }
+        if any_fe {
+            metrics.record_phase("fasteagle", "draft", t_host.elapsed());
+        }
         // EAGLE slots: level 1 from observe; levels 2.. via batched
         // eg_next, each slot stopping at its own planned depth
+        let t_eg = Instant::now();
         let mut eg_chains: Vec<Option<(Vec<i32>, Vec<Vec<f32>>)>> =
             (0..bsz).map(|_| None).collect();
         let mut hs: Vec<Vec<f32>> = Vec::with_capacity(bsz);
@@ -789,6 +800,9 @@ impl BatchEngine {
             }
             // ekv_tmp dropped: temp entries rolled back
         }
+        if eg_chains.iter().any(Option::is_some) {
+            metrics.record_phase("eagle3", "draft", t_eg.elapsed());
+        }
         for (b, chain) in eg_chains.into_iter().enumerate() {
             if let Some((toks, dists)) = chain {
                 out[b] = Some(DraftOutput::Chain(toks, dists));
@@ -869,6 +883,7 @@ impl BatchEngine {
             dkv.set_len(b, 0);
         }
         metrics.requests_failed += 1;
+        crate::obs::mark("failed", b as u32, slot.req.id, 0);
         crate::log_warn!("request {} failed: {err}", slot.req.id);
         Response::error(slot.req.id, err)
     }
@@ -886,24 +901,31 @@ impl BatchEngine {
         let eos_tok = self.spec.eos;
         let mut finished = Vec::new();
         let mut events = Vec::new();
+        let t_cycle = Instant::now();
         if plan.has_work() {
             // per-slot cycle plans first: each running slot's planner
             // sizes this cycle's draft (adaptive slots shrink/grow here)
             let mut plan_depths = vec![0usize; bsz];
             let mut rows_needed = 1usize;
+            let mut run_methods: Vec<&'static str> = Vec::new();
             for &b in &plan.run {
                 let slot = self.slots[b].as_mut().expect("run slot occupied");
                 let method = slot.method;
+                let req_id = slot.req.id;
                 let cycle = slot.cycle.as_mut().expect("run slot is decoding");
-                let depth = {
+                let (depth, nodes) = {
                     let p = cycle.begin_cycle();
                     match method {
-                        BatchMethod::Vanilla => 0,
+                        BatchMethod::Vanilla => (0, 0),
                         // chain plans: the budget caps the chain too
-                        _ => p.depth.min(p.node_budget),
+                        _ => (p.depth.min(p.node_budget), p.total_rows() - 1),
                     }
                 };
-                metrics.record_plan(depth, depth, cycle.accept_window_mean());
+                metrics.record_plan(depth, nodes, cycle.accept_window_mean());
+                crate::obs::mark("plan", b as u32, req_id, depth as i64);
+                if !run_methods.contains(&method.name()) {
+                    run_methods.push(method.name());
+                }
                 plan_depths[b] = depth;
                 rows_needed = rows_needed.max(1 + depth);
             }
@@ -923,7 +945,20 @@ impl BatchEngine {
                     self.cfg.batch, self.spec.verify_ms, self.spec.verify_ms_by_batch
                 )
             })?;
-            let drafts = self.draft_outputs(&plan.run, &plan_depths)?;
+            let t_draft = Instant::now();
+            let drafts = self.draft_outputs(&plan.run, &plan_depths, metrics)?;
+            if crate::obs::enabled() {
+                let d_draft = t_draft.elapsed();
+                for &b in &plan.run {
+                    let slot = self.slots[b].as_ref().expect("run slot occupied");
+                    crate::obs::span_from("draft", t_draft)
+                        .dur(d_draft)
+                        .tid(b as u32)
+                        .req(slot.req.id)
+                        .arg(plan_depths[b] as i64)
+                        .emit();
+                }
+            }
             // assemble per-slot trees through the shared cycle core
             let mut trees: Vec<Option<DraftTree>> = (0..bsz).map(|_| None).collect();
             for &b in &plan.run {
@@ -963,9 +998,9 @@ impl BatchEngine {
                     .collect();
             }
             let mask = build_mask_b(bsz, m, s, &rows);
-            let exec = self
-                .store
-                .bind(&format!("tgt_m{m}{}", self.exec_suffix()), "target")?;
+            let exec_name = format!("tgt_m{m}{}", self.exec_suffix());
+            let t_verify = Instant::now();
+            let exec = self.store.bind(&exec_name, "target")?;
             let tok_t = HostTensor::i32(vec![bsz, m], tokens);
             let pos_t = HostTensor::i32(vec![bsz, m], pos);
             let ctx_t = HostTensor::i32(vec![bsz], ctx);
@@ -984,6 +1019,36 @@ impl BatchEngine {
             let ki = exec.out_idx("kv")?;
             let mut outs = outs;
             self.kv.update_from(outs.swap_remove(ki))?;
+            let d_verify = t_verify.elapsed();
+            // the verify call is shared by every method in the batch:
+            // record its wall time once per method present this cycle
+            for &name in &run_methods {
+                metrics.record_phase(name, "verify", d_verify);
+            }
+            if crate::obs::enabled() {
+                for &b in &plan.run {
+                    let slot = self.slots[b].as_ref().expect("run slot occupied");
+                    let tree_rows =
+                        trees[b].as_ref().map(|t| t.len() as i64).unwrap_or(0);
+                    crate::obs::span_from("verify", t_verify)
+                        .dur(d_verify)
+                        .tid(b as u32)
+                        .req(slot.req.id)
+                        .arg(tree_rows)
+                        .label(&exec_name)
+                        .emit();
+                }
+                for &(b, n) in &plan.prefill {
+                    let slot = self.slots[b].as_ref().expect("prefill slot occupied");
+                    crate::obs::span_from("prefill", t_verify)
+                        .dur(d_verify)
+                        .tid(b as u32)
+                        .req(slot.req.id)
+                        .arg(n as i64)
+                        .label(&exec_name)
+                        .emit();
+                }
+            }
 
             // per-slot acceptance + commit through the shared cycle core
             let mut observe_feats: Vec<Vec<f32>> = vec![vec![]; bsz];
@@ -991,8 +1056,11 @@ impl BatchEngine {
             let mut observe_first: Vec<usize> = vec![0; bsz];
             for b in 0..bsz {
                 let Some(tree) = &trees[b] else { continue };
+                let t_accept = Instant::now();
                 let base = self.kv.len(b);
                 let slot = self.slots[b].as_mut().unwrap();
+                let method_name = slot.method.name();
+                let req_id = slot.req.id;
                 let cycle = slot.cycle.as_mut().expect("run slot is decoding");
                 let acc = cycle.accept(
                     tree,
@@ -1020,10 +1088,29 @@ impl BatchEngine {
                     accepted_len: acc.accepted_slots.len(),
                     finished: commit.finished,
                 });
+                metrics.record_phase(method_name, "accept", t_accept.elapsed());
+                crate::obs::span_from("accept", t_accept)
+                    .tid(b as u32)
+                    .req(req_id)
+                    .arg(acc.accepted_slots.len() as i64)
+                    .emit();
             }
 
             // batched drafter observe over the newly committed anchors
             self.batched_observe(&observe_feats, &observe_next, &observe_first)?;
+            if crate::obs::enabled() {
+                // one cycle span per running slot wrapping plan ->
+                // draft -> verify -> accept -> observe
+                let d_cycle = t_cycle.elapsed();
+                for &b in &plan.run {
+                    let slot = self.slots[b].as_ref().expect("run slot occupied");
+                    crate::obs::span_from("cycle", t_cycle)
+                        .dur(d_cycle)
+                        .tid(b as u32)
+                        .req(slot.req.id)
+                        .emit();
+                }
+            }
 
             // prefilling slots: fold the chunk in; on the last chunk,
             // seed the cycle core and observe the prompt. This runs
@@ -1088,6 +1175,7 @@ impl BatchEngine {
                 }
                 let cycle = slot.cycle.expect("retired slot has a cycle");
                 let cycles = cycle.metrics.cycles;
+                crate::obs::mark("done", b as u32, slot.req.id, cycle.out.len() as i64);
                 finished.push(Response {
                     id: slot.req.id,
                     text: self.tokenizer.decode(&cycle.out),
@@ -1246,8 +1334,12 @@ impl BatchEngine {
     /// slot's per-cycle [`SlotEvent`] — the engine-side source of the
     /// protocol's streaming `tokens` frames.
     pub fn step_events(&mut self, metrics: &mut ServingMetrics) -> Result<StepOutcome> {
+        let t_sched = Instant::now();
         let view = self.sched_view();
         let plan = self.scheduler.plan(&view);
+        // attributed to the engine's default method: the scheduler runs
+        // once per step for the whole batch, not per request
+        metrics.record_phase(self.cfg.method.name(), "sched", t_sched.elapsed());
         metrics.requests_deferred += plan.new_deferrals;
 
         // execute the plan: preempt -> resume -> admit, then iterate
@@ -1273,6 +1365,15 @@ impl BatchEngine {
                     .expect("admitted request left the queue");
                 // queue wait ends at the admission decision
                 metrics.record_admitted(req.arrival.elapsed());
+                // queue spans live on dedicated lanes: a request can wait
+                // while its eventual slot still runs the previous occupant
+                let queue_tid = crate::obs::QUEUE_TID_BASE
+                    + (req.id % crate::obs::QUEUE_LANES) as u32;
+                crate::obs::span_from("queue", req.arrival)
+                    .tid(queue_tid)
+                    .req(req.id)
+                    .emit();
+                crate::obs::mark("admit", slot as u32, req.id, 0);
                 let cost = self.request_blocks(self.method_of(&req));
                 let mut lease = Lease::default();
                 self.pool

@@ -11,6 +11,7 @@
 //!   on the KV block pool; each distinct request is counted **once** no
 //!   matter how many scheduler passes it waits through.
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::util::stats::Histogram;
@@ -66,6 +67,14 @@ pub struct ServingMetrics {
     pub occupancy_sum: u64,
     pub occupancy_samples: u64,
     pub occupancy_peak: usize,
+    /// per-(method, phase) wall-time histograms over the batched engine's
+    /// sections — phases are `"sched"`, `"draft"`, `"verify"`, `"accept"`,
+    /// methods are `BatchMethod::name()` strings. Batched sections that
+    /// serve several methods at once (the shared verify call) record one
+    /// sample per method present, so fasteagle vs eagle3 draft cost stays
+    /// comparable per cycle. Always on — independent of the `obs` flight
+    /// recorder.
+    pub phase_us: BTreeMap<(&'static str, &'static str), Histogram>,
 }
 
 impl Default for ServingMetrics {
@@ -98,6 +107,7 @@ impl Default for ServingMetrics {
             occupancy_sum: 0,
             occupancy_samples: 0,
             occupancy_peak: 0,
+            phase_us: BTreeMap::new(),
         }
     }
 }
@@ -134,6 +144,22 @@ impl ServingMetrics {
             self.accept_window_sum += w;
             self.accept_window_samples += 1;
         }
+    }
+
+    /// Record one engine section's wall time under a (method, phase) key.
+    pub fn record_phase(&mut self, method: &'static str, phase: &'static str, wall: Duration) {
+        self.phase_us
+            .entry((method, phase))
+            .or_default()
+            .record_us(wall.as_secs_f64() * 1e6);
+    }
+
+    /// Look up one (method, phase) histogram.
+    pub fn phase_hist(&self, method: &str, phase: &str) -> Option<&Histogram> {
+        self.phase_us
+            .iter()
+            .find(|((m, p), _)| *m == method && *p == phase)
+            .map(|(_, h)| h)
     }
 
     /// Sample the number of occupied slots at one scheduler step.
@@ -190,6 +216,9 @@ impl ServingMetrics {
         self.occupancy_sum += other.occupancy_sum;
         self.occupancy_samples += other.occupancy_samples;
         self.occupancy_peak = self.occupancy_peak.max(other.occupancy_peak);
+        for (&key, h) in &other.phase_us {
+            self.phase_us.entry(key).or_default().merge(h);
+        }
     }
 
     pub fn tokens_per_sec(&self) -> f64 {
@@ -393,6 +422,28 @@ mod tests {
         let r = m.report();
         assert!(r.contains("plan_d=2.00[1-3]"), "{r}");
         assert!(r.contains("plan_n=3.00"), "{r}");
+    }
+
+    #[test]
+    fn phase_histograms_record_per_method_and_merge() {
+        let mut m = ServingMetrics::default();
+        m.record_phase("fasteagle", "draft", Duration::from_micros(120));
+        m.record_phase("fasteagle", "draft", Duration::from_micros(180));
+        m.record_phase("eagle3", "draft", Duration::from_micros(900));
+        m.record_phase("fasteagle", "verify", Duration::from_micros(400));
+        assert_eq!(m.phase_hist("fasteagle", "draft").map(Histogram::count), Some(2));
+        assert_eq!(m.phase_hist("eagle3", "draft").map(Histogram::count), Some(1));
+        assert!(m.phase_hist("vanilla", "draft").is_none());
+        let mut delta = ServingMetrics::default();
+        delta.record_phase("fasteagle", "draft", Duration::from_micros(150));
+        delta.record_phase("eagle3", "verify", Duration::from_micros(700));
+        m.merge(&delta);
+        assert_eq!(m.phase_hist("fasteagle", "draft").map(Histogram::count), Some(3));
+        assert_eq!(m.phase_hist("eagle3", "verify").map(Histogram::count), Some(1));
+        // the two methods stay distinct series
+        let fe = m.phase_hist("fasteagle", "draft").expect("fe series").mean_us();
+        let eg = m.phase_hist("eagle3", "draft").expect("eg series").mean_us();
+        assert!(fe < eg, "fe {fe} vs eg {eg}");
     }
 
     #[test]

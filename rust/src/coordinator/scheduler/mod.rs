@@ -151,6 +151,7 @@ impl Scheduler {
 
     /// Decide one step. Pure over the view except for the deferral set.
     pub fn plan(&mut self, view: &SchedView) -> SchedulePlan {
+        let mut span = crate::obs::span("sched");
         let mut plan = SchedulePlan::default();
         let mut avail = view.pool_available;
         let mut free = view.free_slots.clone();
@@ -275,6 +276,7 @@ impl Scheduler {
         for &(slot, _) in &plan.resume {
             plan.run.push(slot);
         }
+        span.set_arg((plan.run.len() + plan.admit.len() + plan.prefill.len()) as i64);
         plan
     }
 }

@@ -33,7 +33,11 @@
 //!   <- {"event": "tokens", "id": .., "cycle": .., "tokens": [..],
 //!       "text": "..", "accepted": ..}    (per cycle, stream mode only)
 //!   <- {"id": .., "text": "...", "tau": .., "new_tokens": .., ...}
-//!   -> {"cmd": "stats"}   <- serving metrics
+//!   -> {"cmd": "stats"}   <- serving metrics (incl. per-phase timing)
+//!   -> {"cmd": "trace"}   <- flight-recorder dump, Chrome trace-event
+//!                            JSON on one line (empty when tracing off)
+//!   -> {"cmd": "metrics"} <- Prometheus text exposition over multiple
+//!                            lines, terminated by a "# EOF" line
 //!   -> {"cmd": "shutdown"}
 
 // The server must not panic on a poisoned lock or stray unwrap: every
@@ -359,6 +363,27 @@ impl Server {
     }
 }
 
+/// Per-phase timing summary for the stats reply:
+/// `{method: {phase: {count, mean_us, p50_us, p99_us}}}`.
+fn phase_stats_json(m: &ServingMetrics) -> Json {
+    let mut methods: std::collections::BTreeMap<String, Json> = std::collections::BTreeMap::new();
+    for (&(method, phase), h) in &m.phase_us {
+        let entry = Json::obj(vec![
+            ("count", Json::num(h.count() as f64)),
+            ("mean_us", Json::num(h.mean_us())),
+            ("p50_us", Json::num(h.percentile_us(0.5))),
+            ("p99_us", Json::num(h.percentile_us(0.99))),
+        ]);
+        let slot = methods
+            .entry(method.to_string())
+            .or_insert_with(|| Json::Obj(Default::default()));
+        if let Json::Obj(phases) = slot {
+            phases.insert(phase.to_string(), entry);
+        }
+    }
+    Json::Obj(methods)
+}
+
 fn handle_conn(
     stream: TcpStream,
     queue: Arc<AdmissionQueue<(Request, ConnReply)>>,
@@ -434,8 +459,26 @@ fn handle_conn(
                     ("p99_ms", Json::num(m.latency.percentile_us(0.99) / 1e3)),
                     ("wait_p50_ms", Json::num(m.queue_wait.percentile_us(0.5) / 1e3)),
                     ("ttfc_p50_ms", Json::num(m.ttfc.percentile_us(0.5) / 1e3)),
+                    ("phase_us", phase_stats_json(&m)),
                 ]);
                 writeln!(writer, "{}", j.to_string())?;
+                continue;
+            }
+            Some("trace") => {
+                // one line of Chrome trace-event JSON; "{\"traceEvents\":[]...}"
+                // when the recorder is disabled or empty
+                writeln!(writer, "{}", crate::obs::chrome_trace_json())?;
+                continue;
+            }
+            Some("metrics") => {
+                // render under the lock, write after releasing it so a
+                // slow client never stalls the stats path
+                let text = {
+                    let m = metrics.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                    crate::obs::prom::render(&m)
+                };
+                writer.write_all(text.as_bytes())?;
+                writer.flush()?;
                 continue;
             }
             _ => {}

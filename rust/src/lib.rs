@@ -20,6 +20,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod draft;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod spec;
 pub mod util;

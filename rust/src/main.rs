@@ -9,6 +9,8 @@
 //!   selfcheck  losslessness + stack sanity across all drafters
 //!   fixture    emit the deterministic interpreter-backed artifact tree
 //!   check      static HLO verification + engine-contract report
+//!   trace      batched run with the flight recorder armed; writes
+//!              Chrome trace-event JSON (chrome://tracing / Perfetto)
 //!
 //! Common flags: --artifacts DIR (default ./artifacts; env FE_ARTIFACTS),
 //! --target NAME (default base), --drafter NAME (default fasteagle),
@@ -38,8 +40,11 @@ commands:
   serve      [--addr HOST:PORT] [--method vanilla|eagle3|fasteagle] [--target T]
              [--batch B] [--chain N] [--pool-blocks N] [--queue N]
              [--policy fcfs|spf] [--prefill-chunk N] [--frame-queue N]
+             [--trace]   (arm the flight recorder; dump via {\"cmd\":\"trace\"})
   batch      [--batch B] [--method vanilla|eagle3|fasteagle] [--requests N]
              [--policy fcfs|spf]
+  trace      [--out FILE] [--batch B] [--requests N] [--max-new N]
+             run a batched workload with tracing on, write Chrome trace JSON
   bench      table1|table2|table3|fig3|microbench|serve|all [--quick]
   selfcheck  [--target T]
   fixture    [--out DIR] [--seed N]   emit interpreter-runnable artifacts
@@ -50,7 +55,9 @@ draft-plan flags (generate/serve/batch; per-request \"draft\" overrides):
   --planner static|adaptive  --draft-depth N  --draft-top-k N
   --draft-budget N  --no-tree (alias for --draft-top-k 1)
 
-flags: --artifacts DIR  --backend pjrt|interpret  --seed N  --quick";
+flags: --artifacts DIR  --backend pjrt|interpret  --seed N  --quick
+env:   FE_TRACE=1 arms the flight recorder for any command;
+       FE_LOG=level[,module=level] filters logging (see README)";
 
 /// Backend selection: `--backend` flag, else `FE_BACKEND`, else PJRT.
 fn make_runtime(args: &Args) -> Result<Arc<Runtime>> {
@@ -177,6 +184,9 @@ fn batch_config(args: &Args) -> Result<BatchConfig> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.bool_flag("trace") {
+        fasteagle::obs::enable();
+    }
     let rt = make_runtime(args)?;
     let store = open_store(args, &rt)?;
     let engine = BatchEngine::new(Rc::clone(&store), batch_config(args)?)?;
@@ -224,6 +234,43 @@ fn cmd_batch(args: &Args) -> Result<()> {
         m.mean_occupancy(),
         m.requests_deferred,
     );
+    Ok(())
+}
+
+/// `fasteagle trace` — drive a short closed batched workload with the
+/// flight recorder armed and write the Chrome trace-event JSON to
+/// `--out` (load it in chrome://tracing or <https://ui.perfetto.dev>).
+fn cmd_trace(args: &Args) -> Result<()> {
+    fasteagle::obs::enable();
+    fasteagle::obs::reset();
+    let rt = make_runtime(args)?;
+    let store = open_store(args, &rt)?;
+    let mut engine = BatchEngine::new(Rc::clone(&store), batch_config(args)?)?;
+    let root = artifacts_dir(args);
+    let prompts =
+        fasteagle::workload::load_prompts(std::path::Path::new(&root), "dialog")?;
+    let n = args.usize_or("requests", 4);
+    let base_seed = args.usize_or("seed", 0) as u64;
+    // ids start at 1: req 0 means "not request-scoped" in the trace
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| {
+            let mut r = Request::new(i as u64 + 1, prompts[i % prompts.len()].clone());
+            r.cfg.max_new_tokens = args.usize_or("max-new", 24);
+            r.cfg.seed = base_seed.wrapping_add(i as u64);
+            r
+        })
+        .collect();
+    let (resps, m) = engine.run(reqs)?;
+    let events = fasteagle::obs::snapshot();
+    let out = args.str_or("out", "trace.json");
+    std::fs::write(&out, fasteagle::obs::chrome::trace_json(&events))
+        .with_context(|| out.clone())?;
+    println!(
+        "{} requests, {} trace events -> {out} (load in chrome://tracing or ui.perfetto.dev)",
+        resps.len(),
+        events.len(),
+    );
+    println!("{}", m.report());
     Ok(())
 }
 
@@ -441,6 +488,11 @@ fn cmd_check(args: &Args) -> Result<()> {
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    // FE_TRACE=1 arms the flight recorder for any command (`serve
+    // --trace` and the `trace` command arm it themselves)
+    if matches!(std::env::var("FE_TRACE").ok().as_deref(), Some("1") | Some("true")) {
+        fasteagle::obs::enable();
+    }
     let Some(cmd) = args.positional.first().map(String::as_str) else {
         println!("{USAGE}");
         return Ok(());
@@ -464,6 +516,7 @@ fn main() -> Result<()> {
         "selfcheck" => cmd_selfcheck(&args),
         "fixture" => cmd_fixture(&args),
         "check" => cmd_check(&args),
+        "trace" => cmd_trace(&args),
         other => {
             println!("unknown command {other:?}\n{USAGE}");
             std::process::exit(2);

@@ -1,0 +1,90 @@
+//! Chrome trace-event JSON rendering for flight-recorder snapshots.
+//!
+//! Output is the "JSON object format" of the trace-event spec: a single
+//! line `{"traceEvents":[...]}` loadable in `chrome://tracing` or
+//! <https://ui.perfetto.dev>. Spans are complete events (`ph:"X"` with
+//! `ts`/`dur` in microseconds), instants are `ph:"i"` with thread scope.
+//! `pid` is the replica, `tid` the batch slot (or a queue lane, see
+//! `obs::QUEUE_TID_BASE`); the request id and span-specific counts ride
+//! in `args`.
+
+use crate::util::json::Json;
+
+use super::TraceEvent;
+
+fn event_json(e: &TraceEvent) -> Json {
+    let mut args = vec![("req", Json::num(e.req as f64)), ("n", Json::num(e.arg as f64))];
+    if let Some(label) = &e.label {
+        args.push(("exec", Json::str(label)));
+    }
+    let mut fields = vec![
+        ("name", Json::str(&e.name)),
+        ("cat", Json::str("serve")),
+        ("ph", Json::str(if e.is_span { "X" } else { "i" })),
+        ("ts", Json::num(e.ts_us as f64)),
+        ("pid", Json::num(e.pid as f64)),
+        ("tid", Json::num(e.tid as f64)),
+        ("args", Json::obj(args)),
+    ];
+    if e.is_span {
+        fields.push(("dur", Json::num(e.dur_us as f64)));
+    } else {
+        // instant scope: thread
+        fields.push(("s", Json::str("t")));
+    }
+    Json::obj(fields)
+}
+
+/// Render a snapshot as single-line Chrome trace-event JSON.
+pub fn trace_json(events: &[TraceEvent]) -> String {
+    let arr: Vec<Json> = events.iter().map(event_json).collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(arr)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &str, ts: u64, dur: u64, tid: u32, req: u64) -> TraceEvent {
+        TraceEvent {
+            ts_us: ts,
+            dur_us: dur,
+            name: name.to_string(),
+            is_span: true,
+            pid: 0,
+            tid,
+            req,
+            arg: 0,
+            label: None,
+        }
+    }
+
+    #[test]
+    fn trace_json_is_valid_and_complete() {
+        let mut e = span("verify", 10, 20, 2, 7);
+        e.label = Some("tgt_m4_b4".to_string());
+        e.arg = 5;
+        let mut i = span("done", 40, 0, 2, 7);
+        i.is_span = false;
+        let text = trace_json(&[e, i]);
+        assert!(!text.contains('\n'), "trace must be a single line");
+        let v = Json::parse(&text).expect("valid JSON");
+        let events = v.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+        assert_eq!(events.len(), 2);
+        for ev in events {
+            for key in ["name", "ph", "ts", "pid", "tid"] {
+                assert!(ev.get(key).is_some(), "event missing {key}");
+            }
+        }
+        assert_eq!(events[0].get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(events[0].get("dur").and_then(Json::as_i64), Some(20));
+        assert_eq!(events[0].path("args.exec").and_then(Json::as_str), Some("tgt_m4_b4"));
+        assert_eq!(events[0].path("args.n").and_then(Json::as_i64), Some(5));
+        assert_eq!(events[1].get("ph").and_then(Json::as_str), Some("i"));
+        assert_eq!(events[1].get("s").and_then(Json::as_str), Some("t"));
+    }
+}

@@ -1,0 +1,463 @@
+//! Flight recorder: low-overhead tracing for the serving stack.
+//!
+//! Disabled by default. When off, every probe is a single relaxed atomic
+//! load — no clock reads, no allocation, no locks — so instrumentation
+//! stays in release builds for free. When armed (`obs::enable()`, the
+//! `FE_TRACE=1` env var, `fasteagle serve --trace`, or `fasteagle
+//! trace`), each recording thread lazily registers a fixed-capacity
+//! lock-free ring ([`ring::Ring`]) and appends [`TraceEvent`]s to it;
+//! memory is bounded at `capacity × threads` events and old events are
+//! overwritten, which is exactly the flight-recorder contract: the
+//! recent past is always available, arbitrarily old history is not.
+//!
+//! Two export formats sit on top of `snapshot()`:
+//! - [`chrome::trace_json`] — Chrome trace-event JSON (load in
+//!   `chrome://tracing` or <https://ui.perfetto.dev>); served by the TCP
+//!   `{"cmd":"trace"}` command and written by `fasteagle trace`.
+//! - [`prom::render`] — Prometheus text exposition of `ServingMetrics`
+//!   (always-on counters/histograms, independent of the recorder);
+//!   served by `{"cmd":"metrics"}`.
+//!
+//! Span/track conventions (see README "Observability"):
+//! - `pid` is the replica (0 today), `tid` is the batch slot for
+//!   request-lifecycle spans; `tid` 0 doubles as the engine thread for
+//!   backend `execute`/`interp` spans, which always nest inside the
+//!   slot-0 phase windows or sit between cycles.
+//! - queue-wait spans live on `QUEUE_TID_BASE + (req % QUEUE_LANES)`
+//!   lanes: a request can wait while its eventual slot is still busy
+//!   with the previous occupant, so queue spans would otherwise
+//!   partially overlap slot tracks.
+
+pub mod chrome;
+pub mod prom;
+mod ring;
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::time::{Duration, Instant};
+
+use ring::{Ring, EVENT_WORDS};
+
+/// Events retained per recording thread.
+pub const DEFAULT_CAPACITY: usize = 8192;
+
+/// Base `tid` for queue-wait lanes (slot tids are far below this).
+pub const QUEUE_TID_BASE: u32 = 1000;
+/// Queue spans are spread over this many lanes by request id.
+pub const QUEUE_LANES: u64 = 64;
+
+const KIND_SPAN: u64 = 1;
+const KIND_INSTANT: u64 = 2;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Bumped by `reset()`; threads holding a ring from an older generation
+/// re-register a fresh one on their next record.
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+static CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_CAPACITY);
+
+fn registry() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static R: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn interner() -> &'static Mutex<Vec<String>> {
+    static I: OnceLock<Mutex<Vec<String>>> = OnceLock::new();
+    I.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn time_origin() -> Instant {
+    static T: OnceLock<Instant> = OnceLock::new();
+    *T.get_or_init(Instant::now)
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<(u64, Arc<Ring>)>> = const { RefCell::new(None) };
+}
+
+/// The hot-path check: a single relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Arm the recorder. Also pins the trace clock origin, so timestamps of
+/// events (and of `span_from` starts taken after this call) are
+/// microseconds since enablement.
+pub fn enable() {
+    let _ = time_origin();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Drop all recorded events and detach every thread's ring. Threads that
+/// are mid-record keep writing to their orphaned ring until their next
+/// event, which lands in a fresh one; such stragglers are lost, which is
+/// fine for a flight recorder reset at a run boundary.
+pub fn reset() {
+    GENERATION.fetch_add(1, Ordering::SeqCst);
+    registry().lock().unwrap_or_else(PoisonError::into_inner).clear();
+    interner().lock().unwrap_or_else(PoisonError::into_inner).clear();
+}
+
+/// Set the per-thread ring capacity for rings created after this call.
+pub fn set_capacity(events: usize) {
+    CAPACITY.store(events.max(64), Ordering::SeqCst);
+}
+
+/// Microseconds since the trace clock origin.
+pub fn ts_us(at: Instant) -> u64 {
+    at.saturating_duration_since(time_origin()).as_micros() as u64
+}
+
+fn intern(s: &str) -> u32 {
+    let mut v = interner().lock().unwrap_or_else(PoisonError::into_inner);
+    if let Some(i) = v.iter().position(|x| x == s) {
+        return i as u32;
+    }
+    v.push(s.to_string());
+    (v.len() - 1) as u32
+}
+
+/// Undecoded event fields that need no interning.
+struct Raw {
+    kind: u64,
+    ts: u64,
+    dur: u64,
+    tid: u32,
+    req: u64,
+    arg: i64,
+}
+
+fn record(raw: Raw, name: &str, label: Option<&str>) {
+    let generation = GENERATION.load(Ordering::SeqCst);
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        let stale = match &*l {
+            Some((g, _)) => *g != generation,
+            None => true,
+        };
+        if stale {
+            let ring = Arc::new(Ring::new(CAPACITY.load(Ordering::SeqCst)));
+            registry()
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .push(Arc::clone(&ring));
+            *l = Some((generation, ring));
+        }
+        let Some((_, ring)) = &*l else { return };
+        let name_id = intern(name) as u64;
+        let label_id = label.map(|s| intern(s) as u64 + 1).unwrap_or(0);
+        ring.push(&[
+            raw.ts,
+            raw.dur,
+            name_id | (raw.kind << 32),
+            // pid (replica, low 32) | tid (high 32)
+            (raw.tid as u64) << 32,
+            raw.req,
+            raw.arg as u64,
+            label_id,
+        ]);
+    });
+}
+
+/// One decoded flight-recorder event.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub ts_us: u64,
+    /// zero for instants
+    pub dur_us: u64,
+    pub name: String,
+    /// true: duration span (Chrome `ph:"X"`); false: instant (`ph:"i"`)
+    pub is_span: bool,
+    pub pid: u32,
+    pub tid: u32,
+    /// request id, 0 when not request-scoped
+    pub req: u64,
+    /// span-specific count (tokens, rows, depth, …)
+    pub arg: i64,
+    /// optional detail string (e.g. executable name)
+    pub label: Option<String>,
+}
+
+/// Decode and collect every live event, sorted by timestamp (ties: the
+/// longer span first, so parents precede children).
+pub fn snapshot() -> Vec<TraceEvent> {
+    let rings: Vec<Arc<Ring>> = registry()
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .clone();
+    let names: Vec<String> = interner()
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .clone();
+    let mut raw: Vec<[u64; EVENT_WORDS]> = Vec::new();
+    for r in &rings {
+        r.drain_into(&mut raw);
+    }
+    let mut events: Vec<TraceEvent> = raw
+        .iter()
+        .filter_map(|w| {
+            let name_id = (w[2] & 0xffff_ffff) as usize;
+            let kind = w[2] >> 32;
+            let name = names.get(name_id)?.clone();
+            let label = match w[6] {
+                0 => None,
+                id => Some(names.get(id as usize - 1)?.clone()),
+            };
+            Some(TraceEvent {
+                ts_us: w[0],
+                dur_us: w[1],
+                name,
+                is_span: kind == KIND_SPAN,
+                pid: (w[3] & 0xffff_ffff) as u32,
+                tid: (w[3] >> 32) as u32,
+                req: w[4],
+                arg: w[5] as i64,
+                label,
+            })
+        })
+        .collect();
+    events.sort_by(|a, b| a.ts_us.cmp(&b.ts_us).then(b.dur_us.cmp(&a.dur_us)));
+    events
+}
+
+/// Total events ever recorded (including overwritten ones) in the
+/// current generation.
+pub fn recorded_total() -> u64 {
+    registry()
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .iter()
+        .map(|r| r.written())
+        .sum()
+}
+
+/// Convenience: snapshot and render as Chrome trace-event JSON.
+pub fn chrome_trace_json() -> String {
+    chrome::trace_json(&snapshot())
+}
+
+/// RAII span: records a Chrome `X` (complete) event on drop. Inactive —
+/// carrying no clock read and skipping all builder work — when the
+/// recorder is disabled at creation.
+pub struct SpanGuard {
+    start: Option<Instant>,
+    fixed_dur: Option<Duration>,
+    name: &'static str,
+    tid: u32,
+    req: u64,
+    arg: i64,
+    label: Option<String>,
+}
+
+/// Open a span starting now.
+#[must_use = "a span records when dropped"]
+pub fn span(name: &'static str) -> SpanGuard {
+    let start = if enabled() { Some(Instant::now()) } else { None };
+    SpanGuard { start, fixed_dur: None, name, tid: 0, req: 0, arg: 0, label: None }
+}
+
+/// Open a span back-dated to `start` (e.g. a request's arrival time).
+#[must_use = "a span records when dropped"]
+pub fn span_from(name: &'static str, start: Instant) -> SpanGuard {
+    let start = if enabled() { Some(start) } else { None };
+    SpanGuard { start, fixed_dur: None, name, tid: 0, req: 0, arg: 0, label: None }
+}
+
+impl SpanGuard {
+    pub fn tid(mut self, tid: u32) -> SpanGuard {
+        self.tid = tid;
+        self
+    }
+
+    pub fn req(mut self, req: u64) -> SpanGuard {
+        self.req = req;
+        self
+    }
+
+    pub fn arg(mut self, arg: i64) -> SpanGuard {
+        self.arg = arg;
+        self
+    }
+
+    /// Set the count argument after the fact (e.g. once a result size is
+    /// known, just before the guard drops).
+    pub fn set_arg(&mut self, arg: i64) {
+        self.arg = arg;
+    }
+
+    /// Attach a detail string; allocates only when the span is active.
+    pub fn label(mut self, label: &str) -> SpanGuard {
+        if self.start.is_some() {
+            self.label = Some(label.to_string());
+        }
+        self
+    }
+
+    /// Fix the span's duration instead of measuring to the drop point —
+    /// used to attribute one batched section's wall time to every slot
+    /// that shared it.
+    pub fn dur(mut self, dur: Duration) -> SpanGuard {
+        if self.start.is_some() {
+            self.fixed_dur = Some(dur);
+        }
+        self
+    }
+
+    /// Record now, consuming the guard.
+    pub fn emit(self) {}
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let dur = self.fixed_dur.unwrap_or_else(|| start.elapsed());
+        record(
+            Raw {
+                kind: KIND_SPAN,
+                ts: ts_us(start),
+                dur: dur.as_micros() as u64,
+                tid: self.tid,
+                req: self.req,
+                arg: self.arg,
+            },
+            self.name,
+            self.label.as_deref(),
+        );
+    }
+}
+
+/// Record an instant event (Chrome `ph:"i"`).
+pub fn mark(name: &'static str, tid: u32, req: u64, arg: i64) {
+    if !enabled() {
+        return;
+    }
+    let raw = Raw { kind: KIND_INSTANT, ts: ts_us(Instant::now()), dur: 0, tid, req, arg };
+    record(raw, name, None);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The recorder is process-global; serialize tests that toggle it so
+    // they cannot observe each other's events.
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static M: Mutex<()> = Mutex::new(());
+        M.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = guard();
+        disable();
+        reset();
+        span("obs_test_disabled").tid(7).req(1).emit();
+        mark("obs_test_disabled_mark", 7, 1, 0);
+        assert_eq!(recorded_total(), 0);
+        assert!(snapshot().is_empty());
+    }
+
+    #[test]
+    fn span_and_mark_round_trip() {
+        let _g = guard();
+        enable();
+        reset();
+        {
+            let mut s = span("obs_test_outer").tid(3).req(42).label("exec_a");
+            s.set_arg(9);
+            std::thread::sleep(Duration::from_millis(2));
+            span("obs_test_inner").tid(3).req(42).emit();
+            drop(s);
+        }
+        mark("obs_test_mark", 3, 42, 5);
+        let events = snapshot();
+        disable();
+        let outer = events
+            .iter()
+            .find(|e| e.name == "obs_test_outer")
+            .expect("outer span recorded");
+        assert!(outer.is_span);
+        assert_eq!(outer.tid, 3);
+        assert_eq!(outer.pid, 0);
+        assert_eq!(outer.req, 42);
+        assert_eq!(outer.arg, 9);
+        assert_eq!(outer.label.as_deref(), Some("exec_a"));
+        assert!(outer.dur_us >= 2000, "outer dur {}", outer.dur_us);
+        let inner = events
+            .iter()
+            .find(|e| e.name == "obs_test_inner")
+            .expect("inner span recorded");
+        // inner nests within outer on the trace clock
+        assert!(inner.ts_us >= outer.ts_us);
+        assert!(inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us + 1);
+        let m = events
+            .iter()
+            .find(|e| e.name == "obs_test_mark")
+            .expect("mark recorded");
+        assert!(!m.is_span);
+        assert_eq!(m.arg, 5);
+    }
+
+    #[test]
+    fn fixed_duration_and_backdated_start() {
+        let _g = guard();
+        enable();
+        reset();
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(1));
+        span_from("obs_test_backdated", t0)
+            .dur(Duration::from_micros(1234))
+            .tid(1)
+            .emit();
+        let events = snapshot();
+        disable();
+        let e = events
+            .iter()
+            .find(|e| e.name == "obs_test_backdated")
+            .expect("backdated span recorded");
+        assert_eq!(e.dur_us, 1234);
+    }
+
+    #[test]
+    fn reset_drops_history() {
+        let _g = guard();
+        enable();
+        reset();
+        span("obs_test_reset_victim").emit();
+        assert!(snapshot().iter().any(|e| e.name == "obs_test_reset_victim"));
+        reset();
+        assert!(snapshot().is_empty());
+        // the thread re-registers transparently after a reset
+        span("obs_test_reset_survivor").emit();
+        let events = snapshot();
+        disable();
+        assert!(events.iter().any(|e| e.name == "obs_test_reset_survivor"));
+        assert!(!events.iter().any(|e| e.name == "obs_test_reset_victim"));
+    }
+
+    #[test]
+    fn events_from_multiple_threads_are_collected() {
+        let _g = guard();
+        enable();
+        reset();
+        let hs: Vec<_> = (0..3)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    span("obs_test_thread").tid(100 + i).req(i as u64).emit();
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().expect("thread");
+        }
+        let events = snapshot();
+        disable();
+        let n = events.iter().filter(|e| e.name == "obs_test_thread").count();
+        assert_eq!(n, 3);
+    }
+}

@@ -1,0 +1,179 @@
+//! Prometheus text-exposition rendering of `ServingMetrics`.
+//!
+//! Served by the TCP `{"cmd":"metrics"}` command. The body is
+//! multi-line, so — to stay framable inside the JSON-lines protocol —
+//! the reply is terminated by a literal `# EOF` line (the OpenMetrics
+//! terminator); readers consume lines until they see it.
+//!
+//! Histogram buckets come from `util::stats::Histogram` via
+//! `count_le_us`, which counts whole internal log-buckets whose upper
+//! edge fits under the `le` bound: cumulative counts are conservative
+//! (never include a sample above the bound) and monotone in the bound.
+//! Phase histograms export as one `fe_phase_us` family labeled by
+//! `method` (a `BatchMethod` name) and `phase`
+//! (`sched|draft|verify|accept`), so fasteagle vs eagle3 draft cost is
+//! a single PromQL comparison.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::ServingMetrics;
+use crate::util::stats::Histogram;
+
+/// `le` bucket bounds in microseconds: 10µs .. 10s.
+const LE_BOUNDS_US: [u64; 10] =
+    [10, 50, 100, 500, 1_000, 5_000, 10_000, 100_000, 1_000_000, 10_000_000];
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn scalar(out: &mut String, name: &str, kind: &str, help: &str, v: f64) {
+    header(out, name, kind, help);
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// One histogram series; `labels` is either empty or a `k="v",` prefix
+/// (trailing comma included) for the `le` label to follow.
+fn hist_series(out: &mut String, name: &str, labels: &str, h: &Histogram) {
+    for bound in LE_BOUNDS_US {
+        let _ = writeln!(
+            out,
+            "{name}_bucket{{{labels}le=\"{bound}\"}} {}",
+            h.count_le_us(bound as f64)
+        );
+    }
+    let _ = writeln!(out, "{name}_bucket{{{labels}le=\"+Inf\"}} {}", h.count());
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name}_sum {}", h.sum_us());
+        let _ = writeln!(out, "{name}_count {}", h.count());
+    } else {
+        let trimmed = labels.trim_end_matches(',');
+        let _ = writeln!(out, "{name}_sum{{{trimmed}}} {}", h.sum_us());
+        let _ = writeln!(out, "{name}_count{{{trimmed}}} {}", h.count());
+    }
+}
+
+fn hist(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    header(out, name, "histogram", help);
+    hist_series(out, name, "", h);
+}
+
+/// Render the full exposition, terminated by a `# EOF` line.
+pub fn render(m: &ServingMetrics) -> String {
+    let mut out = String::new();
+    let counters: [(&str, &str, u64); 9] = [
+        ("fe_requests_done_total", "completed generations", m.requests_done),
+        ("fe_requests_rejected_total", "requests shed at admission", m.requests_rejected),
+        ("fe_requests_deferred_total", "requests deferred under KV pressure", m.requests_deferred),
+        ("fe_requests_failed_total", "requests answered with an error", m.requests_failed),
+        ("fe_tokens_out_total", "committed output tokens", m.tokens_out),
+        ("fe_cycles_total", "decode cycles run", m.cycles),
+        ("fe_prefill_chunks_total", "prompt chunks ingested on the batch lane", m.prefill_chunks),
+        ("fe_preemptions_total", "slots parked under pool pressure", m.preemptions),
+        ("fe_resumes_total", "parked requests restored into a slot", m.resumes),
+    ];
+    for (name, help, v) in counters {
+        scalar(&mut out, name, "counter", help, v as f64);
+    }
+    let gauges: [(&str, &str, f64); 8] = [
+        ("fe_parked_tokens", "committed tokens held by parked requests", m.parked_tokens as f64),
+        ("fe_parked_tokens_peak", "peak of fe_parked_tokens", m.parked_tokens_peak as f64),
+        ("fe_occupancy_mean", "mean occupied slots per scheduler step", m.mean_occupancy()),
+        ("fe_occupancy_peak", "peak occupied slots", m.occupancy_peak as f64),
+        ("fe_tau_mean", "mean accepted tokens per cycle", m.mean_tau()),
+        ("fe_plan_depth_mean", "mean planned draft depth per run cycle", m.mean_plan_depth()),
+        ("fe_plan_nodes_mean", "mean planned draft nodes per run cycle", m.mean_plan_nodes()),
+        ("fe_accept_window_mean", "mean adaptive acceptance window", m.mean_accept_window()),
+    ];
+    for (name, help, v) in gauges {
+        scalar(&mut out, name, "gauge", help, v);
+    }
+    hist(&mut out, "fe_request_latency_us", "request arrival to completion", &m.latency);
+    hist(&mut out, "fe_queue_wait_us", "request arrival to slot admission", &m.queue_wait);
+    hist(&mut out, "fe_ttfc_us", "request arrival to end of first decode cycle", &m.ttfc);
+    header(
+        &mut out,
+        "fe_phase_us",
+        "histogram",
+        "engine section wall time by method and phase (sched|draft|verify|accept)",
+    );
+    for (&(method, phase), h) in &m.phase_us {
+        let labels = format!("method=\"{method}\",phase=\"{phase}\",");
+        hist_series(&mut out, "fe_phase_us", &labels, h);
+    }
+    out.push_str("# EOF\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    use super::*;
+
+    fn sample_metrics() -> ServingMetrics {
+        let mut m = ServingMetrics::default();
+        m.requests_done += 3;
+        m.tokens_out += 42;
+        m.latency.record_us(1500.0);
+        m.queue_wait.record_us(90.0);
+        m.ttfc.record_us(800.0);
+        m.record_phase("fasteagle", "draft", Duration::from_micros(120));
+        m.record_phase("fasteagle", "verify", Duration::from_micros(900));
+        m.record_phase("eagle3", "draft", Duration::from_micros(2400));
+        m
+    }
+
+    #[test]
+    fn render_is_parseable_exposition() {
+        let text = render(&sample_metrics());
+        assert!(text.ends_with("# EOF\n"));
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            // every sample line is `name[{labels}] value`
+            let (series, value) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(!series.is_empty(), "{line}");
+            value.parse::<f64>().unwrap_or_else(|_| panic!("bad value in {line:?}"));
+            if let Some(open) = series.find('{') {
+                assert!(series.ends_with('}'), "{line}");
+                let labels = &series[open + 1..series.len() - 1];
+                for kv in labels.split(',') {
+                    let (k, v) = kv.split_once('=').expect("label is k=v");
+                    assert!(!k.is_empty() && v.starts_with('"') && v.ends_with('"'), "{line}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn phase_series_distinguish_methods() {
+        let text = render(&sample_metrics());
+        let has = |s: &str| text.contains(s);
+        assert!(has("fe_phase_us_bucket{method=\"fasteagle\",phase=\"draft\",le=\"500\"} 1"));
+        assert!(has("fe_phase_us_count{method=\"fasteagle\",phase=\"draft\"} 1"));
+        assert!(has("fe_phase_us_count{method=\"eagle3\",phase=\"draft\"} 1"));
+        assert!(has("fe_phase_us_count{method=\"fasteagle\",phase=\"verify\"} 1"));
+        // the 2.4ms eagle3 draft sits above the 500us bucket
+        assert!(has("fe_phase_us_bucket{method=\"eagle3\",phase=\"draft\",le=\"500\"} 0"));
+        assert!(has("fe_phase_us_bucket{method=\"eagle3\",phase=\"draft\",le=\"+Inf\"} 1"));
+    }
+
+    #[test]
+    fn buckets_are_monotone_and_counters_present() {
+        let text = render(&sample_metrics());
+        assert!(text.contains("fe_requests_done_total 3"));
+        assert!(text.contains("fe_tokens_out_total 42"));
+        let mut last = 0u64;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("fe_request_latency_us_bucket{le=\"") {
+                let v: u64 = rest.rsplit_once(' ').expect("value").1.parse().expect("count");
+                assert!(v >= last, "{line}");
+                last = v;
+            }
+        }
+        assert_eq!(last, 1, "the 1.5ms latency sample lands under +Inf");
+    }
+}

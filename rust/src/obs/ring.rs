@@ -1,0 +1,122 @@
+//! Lock-free per-thread event ring: fixed capacity, overwrite-oldest.
+//!
+//! Each thread owns one `Ring` for writing; readers (`drain_into`) may
+//! run concurrently from other threads — the TCP `trace` command snapshots
+//! live rings while the engine keeps recording. Every slot is a tiny
+//! seqlock over plain `AtomicU64` words: the writer marks the slot odd,
+//! stores the payload, then marks it even; a reader that observes an odd
+//! or changed sequence discards the slot. Torn events are dropped, never
+//! misreported, and no `unsafe` is involved. All orderings are `SeqCst` —
+//! events are rare (a handful per engine cycle) so the barrier cost is
+//! irrelevant next to the `Instant::now()` calls around them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Words per encoded event; see `obs::encode` for the layout.
+pub(crate) const EVENT_WORDS: usize = 7;
+
+struct Slot {
+    /// 0 = never written, odd = write in progress, even = generation tag
+    seq: AtomicU64,
+    words: [AtomicU64; EVENT_WORDS],
+}
+
+pub(crate) struct Ring {
+    slots: Box<[Slot]>,
+    /// total events ever pushed; low bits index the slot array
+    head: AtomicU64,
+}
+
+impl Ring {
+    pub fn new(capacity: usize) -> Ring {
+        let cap = capacity.next_power_of_two().max(64);
+        let slots: Vec<Slot> = (0..cap)
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                words: std::array::from_fn(|_| AtomicU64::new(0)),
+            })
+            .collect();
+        Ring { slots: slots.into_boxed_slice(), head: AtomicU64::new(0) }
+    }
+
+    /// Single designated writer per ring (the owning thread).
+    pub fn push(&self, words: &[u64; EVENT_WORDS]) {
+        let idx = self.head.fetch_add(1, Ordering::SeqCst);
+        let slot = &self.slots[(idx as usize) & (self.slots.len() - 1)];
+        // odd: writing — readers started before this store will fail the
+        // generation recheck in drain_into
+        slot.seq.store(idx.wrapping_mul(2).wrapping_add(1), Ordering::SeqCst);
+        for (w, &v) in slot.words.iter().zip(words) {
+            w.store(v, Ordering::SeqCst);
+        }
+        // even: stable, tagged with this write's generation
+        slot.seq.store(idx.wrapping_mul(2).wrapping_add(2), Ordering::SeqCst);
+    }
+
+    /// Events ever pushed (including any since overwritten).
+    pub fn written(&self) -> u64 {
+        self.head.load(Ordering::SeqCst)
+    }
+
+    /// Copy every stable slot out; torn slots are skipped.
+    pub fn drain_into(&self, out: &mut Vec<[u64; EVENT_WORDS]>) {
+        for slot in self.slots.iter() {
+            let s1 = slot.seq.load(Ordering::SeqCst);
+            if s1 == 0 || s1 % 2 == 1 {
+                continue;
+            }
+            let mut words = [0u64; EVENT_WORDS];
+            for (o, w) in words.iter_mut().zip(slot.words.iter()) {
+                *o = w.load(Ordering::SeqCst);
+            }
+            if slot.seq.load(Ordering::SeqCst) == s1 {
+                out.push(words);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_round_trips_events() {
+        let r = Ring::new(64);
+        r.push(&[1, 2, 3, 4, 5, 6, 7]);
+        r.push(&[10, 20, 30, 40, 50, 60, 70]);
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        assert_eq!(out.len(), 2);
+        assert!(out.contains(&[1, 2, 3, 4, 5, 6, 7]));
+        assert!(out.contains(&[10, 20, 30, 40, 50, 60, 70]));
+        assert_eq!(r.written(), 2);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_when_full() {
+        let r = Ring::new(64); // rounded to 64 slots
+        for i in 0..200u64 {
+            r.push(&[i, 0, 0, 0, 0, 0, 0]);
+        }
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        assert_eq!(out.len(), 64);
+        // only the newest 64 events survive
+        for w in &out {
+            assert!(w[0] >= 200 - 64, "stale event {} survived", w[0]);
+        }
+        assert_eq!(r.written(), 200);
+    }
+
+    #[test]
+    fn ring_capacity_rounds_up() {
+        let r = Ring::new(100); // -> 128
+        for i in 0..128u64 {
+            r.push(&[i, 0, 0, 0, 0, 0, 0]);
+        }
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        assert_eq!(out.len(), 128);
+    }
+}

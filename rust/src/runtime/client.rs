@@ -119,6 +119,7 @@ impl BoundExec {
     /// order. Missing or shape-mismatched args are hard errors. Returns
     /// host tensors in manifest output order.
     pub fn call(&self, _rt: &Runtime, args: &[(&str, &HostTensor)]) -> Result<Vec<HostTensor>> {
+        let _sp = crate::obs::span("execute").label(self.name());
         let m = self.manifest();
         let mut positional: Vec<Option<&HostTensor>> = Vec::with_capacity(m.inputs.len());
         for spec in &m.inputs {

@@ -77,11 +77,16 @@ impl Engine {
 
     /// Blocking generation: drain a session to completion.
     pub fn generate(&mut self, prompt: &str, cfg: &GenConfig) -> Result<GenResult> {
+        // one flight-recorder span per request: prefill + every cycle
+        let mut span = crate::obs::span("generate");
         let mut session =
             GenSession::new(&self.target, &mut self.drafter, self.tokenizer, prompt, cfg)?;
         while !session.finished() {
             session.step()?;
         }
-        Ok(session.finish())
+        let result = session.finish();
+        span.set_arg(result.tokens.len() as i64);
+        drop(span);
+        Ok(result)
     }
 }

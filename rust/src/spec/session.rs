@@ -313,6 +313,7 @@ impl<'e> GenSession<'e> {
         // prefill + initial pending token
         let pre = {
             let _g = metrics.timer.start("prefill");
+            let _sp = crate::obs::span("prefill").arg(ptoks.len() as i64);
             target.prefill(&mut kv, &ptoks)?
         };
         let mut cycle = SlotCycle::start(cfg.clone(), base, &pre.last_logits);
@@ -377,6 +378,7 @@ impl<'e> GenSession<'e> {
             return Ok(CycleEvent::noop(self.cycle.pending));
         }
 
+        let _cycle_span = crate::obs::span("cycle");
         // 1. plan, then draft to the planned depth (a level costs real
         // work for sequential drafters — EAGLE's eg_next chain, SpS's
         // LM steps — so levels the plan would drop are never drafted)
@@ -386,6 +388,7 @@ impl<'e> GenSession<'e> {
         };
         let draft_out = {
             let _g = self.cycle.metrics.timer.start("draft");
+            let _sp = crate::obs::span("draft").arg(levels as i64);
             self.drafter
                 .draft(self.cycle.pending, c - 1, self.cycle.cfg.temperature, levels)?
         };
@@ -395,15 +398,20 @@ impl<'e> GenSession<'e> {
         let (tokens, positions, rows) = verify_rows(&tree, c, self.spec.max_seq);
         let vout = {
             let _g = self.cycle.metrics.timer.start("verify");
+            let _sp = crate::obs::span("verify").arg(tree.len() as i64);
             self.target.step(&mut self.kv, &tokens, &positions, &rows)?
         };
 
         // 3. accept (lossless)
-        let accept = self.cycle.accept(&tree, &vout.logits, self.spec.vocab);
+        let accept = {
+            let _sp = crate::obs::span("accept");
+            self.cycle.accept(&tree, &vout.logits, self.spec.vocab)
+        };
 
         // 4. commit: compact accepted rows into the canonical prefix
         {
             let _g = self.cycle.metrics.timer.start("commit");
+            let _sp = crate::obs::span("commit").arg(accept.accepted_slots.len() as i64);
             self.kv.compact(0, c, &accept.accepted_slots)?;
         }
         let commit = self.cycle.commit(&tree, &accept, self.spec.eos);

@@ -1,8 +1,18 @@
-//! Leveled stderr logger substrate, controlled by `FE_LOG`
-//! (error|warn|info|debug|trace; default info).
+//! Leveled stderr logger substrate, controlled by `FE_LOG`.
+//!
+//! The spec is a comma-separated list of directives:
+//! * a bare level (`error|warn|info|debug|trace`) sets the default;
+//! * `module=level` raises/lowers one module subtree, where `module`
+//!   matches whole `::`-separated path segments of `module_path!()`
+//!   (so `backend=trace` covers `fasteagle::backend::interp`, and the
+//!   most specific — longest — matching rule wins).
+//!
+//! `FE_LOG=info,backend=trace` keeps the default at info but traces the
+//! backend. Unrecognized directives (`FE_LOG=vebose`) are reported once
+//! on stderr instead of being silently swallowed. Default: `info`.
 
 use std::io::Write;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -14,36 +24,114 @@ pub enum Level {
     Trace = 4,
 }
 
-static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
-
-fn init_level() -> u8 {
-    let lvl = match std::env::var("FE_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
-    } as u8;
-    LEVEL.store(lvl, Ordering::Relaxed);
-    lvl
+fn parse_level(s: &str) -> Option<Level> {
+    match s {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
 }
 
-pub fn enabled(level: Level) -> bool {
-    let mut cur = LEVEL.load(Ordering::Relaxed);
-    if cur == u8::MAX {
-        cur = init_level();
+/// Compiled `FE_LOG` spec.
+#[derive(Debug, Clone)]
+pub struct Filters {
+    default: Level,
+    /// (module pattern, level); most specific match wins
+    rules: Vec<(String, Level)>,
+    /// highest level any rule (or the default) can enable — the global
+    /// fast-path bound
+    max: Level,
+}
+
+/// Parse an `FE_LOG` spec. Pure: returns the filters plus any
+/// unrecognized directives for the caller to report.
+pub fn parse_spec(spec: &str) -> (Filters, Vec<String>) {
+    let mut default = Level::Info;
+    let mut rules: Vec<(String, Level)> = Vec::new();
+    let mut unknown = Vec::new();
+    for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        if let Some((module, lvl)) = tok.split_once('=') {
+            match parse_level(lvl.trim()) {
+                Some(l) => rules.push((module.trim().to_string(), l)),
+                None => unknown.push(tok.to_string()),
+            }
+        } else {
+            match parse_level(tok) {
+                Some(l) => default = l,
+                None => unknown.push(tok.to_string()),
+            }
+        }
     }
-    (level as u8) <= cur
+    let max = rules.iter().map(|(_, l)| *l).fold(default, Level::max);
+    (Filters { default, rules, max }, unknown)
+}
+
+/// Does `rule` match `module` on whole `::`-segment boundaries?
+fn module_matches(module: &str, rule: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = module[start..].find(rule) {
+        let b = start + pos;
+        let e = b + rule.len();
+        let left_ok = b == 0 || module[..b].ends_with("::");
+        let right_ok = e == module.len() || module[e..].starts_with("::");
+        if left_ok && right_ok {
+            return true;
+        }
+        start = b + 1;
+    }
+    false
+}
+
+impl Filters {
+    /// Effective level for one `module_path!()` string.
+    pub fn level_for(&self, module: &str) -> Level {
+        let mut best: Option<(usize, Level)> = None;
+        for (m, l) in &self.rules {
+            if module_matches(module, m) && best.is_none_or(|(len, _)| m.len() >= len) {
+                best = Some((m.len(), *l));
+            }
+        }
+        best.map(|(_, l)| l).unwrap_or(self.default)
+    }
+}
+
+fn filters() -> &'static Filters {
+    static F: OnceLock<Filters> = OnceLock::new();
+    F.get_or_init(|| {
+        let spec = std::env::var("FE_LOG").unwrap_or_default();
+        let (f, unknown) = parse_spec(&spec);
+        for tok in &unknown {
+            let mut err = std::io::stderr().lock();
+            let _ = writeln!(
+                err,
+                "[FE_LOG] unrecognized directive {tok:?} \
+                 (expected error|warn|info|debug|trace or module=level); ignored"
+            );
+        }
+        f
+    })
+}
+
+/// Global fast path: could any module emit at this level?
+pub fn enabled(level: Level) -> bool {
+    level <= filters().max
+}
+
+/// Is `level` enabled for this specific module?
+pub fn enabled_for(level: Level, module: &str) -> bool {
+    level <= filters().level_for(module)
 }
 
 pub fn start_time() -> Instant {
-    use std::sync::OnceLock;
     static START: OnceLock<Instant> = OnceLock::new();
     *START.get_or_init(Instant::now)
 }
 
 pub fn log(level: Level, module: &str, msg: &str) {
-    if !enabled(level) {
+    if !enabled(level) || !enabled_for(level, module) {
         return;
     }
     let t = start_time().elapsed().as_secs_f64();
@@ -88,5 +176,73 @@ mod tests {
         // FE_LOG unset in tests -> info enabled, debug not necessarily
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
+    }
+
+    #[test]
+    fn parse_bare_levels_including_explicit_info() {
+        for (spec, want) in [
+            ("error", Level::Error),
+            ("warn", Level::Warn),
+            ("info", Level::Info),
+            ("debug", Level::Debug),
+            ("trace", Level::Trace),
+        ] {
+            let (f, unknown) = parse_spec(spec);
+            assert!(unknown.is_empty(), "{spec}: {unknown:?}");
+            assert_eq!(f.level_for("fasteagle::spec"), want, "{spec}");
+        }
+    }
+
+    #[test]
+    fn unrecognized_directives_are_reported_not_swallowed() {
+        let (f, unknown) = parse_spec("vebose");
+        assert_eq!(unknown, vec!["vebose".to_string()]);
+        // falls back to the default rather than silently disabling
+        assert_eq!(f.level_for("fasteagle::spec"), Level::Info);
+        let (_, unknown) = parse_spec("debug,backend=vebose");
+        assert_eq!(unknown, vec!["backend=vebose".to_string()]);
+    }
+
+    #[test]
+    fn per_module_rules_match_path_segments() {
+        let (f, unknown) = parse_spec("info,backend=trace");
+        assert!(unknown.is_empty());
+        assert_eq!(f.level_for("fasteagle::backend::interp"), Level::Trace);
+        assert_eq!(f.level_for("fasteagle::backend"), Level::Trace);
+        assert_eq!(f.level_for("fasteagle::spec::engine"), Level::Info);
+        assert!(f.level_for("fasteagle::coordinator") == Level::Info);
+    }
+
+    #[test]
+    fn rules_respect_segment_boundaries() {
+        let (f, _) = parse_spec("warn,end=trace");
+        // "end" must not match inside "backend"
+        assert_eq!(f.level_for("fasteagle::backend::interp"), Level::Warn);
+        assert_eq!(f.level_for("fasteagle::end"), Level::Trace);
+    }
+
+    #[test]
+    fn most_specific_rule_wins() {
+        let (f, _) = parse_spec("backend=debug,backend::interp=trace");
+        assert_eq!(f.level_for("fasteagle::backend::interp"), Level::Trace);
+        assert_eq!(f.level_for("fasteagle::backend::fixture"), Level::Debug);
+    }
+
+    #[test]
+    fn rules_can_lower_below_the_default() {
+        let (f, _) = parse_spec("debug,runtime=error");
+        assert_eq!(f.level_for("fasteagle::runtime::client"), Level::Error);
+        assert_eq!(f.level_for("fasteagle::spec"), Level::Debug);
+        // the global fast path still reflects the loudest series
+        assert_eq!(f.max, Level::Debug);
+    }
+
+    #[test]
+    fn empty_and_whitespace_specs_are_default_info() {
+        for spec in ["", " ", ",", " , "] {
+            let (f, unknown) = parse_spec(spec);
+            assert!(unknown.is_empty(), "{spec:?}");
+            assert_eq!(f.level_for("fasteagle::spec"), Level::Info, "{spec:?}");
+        }
     }
 }

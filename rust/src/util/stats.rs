@@ -83,8 +83,12 @@ impl Histogram {
         (b as usize).min(HIST_BUCKETS - 1)
     }
 
+    /// Representative value for bucket `i`, which covers
+    /// `[growth^i, growth^(i+1))`: the geometric midpoint of the bucket
+    /// bounds. The lower edge would systematically underestimate every
+    /// percentile by up to one ~4% bucket.
     fn bucket_value(i: usize) -> f64 {
-        HIST_GROWTH.powi(i as i32)
+        HIST_GROWTH.powf(i as f64 + 0.5)
     }
 
     pub fn record_us(&mut self, us: f64) {
@@ -117,10 +121,35 @@ impl Histogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             acc += c;
             if acc >= target.max(1) {
-                return Self::bucket_value(i);
+                // the midpoint can overshoot the largest recorded value
+                // when the top sample sits low in its bucket
+                return Self::bucket_value(i).min(self.max_us);
             }
         }
         self.max_us
+    }
+
+    pub fn sum_us(&self) -> f64 {
+        self.sum_us
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Samples in buckets whose upper edge is ≤ `bound_us` — the
+    /// conservative cumulative count a Prometheus `le` bucket needs
+    /// (never counts a sample above the bound; monotonic in the bound).
+    /// The last bucket is open-ended and never counted.
+    pub fn count_le_us(&self, bound_us: f64) -> u64 {
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate().take(HIST_BUCKETS - 1) {
+            if HIST_GROWTH.powi(i as i32 + 1) > bound_us {
+                break;
+            }
+            acc += c;
+        }
+        acc
     }
 
     pub fn merge(&mut self, other: &Histogram) {
@@ -167,10 +196,41 @@ mod tests {
             h.record_us(i as f64);
         }
         let p50 = h.percentile_us(0.5);
-        assert!((p50 - 500.0).abs() / 500.0 < 0.10, "{p50}");
+        assert!((p50 - 500.0).abs() / 500.0 < 0.03, "{p50}");
         let p99 = h.percentile_us(0.99);
-        assert!((p99 - 990.0).abs() / 990.0 < 0.10, "{p99}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.03, "{p99}");
         assert!((h.mean_us() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_percentile_never_exceeds_max() {
+        let mut h = Histogram::new();
+        h.record_us(100.0);
+        assert!(h.percentile_us(1.0) <= 100.0);
+        assert!(h.percentile_us(0.5) > 95.0);
+        assert_eq!(h.max_us(), 100.0);
+        assert_eq!(h.sum_us(), 100.0);
+    }
+
+    #[test]
+    fn histogram_cumulative_le_counts() {
+        let mut h = Histogram::new();
+        for us in [5.0, 50.0, 500.0, 5000.0] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count_le_us(10.0), 1);
+        assert_eq!(h.count_le_us(100.0), 2);
+        assert_eq!(h.count_le_us(1e3), 3);
+        assert_eq!(h.count_le_us(1e4), 4);
+        // never counts a sample above the bound
+        assert_eq!(h.count_le_us(4.0), 0);
+        // monotone in the bound
+        let mut last = 0;
+        for b in [10.0, 100.0, 1e3, 1e4, 1e5, 1e6] {
+            let c = h.count_le_us(b);
+            assert!(c >= last);
+            last = c;
+        }
     }
 
     #[test]

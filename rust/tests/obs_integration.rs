@@ -1,0 +1,352 @@
+//! Flight-recorder export surfaces over the real serving stack:
+//! - `{"cmd":"trace"}` returns Chrome trace-event JSON whose spans
+//!   reconstruct the request lifecycle (queue -> admit -> prefill ->
+//!   cycles with draft/verify children -> done), properly nested per
+//!   track;
+//! - `{"cmd":"metrics"}` returns parseable Prometheus text exposition
+//!   with per-method phase histograms (fasteagle and eagle3 as distinct
+//!   series);
+//! - the overhead guard: with the recorder disabled, a closed serving
+//!   run records zero events and produces byte-identical outputs to a
+//!   traced run.
+
+mod common;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::rc::Rc;
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+use common::artifacts_root;
+use fasteagle::coordinator::{
+    BatchConfig, BatchEngine, BatchMethod, Request, Server, ServerConfig,
+};
+use fasteagle::runtime::{ArtifactStore, Runtime};
+use fasteagle::util::json::Json;
+use fasteagle::workload::batched_serving_target;
+
+/// The recorder is process-global: serialize the tests that arm it.
+fn obs_guard() -> std::sync::MutexGuard<'static, ()> {
+    static M: Mutex<()> = Mutex::new(());
+    M.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn query_at(addr: &str, line: &str) -> Json {
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut w = stream.try_clone().unwrap();
+    writeln!(w, "{line}").unwrap();
+    let mut r = BufReader::new(stream);
+    let mut out = String::new();
+    r.read_line(&mut out).unwrap();
+    Json::parse(out.trim()).expect("json response")
+}
+
+/// Multi-line reply (Prometheus exposition): read through `# EOF`.
+fn query_text_at(addr: &str, line: &str) -> String {
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut w = stream.try_clone().unwrap();
+    writeln!(w, "{line}").unwrap();
+    let mut r = BufReader::new(stream);
+    let mut out = String::new();
+    loop {
+        let mut l = String::new();
+        assert!(r.read_line(&mut l).unwrap() > 0, "closed before # EOF");
+        let done = l.trim_end() == "# EOF";
+        out.push_str(&l);
+        if done {
+            return out;
+        }
+    }
+}
+
+fn wait_for_listener(addr: &str) {
+    for _ in 0..600 {
+        if TcpStream::connect(addr).is_ok() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    panic!("server did not start on {addr}");
+}
+
+/// Minimal Prometheus text-exposition line check: every non-comment,
+/// non-blank line is `name[{labels}] value` with a finite numeric value.
+fn assert_prometheus_parses(text: &str) {
+    let mut samples = 0usize;
+    for line in text.lines() {
+        let line = line.trim_end();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("no value in {line:?}"));
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in {line:?}"));
+        assert!(v.is_finite(), "{line:?}");
+        let name_end = series.find('{').unwrap_or(series.len());
+        let name = &series[..name_end];
+        assert!(
+            !name.is_empty()
+                && name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "bad metric name in {line:?}"
+        );
+        if name_end < series.len() {
+            assert!(series.ends_with('}'), "unterminated labels in {line:?}");
+        }
+        samples += 1;
+    }
+    assert!(samples > 0, "exposition had no samples");
+    assert_eq!(text.lines().last().map(str::trim_end), Some("# EOF"));
+}
+
+#[derive(Debug, Clone)]
+struct Span {
+    name: String,
+    ts: u64,
+    dur: u64,
+    tid: u64,
+    req: u64,
+}
+
+/// Every event needs ph/ts/pid/tid; X events need dur. Returns the
+/// duration spans and the instant names per request id.
+fn validate_chrome(trace: &Json) -> (Vec<Span>, Vec<(String, u64)>) {
+    let events = trace
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty(), "trace recorded no events");
+    let mut spans = Vec::new();
+    let mut instants = Vec::new();
+    for e in events {
+        let name = e.get("name").and_then(Json::as_str).expect("name").to_string();
+        let ph = e.get("ph").and_then(Json::as_str).expect("ph");
+        let ts = e.get("ts").and_then(Json::as_f64).expect("ts") as u64;
+        assert!(e.get("pid").and_then(Json::as_f64).is_some(), "pid missing");
+        let tid = e.get("tid").and_then(Json::as_f64).expect("tid") as u64;
+        let req = e
+            .path("args.req")
+            .and_then(Json::as_f64)
+            .map(|r| r as u64)
+            .unwrap_or(0);
+        match ph {
+            "X" => {
+                let dur = e.get("dur").and_then(Json::as_f64).expect("X needs dur") as u64;
+                spans.push(Span { name, ts, dur, tid, req });
+            }
+            "i" => instants.push((name, req)),
+            other => panic!("unexpected ph {other:?}"),
+        }
+    }
+    (spans, instants)
+}
+
+/// On slot tracks (tid < 1000), spans must pairwise nest: disjoint or
+/// contained, within the integer-microsecond truncation slop.
+fn assert_nesting(spans: &[Span]) {
+    const SLOP: u64 = 5;
+    for (i, a) in spans.iter().enumerate() {
+        for b in spans.iter().skip(i + 1) {
+            if a.tid != b.tid || a.tid >= 1000 {
+                continue;
+            }
+            let (a0, a1) = (a.ts, a.ts + a.dur);
+            let (b0, b1) = (b.ts, b.ts + b.dur);
+            let disjoint = a1 <= b0 + SLOP || b1 <= a0 + SLOP;
+            let a_in_b = a0 + SLOP >= b0 && a1 <= b1 + SLOP;
+            let b_in_a = b0 + SLOP >= a0 && b1 <= a1 + SLOP;
+            assert!(
+                disjoint || a_in_b || b_in_a,
+                "spans overlap without nesting on tid {}: {a:?} vs {b:?}",
+                a.tid
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_and_metrics_export_request_lifecycle() {
+    let _g = obs_guard();
+    const ADDR: &str = "127.0.0.1:7436";
+    let (root, kind) = artifacts_root();
+    let Some((dir, batch)) = batched_serving_target(&root) else {
+        eprintln!("skipping: no serving target");
+        return;
+    };
+    fasteagle::obs::enable();
+    fasteagle::obs::reset();
+    let server_thread = std::thread::spawn(move || {
+        let rt = Arc::new(Runtime::new(kind).unwrap());
+        let store = Rc::new(ArtifactStore::open(rt, dir).unwrap());
+        let engine = BatchEngine::new(
+            Rc::clone(&store),
+            BatchConfig::new(batch, BatchMethod::FastEagle),
+        )
+        .unwrap();
+        let server = Server::new(ServerConfig {
+            addr: ADDR.into(),
+            queue_capacity: 8,
+            ..Default::default()
+        });
+        server.serve(engine).unwrap()
+    });
+    wait_for_listener(ADDR);
+
+    // request 1: streamed, default (fasteagle) method — the lifecycle
+    // under test; request 2: eagle3, so the per-method histograms get a
+    // second distinct series
+    let stream = TcpStream::connect(ADDR).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    writeln!(
+        w,
+        r#"{{"prompt":"USER: tell me about machine learning and the fast cache.\nASSISTANT:","max_new":16,"stream":true}}"#
+    )
+    .unwrap();
+    let mut r = BufReader::new(stream);
+    let streamed = loop {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let v = Json::parse(line.trim()).expect("json line");
+        if v.get("event").and_then(Json::as_str) != Some("tokens") {
+            break v;
+        }
+    };
+    assert!(streamed.get("error").is_none(), "{streamed:?}");
+    let v = query_at(
+        ADDR,
+        r#"{"prompt":"USER: tell me about city transport and the steady bridge.\nASSISTANT:","max_new":8,"method":"eagle3"}"#,
+    );
+    assert!(v.get("error").is_none(), "{v:?}");
+
+    // stats: per-method phase histograms, fasteagle and eagle3 distinct
+    let stats = query_at(ADDR, r#"{"cmd":"stats"}"#);
+    for method in ["fasteagle", "eagle3"] {
+        for phase in ["draft", "verify"] {
+            let count = stats
+                .path(&format!("phase_us.{method}.{phase}.count"))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0);
+            assert!(count > 0.0, "no {method}/{phase} samples in {stats:?}");
+        }
+    }
+
+    // Prometheus exposition: parses, and carries both method series
+    let prom = query_text_at(ADDR, r#"{"cmd":"metrics"}"#);
+    assert_prometheus_parses(&prom);
+    assert!(prom.contains(r#"fe_phase_us_bucket{method="fasteagle",phase="draft""#), "{prom}");
+    assert!(prom.contains(r#"fe_phase_us_bucket{method="eagle3",phase="draft""#), "{prom}");
+    assert!(prom.contains("fe_requests_done_total 2"), "{prom}");
+
+    // Chrome trace: structurally valid, lifecycle reconstructible
+    let trace = query_at(ADDR, r#"{"cmd":"trace"}"#);
+    let (spans, instants) = validate_chrome(&trace);
+    assert_nesting(&spans);
+    // lifecycle of the streamed request (server-side id 1): queue span,
+    // admit mark, prefill span, >=1 cycle span with draft + verify
+    // children inside it, done mark
+    let req = 1u64;
+    let of = |name: &str| -> Vec<&Span> {
+        spans.iter().filter(|s| s.name == name && s.req == req).collect()
+    };
+    let queue = of("queue");
+    assert_eq!(queue.len(), 1, "exactly one queue span for req {req}");
+    assert!(queue[0].tid >= 1000, "queue spans live on dedicated lanes");
+    assert!(
+        instants.iter().any(|(n, r)| n == "admit" && *r == req),
+        "admit mark missing"
+    );
+    assert!(!of("prefill").is_empty(), "prefill span missing");
+    let cycles = of("cycle");
+    assert!(!cycles.is_empty(), "no cycle spans for req {req}");
+    for phase in ["draft", "verify"] {
+        let phase_spans = of(phase);
+        assert!(!phase_spans.is_empty(), "no {phase} spans for req {req}");
+        const SLOP: u64 = 5;
+        for p in &phase_spans {
+            assert!(
+                cycles.iter().any(|c| {
+                    p.ts + SLOP >= c.ts && p.ts + p.dur <= c.ts + c.dur + SLOP
+                }),
+                "{phase} span not inside any cycle span: {p:?} vs {cycles:?}"
+            );
+        }
+    }
+    assert!(
+        instants.iter().any(|(n, r)| n == "done" && *r == req),
+        "done mark missing"
+    );
+    // ordering: queue ends (admission) at/before the first cycle begins
+    let first_cycle = cycles.iter().map(|c| c.ts).min().unwrap();
+    assert!(
+        queue[0].ts <= first_cycle,
+        "queue must start before the first cycle"
+    );
+    // the verify spans carry the executable name
+    let trace_text = trace.to_string();
+    assert!(trace_text.contains("\"exec\""), "verify spans should name the executable");
+
+    let v = query_at(ADDR, r#"{"cmd":"shutdown"}"#);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    let metrics = server_thread.join().unwrap();
+    assert_eq!(metrics.requests_done, 2);
+    fasteagle::obs::disable();
+    fasteagle::obs::reset();
+}
+
+/// Overhead guard: with the recorder disabled a closed serving run
+/// records zero events, and its outputs are byte-identical to the same
+/// run with tracing armed — instrumentation never changes generation.
+#[test]
+fn tracing_disabled_records_nothing_and_changes_nothing() {
+    let _g = obs_guard();
+    let (root, kind) = artifacts_root();
+    let Some((dir, batch)) = batched_serving_target(&root) else {
+        eprintln!("skipping: no serving target");
+        return;
+    };
+    let make_reqs = || -> Vec<Request> {
+        (0..3)
+            .map(|i| {
+                let mut r = Request::new(
+                    i + 1,
+                    "USER: tell me about machine learning and the fast cache.\nASSISTANT:"
+                        .to_string(),
+                );
+                r.cfg.max_new_tokens = 12;
+                r.cfg.seed = i;
+                r
+            })
+            .collect()
+    };
+    let run_once = |dir: &std::path::Path| -> Vec<(u64, String, usize)> {
+        let rt = Arc::new(Runtime::new(kind).unwrap());
+        let store = Rc::new(ArtifactStore::open(rt, dir.to_path_buf()).unwrap());
+        let mut engine = BatchEngine::new(
+            Rc::clone(&store),
+            BatchConfig::new(batch, BatchMethod::FastEagle),
+        )
+        .unwrap();
+        let (resps, _m) = engine.run(make_reqs()).unwrap();
+        let mut out: Vec<(u64, String, usize)> =
+            resps.into_iter().map(|r| (r.id, r.text, r.new_tokens)).collect();
+        out.sort();
+        out
+    };
+
+    fasteagle::obs::disable();
+    fasteagle::obs::reset();
+    let quiet = run_once(&dir);
+    assert_eq!(fasteagle::obs::recorded_total(), 0, "disabled run recorded events");
+    assert!(fasteagle::obs::snapshot().is_empty());
+
+    fasteagle::obs::enable();
+    fasteagle::obs::reset();
+    let traced = run_once(&dir);
+    assert!(fasteagle::obs::recorded_total() > 0, "armed run recorded nothing");
+    fasteagle::obs::disable();
+    fasteagle::obs::reset();
+
+    assert_eq!(quiet, traced, "tracing must not change generated outputs");
+}
