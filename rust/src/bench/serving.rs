@@ -25,7 +25,10 @@ use crate::runtime::{ArtifactStore, Runtime};
 use crate::spec::PlannerKind;
 use crate::util::json::Json;
 use crate::util::stats::percentile_sorted;
-use crate::workload::{batched_serving_target, poisson_trace, replay_trace_tcp};
+use crate::workload::{
+    batched_serving_target, chat_sessions, poisson_trace, replay_chat_tcp, replay_trace_tcp,
+    ChatSession, ChatTurnStat,
+};
 
 use super::harness::{render_table, write_report, BenchEnv};
 
@@ -247,6 +250,100 @@ fn run_cell(
     })
 }
 
+/// One leg of the warm-vs-cold prefix-cache study: a fresh server with
+/// the cache off or on, the multi-turn chat trace replayed through it,
+/// and the cache counters read back before shutdown.
+struct CacheRun {
+    turns: Vec<ChatTurnStat>,
+    hits: f64,
+    misses: f64,
+    saved_tokens: f64,
+    hit_rate: f64,
+    prefill_chunks: f64,
+    prom_text: String,
+    server_report: String,
+}
+
+fn run_cache_leg(
+    setup: &CellSetup,
+    sessions: &[ChatSession],
+    enabled: bool,
+    port: u16,
+) -> Result<CacheRun> {
+    let addr = format!("127.0.0.1:{port}");
+    let kind = setup.kind;
+    let batch = setup.batch;
+    let dir2 = setup.dir.to_path_buf();
+    let addr2 = addr.clone();
+    let server_thread = std::thread::spawn(move || -> Result<String> {
+        let rt = Arc::new(Runtime::new(kind)?);
+        let store = Rc::new(ArtifactStore::open(rt, dir2)?);
+        let mut cfg = BatchConfig::new(batch, BatchMethod::FastEagle);
+        cfg.prefix_cache = enabled;
+        if enabled {
+            // cache-aware admission only makes sense with a cache to hit
+            cfg.policy = PolicyKind::Cache;
+        }
+        let engine = BatchEngine::new(Rc::clone(&store), cfg)?;
+        let server = Server::new(ServerConfig {
+            addr: addr2,
+            queue_capacity: 64,
+            ..Default::default()
+        });
+        let m = server.serve(engine)?;
+        Ok(m.report())
+    });
+    let mut up = false;
+    for _ in 0..600 {
+        if std::net::TcpStream::connect(&addr).is_ok() {
+            up = true;
+            break;
+        }
+        if server_thread.is_finished() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    if !up {
+        if server_thread.is_finished() {
+            return match server_thread.join() {
+                Ok(Ok(_)) => {
+                    Err(anyhow::anyhow!("cache bench server exited before serving on {addr}"))
+                }
+                Ok(Err(e)) => {
+                    Err(e.context(format!("cache bench server failed to start on {addr}")))
+                }
+                Err(_) => Err(anyhow::anyhow!("cache bench server thread panicked")),
+            };
+        }
+        anyhow::bail!("cache bench server did not start on {addr}");
+    }
+    let turns = replay_chat_tcp(&addr, sessions)?;
+    let server_stats = server_query(&addr, r#"{"cmd":"stats"}"#)?;
+    let stat = |key: &str| server_stats.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+    let prom_text = server_query_text(&addr, r#"{"cmd":"metrics"}"#)?;
+    {
+        let s = std::net::TcpStream::connect(&addr)?;
+        let mut w = s.try_clone()?;
+        writeln!(w, "{}", r#"{"cmd":"shutdown"}"#)?;
+        let mut line = String::new();
+        let _ = BufReader::new(s).read_line(&mut line);
+    }
+    let server_report = server_thread
+        .join()
+        .map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+    Ok(CacheRun {
+        hits: stat("cache_hits"),
+        misses: stat("cache_misses"),
+        saved_tokens: stat("cache_saved_tokens"),
+        hit_rate: stat("cache_hit_rate"),
+        prefill_chunks: stat("prefill_chunks"),
+        turns,
+        prom_text,
+        server_report,
+    })
+}
+
 pub fn run(env: &BenchEnv) -> Result<()> {
     let Some((dir, batch)) = batched_serving_target(&env.artifacts) else {
         println!("bench serve: no serving target under {:?}; skipping", env.artifacts);
@@ -386,5 +483,60 @@ pub fn run(env: &BenchEnv) -> Result<()> {
     ]);
     let p = write_report("BENCH_serve_point", &point)?;
     println!("trajectory point -> {p:?}");
+
+    // warm-vs-cold prefix cache study: the same multi-turn chat trace
+    // replayed through two fresh servers — cache off, then cache on
+    // with cache-aware admission — comparing follow-up-turn TTFT, hit
+    // rate, prefill work, and (hard requirement) byte-identical replies
+    let (sessions_n, turns_n, chat_max_new) = if env.quick { (2, 3, 8) } else { (3, 3, 12) };
+    let sessions = chat_sessions(&prompts, sessions_n, turns_n, chat_max_new, 77);
+    let cold = run_cache_leg(&setup, &sessions, false, port)?;
+    let warm = run_cache_leg(&setup, &sessions, true, port + 1)?;
+    let identical = cold.turns.len() == warm.turns.len()
+        && cold.turns.iter().zip(&warm.turns).all(|(c, w)| c.text == w.text);
+    if !identical {
+        anyhow::bail!("prefix cache changed generated bytes on the chat trace");
+    }
+    // follow-up turns (t > 0) are where the cache can skip prefill
+    let followup_ttft = |ts: &[ChatTurnStat]| {
+        let v: Vec<f64> = ts.iter().filter(|t| t.turn > 0).map(|t| t.ttft_ms).collect();
+        v.iter().sum::<f64>() / v.len().max(1) as f64
+    };
+    let (cold_ttft, warm_ttft) = (followup_ttft(&cold.turns), followup_ttft(&warm.turns));
+    println!("\n=== Prefix cache: warm vs cold on a multi-turn chat trace ===");
+    println!("cold: {}", cold.server_report);
+    println!("warm: {}", warm.server_report);
+    println!(
+        "hit rate {:.0}% ({} hits / {} misses), {} prompt tokens adopted, prefill \
+         chunks {} -> {}, follow-up TTFT mean {:.0}ms -> {:.0}ms, replies \
+         byte-identical",
+        warm.hit_rate * 100.0,
+        warm.hits,
+        warm.misses,
+        warm.saved_tokens,
+        cold.prefill_chunks,
+        warm.prefill_chunks,
+        cold_ttft,
+        warm_ttft,
+    );
+    let cache_report = Json::obj(vec![
+        ("sessions", Json::num(sessions_n as f64)),
+        ("turns", Json::num(turns_n as f64)),
+        ("max_new", Json::num(chat_max_new as f64)),
+        ("hits", Json::num(warm.hits)),
+        ("misses", Json::num(warm.misses)),
+        ("hit_rate", Json::num(warm.hit_rate)),
+        ("saved_tokens", Json::num(warm.saved_tokens)),
+        ("cold_prefill_chunks", Json::num(cold.prefill_chunks)),
+        ("warm_prefill_chunks", Json::num(warm.prefill_chunks)),
+        ("cold_followup_ttft_mean_ms", Json::num(cold_ttft)),
+        ("warm_followup_ttft_mean_ms", Json::num(warm_ttft)),
+        ("byte_identical", Json::Bool(identical)),
+    ]);
+    let p = write_report("serve_cache", &cache_report)?;
+    println!("cache report -> {p:?}");
+    let p = out_dir.join("serve_cache_metrics.prom");
+    std::fs::write(&p, &warm.prom_text)?;
+    println!("cache prometheus -> {p:?}");
     Ok(())
 }

@@ -1,0 +1,425 @@
+//! Prefix cache over the paged KV layer.
+//!
+//! Production engines treat prefix caching and speculative decoding as
+//! incompatible (mistral.rs documents both PagedAttention and prefix
+//! caching as unsupported with speculative decoding); this subsystem
+//! makes them compose losslessly for the EAGLE-family methods by
+//! choosing the right unit of sharing:
+//!
+//! - **Target KV rows** are cached per token. A verified-and-accepted
+//!   row is byte-identical to the row a fresh prefill would produce at
+//!   the same position (the accepted path attends to exactly the
+//!   canonical prefix), so adopted rows continue a generation exactly.
+//! - **Drafter state is cached as per-token features**, not drafter KV.
+//!   Features are the method-agnostic input of the EAGLE-family
+//!   drafters; each method's own KV/feature state (`fe_dkv`/`eg_dkv`
+//!   geometry) is rebuilt deterministically by the unchanged
+//!   post-prefill observe over the full prompt. One cache therefore
+//!   serves fasteagle, eagle3 and vanilla, and warm generations are
+//!   byte-identical to cold ones under both greedy and stochastic
+//!   decoding (sampler streams are seeded per request and never consume
+//!   from prefill).
+//!
+//! The index is a [`radix::RadixTree`] keyed on `block_slots`-sized
+//! token-id runs: one node = one published block run. Pool accounting
+//! rides along — each node holds the [`crate::model::paged::BlockPool`]
+//! blocks that fund its target-KV rows (`blocks_for(block_slots,
+//! n_layers)`; the feature payload rides with the node). Publishing
+//! *transfers* blocks from the retiring lease into the index (no
+//! allocation, cannot fail); adoption *retains* them into the new lease
+//! (refcount up, zero capacity charged); eviction releases the last
+//! reference and the blocks return to the free list. A node is pinned
+//! while any holder shares its blocks (refcount >= 2), so live leases
+//! are never yanked.
+
+pub mod radix;
+
+use std::collections::HashSet;
+
+use anyhow::Result;
+
+use crate::model::kvcache::KvCache;
+use crate::model::paged::{BlockPool, Lease};
+use radix::RadixTree;
+
+/// Payload of one radix node: the cached rows of one block run.
+#[derive(Debug)]
+struct BlockPayload {
+    /// target KV rows, `[planes, block_slots, row]` (KvCache::read_rows)
+    kv_rows: Vec<f32>,
+    /// per-token drafter features, `[block_slots, feat_dim]`
+    feats: Vec<f32>,
+    /// pool blocks funding this run (owned by the index)
+    blocks: Vec<u32>,
+}
+
+/// Longest-cached-prefix answer for one prompt.
+#[derive(Debug, Clone, Default)]
+pub struct CacheHit {
+    /// cached tokens (a multiple of `block_slots`, < prompt length)
+    pub tokens: usize,
+    /// pool blocks the hit chain holds (adoptable by sharing)
+    pub blocks: usize,
+    /// the chain's node ids, root-first
+    pub node_ids: Vec<usize>,
+}
+
+#[derive(Debug)]
+pub struct PrefixCache {
+    enabled: bool,
+    block_slots: usize,
+    /// target KV layers a node's blocks pay for (model `n_layers`)
+    kv_layers: usize,
+    feat_dim: usize,
+    tree: RadixTree<BlockPayload>,
+    held_blocks: usize,
+}
+
+impl PrefixCache {
+    pub fn new(enabled: bool, block_slots: usize, kv_layers: usize, feat_dim: usize) -> Self {
+        assert!(block_slots > 0);
+        PrefixCache {
+            enabled,
+            block_slots,
+            kv_layers,
+            feat_dim,
+            tree: RadixTree::new(),
+            held_blocks: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.tree.len()
+    }
+
+    /// Pool blocks currently held by the index.
+    pub fn held_blocks(&self) -> usize {
+        self.held_blocks
+    }
+
+    /// Runs of `ptoks` eligible for matching: whole blocks only, and
+    /// at least one token is always left to prefill (its verify row
+    /// produces the logits that seed the first decode cycle).
+    fn usable_runs<'a>(&self, ptoks: &'a [i32]) -> impl Iterator<Item = &'a [i32]> {
+        let usable = ptoks.len().saturating_sub(1) / self.block_slots * self.block_slots;
+        ptoks[..usable].chunks_exact(self.block_slots)
+    }
+
+    fn hit_for(&self, chain: Vec<usize>) -> CacheHit {
+        let blocks = chain.iter().map(|&id| self.tree.get(id).payload.blocks.len()).sum();
+        CacheHit { tokens: chain.len() * self.block_slots, blocks, node_ids: chain }
+    }
+
+    /// Longest cached prefix without disturbing LRU order — the
+    /// scheduler's view of pending work.
+    pub fn peek(&self, ptoks: &[i32]) -> CacheHit {
+        if !self.enabled {
+            return CacheHit::default();
+        }
+        self.hit_for(self.tree.walk(self.usable_runs(ptoks)))
+    }
+
+    /// Longest cached prefix, bumping the chain's recency (admission).
+    pub fn lookup(&mut self, ptoks: &[i32]) -> CacheHit {
+        let hit = self.peek(ptoks);
+        self.tree.touch(&hit.node_ids);
+        hit
+    }
+
+    /// Adopt a hit into a fresh lease: every chain block gains a
+    /// reference and joins the lease (shared blocks lead, the fresh
+    /// remainder is allocated after them by the caller), and the cached
+    /// rows are written into batch lane `b`. Returns the cached
+    /// per-token features, ready to seed
+    /// [`crate::coordinator::scheduler::PrefillProgress::with_prefix`].
+    ///
+    /// Shared blocks are read-only from here on; since hits are whole
+    /// blocks, the writer's appends land in its own fresh blocks and
+    /// the copy-on-write fork (`BlockPool::fork_tail`) stays a guard
+    /// for sub-block sharing.
+    pub fn adopt(
+        &self,
+        hit: &CacheHit,
+        pool: &mut BlockPool,
+        kv: &mut KvCache,
+        b: usize,
+        lease: &mut Lease,
+    ) -> Result<Vec<f32>> {
+        let mut feats = Vec::with_capacity(hit.tokens * self.feat_dim);
+        for (j, &nid) in hit.node_ids.iter().enumerate() {
+            let payload = &self.tree.get(nid).payload;
+            kv.write_rows(b, j * self.block_slots, self.block_slots, &payload.kv_rows)?;
+            pool.retain(&payload.blocks);
+            lease.blocks.extend_from_slice(&payload.blocks);
+            feats.extend_from_slice(&payload.feats);
+        }
+        Ok(feats)
+    }
+
+    /// Publish a retiring request's committed prefix: every whole block
+    /// run of its rows becomes (or refreshes) an index node. New nodes
+    /// take their pool blocks *by transfer from the retiring lease* —
+    /// the capacity that funded the rows keeps funding them, so publish
+    /// never allocates and never fails for lack of blocks. Returns the
+    /// number of newly inserted nodes.
+    ///
+    /// `row_tokens`/`row_feats` are the per-row input tokens and
+    /// features the engine accumulated alongside the KV (prompt rows
+    /// from prefill, then each cycle's accepted rows); both are aligned
+    /// with `kv.len(b)` by construction.
+    pub fn publish(
+        &mut self,
+        pool: &mut BlockPool,
+        lease: &mut Lease,
+        row_tokens: &[i32],
+        row_feats: &[f32],
+        kv: &KvCache,
+        b: usize,
+    ) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        let rows = row_tokens.len().min(kv.len(b));
+        debug_assert_eq!(row_tokens.len() * self.feat_dim, row_feats.len());
+        let node_cost = pool.blocks_for(self.block_slots, self.kv_layers);
+        let mut cur = None;
+        let mut chain = Vec::new();
+        let mut inserted = 0usize;
+        for (j, run) in row_tokens[..rows / self.block_slots * self.block_slots]
+            .chunks_exact(self.block_slots)
+            .enumerate()
+        {
+            let id = match self.tree.child_of(cur, run) {
+                Some(id) => id,
+                None => {
+                    if lease.blocks.len() < node_cost {
+                        break; // lease can no longer fund a node (shouldn't happen)
+                    }
+                    let start = j * self.block_slots;
+                    let Ok(kv_rows) = kv.read_rows(b, start, self.block_slots) else {
+                        break;
+                    };
+                    let at = lease.blocks.len() - node_cost;
+                    let blocks: Vec<u32> = lease.blocks.split_off(at);
+                    self.held_blocks += blocks.len();
+                    inserted += 1;
+                    let feats = row_feats
+                        [start * self.feat_dim..(start + self.block_slots) * self.feat_dim]
+                        .to_vec();
+                    self.tree.insert(cur, run.to_vec(), BlockPayload { kv_rows, feats, blocks })
+                }
+            };
+            chain.push(id);
+            cur = Some(id);
+        }
+        self.tree.touch(&chain);
+        inserted
+    }
+
+    /// A node is reclaimable when its whole subtree is unpinned (no
+    /// block shared with a live lease) and unprotected (not part of a
+    /// chain the scheduler counts on adopting this step).
+    fn clean_blocks(&self, id: usize, pool: &BlockPool, protect: &HashSet<usize>) -> (bool, usize) {
+        let node = self.tree.get(id);
+        let mut clean =
+            !protect.contains(&id) && !node.payload.blocks.iter().any(|&b| pool.is_shared(b));
+        let mut blocks = 0usize;
+        for &child in node.children.values() {
+            let (c_clean, c_blocks) = self.clean_blocks(child, pool, protect);
+            clean &= c_clean;
+            blocks += c_blocks;
+        }
+        if clean {
+            blocks += node.payload.blocks.len();
+        }
+        (clean, blocks)
+    }
+
+    /// Blocks the scheduler may count on reclaiming via
+    /// [`evict_lru`](Self::evict_lru) with the same `protect` set — a
+    /// conservative (never over-promising) bound, since eviction is
+    /// leaf-first and pinned/protected nodes anchor their ancestors.
+    pub fn evictable_blocks(&self, pool: &BlockPool, protect: &HashSet<usize>) -> usize {
+        self.tree.root_ids().map(|id| self.clean_blocks(id, pool, protect).1).sum()
+    }
+
+    /// Evict least-recently-used unpinned leaves until at least `want`
+    /// blocks went back to the free list (refcount==0 reclamation —
+    /// ordered before preemption in the scheduler). Returns the blocks
+    /// actually freed.
+    pub fn evict_lru(
+        &mut self,
+        pool: &mut BlockPool,
+        want: usize,
+        protect: &HashSet<usize>,
+    ) -> usize {
+        let mut freed = 0usize;
+        while freed < want {
+            let victim = self
+                .tree
+                .ids()
+                .filter(|&id| self.tree.is_leaf(id))
+                .filter(|id| !protect.contains(id))
+                .filter(|&id| {
+                    !self.tree.get(id).payload.blocks.iter().any(|&b| pool.is_shared(b))
+                })
+                .min_by_key(|&id| (self.tree.get(id).last_touch, id));
+            let Some(id) = victim else { break };
+            let payload = self.tree.remove_leaf(id);
+            self.held_blocks -= payload.blocks.len();
+            freed += pool.release_blocks(&payload.blocks);
+        }
+        freed
+    }
+
+    /// Release every index-held block (engine shutdown). Returns the
+    /// blocks freed.
+    pub fn clear(&mut self, pool: &mut BlockPool) -> usize {
+        let mut freed = 0usize;
+        for payload in self.tree.drain() {
+            self.held_blocks -= payload.blocks.len();
+            freed += pool.release_blocks(&payload.blocks);
+        }
+        debug_assert_eq!(self.held_blocks, 0);
+        freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BS: usize = 2;
+    const LAYERS: usize = 1;
+    const FEAT: usize = 3;
+
+    /// kv shaped [planes=2, B=2, S=8, KH=1, hd=2] -> row=2
+    fn kv() -> KvCache {
+        let mut kv = KvCache::zeros(vec![2, 2, 8, 1, 2]).unwrap();
+        let data = kv.tensor_mut_for_tests();
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        kv
+    }
+
+    fn feats_for(toks: &[i32]) -> Vec<f32> {
+        toks.iter().flat_map(|&t| (0..FEAT).map(move |k| (t * 10 + k as i32) as f32)).collect()
+    }
+
+    /// Publish `toks` as lane `b`'s committed rows.
+    fn publish_all(
+        cache: &mut PrefixCache,
+        pool: &mut BlockPool,
+        kv: &mut KvCache,
+        b: usize,
+        toks: &[i32],
+    ) -> usize {
+        let mut lease = Lease::default();
+        pool.ensure(&mut lease, 8, LAYERS).unwrap();
+        kv.set_len(b, toks.len());
+        let n = cache.publish(pool, &mut lease, toks, &feats_for(toks), kv, b);
+        pool.release(&mut lease);
+        n
+    }
+
+    #[test]
+    fn publish_then_adopt_roundtrips_rows_and_feats() {
+        let mut cache = PrefixCache::new(true, BS, LAYERS, FEAT);
+        let mut pool = BlockPool::new(64, BS);
+        let mut kv = kv();
+        let toks = [5, 6, 7, 8];
+        assert_eq!(publish_all(&mut cache, &mut pool, &mut kv, 1, &toks), 2);
+        assert_eq!(cache.nodes(), 2);
+        let node_cost = pool.blocks_for(BS, LAYERS);
+        assert_eq!(cache.held_blocks(), 2 * node_cost);
+        assert_eq!(pool.leaked_blocks(), 2 * node_cost, "index holds its blocks");
+
+        // a follow-up prompt sharing the prefix hits both runs (the
+        // 5th token stays uncached: the last token always prefills)
+        let hit = cache.lookup(&[5, 6, 7, 8, 9]);
+        assert_eq!(hit.tokens, 4);
+        assert_eq!(hit.blocks, 2 * node_cost);
+        // ...but an exact-length prompt must leave one token to prefill
+        assert_eq!(cache.peek(&[5, 6, 7, 8]).tokens, 2);
+        assert_eq!(cache.peek(&[9, 9]).tokens, 0);
+
+        // adopt into lane 0 of a fresh kv: rows and feats come back
+        let mut dst = KvCache::zeros(vec![2, 2, 8, 1, 2]).unwrap();
+        let mut lease = Lease::default();
+        let feats = cache.adopt(&hit, &mut pool, &mut dst, 0, &mut lease).unwrap();
+        assert_eq!(lease.blocks.len(), hit.blocks);
+        assert_eq!(feats, feats_for(&toks));
+        for slot in 0..4 {
+            assert_eq!(dst.row(0, 0, slot), kv.row(0, 1, slot));
+            assert_eq!(dst.row(1, 0, slot), kv.row(1, 1, slot));
+        }
+        // sharing charged no capacity; blocks are pinned while adopted
+        assert!(lease.blocks.iter().all(|&blk| pool.is_shared(blk)));
+        assert_eq!(cache.evictable_blocks(&pool, &HashSet::new()), 0);
+        pool.release(&mut lease);
+        assert_eq!(cache.evictable_blocks(&pool, &HashSet::new()), 2 * node_cost);
+        assert_eq!(cache.clear(&mut pool), 2 * node_cost);
+        assert_eq!(pool.leaked_blocks(), 0);
+    }
+
+    #[test]
+    fn eviction_is_lru_leaf_first_and_respects_protection() {
+        let mut cache = PrefixCache::new(true, BS, LAYERS, FEAT);
+        let mut pool = BlockPool::new(64, BS);
+        let mut kv = kv();
+        let node_cost = pool.blocks_for(BS, LAYERS);
+        // two chains: [1,2]->[3,4] and [9,9]
+        publish_all(&mut cache, &mut pool, &mut kv, 0, &[1, 2, 3, 4]);
+        publish_all(&mut cache, &mut pool, &mut kv, 0, &[9, 9]);
+        assert_eq!(cache.nodes(), 3);
+        // refresh the [9,9] chain so the deep chain's leaf is LRU
+        cache.lookup(&[9, 9, 0]);
+        let protect: HashSet<usize> = HashSet::new();
+        assert_eq!(cache.evictable_blocks(&pool, &protect), 3 * node_cost);
+        let freed = cache.evict_lru(&mut pool, 1, &protect);
+        assert_eq!(freed, node_cost, "evicts whole nodes");
+        // the [3,4] leaf went first; its parent remains matchable
+        assert_eq!(cache.peek(&[1, 2, 3, 4, 0]).tokens, 2);
+        assert_eq!(cache.peek(&[9, 9, 0]).tokens, 2);
+        // protecting the remaining chains blocks further eviction
+        let all: HashSet<usize> = cache.tree.ids().collect();
+        assert_eq!(cache.evictable_blocks(&pool, &all), 0);
+        assert_eq!(cache.evict_lru(&mut pool, 100, &all), 0);
+        // unprotected, everything drains leaf-first
+        let freed = cache.evict_lru(&mut pool, 100, &protect);
+        assert_eq!(freed, 2 * node_cost);
+        assert_eq!(cache.nodes(), 0);
+        assert_eq!(pool.leaked_blocks(), 0);
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let mut cache = PrefixCache::new(false, BS, LAYERS, FEAT);
+        let mut pool = BlockPool::new(16, BS);
+        let mut kv = kv();
+        assert_eq!(publish_all(&mut cache, &mut pool, &mut kv, 0, &[1, 2, 3, 4]), 0);
+        assert_eq!(cache.nodes(), 0);
+        assert_eq!(cache.lookup(&[1, 2, 3]).tokens, 0);
+        assert_eq!(pool.leaked_blocks(), 0);
+    }
+
+    #[test]
+    fn publish_dedups_shared_prefixes() {
+        let mut cache = PrefixCache::new(true, BS, LAYERS, FEAT);
+        let mut pool = BlockPool::new(64, BS);
+        let mut kv = kv();
+        assert_eq!(publish_all(&mut cache, &mut pool, &mut kv, 0, &[1, 2, 3, 4]), 2);
+        // same prefix, diverging tail: only the new run is inserted
+        assert_eq!(publish_all(&mut cache, &mut pool, &mut kv, 0, &[1, 2, 7, 8]), 1);
+        assert_eq!(cache.nodes(), 3);
+        assert_eq!(cache.peek(&[1, 2, 7, 8, 0]).tokens, 4);
+        assert_eq!(cache.peek(&[1, 2, 3, 4, 0]).tokens, 4);
+        cache.clear(&mut pool);
+        assert_eq!(pool.leaked_blocks(), 0);
+    }
+}

@@ -1,0 +1,220 @@
+//! Radix index over token-id block runs.
+//!
+//! Keys are fixed-width runs of `block_slots` token ids, so every edge
+//! in the trie corresponds to exactly one published KV block per layer
+//! plane — a chain of nodes from the root *is* a cached prefix, and the
+//! node payloads carry what a new lease adopts. Keeping the granularity
+//! at whole blocks means shared blocks are always full: nobody ever
+//! appends into a shared block, which is what keeps the
+//! copy-on-write fork (`BlockPool::fork_tail`) a guard rather than a
+//! hot path.
+//!
+//! The tree is a slab (`Vec<Option<Node>>` + free list) so node ids
+//! stay stable across removals; recency is a logical tick counter, not
+//! wall time, so behavior is deterministic under test.
+
+use std::collections::HashMap;
+
+/// One `block_slots` run of a cached prefix.
+#[derive(Debug)]
+pub struct Node<P> {
+    /// the token-id run this edge matches
+    pub run: Vec<i32>,
+    /// parent node id; `None` means child of the root
+    pub parent: Option<usize>,
+    /// children keyed by their full run
+    pub children: HashMap<Vec<i32>, usize>,
+    /// logical recency (larger = more recently used)
+    pub last_touch: u64,
+    pub payload: P,
+}
+
+#[derive(Debug)]
+pub struct RadixTree<P> {
+    slab: Vec<Option<Node<P>>>,
+    free: Vec<usize>,
+    roots: HashMap<Vec<i32>, usize>,
+    tick: u64,
+    live: usize,
+}
+
+impl<P> Default for RadixTree<P> {
+    fn default() -> Self {
+        RadixTree { slab: Vec::new(), free: Vec::new(), roots: HashMap::new(), tick: 0, live: 0 }
+    }
+}
+
+impl<P> RadixTree<P> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    pub fn get(&self, id: usize) -> &Node<P> {
+        self.slab[id].as_ref().expect("live node id")
+    }
+
+    /// Resolve the child of `parent` (or of the root) matching `run`.
+    pub fn child_of(&self, parent: Option<usize>, run: &[i32]) -> Option<usize> {
+        let map = match parent {
+            Some(p) => &self.get(p).children,
+            None => &self.roots,
+        };
+        map.get(run).copied()
+    }
+
+    /// Walk the longest chain of nodes matching `runs` from the root.
+    pub fn walk<'a>(&self, runs: impl Iterator<Item = &'a [i32]>) -> Vec<usize> {
+        let mut chain = Vec::new();
+        let mut cur = None;
+        for run in runs {
+            match self.child_of(cur, run) {
+                Some(id) => {
+                    chain.push(id);
+                    cur = Some(id);
+                }
+                None => break,
+            }
+        }
+        chain
+    }
+
+    /// Insert a new child under `parent` (or the root). The run must
+    /// not already have a child there.
+    pub fn insert(&mut self, parent: Option<usize>, run: Vec<i32>, payload: P) -> usize {
+        self.tick += 1;
+        let node = Node {
+            run: run.clone(),
+            parent,
+            children: HashMap::new(),
+            last_touch: self.tick,
+            payload,
+        };
+        let id = match self.free.pop() {
+            Some(i) => {
+                self.slab[i] = Some(node);
+                i
+            }
+            None => {
+                self.slab.push(Some(node));
+                self.slab.len() - 1
+            }
+        };
+        let map = match parent {
+            Some(p) => &mut self.slab[p].as_mut().expect("live parent").children,
+            None => &mut self.roots,
+        };
+        let prev = map.insert(run, id);
+        debug_assert!(prev.is_none(), "duplicate radix edge");
+        self.live += 1;
+        id
+    }
+
+    /// Bump recency on a chain of node ids (one lookup/publish = one tick).
+    pub fn touch(&mut self, chain: &[usize]) {
+        self.tick += 1;
+        for &id in chain {
+            self.slab[id].as_mut().expect("live node id").last_touch = self.tick;
+        }
+    }
+
+    pub fn is_leaf(&self, id: usize) -> bool {
+        self.get(id).children.is_empty()
+    }
+
+    /// Remove a leaf and return its payload. Panics on interior nodes —
+    /// eviction is leaf-first by construction.
+    pub fn remove_leaf(&mut self, id: usize) -> P {
+        let node = self.slab[id].take().expect("live node id");
+        assert!(node.children.is_empty(), "remove_leaf on interior node");
+        let map = match node.parent {
+            Some(p) => &mut self.slab[p].as_mut().expect("live parent").children,
+            None => &mut self.roots,
+        };
+        map.remove(&node.run);
+        self.free.push(id);
+        self.live -= 1;
+        node.payload
+    }
+
+    /// Ids of all live nodes (arbitrary order).
+    pub fn ids(&self) -> impl Iterator<Item = usize> + '_ {
+        self.slab.iter().enumerate().filter_map(|(i, n)| n.as_ref().map(|_| i))
+    }
+
+    /// Ids of the root's children (chain heads).
+    pub fn root_ids(&self) -> impl Iterator<Item = usize> + '_ {
+        self.roots.values().copied()
+    }
+
+    /// Drain every node's payload (shutdown).
+    pub fn drain(&mut self) -> Vec<P> {
+        let out = self.slab.drain(..).flatten().map(|n| n.payload).collect();
+        self.free.clear();
+        self.roots.clear();
+        self.live = 0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runs(tree: &RadixTree<u32>, toks: &[i32], bs: usize) -> Vec<usize> {
+        tree.walk(toks.chunks_exact(bs))
+    }
+
+    #[test]
+    fn walk_matches_longest_prefix() {
+        let mut t: RadixTree<u32> = RadixTree::new();
+        let a = t.insert(None, vec![1, 2], 10);
+        let b = t.insert(Some(a), vec![3, 4], 20);
+        t.insert(Some(a), vec![5, 6], 30); // sibling branch
+        assert_eq!(runs(&t, &[1, 2, 3, 4, 9, 9], 2), vec![a, b]);
+        assert_eq!(runs(&t, &[1, 2, 7, 7], 2), vec![a]);
+        assert_eq!(runs(&t, &[9, 9], 2), Vec::<usize>::new());
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn touch_orders_recency() {
+        let mut t: RadixTree<u32> = RadixTree::new();
+        let a = t.insert(None, vec![1], 0);
+        let b = t.insert(None, vec![2], 0);
+        assert!(t.get(a).last_touch < t.get(b).last_touch);
+        t.touch(&[a]);
+        assert!(t.get(a).last_touch > t.get(b).last_touch);
+    }
+
+    #[test]
+    fn remove_leaf_recycles_ids() {
+        let mut t: RadixTree<u32> = RadixTree::new();
+        let a = t.insert(None, vec![1], 1);
+        let b = t.insert(Some(a), vec![2], 2);
+        assert!(!t.is_leaf(a));
+        assert_eq!(t.remove_leaf(b), 2);
+        assert!(t.is_leaf(a));
+        // freed id gets reused; the old edge is gone
+        let c = t.insert(None, vec![3], 3);
+        assert_eq!(c, b);
+        assert_eq!(t.child_of(Some(a), &[2]), None);
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "interior")]
+    fn remove_interior_panics() {
+        let mut t: RadixTree<u32> = RadixTree::new();
+        let a = t.insert(None, vec![1], 1);
+        t.insert(Some(a), vec![2], 2);
+        t.remove_leaf(a);
+    }
+}

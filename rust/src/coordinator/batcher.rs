@@ -50,12 +50,13 @@
 //!   (`requests_deferred`), no matter how many scheduler passes it
 //!   waits through — that bookkeeping lives in the scheduler now.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::cache::PrefixCache;
 use crate::draft::{DraftOutput, Drafter, EagleDrafter, FastEagleDrafter, ObserveArgs};
 use crate::model::{BlockPool, KvCache, Lease, MaskRow, ModelSpec, Tokenizer, NEG};
 use crate::runtime::tensor::HostTensor;
@@ -131,6 +132,10 @@ pub struct BatchConfig {
     pub prefill_chunk: usize,
     /// preemption budget per scheduler step (0 disables preemption)
     pub max_preemptions_per_step: usize,
+    /// prefix cache (`--prefix-cache`): retired requests publish their
+    /// committed prefix into a radix index; admissions adopt the longest
+    /// cached prefix by block sharing and prefill only the remainder
+    pub prefix_cache: bool,
 }
 
 impl BatchConfig {
@@ -145,6 +150,7 @@ impl BatchConfig {
             policy: PolicyKind::Fcfs,
             prefill_chunk: usize::MAX,
             max_preemptions_per_step: 1,
+            prefix_cache: false,
         }
     }
 }
@@ -168,6 +174,12 @@ struct Slot {
     // EAGLE per-slot draft state
     eg_h: Vec<f32>,
     eg_q1: Vec<f32>,
+    /// per-KV-row input tokens (prompt, then each cycle's accepted
+    /// rows) — what the prefix cache keys on; tracked only when the
+    /// cache is enabled and the request didn't opt out
+    row_tokens: Vec<i32>,
+    /// per-KV-row target features, aligned with `row_tokens`
+    row_feats: Vec<f32>,
 }
 
 impl Slot {
@@ -201,6 +213,8 @@ struct Parked {
     eg_q1: Vec<f32>,
     lease: Lease,
     gen_ms_accum: f64,
+    row_tokens: Vec<i32>,
+    row_feats: Vec<f32>,
 }
 
 /// One slot's cycle outcome within a [`BatchEngine::step_events`] —
@@ -248,6 +262,8 @@ pub struct BatchEngine {
     /// preempted requests awaiting resume (state parked on the host)
     parked: VecDeque<Parked>,
     scheduler: Scheduler,
+    /// prefix cache (inert unless `cfg.prefix_cache`)
+    cache: PrefixCache,
 }
 
 /// Batched additive mask [B, T, S] from per-slot row descriptors.
@@ -292,6 +308,14 @@ impl BatchEngine {
         for w in report.warnings() {
             eprintln!("[{}] contract: {w}", spec.name);
         }
+        if cfg.prefix_cache {
+            let report =
+                crate::runtime::contract::check_cache(&spec, cfg.block_slots, cfg.batch);
+            report.ensure_ok()?;
+            for w in report.warnings() {
+                eprintln!("[{}] contract: {w}", spec.name);
+            }
+        }
         let b = cfg.batch;
         let kv = KvCache::zeros(vec![
             spec.n_layers, 2, b, spec.max_seq, spec.n_kv_heads, spec.head_dim,
@@ -307,6 +331,8 @@ impl BatchEngine {
                 max_preemptions_per_step: cfg.max_preemptions_per_step,
             },
         );
+        let cache =
+            PrefixCache::new(cfg.prefix_cache, cfg.block_slots, spec.n_layers, spec.feat_dim);
         Ok(BatchEngine {
             store,
             spec,
@@ -320,6 +346,7 @@ impl BatchEngine {
             pending: VecDeque::new(),
             parked: VecDeque::new(),
             scheduler,
+            cache,
         })
     }
 
@@ -416,6 +443,47 @@ impl BatchEngine {
         self.spec.n_layers + method.drafter_kv_layers(&self.spec)
     }
 
+    /// The exact prompt token ids a request will prefill — encode,
+    /// budget-truncate, degenerate-budget BOS fallback. Shared by the
+    /// scheduler view's cache peek and the admission path so both see
+    /// the same cache key.
+    fn prompt_ids(&self, req: &Request) -> Vec<i32> {
+        let mut ptoks = self.tokenizer.encode_prompt(&req.prompt);
+        let budget = prompt_budget(
+            self.spec.max_seq,
+            req.cfg.max_new_tokens,
+            self.cfg.chain_len + 3,
+        );
+        truncate_prompt(&mut ptoks, budget);
+        if ptoks.is_empty() {
+            // degenerate budget (max_new ~ max_seq): keep one row so the
+            // slot still produces last-token logits
+            ptoks.push(self.spec.bos);
+        }
+        ptoks
+    }
+
+    /// Radix nodes this step's plan may count on adopting: the union of
+    /// every pending request's current longest-prefix chain. Eviction
+    /// must not reclaim these — the scheduler already funded admissions
+    /// with their shared blocks.
+    fn protect_set(&self) -> HashSet<usize> {
+        let mut protect = HashSet::new();
+        if self.cache.enabled() {
+            for r in &self.pending {
+                if r.cache {
+                    protect.extend(self.cache.peek(&self.prompt_ids(r)).node_ids);
+                }
+            }
+        }
+        protect
+    }
+
+    /// Prefix-cache gauge snapshot: `(nodes, held_blocks)`.
+    pub fn cache_usage(&self) -> (usize, usize) {
+        (self.cache.nodes(), self.cache.held_blocks())
+    }
+
     fn ensure_fe_dkv(&mut self) -> Result<&mut KvCache> {
         if self.fe_dkv.is_none() {
             self.fe_dkv = Some(KvCache::zeros(vec![
@@ -472,6 +540,7 @@ impl BatchEngine {
         let bsz = self.cfg.batch;
         let free_slots: Vec<usize> =
             (0..bsz).filter(|&b| self.slots[b].is_none()).collect();
+        let mut protect: HashSet<usize> = HashSet::new();
         let pending: Vec<PendingView> = self
             .pending
             .iter()
@@ -481,12 +550,21 @@ impl BatchEngine {
                     r.cfg.max_new_tokens,
                     self.cfg.chain_len + 3,
                 );
+                let (cached_tokens, cached_blocks) = if self.cache.enabled() && r.cache {
+                    let hit = self.cache.peek(&self.prompt_ids(r));
+                    protect.extend(hit.node_ids.iter().copied());
+                    (hit.tokens, hit.blocks)
+                } else {
+                    (0, 0)
+                };
                 PendingView {
                     id: r.id,
                     priority: r.priority,
                     // byte tokenizer: prompt bytes + BOS, pre-truncation cap
                     prompt_tokens: (r.prompt.len() + 1).min(budget.max(1)),
                     cost_blocks: self.request_blocks(self.method_of(r)),
+                    cached_tokens,
+                    cached_blocks,
                 }
             })
             .collect();
@@ -530,6 +608,7 @@ impl BatchEngine {
         SchedView {
             free_slots,
             pool_available: self.pool.available(),
+            evictable_blocks: self.cache.evictable_blocks(&self.pool, &protect),
             max_rows: self.max_rows(),
             pending,
             parked,
@@ -539,26 +618,64 @@ impl BatchEngine {
 
     /// Place a pending request into a free slot as `Prefilling`. Cheap:
     /// no forward pass — the prompt is ingested chunk by chunk on the
-    /// batched lane by subsequent iterations.
-    fn admit_request(&mut self, slot_idx: usize, req: Request, lease: Lease) {
+    /// batched lane by subsequent iterations. With the prefix cache on,
+    /// the longest cached prefix is adopted first (shared blocks join
+    /// the lease, cached KV rows and features land in the lane) and
+    /// only the uncached remainder is allocated and prefilled — the
+    /// scheduler funded exactly that remainder.
+    fn admit_request(
+        &mut self,
+        slot_idx: usize,
+        req: Request,
+        metrics: &mut ServingMetrics,
+    ) -> Result<()> {
         let method = self.method_of(&req);
-        let mut ptoks = self.tokenizer.encode_prompt(&req.prompt);
-        let budget = prompt_budget(
-            self.spec.max_seq,
-            req.cfg.max_new_tokens,
-            self.cfg.chain_len + 3,
-        );
-        truncate_prompt(&mut ptoks, budget);
-        if ptoks.is_empty() {
-            // degenerate budget (max_new ~ max_seq): keep one row so the
-            // slot still produces last-token logits
-            ptoks.push(self.spec.bos);
-        }
+        let ptoks = self.prompt_ids(&req);
         self.kv.set_len(slot_idx, 0);
+        let mut lease = Lease::default();
+        let mut adopted: Option<(usize, Vec<f32>)> = None;
+        if self.cache.enabled() && req.cache {
+            let t_lookup = Instant::now();
+            let hit = self.cache.lookup(&ptoks);
+            crate::obs::span_from("cache_lookup", t_lookup)
+                .tid(slot_idx as u32)
+                .req(req.id)
+                .arg(hit.tokens as i64)
+                .emit();
+            if hit.tokens > 0 {
+                let t_adopt = Instant::now();
+                let feats = self.cache.adopt(
+                    &hit,
+                    &mut self.pool,
+                    &mut self.kv,
+                    slot_idx,
+                    &mut lease,
+                )?;
+                self.kv.set_len(slot_idx, hit.tokens);
+                metrics.cache_hits += 1;
+                metrics.cache_saved_tokens += hit.tokens as u64;
+                crate::obs::span_from("cache_adopt", t_adopt)
+                    .tid(slot_idx as u32)
+                    .req(req.id)
+                    .arg(hit.tokens as i64)
+                    .emit();
+                adopted = Some((hit.tokens, feats));
+            } else {
+                metrics.cache_misses += 1;
+            }
+        }
+        let cost = self.request_blocks(method);
+        self.pool
+            .alloc(cost - lease.blocks.len(), &mut lease)
+            .expect("scheduler checked pool availability");
+        let prefill = match adopted {
+            Some((pos, feats)) => PrefillProgress::with_prefix(ptoks, pos, feats),
+            None => PrefillProgress::new(ptoks),
+        };
         self.slots[slot_idx] = Some(Slot {
             req,
             method,
-            prefill: Some(PrefillProgress::new(ptoks)),
+            prefill: Some(prefill),
             cycle: None,
             admitted_at: Instant::now(),
             gen_ms_accum: 0.0,
@@ -566,7 +683,10 @@ impl BatchEngine {
             fe_logits: Vec::new(),
             eg_h: Vec::new(),
             eg_q1: Vec::new(),
+            row_tokens: Vec::new(),
+            row_feats: Vec::new(),
         });
+        Ok(())
     }
 
     /// Pause a decoding slot under pool pressure: park its KV/drafter
@@ -612,6 +732,8 @@ impl BatchEngine {
             lease: slot.lease,
             gen_ms_accum: slot.gen_ms_accum
                 + slot.admitted_at.elapsed().as_secs_f64() * 1e3,
+            row_tokens: slot.row_tokens,
+            row_feats: slot.row_feats,
         });
         Ok(())
     }
@@ -650,6 +772,8 @@ impl BatchEngine {
             fe_logits: p.fe_logits,
             eg_h: p.eg_h,
             eg_q1: p.eg_q1,
+            row_tokens: p.row_tokens,
+            row_feats: p.row_feats,
         });
         metrics.resumes += 1;
         Ok(())
@@ -825,6 +949,13 @@ impl BatchEngine {
         let (ptoks, feats, method, mut cfg) = {
             let slot = self.slots[b].as_mut().expect("prefill slot");
             let pf = slot.prefill.take().expect("finalize of non-prefilling slot");
+            if self.cache.enabled() && slot.req.cache {
+                // seed the publishable row history with the prompt rows
+                // (adopted prefix included — `with_prefix` carried its
+                // cached features); decode cycles append accepted rows
+                slot.row_tokens = pf.ptoks.clone();
+                slot.row_feats = pf.feats.clone();
+            }
             (pf.ptoks, pf.feats, slot.method, slot.req.cfg.clone())
         };
         // request knobs over serving defaults, resolved to this lane's
@@ -998,6 +1129,8 @@ impl BatchEngine {
                     .collect();
             }
             let mask = build_mask_b(bsz, m, s, &rows);
+            // the verify-input tokens double as the cache's per-row keys
+            let row_toks = if self.cache.enabled() { tokens.clone() } else { Vec::new() };
             let exec_name = format!("tgt_m{m}{}", self.exec_suffix());
             let t_verify = Instant::now();
             let exec = self.store.bind(&exec_name, "target")?;
@@ -1078,6 +1211,15 @@ impl BatchEngine {
                 for &sl in &acc.accepted_slots {
                     f.extend_from_slice(&feats[(b * m + sl) * fd..(b * m + sl + 1) * fd]);
                 }
+                if !row_toks.is_empty() && slot.req.cache {
+                    // accepted rows extend the publishable history; rows
+                    // past an EOS/max_new truncation are harmless — a
+                    // later radix match simply stops at the divergence
+                    for &sl in &acc.accepted_slots {
+                        slot.row_tokens.push(row_toks[b * m + sl]);
+                    }
+                    slot.row_feats.extend_from_slice(&f);
+                }
                 observe_feats[b] = f;
                 observe_next[b] = commit.observe_next;
                 observe_first[b] = base;
@@ -1154,6 +1296,24 @@ impl BatchEngine {
                 let mut slot = self.slots[b].take().unwrap();
                 if let Some(cycle) = slot.cycle.as_mut() {
                     cycle.finish();
+                }
+                if self.cache.enabled() && slot.req.cache {
+                    // publish before release: new index nodes take their
+                    // blocks by transfer from this lease
+                    let t_pub = Instant::now();
+                    let inserted = self.cache.publish(
+                        &mut self.pool,
+                        &mut slot.lease,
+                        &slot.row_tokens,
+                        &slot.row_feats,
+                        &self.kv,
+                        b,
+                    );
+                    crate::obs::span_from("cache_publish", t_pub)
+                        .tid(b as u32)
+                        .req(slot.req.id)
+                        .arg(inserted as i64)
+                        .emit();
                 }
                 self.pool.release(&mut slot.lease);
                 self.kv.set_len(b, 0);
@@ -1342,7 +1502,18 @@ impl BatchEngine {
         metrics.record_phase(self.cfg.method.name(), "sched", t_sched.elapsed());
         metrics.requests_deferred += plan.new_deferrals;
 
-        // execute the plan: preempt -> resume -> admit, then iterate
+        // execute the plan: evict -> preempt -> resume -> admit, then
+        // iterate. Eviction runs first because the plan funded resumes
+        // and admissions partly from reclaimable cache blocks; the
+        // protect set mirrors the one behind the view's
+        // `evictable_blocks`, so pending hits survive to adoption.
+        if plan.evict_blocks > 0 {
+            let t_evict = Instant::now();
+            let protect = self.protect_set();
+            let freed = self.cache.evict_lru(&mut self.pool, plan.evict_blocks, &protect);
+            metrics.cache_evicted_blocks += freed as u64;
+            crate::obs::span_from("cache_evict", t_evict).arg(freed as i64).emit();
+        }
         for &b in &plan.preempt {
             self.park_slot(b, metrics)?;
         }
@@ -1374,16 +1545,14 @@ impl BatchEngine {
                     .req(req.id)
                     .emit();
                 crate::obs::mark("admit", slot as u32, req.id, 0);
-                let cost = self.request_blocks(self.method_of(&req));
-                let mut lease = Lease::default();
-                self.pool
-                    .alloc(cost, &mut lease)
-                    .expect("scheduler checked pool availability");
-                self.admit_request(slot, req, lease);
+                self.admit_request(slot, req, metrics)?;
             }
         }
         let parked_tokens: usize = self.parked.iter().map(|p| p.kv.len(0)).sum();
         metrics.record_parked(parked_tokens);
+        if self.cache.enabled() {
+            metrics.record_cache_gauges(self.cache.nodes(), self.cache.held_blocks());
+        }
         if self.slots.iter().all(|s| s.is_none()) {
             return Ok(StepOutcome::default());
         }
@@ -1469,6 +1638,23 @@ impl BatchEngine {
             responses.extend(done);
         }
         Ok((responses, metrics))
+    }
+}
+
+impl Drop for BatchEngine {
+    /// Shutdown accounting check: after every lease and cache-held
+    /// share is returned, the pool must have zero outstanding blocks —
+    /// debug builds assert it so silent lease leaks die in tests.
+    fn drop(&mut self) {
+        self.abort_all();
+        self.cache.clear(&mut self.pool);
+        if !std::thread::panicking() {
+            debug_assert_eq!(
+                self.pool.leaked_blocks(),
+                0,
+                "engine shutdown stranded pool blocks"
+            );
+        }
     }
 }
 

@@ -56,6 +56,19 @@ pub struct ServingMetrics {
     /// rolling acceptance-window means reported by adaptive planners
     pub accept_window_sum: f64,
     pub accept_window_samples: u64,
+    /// admissions whose prompt matched a cached prefix (tokens adopted
+    /// instead of prefilled)
+    pub cache_hits: u64,
+    /// admissions that looked up the prefix cache and found nothing
+    pub cache_misses: u64,
+    /// prompt tokens adopted from the cache (prefill work avoided)
+    pub cache_saved_tokens: u64,
+    /// pool blocks reclaimed from the cache under pressure
+    pub cache_evicted_blocks: u64,
+    /// prefix-cache gauges, sampled once per scheduler step
+    pub cache_nodes: u64,
+    pub cache_blocks: u64,
+    pub cache_samples: u64,
     /// arrival -> completion
     pub latency: Histogram,
     /// arrival -> slot admission
@@ -101,6 +114,13 @@ impl Default for ServingMetrics {
             plan_depth_max: 0,
             accept_window_sum: 0.0,
             accept_window_samples: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_saved_tokens: 0,
+            cache_evicted_blocks: 0,
+            cache_nodes: 0,
+            cache_blocks: 0,
+            cache_samples: 0,
             latency: Histogram::new(),
             queue_wait: Histogram::new(),
             ttfc: Histogram::new(),
@@ -162,6 +182,23 @@ impl ServingMetrics {
             .map(|(_, h)| h)
     }
 
+    /// Sample the prefix-cache gauges at one scheduler step.
+    pub fn record_cache_gauges(&mut self, nodes: usize, blocks: usize) {
+        self.cache_nodes = nodes as u64;
+        self.cache_blocks = blocks as u64;
+        self.cache_samples += 1;
+    }
+
+    /// Prefix-cache hit rate over admissions that consulted the cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
     /// Sample the number of occupied slots at one scheduler step.
     pub fn record_occupancy(&mut self, active: usize) {
         self.occupancy_sum += active as u64;
@@ -210,6 +247,15 @@ impl ServingMetrics {
         self.plan_depth_max = self.plan_depth_max.max(other.plan_depth_max);
         self.accept_window_sum += other.accept_window_sum;
         self.accept_window_samples += other.accept_window_samples;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.cache_saved_tokens += other.cache_saved_tokens;
+        self.cache_evicted_blocks += other.cache_evicted_blocks;
+        if other.cache_samples > 0 {
+            self.cache_nodes = other.cache_nodes;
+            self.cache_blocks = other.cache_blocks;
+        }
+        self.cache_samples += other.cache_samples;
         self.latency.merge(&other.latency);
         self.queue_wait.merge(&other.queue_wait);
         self.ttfc.merge(&other.ttfc);
@@ -287,10 +333,21 @@ impl ServingMetrics {
                 self.mean_accept_window(),
             )
         };
+        let cache = if self.cache_hits + self.cache_misses == 0 {
+            String::new()
+        } else {
+            format!(
+                " cache={}/{} saved={} evicted={}",
+                self.cache_hits,
+                self.cache_hits + self.cache_misses,
+                self.cache_saved_tokens,
+                self.cache_evicted_blocks,
+            )
+        };
         format!(
             "done={} rejected={} deferred={} failed={} tokens={} tok/s={:.1} tau={:.2} \
              p50={:.0}ms p99={:.0}ms wait_p50={:.0}ms ttfc_p50={:.0}ms occ={:.2}/{} \
-             pfc={} preempt={} resume={} parked={}/{} {plan}",
+             pfc={} preempt={} resume={} parked={}/{} {plan}{cache}",
             self.requests_done,
             self.requests_rejected,
             self.requests_deferred,
@@ -444,6 +501,33 @@ mod tests {
         let fe = m.phase_hist("fasteagle", "draft").expect("fe series").mean_us();
         let eg = m.phase_hist("eagle3", "draft").expect("eg series").mean_us();
         assert!(fe < eg, "fe {fe} vs eg {eg}");
+    }
+
+    #[test]
+    fn cache_counters_record_and_merge() {
+        let mut m = ServingMetrics::default();
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        assert!(!m.report().contains("cache="), "cold engines stay quiet");
+        m.cache_hits = 2;
+        m.cache_misses = 1;
+        m.cache_saved_tokens = 64;
+        m.record_cache_gauges(4, 16);
+        assert!((m.cache_hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+        let mut delta = ServingMetrics::default();
+        delta.cache_hits = 1;
+        delta.cache_evicted_blocks = 8;
+        delta.record_cache_gauges(2, 6);
+        m.merge(&delta);
+        assert_eq!(m.cache_hits, 3);
+        assert_eq!(m.cache_saved_tokens, 64);
+        assert_eq!(m.cache_evicted_blocks, 8);
+        assert_eq!(m.cache_nodes, 2, "gauge takes the newer sample");
+        assert_eq!(m.cache_blocks, 6);
+        // an unsampled delta leaves the gauges untouched
+        m.merge(&ServingMetrics::default());
+        assert_eq!(m.cache_nodes, 2);
+        let r = m.report();
+        assert!(r.contains("cache=3/4") && r.contains("saved=64"), "{r}");
     }
 
     #[test]

@@ -44,6 +44,11 @@ pub struct Request {
     /// threshold: only strictly lower-priority slots may be paused to
     /// fund this request's admission.
     pub priority: i32,
+    /// prefix-cache participation (default true): `"cache": false`
+    /// opts this request out of both adopting cached prefixes and
+    /// publishing its own — for privacy-sensitive prompts or A/B
+    /// measurement. No effect when the engine's cache is off.
+    pub cache: bool,
     pub arrival: Instant,
 }
 
@@ -56,13 +61,14 @@ impl Request {
             method: None,
             stream: false,
             priority: 0,
+            cache: true,
             arrival: Instant::now(),
         }
     }
 
     /// Parse an API request line: {"prompt": "...", "max_new": 64,
     /// "temperature": 0.0, "seed": 1, "method": "fasteagle",
-    /// "stream": false, "priority": 0,
+    /// "stream": false, "priority": 0, "cache": true,
     /// "draft": {"planner": "static"|"adaptive", "depth": N,
     ///           "top_k": N, "budget": N}}.
     ///
@@ -137,7 +143,13 @@ impl Request {
                 .ok_or_else(|| ParseError::new("priority", "must be an integer"))?
                 as i32,
         };
-        Ok(Request { id, prompt, cfg, method, stream, priority, arrival: Instant::now() })
+        let cache = match v.get("cache") {
+            None => true,
+            Some(c) => c
+                .as_bool()
+                .ok_or_else(|| ParseError::new("cache", "must be a boolean"))?,
+        };
+        Ok(Request { id, prompt, cfg, method, stream, priority, cache, arrival: Instant::now() })
     }
 
     /// Validate the optional `"draft"` object into a [`DraftConfig`].
@@ -268,6 +280,11 @@ mod tests {
         assert_eq!(Request::from_json(1, &v).unwrap().priority, 0);
         let v = Json::parse(r#"{"prompt":"p","priority":-2}"#).unwrap();
         assert_eq!(Request::from_json(1, &v).unwrap().priority, -2);
+        // cache participation defaults on; "cache": false opts out
+        let v = Json::parse(r#"{"prompt":"p"}"#).unwrap();
+        assert!(Request::from_json(1, &v).unwrap().cache);
+        let v = Json::parse(r#"{"prompt":"p","cache":false}"#).unwrap();
+        assert!(!Request::from_json(1, &v).unwrap().cache);
         // unknown method values die with a structured reason
         let v = Json::parse(r#"{"prompt":"p","method":"warp-drive"}"#).unwrap();
         let err = Request::from_json(2, &v).unwrap_err();
@@ -285,6 +302,7 @@ mod tests {
             (r#"{"prompt":"p","stream":"yes"}"#, "stream"),
             (r#"{"prompt":"p","stop_on_eos":1}"#, "stop_on_eos"),
             (r#"{"prompt":"p","priority":"high"}"#, "priority"),
+            (r#"{"prompt":"p","cache":"warm"}"#, "cache"),
         ] {
             let v = Json::parse(line).unwrap();
             let err = Request::from_json(1, &v).unwrap_err();

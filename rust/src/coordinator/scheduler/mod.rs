@@ -43,6 +43,11 @@ pub struct PendingView {
     pub prompt_tokens: usize,
     /// full KV-lease cost (target + this request's drafter layers)
     pub cost_blocks: usize,
+    /// prompt tokens the prefix cache already holds (prefill starts
+    /// after them)
+    pub cached_tokens: usize,
+    /// lease blocks a cache hit funds by sharing instead of allocation
+    pub cached_blocks: usize,
 }
 
 /// One parked (preempted) request awaiting resume. (The parked-token
@@ -75,6 +80,9 @@ pub struct ActiveView {
 pub struct SchedView {
     pub free_slots: Vec<usize>,
     pub pool_available: usize,
+    /// blocks reclaimable from the prefix cache (refcount==0 LRU
+    /// chains) — eviction funding, spent before preemption
+    pub evictable_blocks: usize,
     /// verify rows the batched call exposes this step — the hard cap on
     /// any slot's prefill chunk
     pub max_rows: usize,
@@ -85,9 +93,12 @@ pub struct SchedView {
 
 /// What one scheduler step decided. Slot/queue indices refer to the
 /// [`SchedView`] the plan was made from; the engine executes sections
-/// in order: preempt → resume → admit → (prefill + run).
+/// in order: evict → preempt → resume → admit → (prefill + run).
 #[derive(Debug, Default)]
 pub struct SchedulePlan {
+    /// prefix-cache blocks to evict (LRU, refcount==0) to fund this
+    /// step's resumes/admissions — always tried before preemption
+    pub evict_blocks: usize,
     /// slots to pause: park state, shrink lease to committed tokens
     pub preempt: Vec<usize>,
     /// (slot, parked-queue index) to restore
@@ -154,7 +165,27 @@ impl Scheduler {
         let mut span = crate::obs::span("sched");
         let mut plan = SchedulePlan::default();
         let mut avail = view.pool_available;
+        let mut evictable = view.evictable_blocks;
         let mut free = view.free_slots.clone();
+
+        // shared funding rule: cover `need` from free blocks, topping
+        // up from cache eviction (refcount==0 LRU chains) — cached idle
+        // state always yields to live work, and only the shortfall is
+        // evicted
+        let fund =
+            |need: usize, avail: &mut usize, evictable: &mut usize, evict: &mut usize| -> bool {
+                if need > *avail + *evictable {
+                    return false;
+                }
+                if need > *avail {
+                    let take = need - *avail;
+                    *evict += take;
+                    *evictable -= take;
+                    *avail += take;
+                }
+                *avail -= need;
+                true
+            };
 
         // 1. resumes first: a parked request already holds (and pays
         // for) its committed prefix — finishing it releases everything
@@ -162,8 +193,8 @@ impl Scheduler {
             if free.is_empty() {
                 break;
             }
-            if parked.resume_delta_blocks <= avail {
-                avail -= parked.resume_delta_blocks;
+            if fund(parked.resume_delta_blocks, &mut avail, &mut evictable, &mut plan.evict_blocks)
+            {
                 let slot = free.remove(0);
                 plan.resume.push((slot, pi));
                 self.deferred.remove(&parked.id);
@@ -178,13 +209,17 @@ impl Scheduler {
                 break;
             }
             let req = &view.pending[qi];
+            // a cache hit funds part of the lease by sharing — only the
+            // uncached remainder needs fresh blocks
+            let net_cost = req.cost_blocks.saturating_sub(req.cached_blocks);
             let mut funded_by_preemption = false;
-            if req.cost_blocks > avail {
-                // tentative victim selection — committed only if the
-                // gains actually fund this admission
+            if net_cost > avail + evictable {
+                // eviction alone can't cover it: tentative victim
+                // selection — committed only if the gains (on top of
+                // full eviction) actually fund this admission
                 let mut chosen: Vec<&ActiveView> = Vec::new();
                 let mut gain = 0usize;
-                while req.cost_blocks > avail + gain
+                while net_cost > avail + evictable + gain
                     && plan.preempt.len() + chosen.len() < self.cfg.max_preemptions_per_step
                 {
                     let candidates: Vec<ActiveView> = view
@@ -210,7 +245,7 @@ impl Scheduler {
                     gain += victim.shrink_gain_blocks;
                     chosen.push(victim);
                 }
-                if req.cost_blocks <= avail + gain {
+                if net_cost <= avail + evictable + gain {
                     funded_by_preemption = !chosen.is_empty();
                     for victim in chosen {
                         plan.preempt.push(victim.slot);
@@ -224,7 +259,8 @@ impl Scheduler {
                     break;
                 }
             }
-            avail -= req.cost_blocks;
+            let funded = fund(net_cost, &mut avail, &mut evictable, &mut plan.evict_blocks);
+            debug_assert!(funded, "funding was just established");
             let slot = free.remove(0);
             plan.admit.push((slot, qi));
             self.deferred.remove(&req.id);
@@ -264,8 +300,11 @@ impl Scheduler {
             }
         }
         for &(slot, qi) in &plan.admit {
+            // a cache hit's tokens are adopted, not ingested: the first
+            // chunk starts at the first uncached token
+            let p = &view.pending[qi];
             let chunk = chunk_for(
-                view.pending[qi].prompt_tokens,
+                p.prompt_tokens.saturating_sub(p.cached_tokens),
                 self.cfg.prefill_chunk,
                 view.max_rows,
             );
@@ -289,6 +328,7 @@ mod tests {
         SchedView {
             free_slots: vec![],
             pool_available: 0,
+            evictable_blocks: 0,
             max_rows: 3,
             pending: Vec::new(),
             parked: Vec::new(),
@@ -297,7 +337,14 @@ mod tests {
     }
 
     fn pend(id: u64, priority: i32, prompt: usize, cost: usize) -> PendingView {
-        PendingView { id, priority, prompt_tokens: prompt, cost_blocks: cost }
+        PendingView {
+            id,
+            priority,
+            prompt_tokens: prompt,
+            cost_blocks: cost,
+            cached_tokens: 0,
+            cached_blocks: 0,
+        }
     }
 
     fn decoding(slot: usize, id: u64, priority: i32, gain: usize) -> ActiveView {
@@ -427,6 +474,72 @@ mod tests {
         assert_eq!(plan.resume, vec![(0, 0)]);
         assert!(plan.admit.is_empty(), "the lone slot went to the resume");
         assert_eq!(plan.run, vec![0], "resumed slots decode this step");
+    }
+
+    #[test]
+    fn cache_hit_shrinks_both_funding_and_first_chunk() {
+        let mut s = Scheduler::new(PolicyKind::Fcfs, SchedConfig::default());
+        let mut v = view();
+        v.free_slots = vec![0];
+        v.pool_available = 3; // < full cost 10, >= net cost 10-8
+        v.pending = vec![PendingView {
+            id: 1,
+            priority: 0,
+            prompt_tokens: 9,
+            cost_blocks: 10,
+            cached_tokens: 8,
+            cached_blocks: 8,
+        }];
+        let plan = s.plan(&v);
+        assert_eq!(plan.admit, vec![(0, 0)], "shared blocks cost nothing");
+        // only the single uncached token prefills (max_rows would allow 3)
+        assert_eq!(plan.prefill, vec![(0, 1)]);
+        assert_eq!(plan.evict_blocks, 0);
+        assert!(plan.preempt.is_empty());
+    }
+
+    #[test]
+    fn eviction_funds_admission_before_preemption() {
+        let mut s = Scheduler::new(PolicyKind::Fcfs, SchedConfig::default());
+        let mut v = view();
+        v.free_slots = vec![1];
+        v.pool_available = 1;
+        v.evictable_blocks = 5;
+        v.pending = vec![pend(9, 2, 4, 4)];
+        v.active = vec![decoding(0, 5, 0, 6)]; // would be preemptible
+        let plan = s.plan(&v);
+        assert_eq!(plan.evict_blocks, 3, "only the shortfall is evicted");
+        assert!(plan.preempt.is_empty(), "cache eviction comes before preemption");
+        assert_eq!(plan.admit, vec![(1, 0)]);
+        assert_eq!(plan.run, vec![0], "the survivor keeps decoding");
+    }
+
+    #[test]
+    fn preemption_tops_up_what_eviction_cannot_cover() {
+        let mut s = Scheduler::new(PolicyKind::Fcfs, SchedConfig::default());
+        let mut v = view();
+        v.free_slots = vec![1];
+        v.pool_available = 0;
+        v.evictable_blocks = 2;
+        v.pending = vec![pend(9, 2, 4, 6)];
+        v.active = vec![decoding(0, 5, 0, 4)];
+        let plan = s.plan(&v);
+        assert_eq!(plan.preempt, vec![0]);
+        assert_eq!(plan.evict_blocks, 2, "eviction budget spent first");
+        assert_eq!(plan.admit, vec![(1, 0)]);
+    }
+
+    #[test]
+    fn eviction_funds_resumes_too() {
+        let mut s = Scheduler::new(PolicyKind::Fcfs, SchedConfig::default());
+        let mut v = view();
+        v.free_slots = vec![0];
+        v.pool_available = 2;
+        v.evictable_blocks = 3;
+        v.parked = vec![ParkedView { id: 3, priority: 0, resume_delta_blocks: 5 }];
+        let plan = s.plan(&v);
+        assert_eq!(plan.resume, vec![(0, 0)]);
+        assert_eq!(plan.evict_blocks, 3);
     }
 
     #[test]

@@ -21,6 +21,11 @@ pub enum PolicyKind {
     /// requests first, then shorter prompts (cheapest time-to-first-token
     /// first), then arrival order
     Spf,
+    /// cache-affinity within priority classes: requests with more
+    /// prefix-cache-covered tokens first — they admit while their
+    /// chains are hot (and pin them against eviction), and their
+    /// shortened prefill reaches first-token fastest
+    Cache,
 }
 
 impl PolicyKind {
@@ -28,6 +33,7 @@ impl PolicyKind {
         match self {
             PolicyKind::Fcfs => "fcfs",
             PolicyKind::Spf => "spf",
+            PolicyKind::Cache => "cache",
         }
     }
 
@@ -35,6 +41,7 @@ impl PolicyKind {
         Some(match name {
             "fcfs" => PolicyKind::Fcfs,
             "spf" => PolicyKind::Spf,
+            "cache" => PolicyKind::Cache,
             _ => return None,
         })
     }
@@ -43,6 +50,7 @@ impl PolicyKind {
         match self {
             PolicyKind::Fcfs => Box::new(FcfsPolicy),
             PolicyKind::Spf => Box::new(ShortestPromptFirst),
+            PolicyKind::Cache => Box::new(CacheAffinity),
         }
     }
 }
@@ -122,18 +130,63 @@ impl SchedulerPolicy for ShortestPromptFirst {
     }
 }
 
+/// Priority classes first, then most cached-prefix tokens (admit while
+/// the chain is hot — adoption pins its blocks against eviction), then
+/// shortest uncached remainder, then arrival order. With a cold cache
+/// every request ties at zero cached tokens and this degrades to
+/// [`ShortestPromptFirst`] ordering.
+pub struct CacheAffinity;
+
+impl SchedulerPolicy for CacheAffinity {
+    fn name(&self) -> &'static str {
+        "cache"
+    }
+
+    fn admission_order(&self, pending: &[PendingView]) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..pending.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (pa, pb) = (&pending[a], &pending[b]);
+            let (ra, rb) = (
+                pa.prompt_tokens.saturating_sub(pa.cached_tokens),
+                pb.prompt_tokens.saturating_sub(pb.cached_tokens),
+            );
+            pb.priority
+                .cmp(&pa.priority)
+                .then(pb.cached_tokens.cmp(&pa.cached_tokens))
+                .then(ra.cmp(&rb))
+                .then(a.cmp(&b))
+        });
+        order
+    }
+
+    fn preempt_victim(
+        &self,
+        candidates: &[ActiveView],
+        incoming: &PendingView,
+    ) -> Option<usize> {
+        lowest_priority_victim(candidates, incoming.priority)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::spec::SlotPhase;
 
     fn pending(id: u64, priority: i32, prompt_tokens: usize) -> PendingView {
-        PendingView { id, priority, prompt_tokens, cost_blocks: 4 }
+        PendingView {
+            id,
+            priority,
+            prompt_tokens,
+            cost_blocks: 4,
+            cached_tokens: 0,
+            cached_blocks: 0,
+        }
     }
 
     #[test]
     fn kind_names_roundtrip() {
-        for k in [PolicyKind::Fcfs, PolicyKind::Spf] {
+        for k in [PolicyKind::Fcfs, PolicyKind::Spf, PolicyKind::Cache] {
             assert_eq!(PolicyKind::from_name(k.name()), Some(k));
             assert_eq!(k.build().name(), k.name());
         }
@@ -155,6 +208,32 @@ mod tests {
             pending(3, 0, 3),  // same as #1 -> arrival order breaks the tie
         ];
         assert_eq!(ShortestPromptFirst.admission_order(&p), vec![2, 1, 3, 0]);
+    }
+
+    #[test]
+    fn cache_affinity_orders_by_cached_tokens_then_remainder() {
+        let cached = |id, priority, prompt, cached| PendingView {
+            id,
+            priority,
+            prompt_tokens: prompt,
+            cost_blocks: 4,
+            cached_tokens: cached,
+            cached_blocks: cached / 4,
+        };
+        let p = vec![
+            cached(0, 0, 100, 0),  // cold, long
+            cached(1, 0, 100, 96), // warmest: 4 tokens to prefill
+            cached(2, 2, 50, 0),   // high priority still beats warmth
+            cached(3, 0, 40, 32),  // warm, but less covered than #1
+            cached(4, 0, 10, 0),   // cold, short remainder (10)
+        ];
+        assert_eq!(CacheAffinity.admission_order(&p), vec![2, 1, 3, 4, 0]);
+        // cold cache degrades to spf ordering
+        let cold = vec![pending(0, 0, 50), pending(1, 0, 3), pending(2, 2, 80)];
+        assert_eq!(
+            CacheAffinity.admission_order(&cold),
+            ShortestPromptFirst.admission_order(&cold)
+        );
     }
 
     #[test]

@@ -35,6 +35,17 @@ impl PrefillProgress {
         PrefillProgress { ptoks, pos: 0, feats: Vec::new() }
     }
 
+    /// Start past a prefix-cache hit: the first `pos` tokens' KV rows
+    /// were adopted from the cache, and `feats` carries their cached
+    /// per-token features, so chunked prefill begins at the first
+    /// uncached token. `pos` must leave at least one token to prefill —
+    /// the last prompt token's verify row produces the logits that seed
+    /// the first decode cycle.
+    pub fn with_prefix(ptoks: Vec<i32>, pos: usize, feats: Vec<f32>) -> PrefillProgress {
+        debug_assert!(pos < ptoks.len(), "cache hit must leave >=1 token to prefill");
+        PrefillProgress { ptoks, pos, feats }
+    }
+
     pub fn remaining(&self) -> usize {
         self.ptoks.len() - self.pos
     }

@@ -452,6 +452,11 @@ fn handle_conn(
                     ("preemptions", Json::num(m.preemptions as f64)),
                     ("resumes", Json::num(m.resumes as f64)),
                     ("parked_tokens", Json::num(m.parked_tokens as f64)),
+                    ("cache_hits", Json::num(m.cache_hits as f64)),
+                    ("cache_misses", Json::num(m.cache_misses as f64)),
+                    ("cache_saved_tokens", Json::num(m.cache_saved_tokens as f64)),
+                    ("cache_evicted_blocks", Json::num(m.cache_evicted_blocks as f64)),
+                    ("cache_hit_rate", Json::num(m.cache_hit_rate())),
                     ("plan_depth_mean", Json::num(m.mean_plan_depth())),
                     ("plan_nodes_mean", Json::num(m.mean_plan_nodes())),
                     ("accept_window_mean", Json::num(m.mean_accept_window())),

@@ -17,6 +17,7 @@
 
 pub mod backend;
 pub mod bench;
+pub mod cache;
 pub mod coordinator;
 pub mod draft;
 pub mod model;

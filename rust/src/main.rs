@@ -39,10 +39,12 @@ commands:
   generate   --prompt TEXT [--drafter D] [--target T] [--temp F] [--max-new N]
   serve      [--addr HOST:PORT] [--method vanilla|eagle3|fasteagle] [--target T]
              [--batch B] [--chain N] [--pool-blocks N] [--queue N]
-             [--policy fcfs|spf] [--prefill-chunk N] [--frame-queue N]
+             [--policy fcfs|spf|cache] [--prefill-chunk N] [--frame-queue N]
+             [--prefix-cache]   (radix prefix cache; per-request opt-out
+             via \"cache\": false)
              [--trace]   (arm the flight recorder; dump via {\"cmd\":\"trace\"})
   batch      [--batch B] [--method vanilla|eagle3|fasteagle] [--requests N]
-             [--policy fcfs|spf]
+             [--policy fcfs|spf|cache] [--prefix-cache]
   trace      [--out FILE] [--batch B] [--requests N] [--max-new N]
              run a batched workload with tracing on, write Chrome trace JSON
   bench      table1|table2|table3|fig3|microbench|serve|all [--quick]
@@ -180,6 +182,7 @@ fn batch_config(args: &Args) -> Result<BatchConfig> {
             .parse()
             .map_err(|_| anyhow::anyhow!("invalid --prefill-chunk {c:?}"))?;
     }
+    cfg.prefix_cache = args.bool_flag("prefix-cache");
     Ok(cfg)
 }
 
@@ -449,10 +452,13 @@ fn cmd_check(args: &Args) -> Result<()> {
 
     // Layer 2: engine contract — B=1 planners + every lowered batch lane
     let chain = args.usize_or("chain", 2);
+    let block_slots = args.usize_or("block-slots", 16);
     let mut report = contract::check_single(&spec);
     report.merge(contract::check_engine(&spec, 1, chain));
+    report.merge(contract::check_cache(&spec, block_slots, 1));
     for &b in &spec.batch_sizes {
         report.merge(contract::check_engine(&spec, b, chain));
+        report.merge(contract::check_cache(&spec, block_slots, b));
     }
     report.merge(contract::check_inventory(&spec, &dir));
     for i in report.issues {

@@ -175,6 +175,60 @@ impl KvCache {
         Ok(out)
     }
 
+    /// Copy `n` canonical rows (slots `start..start+n`) of batch lane
+    /// `b` out as a dense `[planes, n, row]` buffer — the prefix
+    /// cache's payload extraction at publish time.
+    pub fn read_rows(&self, b: usize, start: usize, n: usize) -> Result<Vec<f32>> {
+        let lay = self.layout;
+        if b >= lay.batch || start + n > lay.s {
+            bail!(
+                "read_rows out of range: b {b} slots {start}..{} vs [B={}, S={}]",
+                start + n,
+                lay.batch,
+                lay.s
+            );
+        }
+        let data = self.tensor.as_f32()?;
+        let mut out = Vec::with_capacity(lay.planes * n * lay.row);
+        for plane in 0..lay.planes {
+            let off = lay.offset(plane, b, start);
+            out.extend_from_slice(&data[off..off + n * lay.row]);
+        }
+        Ok(out)
+    }
+
+    /// Inverse of [`read_rows`](Self::read_rows): write a dense
+    /// `[planes, n, row]` buffer into slots `start..start+n` of lane
+    /// `b` (prefix-cache adoption). Does not touch `len` — the caller
+    /// sets it once the whole cached prefix is in place.
+    pub fn write_rows(&mut self, b: usize, start: usize, n: usize, rows: &[f32]) -> Result<()> {
+        let lay = self.layout;
+        if b >= lay.batch || start + n > lay.s {
+            bail!(
+                "write_rows out of range: b {b} slots {start}..{} vs [B={}, S={}]",
+                start + n,
+                lay.batch,
+                lay.s
+            );
+        }
+        if rows.len() != lay.planes * n * lay.row {
+            bail!(
+                "write_rows payload {} != planes {} * n {} * row {}",
+                rows.len(),
+                lay.planes,
+                n,
+                lay.row
+            );
+        }
+        let data = self.tensor.as_f32_mut()?;
+        for plane in 0..lay.planes {
+            let off = lay.offset(plane, b, start);
+            let src = plane * n * lay.row;
+            data[off..off + n * lay.row].copy_from_slice(&rows[src..src + n * lay.row]);
+        }
+        Ok(())
+    }
+
     /// Raw mutable data access (tests and synthetic-state setup).
     pub fn tensor_mut_for_tests(&mut self) -> &mut [f32] {
         self.tensor.as_f32_mut().unwrap()
@@ -288,5 +342,28 @@ mod tests {
     fn overflow_panics() {
         let mut kv = filled_cache();
         kv.set_len(0, 5);
+    }
+
+    #[test]
+    fn read_write_rows_roundtrips() {
+        let kv = filled_cache();
+        // rows 1..3 of lane 1, both planes
+        let rows = kv.read_rows(1, 1, 2).unwrap();
+        assert_eq!(rows.len(), 2 * 2 * 2); // planes * n * row
+        assert_eq!(&rows[..2], kv.row(0, 1, 1));
+        assert_eq!(&rows[2..4], kv.row(0, 1, 2));
+        assert_eq!(&rows[4..6], kv.row(1, 1, 1));
+        // write them into lane 0 at a different offset
+        let mut dst = filled_cache();
+        dst.write_rows(0, 2, 2, &rows).unwrap();
+        assert_eq!(dst.row(0, 0, 2), kv.row(0, 1, 1));
+        assert_eq!(dst.row(0, 0, 3), kv.row(0, 1, 2));
+        assert_eq!(dst.row(1, 0, 2), kv.row(1, 1, 1));
+        // other lane untouched
+        assert_eq!(dst.row(0, 1, 2), kv.row(0, 1, 2));
+        // bounds and payload-size errors
+        assert!(kv.read_rows(1, 3, 2).is_err());
+        assert!(dst.write_rows(0, 0, 2, &rows[..3]).is_err());
+        assert!(dst.write_rows(2, 0, 1, &rows[..4]).is_err());
     }
 }

@@ -1,4 +1,5 @@
-//! Paged KV accounting: a block allocator in the vLLM mold.
+//! Paged KV accounting: a block allocator in the vLLM mold, extended
+//! with refcounted copy-on-write sharing for the prefix cache.
 //!
 //! The PJRT executables use dense per-request KV tensors (fixed shapes),
 //! so the paged layer manages *capacity*, not addresses: admission
@@ -7,6 +8,23 @@
 //! Table-3 memory-pressure effect — FastEagle's cascade keeps N drafter
 //! KV layers alive per request vs EAGLE's 1, so its per-request block
 //! cost is higher and throughput saturates at smaller batch sizes.
+//!
+//! **Sharing model** (`crate::cache`): a block normally has one holder
+//! (the lease it was allocated into). [`BlockPool::retain`] adds a
+//! reference — the same block id now funds two holders but occupies one
+//! block of capacity, which is exactly the prefix cache's saving.
+//! Shared blocks are read-only by contract; a writer that must append
+//! into a shared tail block first calls [`BlockPool::fork_tail`]
+//! (copy-on-write: the share is replaced by a private block, the cached
+//! copy stays intact for other readers). A block returns to the free
+//! list only when its last reference is released.
+//!
+//! **Leak guard**: in debug builds a [`Lease`] dropped with live blocks
+//! panics — capacity silently stranded is a bug, not a condition to
+//! limp through. [`BlockPool::leaked_blocks`] reports blocks issued but
+//! never returned; engines assert it is zero at shutdown.
+
+use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
@@ -20,18 +38,40 @@ pub struct BlockPool {
     /// `usize::MAX / 4` blocks) costs nothing until leased
     next: usize,
     total: usize,
+    /// refcounts for *shared* blocks only (count >= 2). A live block
+    /// with no entry has exactly one holder; a freed block has none.
+    refs: HashMap<u32, u32>,
 }
 
 /// Blocks leased to one request; freed by returning to the pool.
+/// Dropping a lease that still holds blocks is a leak — debug builds
+/// panic so the accounting bug is found where it happens.
 #[derive(Debug, Default)]
 pub struct Lease {
     pub blocks: Vec<u32>,
 }
 
+impl Drop for Lease {
+    fn drop(&mut self) {
+        if cfg!(debug_assertions) && !self.blocks.is_empty() && !std::thread::panicking() {
+            panic!(
+                "Lease dropped with {} live blocks — release it to the pool first",
+                self.blocks.len()
+            );
+        }
+    }
+}
+
 impl BlockPool {
     pub fn new(total_blocks: usize, block_slots: usize) -> BlockPool {
         assert!(block_slots > 0);
-        BlockPool { block_slots, free: Vec::new(), next: 0, total: total_blocks }
+        BlockPool {
+            block_slots,
+            free: Vec::new(),
+            next: 0,
+            total: total_blocks,
+            refs: HashMap::new(),
+        }
     }
 
     pub fn block_slots(&self) -> usize {
@@ -44,6 +84,26 @@ impl BlockPool {
 
     pub fn total(&self) -> usize {
         self.total
+    }
+
+    /// Blocks issued and not yet fully returned — live leases plus
+    /// cache-held shares. Nonzero after every lease and cache reference
+    /// has been released means capacity was stranded; engines assert
+    /// zero at shutdown.
+    pub fn leaked_blocks(&self) -> usize {
+        self.next - self.free.len()
+    }
+
+    /// References on a block: 0 = free/never issued tracking aside,
+    /// 1 = single holder, >=2 = shared. (A never-issued or freed block
+    /// reports 1 too — callers only consult this for blocks they hold.)
+    pub fn refcount(&self, block: u32) -> u32 {
+        self.refs.get(&block).copied().unwrap_or(1)
+    }
+
+    /// Is this block held by more than one owner (lease or cache)?
+    pub fn is_shared(&self, block: u32) -> bool {
+        self.refs.contains_key(&block)
     }
 
     /// Blocks needed to hold `slots` KV rows across `kv_layers` layers
@@ -90,24 +150,88 @@ impl BlockPool {
         Ok(())
     }
 
-    pub fn release(&mut self, lease: &mut Lease) {
-        self.free.append(&mut lease.blocks);
-        debug_assert!(self.free.len() <= self.total);
+    /// Add one reference to each of `blocks` (prefix-cache adoption:
+    /// the same physical capacity now funds another holder). The caller
+    /// must hold a reference to every block it retains.
+    pub fn retain(&mut self, blocks: &[u32]) {
+        for &b in blocks {
+            *self.refs.entry(b).or_insert(1) += 1;
+        }
     }
 
-    /// Shrink a lease to cover `slots` slots, returning the excess
-    /// blocks to the pool. The preemption path uses this to park a
-    /// paused request at the cost of its committed tokens only; the
-    /// blocks come back via [`ensure`](Self::ensure) on resume.
-    /// Returns how many blocks were released.
+    /// Drop one reference on `block`; returns true when that was the
+    /// last reference and the block went back to the free list.
+    fn release_one(&mut self, block: u32) -> bool {
+        match self.refs.get_mut(&block) {
+            Some(c) if *c > 2 => {
+                *c -= 1;
+                false
+            }
+            Some(_) => {
+                // down to a single holder: back to implicit refcount 1
+                self.refs.remove(&block);
+                false
+            }
+            None => {
+                self.free.push(block);
+                debug_assert!(self.free.len() <= self.total);
+                true
+            }
+        }
+    }
+
+    /// Drop one reference on each of `blocks` (cache eviction path);
+    /// returns how many blocks actually became free.
+    pub fn release_blocks(&mut self, blocks: &[u32]) -> usize {
+        blocks.iter().filter(|&&b| self.release_one(b)).count()
+    }
+
+    pub fn release(&mut self, lease: &mut Lease) {
+        for b in std::mem::take(&mut lease.blocks) {
+            self.release_one(b);
+        }
+    }
+
+    /// Copy-on-write fork: if the lease's tail block is shared, replace
+    /// it with a freshly allocated private block and drop the share (the
+    /// cached copy stays intact for other readers). No-op on an empty
+    /// lease or a private tail. Returns true when a fork happened.
+    ///
+    /// The serving path publishes and adopts whole `block_slots` runs,
+    /// so its shared blocks are always full and never appended into —
+    /// this guard fires only for sub-block sharing (exercised by the
+    /// pool property tests), keeping the read-only contract on shared
+    /// blocks unconditional.
+    pub fn fork_tail(&mut self, lease: &mut Lease) -> Result<bool> {
+        let Some(&tail) = lease.blocks.last() else {
+            return Ok(false);
+        };
+        if !self.is_shared(tail) {
+            return Ok(false);
+        }
+        let mut fresh = Lease::default();
+        self.alloc(1, &mut fresh)?;
+        let private = fresh.blocks.pop().expect("alloc(1) pushed a block");
+        *lease.blocks.last_mut().expect("tail exists") = private;
+        self.release_one(tail);
+        Ok(true)
+    }
+
+    /// Shrink a lease to cover `slots` slots, dropping the excess
+    /// references. The preemption path uses this to park a paused
+    /// request at the cost of its committed tokens only; the blocks
+    /// come back via [`ensure`](Self::ensure) on resume. Returns how
+    /// many blocks actually became free (a popped block that is still
+    /// shared with the cache stays live).
     pub fn shrink(&mut self, lease: &mut Lease, slots: usize, kv_layers: usize) -> usize {
         let want = self.blocks_for(slots, kv_layers);
         let mut released = 0usize;
         while lease.blocks.len() > want {
-            self.free.push(lease.blocks.pop().unwrap());
-            released += 1;
+            let b = lease.blocks.pop().expect("len checked");
+            if self.release_one(b) {
+                released += 1;
+            }
         }
-        debug_assert!(self.free.len() <= self.total);
         released
     }
 }
@@ -122,8 +246,10 @@ mod tests {
         let mut lease = Lease::default();
         pool.alloc(4, &mut lease).unwrap();
         assert_eq!(pool.available(), 6);
+        assert_eq!(pool.leaked_blocks(), 4);
         pool.release(&mut lease);
         assert_eq!(pool.available(), 10);
+        assert_eq!(pool.leaked_blocks(), 0);
         assert!(lease.blocks.is_empty());
     }
 
@@ -187,5 +313,77 @@ mod tests {
         all.sort_unstable();
         all.dedup();
         assert_eq!(all.len(), 8);
+        pool.release(&mut a);
+        pool.release(&mut b);
+    }
+
+    #[test]
+    fn retained_blocks_free_only_on_last_release() {
+        let mut pool = BlockPool::new(8, 16);
+        let mut a = Lease::default();
+        pool.alloc(3, &mut a).unwrap();
+        // cache-style second holder: same capacity, two references
+        let mut b = Lease::default();
+        pool.retain(&a.blocks);
+        b.blocks.extend_from_slice(&a.blocks);
+        assert_eq!(pool.available(), 5, "sharing charges capacity once");
+        assert!(a.blocks.iter().all(|&blk| pool.is_shared(blk)));
+        assert_eq!(pool.refcount(a.blocks[0]), 2);
+        pool.release(&mut a);
+        assert_eq!(pool.available(), 5, "blocks still held by the share");
+        assert_eq!(pool.leaked_blocks(), 3);
+        assert!(b.blocks.iter().all(|&blk| !pool.is_shared(blk)));
+        pool.release(&mut b);
+        assert_eq!(pool.available(), 8);
+        assert_eq!(pool.leaked_blocks(), 0);
+    }
+
+    #[test]
+    fn fork_tail_is_copy_on_write() {
+        let mut pool = BlockPool::new(8, 16);
+        let mut owner = Lease::default();
+        pool.alloc(2, &mut owner).unwrap();
+        let mut writer = Lease::default();
+        pool.retain(&owner.blocks);
+        writer.blocks.extend_from_slice(&owner.blocks);
+        let shared_tail = *writer.blocks.last().unwrap();
+        // writer must not append into the shared tail: fork it
+        assert!(pool.fork_tail(&mut writer).unwrap());
+        let private_tail = *writer.blocks.last().unwrap();
+        assert_ne!(private_tail, shared_tail);
+        assert!(!pool.is_shared(shared_tail), "share dropped by the fork");
+        assert!(!pool.is_shared(private_tail));
+        assert_eq!(owner.blocks[1], shared_tail, "reader keeps the original");
+        // private tails don't fork again
+        assert!(!pool.fork_tail(&mut writer).unwrap());
+        pool.release(&mut owner);
+        pool.release(&mut writer);
+        assert_eq!(pool.available(), 8);
+    }
+
+    #[test]
+    fn shrink_of_shared_blocks_frees_nothing_until_last_holder() {
+        let mut pool = BlockPool::new(8, 16);
+        let mut owner = Lease::default();
+        pool.alloc(4, &mut owner).unwrap();
+        let mut holder = Lease::default();
+        pool.retain(&owner.blocks[..2]);
+        holder.blocks.extend_from_slice(&owner.blocks[..2]);
+        // shrink the owner to 0 slots: 2 private blocks free, 2 shared stay
+        let freed = pool.shrink(&mut owner, 0, 1);
+        assert_eq!(freed, 2);
+        assert_eq!(pool.available(), 6);
+        pool.release(&mut owner);
+        pool.release(&mut holder);
+        assert_eq!(pool.available(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "live blocks")]
+    fn dropping_a_live_lease_panics_in_debug() {
+        let mut pool = BlockPool::new(8, 16);
+        let mut lease = Lease::default();
+        pool.alloc(1, &mut lease).unwrap();
+        drop(lease); // leak: debug builds refuse
     }
 }

@@ -62,7 +62,7 @@ fn hist(out: &mut String, name: &str, help: &str, h: &Histogram) {
 /// Render the full exposition, terminated by a `# EOF` line.
 pub fn render(m: &ServingMetrics) -> String {
     let mut out = String::new();
-    let counters: [(&str, &str, u64); 9] = [
+    let counters: [(&str, &str, u64); 13] = [
         ("fe_requests_done_total", "completed generations", m.requests_done),
         ("fe_requests_rejected_total", "requests shed at admission", m.requests_rejected),
         ("fe_requests_deferred_total", "requests deferred under KV pressure", m.requests_deferred),
@@ -72,11 +72,23 @@ pub fn render(m: &ServingMetrics) -> String {
         ("fe_prefill_chunks_total", "prompt chunks ingested on the batch lane", m.prefill_chunks),
         ("fe_preemptions_total", "slots parked under pool pressure", m.preemptions),
         ("fe_resumes_total", "parked requests restored into a slot", m.resumes),
+        ("fe_prefix_cache_hits_total", "admissions that adopted a cached prefix", m.cache_hits),
+        ("fe_prefix_cache_misses_total", "admissions that found no cached prefix", m.cache_misses),
+        (
+            "fe_prefix_cache_saved_tokens_total",
+            "prompt tokens adopted instead of prefilled",
+            m.cache_saved_tokens,
+        ),
+        (
+            "fe_prefix_cache_evicted_blocks_total",
+            "pool blocks reclaimed from the prefix cache",
+            m.cache_evicted_blocks,
+        ),
     ];
     for (name, help, v) in counters {
         scalar(&mut out, name, "counter", help, v as f64);
     }
-    let gauges: [(&str, &str, f64); 8] = [
+    let gauges: [(&str, &str, f64); 11] = [
         ("fe_parked_tokens", "committed tokens held by parked requests", m.parked_tokens as f64),
         ("fe_parked_tokens_peak", "peak of fe_parked_tokens", m.parked_tokens_peak as f64),
         ("fe_occupancy_mean", "mean occupied slots per scheduler step", m.mean_occupancy()),
@@ -85,6 +97,13 @@ pub fn render(m: &ServingMetrics) -> String {
         ("fe_plan_depth_mean", "mean planned draft depth per run cycle", m.mean_plan_depth()),
         ("fe_plan_nodes_mean", "mean planned draft nodes per run cycle", m.mean_plan_nodes()),
         ("fe_accept_window_mean", "mean adaptive acceptance window", m.mean_accept_window()),
+        (
+            "fe_prefix_cache_nodes",
+            "radix-index nodes held by the prefix cache",
+            m.cache_nodes as f64,
+        ),
+        ("fe_prefix_cache_blocks", "pool blocks held by the prefix cache", m.cache_blocks as f64),
+        ("fe_prefix_cache_hit_rate", "hits / (hits + misses) over admissions", m.cache_hit_rate()),
     ];
     for (name, help, v) in gauges {
         scalar(&mut out, name, "gauge", help, v);
@@ -122,6 +141,10 @@ mod tests {
         m.record_phase("fasteagle", "draft", Duration::from_micros(120));
         m.record_phase("fasteagle", "verify", Duration::from_micros(900));
         m.record_phase("eagle3", "draft", Duration::from_micros(2400));
+        m.cache_hits = 2;
+        m.cache_misses = 2;
+        m.cache_saved_tokens = 32;
+        m.record_cache_gauges(3, 12);
         m
     }
 
@@ -166,6 +189,11 @@ mod tests {
         let text = render(&sample_metrics());
         assert!(text.contains("fe_requests_done_total 3"));
         assert!(text.contains("fe_tokens_out_total 42"));
+        assert!(text.contains("fe_prefix_cache_hits_total 2"));
+        assert!(text.contains("fe_prefix_cache_saved_tokens_total 32"));
+        assert!(text.contains("fe_prefix_cache_nodes 3"));
+        assert!(text.contains("fe_prefix_cache_blocks 12"));
+        assert!(text.contains("fe_prefix_cache_hit_rate 0.5"));
         let mut last = 0u64;
         for line in text.lines() {
             if let Some(rest) = line.strip_prefix("fe_request_latency_us_bucket{le=\"") {

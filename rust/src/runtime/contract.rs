@@ -162,6 +162,70 @@ pub fn check_engine(spec: &ModelSpec, batch: usize, chain_len: usize) -> Contrac
     r
 }
 
+/// Prefix-cache / pool geometry contract: `block_slots` (the sharing
+/// granule of the radix index — one node per `block_slots`-token run)
+/// must compose with the spec and the lowered verify-lane inventory at
+/// the engine's batch. Checked by `BatchEngine::new` when
+/// `--prefix-cache` is on, and always by `fasteagle check`, so a
+/// mis-sized granule is a structured diagnostic instead of a runtime
+/// surprise.
+pub fn check_cache(spec: &ModelSpec, block_slots: usize, batch: usize) -> ContractReport {
+    let mut r = ContractReport::new(&spec.name);
+    if block_slots == 0 {
+        r.push(
+            Severity::Error,
+            "cache/geometry",
+            "block_slots must be positive — a zero granule can never index a prefix".to_string(),
+        );
+        return r;
+    }
+    if block_slots > spec.max_seq {
+        r.push(
+            Severity::Error,
+            "cache/geometry",
+            format!(
+                "block_slots {block_slots} exceeds max_seq {} — no prompt can ever fill \
+                 one block, so nothing would be published or shared",
+                spec.max_seq
+            ),
+        );
+    } else if spec.max_seq % block_slots != 0 {
+        r.push(
+            Severity::Warning,
+            "cache/geometry",
+            format!(
+                "max_seq {} is not a multiple of block_slots {block_slots} — the tail \
+                 partial block of a full-length sequence is never publishable",
+                spec.max_seq
+            ),
+        );
+    }
+    if spec.feat_dim == 0 {
+        r.push(
+            Severity::Error,
+            "cache/state",
+            "feat_dim is 0 — the cache stores per-token drafter features alongside the \
+             target KV so each method can rebuild its own drafter state; without a \
+             feature stream a warm hit could not seed the post-prefill observe"
+                .to_string(),
+        );
+    }
+    // a warm hit resumes chunked prefill at the first uncached token:
+    // at least one verify row must be lowered at this batch to carry it
+    if spec.verify_m_lowered(1, batch).is_none() {
+        r.push(
+            Severity::Error,
+            "cache/lanes",
+            format!(
+                "no lowered verify lane at batch {batch} can ingest the post-hit prefill \
+                 remainder (>= 1 row needed) — the cache could adopt a prefix but never \
+                 finish the prompt"
+            ),
+        );
+    }
+    r
+}
+
 /// Warn when the on-disk `tree_nodes` JSON field disagrees with the
 /// value derived from the default [`DraftPlan`] — the derived value
 /// wins, but a drifted spec file should be noticed, not silently
@@ -311,6 +375,26 @@ mod tests {
         );
         // a warning alone is not an error
         assert!(!check_engine(&spec, 4, 2).has_errors());
+    }
+
+    #[test]
+    fn cache_geometry_rule() {
+        let spec = ModelSpec::parse(SAMPLE).unwrap();
+        // the default granule divides the sample's max_seq (256)
+        assert!(!check_cache(&spec, 16, 1).has_errors());
+        assert!(check_cache(&spec, 16, 1).warnings().count() == 0);
+        // zero granule and granule > max_seq are hard errors
+        assert!(check_cache(&spec, 0, 1).has_errors());
+        let r = check_cache(&spec, 512, 1);
+        assert!(r.issues.iter().any(|i| i.rule == "cache/geometry"), "{r}");
+        assert!(r.to_string().contains("max_seq"), "{r}");
+        // a non-dividing granule only warns (tail block never publishes)
+        let r = check_cache(&spec, 48, 1);
+        assert!(!r.has_errors());
+        assert!(r.warnings().any(|i| i.rule == "cache/geometry"), "{r}");
+        // a batch with no lowered lanes cannot carry the post-hit prefill
+        let r = check_cache(&spec, 16, 2);
+        assert!(r.issues.iter().any(|i| i.rule == "cache/lanes"), "{r}");
     }
 
     #[test]

@@ -261,6 +261,141 @@ pub fn replay_trace_tcp(addr: &str, trace: &[TraceItem]) -> Result<Vec<TcpReqSta
     Ok(out)
 }
 
+/// One multi-turn chat session: an opening prompt plus follow-up user
+/// lines. Turn t's prompt is the accumulated transcript — every earlier
+/// prompt and model reply — plus the next user line, so consecutive
+/// turns share their entire history as a string prefix. With the byte
+/// tokenizer a string prefix is a token prefix, which is exactly the
+/// shape that gives the radix prefix cache its hits.
+#[derive(Debug, Clone)]
+pub struct ChatSession {
+    pub opening: String,
+    pub followups: Vec<String>,
+    pub max_new: usize,
+}
+
+/// Build `sessions` chat sessions of `turns` turns each: openings drawn
+/// from the prompt pool, follow-ups picked deterministically from a
+/// fixed set so the same seed replays the identical trace (the warm-run
+/// vs cold-run comparison depends on that).
+pub fn chat_sessions(
+    prompts: &[String],
+    sessions: usize,
+    turns: usize,
+    max_new: usize,
+    seed: u64,
+) -> Vec<ChatSession> {
+    // deliberately terse: the whole transcript must stay inside the
+    // model's prompt budget (`max_seq` minus generation headroom) —
+    // over-budget prompts are truncated from the *front*, which
+    // destroys the shared prefix the cache would otherwise hit
+    const FOLLOWUPS: [&str; 4] = ["And?", "Why?", "Go on.", "More."];
+    let mut rng = Pcg64::new(seed, 11);
+    (0..sessions)
+        .map(|_| ChatSession {
+            opening: prompts[rng.below(prompts.len())].clone(),
+            followups: (1..turns)
+                .map(|_| FOLLOWUPS[rng.below(FOLLOWUPS.len())].to_string())
+                .collect(),
+            max_new,
+        })
+        .collect()
+}
+
+/// One chat turn's client-side measurements. TTFT is measured from the
+/// turn's send, so warm turns (t > 0) directly expose the prefill work
+/// the prefix cache skipped.
+#[derive(Debug, Clone)]
+pub struct ChatTurnStat {
+    pub session: usize,
+    pub turn: usize,
+    /// turn sent -> first streamed `tokens` frame
+    pub ttft_ms: f64,
+    /// turn sent -> final response line
+    pub total_ms: f64,
+    pub text: String,
+    pub tokens: usize,
+}
+
+/// Replay chat sessions against a live TCP server. Sessions run
+/// concurrently (one connection each), but turns within a session are
+/// strictly sequential: turn t's final response is appended to the
+/// transcript before turn t+1 is sent, so by the time the next lookup
+/// happens the engine has already published turn t's prefix (requests
+/// publish at retirement, before their response is written).
+pub fn replay_chat_tcp(addr: &str, sessions: &[ChatSession]) -> Result<Vec<ChatTurnStat>> {
+    let mut handles = Vec::new();
+    for (s_idx, sess) in sessions.iter().cloned().enumerate() {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || -> Result<Vec<ChatTurnStat>> {
+            let stream = TcpStream::connect(&addr)?;
+            let mut w = stream.try_clone()?;
+            let mut r = BufReader::new(stream);
+            let mut context = sess.opening.clone();
+            let mut out = Vec::new();
+            for turn in 0..sess.followups.len() + 1 {
+                if turn > 0 {
+                    // the user's next line rides on the full transcript
+                    context.push('\n');
+                    context.push_str(&sess.followups[turn - 1]);
+                }
+                let t0 = Instant::now();
+                let req = Json::obj(vec![
+                    ("prompt", Json::str(&context)),
+                    ("max_new", Json::num(sess.max_new as f64)),
+                    ("stream", Json::Bool(true)),
+                ]);
+                writeln!(w, "{}", req.to_string())?;
+                let mut ttft_ms = f64::NAN;
+                loop {
+                    let mut line = String::new();
+                    if r.read_line(&mut line)? == 0 {
+                        bail!("connection closed mid-session");
+                    }
+                    let v = Json::parse(line.trim())
+                        .map_err(|e| anyhow::anyhow!("bad reply line: {e}"))?;
+                    if v.get("event").and_then(Json::as_str) == Some("tokens") {
+                        if ttft_ms.is_nan() {
+                            ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+                        }
+                        continue;
+                    }
+                    if let Some(err) = v.get("error").and_then(Json::as_str) {
+                        bail!("chat turn {turn} of session {s_idx} failed: {err}");
+                    }
+                    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    let text =
+                        v.get("text").and_then(Json::as_str).unwrap_or("").to_string();
+                    let tokens =
+                        v.get("new_tokens").and_then(Json::as_usize).unwrap_or(0);
+                    if ttft_ms.is_nan() {
+                        ttft_ms = total_ms;
+                    }
+                    // the reply becomes part of the next turn's context —
+                    // the prefix a warm cache serves without prefilling
+                    context.push_str(&text);
+                    out.push(ChatTurnStat {
+                        session: s_idx,
+                        turn,
+                        ttft_ms,
+                        total_ms,
+                        text,
+                        tokens,
+                    });
+                    break;
+                }
+            }
+            Ok(out)
+        }));
+    }
+    let mut out = Vec::new();
+    for h in handles {
+        out.extend(h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??);
+    }
+    out.sort_by(|a, b| (a.session, a.turn).cmp(&(b.session, b.turn)));
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -289,6 +424,20 @@ mod tests {
     fn paper_names() {
         assert_eq!(paper_name("code"), "HumanEval");
         assert_eq!(paper_name("nope"), "?");
+    }
+
+    #[test]
+    fn chat_sessions_are_deterministic() {
+        let prompts = vec!["alpha".to_string(), "beta".to_string()];
+        let a = chat_sessions(&prompts, 3, 3, 16, 9);
+        let b = chat_sessions(&prompts, 3, 3, 16, 9);
+        assert_eq!(a.len(), 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.opening, y.opening);
+            assert_eq!(x.followups, y.followups);
+            assert_eq!(x.followups.len(), 2, "3 turns = opening + 2 follow-ups");
+            assert_eq!(x.max_new, 16);
+        }
     }
 
     #[test]

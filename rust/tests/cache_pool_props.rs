@@ -1,0 +1,266 @@
+//! Property tests for the refcounted block pool: random op sequences
+//! (alloc / ensure / shrink / retain / release / release_blocks /
+//! fork_tail) are driven against a naive reference model that tracks an
+//! explicit per-block refcount map. After every step the pool must
+//! agree with the model on availability, issued-block count, and the
+//! refcount of every held block — which pins down conservation (no
+//! block is both free and live), no double-lease, and free-on-last-
+//! reference-only semantics under arbitrary sharing.
+
+use std::collections::HashMap;
+
+use fasteagle::model::{BlockPool, Lease};
+use fasteagle::util::rng::Pcg64;
+
+const TOTAL: usize = 48;
+const BLOCK_SLOTS: usize = 4;
+const LAYERS: usize = 2;
+
+/// The naive model: every live block maps to its exact reference
+/// count; capacity used is simply the number of live blocks.
+struct Model {
+    refs: HashMap<u32, u32>,
+}
+
+impl Model {
+    fn new() -> Model {
+        Model { refs: HashMap::new() }
+    }
+
+    fn available(&self) -> usize {
+        TOTAL - self.refs.len()
+    }
+
+    /// A fresh allocation: the block must not already be live.
+    fn grant(&mut self, blocks: &[u32]) {
+        for &b in blocks {
+            let prev = self.refs.insert(b, 1);
+            assert!(prev.is_none(), "pool double-leased block {b}");
+        }
+    }
+
+    fn retain(&mut self, blocks: &[u32]) {
+        for &b in blocks {
+            let c = self.refs.get_mut(&b).expect("retain of a block that is not live");
+            *c += 1;
+        }
+    }
+
+    /// Drop one reference; true when the block became free.
+    fn release(&mut self, b: u32) -> bool {
+        let c = self.refs.get_mut(&b).expect("release of a block that is not live");
+        *c -= 1;
+        if *c == 0 {
+            self.refs.remove(&b);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+fn run_sequence(seed: u64, ops: usize) {
+    let mut rng = Pcg64::new(seed, 21);
+    let mut pool = BlockPool::new(TOTAL, BLOCK_SLOTS);
+    let mut model = Model::new();
+    let mut leases: Vec<Lease> = Vec::new();
+    for step in 0..ops {
+        match rng.below(7) {
+            // alloc into a fresh lease — all-or-nothing on exhaustion
+            0 => {
+                let n = rng.below(6) + 1;
+                let fits = model.available() >= n;
+                assert_eq!(pool.can_alloc(n), fits, "step {step}: can_alloc disagrees");
+                let mut lease = Lease::default();
+                match pool.alloc(n, &mut lease) {
+                    Ok(()) => {
+                        assert!(fits, "step {step}: alloc succeeded past capacity");
+                        assert_eq!(lease.blocks.len(), n);
+                        model.grant(&lease.blocks);
+                        leases.push(lease);
+                    }
+                    Err(_) => {
+                        assert!(!fits, "step {step}: alloc failed with room");
+                        assert!(lease.blocks.is_empty(), "failed alloc partially filled");
+                    }
+                }
+            }
+            // grow a lease to cover a slot count (delta-only alloc)
+            1 => {
+                if leases.is_empty() {
+                    continue;
+                }
+                let i = rng.below(leases.len());
+                let slots = rng.below(BLOCK_SLOTS * 8) + 1;
+                let want = pool.blocks_for(slots, LAYERS);
+                let have = leases[i].blocks.len();
+                let before = leases[i].blocks.clone();
+                match pool.ensure(&mut leases[i], slots, LAYERS) {
+                    Ok(()) => {
+                        assert_eq!(leases[i].blocks.len(), have.max(want));
+                        assert!(
+                            leases[i].blocks.starts_with(&before),
+                            "step {step}: ensure reordered existing blocks"
+                        );
+                        model.grant(&leases[i].blocks[have..]);
+                    }
+                    Err(_) => {
+                        assert!(
+                            want.saturating_sub(have) > model.available(),
+                            "step {step}: ensure failed with room"
+                        );
+                    }
+                }
+            }
+            // shrink a lease; only last-reference pops become free
+            2 => {
+                if leases.is_empty() {
+                    continue;
+                }
+                let i = rng.below(leases.len());
+                let slots = rng.below(BLOCK_SLOTS * 8);
+                let want = pool.blocks_for(slots, LAYERS);
+                let old_len = leases[i].blocks.len();
+                let popped: Vec<u32> = if leases[i].blocks.len() > want {
+                    leases[i].blocks[want..].to_vec()
+                } else {
+                    Vec::new()
+                };
+                let freed = pool.shrink(&mut leases[i], slots, LAYERS);
+                let expect = popped.iter().filter(|&&b| model.release(b)).count();
+                assert_eq!(freed, expect, "step {step}: shrink freed the wrong count");
+                assert_eq!(leases[i].blocks.len(), old_len.min(want));
+            }
+            // cache-style adoption: a second holder of a block run —
+            // capacity is charged once, references twice
+            3 => {
+                if leases.is_empty() {
+                    continue;
+                }
+                let i = rng.below(leases.len());
+                if leases[i].blocks.is_empty() {
+                    continue;
+                }
+                let k = rng.below(leases[i].blocks.len()) + 1;
+                let shared = leases[i].blocks[..k].to_vec();
+                pool.retain(&shared);
+                model.retain(&shared);
+                for &b in &shared {
+                    assert!(pool.is_shared(b), "step {step}: retained block not shared");
+                    assert!(pool.refcount(b) >= 2);
+                }
+                leases.push(Lease { blocks: shared });
+            }
+            // release a whole lease back to the pool
+            4 => {
+                if leases.is_empty() {
+                    continue;
+                }
+                let i = rng.below(leases.len());
+                let mut lease = leases.swap_remove(i);
+                let blocks = lease.blocks.clone();
+                pool.release(&mut lease);
+                assert!(lease.blocks.is_empty());
+                for b in blocks {
+                    model.release(b);
+                }
+            }
+            // copy-on-write fork of a shared tail block
+            5 => {
+                if leases.is_empty() {
+                    continue;
+                }
+                let i = rng.below(leases.len());
+                let Some(&tail) = leases[i].blocks.last() else {
+                    continue;
+                };
+                let shared = pool.is_shared(tail);
+                match pool.fork_tail(&mut leases[i]) {
+                    Ok(forked) => {
+                        assert_eq!(forked, shared, "step {step}: fork on a private tail");
+                        if forked {
+                            let new_tail = *leases[i].blocks.last().expect("tail survives fork");
+                            assert_ne!(new_tail, tail, "fork must produce a private block");
+                            assert!(!pool.is_shared(new_tail));
+                            model.grant(&[new_tail]);
+                            model.release(tail);
+                        }
+                    }
+                    Err(_) => {
+                        assert!(shared, "step {step}: private tail cannot fail to fork");
+                        assert_eq!(model.available(), 0, "step {step}: fork failed with room");
+                    }
+                }
+            }
+            // cache-eviction path: release by block list, count freed
+            _ => {
+                if leases.is_empty() {
+                    continue;
+                }
+                let i = rng.below(leases.len());
+                let mut lease = leases.swap_remove(i);
+                let blocks = std::mem::take(&mut lease.blocks);
+                let freed = pool.release_blocks(&blocks);
+                let expect = blocks.iter().filter(|&&b| model.release(b)).count();
+                assert_eq!(freed, expect, "step {step}: release_blocks freed the wrong count");
+            }
+        }
+        // global invariants after every mutation
+        assert_eq!(pool.available(), model.available(), "step {step}: availability");
+        assert_eq!(pool.leaked_blocks(), model.refs.len(), "step {step}: issued blocks");
+        assert_eq!(
+            pool.available() + pool.leaked_blocks(),
+            TOTAL,
+            "step {step}: conservation"
+        );
+        for lease in &leases {
+            for &b in &lease.blocks {
+                assert_eq!(
+                    pool.refcount(b),
+                    model.refs[&b],
+                    "step {step}: refcount of block {b}"
+                );
+            }
+        }
+    }
+    // teardown: returning every lease leaves the pool whole
+    for mut lease in leases {
+        pool.release(&mut lease);
+    }
+    assert_eq!(pool.available(), TOTAL, "teardown leaked capacity");
+    assert_eq!(pool.leaked_blocks(), 0, "teardown stranded blocks");
+}
+
+#[test]
+fn random_pool_sequences_match_reference_model() {
+    for seed in 0..6 {
+        run_sequence(seed, 2500);
+    }
+}
+
+/// Deep share chains: the same run retained by many holders frees only
+/// on the very last release, regardless of release order.
+#[test]
+fn many_holders_free_on_last_release_only() {
+    let mut rng = Pcg64::new(99, 5);
+    let mut pool = BlockPool::new(TOTAL, BLOCK_SLOTS);
+    let mut owner = Lease::default();
+    pool.alloc(4, &mut owner).unwrap();
+    let run = owner.blocks.clone();
+    let mut holders: Vec<Lease> = (0..5)
+        .map(|_| {
+            pool.retain(&run);
+            Lease { blocks: run.clone() }
+        })
+        .collect();
+    assert_eq!(pool.available(), TOTAL - 4, "sharing charges capacity once");
+    assert_eq!(pool.refcount(run[0]), 6);
+    holders.push(owner);
+    rng.shuffle(&mut holders);
+    for (i, mut h) in holders.into_iter().enumerate() {
+        pool.release(&mut h);
+        let expect = if i == 5 { TOTAL } else { TOTAL - 4 };
+        assert_eq!(pool.available(), expect, "release {i}");
+    }
+    assert_eq!(pool.leaked_blocks(), 0);
+}
