@@ -707,7 +707,7 @@ mod tests {
     use super::*;
     use crate::backend::hlo::eval::{evaluate, Value};
     use crate::backend::hlo::parser::parse_module;
-    use std::rc::Rc;
+    use std::sync::Arc;
 
     #[test]
     fn weight_specs_match_generated_values() {
@@ -744,19 +744,19 @@ mod tests {
         let (hlo, _io) = emit_tgt("tgt_m1", 1, 1);
         let module = parse_module(&hlo).unwrap();
         let (tw, _, _) = gen_weights(5);
-        let mut args: Vec<Rc<Value>> = tw
+        let mut args: Vec<Arc<Value>> = tw
             .iter()
             .map(|(_, t)| {
-                Rc::new(Value::f32(t.shape.clone(), t.as_f32().unwrap().to_vec()))
+                Arc::new(Value::f32(t.shape.clone(), t.as_f32().unwrap().to_vec()))
             })
             .collect();
-        args.push(Rc::new(Value::i32(vec![1, 1], vec![97])));
-        args.push(Rc::new(Value::i32(vec![1, 1], vec![0])));
+        args.push(Arc::new(Value::i32(vec![1, 1], vec![97])));
+        args.push(Arc::new(Value::i32(vec![1, 1], vec![0])));
         let mut mask = vec![-1e9f32; S];
         mask[0] = 0.0;
-        args.push(Rc::new(Value::f32(vec![1, 1, S], mask)));
-        args.push(Rc::new(Value::i32(vec![1], vec![0])));
-        args.push(Rc::new(Value::f32(
+        args.push(Arc::new(Value::f32(vec![1, 1, S], mask)));
+        args.push(Arc::new(Value::i32(vec![1], vec![0])));
+        args.push(Arc::new(Value::f32(
             vec![L, 2, 1, S, KH, HD],
             vec![0.0; L * 2 * S * KH * HD],
         )));

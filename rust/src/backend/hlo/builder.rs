@@ -10,6 +10,9 @@
 use std::collections::BTreeSet;
 use std::fmt::Write as _;
 
+use super::layout;
+use super::parser::DotDims;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Ty {
     F32,
@@ -226,17 +229,16 @@ impl HloBuilder {
         lhs_contract: &[usize],
         rhs_contract: &[usize],
     ) -> H {
-        let mut dims: Vec<usize> = lhs_batch.iter().map(|&d| a.dims[d]).collect();
-        dims.extend(
-            (0..a.dims.len())
-                .filter(|d| !lhs_batch.contains(d) && !lhs_contract.contains(d))
-                .map(|d| a.dims[d]),
-        );
-        dims.extend(
-            (0..b.dims.len())
-                .filter(|d| !rhs_batch.contains(d) && !rhs_contract.contains(d))
-                .map(|d| b.dims[d]),
-        );
+        let dn = DotDims {
+            lhs_batch: lhs_batch.to_vec(),
+            rhs_batch: rhs_batch.to_vec(),
+            lhs_contract: lhs_contract.to_vec(),
+            rhs_contract: rhs_contract.to_vec(),
+        };
+        let dims = match layout::dot_layout(&a.dims, &b.dims, &dn) {
+            Ok(lay) => lay.out_dims,
+            Err(e) => panic!("dot_general: {}", e.msg),
+        };
         let mut attrs = String::new();
         if !lhs_batch.is_empty() {
             let _ = write!(
@@ -309,13 +311,7 @@ impl HloBuilder {
 
     fn reduce(&mut self, a: &H, init: &H, dims: &[usize], op: &str) -> H {
         let body = self.reducer(op, a.ty);
-        let out_dims: Vec<usize> = a
-            .dims
-            .iter()
-            .enumerate()
-            .filter(|(d, _)| !dims.contains(d))
-            .map(|(_, &s)| s)
-            .collect();
+        let out_dims = layout::reduce_output_dims(&a.dims, dims);
         self.push(
             a.ty,
             out_dims,
@@ -438,7 +434,7 @@ mod tests {
     use super::*;
     use crate::backend::hlo::eval::{evaluate, Value};
     use crate::backend::hlo::parser::parse_module;
-    use std::rc::Rc;
+    use std::sync::Arc;
 
     #[test]
     fn built_module_parses_and_runs() {
@@ -450,8 +446,8 @@ mod tests {
         let s = b.reduce_add(&t, &[1]);
         let text = b.finish(&[&t, &s]);
         let m = parse_module(&text).unwrap();
-        let xs = Rc::new(Value::f32(vec![2, 3], vec![0.1; 6]));
-        let ws = Rc::new(Value::f32(vec![3, 2], vec![0.5; 6]));
+        let xs = Arc::new(Value::f32(vec![2, 3], vec![0.1; 6]));
+        let ws = Arc::new(Value::f32(vec![3, 2], vec![0.5; 6]));
         let out = evaluate(&m, &[xs, ws]).unwrap();
         assert_eq!(out[0].dims, vec![2, 2]);
         assert_eq!(out[1].dims, vec![2]);
@@ -473,8 +469,8 @@ mod tests {
         let d = b.dynamic_slice(&x, &[i, j], &[1, 2]);
         let text = b.finish(&[&d]);
         let m = parse_module(&text).unwrap();
-        let xs = Rc::new(Value::f32(vec![3, 2], vec![0., 1., 10., 11., 20., 21.]));
-        let is = Rc::new(Value::i32(vec![], vec![2]));
+        let xs = Arc::new(Value::f32(vec![3, 2], vec![0., 1., 10., 11., 20., 21.]));
+        let is = Arc::new(Value::i32(vec![], vec![2]));
         let out = evaluate(&m, &[xs, is]).unwrap();
         assert_eq!(out[0].dims, vec![1, 2]);
         assert_eq!(out[0].f32s().unwrap(), &[20., 21.]);
@@ -488,8 +484,8 @@ mod tests {
         let f = b.convert(&bits, Ty::F32);
         let text = b.finish(&[&ns, &bits, &f]);
         let m = parse_module(&text).unwrap();
-        let state = Rc::new(Value::u64(vec![2], vec![42, 0]));
-        let out = evaluate(&m, &[Rc::clone(&state)]).unwrap();
+        let state = Arc::new(Value::u64(vec![2], vec![42, 0]));
+        let out = evaluate(&m, &[Arc::clone(&state)]).unwrap();
         assert_eq!(out[0].dims, vec![2]);
         // 5 u32s = 3 blocks -> counter advances by 3
         assert_eq!(out[0].u64s().unwrap(), &[42, 3]);

@@ -9,10 +9,11 @@
 //! the property the lossless-acceptance tests lean on.
 
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use super::layout::{self, linear, next_index, strides};
 use super::parser::{
     BinOp, CmpDir, Computation, DotDims, GatherDims, HloModule, Instr, Op, PrimType, Shape,
     UnOp,
@@ -42,7 +43,7 @@ impl Buf {
         self.len() == 0
     }
 
-    fn ty(&self) -> PrimType {
+    pub(crate) fn ty(&self) -> PrimType {
         match self {
             Buf::F32(_) => PrimType::F32,
             Buf::I32(_) => PrimType::S32,
@@ -125,7 +126,7 @@ impl Value {
         }
     }
 
-    fn preds(&self) -> Result<&[bool]> {
+    pub(crate) fn preds(&self) -> Result<&[bool]> {
         match &self.buf {
             Buf::Pred(v) => Ok(v),
             other => bail!("expected pred buffer, got {:?}", other.ty()),
@@ -133,32 +134,7 @@ impl Value {
     }
 }
 
-/// Row-major strides.
-fn strides(dims: &[usize]) -> Vec<usize> {
-    let mut s = vec![1usize; dims.len()];
-    for i in (0..dims.len().saturating_sub(1)).rev() {
-        s[i] = s[i + 1] * dims[i + 1];
-    }
-    s
-}
-
-/// Advance a row-major multi-index; returns false after the last one.
-fn next_index(idx: &mut [usize], dims: &[usize]) -> bool {
-    for d in (0..dims.len()).rev() {
-        idx[d] += 1;
-        if idx[d] < dims[d] {
-            return true;
-        }
-        idx[d] = 0;
-    }
-    false
-}
-
-fn linear(idx: &[usize], strides: &[usize]) -> usize {
-    idx.iter().zip(strides).map(|(i, s)| i * s).sum()
-}
-
-fn check_shape(v: &Value, shape: &Shape, what: &str) -> Result<()> {
+pub(crate) fn check_shape(v: &Value, shape: &Shape, what: &str) -> Result<()> {
     if v.dims != shape.dims || v.buf.ty() != shape.ty {
         bail!(
             "{what}: value is {:?}/{:?}, instruction says {:?}/{:?}",
@@ -178,7 +154,7 @@ fn check_shape(v: &Value, shape: &Shape, what: &str) -> Result<()> {
     Ok(())
 }
 
-fn binary_f32(a: &[f32], b: &[f32], op: BinOp) -> Result<Vec<f32>> {
+pub(crate) fn binary_f32(a: &[f32], b: &[f32], op: BinOp) -> Result<Vec<f32>> {
     let f: fn(f32, f32) -> f32 = match op {
         BinOp::Add => |x, y| x + y,
         BinOp::Sub => |x, y| x - y,
@@ -191,7 +167,7 @@ fn binary_f32(a: &[f32], b: &[f32], op: BinOp) -> Result<Vec<f32>> {
     Ok(a.iter().zip(b).map(|(&x, &y)| f(x, y)).collect())
 }
 
-fn binary_i32(a: &[i32], b: &[i32], op: BinOp) -> Result<Vec<i32>> {
+pub(crate) fn binary_i32(a: &[i32], b: &[i32], op: BinOp) -> Result<Vec<i32>> {
     let f: fn(i32, i32) -> i32 = match op {
         BinOp::Add => |x, y| x.wrapping_add(y),
         BinOp::Sub => |x, y| x.wrapping_sub(y),
@@ -204,7 +180,7 @@ fn binary_i32(a: &[i32], b: &[i32], op: BinOp) -> Result<Vec<i32>> {
     Ok(a.iter().zip(b).map(|(&x, &y)| f(x, y)).collect())
 }
 
-fn cmp<T: PartialOrd + PartialEq + Copy>(a: &[T], b: &[T], dir: CmpDir) -> Vec<bool> {
+pub(crate) fn cmp<T: PartialOrd + PartialEq + Copy>(a: &[T], b: &[T], dir: CmpDir) -> Vec<bool> {
     let f: fn(T, T) -> bool = match dir {
         CmpDir::Eq => |x, y| x == y,
         CmpDir::Ne => |x, y| x != y,
@@ -216,20 +192,24 @@ fn cmp<T: PartialOrd + PartialEq + Copy>(a: &[T], b: &[T], dir: CmpDir) -> Vec<b
     a.iter().zip(b).map(|(&x, &y)| f(x, y)).collect()
 }
 
-/// Resolve a reduce body to its binary op: the computation must be a
-/// single binary instruction over its two parameters.
-fn reducer_of(comp: &Computation) -> Result<BinOp> {
-    let root = &comp.instrs[comp.root];
-    match root.op {
-        Op::Binary(b) => Ok(b),
-        _ => bail!("reduce body {:?} is not a plain binary op", comp.name),
-    }
+/// Resolve a reduce body to its binary op (see
+/// [`Computation::as_binary_reducer`]).
+pub(crate) fn reducer_of(comp: &Computation) -> Result<BinOp> {
+    comp.as_binary_reducer()
+        .with_context(|| format!("reduce body {:?} is not a plain binary op", comp.name))
 }
 
 /// Evaluate the module's entry computation over positional `args`.
 /// Returns the root tuple's parts (a single-element vec for non-tuple
 /// roots).
-pub fn evaluate(module: &HloModule, args: &[Rc<Value>]) -> Result<Vec<Value>> {
+///
+/// This is the *naive reference* path: a per-call environment keyed by
+/// instruction name, one fresh allocation per op, no fusion, no
+/// threading. The interpreter backend's hot path is the compiled
+/// [`super::plan::ExecPlan`]; this walk stays as the semantics oracle
+/// the plan is property-tested bit-identical against (and as the
+/// `FE_INTERP_OPT=0` escape hatch).
+pub fn evaluate(module: &HloModule, args: &[Arc<Value>]) -> Result<Vec<Value>> {
     let entry = module.entry_computation();
     if args.len() != entry.params.len() {
         bail!(
@@ -239,10 +219,10 @@ pub fn evaluate(module: &HloModule, args: &[Rc<Value>]) -> Result<Vec<Value>> {
             args.len()
         );
     }
-    let mut env: HashMap<&str, Rc<Value>> = HashMap::with_capacity(entry.instrs.len());
+    let mut env: HashMap<&str, Arc<Value>> = HashMap::with_capacity(entry.instrs.len());
     // tuple-valued instructions (tuple, rng-bit-generator) live here;
     // get-tuple-element projects them back into `env`
-    let mut tuples: HashMap<&str, Vec<Rc<Value>>> = HashMap::new();
+    let mut tuples: HashMap<&str, Vec<Arc<Value>>> = HashMap::new();
     let mut root_parts: Option<Vec<Value>> = None;
     for (i, ins) in entry.instrs.iter().enumerate() {
         match &ins.op {
@@ -252,7 +232,7 @@ pub fn evaluate(module: &HloModule, args: &[Rc<Value>]) -> Result<Vec<Value>> {
                     let v = env
                         .get(o.as_str())
                         .with_context(|| format!("tuple operand {o:?} undefined"))?;
-                    parts.push(Rc::clone(v));
+                    parts.push(Arc::clone(v));
                 }
                 if i == entry.root {
                     root_parts = Some(parts.iter().map(|v| (**v).clone()).collect());
@@ -270,7 +250,7 @@ pub fn evaluate(module: &HloModule, args: &[Rc<Value>]) -> Result<Vec<Value>> {
                     .with_context(|| format!("rng state {state_name:?} undefined"))?;
                 let (new_state, bits) = eval_rng_threefry(state, ins)
                     .with_context(|| format!("instruction {:?}", ins.name))?;
-                let parts = vec![Rc::new(new_state), Rc::new(bits)];
+                let parts = vec![Arc::new(new_state), Arc::new(bits)];
                 if i == entry.root {
                     root_parts = Some(parts.iter().map(|v| (**v).clone()).collect());
                 }
@@ -285,7 +265,7 @@ pub fn evaluate(module: &HloModule, args: &[Rc<Value>]) -> Result<Vec<Value>> {
                 let parts = tuples.get(src.as_str()).with_context(|| {
                     format!("get-tuple-element source {src:?} is not a tuple")
                 })?;
-                let v = Rc::clone(parts.get(*k).with_context(|| {
+                let v = Arc::clone(parts.get(*k).with_context(|| {
                     format!("{}: tuple index {k} out of range", ins.name)
                 })?);
                 check_shape(&v, &ins.shape, &ins.name)?;
@@ -294,15 +274,15 @@ pub fn evaluate(module: &HloModule, args: &[Rc<Value>]) -> Result<Vec<Value>> {
             }
             _ => {}
         }
-        // parameters alias the caller's Rc — bound weights stay pinned
+        // parameters alias the caller's Arc — bound weights stay pinned
         // and per-call args are staged once at the call boundary, never
         // re-copied per instruction; everything else is fresh
         let v = match &ins.op {
-            Op::Parameter(n) => Rc::clone(
+            Op::Parameter(n) => Arc::clone(
                 args.get(*n)
                     .with_context(|| format!("parameter {n} out of range"))?,
             ),
-            _ => Rc::new(
+            _ => Arc::new(
                 eval_instr(module, ins, &env)
                     .with_context(|| format!("instruction {:?}", ins.name))?,
             ),
@@ -320,8 +300,8 @@ pub fn evaluate(module: &HloModule, args: &[Rc<Value>]) -> Result<Vec<Value>> {
 fn operand<'e>(
     ins: &Instr,
     n: usize,
-    env: &'e HashMap<&str, Rc<Value>>,
-) -> Result<&'e Rc<Value>> {
+    env: &'e HashMap<&str, Arc<Value>>,
+) -> Result<&'e Arc<Value>> {
     let name = ins
         .operands
         .get(n)
@@ -332,7 +312,7 @@ fn operand<'e>(
 fn eval_instr(
     module: &HloModule,
     ins: &Instr,
-    env: &HashMap<&str, Rc<Value>>,
+    env: &HashMap<&str, Arc<Value>>,
 ) -> Result<Value> {
     let out_dims = ins.shape.dims.clone();
     Ok(match &ins.op {
@@ -359,134 +339,19 @@ fn eval_instr(
             let n = out_dims.iter().product();
             Value { dims: out_dims, buf: Buf::Pred(vec![*v; n]) }
         }
-        Op::Iota { dim } => {
-            if *dim >= out_dims.len() {
-                bail!("iota_dimension {dim} out of range for rank {}", out_dims.len());
-            }
-            let st = strides(&out_dims);
-            let n: usize = out_dims.iter().product();
-            let mut data = vec![0i32; n];
-            if n > 0 {
-                let mut idx = vec![0usize; out_dims.len()];
-                loop {
-                    data[linear(&idx, &st)] = idx[*dim] as i32;
-                    if !next_index(&mut idx, &out_dims) {
-                        break;
-                    }
-                }
-            }
-            match ins.shape.ty {
-                PrimType::S32 => Value::i32(out_dims, data),
-                PrimType::F32 => {
-                    Value::f32(out_dims, data.iter().map(|&x| x as f32).collect())
-                }
-                other => bail!("unsupported iota element type {other:?}"),
-            }
-        }
-        Op::Convert => {
-            let a = operand(ins, 0, env)?;
-            let buf = match (&a.buf, ins.shape.ty) {
-                (Buf::F32(v), PrimType::S32) => {
-                    // XLA convert rounds toward zero
-                    Buf::I32(v.iter().map(|&x| x as i32).collect())
-                }
-                (Buf::I32(v), PrimType::F32) => {
-                    Buf::F32(v.iter().map(|&x| x as f32).collect())
-                }
-                (Buf::Pred(v), PrimType::F32) => {
-                    Buf::F32(v.iter().map(|&x| if x { 1.0 } else { 0.0 }).collect())
-                }
-                (Buf::Pred(v), PrimType::S32) => {
-                    Buf::I32(v.iter().map(|&x| x as i32).collect())
-                }
-                // rng bits flow into the f32/s32 graph world via convert
-                (Buf::U32(v), PrimType::F32) => {
-                    Buf::F32(v.iter().map(|&x| x as f32).collect())
-                }
-                (Buf::U32(v), PrimType::S32) => {
-                    // XLA integral convert wraps (two's-complement reinterpret)
-                    Buf::I32(v.iter().map(|&x| x as i32).collect())
-                }
-                (Buf::U64(v), PrimType::U32) => {
-                    Buf::U32(v.iter().map(|&x| x as u32).collect())
-                }
-                (b, t) if b.ty() == t => b.clone(),
-                (b, t) => bail!("unsupported convert {:?} -> {t:?}", b.ty()),
-            };
-            Value { dims: out_dims, buf }
-        }
-        Op::Unary(u) => {
-            let a = operand(ins, 0, env)?;
-            match (&a.buf, u) {
-                (Buf::F32(v), UnOp::Exp) => {
-                    Value::f32(out_dims, v.iter().map(|x| x.exp()).collect())
-                }
-                (Buf::F32(v), UnOp::Tanh) => {
-                    Value::f32(out_dims, v.iter().map(|x| x.tanh()).collect())
-                }
-                (Buf::F32(v), UnOp::Neg) => {
-                    Value::f32(out_dims, v.iter().map(|x| -x).collect())
-                }
-                (Buf::I32(v), UnOp::Neg) => {
-                    Value::i32(out_dims, v.iter().map(|x| x.wrapping_neg()).collect())
-                }
-                (b, u) => bail!("unsupported unary {u:?} on {:?}", b.ty()),
-            }
-        }
-        Op::Binary(b) => {
-            let x = operand(ins, 0, env)?;
-            let y = operand(ins, 1, env)?;
-            if x.dims != y.dims {
-                bail!("binary operand shapes differ: {:?} vs {:?}", x.dims, y.dims);
-            }
-            let buf = match (&x.buf, &y.buf) {
-                (Buf::F32(a), Buf::F32(c)) => Buf::F32(binary_f32(a, c, *b)?),
-                (Buf::I32(a), Buf::I32(c)) => Buf::I32(binary_i32(a, c, *b)?),
-                (Buf::Pred(a), Buf::Pred(c)) => match b {
-                    BinOp::And => {
-                        Buf::Pred(a.iter().zip(c).map(|(&p, &q)| p && q).collect())
-                    }
-                    BinOp::Or => {
-                        Buf::Pred(a.iter().zip(c).map(|(&p, &q)| p || q).collect())
-                    }
-                    other => bail!("unsupported pred binary {other:?}"),
-                },
-                _ => bail!("mixed-dtype binary"),
-            };
-            Value { dims: out_dims, buf }
-        }
+        Op::Iota { dim } => eval_iota(*dim, ins.shape.ty, out_dims)?,
+        Op::Convert => eval_convert(operand(ins, 0, env)?, ins.shape.ty, out_dims)?,
+        Op::Unary(u) => eval_unary(operand(ins, 0, env)?, *u, out_dims)?,
+        Op::Binary(b) => eval_binary(operand(ins, 0, env)?, operand(ins, 1, env)?, *b, out_dims)?,
         Op::Compare(dir) => {
-            let x = operand(ins, 0, env)?;
-            let y = operand(ins, 1, env)?;
-            if x.dims != y.dims {
-                bail!("compare shapes differ: {:?} vs {:?}", x.dims, y.dims);
-            }
-            let preds = match (&x.buf, &y.buf) {
-                (Buf::F32(a), Buf::F32(b)) => cmp(a, b, *dir),
-                (Buf::I32(a), Buf::I32(b)) => cmp(a, b, *dir),
-                _ => bail!("unsupported compare operand types"),
-            };
-            Value { dims: out_dims, buf: Buf::Pred(preds) }
+            eval_compare(operand(ins, 0, env)?, operand(ins, 1, env)?, *dir, out_dims)?
         }
-        Op::Select => {
-            let p = operand(ins, 0, env)?;
-            let t = operand(ins, 1, env)?;
-            let f = operand(ins, 2, env)?;
-            if p.dims != t.dims || t.dims != f.dims {
-                bail!("select shapes differ");
-            }
-            let preds = p.preds()?;
-            let buf = match (&t.buf, &f.buf) {
-                (Buf::F32(a), Buf::F32(b)) => Buf::F32(
-                    preds.iter().zip(a.iter().zip(b)).map(|(&c, (&x, &y))| if c { x } else { y }).collect(),
-                ),
-                (Buf::I32(a), Buf::I32(b)) => Buf::I32(
-                    preds.iter().zip(a.iter().zip(b)).map(|(&c, (&x, &y))| if c { x } else { y }).collect(),
-                ),
-                _ => bail!("select branch dtypes differ"),
-            };
-            Value { dims: out_dims, buf }
-        }
+        Op::Select => eval_select(
+            operand(ins, 0, env)?,
+            operand(ins, 1, env)?,
+            operand(ins, 2, env)?,
+            out_dims,
+        )?,
         Op::Dot(d) => eval_dot(operand(ins, 0, env)?, operand(ins, 1, env)?, d, out_dims)?,
         Op::Reshape => {
             let a = operand(ins, 0, env)?;
@@ -499,8 +364,8 @@ fn eval_instr(
         Op::Transpose(perm) => eval_transpose(operand(ins, 0, env)?, perm, out_dims)?,
         Op::Slice(ranges) => eval_slice(operand(ins, 0, env)?, ranges, out_dims)?,
         Op::Concatenate(dim) => {
-            let vals: Vec<&Rc<Value>> = (0..ins.operands.len())
-                .map(|i| operand(ins, i, env))
+            let vals: Vec<&Value> = (0..ins.operands.len())
+                .map(|i| operand(ins, i, env).map(|v| &**v))
                 .collect::<Result<Vec<_>>>()?;
             eval_concat(&vals, *dim, out_dims)?
         }
@@ -554,6 +419,126 @@ fn eval_instr(
     })
 }
 
+pub(crate) fn eval_iota(dim: usize, ty: PrimType, out_dims: Vec<usize>) -> Result<Value> {
+    if dim >= out_dims.len() {
+        bail!("iota_dimension {dim} out of range for rank {}", out_dims.len());
+    }
+    let st = strides(&out_dims);
+    let n: usize = out_dims.iter().product();
+    let mut data = vec![0i32; n];
+    if n > 0 {
+        let mut idx = vec![0usize; out_dims.len()];
+        loop {
+            data[linear(&idx, &st)] = idx[dim] as i32;
+            if !next_index(&mut idx, &out_dims) {
+                break;
+            }
+        }
+    }
+    Ok(match ty {
+        PrimType::S32 => Value::i32(out_dims, data),
+        PrimType::F32 => Value::f32(out_dims, data.iter().map(|&x| x as f32).collect()),
+        other => bail!("unsupported iota element type {other:?}"),
+    })
+}
+
+pub(crate) fn eval_convert(a: &Value, ty: PrimType, out_dims: Vec<usize>) -> Result<Value> {
+    let buf = match (&a.buf, ty) {
+        (Buf::F32(v), PrimType::S32) => {
+            // XLA convert rounds toward zero
+            Buf::I32(v.iter().map(|&x| x as i32).collect())
+        }
+        (Buf::I32(v), PrimType::F32) => Buf::F32(v.iter().map(|&x| x as f32).collect()),
+        (Buf::Pred(v), PrimType::F32) => {
+            Buf::F32(v.iter().map(|&x| if x { 1.0 } else { 0.0 }).collect())
+        }
+        (Buf::Pred(v), PrimType::S32) => Buf::I32(v.iter().map(|&x| x as i32).collect()),
+        // rng bits flow into the f32/s32 graph world via convert
+        (Buf::U32(v), PrimType::F32) => Buf::F32(v.iter().map(|&x| x as f32).collect()),
+        (Buf::U32(v), PrimType::S32) => {
+            // XLA integral convert wraps (two's-complement reinterpret)
+            Buf::I32(v.iter().map(|&x| x as i32).collect())
+        }
+        (Buf::U64(v), PrimType::U32) => Buf::U32(v.iter().map(|&x| x as u32).collect()),
+        (b, t) if b.ty() == t => b.clone(),
+        (b, t) => bail!("unsupported convert {:?} -> {t:?}", b.ty()),
+    };
+    Ok(Value { dims: out_dims, buf })
+}
+
+pub(crate) fn eval_unary(a: &Value, u: UnOp, out_dims: Vec<usize>) -> Result<Value> {
+    Ok(match (&a.buf, u) {
+        (Buf::F32(v), UnOp::Exp) => Value::f32(out_dims, v.iter().map(|x| x.exp()).collect()),
+        (Buf::F32(v), UnOp::Tanh) => {
+            Value::f32(out_dims, v.iter().map(|x| x.tanh()).collect())
+        }
+        (Buf::F32(v), UnOp::Neg) => Value::f32(out_dims, v.iter().map(|x| -x).collect()),
+        (Buf::I32(v), UnOp::Neg) => {
+            Value::i32(out_dims, v.iter().map(|x| x.wrapping_neg()).collect())
+        }
+        (b, u) => bail!("unsupported unary {u:?} on {:?}", b.ty()),
+    })
+}
+
+pub(crate) fn eval_binary(x: &Value, y: &Value, b: BinOp, out_dims: Vec<usize>) -> Result<Value> {
+    if x.dims != y.dims {
+        bail!("binary operand shapes differ: {:?} vs {:?}", x.dims, y.dims);
+    }
+    let buf = match (&x.buf, &y.buf) {
+        (Buf::F32(a), Buf::F32(c)) => Buf::F32(binary_f32(a, c, b)?),
+        (Buf::I32(a), Buf::I32(c)) => Buf::I32(binary_i32(a, c, b)?),
+        (Buf::Pred(a), Buf::Pred(c)) => match b {
+            BinOp::And => Buf::Pred(a.iter().zip(c).map(|(&p, &q)| p && q).collect()),
+            BinOp::Or => Buf::Pred(a.iter().zip(c).map(|(&p, &q)| p || q).collect()),
+            other => bail!("unsupported pred binary {other:?}"),
+        },
+        _ => bail!("mixed-dtype binary"),
+    };
+    Ok(Value { dims: out_dims, buf })
+}
+
+pub(crate) fn eval_compare(
+    x: &Value,
+    y: &Value,
+    dir: CmpDir,
+    out_dims: Vec<usize>,
+) -> Result<Value> {
+    if x.dims != y.dims {
+        bail!("compare shapes differ: {:?} vs {:?}", x.dims, y.dims);
+    }
+    let preds = match (&x.buf, &y.buf) {
+        (Buf::F32(a), Buf::F32(b)) => cmp(a, b, dir),
+        (Buf::I32(a), Buf::I32(b)) => cmp(a, b, dir),
+        _ => bail!("unsupported compare operand types"),
+    };
+    Ok(Value { dims: out_dims, buf: Buf::Pred(preds) })
+}
+
+pub(crate) fn eval_select(p: &Value, t: &Value, f: &Value, out_dims: Vec<usize>) -> Result<Value> {
+    if p.dims != t.dims || t.dims != f.dims {
+        bail!("select shapes differ");
+    }
+    let preds = p.preds()?;
+    let buf = match (&t.buf, &f.buf) {
+        (Buf::F32(a), Buf::F32(b)) => Buf::F32(
+            preds
+                .iter()
+                .zip(a.iter().zip(b))
+                .map(|(&c, (&x, &y))| if c { x } else { y })
+                .collect(),
+        ),
+        (Buf::I32(a), Buf::I32(b)) => Buf::I32(
+            preds
+                .iter()
+                .zip(a.iter().zip(b))
+                .map(|(&c, (&x, &y))| if c { x } else { y })
+                .collect(),
+        ),
+        _ => bail!("select branch dtypes differ"),
+    };
+    Ok(Value { dims: out_dims, buf })
+}
+
 /// One Threefry-2x32 block (Salmon et al., 20 rounds) — the
 /// deterministic counter-based generator behind `rng-bit-generator`
 /// with `algorithm=rng_threefry`.
@@ -581,7 +566,7 @@ fn threefry2x32(key: [u32; 2], ctr: [u32; 2]) -> [u32; 2] {
 /// chained calls never reuse a counter (determinism *and*
 /// independence). Not bit-compatible with XLA's exact stream — but
 /// fully deterministic, which is the property the stack needs.
-fn eval_rng_threefry(state: &Value, ins: &Instr) -> Result<(Value, Value)> {
+pub(crate) fn eval_rng_threefry(state: &Value, ins: &Instr) -> Result<(Value, Value)> {
     let st = state.u64s().context("rng state must be u64")?;
     if state.dims != [2] {
         bail!("rng-bit-generator state must be u64[2], got {:?}", state.dims);
@@ -614,7 +599,7 @@ fn eval_rng_threefry(state: &Value, ins: &Instr) -> Result<(Value, Value)> {
     Ok((new_state, bits_v))
 }
 
-fn eval_broadcast(a: &Value, mapping: &[usize], out_dims: Vec<usize>) -> Result<Value> {
+pub(crate) fn eval_broadcast(a: &Value, mapping: &[usize], out_dims: Vec<usize>) -> Result<Value> {
     if mapping.len() != a.dims.len() {
         bail!("broadcast dims {:?} rank-mismatch input {:?}", mapping, a.dims);
     }
@@ -654,7 +639,7 @@ fn eval_broadcast(a: &Value, mapping: &[usize], out_dims: Vec<usize>) -> Result<
     Ok(Value { dims: out_dims, buf })
 }
 
-fn eval_transpose(a: &Value, perm: &[usize], out_dims: Vec<usize>) -> Result<Value> {
+pub(crate) fn eval_transpose(a: &Value, perm: &[usize], out_dims: Vec<usize>) -> Result<Value> {
     if perm.len() != a.dims.len() {
         bail!("transpose perm {:?} rank-mismatch {:?}", perm, a.dims);
     }
@@ -697,22 +682,17 @@ fn eval_transpose(a: &Value, perm: &[usize], out_dims: Vec<usize>) -> Result<Val
     Ok(Value { dims: out_dims, buf })
 }
 
-fn eval_slice(a: &Value, ranges: &[(usize, usize, usize)], out_dims: Vec<usize>) -> Result<Value> {
-    if ranges.len() != a.dims.len() || out_dims.len() != a.dims.len() {
-        bail!("slice rank mismatch");
-    }
-    for (d, &(s, l, st)) in ranges.iter().enumerate() {
-        if st == 0 || l > a.dims[d] || s > l {
-            bail!("bad slice range {:?} for dim {d} of {:?}", ranges[d], a.dims);
-        }
-        let want = (l - s).div_ceil(st);
-        if out_dims[d] != want {
-            bail!(
-                "slice output dim {d} is {}, range {:?} yields {want}",
-                out_dims[d],
-                ranges[d]
-            );
-        }
+pub(crate) fn eval_slice(
+    a: &Value,
+    ranges: &[(usize, usize, usize)],
+    out_dims: Vec<usize>,
+) -> Result<Value> {
+    let want = match layout::slice_output_dims(&a.dims, ranges) {
+        Ok(w) => w,
+        Err(e) => bail!("slice over {:?}: {e}", a.dims),
+    };
+    if want != out_dims {
+        bail!("slice output {out_dims:?} != computed {want:?}");
     }
     let in_st = strides(&a.dims);
     let out_st = strides(&out_dims);
@@ -741,7 +721,7 @@ fn eval_slice(a: &Value, ranges: &[(usize, usize, usize)], out_dims: Vec<usize>)
     Ok(Value { dims: out_dims, buf })
 }
 
-fn eval_concat(vals: &[&Rc<Value>], dim: usize, out_dims: Vec<usize>) -> Result<Value> {
+pub(crate) fn eval_concat(vals: &[&Value], dim: usize, out_dims: Vec<usize>) -> Result<Value> {
     let first = vals.first().context("empty concatenate")?;
     let rank = first.dims.len();
     if dim >= rank || out_dims.len() != rank {
@@ -793,7 +773,7 @@ fn eval_concat(vals: &[&Rc<Value>], dim: usize, out_dims: Vec<usize>) -> Result<
 }
 
 /// Standard HLO gather (the general form, per the XLA semantics doc).
-fn eval_gather(
+pub(crate) fn eval_gather(
     operand: &Value,
     indices: &Value,
     g: &GatherDims,
@@ -907,7 +887,7 @@ fn eval_gather(
     Ok(Value { dims: out_dims, buf })
 }
 
-fn eval_reduce(
+pub(crate) fn eval_reduce(
     a: &Value,
     init: &Value,
     red_dims: &[usize],
@@ -917,10 +897,7 @@ fn eval_reduce(
     if let Some(&d) = red_dims.iter().find(|&&d| d >= a.dims.len()) {
         bail!("reduce dimension {d} out of range for rank {}", a.dims.len());
     }
-    let kept_dims: Vec<usize> = (0..a.dims.len())
-        .filter(|d| !red_dims.contains(d))
-        .map(|d| a.dims[d])
-        .collect();
+    let kept_dims = layout::reduce_output_dims(&a.dims, red_dims);
     if kept_dims != out_dims {
         bail!("reduce output {out_dims:?} != kept dims {kept_dims:?}");
     }
@@ -962,7 +939,7 @@ fn eval_reduce(
             }
         }
     }
-    let kept: Vec<usize> = (0..a.dims.len()).filter(|d| !red_dims.contains(d)).collect();
+    let kept = layout::reduce_kept_axes(a.dims.len(), red_dims);
     let out_st = strides(&out_dims);
     let n_out: usize = out_dims.iter().product();
 
@@ -1008,7 +985,7 @@ fn eval_reduce(
     Ok(Value { dims: out_dims, buf })
 }
 
-fn eval_dus(operand: &Value, update: &Value, starts: &[i64]) -> Result<Value> {
+pub(crate) fn eval_dus(operand: &Value, update: &Value, starts: &[i64]) -> Result<Value> {
     if starts.len() != operand.dims.len() || update.dims.len() != operand.dims.len() {
         bail!("dynamic-update-slice rank mismatch");
     }
@@ -1063,7 +1040,7 @@ fn eval_dus(operand: &Value, update: &Value, starts: &[i64]) -> Result<Value> {
 
 /// XLA dynamic-slice: `sizes`-shaped window at runtime `starts`,
 /// clamped per dimension so the window fits.
-fn eval_dynamic_slice(
+pub(crate) fn eval_dynamic_slice(
     a: &Value,
     starts: &[i64],
     sizes: &[usize],
@@ -1155,50 +1132,23 @@ fn pack_dot_operand(data: &[f32], dims: &[usize], groups: [&[usize]; 3]) -> Vec<
 pub fn eval_dot(lhs: &Value, rhs: &Value, d: &DotDims, out_dims: Vec<usize>) -> Result<Value> {
     let a = lhs.f32s().context("dot lhs must be f32")?;
     let b = rhs.f32s().context("dot rhs must be f32")?;
-    let lfree: Vec<usize> = (0..lhs.dims.len())
-        .filter(|i| !d.lhs_batch.contains(i) && !d.lhs_contract.contains(i))
-        .collect();
-    let rfree: Vec<usize> = (0..rhs.dims.len())
-        .filter(|i| !d.rhs_batch.contains(i) && !d.rhs_contract.contains(i))
-        .collect();
-    if d.lhs_batch.len() != d.rhs_batch.len() || d.lhs_contract.len() != d.rhs_contract.len() {
-        bail!("dot dimension-number arity mismatch");
+    let lay = match layout::dot_layout(&lhs.dims, &rhs.dims, d) {
+        Ok(l) => l,
+        Err(e) => bail!("dot: {e}"),
+    };
+    if lay.out_dims != out_dims {
+        bail!("dot output shape {:?} != computed {:?}", out_dims, lay.out_dims);
     }
-    for (&l, &r) in d.lhs_contract.iter().zip(&d.rhs_contract) {
-        if lhs.dims[l] != rhs.dims[r] {
-            bail!("dot contracting dims differ: {} vs {}", lhs.dims[l], rhs.dims[r]);
-        }
-    }
-    for (&l, &r) in d.lhs_batch.iter().zip(&d.rhs_batch) {
-        if lhs.dims[l] != rhs.dims[r] {
-            bail!("dot batch dims differ: {} vs {}", lhs.dims[l], rhs.dims[r]);
-        }
-    }
-    let batch_dims: Vec<usize> = d.lhs_batch.iter().map(|&i| lhs.dims[i]).collect();
-    let contract_dims: Vec<usize> = d.lhs_contract.iter().map(|&i| lhs.dims[i]).collect();
-    let lfree_dims: Vec<usize> = lfree.iter().map(|&i| lhs.dims[i]).collect();
-    let rfree_dims: Vec<usize> = rfree.iter().map(|&i| rhs.dims[i]).collect();
-    {
-        let mut expect = batch_dims.clone();
-        expect.extend(&lfree_dims);
-        expect.extend(&rfree_dims);
-        if expect != out_dims {
-            bail!("dot output shape {:?} != computed {:?}", out_dims, expect);
-        }
-    }
-    let bsz: usize = batch_dims.iter().product();
-    let m: usize = lfree_dims.iter().product();
-    let k: usize = contract_dims.iter().product();
-    let n: usize = rfree_dims.iter().product();
+    let (bsz, m, k, n) = (lay.bsz(), lay.m(), lay.k(), lay.n());
     let pa = pack_dot_operand(
         a,
         &lhs.dims,
-        [d.lhs_batch.as_slice(), lfree.as_slice(), d.lhs_contract.as_slice()],
+        [d.lhs_batch.as_slice(), lay.lhs_free.as_slice(), d.lhs_contract.as_slice()],
     );
     let pb = pack_dot_operand(
         b,
         &rhs.dims,
-        [d.rhs_batch.as_slice(), d.rhs_contract.as_slice(), rfree.as_slice()],
+        [d.rhs_batch.as_slice(), d.rhs_contract.as_slice(), lay.rhs_free.as_slice()],
     );
     let mut out = vec![0f32; bsz * m * n];
     for bb in 0..bsz {
@@ -1226,7 +1176,7 @@ mod tests {
 
     fn run(text: &str, args: Vec<Value>) -> Vec<Value> {
         let m = parse_module(text).unwrap();
-        let args: Vec<Rc<Value>> = args.into_iter().map(Rc::new).collect();
+        let args: Vec<Arc<Value>> = args.into_iter().map(Arc::new).collect();
         evaluate(&m, &args).unwrap()
     }
 

@@ -1,0 +1,284 @@
+//! Row-major layout and shape-inference arithmetic shared by the
+//! evaluator, the execution-plan compiler, the static verifier, and the
+//! HLO builder.
+//!
+//! Before this module each of those files carried its own copy of the
+//! stride/index walk and of the dot/reduce/slice output-shape formulas;
+//! a fix in one copy silently missed the others. Everything here is
+//! pure arithmetic over `&[usize]` so it stays unit-testable without a
+//! parsed module.
+
+use super::parser::DotDims;
+
+/// Row-major strides: `strides([a,b,c]) == [b*c, c, 1]`.
+pub fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Advance a row-major multi-index; returns false after the last one.
+pub fn next_index(idx: &mut [usize], dims: &[usize]) -> bool {
+    for d in (0..dims.len()).rev() {
+        idx[d] += 1;
+        if idx[d] < dims[d] {
+            return true;
+        }
+        idx[d] = 0;
+    }
+    false
+}
+
+/// Linear offset of a multi-index under the given strides.
+pub fn linear(idx: &[usize], strides: &[usize]) -> usize {
+    idx.iter().zip(strides).map(|(i, s)| i * s).sum()
+}
+
+/// Output dims of `slice(in_dims)` under `(start, limit, stride)`
+/// ranges. `Err` carries a human-readable reason (bad range); the
+/// caller supplies rank agreement.
+pub fn slice_output_dims(
+    in_dims: &[usize],
+    ranges: &[(usize, usize, usize)],
+) -> Result<Vec<usize>, String> {
+    if ranges.len() != in_dims.len() {
+        return Err(format!("{} ranges for rank {}", ranges.len(), in_dims.len()));
+    }
+    let mut dims = Vec::with_capacity(ranges.len());
+    for (d, &(s, l, st)) in ranges.iter().enumerate() {
+        if st == 0 || l > in_dims[d] || s > l {
+            return Err(format!("bad range {:?} for dim {d} of {in_dims:?}", ranges[d]));
+        }
+        dims.push((l - s).div_ceil(st));
+    }
+    Ok(dims)
+}
+
+/// Axes of `rank` not reduced over.
+pub fn reduce_kept_axes(rank: usize, red_dims: &[usize]) -> Vec<usize> {
+    (0..rank).filter(|d| !red_dims.contains(d)).collect()
+}
+
+/// Output dims of a reduce over `red_dims` (kept axes, in order).
+pub fn reduce_output_dims(in_dims: &[usize], red_dims: &[usize]) -> Vec<usize> {
+    reduce_kept_axes(in_dims.len(), red_dims)
+        .into_iter()
+        .map(|d| in_dims[d])
+        .collect()
+}
+
+/// A dot's derived geometry: free axes per side, the [batch, M, K, N]
+/// sizes the packed kernel contracts over, and the output dims
+/// (batch ++ lhs-free ++ rhs-free).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DotLayout {
+    /// lhs axes that are neither batch nor contracting, in order.
+    pub lhs_free: Vec<usize>,
+    /// rhs axes that are neither batch nor contracting, in order.
+    pub rhs_free: Vec<usize>,
+    pub batch_dims: Vec<usize>,
+    pub lhs_free_dims: Vec<usize>,
+    pub rhs_free_dims: Vec<usize>,
+    pub contract_dims: Vec<usize>,
+    pub out_dims: Vec<usize>,
+}
+
+impl DotLayout {
+    pub fn bsz(&self) -> usize {
+        self.batch_dims.iter().product()
+    }
+    pub fn m(&self) -> usize {
+        self.lhs_free_dims.iter().product()
+    }
+    pub fn k(&self) -> usize {
+        self.contract_dims.iter().product()
+    }
+    pub fn n(&self) -> usize {
+        self.rhs_free_dims.iter().product()
+    }
+}
+
+/// Why a [`dot_layout`] request is invalid: `rule` is "attr" for bad
+/// dimension numbers, "shape" for operand-dim disagreements — the split
+/// the verifier's diagnostic rules use.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DotLayoutError {
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for DotLayoutError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+/// Validate dot_dimension_numbers against the operand shapes and derive
+/// the contraction geometry. Single home for the formula `output =
+/// batch ++ lhs-free ++ rhs-free` used by the evaluator, the plan
+/// compiler, the verifier, and the builder.
+pub fn dot_layout(
+    lhs_dims: &[usize],
+    rhs_dims: &[usize],
+    d: &DotDims,
+) -> Result<DotLayout, DotLayoutError> {
+    let attr = |msg: String| DotLayoutError { rule: "attr", msg };
+    let shape = |msg: String| DotLayoutError { rule: "shape", msg };
+    if d.lhs_batch.len() != d.rhs_batch.len() || d.lhs_contract.len() != d.rhs_contract.len() {
+        return Err(attr("dimension-number arity mismatch".to_string()));
+    }
+    let lhs_oob = d.lhs_batch.iter().chain(&d.lhs_contract).any(|&i| i >= lhs_dims.len());
+    let rhs_oob = d.rhs_batch.iter().chain(&d.rhs_contract).any(|&i| i >= rhs_dims.len());
+    if lhs_oob || rhs_oob {
+        return Err(attr(format!(
+            "dimension numbers out of range for operand ranks {}/{}",
+            lhs_dims.len(),
+            rhs_dims.len()
+        )));
+    }
+    if d.lhs_batch.iter().any(|i| d.lhs_contract.contains(i))
+        || d.rhs_batch.iter().any(|i| d.rhs_contract.contains(i))
+    {
+        return Err(attr("batch and contracting dims overlap".to_string()));
+    }
+    for (&a, &b) in d.lhs_contract.iter().zip(&d.rhs_contract) {
+        if lhs_dims[a] != rhs_dims[b] {
+            return Err(shape(format!(
+                "contracting dims differ: {} vs {}",
+                lhs_dims[a], rhs_dims[b]
+            )));
+        }
+    }
+    for (&a, &b) in d.lhs_batch.iter().zip(&d.rhs_batch) {
+        if lhs_dims[a] != rhs_dims[b] {
+            return Err(shape(format!("batch dims differ: {} vs {}", lhs_dims[a], rhs_dims[b])));
+        }
+    }
+    let lhs_free: Vec<usize> = (0..lhs_dims.len())
+        .filter(|i| !d.lhs_batch.contains(i) && !d.lhs_contract.contains(i))
+        .collect();
+    let rhs_free: Vec<usize> = (0..rhs_dims.len())
+        .filter(|i| !d.rhs_batch.contains(i) && !d.rhs_contract.contains(i))
+        .collect();
+    let batch_dims: Vec<usize> = d.lhs_batch.iter().map(|&i| lhs_dims[i]).collect();
+    let lhs_free_dims: Vec<usize> = lhs_free.iter().map(|&i| lhs_dims[i]).collect();
+    let rhs_free_dims: Vec<usize> = rhs_free.iter().map(|&i| rhs_dims[i]).collect();
+    let contract_dims: Vec<usize> = d.lhs_contract.iter().map(|&i| lhs_dims[i]).collect();
+    let mut out_dims = batch_dims.clone();
+    out_dims.extend(&lhs_free_dims);
+    out_dims.extend(&rhs_free_dims);
+    Ok(DotLayout {
+        lhs_free,
+        rhs_free,
+        batch_dims,
+        lhs_free_dims,
+        rhs_free_dims,
+        contract_dims,
+        out_dims,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_are_row_major() {
+        assert_eq!(strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides(&[5]), vec![1]);
+        assert_eq!(strides(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn next_index_walks_row_major_order() {
+        let dims = [2, 3];
+        let st = strides(&dims);
+        let mut idx = [0usize; 2];
+        let mut seen = vec![linear(&idx, &st)];
+        while next_index(&mut idx, &dims) {
+            seen.push(linear(&idx, &st));
+        }
+        assert_eq!(seen, (0..6).collect::<Vec<_>>());
+        // rank-0: a single element, no successor
+        let mut empty: [usize; 0] = [];
+        assert!(!next_index(&mut empty, &[]));
+    }
+
+    #[test]
+    fn slice_output_dims_match_div_ceil_semantics() {
+        // [0:5:2] over 6 -> 3 elements; [1:6:2] -> 3; [2:2] -> 0
+        assert_eq!(
+            slice_output_dims(&[6, 6, 6], &[(0, 5, 2), (1, 6, 2), (2, 2, 1)]),
+            Ok(vec![3, 3, 0])
+        );
+        assert!(slice_output_dims(&[4], &[(3, 2, 1)]).is_err(), "start past limit");
+        assert!(slice_output_dims(&[4], &[(0, 5, 1)]).is_err(), "limit past dim");
+        assert!(slice_output_dims(&[4], &[(0, 4, 0)]).is_err(), "zero stride");
+        assert!(slice_output_dims(&[4, 4], &[(0, 4, 1)]).is_err(), "rank mismatch");
+    }
+
+    #[test]
+    fn reduce_output_dims_keep_unreduced_axes_in_order() {
+        assert_eq!(reduce_output_dims(&[2, 3, 4], &[1]), vec![2, 4]);
+        assert_eq!(reduce_output_dims(&[2, 3, 4], &[0, 2]), vec![3]);
+        assert_eq!(reduce_output_dims(&[2, 3], &[0, 1]), Vec::<usize>::new());
+        assert_eq!(reduce_kept_axes(3, &[1]), vec![0, 2]);
+    }
+
+    #[test]
+    fn dot_layout_matmul_and_batched_forms() {
+        // plain [m,k] x [k,n]
+        let d = DotDims {
+            lhs_batch: vec![],
+            rhs_batch: vec![],
+            lhs_contract: vec![1],
+            rhs_contract: vec![0],
+        };
+        let l = dot_layout(&[2, 3], &[3, 5], &d).unwrap();
+        assert_eq!(l.out_dims, vec![2, 5]);
+        assert_eq!((l.bsz(), l.m(), l.k(), l.n()), (1, 2, 3, 5));
+        assert_eq!(l.lhs_free, vec![0]);
+        assert_eq!(l.rhs_free, vec![1]);
+        // batched [b,m,k] x [b,k,n]
+        let d = DotDims {
+            lhs_batch: vec![0],
+            rhs_batch: vec![0],
+            lhs_contract: vec![2],
+            rhs_contract: vec![1],
+        };
+        let l = dot_layout(&[4, 2, 3], &[4, 3, 5], &d).unwrap();
+        assert_eq!(l.out_dims, vec![4, 2, 5]);
+        assert_eq!((l.bsz(), l.m(), l.k(), l.n()), (4, 2, 3, 5));
+    }
+
+    #[test]
+    fn dot_layout_rejects_bad_dimension_numbers() {
+        let base = DotDims {
+            lhs_batch: vec![],
+            rhs_batch: vec![],
+            lhs_contract: vec![1],
+            rhs_contract: vec![0],
+        };
+        // contracting dims disagree
+        let e = dot_layout(&[2, 3], &[4, 5], &base).unwrap_err();
+        assert_eq!(e.rule, "shape");
+        // out-of-range dimension number
+        let mut oob = base.clone();
+        oob.lhs_contract = vec![7];
+        assert_eq!(dot_layout(&[2, 3], &[3, 5], &oob).unwrap_err().rule, "attr");
+        // arity mismatch
+        let mut arity = base.clone();
+        arity.rhs_contract = vec![0, 1];
+        assert_eq!(dot_layout(&[2, 3], &[3, 5], &arity).unwrap_err().rule, "attr");
+        // batch/contract overlap
+        let overlap = DotDims {
+            lhs_batch: vec![1],
+            rhs_batch: vec![0],
+            lhs_contract: vec![1],
+            rhs_contract: vec![0],
+        };
+        assert_eq!(dot_layout(&[2, 3], &[3, 5], &overlap).unwrap_err().rule, "attr");
+    }
+}

@@ -1,6 +1,7 @@
-//! In-process HLO substrate: text parser, CPU evaluator, static
-//! verifier, and a programmatic HLO-text builder (used by the fixture
-//! generator and the interpreter property tests).
+//! In-process HLO substrate: text parser, CPU evaluator, compiled
+//! execution plans, static verifier, and a programmatic HLO-text
+//! builder (used by the fixture generator and the interpreter property
+//! tests).
 
 // This layer is the substrate everything else evaluates on; a stray
 // unwrap here turns a shape bug into a panic instead of a diagnostic.
@@ -8,5 +9,7 @@
 
 pub mod builder;
 pub mod eval;
+pub mod layout;
 pub mod parser;
+pub mod plan;
 pub mod verify;

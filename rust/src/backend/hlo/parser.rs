@@ -157,6 +157,19 @@ pub struct Computation {
     pub root: usize,
 }
 
+impl Computation {
+    /// Resolve a reduce body to its binary op: the computation must be
+    /// a single binary instruction over its two parameters. Shared by
+    /// the evaluator and the execution-plan compiler, which both lower
+    /// `to_apply` bodies to a plain combiner at different times.
+    pub fn as_binary_reducer(&self) -> Option<BinOp> {
+        match self.instrs[self.root].op {
+            Op::Binary(b) => Some(b),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Debug)]
 pub struct HloModule {
     pub name: String,

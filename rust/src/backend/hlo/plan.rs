@@ -1,0 +1,1593 @@
+//! Compiled execution plans for the HLO interpreter.
+//!
+//! [`ExecPlan::compile`] lowers a parsed (and, on the backend path,
+//! verified) module once into a flat step schedule: operand names are
+//! resolved to slot indices, output shapes/strides and dot/reduce/
+//! broadcast geometry are precomputed, elementwise chains are fused
+//! into single chunked loops, and a liveness pass records each value's
+//! last use so buffers recycle through a per-call arena (with in-place
+//! elementwise updates when the input uniquely owns its buffer).
+//! [`ExecPlan::execute`] then runs the schedule with no per-op name
+//! lookups and almost no per-op allocation.
+//!
+//! Numerics contract: every optimized path applies the same scalar
+//! operations in the same order as the naive [`super::eval::evaluate`]
+//! walk, so results are *bit-identical* to the reference — including at
+//! `FE_INTERP_THREADS > 1`, where threads only ever split disjoint
+//! output rows and each row keeps its sequential accumulation order.
+//! `tests/interp_props.rs` property-tests this against random programs.
+
+use std::borrow::Cow;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::eval::{self, Buf, Value};
+use super::layout::{self, strides};
+use super::parser::{
+    BinOp, CmpDir, Computation, DotDims, GatherDims, HloModule, Op, PrimType, UnOp,
+};
+use crate::obs;
+
+/// Elementwise chunk size: registers stay L1-resident.
+const CHUNK: usize = 1024;
+/// Max recycled buffers kept per dtype in the arena.
+const ARENA_KEEP: usize = 8;
+/// Minimum `bsz*m*k*n` before a dot fans out across threads.
+const PAR_MIN_DOT: usize = 1 << 15;
+/// Minimum input numel before a reduce fans out across threads.
+const PAR_MIN_REDUCE: usize = 1 << 15;
+/// Minimum output numel before a broadcast fans out across threads.
+const PAR_MIN_BCAST: usize = 1 << 16;
+
+/// Knobs for plan compilation and execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvalOptions {
+    /// Worker count for dot/reduce/broadcast outer rows. 1 (the
+    /// default) runs everything on the calling thread; results are
+    /// byte-identical at any setting.
+    pub threads: usize,
+    /// Fuse elementwise chains into single chunked loops.
+    pub fuse: bool,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions { threads: 1, fuse: true }
+    }
+}
+
+impl EvalOptions {
+    /// Read `FE_INTERP_THREADS` (clamped to 1..=64) and
+    /// `FE_INTERP_FUSE` (any value but "0" keeps fusion on).
+    pub fn from_env() -> EvalOptions {
+        let threads = std::env::var("FE_INTERP_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .map(|t| t.clamp(1, 64))
+            .unwrap_or(1);
+        let fuse = std::env::var("FE_INTERP_FUSE").map(|s| s != "0").unwrap_or(true);
+        EvalOptions { threads, fuse }
+    }
+}
+
+/// Wall-clock attribution per step kind: (invocations, total ns).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct OpTime {
+    pub count: u64,
+    pub total_ns: u64,
+}
+
+pub type OpTimes = BTreeMap<&'static str, OpTime>;
+
+/// One fused-loop operation; operands index earlier registers.
+#[derive(Debug, Clone)]
+enum FOp {
+    /// Copy chunk of load `i` (preds become a 0.0/1.0 mask).
+    Load(usize),
+    /// Splat an inlined f32 constant.
+    Imm(f32),
+    Un(UnOp, usize),
+    Bin(BinOp, usize, usize),
+    /// Compare producing a 0.0/1.0 mask.
+    Cmp(CmpDir, usize, usize),
+    /// `sel(cond, t, f)`: cond is a mask, tested `!= 0.0`.
+    Sel(usize, usize, usize),
+    /// pred->f32 convert: identity on the mask representation.
+    Cvt(usize),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LoadTy {
+    F32,
+    Pred,
+}
+
+/// A fused elementwise chain: a straight-line register program run
+/// chunk-by-chunk over the operands.
+#[derive(Debug, Clone)]
+struct Fused {
+    prog: Vec<FOp>,
+    /// (slot, dtype) per distinct external input.
+    loads: Vec<(usize, LoadTy)>,
+    out_pred: bool,
+}
+
+/// Precomputed gather of one dot operand into a dense blocked layout.
+#[derive(Debug, Clone)]
+struct PackPlan {
+    /// The operand is already in blocked layout — skip the pack.
+    identity: bool,
+    /// Input stride per packed-output dim.
+    strides: Vec<usize>,
+    out_dims: Vec<usize>,
+}
+
+impl PackPlan {
+    fn new(dims: &[usize], groups: [&[usize]; 3]) -> PackPlan {
+        let in_st = strides(dims);
+        let perm: Vec<usize> = groups.iter().flat_map(|g| g.iter().copied()).collect();
+        let identity = perm.iter().enumerate().all(|(i, &p)| i == p);
+        PackPlan {
+            identity,
+            strides: perm.iter().map(|&p| in_st[p]).collect(),
+            out_dims: perm.iter().map(|&p| dims[p]).collect(),
+        }
+    }
+
+    /// Gather `data` into the packed layout (rows of the last packed
+    /// axis copied contiguously when unit-stride).
+    fn pack(&self, data: &[f32]) -> Vec<f32> {
+        let n: usize = self.out_dims.iter().product();
+        let mut out = Vec::with_capacity(n);
+        if n == 0 {
+            return out;
+        }
+        let rank = self.out_dims.len();
+        if rank == 0 {
+            out.push(data[0]);
+            return out;
+        }
+        let last_n = self.out_dims[rank - 1];
+        let last_st = self.strides[rank - 1];
+        let outer = &self.out_dims[..rank - 1];
+        let mut idx = vec![0usize; rank - 1];
+        loop {
+            let base: usize = idx.iter().zip(&self.strides).map(|(i, s)| i * s).sum();
+            if last_st == 1 {
+                out.extend_from_slice(&data[base..base + last_n]);
+            } else {
+                for j in 0..last_n {
+                    out.push(data[base + j * last_st]);
+                }
+            }
+            if outer.is_empty() || !layout::next_index(&mut idx, outer) {
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// Precomputed dot geometry: pack plans plus the [B, M, K, N] sizes the
+/// blocked i-k-j kernel contracts over.
+#[derive(Debug, Clone)]
+struct DotPlan {
+    lhs_dims: Vec<usize>,
+    rhs_dims: Vec<usize>,
+    bsz: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    lhs: PackPlan,
+    rhs: PackPlan,
+}
+
+#[derive(Debug, Clone)]
+struct ReducePlan {
+    red_dims: Vec<usize>,
+    op: BinOp,
+    /// Single f32 add/max/min reduction over the last axis: rows are
+    /// contiguous, folded with the interleaved fast kernel.
+    last_axis: bool,
+}
+
+#[derive(Debug, Clone)]
+struct BroadcastPlan {
+    mapping: Vec<usize>,
+    /// Input stride per output dim (0 where the dim is new).
+    eff: Vec<usize>,
+    /// Row-major strides of the output dims *before* the last one,
+    /// for decoding a flat row number back to a source offset.
+    outer_st: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+enum StepOp {
+    Param(usize),
+    /// Constants and iota are materialized once at compile time.
+    Const(Arc<Value>),
+    Fused(Fused),
+    Unary(UnOp),
+    Binary(BinOp),
+    Compare(CmpDir),
+    Select,
+    Convert,
+    Dot(DotPlan),
+    Reduce(ReducePlan),
+    Broadcast(BroadcastPlan),
+    Reshape,
+    Transpose(Vec<usize>),
+    Slice(Vec<(usize, usize, usize)>),
+    Concat(usize),
+    Gather(GatherDims),
+    Dus,
+    DynamicSlice(Vec<usize>),
+    Rng,
+    Tuple,
+    Gte(usize),
+}
+
+#[derive(Debug, Clone)]
+struct PlanStep {
+    op: StepOp,
+    /// Operand slot indices (pre-resolved; no name lookups at run
+    /// time). For [`StepOp::Fused`] these are the load slots.
+    operands: Vec<usize>,
+    out: usize,
+    dims: Vec<usize>,
+    ty: PrimType,
+    /// Step-kind label for `backend.op` spans and time attribution.
+    kind: &'static str,
+    /// Slots whose last use is this step: cleared (and their buffers
+    /// recycled into the arena) right after the step runs.
+    frees: Vec<usize>,
+    /// Index of the source instruction in the entry computation.
+    instr: usize,
+}
+
+#[derive(Debug, Clone)]
+enum Root {
+    Slot(usize),
+    /// Root is a `tuple(...)` instruction: return these slots as parts
+    /// without materializing the tuple.
+    Parts(Vec<usize>),
+}
+
+#[derive(Debug)]
+enum SlotVal {
+    Empty,
+    One(Arc<Value>),
+    Tuple(Vec<Arc<Value>>),
+}
+
+/// Recycled output buffers, keyed by dtype. Per-execute-call: freed
+/// buffers from early steps back later steps' outputs.
+#[derive(Default)]
+struct Arena {
+    f32s: Vec<Vec<f32>>,
+}
+
+impl Arena {
+    fn take_f32(&mut self, n: usize, fill: f32) -> Vec<f32> {
+        match self.f32s.pop() {
+            Some(mut v) => {
+                v.clear();
+                v.resize(n, fill);
+                v
+            }
+            None => vec![fill; n],
+        }
+    }
+
+    fn give(&mut self, v: Value) {
+        if let Buf::F32(b) = v.buf {
+            if self.f32s.len() < ARENA_KEEP && b.capacity() > 0 {
+                self.f32s.push(b);
+            }
+        }
+    }
+
+    fn give_f32(&mut self, b: Vec<f32>) {
+        if self.f32s.len() < ARENA_KEEP && b.capacity() > 0 {
+            self.f32s.push(b);
+        }
+    }
+}
+
+/// A module lowered to a flat, allocation-lean step schedule.
+#[derive(Debug)]
+pub struct ExecPlan {
+    module: Arc<HloModule>,
+    steps: Vec<PlanStep>,
+    n_params: usize,
+    n_slots: usize,
+    root: Root,
+    opts: EvalOptions,
+}
+
+impl ExecPlan {
+    pub fn module(&self) -> &Arc<HloModule> {
+        &self.module
+    }
+
+    pub fn opts(&self) -> EvalOptions {
+        self.opts
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Number of schedule steps with the given kind label (tests use
+    /// this to assert fusion/constant-folding actually happened).
+    pub fn count_kind(&self, kind: &str) -> usize {
+        self.steps.iter().filter(|s| s.kind == kind).count()
+    }
+
+    pub fn execute(&self, args: &[Arc<Value>]) -> Result<Vec<Value>> {
+        self.run(args, None)
+    }
+
+    /// Like [`execute`](Self::execute) but attributes wall-clock to
+    /// each step kind (microbench per-op reporting).
+    pub fn execute_timed(&self, args: &[Arc<Value>], times: &mut OpTimes) -> Result<Vec<Value>> {
+        self.run(args, Some(times))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Compilation
+// ---------------------------------------------------------------------
+
+struct Compiler<'m> {
+    entry: &'m Computation,
+    module: &'m HloModule,
+    /// Operand slot ids per instruction.
+    ops: Vec<Vec<usize>>,
+    uses: Vec<usize>,
+    /// Sole consumer instr index, when uses == 1.
+    sole: Vec<Option<usize>>,
+    root_slots: Vec<bool>,
+}
+
+impl<'m> Compiler<'m> {
+    fn new(module: &'m HloModule) -> Result<Compiler<'m>> {
+        let entry = module.entry_computation();
+        let n = entry.instrs.len();
+        let by_name: HashMap<&str, usize> =
+            entry.instrs.iter().enumerate().map(|(i, ins)| (ins.name.as_str(), i)).collect();
+        let mut ops = Vec::with_capacity(n);
+        let mut uses = vec![0usize; n];
+        let mut sole: Vec<Option<usize>> = vec![None; n];
+        for (i, ins) in entry.instrs.iter().enumerate() {
+            let mut o = Vec::with_capacity(ins.operands.len());
+            for name in &ins.operands {
+                let &j = by_name.get(name.as_str()).with_context(|| {
+                    format!("instruction {:?}: operand {name:?} undefined", ins.name)
+                })?;
+                uses[j] += 1;
+                sole[j] = if uses[j] == 1 { Some(i) } else { None };
+                o.push(j);
+            }
+            ops.push(o);
+        }
+        let mut root_slots = vec![false; n];
+        if matches!(entry.instrs[entry.root].op, Op::Tuple) {
+            for &o in &ops[entry.root] {
+                root_slots[o] = true;
+            }
+        } else {
+            root_slots[entry.root] = true;
+        }
+        Ok(Compiler { entry, module, ops, uses, sole, root_slots })
+    }
+
+    fn dims(&self, i: usize) -> &[usize] {
+        &self.entry.instrs[i].shape.dims
+    }
+
+    fn ty(&self, i: usize) -> PrimType {
+        self.entry.instrs[i].shape.ty
+    }
+
+    /// Can instruction `i` participate in a fused elementwise loop?
+    fn fusable(&self, i: usize) -> bool {
+        let ins = &self.entry.instrs[i];
+        let same_shape = |j: usize| self.dims(j) == ins.shape.dims;
+        match &ins.op {
+            Op::ConstF32(_) => ins.shape.ty == PrimType::F32,
+            Op::Unary(UnOp::Exp | UnOp::Tanh | UnOp::Neg) => {
+                ins.shape.ty == PrimType::F32 && self.ops[i].iter().all(|&j| same_shape(j))
+            }
+            Op::Binary(b) => {
+                let tys_ok = match b {
+                    BinOp::And | BinOp::Or => {
+                        ins.shape.ty == PrimType::Pred
+                            && self.ops[i].iter().all(|&j| self.ty(j) == PrimType::Pred)
+                    }
+                    _ => {
+                        ins.shape.ty == PrimType::F32
+                            && self.ops[i].iter().all(|&j| self.ty(j) == PrimType::F32)
+                    }
+                };
+                tys_ok && self.ops[i].iter().all(|&j| same_shape(j))
+            }
+            Op::Compare(_) => {
+                self.ops[i].iter().all(|&j| self.ty(j) == PrimType::F32 && same_shape(j))
+            }
+            Op::Select => {
+                self.ops[i].len() == 3
+                    && self.ty(self.ops[i][0]) == PrimType::Pred
+                    && ins.shape.ty == PrimType::F32
+                    && self.ops[i][1..].iter().all(|&j| self.ty(j) == PrimType::F32)
+                    && self.ops[i].iter().all(|&j| same_shape(j))
+            }
+            Op::Convert => {
+                ins.shape.ty == PrimType::F32
+                    && self.ops[i].len() == 1
+                    && self.ty(self.ops[i][0]) == PrimType::Pred
+                    && same_shape(self.ops[i][0])
+            }
+            _ => false,
+        }
+    }
+
+    /// Will `i` disappear into its sole consumer's fused loop?
+    fn will_inline(&self, i: usize) -> bool {
+        if self.root_slots[i] || !self.fusable(i) {
+            return false;
+        }
+        if matches!(self.entry.instrs[i].op, Op::ConstF32(_)) {
+            // splats inline as immediates into every fusable consumer,
+            // but only vanish if *all* consumers fused them — let DCE
+            // decide; a const is never a fusion root either way.
+            return false;
+        }
+        match self.sole[i] {
+            Some(c) => self.fusable(c) && self.dims(c) == self.dims(i),
+            None => false,
+        }
+    }
+
+    /// Build the fused program rooted at `r`. Returns None when the
+    /// chain has fewer than two compute ops (not worth a loop).
+    fn build_fused(&self, r: usize) -> Option<Fused> {
+        struct B<'c, 'm> {
+            c: &'c Compiler<'m>,
+            root_dims: &'c [usize],
+            prog: Vec<FOp>,
+            loads: Vec<(usize, LoadTy)>,
+            load_map: HashMap<usize, usize>,
+        }
+        impl B<'_, '_> {
+            fn can_inline(&self, i: usize) -> bool {
+                if self.c.root_slots[i] || self.c.dims(i) != self.root_dims {
+                    return false;
+                }
+                if matches!(self.c.entry.instrs[i].op, Op::ConstF32(_)) {
+                    return self.c.fusable(i);
+                }
+                self.c.fusable(i) && self.c.uses[i] == 1
+            }
+
+            fn emit(&mut self, i: usize) -> usize {
+                if let Some(&reg) = self.load_map.get(&i) {
+                    return reg;
+                }
+                let inlined = self.can_inline(i);
+                let fop = if inlined {
+                    match &self.c.entry.instrs[i].op {
+                        Op::ConstF32(v) => FOp::Imm(*v),
+                        Op::Unary(u) => {
+                            let a = self.emit(self.c.ops[i][0]);
+                            FOp::Un(*u, a)
+                        }
+                        Op::Binary(b) => {
+                            let a = self.emit(self.c.ops[i][0]);
+                            let c = self.emit(self.c.ops[i][1]);
+                            FOp::Bin(*b, a, c)
+                        }
+                        Op::Compare(d) => {
+                            let a = self.emit(self.c.ops[i][0]);
+                            let c = self.emit(self.c.ops[i][1]);
+                            FOp::Cmp(*d, a, c)
+                        }
+                        Op::Select => {
+                            let p = self.emit(self.c.ops[i][0]);
+                            let t = self.emit(self.c.ops[i][1]);
+                            let f = self.emit(self.c.ops[i][2]);
+                            FOp::Sel(p, t, f)
+                        }
+                        Op::Convert => {
+                            let a = self.emit(self.c.ops[i][0]);
+                            FOp::Cvt(a)
+                        }
+                        // can_inline admits only the forms above
+                        _ => {
+                            let lt = if self.c.ty(i) == PrimType::Pred {
+                                LoadTy::Pred
+                            } else {
+                                LoadTy::F32
+                            };
+                            self.loads.push((i, lt));
+                            FOp::Load(self.loads.len() - 1)
+                        }
+                    }
+                } else {
+                    let lt =
+                        if self.c.ty(i) == PrimType::Pred { LoadTy::Pred } else { LoadTy::F32 };
+                    self.loads.push((i, lt));
+                    FOp::Load(self.loads.len() - 1)
+                };
+                self.prog.push(fop);
+                let reg = self.prog.len() - 1;
+                // memoize multi-use nodes (loads; inlined consts are
+                // uses==1 or splats, sharing regs either way is fine)
+                self.load_map.insert(i, reg);
+                reg
+            }
+        }
+        let root_dims = self.dims(r).to_vec();
+        let mut b = B {
+            c: self,
+            root_dims: &root_dims,
+            prog: Vec::new(),
+            loads: Vec::new(),
+            load_map: HashMap::new(),
+        };
+        // emit the root's own op unconditionally (it is the fusion root)
+        let root_fop = match &self.entry.instrs[r].op {
+            Op::Unary(u) => {
+                let a = b.emit(self.ops[r][0]);
+                FOp::Un(*u, a)
+            }
+            Op::Binary(op) => {
+                let a = b.emit(self.ops[r][0]);
+                let c = b.emit(self.ops[r][1]);
+                FOp::Bin(*op, a, c)
+            }
+            Op::Compare(d) => {
+                let a = b.emit(self.ops[r][0]);
+                let c = b.emit(self.ops[r][1]);
+                FOp::Cmp(*d, a, c)
+            }
+            Op::Select => {
+                let p = b.emit(self.ops[r][0]);
+                let t = b.emit(self.ops[r][1]);
+                let f = b.emit(self.ops[r][2]);
+                FOp::Sel(p, t, f)
+            }
+            Op::Convert => {
+                let a = b.emit(self.ops[r][0]);
+                FOp::Cvt(a)
+            }
+            _ => return None,
+        };
+        b.prog.push(root_fop);
+        let compute = b
+            .prog
+            .iter()
+            .filter(|f| !matches!(f, FOp::Load(_) | FOp::Imm(_)))
+            .count();
+        if compute < 2 {
+            return None;
+        }
+        Some(Fused { prog: b.prog, loads: b.loads, out_pred: self.ty(r) == PrimType::Pred })
+    }
+}
+
+impl ExecPlan {
+    /// Lower the module's entry computation into a flat schedule.
+    ///
+    /// The module is assumed shape-consistent (the interpreter backend
+    /// verifies before planning); remaining dynamic properties are
+    /// checked per step at run time by the shared kernels.
+    pub fn compile(module: &Arc<HloModule>, opts: EvalOptions) -> Result<ExecPlan> {
+        let c = Compiler::new(module)?;
+        let entry = c.entry;
+        let n = entry.instrs.len();
+
+        // 1. lower every instruction to a (pre-fusion) step
+        let mut steps: Vec<Option<PlanStep>> = Vec::with_capacity(n);
+        for (i, ins) in entry.instrs.iter().enumerate() {
+            let step = lower_instr(&c, i)
+                .with_context(|| format!("planning instruction {:?}", ins.name))?;
+            steps.push(Some(step));
+        }
+
+        // 2. fuse elementwise chains
+        if opts.fuse {
+            for i in 0..n {
+                let is_chain_root = matches!(
+                    entry.instrs[i].op,
+                    Op::Unary(_) | Op::Binary(_) | Op::Compare(_) | Op::Select | Op::Convert
+                ) && c.fusable(i)
+                    && !c.will_inline(i);
+                if !is_chain_root {
+                    continue;
+                }
+                if let Some(fused) = c.build_fused(i) {
+                    let operands: Vec<usize> = fused.loads.iter().map(|&(s, _)| s).collect();
+                    if let Some(s) = steps[i].as_mut() {
+                        s.op = StepOp::Fused(fused);
+                        s.operands = operands;
+                        s.kind = "fused";
+                    }
+                }
+            }
+        }
+
+        // 3. dead-step elimination: keep params and everything the
+        // root (transitively) references
+        let root = if matches!(entry.instrs[entry.root].op, Op::Tuple) {
+            Root::Parts(c.ops[entry.root].clone())
+        } else {
+            Root::Slot(entry.root)
+        };
+        let mut live = vec![false; n];
+        let mut stack: Vec<usize> = match &root {
+            Root::Slot(s) => vec![*s],
+            Root::Parts(ps) => ps.clone(),
+        };
+        for &p in &entry.params {
+            stack.push(p);
+        }
+        while let Some(i) = stack.pop() {
+            if std::mem::replace(&mut live[i], true) {
+                continue;
+            }
+            if let Some(s) = &steps[i] {
+                stack.extend(s.operands.iter().copied());
+            }
+        }
+        let mut final_steps: Vec<PlanStep> =
+            steps.into_iter().flatten().filter(|s| live[s.out]).collect();
+
+        // 4. liveness: frees = slots whose last use is this step
+        let mut last_use: Vec<Option<usize>> = vec![None; n];
+        for (si, s) in final_steps.iter().enumerate() {
+            for &o in &s.operands {
+                last_use[o] = Some(si);
+            }
+        }
+        for (si, s) in final_steps.iter_mut().enumerate() {
+            let mut frees: Vec<usize> = s
+                .operands
+                .iter()
+                .copied()
+                .filter(|&o| last_use[o] == Some(si) && !c.root_slots[o])
+                .collect();
+            frees.sort_unstable();
+            frees.dedup();
+            s.frees = frees;
+        }
+
+        Ok(ExecPlan {
+            module: Arc::clone(module),
+            steps: final_steps,
+            n_params: entry.params.len(),
+            n_slots: n,
+            root,
+            opts,
+        })
+    }
+}
+
+/// Lower one instruction to its pre-fusion step.
+fn lower_instr(c: &Compiler<'_>, i: usize) -> Result<PlanStep> {
+    let ins = &c.entry.instrs[i];
+    let dims = ins.shape.dims.clone();
+    let numel: usize = dims.iter().product();
+    let (op, kind): (StepOp, &'static str) = match &ins.op {
+        Op::Parameter(p) => (StepOp::Param(*p), "param"),
+        Op::ConstF32(v) => {
+            (StepOp::Const(Arc::new(Value::f32(dims.clone(), vec![*v; numel]))), "const")
+        }
+        Op::ConstS32(v) => {
+            (StepOp::Const(Arc::new(Value::i32(dims.clone(), vec![*v; numel]))), "const")
+        }
+        Op::ConstU32(v) => (
+            StepOp::Const(Arc::new(Value { dims: dims.clone(), buf: Buf::U32(vec![*v; numel]) })),
+            "const",
+        ),
+        Op::ConstU64(v) => {
+            (StepOp::Const(Arc::new(Value::u64(dims.clone(), vec![*v; numel]))), "const")
+        }
+        Op::ConstPred(v) => (
+            StepOp::Const(Arc::new(Value {
+                dims: dims.clone(),
+                buf: Buf::Pred(vec![*v; numel]),
+            })),
+            "const",
+        ),
+        Op::Iota { dim } => (
+            StepOp::Const(Arc::new(eval::eval_iota(*dim, ins.shape.ty, dims.clone())?)),
+            "const",
+        ),
+        Op::Convert => (StepOp::Convert, "convert"),
+        Op::Unary(u) => (StepOp::Unary(*u), "unary"),
+        Op::Binary(b) => (StepOp::Binary(*b), "binary"),
+        Op::Compare(d) => (StepOp::Compare(*d), "compare"),
+        Op::Select => (StepOp::Select, "select"),
+        Op::Dot(d) => (StepOp::Dot(lower_dot(c, i, d)?), "dot"),
+        Op::Reshape => {
+            let in_numel: usize = c.dims(c.ops[i][0]).iter().product();
+            if in_numel != numel {
+                bail!("reshape numel mismatch: {:?} -> {dims:?}", c.dims(c.ops[i][0]));
+            }
+            (StepOp::Reshape, "reshape")
+        }
+        Op::Broadcast(mapping) => {
+            (StepOp::Broadcast(lower_broadcast(c, i, mapping, &dims)?), "broadcast")
+        }
+        Op::Transpose(p) => (StepOp::Transpose(p.clone()), "transpose"),
+        Op::Slice(r) => (StepOp::Slice(r.clone()), "slice"),
+        Op::Concatenate(d) => (StepOp::Concat(*d), "concat"),
+        Op::Gather(g) => (StepOp::Gather(g.clone()), "gather"),
+        Op::Reduce { dims: rd, to_apply } => {
+            let comp = c
+                .module
+                .computations
+                .get(to_apply)
+                .with_context(|| format!("reduce body {to_apply:?} missing"))?;
+            let op = eval::reducer_of(comp)?;
+            let in_dims = c.dims(c.ops[i][0]);
+            let last_axis = rd.len() == 1
+                && !in_dims.is_empty()
+                && rd[0] == in_dims.len() - 1
+                && in_dims[in_dims.len() - 1] > 0
+                && ins.shape.ty == PrimType::F32
+                && matches!(op, BinOp::Add | BinOp::Max | BinOp::Min);
+            (StepOp::Reduce(ReducePlan { red_dims: rd.clone(), op, last_axis }), "reduce")
+        }
+        Op::DynamicUpdateSlice => (StepOp::Dus, "dus"),
+        Op::DynamicSlice(s) => (StepOp::DynamicSlice(s.clone()), "dynamic-slice"),
+        Op::RngBitGenerator => (StepOp::Rng, "rng"),
+        Op::GetTupleElement(k) => (StepOp::Gte(*k), "gte"),
+        Op::Tuple => (StepOp::Tuple, "tuple"),
+    };
+    Ok(PlanStep {
+        op,
+        operands: c.ops[i].clone(),
+        out: i,
+        dims,
+        ty: ins.shape.ty,
+        kind,
+        frees: Vec::new(),
+        instr: i,
+    })
+}
+
+fn lower_dot(c: &Compiler<'_>, i: usize, d: &DotDims) -> Result<DotPlan> {
+    let lhs_dims = c.dims(c.ops[i][0]).to_vec();
+    let rhs_dims = c.dims(c.ops[i][1]).to_vec();
+    let lay = match layout::dot_layout(&lhs_dims, &rhs_dims, d) {
+        Ok(l) => l,
+        Err(e) => bail!("dot: {e}"),
+    };
+    if lay.out_dims != c.dims(i) {
+        bail!("dot output shape {:?} != computed {:?}", c.dims(i), lay.out_dims);
+    }
+    let lhs = PackPlan::new(
+        &lhs_dims,
+        [d.lhs_batch.as_slice(), lay.lhs_free.as_slice(), d.lhs_contract.as_slice()],
+    );
+    let rhs = PackPlan::new(
+        &rhs_dims,
+        [d.rhs_batch.as_slice(), d.rhs_contract.as_slice(), lay.rhs_free.as_slice()],
+    );
+    Ok(DotPlan {
+        lhs_dims,
+        rhs_dims,
+        bsz: lay.bsz(),
+        m: lay.m(),
+        k: lay.k(),
+        n: lay.n(),
+        lhs,
+        rhs,
+    })
+}
+
+fn lower_broadcast(
+    c: &Compiler<'_>,
+    i: usize,
+    mapping: &[usize],
+    out_dims: &[usize],
+) -> Result<BroadcastPlan> {
+    let in_dims = c.dims(c.ops[i][0]);
+    if mapping.len() != in_dims.len() {
+        bail!("broadcast dims {mapping:?} rank-mismatch input {in_dims:?}");
+    }
+    let in_st = strides(in_dims);
+    let mut eff = vec![0usize; out_dims.len()];
+    let mut used = vec![false; out_dims.len()];
+    for (in_d, &out_d) in mapping.iter().enumerate() {
+        if out_d >= out_dims.len() || in_dims[in_d] != out_dims[out_d] {
+            bail!("broadcast mapping {mapping:?}: input {in_dims:?} -> output {out_dims:?}");
+        }
+        if std::mem::replace(&mut used[out_d], true) {
+            bail!("broadcast mapping {mapping:?} repeats output dim {out_d}");
+        }
+        eff[out_d] = in_st[in_d];
+    }
+    let outer_st = if out_dims.is_empty() {
+        Vec::new()
+    } else {
+        strides(&out_dims[..out_dims.len() - 1])
+    };
+    Ok(BroadcastPlan { mapping: mapping.to_vec(), eff, outer_st })
+}
+
+// ---------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------
+
+fn slot_one<'s>(slots: &'s [SlotVal], i: usize) -> Result<&'s Arc<Value>> {
+    match &slots[i] {
+        SlotVal::One(a) => Ok(a),
+        SlotVal::Tuple(_) => bail!("slot {i} holds a tuple where an array was expected"),
+        SlotVal::Empty => bail!("slot {i} read after free (plan liveness bug)"),
+    }
+}
+
+/// Take the value out of `slot` for in-place reuse — only when this
+/// step is its last use and the Arc uniquely owns the buffer.
+fn take_dying_unique(slots: &mut [SlotVal], slot: usize, frees: &[usize]) -> Option<Value> {
+    if !frees.contains(&slot) {
+        return None;
+    }
+    match std::mem::replace(&mut slots[slot], SlotVal::Empty) {
+        SlotVal::One(a) => match Arc::try_unwrap(a) {
+            Ok(v) => Some(v),
+            Err(a) => {
+                slots[slot] = SlotVal::One(a);
+                None
+            }
+        },
+        other => {
+            slots[slot] = other;
+            None
+        }
+    }
+}
+
+/// Split `out` into row chunks and run `f(first_row, chunk)` on up to
+/// `threads` scoped workers. Rows never split, so per-row accumulation
+/// order — and therefore every output bit — is thread-count-invariant.
+fn par_rows<F>(out: &mut [f32], row_w: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if row_w == 0 || out.is_empty() {
+        return;
+    }
+    let rows = out.len() / row_w;
+    if threads <= 1 || rows < 2 {
+        f(0, out);
+        return;
+    }
+    let t = threads.min(rows);
+    let per = rows.div_ceil(t);
+    std::thread::scope(|s| {
+        let fr = &f;
+        let mut rest = out;
+        let mut r0 = 0usize;
+        while rest.len() > per * row_w {
+            let (chunk, tail) = rest.split_at_mut(per * row_w);
+            s.spawn(move || fr(r0, chunk));
+            r0 += per;
+            rest = tail;
+        }
+        fr(r0, rest);
+    });
+}
+
+/// Fold each contiguous `k`-row of `data` into one output element,
+/// four rows in flight for ILP. Per-row fold order is strictly
+/// ascending — bit-identical to the naive reference.
+fn fold_rows(data: &[f32], k: usize, init: f32, apply: fn(f32, f32) -> f32, out: &mut [f32]) {
+    let rows = out.len();
+    let mut r = 0usize;
+    while r + 4 <= rows {
+        let b = r * k;
+        let (mut a0, mut a1, mut a2, mut a3) = (init, init, init, init);
+        let (r0, r1) = (&data[b..b + k], &data[b + k..b + 2 * k]);
+        let (r2, r3) = (&data[b + 2 * k..b + 3 * k], &data[b + 3 * k..b + 4 * k]);
+        for (((&x0, &x1), &x2), &x3) in r0.iter().zip(r1).zip(r2).zip(r3) {
+            a0 = apply(a0, x0);
+            a1 = apply(a1, x1);
+            a2 = apply(a2, x2);
+            a3 = apply(a3, x3);
+        }
+        out[r] = a0;
+        out[r + 1] = a1;
+        out[r + 2] = a2;
+        out[r + 3] = a3;
+        r += 4;
+    }
+    while r < rows {
+        let mut acc = init;
+        for &x in &data[r * k..(r + 1) * k] {
+            acc = apply(acc, x);
+        }
+        out[r] = acc;
+        r += 1;
+    }
+}
+
+fn unary_in_place(v: &mut [f32], u: UnOp) {
+    match u {
+        UnOp::Exp => v.iter_mut().for_each(|x| *x = x.exp()),
+        UnOp::Tanh => v.iter_mut().for_each(|x| *x = x.tanh()),
+        UnOp::Neg => v.iter_mut().for_each(|x| *x = -*x),
+    }
+}
+
+fn binary_in_place(a: &mut [f32], b: &[f32], op: BinOp) -> Result<()> {
+    let f: fn(f32, f32) -> f32 = match op {
+        BinOp::Add => |x, y| x + y,
+        BinOp::Sub => |x, y| x - y,
+        BinOp::Mul => |x, y| x * y,
+        BinOp::Div => |x, y| x / y,
+        BinOp::Max => f32::max,
+        BinOp::Min => f32::min,
+        BinOp::And | BinOp::Or => bail!("logical op on f32"),
+    };
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x = f(*x, y);
+    }
+    Ok(())
+}
+
+impl ExecPlan {
+    fn run(&self, args: &[Arc<Value>], mut times: Option<&mut OpTimes>) -> Result<Vec<Value>> {
+        if args.len() != self.n_params {
+            bail!("plan wants {} parameters, got {}", self.n_params, args.len());
+        }
+        let entry = self.module.entry_computation();
+        let mut slots: Vec<SlotVal> = (0..self.n_slots).map(|_| SlotVal::Empty).collect();
+        let mut arena = Arena::default();
+        for step in &self.steps {
+            let _sp = obs::span("backend.op").label(step.kind);
+            let t0 = times.as_ref().map(|_| Instant::now());
+            let v = self
+                .run_step(step, args, &mut slots, &mut arena, entry)
+                .with_context(|| format!("step {:?}", entry.instrs[step.instr].name))?;
+            slots[step.out] = v;
+            for &f in &step.frees {
+                if let SlotVal::One(a) = std::mem::replace(&mut slots[f], SlotVal::Empty) {
+                    if let Ok(val) = Arc::try_unwrap(a) {
+                        arena.give(val);
+                    }
+                }
+            }
+            if let (Some(t0), Some(times)) = (t0, times.as_deref_mut()) {
+                let e = times.entry(step.kind).or_default();
+                e.count += 1;
+                e.total_ns += t0.elapsed().as_nanos() as u64;
+            }
+        }
+        match &self.root {
+            Root::Slot(s) => match std::mem::replace(&mut slots[*s], SlotVal::Empty) {
+                SlotVal::One(a) => Ok(vec![Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone())]),
+                SlotVal::Tuple(parts) => Ok(parts
+                    .into_iter()
+                    .map(|a| Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone()))
+                    .collect()),
+                SlotVal::Empty => bail!("root slot empty after execution"),
+            },
+            Root::Parts(ps) => ps
+                .iter()
+                .map(|&p| slot_one(&slots, p).map(|a| (**a).clone()))
+                .collect(),
+        }
+    }
+
+    fn run_step(
+        &self,
+        step: &PlanStep,
+        args: &[Arc<Value>],
+        slots: &mut [SlotVal],
+        arena: &mut Arena,
+        entry: &Computation,
+    ) -> Result<SlotVal> {
+        let one = |v: Value| SlotVal::One(Arc::new(v));
+        Ok(match &step.op {
+            StepOp::Param(p) => {
+                let a = args.get(*p).with_context(|| format!("parameter {p} out of range"))?;
+                eval::check_shape(a, &entry.instrs[step.instr].shape, "parameter")?;
+                SlotVal::One(Arc::clone(a))
+            }
+            StepOp::Const(v) => SlotVal::One(Arc::clone(v)),
+            StepOp::Fused(f) => one(self.run_fused(f, step, slots, arena)?),
+            StepOp::Unary(u) => {
+                if step.ty == PrimType::F32 {
+                    if let Some(mut v) = take_dying_unique(slots, step.operands[0], &step.frees) {
+                        if let Buf::F32(d) = &mut v.buf {
+                            unary_in_place(d, *u);
+                            return Ok(SlotVal::One(Arc::new(v)));
+                        }
+                        slots[step.operands[0]] = SlotVal::One(Arc::new(v));
+                    }
+                }
+                let a = slot_one(slots, step.operands[0])?;
+                one(eval::eval_unary(a, *u, step.dims.clone())?)
+            }
+            StepOp::Binary(b) => {
+                if step.ty == PrimType::F32 && step.operands[0] != step.operands[1] {
+                    if let Some(mut v) = take_dying_unique(slots, step.operands[0], &step.frees) {
+                        let done = {
+                            let rhs = slot_one(slots, step.operands[1])?;
+                            match (&mut v.buf, &rhs.buf) {
+                                (Buf::F32(a), Buf::F32(c))
+                                    if rhs.dims == v.dims && c.len() == a.len() =>
+                                {
+                                    binary_in_place(a, c, *b)?;
+                                    true
+                                }
+                                _ => false,
+                            }
+                        };
+                        if done {
+                            return Ok(SlotVal::One(Arc::new(v)));
+                        }
+                        slots[step.operands[0]] = SlotVal::One(Arc::new(v));
+                    }
+                }
+                let x = slot_one(slots, step.operands[0])?;
+                let y = slot_one(slots, step.operands[1])?;
+                one(eval::eval_binary(x, y, *b, step.dims.clone())?)
+            }
+            StepOp::Compare(d) => {
+                let x = slot_one(slots, step.operands[0])?;
+                let y = slot_one(slots, step.operands[1])?;
+                one(eval::eval_compare(x, y, *d, step.dims.clone())?)
+            }
+            StepOp::Select => {
+                let p = slot_one(slots, step.operands[0])?;
+                let t = slot_one(slots, step.operands[1])?;
+                let f = slot_one(slots, step.operands[2])?;
+                one(eval::eval_select(p, t, f, step.dims.clone())?)
+            }
+            StepOp::Convert => {
+                let a = slot_one(slots, step.operands[0])?;
+                one(eval::eval_convert(a, step.ty, step.dims.clone())?)
+            }
+            StepOp::Dot(dp) => one(self.run_dot(dp, step, slots, arena)?),
+            StepOp::Reduce(rp) => one(self.run_reduce(rp, step, slots, arena)?),
+            StepOp::Broadcast(bp) => one(self.run_broadcast(bp, step, slots, arena)?),
+            StepOp::Reshape => {
+                let numel: usize = step.dims.iter().product();
+                if let Some(mut v) = take_dying_unique(slots, step.operands[0], &step.frees) {
+                    if v.buf.len() == numel {
+                        v.dims = step.dims.clone();
+                        return Ok(SlotVal::One(Arc::new(v)));
+                    }
+                    slots[step.operands[0]] = SlotVal::One(Arc::new(v));
+                }
+                let a = slot_one(slots, step.operands[0])?;
+                if a.numel() != numel {
+                    bail!("reshape numel mismatch: {:?} -> {:?}", a.dims, step.dims);
+                }
+                one(Value { dims: step.dims.clone(), buf: a.buf.clone() })
+            }
+            StepOp::Transpose(perm) => {
+                let a = slot_one(slots, step.operands[0])?;
+                one(eval::eval_transpose(a, perm, step.dims.clone())?)
+            }
+            StepOp::Slice(ranges) => {
+                let a = slot_one(slots, step.operands[0])?;
+                one(eval::eval_slice(a, ranges, step.dims.clone())?)
+            }
+            StepOp::Concat(dim) => {
+                let vals: Vec<&Value> = step
+                    .operands
+                    .iter()
+                    .map(|&o| slot_one(slots, o).map(|a| &**a))
+                    .collect::<Result<Vec<_>>>()?;
+                one(eval::eval_concat(&vals, *dim, step.dims.clone())?)
+            }
+            StepOp::Gather(g) => {
+                let a = slot_one(slots, step.operands[0])?;
+                let idx = slot_one(slots, step.operands[1])?;
+                one(eval::eval_gather(a, idx, g, step.dims.clone())?)
+            }
+            StepOp::Dus => {
+                let starts = scalar_starts(slots, &step.operands[2..], "dus")?;
+                let a = slot_one(slots, step.operands[0])?;
+                let u = slot_one(slots, step.operands[1])?;
+                one(eval::eval_dus(a, u, &starts)?)
+            }
+            StepOp::DynamicSlice(sizes) => {
+                let starts = scalar_starts(slots, &step.operands[1..], "dynamic-slice")?;
+                let a = slot_one(slots, step.operands[0])?;
+                one(eval::eval_dynamic_slice(a, &starts, sizes, step.dims.clone())?)
+            }
+            StepOp::Rng => {
+                let state = slot_one(slots, step.operands[0])?;
+                let (new_state, bits) =
+                    eval::eval_rng_threefry(state, &entry.instrs[step.instr])?;
+                SlotVal::Tuple(vec![Arc::new(new_state), Arc::new(bits)])
+            }
+            StepOp::Tuple => {
+                let parts: Vec<Arc<Value>> = step
+                    .operands
+                    .iter()
+                    .map(|&o| slot_one(slots, o).map(Arc::clone))
+                    .collect::<Result<Vec<_>>>()?;
+                SlotVal::Tuple(parts)
+            }
+            StepOp::Gte(k) => match &slots[step.operands[0]] {
+                SlotVal::Tuple(parts) => SlotVal::One(Arc::clone(
+                    parts
+                        .get(*k)
+                        .with_context(|| format!("tuple index {k} out of range"))?,
+                )),
+                _ => bail!("get-tuple-element source is not a tuple"),
+            },
+        })
+    }
+
+    fn run_fused(
+        &self,
+        f: &Fused,
+        step: &PlanStep,
+        slots: &[SlotVal],
+        arena: &mut Arena,
+    ) -> Result<Value> {
+        enum Src<'a> {
+            F(&'a [f32]),
+            P(&'a [bool]),
+        }
+        let n: usize = step.dims.iter().product();
+        let mut out_f = if f.out_pred { Vec::new() } else { arena.take_f32(n, 0.0) };
+        let mut out_p: Vec<bool> = if f.out_pred { Vec::with_capacity(n) } else { Vec::new() };
+        let mut regs: Vec<Vec<f32>> =
+            (0..f.prog.len()).map(|_| arena.take_f32(CHUNK, 0.0)).collect();
+        {
+            let mut srcs: Vec<Src<'_>> = Vec::with_capacity(f.loads.len());
+            for &(slot, lt) in &f.loads {
+                let v = slot_one(slots, slot)?;
+                if v.numel() != n {
+                    bail!("fused load shape mismatch: {:?} vs {:?}", v.dims, step.dims);
+                }
+                match (lt, &v.buf) {
+                    (LoadTy::F32, Buf::F32(d)) => srcs.push(Src::F(d)),
+                    (LoadTy::Pred, Buf::Pred(d)) => srcs.push(Src::P(d)),
+                    (_, b) => bail!("fused load dtype mismatch: {:?}", b.ty()),
+                }
+            }
+            let mut start = 0usize;
+            while start < n {
+                let len = CHUNK.min(n - start);
+                for i in 0..f.prog.len() {
+                    let (prev, cur) = regs.split_at_mut(i);
+                    let r = &mut cur[0][..len];
+                    match f.prog[i] {
+                        FOp::Load(j) => match srcs[j] {
+                            Src::F(s) => r.copy_from_slice(&s[start..start + len]),
+                            Src::P(s) => {
+                                for (d, &b) in r.iter_mut().zip(&s[start..start + len]) {
+                                    *d = if b { 1.0 } else { 0.0 };
+                                }
+                            }
+                        },
+                        FOp::Imm(v) => r.fill(v),
+                        FOp::Un(u, a) => {
+                            let av = &prev[a][..len];
+                            match u {
+                                UnOp::Exp => {
+                                    for (d, &x) in r.iter_mut().zip(av) {
+                                        *d = x.exp();
+                                    }
+                                }
+                                UnOp::Tanh => {
+                                    for (d, &x) in r.iter_mut().zip(av) {
+                                        *d = x.tanh();
+                                    }
+                                }
+                                UnOp::Neg => {
+                                    for (d, &x) in r.iter_mut().zip(av) {
+                                        *d = -x;
+                                    }
+                                }
+                            }
+                        }
+                        FOp::Bin(b, x, y) => {
+                            let (xv, yv) = (&prev[x][..len], &prev[y][..len]);
+                            let g: fn(f32, f32) -> f32 = match b {
+                                BinOp::Add => |p, q| p + q,
+                                BinOp::Sub => |p, q| p - q,
+                                BinOp::Mul => |p, q| p * q,
+                                BinOp::Div => |p, q| p / q,
+                                BinOp::Max => f32::max,
+                                BinOp::Min => f32::min,
+                                // masks are 0.0/1.0; nonzero == true
+                                BinOp::And => {
+                                    |p, q| if p != 0.0 && q != 0.0 { 1.0 } else { 0.0 }
+                                }
+                                BinOp::Or => |p, q| if p != 0.0 || q != 0.0 { 1.0 } else { 0.0 },
+                            };
+                            for ((d, &p), &q) in r.iter_mut().zip(xv).zip(yv) {
+                                *d = g(p, q);
+                            }
+                        }
+                        FOp::Cmp(dir, x, y) => {
+                            let (xv, yv) = (&prev[x][..len], &prev[y][..len]);
+                            let g: fn(f32, f32) -> bool = match dir {
+                                CmpDir::Eq => |p, q| p == q,
+                                CmpDir::Ne => |p, q| p != q,
+                                CmpDir::Lt => |p, q| p < q,
+                                CmpDir::Le => |p, q| p <= q,
+                                CmpDir::Gt => |p, q| p > q,
+                                CmpDir::Ge => |p, q| p >= q,
+                            };
+                            for ((d, &p), &q) in r.iter_mut().zip(xv).zip(yv) {
+                                *d = if g(p, q) { 1.0 } else { 0.0 };
+                            }
+                        }
+                        FOp::Sel(cr, tr, er) => {
+                            let (cv, tv, ev) =
+                                (&prev[cr][..len], &prev[tr][..len], &prev[er][..len]);
+                            for (((d, &cc), &tt), &ee) in
+                                r.iter_mut().zip(cv).zip(tv).zip(ev)
+                            {
+                                *d = if cc != 0.0 { tt } else { ee };
+                            }
+                        }
+                        FOp::Cvt(a) => r.copy_from_slice(&prev[a][..len]),
+                    }
+                }
+                let last = &regs[f.prog.len() - 1][..len];
+                if f.out_pred {
+                    out_p.extend(last.iter().map(|&x| x != 0.0));
+                } else {
+                    out_f[start..start + len].copy_from_slice(last);
+                }
+                start += len;
+            }
+        }
+        for r in regs {
+            arena.give_f32(r);
+        }
+        Ok(if f.out_pred {
+            Value { dims: step.dims.clone(), buf: Buf::Pred(out_p) }
+        } else {
+            Value { dims: step.dims.clone(), buf: Buf::F32(out_f) }
+        })
+    }
+
+    fn run_dot(
+        &self,
+        dp: &DotPlan,
+        step: &PlanStep,
+        slots: &[SlotVal],
+        arena: &mut Arena,
+    ) -> Result<Value> {
+        let (bsz, m, k, n) = (dp.bsz, dp.m, dp.k, dp.n);
+        let mut out = arena.take_f32(bsz * m * n, 0.0);
+        {
+            let lhs = slot_one(slots, step.operands[0])?;
+            let rhs = slot_one(slots, step.operands[1])?;
+            if lhs.dims != dp.lhs_dims || rhs.dims != dp.rhs_dims {
+                bail!(
+                    "dot operand shapes {:?}/{:?} differ from planned {:?}/{:?}",
+                    lhs.dims,
+                    rhs.dims,
+                    dp.lhs_dims,
+                    dp.rhs_dims
+                );
+            }
+            let a = lhs.f32s().context("dot lhs must be f32")?;
+            let b = rhs.f32s().context("dot rhs must be f32")?;
+            // the common matmul case needs no packing at all: both
+            // operands are already in blocked row-major layout
+            let pa: Cow<'_, [f32]> =
+                if dp.lhs.identity { Cow::Borrowed(a) } else { Cow::Owned(dp.lhs.pack(a)) };
+            let pb: Cow<'_, [f32]> =
+                if dp.rhs.identity { Cow::Borrowed(b) } else { Cow::Owned(dp.rhs.pack(b)) };
+            let threads =
+                if bsz * m * k * n >= PAR_MIN_DOT { self.opts.threads } else { 1 };
+            let (pa, pb) = (&*pa, &*pb);
+            par_rows(&mut out, n, threads, |r0, chunk| {
+                for (ri, orow) in chunk.chunks_mut(n).enumerate() {
+                    let r = r0 + ri;
+                    let (bb, i) = (r / m, r % m);
+                    let arow = &pa[bb * m * k + i * k..][..k];
+                    let bmat = &pb[bb * k * n..][..k * n];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        let brow = &bmat[kk * n..][..n];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            });
+        }
+        Ok(Value::f32(step.dims.clone(), out))
+    }
+
+    fn run_reduce(
+        &self,
+        rp: &ReducePlan,
+        step: &PlanStep,
+        slots: &[SlotVal],
+        arena: &mut Arena,
+    ) -> Result<Value> {
+        let a = slot_one(slots, step.operands[0])?;
+        let init = slot_one(slots, step.operands[1])?;
+        if rp.last_axis {
+            if let (Buf::F32(data), Buf::F32(iv)) = (&a.buf, &init.buf) {
+                let init_v = *iv.first().context("empty reduce init")?;
+                let k = *a.dims.last().context("reduce input is rank-0")?;
+                let n_out: usize = step.dims.iter().product();
+                let apply: fn(f32, f32) -> f32 = match rp.op {
+                    BinOp::Add => |x, y| x + y,
+                    BinOp::Max => f32::max,
+                    BinOp::Min => f32::min,
+                    other => bail!("fast reduce planned for unsupported op {other:?}"),
+                };
+                let threads =
+                    if a.numel() >= PAR_MIN_REDUCE { self.opts.threads } else { 1 };
+                // arena borrow ends before we re-borrow `a`'s data
+                let mut out = arena.take_f32(n_out, init_v);
+                par_rows(&mut out, 1, threads, |r0, chunk| {
+                    fold_rows(
+                        &data[r0 * k..r0 * k + chunk.len() * k],
+                        k,
+                        init_v,
+                        apply,
+                        chunk,
+                    );
+                });
+                return Ok(Value::f32(step.dims.clone(), out));
+            }
+        }
+        eval::eval_reduce(a, init, &rp.red_dims, rp.op, step.dims.clone())
+    }
+
+    fn run_broadcast(
+        &self,
+        bp: &BroadcastPlan,
+        step: &PlanStep,
+        slots: &[SlotVal],
+        arena: &mut Arena,
+    ) -> Result<Value> {
+        let a = slot_one(slots, step.operands[0])?;
+        let n: usize = step.dims.iter().product();
+        let rank = step.dims.len();
+        if !matches!(a.buf, Buf::F32(_)) || rank == 0 || n == 0 {
+            // non-f32/degenerate broadcasts are rare and small; the
+            // reference kernel revalidates the mapping as it goes
+            return eval::eval_broadcast(a, &bp.mapping, step.dims.clone());
+        }
+        let v = a.f32s().context("broadcast fast path expects f32")?;
+        let inner = step.dims[rank - 1];
+        let e_last = bp.eff[rank - 1];
+        let outer_dims = &step.dims[..rank - 1];
+        let mut out = arena.take_f32(n, 0.0);
+        let threads = if n >= PAR_MIN_BCAST { self.opts.threads } else { 1 };
+        par_rows(&mut out, inner.max(1), threads, |r0, chunk| {
+            for (ri, row) in chunk.chunks_mut(inner.max(1)).enumerate() {
+                let r = r0 + ri;
+                let mut base = 0usize;
+                for (d, &st) in bp.outer_st.iter().enumerate() {
+                    base += ((r / st) % outer_dims[d]) * bp.eff[d];
+                }
+                if e_last == 0 {
+                    row.fill(v[base]);
+                } else if e_last == 1 {
+                    row.copy_from_slice(&v[base..base + inner]);
+                } else {
+                    for (j, o) in row.iter_mut().enumerate() {
+                        *o = v[base + j * e_last];
+                    }
+                }
+            }
+        });
+        Ok(Value::f32(step.dims.clone(), out))
+    }
+}
+
+fn scalar_starts(slots: &[SlotVal], idx_slots: &[usize], what: &str) -> Result<Vec<i64>> {
+    let mut starts = Vec::with_capacity(idx_slots.len());
+    for (i, &s) in idx_slots.iter().enumerate() {
+        let v = slot_one(slots, s)?;
+        if !v.dims.is_empty() {
+            bail!("{what} start {i} is not a scalar: {:?}", v.dims);
+        }
+        let d = v.i32s().with_context(|| format!("{what} start index"))?;
+        starts.push(*d.first().with_context(|| format!("empty {what} start"))? as i64);
+    }
+    Ok(starts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::hlo::parser::parse_module;
+
+    fn plan_run(text: &str, args: Vec<Value>, opts: EvalOptions) -> Vec<Value> {
+        let m = Arc::new(parse_module(text).unwrap());
+        let plan = ExecPlan::compile(&m, opts).unwrap();
+        let args: Vec<Arc<Value>> = args.into_iter().map(Arc::new).collect();
+        plan.execute(&args).unwrap()
+    }
+
+    fn naive_run(text: &str, args: Vec<Value>) -> Vec<Value> {
+        let m = parse_module(text).unwrap();
+        let args: Vec<Arc<Value>> = args.into_iter().map(Arc::new).collect();
+        eval::evaluate(&m, &args).unwrap()
+    }
+
+    fn assert_bits_eq(a: &[Value], b: &[Value]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.dims, y.dims);
+            match (&x.buf, &y.buf) {
+                (Buf::F32(p), Buf::F32(q)) => {
+                    assert_eq!(p.len(), q.len());
+                    for (u, v) in p.iter().zip(q) {
+                        assert_eq!(u.to_bits(), v.to_bits());
+                    }
+                }
+                (p, q) => assert_eq!(p, q),
+            }
+        }
+    }
+
+    const SOFTMAX: &str = r#"
+HloModule t
+%red_max {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %m = f32[] maximum(%a, %b)
+}
+%red_add {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+ENTRY %main {
+  %x = f32[4,7] parameter(0)
+  %ninf = f32[] constant(-1e30)
+  %zero = f32[] constant(0)
+  %mx = f32[4] reduce(%x, %ninf), dimensions={1}, to_apply=%red_max
+  %mb = f32[4,7] broadcast(%mx), dimensions={0}
+  %sh = f32[4,7] subtract(%x, %mb)
+  %e = f32[4,7] exponential(%sh)
+  %se = f32[4] reduce(%e, %zero), dimensions={1}, to_apply=%red_add
+  %sb = f32[4,7] broadcast(%se), dimensions={0}
+  ROOT %p = f32[4,7] divide(%e, %sb)
+}
+"#;
+
+    #[test]
+    fn plan_matches_naive_softmax_bitwise() {
+        let x = Value::f32(vec![4, 7], (0..28).map(|i| (i as f32).sin() * 3.0).collect());
+        let want = naive_run(SOFTMAX, vec![x.clone()]);
+        for threads in [1, 4] {
+            for fuse in [false, true] {
+                let got = plan_run(SOFTMAX, vec![x.clone()], EvalOptions { threads, fuse });
+                assert_bits_eq(&got, &want);
+            }
+        }
+    }
+
+    #[test]
+    fn fusion_collapses_elementwise_chains() {
+        let m = Arc::new(parse_module(SOFTMAX).unwrap());
+        let fused = ExecPlan::compile(&m, EvalOptions::default()).unwrap();
+        // sub+exp fuse into one loop; div stays (its operands differ
+        // in provenance but sub/exp chain is single-use)
+        assert!(fused.count_kind("fused") >= 1, "expected at least one fused step");
+        let plain = ExecPlan::compile(&m, EvalOptions { threads: 1, fuse: false }).unwrap();
+        assert_eq!(plain.count_kind("fused"), 0);
+        assert!(fused.n_steps() < plain.n_steps());
+    }
+
+    #[test]
+    fn plan_handles_tuple_roots_and_rng() {
+        let text = r#"
+HloModule t
+ENTRY %main {
+  %state = u64[2] parameter(0)
+  %r = (u64[2], u32[6]) rng-bit-generator(%state), algorithm=rng_threefry
+  %ns = u64[2] get-tuple-element(%r), index=0
+  %bits = u32[6] get-tuple-element(%r), index=1
+  ROOT %t = (u64[2], u32[6]) tuple(%ns, %bits)
+}
+"#;
+        let st = Value::u64(vec![2], vec![42, 7]);
+        let want = naive_run(text, vec![st.clone()]);
+        let got = plan_run(text, vec![st], EvalOptions::default());
+        assert_eq!(got.len(), 2);
+        for (x, y) in got.iter().zip(&want) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn pred_output_fusion_materializes_bools() {
+        // compare feeding and: fused chain with a pred output
+        let text = r#"
+HloModule t
+ENTRY %main {
+  %x = f32[8] parameter(0)
+  %y = f32[8] parameter(1)
+  %z = f32[8] parameter(2)
+  %p = pred[8] compare(%x, %y), direction=LT
+  %q = pred[8] compare(%y, %z), direction=LT
+  ROOT %b = pred[8] and(%p, %q)
+}
+"#;
+        let x = Value::f32(vec![8], (0..8).map(|i| i as f32).collect());
+        let y = Value::f32(vec![8], (0..8).map(|i| (7 - i) as f32).collect());
+        let z = Value::f32(vec![8], vec![5.0; 8]);
+        let want = naive_run(text, vec![x.clone(), y.clone(), z.clone()]);
+        let got = plan_run(text, vec![x, y, z], EvalOptions::default());
+        assert_bits_eq(&got, &want);
+    }
+
+    #[test]
+    fn dot_identity_pack_and_parallel_rows_are_bit_identical() {
+        let text = r#"
+HloModule t
+ENTRY %main {
+  %a = f32[33,17] parameter(0)
+  %b = f32[17,29] parameter(1)
+  ROOT %c = f32[33,29] dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"#;
+        let a = Value::f32(vec![33, 17], (0..33 * 17).map(|i| (i as f32).cos()).collect());
+        let b = Value::f32(vec![17, 29], (0..17 * 29).map(|i| (i as f32).sin()).collect());
+        let want = naive_run(text, vec![a.clone(), b.clone()]);
+        for threads in [1, 4] {
+            let got =
+                plan_run(text, vec![a.clone(), b.clone()], EvalOptions { threads, fuse: true });
+            assert_bits_eq(&got, &want);
+        }
+    }
+
+    #[test]
+    fn multi_use_values_survive_arena_recycling() {
+        // %e is used twice (numerator and reduce input): the arena must
+        // not recycle it until its true last use
+        let text = r#"
+HloModule t
+%red_add {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+ENTRY %main {
+  %x = f32[3,5] parameter(0)
+  %e = f32[3,5] exponential(%x)
+  %zero = f32[] constant(0)
+  %se = f32[3] reduce(%e, %zero), dimensions={1}, to_apply=%red_add
+  %sb = f32[3,5] broadcast(%se), dimensions={0}
+  ROOT %p = f32[3,5] divide(%e, %sb)
+}
+"#;
+        let x = Value::f32(vec![3, 5], (0..15).map(|i| (i as f32) * 0.3 - 2.0).collect());
+        let want = naive_run(text, vec![x.clone()]);
+        let got = plan_run(text, vec![x], EvalOptions::default());
+        assert_bits_eq(&got, &want);
+    }
+
+    #[test]
+    fn options_read_env() {
+        // default when unset
+        std::env::remove_var("FE_INTERP_THREADS");
+        std::env::remove_var("FE_INTERP_FUSE");
+        assert_eq!(EvalOptions::from_env(), EvalOptions { threads: 1, fuse: true });
+        std::env::set_var("FE_INTERP_THREADS", "4");
+        std::env::set_var("FE_INTERP_FUSE", "0");
+        assert_eq!(EvalOptions::from_env(), EvalOptions { threads: 4, fuse: false });
+        std::env::remove_var("FE_INTERP_THREADS");
+        std::env::remove_var("FE_INTERP_FUSE");
+    }
+}

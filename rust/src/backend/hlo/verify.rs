@@ -31,6 +31,7 @@ use anyhow::{bail, Result};
 use crate::runtime::manifest::ExecManifest;
 use crate::runtime::tensor::Dtype;
 
+use super::layout;
 use super::parser::{BinOp, Computation, HloModule, Instr, Op, PrimType, Shape, UnOp};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -602,58 +603,18 @@ fn check_dot(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
         ck.err(ins, "dtype/dot", format!("dot operands must be f32, got {:?}/{:?}", l.ty, r.ty));
         return;
     }
-    if d.lhs_batch.len() != d.rhs_batch.len() || d.lhs_contract.len() != d.rhs_contract.len() {
-        ck.err(ins, "attr/dot", "dimension-number arity mismatch".to_string());
-        return;
-    }
-    let lhs_oob = d.lhs_batch.iter().chain(&d.lhs_contract).any(|&i| i >= l.dims.len());
-    let rhs_oob = d.rhs_batch.iter().chain(&d.rhs_contract).any(|&i| i >= r.dims.len());
-    if lhs_oob || rhs_oob {
-        ck.err(
-            ins,
-            "attr/dot",
-            format!(
-                "dimension numbers out of range for operand ranks {}/{}",
-                l.dims.len(),
-                r.dims.len()
-            ),
-        );
-        return;
-    }
-    if d.lhs_batch.iter().any(|i| d.lhs_contract.contains(i))
-        || d.rhs_batch.iter().any(|i| d.rhs_contract.contains(i))
-    {
-        ck.err(ins, "attr/dot", "batch and contracting dims overlap".to_string());
-        return;
-    }
-    for (&a, &b) in d.lhs_contract.iter().zip(&d.rhs_contract) {
-        if l.dims[a] != r.dims[b] {
-            ck.err(
-                ins,
-                "shape/dot",
-                format!("contracting dims differ: {} vs {}", l.dims[a], r.dims[b]),
-            );
-            return;
+    // dimension-number validation and the output-shape formula live in
+    // `layout::dot_layout`, shared with the evaluator and plan compiler;
+    // its "attr"/"shape" split maps onto the diagnostic rules here
+    match layout::dot_layout(&l.dims, &r.dims, d) {
+        Err(e) => {
+            let rule = if e.rule == "attr" { "attr/dot" } else { "shape/dot" };
+            ck.err(ins, rule, e.msg);
+        }
+        Ok(lay) => {
+            shape_eq(ck, ins, "shape/dot", &Shape { ty: PrimType::F32, dims: lay.out_dims });
         }
     }
-    for (&a, &b) in d.lhs_batch.iter().zip(&d.rhs_batch) {
-        if l.dims[a] != r.dims[b] {
-            ck.err(ins, "shape/dot", format!("batch dims differ: {} vs {}", l.dims[a], r.dims[b]));
-            return;
-        }
-    }
-    let mut dims: Vec<usize> = d.lhs_batch.iter().map(|&i| l.dims[i]).collect();
-    dims.extend(
-        (0..l.dims.len())
-            .filter(|i| !d.lhs_batch.contains(i) && !d.lhs_contract.contains(i))
-            .map(|i| l.dims[i]),
-    );
-    dims.extend(
-        (0..r.dims.len())
-            .filter(|i| !d.rhs_batch.contains(i) && !d.rhs_contract.contains(i))
-            .map(|i| r.dims[i]),
-    );
-    shape_eq(ck, ins, "shape/dot", &Shape { ty: PrimType::F32, dims });
 }
 
 fn check_reshape(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
@@ -749,23 +710,10 @@ fn check_slice(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
     if a.ty != ins.shape.ty {
         ck.err(ins, "dtype/slice", format!("dtype {:?} -> {:?}", a.ty, ins.shape.ty));
     }
-    if ranges.len() != a.dims.len() {
-        ck.err(ins, "attr/slice", format!("{} ranges for rank {}", ranges.len(), a.dims.len()));
-        return;
+    match layout::slice_output_dims(&a.dims, ranges) {
+        Err(msg) => ck.err(ins, "attr/slice", msg),
+        Ok(dims) => shape_eq(ck, ins, "shape/slice", &Shape { ty: a.ty, dims }),
     }
-    let mut dims = Vec::with_capacity(ranges.len());
-    for (d, &(s, l, st)) in ranges.iter().enumerate() {
-        if st == 0 || l > a.dims[d] || s > l {
-            ck.err(
-                ins,
-                "attr/slice",
-                format!("bad range {:?} for dim {d} of {:?}", ranges[d], a.dims),
-            );
-            return;
-        }
-        dims.push((l - s).div_ceil(st));
-    }
-    shape_eq(ck, ins, "shape/slice", &Shape { ty: a.ty, dims });
 }
 
 fn check_concat(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
@@ -996,10 +944,7 @@ fn check_reduce(ck: &mut Ck<'_>, ins: &Instr, ops: &[&Instr]) {
             }
         }
     }
-    let dims: Vec<usize> = (0..a.dims.len())
-        .filter(|d| !red_dims.contains(d))
-        .map(|d| a.dims[d])
-        .collect();
+    let dims = layout::reduce_output_dims(&a.dims, red_dims);
     shape_eq(ck, ins, "shape/reduce", &Shape { ty: a.ty, dims });
 }
 

@@ -1,14 +1,23 @@
-//! HLO interpreter backend: parse the `.hlo.txt` executable once at
-//! "compile" time, evaluate it on the CPU at call time.
+//! HLO interpreter backend: parse, verify, and *plan* the `.hlo.txt`
+//! executable once at "compile" time, then run the compiled
+//! [`ExecPlan`] at call time.
 //!
 //! This is the backend that makes the artifact-gated integration tests
 //! and benches run in CI: no `xla_extension`, no network, deterministic
-//! arithmetic (fixed accumulation order in `backend::hlo::eval`), so a
-//! fixed fixture seed reproduces greedy decodes bit-for-bit.
+//! arithmetic (fixed accumulation order in `backend::hlo::{eval,plan}`),
+//! so a fixed fixture seed reproduces greedy decodes bit-for-bit.
+//!
+//! Compiled plans are cached per executable name (keyed by a hash of
+//! the HLO text), so engine restarts and bench sweeps that re-`compile`
+//! the same artifact skip the parse + verify + plan work. Environment
+//! knobs: `FE_INTERP_THREADS` / `FE_INTERP_FUSE` (see
+//! [`EvalOptions::from_env`]) and `FE_INTERP_OPT=0` to fall back to the
+//! naive reference evaluator (the plan is property-tested bit-identical
+//! to it, so outputs do not change — only speed).
 
+use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -16,16 +25,41 @@ use crate::runtime::manifest::ExecManifest;
 use crate::runtime::tensor::{HostTensor, TensorData};
 
 use super::hlo::eval::{evaluate, Buf, Value};
-use super::hlo::parser::{parse_module, HloModule};
+use super::hlo::parser::parse_module;
+use super::hlo::plan::{EvalOptions, ExecPlan};
 use super::hlo::verify;
 use super::{Backend, BackendBound, BackendExec};
 
-#[derive(Default)]
-pub struct HloInterpreter;
+/// FNV-1a over the HLO text: cheap cache-invalidation fingerprint so a
+/// regenerated fixture with the same executable name recompiles.
+fn text_hash(text: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+struct CachedPlan {
+    text_hash: u64,
+    plan: Arc<ExecPlan>,
+}
+
+pub struct HloInterpreter {
+    opts: EvalOptions,
+    plans: Mutex<HashMap<String, CachedPlan>>,
+}
+
+impl Default for HloInterpreter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 impl HloInterpreter {
     pub fn new() -> HloInterpreter {
-        HloInterpreter
+        HloInterpreter { opts: EvalOptions::from_env(), plans: Mutex::new(HashMap::new()) }
     }
 }
 
@@ -55,6 +89,21 @@ impl Backend for HloInterpreter {
     fn compile(&self, hlo_path: &Path, manifest: &ExecManifest) -> Result<Box<dyn BackendExec>> {
         let text = std::fs::read_to_string(hlo_path)
             .with_context(|| format!("read {hlo_path:?}"))?;
+        let hash = text_hash(&text);
+        {
+            let plans = match self.plans.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            if let Some(c) = plans.get(&manifest.name) {
+                if c.text_hash == hash {
+                    return Ok(Box::new(InterpExec {
+                        plan: Arc::clone(&c.plan),
+                        name: manifest.name.clone(),
+                    }));
+                }
+            }
+        }
         let module =
             parse_module(&text).with_context(|| format!("parse {hlo_path:?}"))?;
         // statically verify the program and cross-check the manifest
@@ -63,12 +112,25 @@ impl Backend for HloInterpreter {
         let mut diags = verify::verify_module(&module);
         diags.extend(verify::verify_manifest(&module, manifest));
         verify::ensure_ok(&manifest.name, &diags)?;
-        Ok(Box::new(InterpExec { module: Arc::new(module), name: manifest.name.clone() }))
+        let module = Arc::new(module);
+        let plan = Arc::new(
+            ExecPlan::compile(&module, self.opts)
+                .with_context(|| format!("plan {hlo_path:?}"))?,
+        );
+        let mut plans = match self.plans.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        plans.insert(
+            manifest.name.clone(),
+            CachedPlan { text_hash: hash, plan: Arc::clone(&plan) },
+        );
+        Ok(Box::new(InterpExec { plan, name: manifest.name.clone() }))
     }
 }
 
 pub struct InterpExec {
-    module: Arc<HloModule>,
+    plan: Arc<ExecPlan>,
     name: String,
 }
 
@@ -76,20 +138,25 @@ impl BackendExec for InterpExec {
     fn bind(&self, weights: &[Option<&HostTensor>]) -> Result<Box<dyn BackendBound>> {
         let pinned = weights
             .iter()
-            .map(|w| w.map(|t| Rc::new(to_value(t))))
+            .map(|w| w.map(|t| Arc::new(to_value(t))))
             .collect();
         Ok(Box::new(InterpBound {
-            module: Arc::clone(&self.module),
+            plan: Arc::clone(&self.plan),
             name: self.name.clone(),
             weights: pinned,
+            naive: std::env::var("FE_INTERP_OPT").is_ok_and(|v| v == "0"),
         }))
     }
 }
 
 pub struct InterpBound {
-    module: Arc<HloModule>,
+    plan: Arc<ExecPlan>,
     name: String,
-    weights: Vec<Option<Rc<Value>>>,
+    weights: Vec<Option<Arc<Value>>>,
+    /// `FE_INTERP_OPT=0`: run the naive reference walk instead of the
+    /// compiled plan (byte-identical output, used by the on/off e2e
+    /// identity test and as an escape hatch).
+    naive: bool,
 }
 
 impl BackendBound for InterpBound {
@@ -103,19 +170,23 @@ impl BackendBound for InterpBound {
                 self.weights.len()
             );
         }
-        let mut full: Vec<Rc<Value>> = Vec::with_capacity(args.len());
+        let mut full: Vec<Arc<Value>> = Vec::with_capacity(args.len());
         for (i, a) in args.iter().enumerate() {
             match (a, &self.weights[i]) {
-                (Some(t), None) => full.push(Rc::new(to_value(t))),
-                (None, Some(w)) => full.push(Rc::clone(w)),
+                (Some(t), None) => full.push(Arc::new(to_value(t))),
+                (None, Some(w)) => full.push(Arc::clone(w)),
                 (Some(_), Some(_)) => {
                     bail!("{}: input {i} is weight-bound and passed at call", self.name)
                 }
                 (None, None) => bail!("{}: input {i} missing", self.name),
             }
         }
-        let outs = evaluate(&self.module, &full)
-            .with_context(|| format!("interpret {}", self.name))?;
+        let outs = if self.naive {
+            evaluate(self.plan.module(), &full)
+        } else {
+            self.plan.execute(&full)
+        }
+        .with_context(|| format!("interpret {}", self.name))?;
         outs.into_iter().map(to_host).collect()
     }
 }

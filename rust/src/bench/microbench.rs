@@ -2,6 +2,12 @@
 //! cycle (verify at each M, drafter calls). These are the numbers the
 //! §Perf analysis in EXPERIMENTS.md is built from: FastEagle's win is
 //! 1 drafter call/cycle vs EAGLE's N, and this shows the per-call cost.
+//!
+//! On the interpreter backend this also runs the compiled-plan kernel
+//! suite (dot / reduce / fused elementwise) against the naive reference
+//! evaluator and writes `bench_out/BENCH_interp_point.json` — the point
+//! CI's microbench lane validates against the committed
+//! `BENCH_interp.json` trajectory.
 
 use std::rc::Rc;
 use std::time::Instant;
@@ -139,73 +145,168 @@ pub fn run(env: &BenchEnv) -> Result<()> {
         ]));
     }
 
-    // interpreter dot + reduce fast paths: the kernels `--backend
-    // interpret` bench lanes lean on once dims grow past the fixture
-    // sizes — measured through the full parse->evaluate pipeline like
-    // real executables
+    // interpreter kernel suite: the compiled-plan path measured against
+    // the naive reference evaluator on the same module. The plan is the
+    // production path (`backend::interp` compiles one per executable);
+    // `evaluate` stays in-tree as the bit-identical reference, so the
+    // speedup column is a live regression gate, not a one-off claim.
     if env.runtime.kind() == crate::backend::BackendKind::Interpret {
         use crate::backend::hlo::builder::{HloBuilder, Ty};
         use crate::backend::hlo::eval::{evaluate, Value};
         use crate::backend::hlo::parser::parse_module;
+        use crate::backend::hlo::plan::{EvalOptions, ExecPlan, OpTimes};
+        use std::sync::Arc;
+
+        struct Case {
+            name: String,
+            text: String,
+            args: Vec<Arc<Value>>,
+        }
+        let mut cases: Vec<Case> = Vec::new();
+
+        // last-axis reduce rows (add + max over one operand)
         for &(rows_n, k) in &[(256usize, 512usize), (1024, 256)] {
             let mut hb = HloBuilder::new("redbench");
             let p = hb.param(Ty::F32, vec![rows_n, k]);
             let s = hb.reduce_add(&p, &[1]);
             let mx = hb.reduce_max(&p, &[1]);
-            let text = hb.finish(&[&s, &mx]);
-            let module = parse_module(&text)?;
-            let x = Rc::new(Value::f32(vec![rows_n, k], vec![0.5; rows_n * k]));
-            let samples = time_loop(
-                || {
-                    let _ = evaluate(&module, &[Rc::clone(&x)])?;
-                    Ok(())
-                },
-                iters,
-            )?;
-            let s = summarize(&samples);
-            let name = format!("interp_reduce_{rows_n}x{k}");
-            rows.push(vec![
-                name.clone(),
-                format!("{:.2}", s.mean),
-                format!("{:.2}", s.p50),
-                format!("{:.2}", s.p99),
-            ]);
-            report.push(Json::obj(vec![
-                ("exec", Json::str(&name)),
-                ("mean_ms", Json::num(s.mean)),
-                ("p50_ms", Json::num(s.p50)),
-            ]));
+            cases.push(Case {
+                name: format!("interp_reduce_{rows_n}x{k}"),
+                text: hb.finish(&[&s, &mx]),
+                args: vec![Arc::new(Value::f32(vec![rows_n, k], vec![0.5; rows_n * k]))],
+            });
         }
-        for &(m, k, n) in &[(32usize, 64usize, 64usize), (128, 128, 128)] {
+        // square-ish GEMMs plus the fixture target's logit GEMM shapes:
+        // [B*M, d_model=16] x [d_model, vocab=272] at (M=8, B=1) and
+        // (M=16, B=4) — the matmul every verify step pays
+        for &(name, m, k, n) in &[
+            ("interp_dot_32x64x64", 32usize, 64usize, 64usize),
+            ("interp_dot_128x128x128", 128, 128, 128),
+            ("interp_dot_tgt_m8_b1", 8, 16, 272),
+            ("interp_dot_tgt_m16_b4", 64, 16, 272),
+        ] {
             let mut hb = HloBuilder::new("dotbench");
             let pa = hb.param(Ty::F32, vec![m, k]);
             let pb = hb.param(Ty::F32, vec![k, n]);
             let c = hb.matmul(&pa, &pb);
-            let text = hb.finish(&[&c]);
-            let module = parse_module(&text)?;
-            let a = Rc::new(Value::f32(vec![m, k], vec![0.5; m * k]));
-            let b = Rc::new(Value::f32(vec![k, n], vec![0.25; k * n]));
+            cases.push(Case {
+                name: name.to_string(),
+                text: hb.finish(&[&c]),
+                args: vec![
+                    Arc::new(Value::f32(vec![m, k], vec![0.5; m * k])),
+                    Arc::new(Value::f32(vec![k, n], vec![0.25; k * n])),
+                ],
+            });
+        }
+        // elementwise chain the fusion pass collapses into one loop:
+        // compare/select/exp/tanh/mul over splat constants
+        {
+            let (rows_n, k) = (256usize, 512usize);
+            let mut hb = HloBuilder::new("fusebench");
+            let x = hb.param(Ty::F32, vec![rows_n, k]);
+            let half = hb.const_f32(0.5);
+            let sp = hb.splat(&half, vec![rows_n, k]);
+            let p = hb.compare(&x, &sp, "GT");
+            let xm = hb.mul(&x, &sp);
+            let e = hb.exp(&xm);
+            let t = hb.tanh(&x);
+            let sel = hb.select(&p, &e, &t);
+            let out = hb.mul(&sel, &sp);
+            cases.push(Case {
+                name: format!("interp_fuse_{rows_n}x{k}"),
+                text: hb.finish(&[&out]),
+                args: vec![Arc::new(Value::f32(vec![rows_n, k], vec![0.3; rows_n * k]))],
+            });
+        }
+
+        let opts = EvalOptions::from_env();
+        let mut interp_rows = Vec::new();
+        let mut point_cells = Vec::new();
+        let mut gate_speedups = Vec::new();
+        for case in &cases {
+            let module = Arc::new(parse_module(&case.text)?);
+            let plan = ExecPlan::compile(&module, opts)?;
             let samples = time_loop(
                 || {
-                    let _ = evaluate(&module, &[Rc::clone(&a), Rc::clone(&b)])?;
+                    let _ = plan.execute(&case.args)?;
                     Ok(())
                 },
                 iters,
             )?;
             let s = summarize(&samples);
-            let name = format!("interp_dot_{m}x{k}x{n}");
+            let ref_samples = time_loop(
+                || {
+                    let _ = evaluate(&module, &case.args)?;
+                    Ok(())
+                },
+                iters,
+            )?;
+            let rs = summarize(&ref_samples);
+            let speedup = rs.mean / s.mean.max(1e-9);
+            // one timed run for the per-op-kind attribution
+            let mut times = OpTimes::new();
+            let _ = plan.execute_timed(&case.args, &mut times)?;
+            let per_op = Json::Obj(
+                times
+                    .iter()
+                    .map(|(k, t)| (k.to_string(), Json::num(t.total_ns as f64 / 1e3)))
+                    .collect(),
+            );
             rows.push(vec![
-                name.clone(),
+                case.name.clone(),
                 format!("{:.2}", s.mean),
                 format!("{:.2}", s.p50),
                 format!("{:.2}", s.p99),
             ]);
+            interp_rows.push(vec![
+                case.name.clone(),
+                format!("{:.3}", s.mean),
+                format!("{:.3}", rs.mean),
+                format!("{:.2}x", speedup),
+            ]);
             report.push(Json::obj(vec![
-                ("exec", Json::str(&name)),
+                ("exec", Json::str(&case.name)),
                 ("mean_ms", Json::num(s.mean)),
                 ("p50_ms", Json::num(s.p50)),
             ]));
+            if case.name.starts_with("interp_dot_") || case.name.starts_with("interp_reduce_") {
+                gate_speedups.push(speedup);
+            }
+            point_cells.push(Json::obj(vec![
+                ("exec", Json::str(&case.name)),
+                ("mean_ms", Json::num(s.mean)),
+                ("p50_ms", Json::num(s.p50)),
+                ("ref_mean_ms", Json::num(rs.mean)),
+                ("speedup", Json::num(speedup)),
+                ("per_op_us", per_op),
+            ]));
         }
+        let geomean = if gate_speedups.is_empty() {
+            0.0
+        } else {
+            (gate_speedups.iter().map(|s| s.ln()).sum::<f64>() / gate_speedups.len() as f64).exp()
+        };
+        println!("\n=== Interpreter plan vs naive reference (ms) ===");
+        let h: Vec<String> =
+            ["exec", "plan", "naive", "speedup"].iter().map(|s| s.to_string()).collect();
+        println!("{}", render_table(&h, &interp_rows));
+        println!(
+            "geomean speedup over interp_dot_*/interp_reduce_*: {geomean:.2}x \
+             (threads={}, fuse={})",
+            opts.threads, opts.fuse
+        );
+        let point = Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("bench", Json::str("interp_micro")),
+            ("quick", Json::Bool(env.quick)),
+            ("backend", Json::str("interpret")),
+            ("threads", Json::num(opts.threads as f64)),
+            ("fuse", Json::Bool(opts.fuse)),
+            ("geomean_speedup", Json::num(geomean)),
+            ("cells", Json::Arr(point_cells)),
+        ]);
+        let ppath = write_report("BENCH_interp_point", &point)?;
+        println!("interp point -> {ppath:?}");
     }
 
     println!("\n=== Microbench (per-call latency, ms) ===");

@@ -60,7 +60,7 @@ pub fn run_named(name: &str, quick: bool) -> Result<()> {
         "table2" => table2::run(&env),
         "table3" => table3::run(&env),
         "fig3" => fig3::run(&env),
-        "microbench" => microbench::run(&env),
+        "microbench" | "micro" => microbench::run(&env),
         "depth" => depth::run(&env),
         "serve" => serving::run(&env),
         "all" => {

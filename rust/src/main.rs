@@ -47,7 +47,8 @@ commands:
              [--policy fcfs|spf|cache] [--prefix-cache]
   trace      [--out FILE] [--batch B] [--requests N] [--max-new N]
              run a batched workload with tracing on, write Chrome trace JSON
-  bench      table1|table2|table3|fig3|microbench|serve|all [--quick]
+  bench      table1|table2|table3|fig3|micro|microbench|serve|all [--quick]
+             [--interp-threads N]   (interpreter worker pool for this run)
   selfcheck  [--target T]
   fixture    [--out DIR] [--seed N]   emit interpreter-runnable artifacts
   check      [--target T] [--chain N] [--json]   verify HLO artifacts +
@@ -59,7 +60,11 @@ draft-plan flags (generate/serve/batch; per-request \"draft\" overrides):
 
 flags: --artifacts DIR  --backend pjrt|interpret  --seed N  --quick
 env:   FE_TRACE=1 arms the flight recorder for any command;
-       FE_LOG=level[,module=level] filters logging (see README)";
+       FE_LOG=level[,module=level] filters logging (see README);
+       FE_INTERP_THREADS=N sizes the interpreter worker pool (default 1);
+       FE_INTERP_FUSE=0 disables elementwise fusion;
+       FE_INTERP_OPT=0 falls back to the naive reference evaluator
+       (all three are byte-identical to the defaults; speed only)";
 
 /// Backend selection: `--backend` flag, else `FE_BACKEND`, else PJRT.
 fn make_runtime(args: &Args) -> Result<Arc<Runtime>> {
@@ -514,6 +519,17 @@ fn main() -> Result<()> {
                 .map(String::as_str)
                 .unwrap_or("all");
             std::env::set_var("FE_ARTIFACTS", artifacts_dir(&args));
+            if let Some(t) = args.get("interp-threads") {
+                let n: usize = t
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--interp-threads must be a number, got {t:?}"))?;
+                if n == 0 || n > 64 {
+                    anyhow::bail!("--interp-threads must be in 1..=64, got {n}");
+                }
+                // EvalOptions::from_env reads this when the interpreter
+                // backend compiles its execution plans
+                std::env::set_var("FE_INTERP_THREADS", t);
+            }
             // BenchEnv reads the backend from the env (`--backend
             // interpret` is the everywhere-runnable lane)
             fasteagle::bench::export_backend(&args)?;

@@ -4,12 +4,24 @@
 //! through the full text pipeline — built with the HLO builder, parsed
 //! from text, then evaluated — so the parser is exercised on every
 //! shape, not just the fixture graphs.
+//!
+//! The second half pits the compiled execution plan (`ExecPlan`:
+//! fusion, buffer arena, in-place rewrites, worker pool) against the
+//! naive evaluator on random whole programs and asserts *bit* equality
+//! at every thread count — the interpreter's determinism contract.
+
+mod common;
 
 use std::rc::Rc;
+use std::sync::Arc;
 
-use fasteagle::backend::hlo::builder::{HloBuilder, Ty};
-use fasteagle::backend::hlo::eval::{evaluate, Value};
+use fasteagle::backend::hlo::builder::{HloBuilder, Ty, H};
+use fasteagle::backend::hlo::eval::{evaluate, Buf, Value};
 use fasteagle::backend::hlo::parser::parse_module;
+use fasteagle::backend::hlo::plan::{EvalOptions, ExecPlan};
+use fasteagle::draft::make_drafter;
+use fasteagle::model::TargetModel;
+use fasteagle::spec::{Engine, GenConfig};
 use fasteagle::util::rng::Pcg64;
 
 fn randv(rng: &mut Pcg64, n: usize) -> Vec<f32> {
@@ -18,8 +30,35 @@ fn randv(rng: &mut Pcg64, n: usize) -> Vec<f32> {
 
 fn run(text: &str, args: Vec<Value>) -> Vec<Value> {
     let m = parse_module(text).expect("parse built module");
-    let args: Vec<Rc<Value>> = args.into_iter().map(Rc::new).collect();
+    let args: Vec<Arc<Value>> = args.into_iter().map(Arc::new).collect();
     evaluate(&m, &args).expect("evaluate built module")
+}
+
+/// Evaluate through the compiled plan with explicit options (no env).
+fn run_planned(text: &str, args: &[Arc<Value>], threads: usize, fuse: bool) -> Vec<Value> {
+    let m = Arc::new(parse_module(text).expect("parse built module"));
+    let plan =
+        ExecPlan::compile(&m, EvalOptions { threads, fuse }).expect("compile plan");
+    plan.execute(args).expect("execute plan")
+}
+
+/// Bit-exact equality: f32 compared via `to_bits` (NaN-safe — identical
+/// op order must produce identical NaN payloads too).
+fn assert_bits_eq(a: &Value, b: &Value, what: &str) {
+    assert_eq!(a.dims, b.dims, "{what}: dims");
+    match (&a.buf, &b.buf) {
+        (Buf::F32(x), Buf::F32(y)) => {
+            assert_eq!(x.len(), y.len(), "{what}: f32 len");
+            for (i, (u, v)) in x.iter().zip(y).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "{what}: f32[{i}] {u} vs {v}");
+            }
+        }
+        (Buf::I32(x), Buf::I32(y)) => assert_eq!(x, y, "{what}: i32"),
+        (Buf::U32(x), Buf::U32(y)) => assert_eq!(x, y, "{what}: u32"),
+        (Buf::U64(x), Buf::U64(y)) => assert_eq!(x, y, "{what}: u64"),
+        (Buf::Pred(x), Buf::Pred(y)) => assert_eq!(x, y, "{what}: pred"),
+        _ => panic!("{what}: buffer dtype mismatch"),
+    }
 }
 
 fn close(a: f32, b: f32) -> bool {
@@ -327,4 +366,164 @@ fn dynamic_update_slice_matches_naive_with_clamping() {
         naive[st..st + u].copy_from_slice(&upd);
         assert_eq!(got, naive.as_slice());
     }
+}
+
+/// Random whole programs — elementwise chains (exp/tanh/compare/select),
+/// nested matmuls, reduce-then-broadcast, identity slices, handles used
+/// more than once, multi-output roots — evaluated naively and through
+/// the compiled plan at 1 and 4 threads, with fusion on and off. Every
+/// output must match *bitwise*: the plan's fusion, arena recycling,
+/// in-place rewrites, and row-parallel kernels are all required to
+/// preserve the naive accumulation order exactly.
+#[test]
+fn random_programs_planned_vs_naive_bitwise() {
+    let mut rng = Pcg64::new(110, 0);
+    for case in 0..25 {
+        let (r, c) = (2 + rng.below(6), 2 + rng.below(6));
+        let mut hb = HloBuilder::new("randprog");
+        let x = hb.param(Ty::F32, vec![r, c]);
+        let w = hb.param(Ty::F32, vec![c, r]);
+        let mut pool: Vec<H> = vec![x.clone()];
+        let n_ops = 4 + rng.below(9);
+        for _ in 0..n_ops {
+            let a = pool[rng.below(pool.len())].clone();
+            let b = pool[rng.below(pool.len())].clone();
+            let h = match rng.below(9) {
+                0 => hb.add(&a, &b),
+                1 => hb.mul(&a, &b),
+                2 => hb.max(&a, &b),
+                3 => hb.exp(&a),
+                4 => hb.tanh(&a),
+                5 => {
+                    let p = hb.compare(&a, &b, "GT");
+                    let t = pool[rng.below(pool.len())].clone();
+                    hb.select(&p, &t, &b)
+                }
+                6 => {
+                    // reduce the last axis, broadcast the row sums back
+                    let s = hb.reduce_add(&a, &[1]);
+                    hb.broadcast(&s, vec![r, c], &[0])
+                }
+                7 => {
+                    // [r,c] x [c,r] -> [r,r], then x pool elem -> [r,c]
+                    let mm = hb.matmul(&a, &w);
+                    hb.matmul(&mm, &b)
+                }
+                _ => hb.slice(&a, &[(0, r), (0, c)]),
+            };
+            pool.push(h);
+        }
+        let last = pool[pool.len() - 1].clone();
+        let mid = pool[rng.below(pool.len())].clone();
+        let tail = hb.reduce_max(&last, &[1]);
+        let text = hb.finish(&[&last, &mid, &tail]);
+
+        let xv = randv(&mut rng, r * c);
+        let wv = randv(&mut rng, c * r);
+        let args: Vec<Arc<Value>> = vec![
+            Arc::new(Value::f32(vec![r, c], xv)),
+            Arc::new(Value::f32(vec![c, r], wv)),
+        ];
+        let naive = evaluate(
+            &parse_module(&text).expect("parse built module"),
+            &args,
+        )
+        .expect("naive evaluate");
+        for (threads, fuse) in [(1, true), (1, false), (4, true)] {
+            let planned = run_planned(&text, &args, threads, fuse);
+            assert_eq!(planned.len(), naive.len());
+            for (i, (p, n)) in planned.iter().zip(&naive).enumerate() {
+                assert_bits_eq(
+                    p,
+                    n,
+                    &format!("case {case} out {i} (threads={threads}, fuse={fuse})"),
+                );
+            }
+        }
+    }
+}
+
+/// Fused elementwise chains with a *pred-typed* root: the fused loop
+/// runs predicates as 0.0/1.0 masks internally and must materialize the
+/// exact bools the naive path produces, alongside a converted-f32 and a
+/// selected-f32 output off the same chain.
+#[test]
+fn fused_pred_chains_planned_vs_naive_bitwise() {
+    let mut rng = Pcg64::new(111, 0);
+    for case in 0..30 {
+        let (r, c) = (2 + rng.below(6), 2 + rng.below(6));
+        let mut hb = HloBuilder::new("predchain");
+        let x = hb.param(Ty::F32, vec![r, c]);
+        let y = hb.param(Ty::F32, vec![r, c]);
+        let s = hb.add(&x, &y);
+        let t = hb.tanh(&s);
+        let p = hb.compare(&t, &y, "GT");
+        let cv = hb.convert(&p, Ty::F32);
+        let scaled = hb.mul(&cv, &s);
+        let sel = hb.select(&p, &scaled, &x);
+        let text = hb.finish(&[&p, &cv, &sel]);
+
+        let args: Vec<Arc<Value>> = vec![
+            Arc::new(Value::f32(vec![r, c], randv(&mut rng, r * c))),
+            Arc::new(Value::f32(vec![r, c], randv(&mut rng, r * c))),
+        ];
+        let naive = evaluate(
+            &parse_module(&text).expect("parse built module"),
+            &args,
+        )
+        .expect("naive evaluate");
+        for (threads, fuse) in [(1, true), (4, true), (1, false)] {
+            let planned = run_planned(&text, &args, threads, fuse);
+            for (i, (pv, nv)) in planned.iter().zip(&naive).enumerate() {
+                assert_bits_eq(
+                    pv,
+                    nv,
+                    &format!("case {case} out {i} (threads={threads}, fuse={fuse})"),
+                );
+            }
+        }
+    }
+}
+
+/// End-to-end identity: a full fixture generation with the compiled
+/// plan (4 worker threads) emits byte-identical tokens to the naive
+/// reference evaluator (`FE_INTERP_OPT=0`). This is the lossless-
+/// acceptance guarantee the serving stack depends on, asserted through
+/// the whole engine, not just per-op.
+#[test]
+fn e2e_tokens_identical_with_optimizations_on_and_off() {
+    let (dir, kind) = common::artifacts_base();
+    let drafter = if dir.join("weights").join("fasteagle.few").exists() {
+        "fasteagle"
+    } else {
+        "vanilla"
+    };
+    let prompt = "USER: compare the optimized and reference interpreters.\nASSISTANT:";
+    let cfg = GenConfig { max_new_tokens: 24, ..Default::default() };
+
+    std::env::set_var("FE_INTERP_OPT", "0");
+    let st = common::store_with(&dir, kind);
+    let mut eng = Engine::new(
+        TargetModel::open(Rc::clone(&st)).unwrap(),
+        make_drafter(Rc::clone(&st), drafter).unwrap(),
+    );
+    let reference = eng.generate(prompt, &cfg).unwrap();
+    drop(eng);
+
+    std::env::set_var("FE_INTERP_OPT", "1");
+    std::env::set_var("FE_INTERP_THREADS", "4");
+    let st = common::store_with(&dir, kind);
+    let mut eng = Engine::new(
+        TargetModel::open(Rc::clone(&st)).unwrap(),
+        make_drafter(Rc::clone(&st), drafter).unwrap(),
+    );
+    let optimized = eng.generate(prompt, &cfg).unwrap();
+    std::env::remove_var("FE_INTERP_OPT");
+    std::env::remove_var("FE_INTERP_THREADS");
+
+    assert_eq!(
+        optimized.tokens, reference.tokens,
+        "compiled plan diverged from the naive reference\n ref: {:?}\n got: {:?}",
+        reference.text, optimized.text
+    );
 }

@@ -19,6 +19,7 @@ mod common;
 
 use std::path::PathBuf;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use fasteagle::backend::hlo::builder::{HloBuilder, Ty};
 use fasteagle::backend::hlo::eval::{evaluate, Value};
@@ -103,13 +104,13 @@ fn verified_programs_evaluate_on_conforming_inputs() {
         let module = parse_module(&build_rich(m, k, n, q)).expect("parse built module");
         assert!(!has_errors(&verify_module(&module)));
         let idx: Vec<i32> = (0..q).map(|_| rng.below(m) as i32).collect();
-        let args: Vec<Rc<Value>> = vec![
-            Rc::new(Value::f32(vec![m, k], randv(&mut rng, m * k))),
-            Rc::new(Value::f32(vec![k, n], randv(&mut rng, k * n))),
-            Rc::new(Value::i32(vec![q], idx)),
-            Rc::new(Value::i32(vec![], vec![rng.below(m) as i32])),
-            Rc::new(Value::i32(vec![], vec![0])),
-            Rc::new(Value::u64(vec![2], vec![rng.next_u64(), rng.next_u64()])),
+        let args: Vec<Arc<Value>> = vec![
+            Arc::new(Value::f32(vec![m, k], randv(&mut rng, m * k))),
+            Arc::new(Value::f32(vec![k, n], randv(&mut rng, k * n))),
+            Arc::new(Value::i32(vec![q], idx)),
+            Arc::new(Value::i32(vec![], vec![rng.below(m) as i32])),
+            Arc::new(Value::i32(vec![], vec![0])),
+            Arc::new(Value::u64(vec![2], vec![rng.next_u64(), rng.next_u64()])),
         ];
         let out = evaluate(&module, &args).expect("verified program must evaluate");
         assert_eq!(out.len(), 8);
