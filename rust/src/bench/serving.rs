@@ -27,7 +27,7 @@ use crate::util::json::Json;
 use crate::util::stats::percentile_sorted;
 use crate::workload::{
     batched_serving_target, chat_sessions, poisson_trace, replay_chat_tcp, replay_trace_tcp,
-    ChatSession, ChatTurnStat,
+    replay_trace_tcp_text, ChatSession, ChatTurnStat,
 };
 
 use super::harness::{render_table, write_report, BenchEnv};
@@ -538,5 +538,205 @@ pub fn run(env: &BenchEnv) -> Result<()> {
     let p = out_dir.join("serve_cache_metrics.prom");
     std::fs::write(&p, &warm.prom_text)?;
     println!("cache prometheus -> {p:?}");
+
+    // chaos lane: two replicas behind the router, one killed mid-trace
+    run_chaos(&setup, env, port + 2)?;
+    Ok(())
+}
+
+/// Boot one default-config FastEagle replica for the chaos fleet; the
+/// thread returns the server's metrics report at clean exit, so a
+/// successful join doubles as the drained-exit leak check (`serve`
+/// bails if any pool block is still out).
+fn spawn_chaos_replica(
+    setup: &CellSetup,
+    addr: String,
+    replica_id: usize,
+) -> std::thread::JoinHandle<Result<String>> {
+    let kind = setup.kind;
+    let batch = setup.batch;
+    let dir = setup.dir.to_path_buf();
+    std::thread::spawn(move || -> Result<String> {
+        let rt = Arc::new(Runtime::new(kind)?);
+        let store = Rc::new(ArtifactStore::open(rt, dir)?);
+        let engine = BatchEngine::new(
+            Rc::clone(&store),
+            BatchConfig::new(batch, BatchMethod::FastEagle),
+        )?;
+        let server = Server::new(ServerConfig {
+            addr,
+            queue_capacity: 64,
+            replica_id,
+            ..Default::default()
+        });
+        let m = server.serve(engine)?;
+        Ok(m.report())
+    })
+}
+
+/// Wait until something accepts connections on `addr`; bail early if
+/// the serving thread already died (its error surfaces at join time).
+fn wait_up<T>(addr: &str, thread: &std::thread::JoinHandle<T>) -> Result<()> {
+    for _ in 0..600 {
+        if std::net::TcpStream::connect(addr).is_ok() {
+            return Ok(());
+        }
+        if thread.is_finished() {
+            anyhow::bail!("chaos server on {addr} exited before serving");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    anyhow::bail!("chaos server did not start on {addr}")
+}
+
+/// Fire-and-forget shutdown: the write must land, the reply is
+/// best-effort (it races the listener teardown).
+fn send_shutdown(addr: &str) -> Result<()> {
+    let s = std::net::TcpStream::connect(addr)?;
+    let mut w = s.try_clone()?;
+    writeln!(w, "{}", r#"{"cmd":"shutdown"}"#)?;
+    let mut line = String::new();
+    let _ = BufReader::new(s).read_line(&mut line);
+    Ok(())
+}
+
+/// The chaos lane: the same Poisson trace is run once against a single
+/// healthy server (the byte-identity reference) and once against a
+/// two-replica fleet behind the round-robin router with replica B shot
+/// mid-trace. Hard requirements: at least one request survives, every
+/// survivor's bytes match the reference, and every casualty carries a
+/// structured router error — never a raw dropped connection.
+fn run_chaos(setup: &CellSetup, env: &BenchEnv, base_port: u16) -> Result<()> {
+    use std::time::Duration;
+
+    use crate::router::{make_policy, query_line, Router, RouterConfig};
+
+    let (n, max_new, rate) = if env.quick { (8, 12, 4.0) } else { (16, 24, 8.0) };
+    let trace = poisson_trace(setup.prompts, n, rate, max_new, 43);
+
+    // reference leg: one healthy server, no router
+    let ref_addr = format!("127.0.0.1:{base_port}");
+    let ref_thread = spawn_chaos_replica(setup, ref_addr.clone(), 0);
+    wait_up(&ref_addr, &ref_thread)?;
+    let reference = replay_trace_tcp_text(&ref_addr, &trace)?;
+    send_shutdown(&ref_addr)?;
+    ref_thread
+        .join()
+        .map_err(|_| anyhow::anyhow!("chaos reference server panicked"))??;
+    if let Some(r) = reference.iter().find(|r| r.stat.error.is_some()) {
+        anyhow::bail!("chaos reference run failed: {:?}", r.stat.error);
+    }
+
+    // the fleet: replicas A and B behind a round-robin router
+    let addr_a = format!("127.0.0.1:{}", base_port + 1);
+    let addr_b = format!("127.0.0.1:{}", base_port + 2);
+    let raddr = format!("127.0.0.1:{}", base_port + 3);
+    let ta = spawn_chaos_replica(setup, addr_a.clone(), 1);
+    wait_up(&addr_a, &ta)?;
+    let tb = spawn_chaos_replica(setup, addr_b.clone(), 2);
+    wait_up(&addr_b, &tb)?;
+    let router = Arc::new(Router::new(
+        RouterConfig { addr: raddr.clone(), poll_ms: 100, ..Default::default() },
+        vec![addr_a.clone(), addr_b.clone()],
+        make_policy("rr").context("rr policy")?,
+    ));
+    let r2 = Arc::clone(&router);
+    let router_thread = std::thread::spawn(move || r2.serve());
+    wait_up(&raddr, &router_thread)?;
+
+    // the assassin: halfway through the arrival window, shoot replica B
+    // with a direct shutdown — requests in flight there become
+    // mid-stream casualties, queued ones get retried on A
+    let half = trace.last().map(|t| t.at / 2).unwrap_or(Duration::ZERO);
+    let kb = addr_b.clone();
+    let killer = std::thread::spawn(move || -> Result<()> {
+        std::thread::sleep(half);
+        query_line(&kb, r#"{"cmd":"shutdown"}"#, Duration::from_secs(10))?;
+        Ok(())
+    });
+    let routed = replay_trace_tcp_text(&raddr, &trace)?;
+    killer
+        .join()
+        .map_err(|_| anyhow::anyhow!("chaos killer thread panicked"))?
+        .context("killing replica B")?;
+    let b_report = tb
+        .join()
+        .map_err(|_| anyhow::anyhow!("chaos replica B panicked"))??;
+
+    // the verdict, request by request: survivors must be byte-identical
+    // to the reference, casualties must die structured
+    let mut survivors = 0usize;
+    let mut casualties = 0usize;
+    for (r, want) in routed.iter().zip(&reference) {
+        match &r.stat.error {
+            None => {
+                if r.text != want.text {
+                    anyhow::bail!(
+                        "chaos: request {} survived with different bytes \
+                         (got {:?}, want {:?})",
+                        r.stat.index,
+                        r.text,
+                        want.text
+                    );
+                }
+                survivors += 1;
+            }
+            Some(e) => {
+                let structured = e.contains("replica failed")
+                    || e.contains("no replica")
+                    || e.contains("draining");
+                if !structured {
+                    anyhow::bail!("chaos: unstructured casualty error: {e}");
+                }
+                casualties += 1;
+            }
+        }
+    }
+    if survivors == 0 {
+        anyhow::bail!("chaos: zero requests survived the replica kill");
+    }
+
+    // fleet observability after the kill: B marked dead in the merged
+    // exposition (either the forward failure or the 100ms poller caught
+    // it long before the trace drained)
+    let stats = server_query(&raddr, r#"{"cmd":"stats"}"#)?;
+    let stat = |key: &str| stats.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+    let (requests, retries, midstream) =
+        (stat("requests"), stat("retries"), stat("midstream_failures"));
+    let prom = server_query_text(&raddr, r#"{"cmd":"metrics"}"#)?;
+    if !prom.contains("fe_router_replica_up{replica=\"1\"} 0") {
+        anyhow::bail!("chaos: router never marked the killed replica dead");
+    }
+
+    send_shutdown(&raddr)?;
+    router_thread
+        .join()
+        .map_err(|_| anyhow::anyhow!("chaos router thread panicked"))??;
+    send_shutdown(&addr_a)?;
+    let a_report = ta
+        .join()
+        .map_err(|_| anyhow::anyhow!("chaos replica A panicked"))??;
+
+    println!("\n=== Chaos lane: replica killed mid-trace behind the router ===");
+    println!("replica A (survivor): {a_report}");
+    println!("replica B (killed):   {b_report}");
+    println!(
+        "{survivors}/{n} requests survived byte-identical, {casualties} structured \
+         casualties; router saw {requests:.0} requests, {retries:.0} retries, \
+         {midstream:.0} mid-stream failures"
+    );
+    let report = Json::obj(vec![
+        ("n", Json::num(n as f64)),
+        ("rate_per_sec", Json::num(rate)),
+        ("max_new", Json::num(max_new as f64)),
+        ("survivors", Json::num(survivors as f64)),
+        ("casualties", Json::num(casualties as f64)),
+        ("byte_identical", Json::Bool(true)),
+        ("router_requests", Json::num(requests)),
+        ("router_retries", Json::num(retries)),
+        ("router_midstream_failures", Json::num(midstream)),
+    ]);
+    let p = write_report("serve_chaos", &report)?;
+    println!("chaos report -> {p:?}");
     Ok(())
 }

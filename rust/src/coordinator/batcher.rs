@@ -217,6 +217,37 @@ struct Parked {
     row_feats: Vec<f32>,
 }
 
+/// Where [`BatchEngine::cancel`] found (and evicted) the request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// still queued — removed before ever touching a slot
+    Pending,
+    /// occupying a slot (prefilling or decoding) — slot evicted, lease
+    /// released, lanes zeroed
+    Active,
+    /// preempted and parked — parked state dropped, lease released
+    Parked,
+    /// unknown id (never submitted, already completed, or already
+    /// canceled) — nothing to do
+    NotFound,
+}
+
+impl CancelOutcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            CancelOutcome::Pending => "pending",
+            CancelOutcome::Active => "active",
+            CancelOutcome::Parked => "parked",
+            CancelOutcome::NotFound => "not_found",
+        }
+    }
+
+    /// True when the cancel actually evicted a live request.
+    pub fn found(self) -> bool {
+        !matches!(self, CancelOutcome::NotFound)
+    }
+}
+
 /// One slot's cycle outcome within a [`BatchEngine::step_events`] —
 /// the per-cycle progress the streaming protocol forwards to clients.
 /// Carries raw token ids only; consumers that want text decode on
@@ -420,6 +451,20 @@ impl BatchEngine {
 
     pub fn pool_total(&self) -> usize {
         self.pool.total()
+    }
+
+    /// Pool blocks issued but not yet returned (leases + cache shares).
+    /// After every request retires/cancels and [`release_cache`]
+    /// (Self::release_cache) runs, this must be zero — the invariant the
+    /// cancellation tests and drained replicas assert.
+    pub fn leaked_blocks(&self) -> usize {
+        self.pool.leaked_blocks()
+    }
+
+    /// Drop every prefix-cache entry, returning its blocks to the pool
+    /// (test/observability hook for the leak accounting above).
+    pub fn release_cache(&mut self) {
+        self.cache.clear(&mut self.pool);
     }
 
     fn exec_suffix(&self) -> String {
@@ -1001,10 +1046,12 @@ impl BatchEngine {
         Ok(())
     }
 
-    /// Evict a slot whose drafter setup failed: release its lease and
-    /// answer the request with an error instead of poisoning the engine.
-    fn fail_slot(&mut self, b: usize, err: String, metrics: &mut ServingMetrics) -> Response {
-        let mut slot = self.slots[b].take().expect("failing an empty slot");
+    /// Evict an occupied slot without retiring it: release the lease
+    /// (share-aware, so blocks adopted from the prefix cache survive
+    /// under the cache's own refs) and zero the slot's KV/drafter
+    /// lanes. Shared by the failure, cancel and deadline paths.
+    fn evict_slot(&mut self, b: usize) -> Request {
+        let mut slot = self.slots[b].take().expect("evicting an empty slot");
         self.pool.release(&mut slot.lease);
         self.kv.set_len(b, 0);
         if let Some(dkv) = self.fe_dkv.as_mut() {
@@ -1013,10 +1060,88 @@ impl BatchEngine {
         if let Some(dkv) = self.eg_dkv.as_mut() {
             dkv.set_len(b, 0);
         }
+        slot.req
+    }
+
+    /// Evict a slot whose drafter setup failed: release its lease and
+    /// answer the request with an error instead of poisoning the engine.
+    fn fail_slot(&mut self, b: usize, err: String, metrics: &mut ServingMetrics) -> Response {
+        let req = self.evict_slot(b);
         metrics.requests_failed += 1;
-        crate::obs::mark("failed", b as u32, slot.req.id, 0);
-        crate::log_warn!("request {} failed: {err}", slot.req.id);
-        Response::error(slot.req.id, err)
+        crate::obs::mark("failed", b as u32, req.id, 0);
+        crate::log_warn!("request {} failed: {err}", req.id);
+        Response::error(req.id, err)
+    }
+
+    /// Cancel one request wherever it lives — pending queue, an active
+    /// slot (mid-prefill or mid-decode), or the parked set — releasing
+    /// its KV lease and zeroing its lanes. Blocks shared with the
+    /// prefix cache stay cached (release is refcounted); blocks owned
+    /// solely by the request return to the pool immediately. Safe only
+    /// between steps (the server's engine loop), never mid-iteration.
+    pub fn cancel(&mut self, id: u64, metrics: &mut ServingMetrics) -> CancelOutcome {
+        if let Some(i) = self.pending.iter().position(|r| r.id == id) {
+            self.pending.remove(i);
+            metrics.requests_canceled += 1;
+            crate::obs::mark("cancel", 0, id, 0);
+            return CancelOutcome::Pending;
+        }
+        let active = (0..self.cfg.batch)
+            .find(|&b| matches!(&self.slots[b], Some(s) if s.req.id == id));
+        if let Some(b) = active {
+            self.evict_slot(b);
+            metrics.requests_canceled += 1;
+            crate::obs::mark("cancel", b as u32, id, 0);
+            return CancelOutcome::Active;
+        }
+        if let Some(i) = self.parked.iter().position(|p| p.req.id == id) {
+            let mut p = self.parked.remove(i).expect("indexed parked entry");
+            self.pool.release(&mut p.lease);
+            metrics.requests_canceled += 1;
+            crate::obs::mark("cancel", 0, id, 0);
+            return CancelOutcome::Parked;
+        }
+        CancelOutcome::NotFound
+    }
+
+    /// Sweep every pending, active and parked request against its
+    /// deadline, evicting the expired ones and answering each with a
+    /// structured "deadline exceeded" error. Runs at the top of every
+    /// step, so deadlines bind at admission *and* mid-generation.
+    fn expire_deadlines(&mut self, metrics: &mut ServingMetrics) -> Vec<Response> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].expired() {
+                let r = self.pending.remove(i).expect("indexed pending entry");
+                metrics.requests_expired += 1;
+                crate::obs::mark("expired", 0, r.id, 0);
+                out.push(Response::error(r.id, "deadline exceeded"));
+            } else {
+                i += 1;
+            }
+        }
+        for b in 0..self.cfg.batch {
+            if matches!(&self.slots[b], Some(s) if s.req.expired()) {
+                let req = self.evict_slot(b);
+                metrics.requests_expired += 1;
+                crate::obs::mark("expired", b as u32, req.id, 0);
+                out.push(Response::error(req.id, "deadline exceeded"));
+            }
+        }
+        let mut i = 0;
+        while i < self.parked.len() {
+            if self.parked[i].req.expired() {
+                let mut p = self.parked.remove(i).expect("indexed parked entry");
+                self.pool.release(&mut p.lease);
+                metrics.requests_expired += 1;
+                crate::obs::mark("expired", 0, p.req.id, 0);
+                out.push(Response::error(p.req.id, "deadline exceeded"));
+            } else {
+                i += 1;
+            }
+        }
+        out
     }
 
     /// One batched iteration executing a plan's `prefill` + `run`
@@ -1494,6 +1619,9 @@ impl BatchEngine {
     /// slot's per-cycle [`SlotEvent`] — the engine-side source of the
     /// protocol's streaming `tokens` frames.
     pub fn step_events(&mut self, metrics: &mut ServingMetrics) -> Result<StepOutcome> {
+        // deadline sweep first, so the scheduler never plans (or funds)
+        // work for a request that has already missed its deadline
+        let expired = self.expire_deadlines(metrics);
         let t_sched = Instant::now();
         let view = self.sched_view();
         let plan = self.scheduler.plan(&view);
@@ -1554,10 +1682,11 @@ impl BatchEngine {
             metrics.record_cache_gauges(self.cache.nodes(), self.cache.held_blocks());
         }
         if self.slots.iter().all(|s| s.is_none()) {
-            return Ok(StepOutcome::default());
+            return Ok(StepOutcome { finished: expired, events: Vec::new() });
         }
         metrics.record_occupancy(self.active_len());
         let (mut finished, events) = self.iteration(&plan, metrics)?;
+        finished.splice(0..0, expired);
         for r in &finished {
             if r.error.is_none() {
                 metrics.record_done(

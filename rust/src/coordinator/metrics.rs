@@ -28,6 +28,11 @@ pub struct ServingMetrics {
     /// error, or a stall abort) — so done + failed covers every
     /// admitted-or-aborted request
     pub requests_failed: u64,
+    /// requests evicted by an explicit `{"cmd":"cancel"}` (counted
+    /// separately from failures: cancellation is client intent)
+    pub requests_canceled: u64,
+    /// requests answered "deadline exceeded" by the per-step sweep
+    pub requests_expired: u64,
     pub tokens_out: u64,
     pub cycles: u64,
     pub tau_sum: f64,
@@ -98,6 +103,8 @@ impl Default for ServingMetrics {
             requests_rejected: 0,
             requests_deferred: 0,
             requests_failed: 0,
+            requests_canceled: 0,
+            requests_expired: 0,
             tokens_out: 0,
             cycles: 0,
             tau_sum: 0.0,
@@ -229,6 +236,8 @@ impl ServingMetrics {
         self.requests_rejected += other.requests_rejected;
         self.requests_deferred += other.requests_deferred;
         self.requests_failed += other.requests_failed;
+        self.requests_canceled += other.requests_canceled;
+        self.requests_expired += other.requests_expired;
         self.tokens_out += other.tokens_out;
         self.cycles += other.cycles;
         self.tau_sum += other.tau_sum;
@@ -345,13 +354,16 @@ impl ServingMetrics {
             )
         };
         format!(
-            "done={} rejected={} deferred={} failed={} tokens={} tok/s={:.1} tau={:.2} \
+            "done={} rejected={} deferred={} failed={} canceled={} expired={} tokens={} \
+             tok/s={:.1} tau={:.2} \
              p50={:.0}ms p99={:.0}ms wait_p50={:.0}ms ttfc_p50={:.0}ms occ={:.2}/{} \
              pfc={} preempt={} resume={} parked={}/{} {plan}{cache}",
             self.requests_done,
             self.requests_rejected,
             self.requests_deferred,
             self.requests_failed,
+            self.requests_canceled,
+            self.requests_expired,
             self.tokens_out,
             self.tokens_per_sec(),
             self.mean_tau(),
@@ -539,5 +551,20 @@ mod tests {
         assert_eq!(m.requests_rejected, 2);
         let r = m.report();
         assert!(r.contains("rejected=2") && r.contains("deferred=1"), "{r}");
+    }
+
+    #[test]
+    fn canceled_and_expired_count_and_merge() {
+        let mut m = ServingMetrics::default();
+        m.requests_canceled += 2;
+        m.requests_expired += 1;
+        let mut delta = ServingMetrics::default();
+        delta.requests_canceled += 1;
+        delta.requests_expired += 3;
+        m.merge(&delta);
+        assert_eq!(m.requests_canceled, 3);
+        assert_eq!(m.requests_expired, 4);
+        let r = m.report();
+        assert!(r.contains("canceled=3") && r.contains("expired=4"), "{r}");
     }
 }

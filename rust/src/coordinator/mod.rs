@@ -9,7 +9,7 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 
-pub use batcher::{BatchConfig, BatchEngine, BatchMethod, SlotEvent, StepOutcome};
+pub use batcher::{BatchConfig, BatchEngine, BatchMethod, CancelOutcome, SlotEvent, StepOutcome};
 pub use metrics::ServingMetrics;
 pub use queue::{AdmissionQueue, PushError};
 pub use request::{ParseError, Request, Response};

@@ -139,6 +139,17 @@ impl<T> AdmissionQueue<T> {
         out
     }
 
+    /// Remove and return the first queued item matching `pred` (request
+    /// cancellation before admission). Leaves the rest in order.
+    pub fn remove_first<F: FnMut(&T) -> bool>(&self, mut pred: F) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let idx = g.items.iter().position(&mut pred)?;
+        let out = g.items.remove(idx);
+        drop(g);
+        self.not_full.notify_one();
+        out
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().items.len()
     }
@@ -221,6 +232,17 @@ mod tests {
         }
         prod.join().unwrap();
         assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn remove_first_plucks_matching_item() {
+        let q = AdmissionQueue::new(10);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.remove_first(|&x| x == 3), Some(3));
+        assert_eq!(q.remove_first(|&x| x == 3), None);
+        assert_eq!(q.drain_up_to(10), vec![0, 1, 2, 4]);
     }
 
     #[test]

@@ -1,11 +1,21 @@
 //! Request/response types for the serving coordinator.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::spec::{DraftConfig, GenConfig, PlannerKind};
 use crate::util::json::Json;
 
 use super::batcher::BatchMethod;
+
+/// Upper bound on `"deadline_ms"` (24h): like the draft knobs, the
+/// parse boundary rejects nonsense instead of letting a typo smuggle in
+/// an effectively-infinite (or instantly-expired zero) deadline.
+pub const MAX_DEADLINE_MS: u64 = 86_400_000;
+
+/// `"priority"` must sit in `[-MAX_PRIORITY_ABS, MAX_PRIORITY_ABS]` —
+/// bounded at the parse boundary so a stray i64 can't overflow the i32
+/// scheduler ordering or starve the fleet behind one absurd value.
+pub const MAX_PRIORITY_ABS: i64 = 1_000_000;
 
 /// A structured request-parse failure: which field was bad and why.
 /// The server echoes both back in the JSON error reply, so malformed
@@ -49,6 +59,11 @@ pub struct Request {
     /// publishing its own — for privacy-sensitive prompts or A/B
     /// measurement. No effect when the engine's cache is off.
     pub cache: bool,
+    /// completion deadline relative to arrival (`"deadline_ms"`): the
+    /// engine sweeps pending, parked and active requests every step and
+    /// answers expired ones with a structured "deadline exceeded" error
+    /// — enforced at admission *and* mid-generation. `None` = no limit.
+    pub deadline: Option<Duration>,
     pub arrival: Instant,
 }
 
@@ -62,13 +77,25 @@ impl Request {
             stream: false,
             priority: 0,
             cache: true,
+            deadline: None,
             arrival: Instant::now(),
         }
+    }
+
+    /// Time left before this request's deadline, `None` when unlimited.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.deadline.map(|d| d.saturating_sub(self.arrival.elapsed()))
+    }
+
+    /// True once the deadline has passed.
+    pub fn expired(&self) -> bool {
+        self.remaining().is_some_and(|r| r.is_zero())
     }
 
     /// Parse an API request line: {"prompt": "...", "max_new": 64,
     /// "temperature": 0.0, "seed": 1, "method": "fasteagle",
     /// "stream": false, "priority": 0, "cache": true,
+    /// "deadline_ms": 5000,
     /// "draft": {"planner": "static"|"adaptive", "depth": N,
     ///           "top_k": N, "budget": N}}.
     ///
@@ -138,10 +165,15 @@ impl Request {
         };
         let priority = match v.get("priority") {
             None => 0,
-            Some(p) => p
-                .as_i64()
-                .ok_or_else(|| ParseError::new("priority", "must be an integer"))?
-                as i32,
+            Some(p) => match p.as_i64() {
+                Some(n) if (-MAX_PRIORITY_ABS..=MAX_PRIORITY_ABS).contains(&n) => n as i32,
+                _ => {
+                    return Err(ParseError::new(
+                        "priority",
+                        format!("must be an integer in -{MAX_PRIORITY_ABS}..={MAX_PRIORITY_ABS}"),
+                    ))
+                }
+            },
         };
         let cache = match v.get("cache") {
             None => true,
@@ -149,7 +181,31 @@ impl Request {
                 .as_bool()
                 .ok_or_else(|| ParseError::new("cache", "must be a boolean"))?,
         };
-        Ok(Request { id, prompt, cfg, method, stream, priority, cache, arrival: Instant::now() })
+        let deadline = match v.get("deadline_ms") {
+            None => None,
+            Some(d) => match d.as_i64() {
+                Some(ms) if (1..=MAX_DEADLINE_MS as i64).contains(&ms) => {
+                    Some(Duration::from_millis(ms as u64))
+                }
+                _ => {
+                    return Err(ParseError::new(
+                        "deadline_ms",
+                        format!("must be an integer in 1..={MAX_DEADLINE_MS}"),
+                    ))
+                }
+            },
+        };
+        Ok(Request {
+            id,
+            prompt,
+            cfg,
+            method,
+            stream,
+            priority,
+            cache,
+            deadline,
+            arrival: Instant::now(),
+        })
     }
 
     /// Validate the optional `"draft"` object into a [`DraftConfig`].
@@ -302,7 +358,13 @@ mod tests {
             (r#"{"prompt":"p","stream":"yes"}"#, "stream"),
             (r#"{"prompt":"p","stop_on_eos":1}"#, "stop_on_eos"),
             (r#"{"prompt":"p","priority":"high"}"#, "priority"),
+            (r#"{"prompt":"p","priority":2000000}"#, "priority"),
+            (r#"{"prompt":"p","priority":-2000000}"#, "priority"),
             (r#"{"prompt":"p","cache":"warm"}"#, "cache"),
+            (r#"{"prompt":"p","deadline_ms":"soon"}"#, "deadline_ms"),
+            (r#"{"prompt":"p","deadline_ms":0}"#, "deadline_ms"),
+            (r#"{"prompt":"p","deadline_ms":-5}"#, "deadline_ms"),
+            (r#"{"prompt":"p","deadline_ms":90000000}"#, "deadline_ms"),
         ] {
             let v = Json::parse(line).unwrap();
             let err = Request::from_json(1, &v).unwrap_err();
@@ -341,6 +403,23 @@ mod tests {
             let err = Request::from_json(1, &v).unwrap_err();
             assert_eq!(err.field, field, "{line}");
         }
+    }
+
+    #[test]
+    fn deadline_parses_and_expires() {
+        let v = Json::parse(r#"{"prompt":"p"}"#).unwrap();
+        let r = Request::from_json(1, &v).unwrap();
+        assert_eq!(r.deadline, None);
+        assert!(!r.expired(), "no deadline never expires");
+        let v = Json::parse(r#"{"prompt":"p","deadline_ms":250}"#).unwrap();
+        let r = Request::from_json(1, &v).unwrap();
+        assert_eq!(r.deadline, Some(Duration::from_millis(250)));
+        assert!(!r.expired());
+        assert!(r.remaining().unwrap() <= Duration::from_millis(250));
+        let mut r = r;
+        r.arrival = Instant::now() - Duration::from_millis(500);
+        assert!(r.expired(), "past-deadline request reports expired");
+        assert_eq!(r.remaining(), Some(Duration::ZERO));
     }
 
     #[test]

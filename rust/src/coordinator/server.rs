@@ -45,12 +45,12 @@
 // these to hard errors via `-D warnings`).
 #![warn(clippy::unwrap_used, clippy::expect_used)]
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -60,6 +60,14 @@ use super::batcher::{BatchEngine, SlotEvent};
 use super::metrics::ServingMetrics;
 use super::queue::{AdmissionQueue, PushError};
 use super::request::{Request, Response};
+
+/// Lifecycle verbs a connection thread asks the engine thread to run
+/// (conn threads never touch the engine directly). The reply channel
+/// carries the structured JSON answer back to the requesting
+/// connection.
+enum Control {
+    Cancel { id: u64, reply: std::sync::mpsc::Sender<Json> },
+}
 
 /// What the engine thread sends back per request: zero or more
 /// streaming frames, then exactly one final response.
@@ -152,12 +160,37 @@ pub struct ServerConfig {
     /// max undelivered streaming frames per connection before cycles
     /// coalesce (0 = coalesce everything into one frame at completion)
     pub frame_queue: usize,
+    /// fleet identity reported by `stats` — how a router (and an
+    /// operator) tells replicas apart; 0 for a standalone server
+    pub replica_id: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:7399".into(), queue_capacity: 64, frame_queue: 16 }
+        ServerConfig {
+            addr: "127.0.0.1:7399".into(),
+            queue_capacity: 64,
+            frame_queue: 16,
+            replica_id: 0,
+        }
     }
+}
+
+/// Everything a connection thread needs, bundled so accept can hand
+/// one `Arc` to each spawned thread.
+struct ConnShared {
+    queue: Arc<AdmissionQueue<(Request, ConnReply)>>,
+    shutdown: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
+    metrics: Arc<Mutex<ServingMetrics>>,
+    next_id: Arc<AtomicU64>,
+    control: Arc<Mutex<VecDeque<Control>>>,
+    /// occupied engine slots, refreshed by the engine loop each step
+    active_slots: Arc<AtomicUsize>,
+    /// engine-internal pending + parked, refreshed alongside
+    engine_backlog: Arc<AtomicUsize>,
+    replica_id: usize,
+    started: Instant,
 }
 
 pub struct Server {
@@ -165,6 +198,13 @@ pub struct Server {
     queue: Arc<AdmissionQueue<(Request, ConnReply)>>,
     metrics: Arc<Mutex<ServingMetrics>>,
     shutdown: Arc<AtomicBool>,
+    /// drain mode: admission refused with a structured error, in-flight
+    /// work finishes, then `serve` returns cleanly (rolling restarts)
+    draining: Arc<AtomicBool>,
+    control: Arc<Mutex<VecDeque<Control>>>,
+    active_slots: Arc<AtomicUsize>,
+    engine_backlog: Arc<AtomicUsize>,
+    started: Instant,
     next_id: AtomicU64,
 }
 
@@ -174,42 +214,63 @@ impl Server {
             queue: Arc::new(AdmissionQueue::new(cfg.queue_capacity)),
             metrics: Arc::new(Mutex::new(ServingMetrics::default())),
             shutdown: Arc::new(AtomicBool::new(false)),
+            draining: Arc::new(AtomicBool::new(false)),
+            control: Arc::new(Mutex::new(VecDeque::new())),
+            active_slots: Arc::new(AtomicUsize::new(0)),
+            engine_backlog: Arc::new(AtomicUsize::new(0)),
+            started: Instant::now(),
             next_id: AtomicU64::new(1),
             cfg,
         }
     }
 
-    /// Serve until a shutdown command arrives. The continuous-batching
-    /// `engine` runs on the calling thread; accept/connection threads
-    /// are spawned internally.
-    pub fn serve(&self, mut engine: BatchEngine) -> Result<ServingMetrics> {
-        let listener =
-            TcpListener::bind(&self.cfg.addr).with_context(|| self.cfg.addr.clone())?;
+    /// Serve until a shutdown command arrives (or a drain completes).
+    /// The continuous-batching `engine` runs on the calling thread;
+    /// accept/connection threads are spawned internally. A bind failure
+    /// is an ordinary error (the caller exits non-zero with the
+    /// message), never a panic.
+    pub fn serve(&self, engine: BatchEngine) -> Result<ServingMetrics> {
+        let listener = TcpListener::bind(&self.cfg.addr)
+            .with_context(|| format!("bind {}", self.cfg.addr))?;
+        self.serve_on(listener, engine)
+    }
+
+    /// Like [`serve`](Self::serve) but over a pre-bound listener — how
+    /// the router's `--spawn` mode runs replicas on OS-assigned ports
+    /// it already knows the address of.
+    pub fn serve_on(&self, listener: TcpListener, mut engine: BatchEngine) -> Result<ServingMetrics> {
         listener.set_nonblocking(true)?;
         crate::log_info!(
-            "serving {} (default method={}, batch={}, policy={}) on {}",
+            "serving {} (default method={}, batch={}, policy={}, replica={}) on {}",
             engine.spec.name,
             engine.method().name(),
             engine.batch(),
             engine.policy_name(),
+            self.cfg.replica_id,
             self.cfg.addr
         );
         // accept loop on a helper thread
-        let q = Arc::clone(&self.queue);
         let sd = Arc::clone(&self.shutdown);
-        let metrics = Arc::clone(&self.metrics);
-        let next = Arc::new(AtomicU64::new(1));
+        let shared = Arc::new(ConnShared {
+            queue: Arc::clone(&self.queue),
+            shutdown: Arc::clone(&self.shutdown),
+            draining: Arc::clone(&self.draining),
+            metrics: Arc::clone(&self.metrics),
+            next_id: Arc::new(AtomicU64::new(1)),
+            control: Arc::clone(&self.control),
+            active_slots: Arc::clone(&self.active_slots),
+            engine_backlog: Arc::clone(&self.engine_backlog),
+            replica_id: self.cfg.replica_id,
+            started: self.started,
+        });
         let accept_handle = std::thread::spawn(move || {
             let mut conns = Vec::new();
             while !sd.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let q = Arc::clone(&q);
-                        let sd = Arc::clone(&sd);
-                        let metrics = Arc::clone(&metrics);
-                        let next = Arc::clone(&next);
+                        let shared = Arc::clone(&shared);
                         conns.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, q, sd, metrics, next);
+                            let _ = handle_conn(stream, shared);
                         }));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -218,6 +279,11 @@ impl Server {
                     Err(_) => break,
                 }
             }
+            // close the listener *before* joining connection threads: a
+            // drain/shutdown must not race a late accept() — once the
+            // loop exits, no new connection can sneak in while we wait
+            // for the existing ones to wind down
+            drop(listener);
             for c in conns {
                 let _ = c.join();
             }
@@ -231,6 +297,63 @@ impl Server {
         let mut streaming: HashSet<u64> = HashSet::new();
         let mut gate = FrameGate::new(self.cfg.frame_queue);
         while !self.shutdown.load(Ordering::Relaxed) {
+            // lifecycle verbs first: a cancel acts before this step's
+            // scheduling and is answered even while the engine idles
+            let ctl: Vec<Control> = {
+                let mut q = self
+                    .control
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+                q.drain(..).collect()
+            };
+            for c in ctl {
+                let Control::Cancel { id, reply } = c;
+                let mut delta = ServingMetrics::default();
+                let outcome = engine.cancel(id, &mut delta);
+                self.metrics
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
+                    .merge(&delta);
+                let was = if outcome.found() {
+                    streaming.remove(&id);
+                    gate.forget(id);
+                    if let Some(conn) = inflight.remove(&id) {
+                        let _ = conn.tx.send(Reply::Done(Response::error(id, "canceled")));
+                    }
+                    Some(outcome.name())
+                } else if let Some((req, conn)) =
+                    self.queue.remove_first(|(r, _)| r.id == id)
+                {
+                    // still in the admission queue: never reached the
+                    // engine, so account for it here
+                    self.metrics
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner)
+                        .requests_canceled += 1;
+                    let _ = conn.tx.send(Reply::Done(Response::error(req.id, "canceled")));
+                    Some("queued")
+                } else {
+                    None
+                };
+                let _ = reply.send(Json::obj(vec![
+                    ("ok", Json::Bool(was.is_some())),
+                    ("req", Json::num(id as f64)),
+                    ("was", Json::str(was.unwrap_or("not_found"))),
+                ]));
+            }
+            // fleet gauges for the stats reply, refreshed once per step
+            self.active_slots.store(engine.active_len(), Ordering::Relaxed);
+            self.engine_backlog
+                .store(engine.pending_len() + engine.parked_len(), Ordering::Relaxed);
+            // a drain completes once nothing is queued, running, or
+            // awaiting its final reply — then serve() returns cleanly
+            if self.draining.load(Ordering::Relaxed)
+                && self.queue.is_empty()
+                && !engine.has_work()
+                && inflight.is_empty()
+            {
+                break;
+            }
             // admit up to the engine's slot count; the rest stays in the
             // bounded queue so capacity shedding keeps working
             let mut drained = self.queue.drain_up_to(engine.admission_room());
@@ -338,6 +461,9 @@ impl Server {
                 }
             }
         }
+        // a drain exit reaches here with shutdown still false: raise it
+        // so the accept thread stops and idle keep-alives wind down
+        self.shutdown.store(true, Ordering::Relaxed);
         self.queue.close();
         // Drop every reply channel (queued and in-flight) *before*
         // joining the connection threads: each blocked `rx.recv()` then
@@ -345,7 +471,22 @@ impl Server {
         // otherwise join would wait on connections that wait on us.
         drop(self.queue.drain_up_to(usize::MAX));
         drop(inflight);
+        // cancel verbs that raced the exit: dropping their reply senders
+        // unblocks the waiting connection threads
+        self.control
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .clear();
         let _ = accept_handle.join();
+        // prove the clean exit: abort whatever was still running, hand
+        // the prefix cache's blocks back, and demand the pool balances —
+        // a leak here is a refcount bug worth a non-zero exit
+        drop(engine.abort_all());
+        engine.release_cache();
+        let leaked = engine.leaked_blocks();
+        if leaked > 0 {
+            anyhow::bail!("exit with {leaked} leaked KV pool blocks");
+        }
         let m = self
             .metrics
             .lock()
@@ -384,13 +525,8 @@ fn phase_stats_json(m: &ServingMetrics) -> Json {
     Json::Obj(methods)
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    queue: Arc<AdmissionQueue<(Request, ConnReply)>>,
-    shutdown: Arc<AtomicBool>,
-    metrics: Arc<Mutex<ServingMetrics>>,
-    next_id: Arc<AtomicU64>,
-) -> Result<()> {
+fn handle_conn(stream: TcpStream, shared: Arc<ConnShared>) -> Result<()> {
+    let ConnShared { queue, shutdown, metrics, next_id, .. } = &*shared;
     // a read timeout lets idle keep-alive connections notice shutdown:
     // without it, a client that simply stays connected would block this
     // thread in read_line forever and serve() could never join it
@@ -430,19 +566,96 @@ fn handle_conn(
                 continue;
             }
         };
-        match v.get("cmd").and_then(Json::as_str) {
-            Some("shutdown") => {
+        if let Some(cmd) = v.get("cmd") {
+            let Some(cmd) = cmd.as_str() else {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![
+                        ("error", Json::str("cmd must be a string")),
+                        ("field", Json::str("cmd")),
+                    ])
+                    .to_string()
+                )?;
+                continue;
+            };
+            match cmd {
+            "shutdown" => {
                 shutdown.store(true, Ordering::Relaxed);
                 writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]).to_string())?;
                 return Ok(());
             }
-            Some("stats") => {
+            "drain" => {
+                // stop admission; in-flight work finishes, then serve()
+                // returns cleanly. stats/metrics stay answerable so an
+                // operator (or the router) can watch the drain progress.
+                shared.draining.store(true, Ordering::Relaxed);
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("draining", Json::Bool(true)),
+                    ])
+                    .to_string()
+                )?;
+                continue;
+            }
+            "cancel" => {
+                let id = match v.get("req").and_then(Json::as_i64) {
+                    Some(n) if n >= 1 => n as u64,
+                    _ => {
+                        writeln!(
+                            writer,
+                            "{}",
+                            Json::obj(vec![
+                                ("error", Json::str("cancel needs a positive integer req id")),
+                                ("field", Json::str("req")),
+                            ])
+                            .to_string()
+                        )?;
+                        continue;
+                    }
+                };
+                let (tx, rx) = std::sync::mpsc::channel();
+                shared
+                    .control
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
+                    .push_back(Control::Cancel { id, reply: tx });
+                // the engine loop answers within one step (≤50ms idle
+                // tick); the timeout only fires if it died underneath us
+                match rx.recv_timeout(Duration::from_secs(10)) {
+                    Ok(j) => writeln!(writer, "{}", j.to_string())?,
+                    Err(_) => writeln!(
+                        writer,
+                        "{}",
+                        Json::obj(vec![("error", Json::str("server shutting down"))])
+                            .to_string()
+                    )?,
+                }
+                continue;
+            }
+            "stats" => {
                 let m = metrics.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                 let j = Json::obj(vec![
+                    ("replica_id", Json::num(shared.replica_id as f64)),
+                    ("uptime_ms", Json::num(shared.started.elapsed().as_millis() as f64)),
+                    ("draining", Json::Bool(shared.draining.load(Ordering::Relaxed))),
+                    ("active", Json::num(shared.active_slots.load(Ordering::Relaxed) as f64)),
+                    (
+                        "queued",
+                        Json::num(
+                            (queue.len() + shared.engine_backlog.load(Ordering::Relaxed))
+                                as f64,
+                        ),
+                    ),
                     ("requests_done", Json::num(m.requests_done as f64)),
                     ("requests_rejected", Json::num(m.requests_rejected as f64)),
                     ("requests_deferred", Json::num(m.requests_deferred as f64)),
                     ("requests_failed", Json::num(m.requests_failed as f64)),
+                    ("requests_canceled", Json::num(m.requests_canceled as f64)),
+                    ("requests_expired", Json::num(m.requests_expired as f64)),
                     ("tokens_out", Json::num(m.tokens_out as f64)),
                     ("tok_per_sec", Json::num(m.tokens_per_sec())),
                     ("mean_tau", Json::num(m.mean_tau())),
@@ -469,13 +682,13 @@ fn handle_conn(
                 writeln!(writer, "{}", j.to_string())?;
                 continue;
             }
-            Some("trace") => {
+            "trace" => {
                 // one line of Chrome trace-event JSON; "{\"traceEvents\":[]...}"
                 // when the recorder is disabled or empty
                 writeln!(writer, "{}", crate::obs::chrome_trace_json())?;
                 continue;
             }
-            Some("metrics") => {
+            "metrics" => {
                 // render under the lock, write after releasing it so a
                 // slow client never stalls the stats path
                 let text = {
@@ -486,9 +699,67 @@ fn handle_conn(
                 writer.flush()?;
                 continue;
             }
-            _ => {}
+            other => {
+                // unknown verbs are a protocol error, never a generation
+                // request: name the verb and list what the server speaks
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![
+                        (
+                            "error",
+                            Json::str(&format!(
+                                "unknown cmd {other:?} (stats|trace|metrics|cancel|drain|shutdown)"
+                            )),
+                        ),
+                        ("field", Json::str("cmd")),
+                    ])
+                    .to_string()
+                )?;
+                continue;
+            }
+            }
         }
-        let id = next_id.fetch_add(1, Ordering::Relaxed);
+        if shared.draining.load(Ordering::Relaxed) {
+            // admission is closed for good on this replica; a router
+            // keys on "draining" to reroute instead of retrying here
+            writeln!(
+                writer,
+                "{}",
+                Json::obj(vec![
+                    ("error", Json::str("server draining")),
+                    ("draining", Json::Bool(true)),
+                ])
+                .to_string()
+            )?;
+            continue;
+        }
+        // the router forwards requests with its own global id so frames
+        // and finals match across the fleet; direct clients omit "id"
+        // and get a server-assigned one
+        let id = match v.get("id") {
+            None => next_id.fetch_add(1, Ordering::Relaxed),
+            Some(j) => match j.as_i64() {
+                Some(n) if n >= 1 => {
+                    let id = n as u64;
+                    // keep server-assigned ids clear of explicit ones
+                    next_id.fetch_max(id + 1, Ordering::Relaxed);
+                    id
+                }
+                _ => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        Json::obj(vec![
+                            ("error", Json::str("id must be a positive integer")),
+                            ("field", Json::str("id")),
+                        ])
+                        .to_string()
+                    )?;
+                    continue;
+                }
+            },
+        };
         match Request::from_json(id, &v) {
             Ok(req) => {
                 let (tx, rx) = std::sync::mpsc::channel();

@@ -22,6 +22,7 @@ pub mod coordinator;
 pub mod draft;
 pub mod model;
 pub mod obs;
+pub mod router;
 pub mod runtime;
 pub mod spec;
 pub mod util;

@@ -4,6 +4,7 @@
 //! Commands:
 //!   generate   one-shot generation with any drafter
 //!   serve      TCP JSON-lines API server over the continuous batcher
+//!   route      multi-replica router over one or more serve processes
 //!   batch      closed-workload run through the continuous batcher
 //!   bench      regenerate paper tables/figures (table1|table2|table3|fig3|microbench|all)
 //!   selfcheck  losslessness + stack sanity across all drafters
@@ -40,9 +41,19 @@ commands:
   serve      [--addr HOST:PORT] [--method vanilla|eagle3|fasteagle] [--target T]
              [--batch B] [--chain N] [--pool-blocks N] [--queue N]
              [--policy fcfs|spf|cache] [--prefill-chunk N] [--frame-queue N]
+             [--replica-id N]   (fleet identity reported by {\"cmd\":\"stats\"})
              [--prefix-cache]   (radix prefix cache; per-request opt-out
              via \"cache\": false)
              [--trace]   (arm the flight recorder; dump via {\"cmd\":\"trace\"})
+             lifecycle verbs over the wire: {\"cmd\":\"cancel\",\"req\":ID},
+             {\"cmd\":\"drain\"} (finish in-flight then exit), \"deadline_ms\"
+             per request
+  route      --replicas HOST:PORT,HOST:PORT,... | --spawn N
+             [--addr HOST:PORT] [--policy rr|least-loaded] [--poll-ms N]
+             [--max-retries N] [--forward-timeout-ms N]
+             multi-replica router: global request ids, retry-on-failure,
+             fleet stats/metrics; --spawn boots N in-process replicas
+             sharing one artifact tree (serve flags apply to them)
   batch      [--batch B] [--method vanilla|eagle3|fasteagle] [--requests N]
              [--policy fcfs|spf|cache] [--prefix-cache]
   trace      [--out FILE] [--batch B] [--requests N] [--max-new N]
@@ -202,10 +213,127 @@ fn cmd_serve(args: &Args) -> Result<()> {
         addr: args.str_or("addr", "127.0.0.1:7399"),
         queue_capacity: args.usize_or("queue", 64),
         frame_queue: args.usize_or("frame-queue", 16),
+        replica_id: args.usize_or("replica-id", 0),
     });
-    let metrics = server.serve(engine)?;
+    // bind-in-use, KV leaks at drain exit, etc. exit with a message,
+    // not a panic backtrace
+    let metrics = match server.serve(engine) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
     println!("server done: {}", metrics.report());
     Ok(())
+}
+
+/// `fasteagle route --spawn N`: boot N replica servers on OS-assigned
+/// loopback ports, each with its own runtime + engine over the same
+/// artifact tree (the PJRT buffer handles are deliberately
+/// per-thread), and hand their addresses to the router.
+fn spawn_replicas(
+    args: &Args,
+    n: usize,
+) -> Result<(Vec<String>, Vec<std::thread::JoinHandle<Result<String>>>)> {
+    let kind = match args.get("backend") {
+        Some(b) => BackendKind::from_str(b)?,
+        None => match std::env::var("FE_BACKEND") {
+            Ok(v) if !v.is_empty() => BackendKind::from_str(&v)?,
+            _ => BackendKind::Pjrt,
+        },
+    };
+    let root = artifacts_dir(args);
+    let target = args.str_or("target", "base");
+    let dir = std::path::PathBuf::from(format!("{root}/{target}"));
+    let cfg = batch_config(args)?;
+    let queue_capacity = args.usize_or("queue", 64);
+    let frame_queue = args.usize_or("frame-queue", 16);
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..n {
+        // bind in the parent so the address is known (and the port
+        // race-free) before the router starts polling
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        addrs.push(addr.clone());
+        let (dir, cfg) = (dir.clone(), cfg.clone());
+        handles.push(std::thread::spawn(move || -> Result<String> {
+            let rt = Arc::new(Runtime::new(kind)?);
+            let store = Rc::new(ArtifactStore::open(rt, dir)?);
+            let engine = BatchEngine::new(Rc::clone(&store), cfg)?;
+            let server = Server::new(ServerConfig {
+                addr,
+                queue_capacity,
+                frame_queue,
+                replica_id: i + 1,
+            });
+            Ok(server.serve_on(listener, engine)?.report())
+        }));
+    }
+    Ok((addrs, handles))
+}
+
+fn cmd_route(args: &Args) -> Result<()> {
+    use fasteagle::router::{make_policy, query_line, Router, RouterConfig};
+
+    let policy_name = args.str_or("policy", "least-loaded");
+    let policy = make_policy(&policy_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown route policy {policy_name:?} (rr|least-loaded)"))?;
+    let cfg = RouterConfig {
+        addr: args.str_or("addr", "127.0.0.1:7400"),
+        poll_ms: args.usize_or("poll-ms", 200) as u64,
+        max_retries: args.usize_or("max-retries", 2),
+        forward_timeout_ms: args.usize_or("forward-timeout-ms", 120_000) as u64,
+    };
+    let (addrs, spawned) = match args.get("spawn") {
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--spawn must be a number, got {v:?}"))?;
+            if !(1..=16).contains(&n) {
+                anyhow::bail!("--spawn must be in 1..=16, got {n}");
+            }
+            spawn_replicas(args, n)?
+        }
+        None => {
+            let list = args
+                .get("replicas")
+                .context("route needs --replicas HOST:PORT,HOST:PORT,... or --spawn N")?;
+            let addrs: Vec<String> = list
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if addrs.is_empty() {
+                anyhow::bail!("--replicas has no addresses");
+            }
+            (addrs, Vec::new())
+        }
+    };
+    let router = Arc::new(Router::new(cfg, addrs.clone(), policy));
+    let served = router.serve();
+    if !spawned.is_empty() {
+        // the router is down; wind our own replicas down too (a dead
+        // or already-exited replica just fails the connect)
+        for addr in &addrs {
+            let _ = query_line(addr, r#"{"cmd":"shutdown"}"#, std::time::Duration::from_secs(10));
+        }
+        for h in spawned {
+            match h.join() {
+                Ok(Ok(report)) => println!("replica done: {report}"),
+                Ok(Err(e)) => eprintln!("replica failed: {e:#}"),
+                Err(_) => eprintln!("replica thread panicked"),
+            }
+        }
+    }
+    match served {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            eprintln!("route failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn cmd_batch(args: &Args) -> Result<()> {
@@ -511,6 +639,7 @@ fn main() -> Result<()> {
     match cmd {
         "generate" => cmd_generate(&args),
         "serve" => cmd_serve(&args),
+        "route" => cmd_route(&args),
         "batch" => cmd_batch(&args),
         "bench" => {
             let which = args

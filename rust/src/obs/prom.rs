@@ -62,11 +62,13 @@ fn hist(out: &mut String, name: &str, help: &str, h: &Histogram) {
 /// Render the full exposition, terminated by a `# EOF` line.
 pub fn render(m: &ServingMetrics) -> String {
     let mut out = String::new();
-    let counters: [(&str, &str, u64); 13] = [
+    let counters: [(&str, &str, u64); 15] = [
         ("fe_requests_done_total", "completed generations", m.requests_done),
         ("fe_requests_rejected_total", "requests shed at admission", m.requests_rejected),
         ("fe_requests_deferred_total", "requests deferred under KV pressure", m.requests_deferred),
         ("fe_requests_failed_total", "requests answered with an error", m.requests_failed),
+        ("fe_requests_canceled_total", "requests evicted by a cancel command", m.requests_canceled),
+        ("fe_requests_expired_total", "requests that missed their deadline", m.requests_expired),
         ("fe_tokens_out_total", "committed output tokens", m.tokens_out),
         ("fe_cycles_total", "decode cycles run", m.cycles),
         ("fe_prefill_chunks_total", "prompt chunks ingested on the batch lane", m.prefill_chunks),
@@ -145,6 +147,8 @@ mod tests {
         m.cache_misses = 2;
         m.cache_saved_tokens = 32;
         m.record_cache_gauges(3, 12);
+        m.requests_canceled = 1;
+        m.requests_expired = 2;
         m
     }
 
@@ -188,6 +192,8 @@ mod tests {
     fn buckets_are_monotone_and_counters_present() {
         let text = render(&sample_metrics());
         assert!(text.contains("fe_requests_done_total 3"));
+        assert!(text.contains("fe_requests_canceled_total 1"));
+        assert!(text.contains("fe_requests_expired_total 2"));
         assert!(text.contains("fe_tokens_out_total 42"));
         assert!(text.contains("fe_prefix_cache_hits_total 2"));
         assert!(text.contains("fe_prefix_cache_saved_tokens_total 32"));

@@ -1,0 +1,275 @@
+//! Fleet-level metrics: the router's own counters plus the merge of
+//! every replica's Prometheus exposition into one page.
+//!
+//! Each replica serves its exposition over `{"cmd":"metrics"}`; the
+//! router fetches all of them, tags every sample with a
+//! `replica="<index>"` label, groups samples under one `# HELP`/`# TYPE`
+//! header per metric family, appends its own `fe_router_*` series, and
+//! terminates with a single `# EOF` — so one scrape of the router sees
+//! the whole fleet with per-replica resolution.
+
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::replica::Replica;
+
+/// Router-side counters, all monotone.
+#[derive(Default)]
+pub struct RouterMetrics {
+    /// generation requests accepted (each assigned a global id)
+    pub requests: AtomicU64,
+    /// reroutes of not-yet-started requests after a replica failure
+    pub retries: AtomicU64,
+    /// requests that died mid-stream and were answered with a
+    /// structured error (frames already delivered, so no retry)
+    pub midstream_failures: AtomicU64,
+    /// cancel verbs forwarded to a replica
+    pub cancels: AtomicU64,
+}
+
+fn sample_with_replica(line: &str, replica: usize) -> String {
+    // `name{labels} value` gains `replica=..,` inside the braces;
+    // `name value` gains a fresh label set
+    if let Some(open) = line.find('{') {
+        format!("{}{{replica=\"{replica}\",{}", &line[..open], &line[open + 1..])
+    } else if let Some(sp) = line.find(' ') {
+        format!("{}{{replica=\"{replica}\"}}{}", &line[..sp], &line[sp..])
+    } else {
+        line.to_string()
+    }
+}
+
+/// Metric family name of a sample line: everything before `{` or ` `,
+/// with the histogram-suffix kept (so `x_bucket`, `x_sum`, `x_count`
+/// group under their own sample runs but inherit `x`'s header slot).
+fn sample_name(line: &str) -> &str {
+    let end = line.find(|c| c == '{' || c == ' ').unwrap_or(line.len());
+    &line[..end]
+}
+
+/// Family a `_bucket`/`_sum`/`_count` series belongs to.
+fn family_of(name: &str) -> &str {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(stem) = name.strip_suffix(suffix) {
+            return stem;
+        }
+    }
+    name
+}
+
+/// Merge per-replica expositions (`(replica index, body)` pairs, each
+/// ending in `# EOF`) into one fleet page, without the terminator —
+/// [`render_fleet`] appends the router's own series and the final
+/// `# EOF`.
+fn merge_expositions(bodies: &[(usize, String)]) -> String {
+    // family -> (header lines, sample lines); insertion-ordered so the
+    // merged page reads like a replica's own
+    let mut order: Vec<String> = Vec::new();
+    let mut headers: std::collections::HashMap<String, Vec<String>> = Default::default();
+    let mut samples: std::collections::HashMap<String, Vec<String>> = Default::default();
+    for (replica, body) in bodies {
+        for line in body.lines() {
+            if line == "# EOF" || line.is_empty() {
+                continue;
+            }
+            if let Some(rest) =
+                line.strip_prefix("# HELP ").or_else(|| line.strip_prefix("# TYPE "))
+            {
+                let name = rest.split(' ').next().unwrap_or("");
+                let fam = family_of(name).to_string();
+                let entry = headers.entry(fam.clone()).or_insert_with(|| {
+                    order.push(fam.clone());
+                    Vec::new()
+                });
+                // first replica's header wins; duplicates dropped
+                if !entry.iter().any(|h| h == line) {
+                    entry.push(line.to_string());
+                }
+            } else {
+                let fam = family_of(sample_name(line)).to_string();
+                if !headers.contains_key(&fam) {
+                    headers.entry(fam.clone()).or_insert_with(|| {
+                        order.push(fam.clone());
+                        Vec::new()
+                    });
+                }
+                samples
+                    .entry(fam)
+                    .or_default()
+                    .push(sample_with_replica(line, *replica));
+            }
+        }
+    }
+    let mut out = String::new();
+    for fam in &order {
+        for h in headers.get(fam).into_iter().flatten() {
+            let _ = writeln!(out, "{h}");
+        }
+        for s in samples.get(fam).into_iter().flatten() {
+            let _ = writeln!(out, "{s}");
+        }
+    }
+    out
+}
+
+/// The full fleet exposition: merged replica pages + `fe_router_*`
+/// series, `# EOF`-terminated. `bodies` holds whatever replica pages
+/// could be fetched (dead replicas contribute only their
+/// `fe_router_replica_up 0` gauge).
+pub fn render_fleet(
+    bodies: &[(usize, String)],
+    replicas: &[Arc<Replica>],
+    m: &RouterMetrics,
+) -> String {
+    let mut out = merge_expositions(bodies);
+    let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    };
+    counter(
+        &mut out,
+        "fe_router_requests_total",
+        "generation requests accepted by the router",
+        m.requests.load(Ordering::Relaxed),
+    );
+    counter(
+        &mut out,
+        "fe_router_retries_total",
+        "requests rerouted to a survivor after a replica failure",
+        m.retries.load(Ordering::Relaxed),
+    );
+    counter(
+        &mut out,
+        "fe_router_midstream_failures_total",
+        "requests lost mid-stream and answered with a structured error",
+        m.midstream_failures.load(Ordering::Relaxed),
+    );
+    counter(
+        &mut out,
+        "fe_router_cancels_total",
+        "cancel verbs forwarded to replicas",
+        m.cancels.load(Ordering::Relaxed),
+    );
+    let labeled = |out: &mut String, name: &str, kind: &str, help: &str| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+    };
+    labeled(&mut out, "fe_router_replica_up", "gauge", "1 if the replica is routable");
+    for r in replicas {
+        let _ = writeln!(
+            out,
+            "fe_router_replica_up{{replica=\"{}\"}} {}",
+            r.index,
+            u8::from(r.is_alive())
+        );
+    }
+    labeled(
+        &mut out,
+        "fe_router_replica_inflight",
+        "gauge",
+        "requests currently forwarded and unanswered",
+    );
+    for r in replicas {
+        let _ = writeln!(
+            out,
+            "fe_router_replica_inflight{{replica=\"{}\"}} {}",
+            r.index,
+            r.inflight.load(Ordering::Relaxed)
+        );
+    }
+    labeled(
+        &mut out,
+        "fe_router_forwarded_total",
+        "counter",
+        "requests ever forwarded to the replica",
+    );
+    for r in replicas {
+        let _ = writeln!(
+            out,
+            "fe_router_forwarded_total{{replica=\"{}\"}} {}",
+            r.index,
+            r.forwarded.load(Ordering::Relaxed)
+        );
+    }
+    labeled(
+        &mut out,
+        "fe_router_replica_failures_total",
+        "counter",
+        "times the replica was marked dead",
+    );
+    for r in replicas {
+        let _ = writeln!(
+            out,
+            "fe_router_replica_failures_total{{replica=\"{}\"}} {}",
+            r.index,
+            r.failures.load(Ordering::Relaxed)
+        );
+    }
+    out.push_str("# EOF\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PAGE_A: &str = "\
+# HELP fe_requests_done_total completed generations
+# TYPE fe_requests_done_total counter
+fe_requests_done_total 3
+# HELP fe_phase_us engine section wall time
+# TYPE fe_phase_us histogram
+fe_phase_us_bucket{method=\"fasteagle\",le=\"+Inf\"} 1
+fe_phase_us_count{method=\"fasteagle\"} 1
+# EOF
+";
+
+    const PAGE_B: &str = "\
+# HELP fe_requests_done_total completed generations
+# TYPE fe_requests_done_total counter
+fe_requests_done_total 5
+# EOF
+";
+
+    #[test]
+    fn merge_labels_samples_and_dedupes_headers() {
+        let merged =
+            merge_expositions(&[(0, PAGE_A.to_string()), (1, PAGE_B.to_string())]);
+        assert_eq!(
+            merged.matches("# HELP fe_requests_done_total").count(),
+            1,
+            "one header per family"
+        );
+        assert!(merged.contains("fe_requests_done_total{replica=\"0\"} 3"));
+        assert!(merged.contains("fe_requests_done_total{replica=\"1\"} 5"));
+        // existing labels keep their place after the injected one
+        assert!(merged
+            .contains("fe_phase_us_bucket{replica=\"0\",method=\"fasteagle\",le=\"+Inf\"} 1"));
+        // histogram suffixes group under the family header
+        assert!(merged.contains("fe_phase_us_count{replica=\"0\",method=\"fasteagle\"} 1"));
+        assert!(!merged.contains("# EOF"), "terminator is render_fleet's job");
+    }
+
+    #[test]
+    fn render_fleet_appends_router_series_and_terminator() {
+        let replicas =
+            vec![Arc::new(Replica::new("a:1".into(), 0)), Arc::new(Replica::new("b:2".into(), 1))];
+        replicas[1].mark_dead();
+        let m = RouterMetrics::default();
+        m.requests.store(7, Ordering::Relaxed);
+        m.retries.store(2, Ordering::Relaxed);
+        let page = render_fleet(&[(0, PAGE_B.to_string())], &replicas, &m);
+        assert!(page.ends_with("# EOF\n"));
+        assert_eq!(page.matches("# EOF").count(), 1);
+        assert!(page.contains("fe_router_requests_total 7"));
+        assert!(page.contains("fe_router_retries_total 2"));
+        assert!(page.contains("fe_router_replica_up{replica=\"0\"} 1"));
+        assert!(page.contains("fe_router_replica_up{replica=\"1\"} 0"));
+        assert!(page.contains("fe_router_forwarded_total{replica=\"0\"} 0"));
+        assert!(page.contains("fe_router_replica_failures_total{replica=\"1\"} 1"));
+    }
+}

@@ -1,0 +1,738 @@
+//! Multi-replica serving tier: a standalone router process that speaks
+//! the same JSON-lines protocol as `coordinator/server.rs` and fans
+//! requests out over a fleet of replica servers.
+//!
+//! The router assigns every generation request a global id (injected
+//! into the forwarded line as `"id"`, which replicas honor), picks a
+//! replica through a pluggable [`RoutePolicy`] fed by periodic replica
+//! `stats` polls, and streams the replica's reply lines back to the
+//! client **byte-for-byte** — a client talking through the router sees
+//! exactly the frames and final response it would see talking to the
+//! replica directly.
+//!
+//! Failure semantics (exactly-once token delivery):
+//! - a replica that dies before delivering any line: the request is
+//!   retried on a survivor (`fe_router_retries_total`), at most
+//!   `max_retries` times;
+//! - a replica that dies mid-stream (frames already forwarded): the
+//!   client gets a structured `{"id", "error", "replica",
+//!   "frames_delivered"}` line — never a silent hang, never replayed
+//!   frames;
+//! - a dead replica is probed with exponential backoff and rejoins the
+//!   rotation when its `stats` answer again.
+//!
+//! Router commands (same framing as a replica):
+//!   {"cmd":"stats"}    -> per-replica table + fleet aggregates
+//!   {"cmd":"metrics"}  -> every replica's Prometheus exposition merged
+//!                         into one page (samples labeled replica="K")
+//!                         + fe_router_* series, "# EOF"-terminated
+//!   {"cmd":"cancel","req":N} -> forwarded to the replica running N
+//!   {"cmd":"drain"}    -> forwarded to every alive replica
+//!   {"cmd":"shutdown"} -> stops the router (replicas keep running;
+//!                         `fasteagle route --spawn` shuts its spawned
+//!                         replicas down itself)
+
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod metrics;
+pub mod policy;
+pub mod replica;
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+pub use metrics::RouterMetrics;
+pub use policy::{make_policy, ReplicaView, RoutePolicy};
+pub use replica::{query_json, query_line, query_text, Replica, ReplicaStats};
+
+pub struct RouterConfig {
+    pub addr: String,
+    /// replica `stats` poll cadence
+    pub poll_ms: u64,
+    /// reroute budget per request (failures before any reply line)
+    pub max_retries: usize,
+    /// read timeout against a replica while forwarding; a replica
+    /// silent for this long counts as failed
+    pub forward_timeout_ms: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            addr: "127.0.0.1:7400".into(),
+            poll_ms: 200,
+            max_retries: 2,
+            forward_timeout_ms: 120_000,
+        }
+    }
+}
+
+/// How one forward attempt against a replica ended.
+enum ForwardResult {
+    /// final response line delivered to the client
+    Done,
+    /// replica answered "server draining" before any token: retryable
+    /// without marking it dead
+    Drained,
+    /// connection failed or closed early; `frames` lines were already
+    /// forwarded to the client
+    Failed { frames: usize },
+}
+
+pub struct Router {
+    cfg: RouterConfig,
+    replicas: Vec<Arc<Replica>>,
+    policy: Mutex<Box<dyn RoutePolicy>>,
+    policy_name: &'static str,
+    pub metrics: Arc<RouterMetrics>,
+    next_id: AtomicU64,
+    /// global request id -> replica index, for cancel routing
+    inflight: Mutex<HashMap<u64, usize>>,
+    shutdown: Arc<AtomicBool>,
+    started: Instant,
+}
+
+impl Router {
+    pub fn new(
+        cfg: RouterConfig,
+        replica_addrs: Vec<String>,
+        policy: Box<dyn RoutePolicy>,
+    ) -> Router {
+        let replicas = replica_addrs
+            .into_iter()
+            .enumerate()
+            .map(|(i, addr)| Arc::new(Replica::new(addr, i)))
+            .collect();
+        Router {
+            cfg,
+            replicas,
+            policy_name: policy.name(),
+            policy: Mutex::new(policy),
+            metrics: Arc::new(RouterMetrics::default()),
+            next_id: AtomicU64::new(1),
+            inflight: Mutex::new(HashMap::new()),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    /// Accept clients until a shutdown command. The poll thread keeps
+    /// replica liveness and load fresh; each client connection gets its
+    /// own thread, like the replica server.
+    pub fn serve(self: &Arc<Router>) -> Result<()> {
+        let listener = TcpListener::bind(&self.cfg.addr)
+            .with_context(|| format!("bind {}", self.cfg.addr))?;
+        self.serve_on(listener)
+    }
+
+    /// [`serve`](Self::serve) over a pre-bound listener (tests and
+    /// embedders that want the OS to pick the port).
+    pub fn serve_on(self: &Arc<Router>, listener: TcpListener) -> Result<()> {
+        listener.set_nonblocking(true)?;
+        crate::log_info!(
+            "routing {} replicas (policy={}) on {}",
+            self.replicas.len(),
+            self.policy_name,
+            self.cfg.addr
+        );
+        let poller = {
+            let rt = Arc::clone(self);
+            std::thread::spawn(move || {
+                while !rt.shutdown.load(Ordering::Relaxed) {
+                    for r in &rt.replicas {
+                        r.poll(Duration::from_millis(1000));
+                    }
+                    std::thread::sleep(Duration::from_millis(rt.cfg.poll_ms));
+                }
+            })
+        };
+        let mut conns = Vec::new();
+        while !self.shutdown.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let rt = Arc::clone(self);
+                    conns.push(std::thread::spawn(move || {
+                        let _ = handle_client(rt, stream);
+                    }));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(_) => break,
+            }
+        }
+        // stop accepting before waiting on in-flight connections
+        drop(listener);
+        for c in conns {
+            let _ = c.join();
+        }
+        let _ = poller.join();
+        Ok(())
+    }
+
+    /// Per-replica table + fleet aggregates for `{"cmd":"stats"}`.
+    fn stats_json(&self) -> Json {
+        let mut rows = Vec::new();
+        let (mut alive, mut active, mut queued) = (0usize, 0usize, 0usize);
+        for r in &self.replicas {
+            let s = r.stats();
+            if r.is_alive() {
+                alive += 1;
+                active += s.active;
+                queued += s.queued;
+            }
+            rows.push(Json::obj(vec![
+                ("replica", Json::num(r.index as f64)),
+                ("replica_id", Json::num(s.replica_id as f64)),
+                ("addr", Json::str(&r.addr)),
+                ("alive", Json::Bool(r.is_alive())),
+                ("draining", Json::Bool(s.draining)),
+                ("active", Json::num(s.active as f64)),
+                ("queued", Json::num(s.queued as f64)),
+                ("uptime_ms", Json::num(s.uptime_ms as f64)),
+                ("requests_done", Json::num(s.requests_done as f64)),
+                ("inflight", Json::num(r.inflight.load(Ordering::Relaxed) as f64)),
+                ("forwarded", Json::num(r.forwarded.load(Ordering::Relaxed) as f64)),
+                ("failures", Json::num(r.failures.load(Ordering::Relaxed) as f64)),
+            ]));
+        }
+        let m = &self.metrics;
+        Json::obj(vec![
+            ("router", Json::Bool(true)),
+            ("policy", Json::str(self.policy_name)),
+            ("uptime_ms", Json::num(self.started.elapsed().as_millis() as f64)),
+            ("replicas", Json::Arr(rows)),
+            ("alive", Json::num(alive as f64)),
+            ("fleet_active", Json::num(active as f64)),
+            ("fleet_queued", Json::num(queued as f64)),
+            ("requests", Json::num(m.requests.load(Ordering::Relaxed) as f64)),
+            ("retries", Json::num(m.retries.load(Ordering::Relaxed) as f64)),
+            (
+                "midstream_failures",
+                Json::num(m.midstream_failures.load(Ordering::Relaxed) as f64),
+            ),
+            ("cancels", Json::num(m.cancels.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+/// Forward one request line to `addr` and stream every reply line back
+/// to the client verbatim. `Err` means the *client* connection broke
+/// (abort the connection); replica-side failures come back as
+/// [`ForwardResult::Failed`] for the retry logic.
+fn forward_once(
+    addr: &str,
+    line: &str,
+    client: &mut TcpStream,
+    timeout: Duration,
+) -> Result<ForwardResult> {
+    let Ok(stream) = TcpStream::connect(addr) else {
+        return Ok(ForwardResult::Failed { frames: 0 });
+    };
+    if stream.set_read_timeout(Some(timeout)).is_err() {
+        return Ok(ForwardResult::Failed { frames: 0 });
+    }
+    let Ok(mut w) = stream.try_clone() else {
+        return Ok(ForwardResult::Failed { frames: 0 });
+    };
+    if writeln!(w, "{line}").is_err() {
+        return Ok(ForwardResult::Failed { frames: 0 });
+    }
+    let mut reader = BufReader::new(stream);
+    let mut frames = 0usize;
+    loop {
+        let mut l = String::new();
+        match reader.read_line(&mut l) {
+            Ok(0) | Err(_) => return Ok(ForwardResult::Failed { frames }),
+            Ok(_) => {}
+        }
+        let v = Json::parse(l.trim()).ok();
+        let is_frame =
+            v.as_ref().map(|v| v.get("event").is_some()).unwrap_or(false);
+        if !is_frame && frames == 0 {
+            // a drain beat our stats poll: pick another replica instead
+            // of surfacing the refusal to the client
+            let drained = v
+                .as_ref()
+                .map(|v| {
+                    v.get("draining").and_then(Json::as_bool) == Some(true)
+                        && v.get("error").is_some()
+                })
+                .unwrap_or(false);
+            if drained {
+                return Ok(ForwardResult::Drained);
+            }
+        }
+        // raw bytes through: the client sees exactly the replica's line
+        client.write_all(l.as_bytes())?;
+        if is_frame {
+            frames += 1;
+        } else {
+            return Ok(ForwardResult::Done);
+        }
+    }
+}
+
+/// Route one generation request: assign the global id, pick a replica,
+/// forward, and retry on a survivor while nothing has reached the
+/// client yet.
+fn route_request(rt: &Arc<Router>, v: Json, client: &mut TcpStream) -> Result<()> {
+    let id = rt.next_id.fetch_add(1, Ordering::Relaxed);
+    rt.metrics.requests.fetch_add(1, Ordering::Relaxed);
+    let mut v = v;
+    if let Json::Obj(m) = &mut v {
+        m.insert("id".to_string(), Json::num(id as f64));
+    }
+    let line = v.to_string();
+    let timeout = Duration::from_millis(rt.cfg.forward_timeout_ms);
+    let mut attempts = 0usize;
+    loop {
+        let views: Vec<ReplicaView> = rt
+            .replicas
+            .iter()
+            .map(|r| ReplicaView {
+                alive: r.is_alive(),
+                draining: r.stats().draining,
+                load: r.load(),
+            })
+            .collect();
+        let picked = rt
+            .policy
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .pick(&views);
+        let Some(k) = picked else {
+            writeln!(
+                client,
+                "{}",
+                Json::obj(vec![
+                    ("id", Json::num(id as f64)),
+                    ("error", Json::str("no replica available")),
+                ])
+                .to_string()
+            )?;
+            return Ok(());
+        };
+        let rep = &rt.replicas[k];
+        rep.inflight.fetch_add(1, Ordering::Relaxed);
+        rep.forwarded.fetch_add(1, Ordering::Relaxed);
+        rt.inflight
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .insert(id, k);
+        let res = forward_once(&rep.addr, &line, client, timeout);
+        rt.inflight
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .remove(&id);
+        rep.inflight.fetch_sub(1, Ordering::Relaxed);
+        match res? {
+            ForwardResult::Done => return Ok(()),
+            ForwardResult::Drained => {
+                if attempts < rt.cfg.max_retries {
+                    attempts += 1;
+                    rt.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                writeln!(
+                    client,
+                    "{}",
+                    Json::obj(vec![
+                        ("id", Json::num(id as f64)),
+                        ("error", Json::str("all replicas draining")),
+                    ])
+                    .to_string()
+                )?;
+                return Ok(());
+            }
+            ForwardResult::Failed { frames } => {
+                rep.mark_dead();
+                if frames == 0 && attempts < rt.cfg.max_retries {
+                    // nothing reached the client: safe to re-run on a
+                    // survivor (generation is seed-deterministic)
+                    attempts += 1;
+                    rt.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                    crate::log_warn!(
+                        "req {id}: replica {k} failed before replying; rerouting"
+                    );
+                    continue;
+                }
+                // mid-stream casualty (frames already delivered can't be
+                // replayed without double delivery) or retry budget
+                // spent: structured error out, never a hang
+                rt.metrics.midstream_failures.fetch_add(1, Ordering::Relaxed);
+                let msg = if frames == 0 {
+                    "replica failed before replying; retries exhausted"
+                } else {
+                    "replica failed mid-stream"
+                };
+                writeln!(
+                    client,
+                    "{}",
+                    Json::obj(vec![
+                        ("id", Json::num(id as f64)),
+                        ("error", Json::str(msg)),
+                        ("replica", Json::num(k as f64)),
+                        ("frames_delivered", Json::num(frames as f64)),
+                    ])
+                    .to_string()
+                )?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+fn handle_client(rt: Arc<Router>, stream: TcpStream) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        loop {
+            match reader.read_until(b'\n', &mut buf) {
+                Ok(0) => return Ok(()), // client closed
+                Ok(_) => break,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if rt.shutdown.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        let line = String::from_utf8_lossy(&buf);
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let v = match Json::parse(trimmed) {
+            Ok(v) => v,
+            Err(e) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![("error", Json::str(&format!("{e}")))]).to_string()
+                )?;
+                continue;
+            }
+        };
+        if let Some(cmd) = v.get("cmd") {
+            let Some(cmd) = cmd.as_str() else {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![
+                        ("error", Json::str("cmd must be a string")),
+                        ("field", Json::str("cmd")),
+                    ])
+                    .to_string()
+                )?;
+                continue;
+            };
+            let timeout = Duration::from_secs(10);
+            match cmd {
+                "shutdown" => {
+                    rt.shutdown.store(true, Ordering::Relaxed);
+                    writeln!(
+                        writer,
+                        "{}",
+                        Json::obj(vec![("ok", Json::Bool(true))]).to_string()
+                    )?;
+                    return Ok(());
+                }
+                "stats" => {
+                    writeln!(writer, "{}", rt.stats_json().to_string())?;
+                }
+                "metrics" => {
+                    let mut bodies = Vec::new();
+                    for r in &rt.replicas {
+                        if !r.is_alive() {
+                            continue;
+                        }
+                        match query_text(&r.addr, r#"{"cmd":"metrics"}"#, timeout) {
+                            Ok(text) => bodies.push((r.index, text)),
+                            Err(_) => r.mark_dead(),
+                        }
+                    }
+                    let page = metrics::render_fleet(&bodies, &rt.replicas, &rt.metrics);
+                    writer.write_all(page.as_bytes())?;
+                    writer.flush()?;
+                }
+                "cancel" => {
+                    let id = match v.get("req").and_then(Json::as_i64) {
+                        Some(n) if n >= 1 => n as u64,
+                        _ => {
+                            writeln!(
+                                writer,
+                                "{}",
+                                Json::obj(vec![
+                                    (
+                                        "error",
+                                        Json::str("cancel needs a positive integer req id"),
+                                    ),
+                                    ("field", Json::str("req")),
+                                ])
+                                .to_string()
+                            )?;
+                            continue;
+                        }
+                    };
+                    let owner = rt
+                        .inflight
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner)
+                        .get(&id)
+                        .copied();
+                    match owner {
+                        Some(k) => {
+                            rt.metrics.cancels.fetch_add(1, Ordering::Relaxed);
+                            let cancel_line =
+                                format!("{{\"cmd\":\"cancel\",\"req\":{id}}}");
+                            match query_line(&rt.replicas[k].addr, &cancel_line, timeout) {
+                                Ok(reply) => writeln!(writer, "{reply}")?,
+                                Err(_) => writeln!(
+                                    writer,
+                                    "{}",
+                                    Json::obj(vec![
+                                        ("ok", Json::Bool(false)),
+                                        ("req", Json::num(id as f64)),
+                                        ("error", Json::str("replica unreachable")),
+                                    ])
+                                    .to_string()
+                                )?,
+                            }
+                        }
+                        None => writeln!(
+                            writer,
+                            "{}",
+                            Json::obj(vec![
+                                ("ok", Json::Bool(false)),
+                                ("req", Json::num(id as f64)),
+                                ("was", Json::str("not_found")),
+                            ])
+                            .to_string()
+                        )?,
+                    }
+                }
+                "drain" => {
+                    let mut drained = 0usize;
+                    for r in &rt.replicas {
+                        if !r.is_alive() {
+                            continue;
+                        }
+                        if query_line(&r.addr, r#"{"cmd":"drain"}"#, timeout).is_ok() {
+                            drained += 1;
+                        }
+                    }
+                    writeln!(
+                        writer,
+                        "{}",
+                        Json::obj(vec![
+                            ("ok", Json::Bool(true)),
+                            ("draining", Json::Bool(true)),
+                            ("replicas_drained", Json::num(drained as f64)),
+                        ])
+                        .to_string()
+                    )?;
+                }
+                other => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        Json::obj(vec![
+                            (
+                                "error",
+                                Json::str(&format!(
+                                    "unknown cmd {other:?} (stats|metrics|cancel|drain|shutdown)"
+                                )),
+                            ),
+                            ("field", Json::str("cmd")),
+                        ])
+                        .to_string()
+                    )?;
+                }
+            }
+            continue;
+        }
+        route_request(&rt, v, &mut writer)?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A scripted stand-in for a replica server: answers `stats` with a
+    /// canned idle snapshot and any other line with a final response
+    /// echoing the request's id — enough protocol for the router's
+    /// poll, pick, and forward paths without booting an engine. With
+    /// `drop_gen` it stays healthy to the poller but hangs up on every
+    /// generation request — the deterministic way to exercise the
+    /// retry path (a plain dead replica loses the race to the poller).
+    fn fake_replica(replica_id: usize, drop_gen: bool) -> (String, Arc<AtomicBool>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        listener.set_nonblocking(true).unwrap();
+        std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((conn, _)) => {
+                        let stop3 = Arc::clone(&stop2);
+                        std::thread::spawn(move || {
+                            let _ = serve_fake(conn, replica_id, drop_gen, stop3);
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        (addr, stop)
+    }
+
+    fn serve_fake(
+        conn: TcpStream,
+        replica_id: usize,
+        drop_gen: bool,
+        stop: Arc<AtomicBool>,
+    ) -> Result<()> {
+        conn.set_read_timeout(Some(Duration::from_millis(100)))?;
+        let mut reader = BufReader::new(conn.try_clone()?);
+        let mut w = conn;
+        loop {
+            let mut l = String::new();
+            match reader.read_line(&mut l) {
+                Ok(0) => return Ok(()),
+                Ok(_) => {}
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if stop.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            }
+            let v = Json::parse(l.trim()).map_err(|e| anyhow::anyhow!("{e}"))?;
+            if v.get("cmd").and_then(Json::as_str) == Some("stats") {
+                writeln!(
+                    w,
+                    "{{\"replica_id\":{replica_id},\"active\":0,\"queued\":0,\
+                     \"draining\":false,\"uptime_ms\":1,\"requests_done\":0}}"
+                )?;
+            } else if drop_gen {
+                return Ok(()); // hang up without a reply line
+            } else {
+                let id = v.get("id").and_then(Json::as_i64).unwrap_or(0);
+                writeln!(w, "{{\"id\":{id},\"text\":\"ok-{replica_id}\",\"new_tokens\":1}}")?;
+            }
+        }
+    }
+
+    /// A "replica" that accepts connections and immediately drops them:
+    /// every forward fails before any reply line.
+    fn dead_replica() -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                drop(conn);
+            }
+        });
+        addr
+    }
+
+    fn start_router(addrs: Vec<String>) -> (Arc<Router>, String, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let cfg = RouterConfig { addr: addr.clone(), poll_ms: 50, ..Default::default() };
+        let rt = Arc::new(Router::new(cfg, addrs, Box::new(policy::RoundRobin::new())));
+        let rt2 = Arc::clone(&rt);
+        let h = std::thread::spawn(move || {
+            let _ = rt2.serve_on(listener);
+        });
+        (rt, addr, h)
+    }
+
+    fn ask(addr: &str, line: &str) -> String {
+        query_line(addr, line, Duration::from_secs(5)).unwrap()
+    }
+
+    #[test]
+    fn routes_and_retries_onto_survivor() {
+        // the flaky replica answers the poller's stats but hangs up on
+        // generation, so it stays routable until the forward fails —
+        // the retry path runs deterministically
+        let (flaky, stop_a) = fake_replica(3, true);
+        let (good, stop_b) = fake_replica(7, false);
+        let (rt, addr, h) = start_router(vec![flaky, good]);
+        let reply = ask(&addr, r#"{"prompt":"hi","max_new":4}"#);
+        assert!(reply.contains("ok-7"), "survivor answered: {reply}");
+        assert!(reply.contains("\"id\":1"), "global id injected: {reply}");
+        assert!(rt.metrics.retries.load(Ordering::Relaxed) >= 1, "reroute accounted");
+        assert!(!rt.replicas[0].is_alive(), "failed replica marked dead");
+        let stats = Json::parse(&ask(&addr, r#"{"cmd":"stats"}"#)).unwrap();
+        assert_eq!(stats.get("router").and_then(Json::as_bool), Some(true));
+        assert_eq!(stats.get("requests").and_then(Json::as_i64), Some(1));
+        assert_eq!(stats.get("retries").and_then(Json::as_i64), Some(1));
+        ask(&addr, r#"{"cmd":"shutdown"}"#);
+        stop_a.store(true, Ordering::Relaxed);
+        stop_b.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn unknown_cmd_and_bad_cancel_are_structured() {
+        let (good, stop) = fake_replica(1, false);
+        let (_rt, addr, h) = start_router(vec![good]);
+        let reply = Json::parse(&ask(&addr, r#"{"cmd":"bogus"}"#)).unwrap();
+        assert_eq!(reply.get("field").and_then(Json::as_str), Some("cmd"));
+        assert!(reply.get("error").and_then(Json::as_str).unwrap().contains("bogus"));
+        let reply = Json::parse(&ask(&addr, r#"{"cmd":"cancel"}"#)).unwrap();
+        assert_eq!(reply.get("field").and_then(Json::as_str), Some("req"));
+        // cancel of an unknown id: definitive not_found, not an error
+        let reply = Json::parse(&ask(&addr, r#"{"cmd":"cancel","req":99}"#)).unwrap();
+        assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(reply.get("was").and_then(Json::as_str), Some("not_found"));
+        ask(&addr, r#"{"cmd":"shutdown"}"#);
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn all_replicas_down_is_a_structured_error() {
+        let bad = dead_replica();
+        let (_rt, addr, h) = start_router(vec![bad]);
+        let reply = Json::parse(&ask(&addr, r#"{"prompt":"hi"}"#)).unwrap();
+        let err = reply.get("error").and_then(Json::as_str).unwrap_or("");
+        assert!(
+            err.contains("no replica available") || err.contains("retries exhausted"),
+            "structured failure, got {reply:?}"
+        );
+        ask(&addr, r#"{"cmd":"shutdown"}"#);
+        h.join().unwrap();
+    }
+}

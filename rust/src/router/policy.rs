@@ -1,0 +1,167 @@
+//! Pluggable replica-selection policies for the router.
+//!
+//! A policy sees one [`ReplicaView`] per replica — liveness, drain
+//! state, and a load figure combining the replica's last-polled
+//! `active + queued` with the router's own in-flight count toward it —
+//! and picks the index to forward the next request to. Dead and
+//! draining replicas are never routable; when nothing is routable the
+//! router answers the client with a structured "no replica available"
+//! error instead of queueing unboundedly.
+
+/// What a policy knows about one replica at pick time.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaView {
+    pub alive: bool,
+    pub draining: bool,
+    /// last-polled `active + queued` plus the router's own in-flight
+    /// forwards — the freshest load signal available without a
+    /// per-request stats round-trip
+    pub load: usize,
+}
+
+impl ReplicaView {
+    fn routable(&self) -> bool {
+        self.alive && !self.draining
+    }
+}
+
+pub trait RoutePolicy: Send {
+    fn name(&self) -> &'static str;
+    /// Index of the replica to forward to, or `None` when no replica
+    /// is routable.
+    fn pick(&mut self, replicas: &[ReplicaView]) -> Option<usize>;
+}
+
+/// Rotate through routable replicas in order.
+#[derive(Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin::default()
+    }
+}
+
+impl RoutePolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick(&mut self, replicas: &[ReplicaView]) -> Option<usize> {
+        let n = replicas.len();
+        for off in 0..n {
+            let i = (self.next + off) % n;
+            if replicas[i].routable() {
+                self.next = (i + 1) % n;
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+/// Send each request to the routable replica with the lowest load,
+/// breaking ties round-robin so equal replicas still share work.
+#[derive(Default)]
+pub struct LeastLoaded {
+    next: usize,
+}
+
+impl LeastLoaded {
+    pub fn new() -> LeastLoaded {
+        LeastLoaded::default()
+    }
+}
+
+impl RoutePolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn pick(&mut self, replicas: &[ReplicaView]) -> Option<usize> {
+        let n = replicas.len();
+        let mut best: Option<usize> = None;
+        // scan from the rotation point so ties rotate instead of always
+        // landing on the lowest index
+        for off in 0..n {
+            let i = (self.next + off) % n;
+            if !replicas[i].routable() {
+                continue;
+            }
+            match best {
+                Some(b) if replicas[b].load <= replicas[i].load => {}
+                _ => best = Some(i),
+            }
+        }
+        if let Some(i) = best {
+            self.next = (i + 1) % n;
+        }
+        best
+    }
+}
+
+/// Policy by CLI name (`--policy rr|least-loaded`).
+pub fn make_policy(name: &str) -> Option<Box<dyn RoutePolicy>> {
+    match name {
+        "rr" | "round-robin" => Some(Box::new(RoundRobin::new())),
+        "least-loaded" | "ll" => Some(Box::new(LeastLoaded::new())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(alive: bool, draining: bool, load: usize) -> ReplicaView {
+        ReplicaView { alive, draining, load }
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_dead() {
+        let mut p = RoundRobin::new();
+        let views = vec![view(true, false, 0), view(false, false, 0), view(true, false, 0)];
+        assert_eq!(p.pick(&views), Some(0));
+        assert_eq!(p.pick(&views), Some(2), "dead replica 1 is skipped");
+        assert_eq!(p.pick(&views), Some(0));
+        // all dead: nothing routable
+        let dead = vec![view(false, false, 0); 3];
+        assert_eq!(p.pick(&dead), None);
+    }
+
+    #[test]
+    fn round_robin_skips_draining() {
+        let mut p = RoundRobin::new();
+        let views = vec![view(true, true, 0), view(true, false, 0)];
+        assert_eq!(p.pick(&views), Some(1));
+        assert_eq!(p.pick(&views), Some(1));
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_replica() {
+        let mut p = LeastLoaded::new();
+        let views = vec![view(true, false, 5), view(true, false, 1), view(true, false, 3)];
+        assert_eq!(p.pick(&views), Some(1));
+        // dead replicas are never picked no matter their load
+        let views = vec![view(false, false, 0), view(true, false, 9)];
+        assert_eq!(p.pick(&views), Some(1));
+    }
+
+    #[test]
+    fn least_loaded_breaks_ties_round_robin() {
+        let mut p = LeastLoaded::new();
+        let views = vec![view(true, false, 2), view(true, false, 2)];
+        let a = p.pick(&views).unwrap();
+        let b = p.pick(&views).unwrap();
+        assert_ne!(a, b, "equal load alternates between replicas");
+    }
+
+    #[test]
+    fn policies_resolve_by_name() {
+        assert_eq!(make_policy("rr").unwrap().name(), "round-robin");
+        assert_eq!(make_policy("least-loaded").unwrap().name(), "least-loaded");
+        assert!(make_policy("nope").is_none());
+    }
+}

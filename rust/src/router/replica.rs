@@ -1,0 +1,232 @@
+//! One routed-to replica: address, liveness with exponential-backoff
+//! probing, the last `stats` snapshot, and the blocking line-oriented
+//! TCP helpers the router uses to talk to it.
+
+// Router threads must degrade (mark a replica dead, answer the client
+// with a structured error) rather than panic.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// First retry delay after a replica is marked dead; doubles per failed
+/// probe up to [`PROBE_BACKOFF_MAX`].
+const PROBE_BACKOFF_MIN: Duration = Duration::from_millis(100);
+const PROBE_BACKOFF_MAX: Duration = Duration::from_secs(5);
+
+/// The slice of a replica's `stats` reply the router keeps.
+#[derive(Debug, Clone, Default)]
+pub struct ReplicaStats {
+    pub replica_id: usize,
+    pub active: usize,
+    pub queued: usize,
+    pub draining: bool,
+    pub uptime_ms: u64,
+    pub requests_done: u64,
+}
+
+struct ProbeState {
+    next: Instant,
+    backoff: Duration,
+}
+
+pub struct Replica {
+    pub addr: String,
+    /// router-side index; replicas also self-report `replica_id`
+    pub index: usize,
+    alive: AtomicBool,
+    /// requests this router currently has forwarded to the replica
+    pub inflight: AtomicUsize,
+    /// total requests ever forwarded here (retries that land here count)
+    pub forwarded: AtomicU64,
+    /// times this replica was marked dead
+    pub failures: AtomicU64,
+    stats: Mutex<ReplicaStats>,
+    probe: Mutex<ProbeState>,
+}
+
+impl Replica {
+    pub fn new(addr: String, index: usize) -> Replica {
+        Replica {
+            addr,
+            index,
+            alive: AtomicBool::new(true),
+            inflight: AtomicUsize::new(0),
+            forwarded: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            stats: Mutex::new(ReplicaStats::default()),
+            probe: Mutex::new(ProbeState {
+                next: Instant::now(),
+                backoff: PROBE_BACKOFF_MIN,
+            }),
+        }
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> ReplicaStats {
+        self.stats
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .clone()
+    }
+
+    /// Load signal for the routing policy: last-polled engine work plus
+    /// the router's own not-yet-answered forwards.
+    pub fn load(&self) -> usize {
+        let s = self.stats();
+        s.active + s.queued + self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// A failed forward or poll: stop routing here and schedule the
+    /// next liveness probe, doubling the backoff each consecutive
+    /// failure (capped).
+    pub fn mark_dead(&self) {
+        if self.alive.swap(false, Ordering::Relaxed) {
+            self.failures.fetch_add(1, Ordering::Relaxed);
+            crate::log_warn!("replica {} ({}) marked dead", self.index, self.addr);
+        }
+        let mut p = self.probe.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        p.next = Instant::now() + p.backoff;
+        p.backoff = (p.backoff * 2).min(PROBE_BACKOFF_MAX);
+    }
+
+    fn mark_alive(&self) {
+        if !self.alive.swap(true, Ordering::Relaxed) {
+            crate::log_info!("replica {} ({}) back alive", self.index, self.addr);
+        }
+        let mut p = self.probe.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        p.backoff = PROBE_BACKOFF_MIN;
+    }
+
+    /// One health/stats round-trip, rate-limited by the probe backoff
+    /// while the replica is dead. Called by the router's poll thread.
+    pub fn poll(&self, timeout: Duration) {
+        if !self.is_alive() {
+            let due = {
+                let p =
+                    self.probe.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                Instant::now() >= p.next
+            };
+            if !due {
+                return;
+            }
+        }
+        match query_json(&self.addr, r#"{"cmd":"stats"}"#, timeout) {
+            Ok(v) => {
+                let us = |key: &str| v.get(key).and_then(Json::as_usize).unwrap_or(0);
+                let snap = ReplicaStats {
+                    replica_id: us("replica_id"),
+                    active: us("active"),
+                    queued: us("queued"),
+                    draining: v.get("draining").and_then(Json::as_bool).unwrap_or(false),
+                    uptime_ms: us("uptime_ms") as u64,
+                    requests_done: us("requests_done") as u64,
+                };
+                *self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner) =
+                    snap;
+                self.mark_alive();
+            }
+            Err(_) => self.mark_dead(),
+        }
+    }
+}
+
+/// One line-in, line-out query against a replica (stats, cancel,
+/// drain, shutdown).
+pub fn query_line(addr: &str, line: &str, timeout: Duration) -> Result<String> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    let mut w = stream.try_clone()?;
+    writeln!(w, "{line}")?;
+    let mut out = String::new();
+    if BufReader::new(stream).read_line(&mut out)? == 0 {
+        anyhow::bail!("{addr} closed before replying");
+    }
+    Ok(out.trim_end().to_string())
+}
+
+/// [`query_line`], parsed.
+pub fn query_json(addr: &str, line: &str, timeout: Duration) -> Result<Json> {
+    let out = query_line(addr, line, timeout)?;
+    Json::parse(&out).map_err(|e| anyhow::anyhow!("bad reply from {addr}: {e}"))
+}
+
+/// Multi-line query (the Prometheus `metrics` command): accumulate
+/// lines through the `# EOF` terminator, which stays in the output.
+pub fn query_text(addr: &str, line: &str, timeout: Duration) -> Result<String> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    let mut w = stream.try_clone()?;
+    writeln!(w, "{line}")?;
+    let mut reader = BufReader::new(stream);
+    let mut out = String::new();
+    loop {
+        let mut l = String::new();
+        if reader.read_line(&mut l)? == 0 {
+            anyhow::bail!("{addr} closed before the # EOF terminator");
+        }
+        let done = l.trim_end() == "# EOF";
+        out.push_str(&l);
+        if done {
+            return Ok(out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dead_replica_backs_off_probing() {
+        let r = Replica::new("127.0.0.1:1".into(), 0);
+        assert!(r.is_alive());
+        r.mark_dead();
+        assert!(!r.is_alive());
+        assert_eq!(r.failures.load(Ordering::Relaxed), 1);
+        // repeated mark_dead doesn't double-count the failure
+        r.mark_dead();
+        assert_eq!(r.failures.load(Ordering::Relaxed), 1);
+        let backoff = {
+            let p = r.probe.lock().unwrap();
+            p.backoff
+        };
+        assert!(backoff > PROBE_BACKOFF_MIN, "backoff doubled after failures");
+        assert!(backoff <= PROBE_BACKOFF_MAX);
+        r.mark_alive();
+        assert!(r.is_alive());
+        let p = r.probe.lock().unwrap();
+        assert_eq!(p.backoff, PROBE_BACKOFF_MIN, "recovery resets the backoff");
+    }
+
+    #[test]
+    fn load_combines_stats_and_inflight() {
+        let r = Replica::new("127.0.0.1:1".into(), 0);
+        {
+            let mut s = r.stats.lock().unwrap();
+            s.active = 2;
+            s.queued = 3;
+        }
+        r.inflight.store(4, Ordering::Relaxed);
+        assert_eq!(r.load(), 9);
+    }
+
+    #[test]
+    fn poll_against_nothing_marks_dead() {
+        // port 1 is never listening: the poll must fail fast and flip
+        // the replica to dead instead of erroring out
+        let r = Replica::new("127.0.0.1:1".into(), 0);
+        r.poll(Duration::from_millis(50));
+        assert!(!r.is_alive());
+    }
+}

@@ -195,6 +195,15 @@ impl TcpReqStat {
     }
 }
 
+/// One request's reply through [`replay_trace_tcp_text`]: the final
+/// `text` (empty when the request was answered with an error)
+/// alongside the latency stats.
+#[derive(Debug, Clone)]
+pub struct TcpReqText {
+    pub stat: TcpReqStat,
+    pub text: String,
+}
+
 /// Open-loop replay of a trace against a live TCP server: one client
 /// thread per request connects at its arrival offset, sends the
 /// request with `"stream": true` (the first `tokens` frame is the TTFT
@@ -202,11 +211,18 @@ impl TcpReqStat {
 /// `coordinator/server.rs` wire path — admission queue, scheduler,
 /// streaming flow control — not the in-process engine.
 pub fn replay_trace_tcp(addr: &str, trace: &[TraceItem]) -> Result<Vec<TcpReqStat>> {
+    Ok(replay_trace_tcp_text(addr, trace)?.into_iter().map(|r| r.stat).collect())
+}
+
+/// [`replay_trace_tcp`], also capturing each request's final `text` —
+/// the byte-identity hook the multi-replica chaos lane uses to compare
+/// routed output (replica killed mid-trace) against a direct run.
+pub fn replay_trace_tcp_text(addr: &str, trace: &[TraceItem]) -> Result<Vec<TcpReqText>> {
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for (index, item) in trace.iter().cloned().enumerate() {
         let addr = addr.to_string();
-        handles.push(std::thread::spawn(move || -> Result<TcpReqStat> {
+        handles.push(std::thread::spawn(move || -> Result<TcpReqText> {
             let since = t0.elapsed();
             if item.at > since {
                 std::thread::sleep(item.at - since);
@@ -249,7 +265,13 @@ pub fn replay_trace_tcp(addr: &str, trace: &[TraceItem]) -> Result<Vec<TcpReqSta
                 if ttft_ms.is_nan() {
                     ttft_ms = total_ms; // errored before any frame
                 }
-                return Ok(TcpReqStat { index, ttft_ms, total_ms, tokens, error });
+                let text = v
+                    .get("text")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string();
+                let stat = TcpReqStat { index, ttft_ms, total_ms, tokens, error };
+                return Ok(TcpReqText { stat, text });
             }
         }));
     }
@@ -257,7 +279,7 @@ pub fn replay_trace_tcp(addr: &str, trace: &[TraceItem]) -> Result<Vec<TcpReqSta
     for h in handles {
         out.push(h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??);
     }
-    out.sort_by_key(|s| s.index);
+    out.sort_by_key(|s| s.stat.index);
     Ok(out)
 }
 

@@ -1,0 +1,240 @@
+//! Request-lifecycle correctness: cancellation in every phase
+//! (pending, mid-prefill, mid-decode, already completed) across all
+//! three speculative methods, with the KV-lease and prefix-cache
+//! refcount invariant checked after each storm — every pool block must
+//! come home (`leaked_blocks() == 0`). A second test drives the same
+//! verbs over the TCP wire: `{"cmd":"cancel","req":N}` mid-stream,
+//! `"deadline_ms"` expiry, `{"cmd":"drain"}`, and the drained server's
+//! clean (leak-checked) exit.
+
+mod common;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::{artifacts_base, artifacts_root, store_with};
+use fasteagle::coordinator::{
+    BatchConfig, BatchEngine, BatchMethod, CancelOutcome, Request, Server, ServerConfig,
+    ServingMetrics,
+};
+use fasteagle::runtime::{ArtifactStore, Runtime};
+use fasteagle::spec::SlotPhase;
+use fasteagle::util::json::Json;
+use fasteagle::workload::batched_serving_target;
+
+const PROMPT: &str = "USER: tell me about machine learning and the fast cache.\nASSISTANT:";
+
+fn req(id: u64, max_new: usize) -> Request {
+    let mut r = Request::new(id, PROMPT);
+    r.cfg.max_new_tokens = max_new;
+    r
+}
+
+#[test]
+fn cancel_every_phase_releases_all_blocks_for_every_method() {
+    let (dir, kind) = artifacts_base();
+    let st = store_with(&dir, kind);
+    for method in [BatchMethod::FastEagle, BatchMethod::Eagle3, BatchMethod::Vanilla] {
+        let mut cfg = BatchConfig::new(1, method);
+        // tiny chunks keep the slot in Prefilling across many steps, so
+        // the mid-prefill cancel is deterministic, and the cache-on
+        // engine exercises the refcounted (shared-block) release path
+        cfg.prefill_chunk = 2;
+        cfg.prefix_cache = true;
+        let mut eng = BatchEngine::new(Rc::clone(&st), cfg).unwrap();
+        let mut m = ServingMetrics::default();
+
+        // batch=1: req 1 takes the slot, req 2 stays pending
+        eng.submit(req(1, 8));
+        eng.submit(req(2, 8));
+        let done = eng.step(&mut m).unwrap();
+        assert!(done.is_empty(), "{method:?}: nothing finishes on step 1");
+        assert_eq!(eng.pending_len(), 1, "{method:?}: req 2 waits behind the slot");
+        assert_eq!(eng.cancel(2, &mut m), CancelOutcome::Pending, "{method:?}");
+        assert_eq!(eng.pending_len(), 0);
+
+        // mid-prefill: the prompt is far longer than one 2-token chunk
+        assert_eq!(
+            eng.slot_phase(0),
+            Some(SlotPhase::Prefilling),
+            "{method:?}: slot must still be ingesting the prompt"
+        );
+        assert_eq!(eng.cancel(1, &mut m), CancelOutcome::Active, "{method:?}");
+        assert_eq!(eng.active_len(), 0, "{method:?}: slot freed by cancel");
+
+        // mid-decode: step until the slot crosses into Decoding, then
+        // cancel before it can finish (12 tokens need several cycles)
+        eng.submit(req(3, 12));
+        loop {
+            let done = eng.step(&mut m).unwrap();
+            assert!(done.is_empty(), "{method:?}: req 3 finished before the cancel");
+            if eng.slot_phase(0) == Some(SlotPhase::Decoding) {
+                break;
+            }
+        }
+        assert_eq!(eng.cancel(3, &mut m), CancelOutcome::Active, "{method:?}");
+
+        // completed: run req 4 to retirement, then cancel it — a
+        // definitive not-found, never an error
+        eng.submit(req(4, 6));
+        let resp = loop {
+            if let Some(r) = eng.step(&mut m).unwrap().into_iter().next() {
+                break r;
+            }
+        };
+        assert!(resp.error.is_none(), "{method:?}: {:?}", resp.error);
+        assert_eq!(resp.id, 4);
+        assert_eq!(resp.new_tokens, 6, "{method:?}: cancels must not corrupt the slot");
+        let out = eng.cancel(4, &mut m);
+        assert_eq!(out, CancelOutcome::NotFound, "{method:?}");
+        assert!(!out.found());
+
+        assert_eq!(m.requests_canceled, 3, "{method:?}");
+        assert_eq!(m.requests_done, 1, "{method:?}");
+
+        // the refcount invariant: after the cache drops its shares,
+        // every lease and shared block is back in the pool
+        eng.release_cache();
+        assert_eq!(eng.cache_usage(), (0, 0), "{method:?}: cache cleared");
+        assert_eq!(eng.leaked_blocks(), 0, "{method:?}: pool blocks leaked");
+    }
+}
+
+fn query_at(addr: &str, line: &str) -> Json {
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut w = stream.try_clone().unwrap();
+    writeln!(w, "{line}").unwrap();
+    let mut r = BufReader::new(stream);
+    let mut out = String::new();
+    r.read_line(&mut out).unwrap();
+    Json::parse(out.trim()).expect("json response")
+}
+
+fn wait_for_listener(addr: &str) {
+    for _ in 0..600 {
+        if TcpStream::connect(addr).is_ok() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    panic!("server did not start on {addr}");
+}
+
+#[test]
+fn tcp_cancel_deadline_and_drain_lifecycle() {
+    const ADDR: &str = "127.0.0.1:7441";
+    let (root, kind) = artifacts_root();
+    let Some((dir, batch)) = batched_serving_target(&root) else {
+        eprintln!("skipping: no serving target");
+        return;
+    };
+    let server_thread = std::thread::spawn(move || {
+        let rt = Arc::new(Runtime::new(kind).unwrap());
+        let store = Rc::new(ArtifactStore::open(rt, dir).unwrap());
+        let engine = BatchEngine::new(
+            Rc::clone(&store),
+            BatchConfig::new(batch, BatchMethod::FastEagle),
+        )
+        .unwrap();
+        let server = Server::new(ServerConfig {
+            addr: ADDR.into(),
+            queue_capacity: 8,
+            frame_queue: 16,
+            replica_id: 3,
+        });
+        // serve() itself enforces the drained-exit leak invariant: it
+        // bails (-> this unwrap panics) if any pool block is still out
+        server.serve(engine).unwrap()
+    });
+    wait_for_listener(ADDR);
+
+    // stats carries the fleet-identity fields the router consumes
+    let v = query_at(ADDR, r#"{"cmd":"stats"}"#);
+    assert_eq!(v.get("replica_id").and_then(Json::as_usize), Some(3));
+    assert!(v.get("uptime_ms").and_then(Json::as_f64).is_some());
+    assert_eq!(v.get("draining").and_then(Json::as_bool), Some(false));
+    assert_eq!(v.get("active").and_then(Json::as_usize), Some(0));
+    assert_eq!(v.get("queued").and_then(Json::as_usize), Some(0));
+
+    // unknown verbs die structured, naming the field
+    let v = query_at(ADDR, r#"{"cmd":"reboot"}"#);
+    assert!(v.get("error").and_then(Json::as_str).unwrap().contains("reboot"));
+    assert_eq!(v.get("field").and_then(Json::as_str), Some("cmd"));
+    let v = query_at(ADDR, r#"{"cmd":7}"#);
+    assert_eq!(v.get("field").and_then(Json::as_str), Some("cmd"));
+
+    // deadline_ms binds mid-generation: 1ms can never cover a 200-token
+    // generation, so the deadline sweep evicts it with a structured
+    // error (and the lease comes back — checked at drained exit below)
+    let v = query_at(
+        ADDR,
+        &format!(r#"{{"prompt":{:?},"max_new":200,"deadline_ms":1}}"#, PROMPT),
+    );
+    assert_eq!(
+        v.get("error").and_then(Json::as_str),
+        Some("deadline exceeded"),
+        "{v:?}"
+    );
+
+    // wire cancel of a live streamed request: the client must get a
+    // structured "canceled" final line, not a hang or a dropped socket
+    let streamer = std::thread::spawn(move || {
+        let stream = TcpStream::connect(ADDR).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        writeln!(w, r#"{{"prompt":{PROMPT:?},"max_new":200,"stream":true}}"#).unwrap();
+        let mut r = BufReader::new(stream);
+        loop {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let v = Json::parse(line.trim()).expect("json line");
+            if v.get("event").is_none() {
+                break v;
+            }
+        }
+    });
+    std::thread::sleep(Duration::from_millis(300));
+    // ids are assigned in admission order: the deadline request was 1,
+    // the streamed one is 2
+    let v = query_at(ADDR, r#"{"cmd":"cancel","req":2}"#);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{v:?}");
+    assert_eq!(v.get("req").and_then(Json::as_usize), Some(2));
+    assert_eq!(v.get("was").and_then(Json::as_str), Some("active"));
+    let final_resp = streamer.join().unwrap();
+    assert_eq!(
+        final_resp.get("error").and_then(Json::as_str),
+        Some("canceled"),
+        "{final_resp:?}"
+    );
+
+    // canceling it again (or any unknown id) is a definitive not_found
+    let v = query_at(ADDR, r#"{"cmd":"cancel","req":2}"#);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(v.get("was").and_then(Json::as_str), Some("not_found"));
+    // and a malformed req id names the field
+    let v = query_at(ADDR, r#"{"cmd":"cancel","req":-4}"#);
+    assert_eq!(v.get("field").and_then(Json::as_str), Some("req"));
+
+    // drain: admission stops, cmds still answer, and once idle the
+    // server exits cleanly with every block accounted for
+    let v = query_at(ADDR, r#"{"cmd":"drain"}"#);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(v.get("draining").and_then(Json::as_bool), Some(true));
+    let v = query_at(ADDR, r#"{"prompt":"p","max_new":4}"#);
+    assert!(
+        v.get("error").and_then(Json::as_str).unwrap().contains("draining"),
+        "{v:?}"
+    );
+    assert_eq!(v.get("draining").and_then(Json::as_bool), Some(true));
+    let v = query_at(ADDR, r#"{"cmd":"stats"}"#);
+    assert_eq!(v.get("draining").and_then(Json::as_bool), Some(true));
+    assert_eq!(v.get("requests_canceled").and_then(Json::as_usize), Some(1));
+    assert_eq!(v.get("requests_expired").and_then(Json::as_usize), Some(1));
+
+    let metrics = server_thread.join().unwrap();
+    assert_eq!(metrics.requests_canceled, 1);
+    assert_eq!(metrics.requests_expired, 1);
+    assert_eq!(metrics.requests_done, 0);
+}

@@ -1,0 +1,180 @@
+//! Multi-replica router end-to-end: two in-process replica servers
+//! behind a `Router`, a mixed-method trace routed with global ids, one
+//! replica killed mid-test (the chaos half of the CI lane), and the
+//! fleet observability surface — per-replica stats table and the
+//! merged Prometheus exposition.
+//!
+//! The byte-identity contract under test: a client talking through the
+//! router sees exactly the output it would get from a replica
+//! directly, before *and after* a replica is killed out from under the
+//! fleet (not-yet-started casualties are retried on the survivor).
+
+mod common;
+
+use std::net::TcpListener;
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::artifacts_root;
+use fasteagle::backend::BackendKind;
+use fasteagle::coordinator::{
+    BatchConfig, BatchEngine, BatchMethod, Server, ServerConfig, ServingMetrics,
+};
+use fasteagle::router::{make_policy, query_line, query_text, Router, RouterConfig};
+use fasteagle::runtime::{ArtifactStore, Runtime};
+use fasteagle::util::json::Json;
+use fasteagle::workload::batched_serving_target;
+
+/// Boot one replica server on an OS-assigned loopback port; the
+/// returned join handle yields its metrics at clean (leak-checked)
+/// exit.
+fn start_replica(
+    dir: std::path::PathBuf,
+    kind: BackendKind,
+    batch: usize,
+    replica_id: usize,
+) -> (String, std::thread::JoinHandle<ServingMetrics>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let addr2 = addr.clone();
+    let h = std::thread::spawn(move || {
+        let rt = Arc::new(Runtime::new(kind).unwrap());
+        let store = Rc::new(ArtifactStore::open(rt, dir).unwrap());
+        let engine = BatchEngine::new(
+            Rc::clone(&store),
+            BatchConfig::new(batch, BatchMethod::FastEagle),
+        )
+        .unwrap();
+        let server = Server::new(ServerConfig {
+            addr: addr2,
+            queue_capacity: 8,
+            frame_queue: 16,
+            replica_id,
+        });
+        server.serve_on(listener, engine).unwrap()
+    });
+    (addr, h)
+}
+
+fn ask(addr: &str, line: &str) -> Json {
+    Json::parse(&query_line(addr, line, Duration::from_secs(120)).unwrap()).unwrap()
+}
+
+/// The mixed-method trace: every speculative method in one fleet.
+const REQS: [(&str, &str); 4] = [
+    ("USER: tell me about machine learning and the fast cache.\nASSISTANT:", "fasteagle"),
+    ("USER: tell me about city transport and the steady bridge.\nASSISTANT:", "eagle3"),
+    ("Q: Ben has 4 coins and buys 9 more coins. how many coins does Ben have?\nA:", "vanilla"),
+    ("Summarize cascaded drafting for speculative decoding.", "fasteagle"),
+];
+
+fn gen_line(prompt: &str, method: &str) -> String {
+    format!(r#"{{"prompt":{prompt:?},"max_new":12,"method":{method:?}}}"#)
+}
+
+#[test]
+fn router_mixed_trace_survives_replica_kill_with_fleet_metrics() {
+    let (root, kind) = artifacts_root();
+    let Some((dir, batch)) = batched_serving_target(&root) else {
+        eprintln!("skipping: no serving target");
+        return;
+    };
+    let (addr_a, ha) = start_replica(dir.clone(), kind, batch, 1);
+    let (addr_b, hb) = start_replica(dir, kind, batch, 2);
+
+    // reference outputs straight from replica A — the byte-identity bar
+    let reference: Vec<String> = REQS
+        .iter()
+        .map(|(p, m)| {
+            let v = ask(&addr_a, &gen_line(p, m));
+            assert!(v.get("error").is_none(), "direct run: {v:?}");
+            v.get("text").and_then(Json::as_str).unwrap().to_string()
+        })
+        .collect();
+    assert!(reference.iter().all(|t| !t.is_empty()), "empty generations prove nothing");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let raddr = listener.local_addr().unwrap().to_string();
+    let cfg = RouterConfig { addr: raddr.clone(), poll_ms: 100, ..Default::default() };
+    let router = Arc::new(Router::new(
+        cfg,
+        vec![addr_a.clone(), addr_b.clone()],
+        make_policy("rr").unwrap(),
+    ));
+    let r2 = Arc::clone(&router);
+    let rh = std::thread::spawn(move || r2.serve_on(listener).unwrap());
+
+    // the trace through the router: global ids assigned in order, and
+    // output byte-identical to the direct run whichever replica served
+    for (i, (p, m)) in REQS.iter().enumerate() {
+        let v = ask(&raddr, &gen_line(p, m));
+        assert!(v.get("error").is_none(), "routed run: {v:?}");
+        assert_eq!(v.get("id").and_then(Json::as_usize), Some(i + 1), "global id");
+        assert_eq!(
+            v.get("text").and_then(Json::as_str),
+            Some(reference[i].as_str()),
+            "request {i} ({m}) through the router must be byte-identical"
+        );
+    }
+
+    // chaos: kill replica B out from under the router, then replay the
+    // trace — every request lands on the survivor (rerouted
+    // transparently when the dead replica is picked first) with
+    // byte-identical output
+    let v = ask(&addr_b, r#"{"cmd":"shutdown"}"#);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    let mb = hb.join().unwrap(); // unwrap = B's drained-exit leak guard passed
+    for (i, (p, m)) in REQS.iter().enumerate() {
+        let v = ask(&raddr, &gen_line(p, m));
+        assert!(v.get("error").is_none(), "after kill: {v:?}");
+        assert_eq!(
+            v.get("text").and_then(Json::as_str),
+            Some(reference[i].as_str()),
+            "request {i} ({m}) must survive the replica kill byte-identically"
+        );
+    }
+
+    // fleet stats: B marked dead, every routed request accounted for
+    let stats = ask(&raddr, r#"{"cmd":"stats"}"#);
+    assert_eq!(stats.get("router").and_then(Json::as_bool), Some(true));
+    assert_eq!(stats.get("policy").and_then(Json::as_str), Some("round-robin"));
+    assert_eq!(stats.get("requests").and_then(Json::as_usize), Some(8));
+    assert_eq!(stats.get("alive").and_then(Json::as_usize), Some(1));
+    let rows = stats.get("replicas").and_then(Json::as_arr).unwrap();
+    assert_eq!(rows.len(), 2);
+    assert_eq!(rows[0].get("alive").and_then(Json::as_bool), Some(true));
+    assert_eq!(rows[0].get("replica_id").and_then(Json::as_usize), Some(1));
+    assert_eq!(rows[1].get("alive").and_then(Json::as_bool), Some(false));
+    let forwarded: usize = rows
+        .iter()
+        .map(|r| r.get("forwarded").and_then(Json::as_usize).unwrap())
+        .sum();
+    assert!(forwarded >= 8, "all requests forwarded (plus any reroutes): {stats:?}");
+
+    // merged Prometheus exposition: replica-labeled engine samples,
+    // fe_router_* series, exactly one terminator
+    let page = query_text(&raddr, r#"{"cmd":"metrics"}"#, Duration::from_secs(120)).unwrap();
+    assert!(page.contains("fe_router_requests_total 8"), "{page}");
+    assert!(page.contains("fe_requests_done_total{replica=\"0\"}"), "{page}");
+    assert!(page.contains("fe_router_replica_up{replica=\"0\"} 1"), "{page}");
+    assert!(page.contains("fe_router_replica_up{replica=\"1\"} 0"), "{page}");
+    assert!(page.contains("fe_router_forwarded_total{replica=\"0\"}"), "{page}");
+    assert_eq!(page.matches("# EOF").count(), 1, "single terminator");
+    assert!(page.ends_with("# EOF\n"));
+
+    // wind down: router first, then the surviving replica; clean joins
+    // prove leak-free exits on both sides
+    let v = ask(&raddr, r#"{"cmd":"shutdown"}"#);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    rh.join().unwrap();
+    let v = ask(&addr_a, r#"{"cmd":"shutdown"}"#);
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    let ma = ha.join().unwrap();
+    assert_eq!(
+        ma.requests_done + mb.requests_done,
+        4 + 8,
+        "every accepted request completed exactly once across the fleet"
+    );
+    assert_eq!(ma.requests_failed + mb.requests_failed, 0);
+}
